@@ -1,0 +1,55 @@
+//! Batched/overlapped kernel serving through the coordinator — the paper's
+//! §V-A argument that for repeated invocations the TCPA's restart interval
+//! (first-PE latency) matters more than the full drain, while the evaluated
+//! CGRAs always drain completely between invocations.
+//!
+//! ```sh
+//! cargo run --release --example batch_serving
+//! ```
+
+use repro::bench::workloads::BenchId;
+use repro::coordinator::{Request, Session, Target};
+use repro::util::table::Table;
+
+fn main() {
+    let mut session = Session::new();
+    let mut t = Table::new(vec![
+        "Benchmark", "batch", "CGRA cycles", "TCPA cycles (overlapped)",
+        "TCPA throughput gain vs serial",
+    ]);
+    for id in [BenchId::Gemm, BenchId::Atax, BenchId::Trsm] {
+        for batch in [1u64, 4, 16] {
+            let cgra = session.handle(&Request {
+                bench: id,
+                n: 8,
+                target: Target::Cgra,
+                batch,
+                validate: false,
+                seed: 1,
+            });
+            let tcpa = session.handle(&Request {
+                bench: id,
+                n: 8,
+                target: Target::Tcpa,
+                batch,
+                validate: false,
+                seed: 1,
+            });
+            let serial = tcpa.latency_cycles * batch;
+            let gain = if tcpa.batch_cycles > 0 {
+                format!("{:.2}x", serial as f64 / tcpa.batch_cycles as f64)
+            } else {
+                "-".into()
+            };
+            t.row(vec![
+                id.name().to_string(),
+                batch.to_string(),
+                cgra.batch_cycles.to_string(),
+                tcpa.batch_cycles.to_string(),
+                gain,
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("{}", session.metrics.summary());
+}

@@ -1,0 +1,102 @@
+//! Architecture exploration: sweep custom CGRA and TCPA configurations and
+//! report the paper's trade-offs (II, latency, area, power) — the ablation
+//! the §VI discussion argues about (border memory, multi-hop interconnect,
+//! FU complements, FIFO budgets).
+//!
+//! ```sh
+//! cargo run --release --example custom_architecture
+//! ```
+
+use repro::bench::harness::{map_cgra_row, map_turtle};
+use repro::bench::toolchains::{rows_for, RowSpec, Tool};
+use repro::bench::workloads::{build, BenchId};
+use repro::cgra::arch::{CgraArch, MemAccess};
+use repro::ppa::area::{cgra_area, tcpa_area};
+use repro::ppa::power::PowerModel;
+use repro::tcpa::arch::TcpaArch;
+use repro::util::table::Table;
+
+fn cgra_variants() -> Vec<CgraArch> {
+    let mut borders = CgraArch::classical(4, 4);
+    borders.name = "classical+borders".into();
+    borders.mem_access = MemAccess::Borders;
+    let mut fat = CgraArch::classical(4, 4);
+    fat.name = "classical+16regs".into();
+    fat.route_regs = 16;
+    vec![
+        CgraArch::classical(4, 4),
+        CgraArch::hycube(4, 4),
+        borders,
+        fat,
+    ]
+}
+
+fn main() {
+    let id = BenchId::Gesummv;
+    let wl = build(id, id.paper_size());
+    let base = rows_for(wl.n_loops, 4, 4)
+        .into_iter()
+        .find(|s| s.tool == Tool::Morpher)
+        .unwrap();
+
+    println!("== CGRA variants on {} (N={}) ==", id.name(), id.paper_size());
+    let mut t = Table::new(vec!["Architecture", "II", "latency", "kLUT", "est. W"]);
+    let cref = cgra_area(&CgraArch::classical(4, 4));
+    let tref = tcpa_area(&TcpaArch::paper(4, 4));
+    let pm = PowerModel::calibrated(&cref, &tref);
+    for arch in cgra_variants() {
+        let spec = RowSpec {
+            arch: arch.clone(),
+            ..base.clone()
+        };
+        let row = map_cgra_row(&wl, &spec);
+        let area = cgra_area(&arch);
+        t.row(vec![
+            arch.name.clone(),
+            row.ii.map(|x| x.to_string()).unwrap_or("-".into()),
+            row.latency.map(|x| x.to_string()).unwrap_or("-".into()),
+            format!("{:.1}", area.total.lut / 1000.0),
+            format!("{:.2}", pm.watts(&area)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("== TCPA variants ==");
+    let mut t = Table::new(vec![
+        "Architecture", "II", "first PE", "last PE", "kLUT", "est. W",
+    ]);
+    let mut lean = TcpaArch::paper(4, 4);
+    lean.name = "tcpa-lean (1 add, 1 copy)".into();
+    lean.fus.adders = 1;
+    lean.fus.copy_units = 1;
+    let mut fat = TcpaArch::paper(4, 4);
+    fat.name = "tcpa-fat (4 add, 2 mul)".into();
+    fat.fus.adders = 4;
+    fat.fus.multipliers = 2;
+    let mut small_fifo = TcpaArch::paper(4, 4);
+    small_fifo.name = "tcpa-smallfifo (64 words)".into();
+    small_fifo.fifo_words = 64;
+    for arch in [TcpaArch::paper(4, 4), lean, fat, small_fifo] {
+        let tr = map_turtle(&wl, &arch);
+        let area = tcpa_area(&arch);
+        match tr.error {
+            None => t.row(vec![
+                arch.name.clone(),
+                tr.ii.to_string(),
+                tr.latency_first.to_string(),
+                tr.latency_last.to_string(),
+                format!("{:.1}", area.total.lut / 1000.0),
+                format!("{:.2}", pm.watts(&area)),
+            ]),
+            Some(e) => t.row(vec![
+                arch.name.clone(),
+                format!("FAIL: {e}"),
+                "-".into(),
+                "-".into(),
+                format!("{:.1}", area.total.lut / 1000.0),
+                format!("{:.2}", pm.watts(&area)),
+            ]),
+        }
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,73 @@
+//! End-to-end driver (DESIGN.md §4, EXPERIMENTS.md): run every PolyBench
+//! benchmark through the whole stack — loop-nest/PRA frontends, both mapping
+//! stacks, both cycle-accurate simulators — and validate every output
+//! against the XLA golden model loaded from `artifacts/` (falling back to
+//! the reference interpreter when artifacts are absent).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example polybench_sweep
+//! ```
+
+use std::time::Instant;
+
+use repro::bench::workloads::BenchId;
+use repro::coordinator::{Request, Session, Target};
+use repro::util::table::Table;
+
+fn main() {
+    let mut session = Session::new();
+    let mut t = Table::new(vec![
+        "Benchmark", "N", "CGRA cycles", "TCPA cycles", "speedup", "validated",
+    ]);
+    let t0 = Instant::now();
+    for id in BenchId::ALL {
+        let n = 8;
+        let cgra = session.handle(&Request {
+            bench: id,
+            n,
+            target: Target::Cgra,
+            batch: 1,
+            validate: true,
+            seed: 7,
+        });
+        let tcpa = session.handle(&Request {
+            bench: id,
+            n,
+            target: Target::Tcpa,
+            batch: 1,
+            validate: true,
+            seed: 7,
+        });
+        let speed = if tcpa.latency_cycles > 0 && cgra.latency_cycles > 0 {
+            format!(
+                "{:.1}x",
+                cgra.latency_cycles as f64 / tcpa.latency_cycles as f64
+            )
+        } else {
+            "-".into()
+        };
+        let validated = match (cgra.validated, tcpa.validated, &cgra.error, &tcpa.error) {
+            (_, _, Some(e), _) => format!("CGRA err: {e}"),
+            (_, _, _, Some(e)) => format!("TCPA err: {e}"),
+            (Some(a), Some(b), _, _) => {
+                if a && b {
+                    "both ✓".into()
+                } else {
+                    format!("CGRA={a} TCPA={b}")
+                }
+            }
+            _ => "-".into(),
+        };
+        t.row(vec![
+            id.name().to_string(),
+            n.to_string(),
+            cgra.latency_cycles.to_string(),
+            tcpa.latency_cycles.to_string(),
+            speed,
+            validated,
+        ]);
+    }
+    println!("{}", t.render());
+    println!("coordinator: {}", session.metrics.summary());
+    println!("total wall time: {:?}", t0.elapsed());
+}

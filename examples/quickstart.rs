@@ -1,0 +1,67 @@
+//! Quickstart: map one benchmark (GEMM) onto both architecture classes,
+//! simulate cycle-accurately, validate the numerics, and print the paper's
+//! headline metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use repro::bench::harness::{map_cgra_row, map_turtle};
+use repro::bench::toolchains::{rows_for, Tool};
+use repro::bench::workloads::{build, inputs, BenchId};
+use repro::cgra::sim as cgra_sim;
+use repro::ppa::area::{area_ratio, cgra_area, tcpa_area};
+use repro::ppa::power::PowerModel;
+use repro::tcpa::arch::TcpaArch;
+use repro::tcpa::sim as tcpa_sim;
+
+fn main() {
+    let n = 8;
+    let id = BenchId::Gemm;
+    let wl = build(id, n);
+    let ins = inputs(id, n, 42);
+    let want = wl.reference_nest(&ins);
+
+    // --- operation-centric: Morpher-profile mapping on the classical 4×4 ---
+    let spec = rows_for(wl.n_loops, 4, 4)
+        .into_iter()
+        .find(|s| s.tool == Tool::Morpher)
+        .unwrap();
+    let row = map_cgra_row(&wl, &spec);
+    println!(
+        "CGRA  ({}): {} ops, II = {}, latency = {} cycles",
+        spec.arch.name,
+        row.n_ops,
+        row.ii.unwrap(),
+        row.latency.unwrap()
+    );
+    let (dfg, mapping) = &row.mappings[0];
+    let sim = cgra_sim::simulate(dfg, mapping, &ins);
+    assert_eq!(sim.outputs["D"], want["D"], "CGRA numerics must match");
+    println!("      cycle-accurate sim: {} cycles, outputs match ✓", sim.cycles);
+
+    // --- iteration-centric: TURTLE-flow compilation onto the 4×4 TCPA ---
+    let arch = TcpaArch::paper(4, 4);
+    let tr = map_turtle(&wl, &arch);
+    println!(
+        "TCPA  ({}): {} instruction slots, II = {}, first PE {} / last PE {} cycles",
+        arch.name, tr.n_ops, tr.ii, tr.latency_first, tr.latency_last
+    );
+    let run = tcpa_sim::simulate_workload(&tr.configs, &arch, &ins).unwrap();
+    assert_eq!(run.outputs["D"], want["D"], "TCPA numerics must match");
+    println!(
+        "      cycle-accurate sim: {} cycles, outputs match ✓",
+        run.total_latency
+    );
+
+    // --- the paper's headline trade-off ---
+    let carea = cgra_area(&spec.arch);
+    let tarea = tcpa_area(&arch);
+    let pm = PowerModel::calibrated(&carea, &tarea);
+    println!(
+        "\nspeedup (TCPA vs CGRA): {:.1}x | area ratio: {:.2}x | power ratio: {:.2}x",
+        row.latency.unwrap() as f64 / run.total_latency as f64,
+        area_ratio(&tarea, &carea),
+        pm.watts(&tarea) / pm.watts(&carea),
+    );
+}

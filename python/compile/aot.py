@@ -1,0 +1,63 @@
+"""AOT lowering: JAX models → HLO *text* artifacts for the rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+Python runs ONCE at build time; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name: str, n: int) -> str:
+    fn = model.MODELS[name]
+    args = model.example_args(name, n)
+    # wrap so every model returns a tuple (unwrapped with to_tuple on rust side)
+    def wrapped(*a):
+        out = fn(*a)
+        return out if isinstance(out, tuple) else (out,)
+
+    lowered = jax.jit(wrapped).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--benches", default=",".join(model.MODELS.keys()))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name in args.benches.split(","):
+        for n in model.AOT_SIZES[name]:
+            text = lower_one(name, n)
+            path = os.path.join(args.out_dir, f"{name}_n{n}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(f"{name}_n{n}.hlo.txt")
+            print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "MANIFEST"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"{len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

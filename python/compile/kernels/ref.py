@@ -1,0 +1,57 @@
+"""Pure-jnp reference oracle for every benchmark (paper §V-A).
+
+These are the ground-truth semantics the Pallas kernels (and transitively the
+rust-side cycle-accurate simulators, via the AOT-lowered HLO) are validated
+against. Integer benchmarks use i32 (bit-exact), the triangular solvers f32.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def gemm(a, b, c):
+    """D = A·B + C (the paper's GEMM; C is preloaded into the accumulator)."""
+    return jnp.dot(a, b, preferred_element_type=a.dtype) + c
+
+
+def atax(a, x):
+    """y = Aᵀ·(A·x)."""
+    tmp = jnp.dot(a, x, preferred_element_type=a.dtype)
+    return jnp.dot(a.T, tmp, preferred_element_type=a.dtype)
+
+
+def gesummv(a, b, x):
+    """y = A·x + B·x."""
+    return jnp.dot(a, x, preferred_element_type=a.dtype) + jnp.dot(
+        b, x, preferred_element_type=a.dtype
+    )
+
+
+def mvt(a, y1, y2, x1, x2):
+    """z1 = x1 + A·y1 ; z2 = x2 + Aᵀ·y2."""
+    z1 = x1 + jnp.dot(a, y1, preferred_element_type=a.dtype)
+    z2 = x2 + jnp.dot(a.T, y2, preferred_element_type=a.dtype)
+    return z1, z2
+
+
+def trisolv(l, b):
+    """Forward substitution: solve L·x = b for lower-triangular L (f32)."""
+    l = jnp.asarray(l)
+    b = jnp.asarray(b)
+    n = l.shape[0]
+
+    def step(x, i):
+        mask = (jnp.arange(n) < i).astype(l.dtype)
+        s = jnp.dot(l[i] * mask, x)
+        xi = (b[i] - s) / l[i, i]
+        return x.at[i].set(xi), None
+
+    x0 = jnp.zeros_like(b)
+    x, _ = lax.scan(step, x0, jnp.arange(n))
+    return x
+
+
+def trsm(l, bmat):
+    """Solve L·X = B column-by-column (N right-hand sides, f32)."""
+    n = l.shape[0]
+    return jnp.stack([trisolv(l, bmat[:, j]) for j in range(n)], axis=1)

@@ -1,0 +1,127 @@
+"""Layer-1 Pallas kernels: the benchmark compute hot-spots as tiled kernels.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+iteration-centric insight — assign whole *tiles* of iterations to one PE and
+keep reused data local — maps to Pallas as BlockSpec blocks resident in VMEM
+(the scratchpad analog of the TCPA register file + feedback FIFOs) with an
+MXU-shaped `jnp.dot` replacing the per-PE MAC chain. The grid iteration order
+plays the role of the LSGP schedule λ*.
+
+All kernels run `interpret=True`: the CPU PJRT client cannot execute Mosaic
+custom-calls, and the AOT artifacts must load in the rust runtime
+(/opt/xla-example/README.md).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, target: int = 8) -> int:
+    """Largest divisor of n that is ≤ target (an LSGP-style even tiling)."""
+    for b in range(min(n, target), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def matmul(a, b, block: int | None = None):
+    """Tiled matmul `A·B` — the GEMM hot-spot.
+
+    Grid (i, j, k) over blocks; the (i, j) output block stays resident while
+    k sweeps — exactly the c-accumulation the TCPA keeps in a feedback
+    register (paper Fig. 4).
+    """
+    n, k = a.shape
+    k2, m = b.shape
+    assert k == k2, "shape mismatch"
+    bm = block or _pick_block(n)
+    bn = block or _pick_block(m)
+    bk = block or _pick_block(k)
+
+    def kernel(a_ref, b_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bm, m // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def matvec(a, x, transpose: bool = False, block: int | None = None):
+    """Tiled matvec `A·x` (or `Aᵀ·x`) — the ATAX/GESUMMV/MVT hot-spot.
+
+    The vector block is reused across a whole row-block of A — the data
+    locality a TCPA exploits by propagating x through the array while CGRAs
+    re-load it from the scratchpad every iteration (§IV-6).
+    """
+    if transpose:
+        a = a.T
+    n, m = a.shape
+    bn = block or _pick_block(n)
+    bm = block or _pick_block(m)
+
+    def kernel(a_ref, x_ref, o_ref):
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            a_ref[...], x_ref[...], preferred_element_type=o_ref.dtype
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, x)
+
+
+def gesummv(a, b, x, block: int | None = None):
+    """Fused `A·x + B·x` — one pass over both matrices, two accumulators in
+    VMEM (the TCPA's s1/s2 feedback registers)."""
+    n, m = a.shape
+    bn = block or _pick_block(n)
+    bm = block or _pick_block(m)
+
+    def kernel(a_ref, b_ref, x_ref, o_ref):
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        xs = x_ref[...]
+        o_ref[...] += jnp.dot(
+            a_ref[...], xs, preferred_element_type=o_ref.dtype
+        ) + jnp.dot(b_ref[...], xs, preferred_element_type=o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, b, x)

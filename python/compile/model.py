@@ -1,0 +1,106 @@
+"""Layer-2 JAX models: each benchmark as a jit-able function composed from
+the Layer-1 Pallas kernels (the compute hot-spots) plus jnp glue.
+
+These are the golden models: `aot.py` lowers them once to HLO text and the
+rust runtime executes them via PJRT to validate every simulated CGRA/TCPA
+run. Python never sits on the rust request path.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import tiled
+
+
+def gemm(a, b, c):
+    """D = A·B + C via the tiled Pallas matmul."""
+    return tiled.matmul(a, b) + c
+
+
+def atax(a, x):
+    """y = Aᵀ·(A·x): two Pallas matvecs chained (the workload's two stages)."""
+    tmp = tiled.matvec(a, x)
+    return tiled.matvec(a, tmp, transpose=True)
+
+
+def gesummv(a, b, x):
+    """y = A·x + B·x via the fused Pallas kernel."""
+    return tiled.gesummv(a, b, x)
+
+
+def mvt(a, y1, y2, x1, x2):
+    """z1 = x1 + A·y1 ; z2 = x2 + Aᵀ·y2 (two independent Pallas matvecs)."""
+    z1 = x1 + tiled.matvec(a, y1)
+    z2 = x2 + tiled.matvec(a, y2, transpose=True)
+    return z1, z2
+
+
+def trisolv(l, b):
+    """Forward substitution (inherently sequential recurrence — stays a
+    lax.scan; the multiplicative hot-spot inside is a masked dot)."""
+    l = jnp.asarray(l)
+    b = jnp.asarray(b)
+    n = l.shape[0]
+
+    def step(x, i):
+        mask = (jnp.arange(n) < i).astype(l.dtype)
+        s = jnp.dot(l[i] * mask, x)
+        xi = (b[i] - s) / l[i, i]
+        return x.at[i].set(xi), None
+
+    x, _ = lax.scan(step, jnp.zeros_like(b), jnp.arange(n))
+    return x
+
+
+def trsm(l, bmat):
+    """L·X = B: trisolv vmapped over the independent RHS columns —
+    the parallelism the TCPA exploits across its PE columns (§V-A)."""
+    import jax
+
+    solve = jax.vmap(lambda col: trisolv(l, col), in_axes=1, out_axes=1)
+    return solve(bmat)
+
+
+#: benchmark name → (function, input builder (n) → example args)
+def example_args(name: str, n: int):
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    i32 = lambda *s: rng.integers(1, 10, size=s).astype(np.int32)  # noqa: E731
+    f32 = lambda *s: rng.integers(1, 10, size=s).astype(np.float32)  # noqa: E731
+
+    if name == "gemm":
+        return (i32(n, n), i32(n, n), i32(n, n))
+    if name == "atax":
+        return (i32(n, n), i32(n))
+    if name == "gesummv":
+        return (i32(n, n), i32(n, n), i32(n))
+    if name == "mvt":
+        return (i32(n, n), i32(n), i32(n), i32(n), i32(n))
+    if name == "trisolv":
+        ltri = np.tril(f32(n, n)) + 4.0 * np.eye(n, dtype=np.float32)
+        return (ltri, f32(n))
+    if name == "trsm":
+        ltri = np.tril(f32(n, n)) + 4.0 * np.eye(n, dtype=np.float32)
+        return (ltri, f32(n, n))
+    raise ValueError(f"unknown benchmark {name}")
+
+
+MODELS = {
+    "gemm": gemm,
+    "atax": atax,
+    "gesummv": gesummv,
+    "mvt": mvt,
+    "trisolv": trisolv,
+    "trsm": trsm,
+}
+
+#: AOT sizes: a small validation size plus the paper's evaluation size
+AOT_SIZES = {
+    "gemm": [8, 20],
+    "atax": [8, 32],
+    "gesummv": [8, 32],
+    "mvt": [8, 32],
+    "trisolv": [8, 32],
+    "trsm": [8, 32],
+}

@@ -1,0 +1,101 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes and block sizes; `assert_allclose` against
+`ref.py` is the core correctness signal of the build path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref, tiled
+
+DIMS = st.sampled_from([1, 2, 3, 4, 6, 8, 12, 16])
+DTYPES = st.sampled_from([np.int32, np.float32])
+
+
+def rand(rng, dtype, *shape):
+    if dtype == np.int32:
+        return rng.integers(-9, 10, size=shape).astype(np.int32)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=DIMS, k=DIMS, m=DIMS, dtype=DTYPES, seed=st.integers(0, 2**16))
+def test_matmul_matches_ref(n, k, m, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, dtype, n, k)
+    b = rand(rng, dtype, k, m)
+    got = np.asarray(tiled.matmul(a, b))
+    want = np.asarray(a @ b)
+    if dtype == np.int32:
+        assert (got == want).all()
+    else:
+        assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=DIMS,
+    m=DIMS,
+    transpose=st.booleans(),
+    dtype=DTYPES,
+    seed=st.integers(0, 2**16),
+)
+def test_matvec_matches_ref(n, m, transpose, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, dtype, n, m)
+    x = rand(rng, dtype, n if transpose else m)
+    got = np.asarray(tiled.matvec(a, x, transpose=transpose))
+    want = np.asarray((a.T if transpose else a) @ x)
+    if dtype == np.int32:
+        assert (got == want).all()
+    else:
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=DIMS, m=DIMS, dtype=DTYPES, seed=st.integers(0, 2**16))
+def test_gesummv_kernel_matches_ref(n, m, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, dtype, n, m)
+    b = rand(rng, dtype, n, m)
+    x = rand(rng, dtype, m)
+    got = np.asarray(tiled.gesummv(a, b, x))
+    want = np.asarray(a @ x + b @ x)
+    if dtype == np.int32:
+        assert (got == want).all()
+    else:
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block", [1, 2, 4])
+def test_matmul_block_sizes(block):
+    rng = np.random.default_rng(7)
+    a = rand(rng, np.int32, 8, 8)
+    b = rand(rng, np.int32, 8, 8)
+    got = np.asarray(tiled.matmul(a, b, block=block))
+    assert (got == np.asarray(a @ b)).all()
+
+
+def test_trisolv_ref_solves():
+    rng = np.random.default_rng(3)
+    n = 12
+    ltri = np.tril(rng.integers(1, 4, (n, n))).astype(np.float32) + 4.0 * np.eye(
+        n, dtype=np.float32
+    )
+    b = rng.integers(1, 10, n).astype(np.float32)
+    x = np.asarray(ref.trisolv(ltri, b))
+    assert_allclose(ltri @ x, b, rtol=1e-4, atol=1e-4)
+
+
+def test_trsm_ref_solves():
+    rng = np.random.default_rng(4)
+    n = 8
+    ltri = np.tril(rng.integers(1, 4, (n, n))).astype(np.float32) + 4.0 * np.eye(
+        n, dtype=np.float32
+    )
+    bmat = rng.integers(1, 10, (n, n)).astype(np.float32)
+    x = np.asarray(ref.trsm(ltri, bmat))
+    assert_allclose(ltri @ x, bmat, rtol=1e-4, atol=1e-4)

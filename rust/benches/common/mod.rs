@@ -1,0 +1,18 @@
+//! Shared micro-bench harness (criterion is not in the vendored crate set;
+//! these are plain `harness = false` mains timed with std::time).
+
+use std::time::Instant;
+
+/// Run `f` `iters` times, print mean wall time per iteration and return it
+/// in milliseconds.
+pub fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() * 1000.0 / iters as f64;
+    println!("{name:<52} {per:>10.2} ms/iter  ({iters} iters)");
+    per
+}

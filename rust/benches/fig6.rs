@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 6 (latency vs size) for every benchmark.
+mod common;
+use repro::bench::harness::{fig6, fig6_sizes};
+use repro::bench::workloads::BenchId;
+
+fn main() {
+    for id in BenchId::ALL {
+        let mut out = String::new();
+        common::bench(&format!("fig6 {}", id.name()), 1, || {
+            out = fig6(id, &fig6_sizes(id), true).render();
+        });
+        println!("== Fig. 6: {} ==\n{out}", id.name());
+    }
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate Fig. 7 (speedups at the paper's sizes).
+mod common;
+use repro::bench::harness::fig7;
+
+fn main() {
+    let mut out = String::new();
+    common::bench("fig7 (speedups, quick)", 1, || {
+        out = fig7(true).render();
+    });
+    println!("{out}");
+}

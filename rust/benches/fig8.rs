@@ -1,0 +1,11 @@
+//! Bench: regenerate Fig. 8 (PE-count / unroll scaling incl. bounds).
+mod common;
+use repro::bench::harness::fig8;
+
+fn main() {
+    let mut out = String::new();
+    common::bench("fig8 (scaling sweep, quick)", 1, || {
+        out = fig8(true).render();
+    });
+    println!("{out}");
+}

@@ -1,0 +1,74 @@
+//! Bench: the three hot paths of the stack — the CGRA modulo-scheduling
+//! mapper, the CGRA cycle simulator and the TCPA array simulator — tracked
+//! across the performance pass (EXPERIMENTS.md §Perf).
+mod common;
+use repro::bench::workloads::{build, inputs, BenchId};
+use repro::cgra::arch::CgraArch;
+use repro::cgra::mapper::{map, MapOpts};
+use repro::cgra::sim as cgra_sim;
+use repro::frontend::dfg_gen::{generate, GenOpts};
+use repro::tcpa::arch::TcpaArch;
+use repro::tcpa::config::compile;
+use repro::tcpa::sim as tcpa_sim;
+
+fn main() {
+    // --- CGRA mapper: negotiated effort on the trickiest single-nest DFG ---
+    let wl = build(BenchId::Trisolv, 8);
+    let gen = generate(&wl.stages[0], &GenOpts::flat()).unwrap();
+    let arch = CgraArch::classical(4, 4);
+    common::bench("mapper: trisolv flat on classical 4x4", 5, || {
+        let m = map(&gen.dfg, &arch, &gen.inter_iteration_hazards, &MapOpts::negotiated());
+        assert!(m.is_ok());
+    });
+    let hyc = CgraArch::hycube(4, 4);
+    common::bench("mapper: trisolv flat on hycube 4x4", 5, || {
+        let m = map(&gen.dfg, &hyc, &gen.inter_iteration_hazards, &MapOpts::negotiated());
+        assert!(m.is_ok());
+    });
+    let wl8 = build(BenchId::Gesummv, 32);
+    let gen8 = generate(&wl8.stages[0], &GenOpts::flat()).unwrap();
+    let arch8 = CgraArch::classical(8, 8);
+    common::bench("mapper: gesummv flat on classical 8x8", 3, || {
+        let m = map(&gen8.dfg, &arch8, &gen8.inter_iteration_hazards, &MapOpts::negotiated());
+        assert!(m.is_ok());
+    });
+
+    // --- CGRA cycle simulator ---
+    let m = map(&gen8.dfg, &arch8, &gen8.inter_iteration_hazards, &MapOpts::negotiated()).unwrap();
+    let ins8 = inputs(BenchId::Gesummv, 32, 3);
+    let total_cycles = m.latency(gen8.dfg.iters);
+    let per = common::bench("cgra sim: gesummv N=32 (full run)", 5, || {
+        let r = cgra_sim::simulate(&gen8.dfg, &m, &ins8);
+        assert!(r.cycles > 0);
+    });
+    println!(
+        "    -> {:.2e} mapped-cycles/s",
+        total_cycles as f64 / (per / 1000.0)
+    );
+
+    // --- TCPA array simulator ---
+    let wl_t = build(BenchId::Trsm, 16);
+    let tarch = TcpaArch::paper(4, 4);
+    let cfg = compile(&wl_t.pras[0], &tarch).unwrap();
+    let ins_t = inputs(BenchId::Trsm, 16, 3);
+    let cyc = cfg.last_pe_latency();
+    let per = common::bench("tcpa sim: trsm N=16 (full run)", 5, || {
+        let r = tcpa_sim::simulate(&cfg, &tarch, &ins_t).unwrap();
+        assert_eq!(r.timing_violations, 0);
+    });
+    println!(
+        "    -> {:.2e} array-cycles/s ({:.2e} PE-cycles/s)",
+        cyc as f64 / (per / 1000.0),
+        cyc as f64 * 16.0 / (per / 1000.0)
+    );
+
+    // --- TCPA compile (must stay size-independent) ---
+    common::bench("tcpa compile: gemm N=8", 50, || {
+        let c = compile(&build(BenchId::Gemm, 8).pras[0], &tarch);
+        assert!(c.is_ok());
+    });
+    common::bench("tcpa compile: gemm N=20", 50, || {
+        let c = compile(&build(BenchId::Gemm, 20).pras[0], &tarch);
+        assert!(c.is_ok());
+    });
+}

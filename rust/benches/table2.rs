@@ -1,0 +1,13 @@
+//! Bench: regenerate Table II (mapping results) and time the mapping stack.
+mod common;
+use repro::bench::harness::table2;
+use repro::bench::workloads::BenchId;
+
+fn main() {
+    let mut out = String::new();
+    common::bench("table2 (all benchmarks, quick)", 1, || {
+        let (t, _, _) = table2(&BenchId::PAPER5, 4, 4, true);
+        out = t.render();
+    });
+    println!("{out}");
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate Table III (area/power model) and time it.
+mod common;
+use repro::bench::harness::table3;
+
+fn main() {
+    let mut out = String::new();
+    common::bench("table3 (area + power model)", 100, || {
+        out = table3().render();
+    });
+    println!("{out}");
+}

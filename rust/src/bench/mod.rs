@@ -1,0 +1,6 @@
+//! Workload suite, toolchain-emulation profiles and the per-table /
+//! per-figure reproduction harness.
+
+pub mod workloads;
+pub mod toolchains;
+pub mod harness;

@@ -1,0 +1,874 @@
+//! The five PolyBench loop benchmarks of the paper's evaluation (§V-A) plus
+//! TRSM, each in *both* input forms:
+//!
+//! * **Loop-nest stages** (`stages`) — the imperative form the CGRA
+//!   toolchains consume. Multi-phase kernels (ATAX, MVT) are sequences of
+//!   perfect nests executed back-to-back; guarded updates (TRISOLV, TRSM)
+//!   use rectangular nests with predicated (Select) bodies, matching how
+//!   CGRAs express control flow (partial predication, §II-C2).
+//! * **PRAs** (`pras`) — the polyhedral single-assignment form TURTLE
+//!   consumes (systolic formulations with explicit propagation variables).
+//!
+//! Both forms are *executable* and their interpreters must agree — that
+//! cross-check runs in the test suite, and both are validated against the
+//! XLA golden model by the integration tests.
+
+use crate::ir::affine::AffineMap;
+use crate::ir::loopnest::{idx, ArrayData, ArrayKind, Expr, LoopNest, NestBuilder};
+use crate::ir::op::{Dtype, OpKind, Value};
+use crate::ir::pra::{Pra, PraBuilder};
+use crate::ir::space::CondSpace;
+use crate::util::rng::Rng;
+
+/// Benchmark identifiers (paper §V-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BenchId {
+    /// D = A·B + C
+    Gemm,
+    /// y = Aᵀ·(A·x)
+    Atax,
+    /// y = A·x + B·x
+    Gesummv,
+    /// z1 = x1 + A·y1 ; z2 = x2 + Aᵀ·y2
+    Mvt,
+    /// forward substitution L·x = b
+    Trisolv,
+    /// triangular solve with N right-hand sides L·X = B (§V-A's 3-D variant)
+    Trsm,
+}
+
+impl BenchId {
+    pub const ALL: [BenchId; 6] = [
+        BenchId::Gemm,
+        BenchId::Atax,
+        BenchId::Gesummv,
+        BenchId::Mvt,
+        BenchId::Trisolv,
+        BenchId::Trsm,
+    ];
+
+    /// The five benchmarks of Table II / Fig. 6-7 (TRSM is the §V-A extra).
+    pub const PAPER5: [BenchId; 5] = [
+        BenchId::Gemm,
+        BenchId::Atax,
+        BenchId::Gesummv,
+        BenchId::Mvt,
+        BenchId::Trisolv,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BenchId::Gemm => "gemm",
+            BenchId::Atax => "atax",
+            BenchId::Gesummv => "gesummv",
+            BenchId::Mvt => "mvt",
+            BenchId::Trisolv => "trisolv",
+            BenchId::Trsm => "trsm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BenchId> {
+        BenchId::ALL.iter().copied().find(|b| b.name() == s)
+    }
+
+    pub fn dtype(self) -> Dtype {
+        match self {
+            BenchId::Trisolv | BenchId::Trsm => Dtype::F32,
+            _ => Dtype::I32,
+        }
+    }
+
+    /// The paper's evaluation matrix size (Fig. 7: 20 for GEMM, 32 else).
+    pub fn paper_size(self) -> i64 {
+        match self {
+            BenchId::Gemm => 20,
+            _ => 32,
+        }
+    }
+}
+
+/// A benchmark instance at a concrete problem size.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub id: BenchId,
+    pub n: i64,
+    /// CGRA view: perfect nests executed in sequence.
+    pub stages: Vec<LoopNest>,
+    /// TCPA view: PRA kernels executed in sequence.
+    pub pras: Vec<Pra>,
+    /// Loop depth reported in Table II ("#Loops").
+    pub n_loops: usize,
+}
+
+/// Build a benchmark at size `n`.
+pub fn build(id: BenchId, n: i64) -> Workload {
+    match id {
+        BenchId::Gemm => Workload {
+            id,
+            n,
+            stages: vec![gemm_nest(n)],
+            pras: vec![gemm_pra(n)],
+            n_loops: 3,
+        },
+        BenchId::Atax => Workload {
+            id,
+            n,
+            stages: vec![matvec_nest("atax1", n, false, "A", "x", "tmp", None)],
+            pras: vec![matvec_pra("atax1", n, false, "A", "x", "tmp", None)],
+            n_loops: 2,
+        }
+        .push_stage(
+            matvec_nest("atax2", n, true, "A", "tmp", "y", None),
+            matvec_pra("atax2", n, true, "A", "tmp", "y", None),
+        ),
+        BenchId::Gesummv => Workload {
+            id,
+            n,
+            stages: vec![gesummv_nest(n)],
+            pras: vec![gesummv_pra(n)],
+            n_loops: 2,
+        },
+        BenchId::Mvt => Workload {
+            id,
+            n,
+            stages: vec![matvec_nest("mvt1", n, false, "A", "y1", "z1", Some("x1"))],
+            pras: vec![matvec_pra("mvt1", n, false, "A", "y1", "z1", Some("x1"))],
+            n_loops: 2,
+        }
+        .push_stage(
+            matvec_nest("mvt2", n, true, "A", "y2", "z2", Some("x2")),
+            matvec_pra("mvt2", n, true, "A", "y2", "z2", Some("x2")),
+        ),
+        BenchId::Trisolv => Workload {
+            id,
+            n,
+            stages: vec![trisolv_nest(n)],
+            pras: vec![trisolv_pra(n)],
+            n_loops: 2,
+        },
+        BenchId::Trsm => Workload {
+            id,
+            n,
+            stages: vec![trsm_nest(n)],
+            pras: vec![trsm_pra(n)],
+            n_loops: 3,
+        },
+    }
+}
+
+impl Workload {
+    fn push_stage(mut self, nest: LoopNest, pra: Pra) -> Self {
+        self.stages.push(nest);
+        self.pras.push(pra);
+        self
+    }
+
+    /// Total iterations across all loop-nest stages.
+    pub fn total_iterations(&self) -> u64 {
+        self.stages.iter().map(|s| s.iteration_count()).sum()
+    }
+
+    /// Execute all loop-nest stages in sequence (the CGRA-side reference).
+    pub fn reference_nest(&self, inputs: &ArrayData) -> ArrayData {
+        run_stages(&self.stages, inputs, |nest, pool| nest.execute(pool))
+    }
+
+    /// Execute all PRA kernels in sequence (the TCPA-side reference).
+    pub fn reference_pra(&self, inputs: &ArrayData) -> ArrayData {
+        let mut pool = inputs.clone();
+        let mut outs = ArrayData::new();
+        for pra in &self.pras {
+            let o = pra.execute(&pool);
+            for (k, v) in o {
+                pool.insert(k.clone(), v.clone());
+                outs.insert(k, v);
+            }
+        }
+        outs
+    }
+
+    /// Names of the final output arrays: arrays both forms produce (the
+    /// loop-nest form may use extra scratch arrays, e.g. TRISOLV's `acc`,
+    /// which are not semantic outputs).
+    pub fn output_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for s in &self.stages {
+            for a in &s.arrays {
+                if matches!(a.kind, ArrayKind::Output | ArrayKind::InOut)
+                    && !names.contains(&a.name)
+                {
+                    names.push(a.name.clone());
+                }
+            }
+        }
+        // intermediate arrays consumed by later stages are not outputs
+        let consumed: Vec<String> = self
+            .stages
+            .iter()
+            .skip(1)
+            .flat_map(|s| s.arrays.iter())
+            .filter(|a| a.kind == ArrayKind::Input)
+            .map(|a| a.name.clone())
+            .collect();
+        names.retain(|n| !consumed.contains(n) || self.final_outputs_include(n));
+        // keep only arrays the PRA form also declares as outputs
+        let pra_outputs: Vec<&str> = self
+            .pras
+            .iter()
+            .flat_map(|p| p.arrays.iter())
+            .filter(|a| matches!(a.kind, ArrayKind::Output | ArrayKind::InOut))
+            .map(|a| a.name.as_str())
+            .collect();
+        names.retain(|n| pra_outputs.contains(&n.as_str()));
+        names
+    }
+
+    fn final_outputs_include(&self, name: &str) -> bool {
+        self.stages
+            .last()
+            .map(|s| {
+                s.arrays.iter().any(|a| {
+                    a.name == name && matches!(a.kind, ArrayKind::Output | ArrayKind::InOut)
+                })
+            })
+            .unwrap_or(false)
+    }
+}
+
+fn run_stages<F: Fn(&LoopNest, &ArrayData) -> ArrayData>(
+    stages: &[LoopNest],
+    inputs: &ArrayData,
+    exec: F,
+) -> ArrayData {
+    let mut pool = inputs.clone();
+    let mut outs = ArrayData::new();
+    for nest in stages {
+        let o = exec(nest, &pool);
+        for (k, v) in o {
+            pool.insert(k.clone(), v.clone());
+            outs.insert(k, v);
+        }
+    }
+    outs
+}
+
+/// Deterministic pseudo-random inputs for a benchmark. Values are small
+/// (1..=9, positive diagonals for the triangular solvers) so integer
+/// benchmarks cannot overflow and float benchmarks stay well-conditioned.
+pub fn inputs(id: BenchId, n: i64, seed: u64) -> ArrayData {
+    let rng = std::cell::RefCell::new(Rng::new(seed ^ 0xBEEF));
+    let dt = id.dtype();
+    let nu = n as usize;
+    let gen_vec = |len: usize| -> Vec<Value> {
+        (0..len)
+            .map(|_| dt.from_i64(rng.borrow_mut().range_i64(1, 10)))
+            .collect()
+    };
+    let mut m = ArrayData::new();
+    match id {
+        BenchId::Gemm => {
+            m.insert("A".into(), gen_vec(nu * nu));
+            m.insert("B".into(), gen_vec(nu * nu));
+            // D is preloaded with C (D = A·B + C)
+            m.insert("D".into(), gen_vec(nu * nu));
+        }
+        BenchId::Atax => {
+            m.insert("A".into(), gen_vec(nu * nu));
+            m.insert("x".into(), gen_vec(nu));
+        }
+        BenchId::Gesummv => {
+            m.insert("A".into(), gen_vec(nu * nu));
+            m.insert("B".into(), gen_vec(nu * nu));
+            m.insert("x".into(), gen_vec(nu));
+        }
+        BenchId::Mvt => {
+            m.insert("A".into(), gen_vec(nu * nu));
+            m.insert("y1".into(), gen_vec(nu));
+            m.insert("y2".into(), gen_vec(nu));
+            // z1/z2 preloaded with x1/x2
+            m.insert("z1".into(), gen_vec(nu));
+            m.insert("z2".into(), gen_vec(nu));
+        }
+        BenchId::Trisolv | BenchId::Trsm => {
+            // lower-triangular L with dominant positive diagonal
+            let mut l = vec![dt.zero(); nu * nu];
+            for i in 0..nu {
+                for j in 0..=i {
+                    let v = if i == j {
+                        rng.borrow_mut().range_i64(4, 8)
+                    } else {
+                        rng.borrow_mut().range_i64(1, 3)
+                    };
+                    l[i * nu + j] = dt.from_i64(v);
+                }
+            }
+            m.insert("L".into(), l);
+            if id == BenchId::Trisolv {
+                m.insert("b".into(), gen_vec(nu));
+            } else {
+                m.insert("B".into(), gen_vec(nu * nu));
+            }
+        }
+    }
+    m
+}
+
+// ====================== loop-nest builders (CGRA view) ======================
+
+/// GEMM: D[i,j] += A[i,k]·B[k,j] (D preloaded with C).
+pub fn gemm_nest(n: i64) -> LoopNest {
+    let d = 3;
+    NestBuilder::new("gemm", Dtype::I32)
+        .dim("i0", n)
+        .dim("i1", n)
+        .dim("i2", n)
+        .array("A", vec![n, n], ArrayKind::Input)
+        .array("B", vec![n, n], ArrayKind::Input)
+        .array("D", vec![n, n], ArrayKind::InOut)
+        .stmt(
+            "D",
+            vec![idx(d, 0), idx(d, 1)],
+            Expr::bin(
+                OpKind::Add,
+                Expr::read(2, vec![idx(d, 0), idx(d, 1)]),
+                Expr::bin(
+                    OpKind::Mul,
+                    Expr::read(0, vec![idx(d, 0), idx(d, 2)]),
+                    Expr::read(1, vec![idx(d, 2), idx(d, 1)]),
+                ),
+            ),
+        )
+        .finish()
+}
+
+/// Generic accumulating mat-vec stage:
+/// `out[i] += M[i,j]·v[j]` (or `M[j,i]` when `transpose`), `out` preloaded
+/// with `init` (or zero). Used by ATAX (2 stages) and MVT (2 stages).
+fn matvec_nest(
+    name: &str,
+    n: i64,
+    transpose: bool,
+    mat: &str,
+    vec_in: &str,
+    out: &str,
+    init: Option<&str>,
+) -> LoopNest {
+    let d = 2;
+    let (r, c) = if transpose {
+        (idx(d, 1), idx(d, 0))
+    } else {
+        (idx(d, 0), idx(d, 1))
+    };
+    let mut b = NestBuilder::new(name, Dtype::I32)
+        .dim("i0", n)
+        .dim("i1", n)
+        .array(mat, vec![n, n], ArrayKind::Input)
+        .array(vec_in, vec![n], ArrayKind::Input);
+    // `init` arrays are preloaded into `out` by the input generator, so the
+    // nest only sees `out` as in-out.
+    let _ = init;
+    b = b.array(out, vec![n], ArrayKind::InOut);
+    b.stmt(
+        out,
+        vec![idx(d, 0)],
+        Expr::bin(
+            OpKind::Add,
+            Expr::read(2, vec![idx(d, 0)]),
+            Expr::bin(OpKind::Mul, Expr::read(0, vec![r, c]), Expr::read(1, vec![idx(d, 1)])),
+        ),
+    )
+    .finish()
+}
+
+/// GESUMMV: y[i] += (A[i,j] + B[i,j])·x[j]  (≡ A·x + B·x).
+pub fn gesummv_nest(n: i64) -> LoopNest {
+    let d = 2;
+    NestBuilder::new("gesummv", Dtype::I32)
+        .dim("i0", n)
+        .dim("i1", n)
+        .array("A", vec![n, n], ArrayKind::Input)
+        .array("B", vec![n, n], ArrayKind::Input)
+        .array("x", vec![n], ArrayKind::Input)
+        .array("y", vec![n], ArrayKind::InOut)
+        .stmt(
+            "y",
+            vec![idx(d, 0)],
+            Expr::bin(
+                OpKind::Add,
+                Expr::read(3, vec![idx(d, 0)]),
+                Expr::bin(
+                    OpKind::Mul,
+                    Expr::bin(
+                        OpKind::Add,
+                        Expr::read(0, vec![idx(d, 0), idx(d, 1)]),
+                        Expr::read(1, vec![idx(d, 0), idx(d, 1)]),
+                    ),
+                    Expr::read(2, vec![idx(d, 1)]),
+                ),
+            ),
+        )
+        .finish()
+}
+
+/// TRISOLV (forward substitution) as a rectangular predicated 2-D nest:
+/// ```text
+/// for i, j:
+///   acc[i] = sel(j == 0, b[i], acc[i])
+///   acc[i] = sel(j < i, acc[i] − L[i,j]·x[j], acc[i])
+///   x[i]   = sel(j == i, acc[i] / L[i,i], x[i])
+/// ```
+pub fn trisolv_nest(n: i64) -> LoopNest {
+    let d = 2;
+    let i = || idx(d, 0);
+    let j = || idx(d, 1);
+    NestBuilder::new("trisolv", Dtype::F32)
+        .dim("i0", n)
+        .dim("i1", n)
+        .array("L", vec![n, n], ArrayKind::Input)
+        .array("b", vec![n], ArrayKind::Input)
+        .array("acc", vec![n], ArrayKind::InOut)
+        .array("x", vec![n], ArrayKind::Output)
+        .stmt(
+            "acc",
+            vec![i()],
+            Expr::sel(
+                Expr::bin(OpKind::CmpEq, Expr::Idx(j()), Expr::Const(0)),
+                Expr::read(1, vec![i()]),
+                Expr::read(2, vec![i()]),
+            ),
+        )
+        .stmt(
+            "acc",
+            vec![i()],
+            Expr::sel(
+                Expr::bin(OpKind::CmpLt, Expr::Idx(j()), Expr::Idx(i())),
+                Expr::bin(
+                    OpKind::Sub,
+                    Expr::read(2, vec![i()]),
+                    Expr::bin(
+                        OpKind::Mul,
+                        Expr::read(0, vec![i(), j()]),
+                        Expr::read(3, vec![j()]),
+                    ),
+                ),
+                Expr::read(2, vec![i()]),
+            ),
+        )
+        .stmt(
+            "x",
+            vec![i()],
+            Expr::sel(
+                Expr::bin(OpKind::CmpEq, Expr::Idx(j()), Expr::Idx(i())),
+                Expr::bin(
+                    OpKind::Div,
+                    Expr::read(2, vec![i()]),
+                    Expr::read(0, vec![i(), i()]),
+                ),
+                Expr::read(3, vec![i()]),
+            ),
+        )
+        .finish()
+}
+
+/// TRSM: L·X = B with N right-hand sides — TRISOLV in the two "inner"
+/// dimensions, independent across the RHS dimension (paper §V-A's 3-D
+/// experiment). Dims: (i0 = row, i1 = rhs column, i2 = L column).
+pub fn trsm_nest(n: i64) -> LoopNest {
+    let d = 3;
+    let i = || idx(d, 0);
+    let c = || idx(d, 1);
+    let j = || idx(d, 2);
+    NestBuilder::new("trsm", Dtype::F32)
+        .dim("i0", n)
+        .dim("i1", n)
+        .dim("i2", n)
+        .array("L", vec![n, n], ArrayKind::Input)
+        .array("B", vec![n, n], ArrayKind::Input)
+        .array("acc", vec![n, n], ArrayKind::InOut)
+        .array("X", vec![n, n], ArrayKind::Output)
+        .stmt(
+            "acc",
+            vec![i(), c()],
+            Expr::sel(
+                Expr::bin(OpKind::CmpEq, Expr::Idx(j()), Expr::Const(0)),
+                Expr::read(1, vec![i(), c()]),
+                Expr::read(2, vec![i(), c()]),
+            ),
+        )
+        .stmt(
+            "acc",
+            vec![i(), c()],
+            Expr::sel(
+                Expr::bin(OpKind::CmpLt, Expr::Idx(j()), Expr::Idx(i())),
+                Expr::bin(
+                    OpKind::Sub,
+                    Expr::read(2, vec![i(), c()]),
+                    Expr::bin(
+                        OpKind::Mul,
+                        Expr::read(0, vec![i(), j()]),
+                        Expr::read(3, vec![j(), c()]),
+                    ),
+                ),
+                Expr::read(2, vec![i(), c()]),
+            ),
+        )
+        .stmt(
+            "X",
+            vec![i(), c()],
+            Expr::sel(
+                Expr::bin(OpKind::CmpEq, Expr::Idx(j()), Expr::Idx(i())),
+                Expr::bin(
+                    OpKind::Div,
+                    Expr::read(2, vec![i(), c()]),
+                    Expr::read(0, vec![i(), i()]),
+                ),
+                Expr::read(3, vec![i(), c()]),
+            ),
+        )
+        .finish()
+}
+
+// ========================= PRA builders (TCPA view) =========================
+
+/// The paper's Fig. 3 / Listing 1 GEMM PRA extended with the `+C` read-in:
+/// `D = A·B + C` (C preloaded in array `D`).
+pub fn gemm_pra(n: i64) -> Pra {
+    let b = PraBuilder::new("gemm", Dtype::I32, vec![n, n, n])
+        .var("a")
+        .var("b")
+        .var("p")
+        .var("c")
+        .array("A", vec![n, n], ArrayKind::Input)
+        .array("B", vec![n, n], ArrayKind::Input)
+        .array("D", vec![n, n], ArrayKind::InOut);
+    let a_in = b.input("A", AffineMap::select_dims(3, &[0, 2]));
+    let b_in = b.input("B", AffineMap::select_dims(3, &[2, 1]));
+    let d_in = b.input("D", AffineMap::select_dims(3, &[0, 1]));
+    let a_prop = b.v("a", vec![0, 1, 0]);
+    let b_prop = b.v("b", vec![1, 0, 0]);
+    let (a0, b0, p0, p0b, c_last) = (b.v0("a"), b.v0("b"), b.v0("p"), b.v0("p"), b.v0("c"));
+    let c_prev = b.v("c", vec![0, 0, 1]);
+    b.eq("S1a", "a", OpKind::Mov, vec![a_in], CondSpace::dim_eq(3, 1, 0))
+        .eq("S1b", "a", OpKind::Mov, vec![a_prop], CondSpace::dim_ge(3, 1, 1))
+        .eq("S2a", "b", OpKind::Mov, vec![b_in], CondSpace::dim_eq(3, 0, 0))
+        .eq("S2b", "b", OpKind::Mov, vec![b_prop], CondSpace::dim_ge(3, 0, 1))
+        .eq("S3", "p", OpKind::Mul, vec![a0, b0], CondSpace::all())
+        .eq("S4a", "c", OpKind::Mov, vec![p0], CondSpace::dim_eq(3, 2, 0))
+        .eq(
+            "S4b",
+            "c",
+            OpKind::Add,
+            vec![c_prev, p0b],
+            CondSpace::dim_ge(3, 2, 1),
+        )
+        .out_eq(
+            "S5D",
+            "D",
+            AffineMap::select_dims(3, &[0, 1]),
+            OpKind::Add,
+            vec![c_last, d_in],
+            CondSpace::dim_eq(3, 2, n - 1),
+        )
+        .finish()
+}
+
+/// Systolic accumulating mat-vec PRA over (i0 = out row, i1 = reduction):
+/// `out[i0] += Σ_{i1} M[i0,i1]·v[i1]` (`M[i1,i0]` when `transpose`).
+/// `v` is read at the i0 = 0 border and propagated down the rows; `out` is
+/// preloaded (in-out) so MVT's `z = x + A·y` shape comes for free.
+fn matvec_pra(
+    name: &str,
+    n: i64,
+    transpose: bool,
+    mat: &str,
+    vec_in: &str,
+    out: &str,
+    init: Option<&str>,
+) -> Pra {
+    let _ = init;
+    let b = PraBuilder::new(name, Dtype::I32, vec![n, n])
+        .var("xx")
+        .var("p")
+        .var("s")
+        .array(mat, vec![n, n], ArrayKind::Input)
+        .array(vec_in, vec![n], ArrayKind::Input)
+        .array(out, vec![n], ArrayKind::InOut);
+    let m_read = if transpose {
+        b.input(mat, AffineMap::select_dims(2, &[1, 0]))
+    } else {
+        b.input(mat, AffineMap::select_dims(2, &[0, 1]))
+    };
+    let v_read = b.input(vec_in, AffineMap::select_dims(2, &[1]));
+    let out_init = b.input(out, AffineMap::select_dims(2, &[0]));
+    let xx_prop = b.v("xx", vec![1, 0]);
+    let (xx0, p0, p0b, s_last) = (b.v0("xx"), b.v0("p"), b.v0("p"), b.v0("s"));
+    let s_prev = b.v("s", vec![0, 1]);
+    b.eq("Xin", "xx", OpKind::Mov, vec![v_read], CondSpace::dim_eq(2, 0, 0))
+        .eq("Xprop", "xx", OpKind::Mov, vec![xx_prop], CondSpace::dim_ge(2, 0, 1))
+        .eq("P", "p", OpKind::Mul, vec![m_read, xx0], CondSpace::all())
+        .eq("Si", "s", OpKind::Mov, vec![p0], CondSpace::dim_eq(2, 1, 0))
+        .eq("Sa", "s", OpKind::Add, vec![s_prev, p0b], CondSpace::dim_ge(2, 1, 1))
+        .out_eq(
+            "Out",
+            out,
+            AffineMap::select_dims(2, &[0]),
+            OpKind::Add,
+            vec![s_last, out_init],
+            CondSpace::dim_eq(2, 1, n - 1),
+        )
+        .finish()
+}
+
+/// GESUMMV PRA: two products per iteration, two accumulators, summed into
+/// `y` at the end of each row (y = A·x + B·x).
+pub fn gesummv_pra(n: i64) -> Pra {
+    let b = PraBuilder::new("gesummv", Dtype::I32, vec![n, n])
+        .var("xx")
+        .var("pa")
+        .var("pb")
+        .var("s1")
+        .var("s2")
+        .var("t")
+        .array("A", vec![n, n], ArrayKind::Input)
+        .array("B", vec![n, n], ArrayKind::Input)
+        .array("x", vec![n], ArrayKind::Input)
+        .array("y", vec![n], ArrayKind::InOut);
+    let a_read = b.input("A", AffineMap::select_dims(2, &[0, 1]));
+    let b_read = b.input("B", AffineMap::select_dims(2, &[0, 1]));
+    let x_read = b.input("x", AffineMap::select_dims(2, &[1]));
+    let y_init = b.input("y", AffineMap::select_dims(2, &[0]));
+    let xx_prop = b.v("xx", vec![1, 0]);
+    let (xx0, xx0b) = (b.v0("xx"), b.v0("xx"));
+    let (pa0, pb0, pa0c, pb0c) = (b.v0("pa"), b.v0("pb"), b.v0("pa"), b.v0("pb"));
+    let (s1p, s2p) = (b.v("s1", vec![0, 1]), b.v("s2", vec![0, 1]));
+    let (s1l, s2l, t_last) = (b.v0("s1"), b.v0("s2"), b.v0("t"));
+    b.eq("Xin", "xx", OpKind::Mov, vec![x_read], CondSpace::dim_eq(2, 0, 0))
+        .eq("Xprop", "xx", OpKind::Mov, vec![xx_prop], CondSpace::dim_ge(2, 0, 1))
+        .eq("Pa", "pa", OpKind::Mul, vec![a_read, xx0], CondSpace::all())
+        .eq("Pb", "pb", OpKind::Mul, vec![b_read, xx0b], CondSpace::all())
+        .eq("S1i", "s1", OpKind::Mov, vec![pa0], CondSpace::dim_eq(2, 1, 0))
+        .eq("S2i", "s2", OpKind::Mov, vec![pb0], CondSpace::dim_eq(2, 1, 0))
+        .eq("S1a", "s1", OpKind::Add, vec![s1p, pa0c], CondSpace::dim_ge(2, 1, 1))
+        .eq("S2a", "s2", OpKind::Add, vec![s2p, pb0c], CondSpace::dim_ge(2, 1, 1))
+        .eq("Sum", "t", OpKind::Add, vec![s1l, s2l], CondSpace::dim_eq(2, 1, n - 1))
+        .out_eq(
+            "Out",
+            "y",
+            AffineMap::select_dims(2, &[0]),
+            OpKind::Add,
+            vec![t_last, y_init],
+            CondSpace::dim_eq(2, 1, n - 1),
+        )
+        .finish()
+}
+
+/// `i_a − i_b == c` condition.
+fn diff_eq(n: usize, a: usize, bb: usize, c: i64) -> CondSpace {
+    CondSpace::diff_ge(n, a, bb, c).and(CondSpace::diff_ge(n, bb, a, -c))
+}
+
+/// TRISOLV PRA (forward substitution) over (i0 = row, i1 = column):
+/// the solved `x[i1]` is produced by a divider on the diagonal and
+/// propagated down the rows; products are subtracted along each row.
+pub fn trisolv_pra(n: i64) -> Pra {
+    let b = PraBuilder::new("trisolv", Dtype::F32, vec![n, n])
+        .var("xb")
+        .var("m")
+        .var("acc")
+        .var("dv")
+        .array("L", vec![n, n], ArrayKind::Input)
+        .array("b", vec![n], ArrayKind::Input)
+        .array("x", vec![n], ArrayKind::Output);
+    let l_read = b.input("L", AffineMap::select_dims(2, &[0, 1]));
+    let l_diag0 = b.input("L", AffineMap::new(vec![vec![0, 0], vec![0, 0]], vec![0, 0]));
+    let l_diag = b.input("L", AffineMap::new(vec![vec![1, 0], vec![1, 0]], vec![0, 0]));
+    let b0 = b.input("b", AffineMap::new(vec![vec![0, 0]], vec![0]));
+    let b_row = b.input("b", AffineMap::select_dims(2, &[0]));
+    let dv_up = b.v("dv", vec![1, 0]);
+    let xb_up = b.v("xb", vec![1, 0]);
+    let (xb0, m0, m0b) = (b.v0("xb"), b.v0("m"), b.v0("m"));
+    let acc_prev = b.v("acc", vec![0, 1]);
+    let acc_diag = b.v("acc", vec![0, 1]);
+    let dv_out = b.v0("dv");
+    b.eq(
+        "Dv0",
+        "dv",
+        OpKind::Div,
+        vec![b0, l_diag0],
+        CondSpace::dim_eq(2, 0, 0).and(CondSpace::dim_eq(2, 1, 0)),
+    )
+    .eq(
+        "Dvr",
+        "dv",
+        OpKind::Div,
+        vec![acc_diag, l_diag],
+        CondSpace::dim_ge(2, 0, 1).and(diff_eq(2, 0, 1, 0)),
+    )
+    .eq("Xb1", "xb", OpKind::Mov, vec![dv_up], diff_eq(2, 0, 1, 1))
+    .eq(
+        "Xbp",
+        "xb",
+        OpKind::Mov,
+        vec![xb_up],
+        CondSpace::diff_ge(2, 0, 1, 2),
+    )
+    .eq(
+        "M",
+        "m",
+        OpKind::Mul,
+        vec![l_read, xb0],
+        CondSpace::diff_ge(2, 0, 1, 1),
+    )
+    .eq(
+        "Acc0",
+        "acc",
+        OpKind::Sub,
+        vec![b_row, m0],
+        CondSpace::dim_eq(2, 1, 0).and(CondSpace::dim_ge(2, 0, 1)),
+    )
+    .eq(
+        "Accn",
+        "acc",
+        OpKind::Sub,
+        vec![acc_prev, m0b],
+        CondSpace::dim_ge(2, 1, 1).and(CondSpace::diff_ge(2, 0, 1, 1)),
+    )
+    .out_eq(
+        "Out",
+        "x",
+        AffineMap::select_dims(2, &[0]),
+        OpKind::Mov,
+        vec![dv_out],
+        diff_eq(2, 0, 1, 0),
+    )
+    .finish()
+}
+
+/// TRSM PRA over (i0 = row, i1 = RHS column, i2 = L column): TRISOLV in the
+/// (i0, i2) plane, fully independent along i1 — the §V-A experiment showing
+/// a 3-D nest utilizes the 2-D array better.
+pub fn trsm_pra(n: i64) -> Pra {
+    let b = PraBuilder::new("trsm", Dtype::F32, vec![n, n, n])
+        .var("xb")
+        .var("m")
+        .var("acc")
+        .var("dv")
+        .array("L", vec![n, n], ArrayKind::Input)
+        .array("B", vec![n, n], ArrayKind::Input)
+        .array("X", vec![n, n], ArrayKind::Output);
+    let l_read = b.input("L", AffineMap::select_dims(3, &[0, 2]));
+    let l_diag0 = b.input(
+        "L",
+        AffineMap::new(vec![vec![0, 0, 0], vec![0, 0, 0]], vec![0, 0]),
+    );
+    let l_diag = b.input(
+        "L",
+        AffineMap::new(vec![vec![1, 0, 0], vec![1, 0, 0]], vec![0, 0]),
+    );
+    let b_row0 = b.input(
+        "B",
+        AffineMap::new(vec![vec![0, 0, 0], vec![0, 1, 0]], vec![0, 0]),
+    );
+    let b_row = b.input("B", AffineMap::select_dims(3, &[0, 1]));
+    let dv_up = b.v("dv", vec![1, 0, 0]);
+    let xb_up = b.v("xb", vec![1, 0, 0]);
+    let (xb0, m0, m0b) = (b.v0("xb"), b.v0("m"), b.v0("m"));
+    let acc_prev = b.v("acc", vec![0, 0, 1]);
+    let acc_diag = b.v("acc", vec![0, 0, 1]);
+    let dv_out = b.v0("dv");
+    b.eq(
+        "Dv0",
+        "dv",
+        OpKind::Div,
+        vec![b_row0, l_diag0],
+        CondSpace::dim_eq(3, 0, 0).and(CondSpace::dim_eq(3, 2, 0)),
+    )
+    .eq(
+        "Dvr",
+        "dv",
+        OpKind::Div,
+        vec![acc_diag, l_diag],
+        CondSpace::dim_ge(3, 0, 1).and(diff_eq(3, 0, 2, 0)),
+    )
+    .eq("Xb1", "xb", OpKind::Mov, vec![dv_up], diff_eq(3, 0, 2, 1))
+    .eq(
+        "Xbp",
+        "xb",
+        OpKind::Mov,
+        vec![xb_up],
+        CondSpace::diff_ge(3, 0, 2, 2),
+    )
+    .eq(
+        "M",
+        "m",
+        OpKind::Mul,
+        vec![l_read, xb0],
+        CondSpace::diff_ge(3, 0, 2, 1),
+    )
+    .eq(
+        "Acc0",
+        "acc",
+        OpKind::Sub,
+        vec![b_row, m0],
+        CondSpace::dim_eq(3, 2, 0).and(CondSpace::dim_ge(3, 0, 1)),
+    )
+    .eq(
+        "Accn",
+        "acc",
+        OpKind::Sub,
+        vec![acc_prev, m0b],
+        CondSpace::dim_ge(3, 2, 1).and(CondSpace::diff_ge(3, 0, 2, 1)),
+    )
+    .out_eq(
+        "Out",
+        "X",
+        AffineMap::select_dims(3, &[0, 1]),
+        OpKind::Mov,
+        vec![dv_out],
+        diff_eq(3, 0, 2, 0),
+    )
+    .finish()
+}
+
+// ============================== tests =======================================
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_benchmarks_build() {
+        for id in BenchId::ALL {
+            let n = 4;
+            let w = build(id, n);
+            assert!(!w.stages.is_empty());
+            assert!(!w.pras.is_empty());
+        }
+    }
+
+    #[test]
+    fn nest_and_pra_references_agree() {
+        for id in BenchId::ALL {
+            let n = if id == BenchId::Gemm { 4 } else { 4 };
+            let w = build(id, n);
+            let ins = inputs(id, n, 7);
+            let a = w.reference_nest(&ins);
+            let b = w.reference_pra(&ins);
+            for name in w.output_names() {
+                match id.dtype() {
+                    Dtype::I32 => assert_eq!(a[&name], b[&name], "{} output {name}", id.name()),
+                    Dtype::F32 => {
+                        for (x, y) in a[&name].iter().zip(b[&name].iter()) {
+                            let (x, y) = (x.as_f64(), y.as_f64());
+                            assert!(
+                                (x - y).abs() <= 1e-4 * (1.0 + x.abs()),
+                                "{} output {name}: {x} vs {y}",
+                                id.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

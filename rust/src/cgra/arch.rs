@@ -1,0 +1,247 @@
+//! CGRA architecture model (paper §II-A, Fig. 1 right, §V-B1).
+//!
+//! A W×H grid of PEs, each with one single-issue FU, a crossbar to its
+//! neighbors, `route_regs` multiplexed registers along the datapath and an
+//! instruction memory of per-cycle configurations. Only a subset of PEs
+//! (classically the left border column) has access to scratchpad memory
+//! banks; each memory PE owns one distinct bank (§V-B1).
+
+/// Interconnect topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Classical single-hop mesh: neighbor transfers take one cycle each.
+    Mesh,
+    /// HyCUBE-style reconfigurable interconnect: up to `max_hops` mesh hops
+    /// in a single cycle, bypassing intermediate PEs (paper [10, 12]).
+    HyCube { max_hops: usize },
+}
+
+/// Which PEs can access scratchpad memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemAccess {
+    /// Only the left border column (the paper's generic CGRA and Fig. 1).
+    LeftColumn,
+    /// All four borders (the mitigation discussed in §VI).
+    Borders,
+}
+
+/// A CGRA architecture instance.
+#[derive(Debug, Clone)]
+pub struct CgraArch {
+    pub name: String,
+    pub width: usize,
+    pub height: usize,
+    pub topology: Topology,
+    pub mem_access: MemAccess,
+    /// Multiplexed registers along the datapath per PE (10 in §V-B1).
+    pub route_regs: usize,
+    /// Instruction-memory depth (16 configurations in §V-B1). Research
+    /// mappers report IIs beyond this; the mapper's own `max_ii` caps the
+    /// search, while this parameter drives the area model.
+    pub instr_mem: usize,
+    /// Words per scratchpad bank (4 KiB = 1024 × 32-bit words in §V-B1).
+    pub spm_bank_words: usize,
+    /// Whether PEs include the 16-cycle divider.
+    pub supports_div: bool,
+}
+
+impl CgraArch {
+    /// The paper's generic classical CGRA (§V-B1): 4×4, single-hop mesh,
+    /// left-column memory access, 10 route registers, 16-deep instruction
+    /// memory, 4 KiB banks, full ALU incl. divider.
+    pub fn classical(width: usize, height: usize) -> Self {
+        CgraArch {
+            name: format!("classical-{width}x{height}"),
+            width,
+            height,
+            topology: Topology::Mesh,
+            mem_access: MemAccess::LeftColumn,
+            route_regs: 10,
+            instr_mem: 16,
+            spm_bank_words: 1024,
+            supports_div: true,
+        }
+    }
+
+    /// HyCUBE-like instance: single-cycle multi-hop (up to 3 hops).
+    pub fn hycube(width: usize, height: usize) -> Self {
+        CgraArch {
+            name: format!("hycube-{width}x{height}"),
+            topology: Topology::HyCube { max_hops: 3 },
+            ..Self::classical(width, height)
+        }
+    }
+
+    /// ADRES-like instance (Pillars' target): mesh with a shared register
+    /// file modeled as more route registers, memory on the left column.
+    pub fn adres(width: usize, height: usize) -> Self {
+        CgraArch {
+            name: format!("adres-{width}x{height}"),
+            route_regs: 14,
+            ..Self::classical(width, height)
+        }
+    }
+
+    pub fn n_pes(&self) -> usize {
+        self.width * self.height
+    }
+
+    #[inline]
+    pub fn pe_id(&self, x: usize, y: usize) -> usize {
+        y * self.width + x
+    }
+
+    #[inline]
+    pub fn pe_xy(&self, pe: usize) -> (usize, usize) {
+        (pe % self.width, pe / self.width)
+    }
+
+    /// Mesh neighbors (N/E/S/W) of a PE.
+    pub fn neighbors(&self, pe: usize) -> Vec<usize> {
+        let (x, y) = self.pe_xy(pe);
+        let mut out = Vec::with_capacity(4);
+        if y > 0 {
+            out.push(self.pe_id(x, y - 1));
+        }
+        if x + 1 < self.width {
+            out.push(self.pe_id(x + 1, y));
+        }
+        if y + 1 < self.height {
+            out.push(self.pe_id(x, y + 1));
+        }
+        if x > 0 {
+            out.push(self.pe_id(x - 1, y));
+        }
+        out
+    }
+
+    /// All PEs reachable in one routing step from `pe` (incl. staying put is
+    /// handled separately by the router).
+    pub fn step_targets(&self, pe: usize) -> Vec<usize> {
+        match self.topology {
+            Topology::Mesh => self.neighbors(pe),
+            Topology::HyCube { max_hops } => {
+                let (x, y) = self.pe_xy(pe);
+                let mut out = Vec::new();
+                for ty in 0..self.height {
+                    for tx in 0..self.width {
+                        let d = x.abs_diff(tx) + y.abs_diff(ty);
+                        if d >= 1 && d <= max_hops {
+                            out.push(self.pe_id(tx, ty));
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Manhattan distance between two PEs.
+    pub fn manhattan(&self, a: usize, b: usize) -> usize {
+        let (ax, ay) = self.pe_xy(a);
+        let (bx, by) = self.pe_xy(b);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+
+    /// Minimum routing steps (cycles) between two PEs.
+    pub fn min_steps(&self, a: usize, b: usize) -> usize {
+        let d = self.manhattan(a, b);
+        match self.topology {
+            Topology::Mesh => d,
+            Topology::HyCube { max_hops } => d.div_ceil(max_hops.max(1)),
+        }
+    }
+
+    /// PEs with scratchpad access, in bank order (bank `i` belongs to
+    /// `mem_pes()[i]`, §V-B1's "distinct bank per left-border PE").
+    pub fn mem_pes(&self) -> Vec<usize> {
+        match self.mem_access {
+            MemAccess::LeftColumn => (0..self.height).map(|y| self.pe_id(0, y)).collect(),
+            MemAccess::Borders => {
+                let mut out = Vec::new();
+                for y in 0..self.height {
+                    for x in 0..self.width {
+                        if x == 0 || y == 0 || x + 1 == self.width || y + 1 == self.height {
+                            out.push(self.pe_id(x, y));
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    pub fn is_mem_pe(&self, pe: usize) -> bool {
+        self.mem_pes().contains(&pe)
+    }
+
+    /// Total scratchpad capacity in words.
+    pub fn spm_words(&self) -> usize {
+        self.mem_pes().len() * self.spm_bank_words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_indexing_roundtrip() {
+        let a = CgraArch::classical(4, 4);
+        for pe in 0..a.n_pes() {
+            let (x, y) = a.pe_xy(pe);
+            assert_eq!(a.pe_id(x, y), pe);
+        }
+    }
+
+    #[test]
+    fn mesh_neighbors_are_adjacent() {
+        let a = CgraArch::classical(4, 4);
+        for pe in 0..16 {
+            for n in a.neighbors(pe) {
+                assert_eq!(a.manhattan(pe, n), 1);
+            }
+        }
+        // corner has 2 neighbors, center has 4
+        assert_eq!(a.neighbors(0).len(), 2);
+        assert_eq!(a.neighbors(a.pe_id(1, 1)).len(), 4);
+    }
+
+    #[test]
+    fn hycube_step_targets_within_3_hops() {
+        let a = CgraArch::hycube(4, 4);
+        let ts = a.step_targets(0);
+        assert!(ts.iter().all(|&t| a.manhattan(0, t) <= 3));
+        assert!(ts.len() > a.neighbors(0).len());
+    }
+
+    #[test]
+    fn min_steps_hycube_vs_mesh() {
+        let m = CgraArch::classical(4, 4);
+        let h = CgraArch::hycube(4, 4);
+        let a = m.pe_id(0, 0);
+        let b = m.pe_id(3, 3);
+        assert_eq!(m.min_steps(a, b), 6);
+        assert_eq!(h.min_steps(a, b), 2);
+    }
+
+    #[test]
+    fn left_column_mem_pes() {
+        let a = CgraArch::classical(4, 4);
+        let m = a.mem_pes();
+        assert_eq!(m.len(), 4);
+        for pe in m {
+            assert_eq!(a.pe_xy(pe).0, 0);
+            assert!(a.is_mem_pe(pe));
+        }
+        assert!(!a.is_mem_pe(a.pe_id(1, 1)));
+        assert_eq!(a.spm_words(), 4096);
+    }
+
+    #[test]
+    fn borders_mem_pes_8x8() {
+        let mut a = CgraArch::classical(8, 8);
+        a.mem_access = MemAccess::Borders;
+        assert_eq!(a.mem_pes().len(), 28);
+    }
+}

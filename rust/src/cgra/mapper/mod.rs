@@ -1,0 +1,706 @@
+//! Operation-centric modulo-scheduling mapper (paper §II-B):
+//! **binding** β(v) → PE, **scheduling** τ(v) → start cycle, **routing**
+//! every edge so data arrives exactly when consumed:
+//! `τ(v_i) + d_i + r_{i,j} = τ(v_j)` (mod-II resource model).
+//!
+//! The driver implements iterative modulo scheduling: starting from
+//! `II = max(RecMII, ResMII)`, place nodes in priority order, route their
+//! edges through the space-time resource graph ([`route`]), and restart with
+//! randomized orders (and finally a larger II) on failure. Two effort levels
+//! emulate the evaluated toolchains: [`Effort::Heuristic`] takes the first
+//! feasible slot (CGRA-Flow's single-mapping-per-II strategy, §II-C1) and
+//! [`Effort::Negotiated`] picks cost-minimal slots with many restarts
+//! (Morpher's PathFinder/simulated-annealing family, §II-C2).
+
+pub mod resources;
+pub mod route;
+
+use crate::frontend::dfg::Dfg;
+use crate::frontend::mii;
+use crate::ir::op::OpKind;
+use crate::util::rng::Rng;
+
+use super::arch::CgraArch;
+use resources::{Occupancy, ValueId};
+use route::{route_edge, RoutedPath};
+
+/// Mapper effort level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Effort {
+    /// First-feasible placement, few restarts (CGRA-Flow-like).
+    Heuristic,
+    /// Cost-minimizing placement with congestion awareness and many
+    /// randomized restarts (Morpher/CGRA-ME-like).
+    Negotiated,
+}
+
+/// Mapping options (derived from a toolchain profile).
+#[derive(Debug, Clone)]
+pub struct MapOpts {
+    pub effort: Effort,
+    /// Upper bound on the II to try (instruction-memory depth).
+    pub max_ii: u32,
+    /// Randomized restarts per II.
+    pub restarts: usize,
+    /// Respect inter-iteration memory hazards (register-aware toolchains,
+    /// Table I; CGRA-Flow does not).
+    pub respect_hazards: bool,
+    pub seed: u64,
+}
+
+impl MapOpts {
+    pub fn heuristic() -> Self {
+        MapOpts {
+            effort: Effort::Heuristic,
+            max_ii: 32,
+            restarts: 2,
+            respect_hazards: false,
+            seed: 1,
+        }
+    }
+
+    pub fn negotiated() -> Self {
+        MapOpts {
+            effort: Effort::Negotiated,
+            max_ii: 32,
+            restarts: 10,
+            respect_hazards: true,
+            seed: 1,
+        }
+    }
+}
+
+/// A successful mapping.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    pub ii: u32,
+    /// node → PE
+    pub binding: Vec<usize>,
+    /// node → start cycle (within the steady-state window; may exceed II)
+    pub tau: Vec<u32>,
+    /// routed paths per data edge
+    pub routes: Vec<RoutedPath>,
+    /// schedule length = max(τ + latency)
+    pub sched_len: u32,
+    /// array → scratchpad bank (= index into `arch.mem_pes()`)
+    pub banks: Vec<usize>,
+}
+
+impl Mapping {
+    /// Number of PEs with no operation bound (Table II's "#unused PE").
+    pub fn unused_pes(&self, arch: &CgraArch) -> usize {
+        let mut used = vec![false; arch.n_pes()];
+        for &pe in &self.binding {
+            used[pe] = true;
+        }
+        used.iter().filter(|&&u| !u).count()
+    }
+
+    /// Maximum number of operations bound to a single PE (Table II).
+    pub fn max_ops_per_pe(&self, arch: &CgraArch) -> usize {
+        let mut cnt = vec![0usize; arch.n_pes()];
+        for &pe in &self.binding {
+            cnt[pe] += 1;
+        }
+        cnt.into_iter().max().unwrap_or(0)
+    }
+
+    /// Pipelined execution latency for `iters` iterations (paper's latency
+    /// metric in Fig. 6): `(iters − 1)·II + schedule length`.
+    pub fn latency(&self, iters: u64) -> u64 {
+        if iters == 0 {
+            return 0;
+        }
+        (iters - 1) * self.ii as u64 + self.sched_len as u64
+    }
+}
+
+/// Mapping failure modes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MapError {
+    /// No feasible mapping up to `max_ii`.
+    NoMapping { tried_up_to_ii: u32 },
+    /// Input/output arrays exceed scratchpad capacity (§IV-6's CGRA
+    /// constraint: peripheral memory must hold all data).
+    SpmOverflow { needed: usize, capacity: usize },
+    /// The DFG contains an op the architecture cannot execute.
+    UnsupportedOp(OpKind),
+}
+
+impl std::fmt::Display for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MapError::NoMapping { tried_up_to_ii } => {
+                write!(f, "no feasible mapping up to II={tried_up_to_ii}")
+            }
+            MapError::SpmOverflow { needed, capacity } => {
+                write!(f, "scratchpad overflow: need {needed} words, have {capacity}")
+            }
+            MapError::UnsupportedOp(op) => write!(f, "unsupported operation {op}"),
+        }
+    }
+}
+
+/// Assign each array to a scratchpad bank (round-robin over memory PEs,
+/// §V-B1's one-distinct-bank-per-border-PE organization) and check capacity.
+pub fn assign_banks(dfg: &Dfg, arch: &CgraArch) -> Result<Vec<usize>, MapError> {
+    let n_banks = arch.mem_pes().len();
+    let banks: Vec<usize> = (0..dfg.arrays.len()).map(|i| i % n_banks).collect();
+    let mut usage = vec![0usize; n_banks];
+    for (a, arr) in dfg.arrays.iter().enumerate() {
+        usage[banks[a]] += arr.len();
+    }
+    if let Some(over) = usage.iter().find(|&&u| u > arch.spm_bank_words) {
+        return Err(MapError::SpmOverflow {
+            needed: *over,
+            capacity: arch.spm_bank_words,
+        });
+    }
+    Ok(banks)
+}
+
+/// Map a DFG onto a CGRA.
+pub fn map(
+    dfg: &Dfg,
+    arch: &CgraArch,
+    hazards: &[(usize, usize)],
+    opts: &MapOpts,
+) -> Result<Mapping, MapError> {
+    for n in &dfg.nodes {
+        if n.kind == OpKind::Div && !arch.supports_div {
+            return Err(MapError::UnsupportedOp(OpKind::Div));
+        }
+    }
+    let banks = assign_banks(dfg, arch)?;
+    let hazard_slice: &[(usize, usize)] = if opts.respect_hazards { hazards } else { &[] };
+    let mii0 = mii::mii(dfg, hazard_slice, arch.n_pes(), arch.mem_pes().len());
+
+    let mut rng = Rng::new(opts.seed ^ 0xC0FFEE);
+    for ii in mii0..=opts.max_ii {
+        // full restart diversity near the MII where quality matters most;
+        // fall back to a couple of attempts once the II has escalated (the
+        // search space only gets easier, so diversity pays off less)
+        let restarts = if ii <= mii0 + 2 {
+            opts.restarts
+        } else {
+            opts.restarts.min(3)
+        };
+        for attempt in 0..restarts {
+            let seed = rng.next_u64() ^ (attempt as u64);
+            if let Some(m) = try_map_at_ii(dfg, arch, hazard_slice, &banks, ii, seed, opts.effort)
+            {
+                return Ok(m);
+            }
+        }
+    }
+    Err(MapError::NoMapping {
+        tried_up_to_ii: opts.max_ii,
+    })
+}
+
+/// Scheduling priorities: longest dependence path (height) to any sink over
+/// zero-distance deps — standard modulo-scheduling priority.
+fn heights(dfg: &Dfg) -> Vec<i64> {
+    let n = dfg.n_nodes();
+    let mut h = vec![0i64; n];
+    let order = dfg.topo_order();
+    // adjacency once (sched_deps allocates; never call it in a loop)
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (src, dst, dist) in dfg.sched_deps() {
+        if dist == 0 {
+            succ[src].push(dst);
+        }
+    }
+    for &v in order.iter().rev() {
+        let lat = dfg.nodes[v].kind.latency() as i64;
+        let mut best = lat;
+        for &dst in &succ[v] {
+            best = best.max(lat + h[dst]);
+        }
+        h[v] = best;
+    }
+    h
+}
+
+struct Placement {
+    pe: Vec<Option<usize>>,
+    tau: Vec<Option<i64>>,
+}
+
+/// One placement + routing attempt at a fixed II.
+fn try_map_at_ii(
+    dfg: &Dfg,
+    arch: &CgraArch,
+    hazards: &[(usize, usize)],
+    banks: &[usize],
+    ii: u32,
+    seed: u64,
+    effort: Effort,
+) -> Option<Mapping> {
+    let n = dfg.n_nodes();
+    let mut rng = Rng::new(seed);
+    let h = heights(dfg);
+
+    // Order: topological with height-desc priority and random tiebreak.
+    let mut order = dfg.topo_order();
+    // stable-sort by height desc, keeping topo feasibility by re-sorting only
+    // within a stable topological sort keyed on (-height, jitter):
+    let jitter: Vec<u64> = (0..n).map(|_| rng.next_u64() % 16).collect();
+    order.sort_by_key(|&v| (-(h[v]), jitter[v]));
+    // Re-establish topo order among dist-0 deps with priority as tiebreak.
+    let order = topo_with_priority(dfg, &order);
+
+    // constraint edges: (src, dst, dist, routed?)
+    let mut cons: Vec<(usize, usize, u32, bool)> = Vec::new();
+    for e in dfg.edges() {
+        cons.push((e.src, e.dst, e.dist, true));
+    }
+    for (dst, node) in dfg.nodes.iter().enumerate() {
+        for &(src, dist) in &node.extra_deps {
+            cons.push((src, dst, dist, false));
+        }
+    }
+    for &(earlier, later) in hazards {
+        // later@it ends before earlier@it+1 starts
+        cons.push((later, earlier, 1, false));
+    }
+    // per-node adjacency into the constraint list (avoid O(n·|cons|) scans)
+    let mut cons_of: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (ci, &(s, d, _, _)) in cons.iter().enumerate() {
+        cons_of[s].push(ci);
+        if d != s {
+            cons_of[d].push(ci);
+        }
+    }
+
+    let mem_pes = arch.mem_pes();
+    let mut occ = Occupancy::new(ii, arch.route_regs);
+    let mut place = Placement {
+        pe: vec![None; n],
+        tau: vec![None; n],
+    };
+    let mut routes: Vec<RoutedPath> = Vec::new();
+
+    let horizon = (4 * ii as i64 + 2 * (arch.width + arch.height) as i64).max(24);
+    // routing-evaluation budget: bounds the worst-case attempt cost so the
+    // II-escalation loop stays responsive on large arrays
+    let mut evals_left: i64 = 8_000;
+
+    for &v in &order {
+        let node = &dfg.nodes[v];
+        // earliest/latest from already-placed constraint partners
+        let mut est = 0i64;
+        let mut lst = horizon;
+        for &ci in &cons_of[v] {
+            let (s, d, dist, _) = cons[ci];
+            if d == v && s != v {
+                if let Some(ts) = place.tau[s] {
+                    let lat = dfg.nodes[s].kind.latency() as i64;
+                    est = est.max(ts + lat - (ii as i64) * dist as i64);
+                }
+            }
+            if s == v && d != v {
+                if let Some(td) = place.tau[d] {
+                    let lat = dfg.nodes[v].kind.latency() as i64;
+                    lst = lst.min(td - lat + (ii as i64) * dist as i64);
+                }
+            }
+        }
+        if est > lst {
+            return None;
+        }
+
+        // candidate PEs: memory ops are pinned to their bank PE; other ops
+        // consider PEs near already-placed constraint partners first (plus a
+        // random sample for diversity) — unpruned 8×8 search is intractable
+        let cand_pes: Vec<usize> = if node.kind.is_mem() {
+            vec![mem_pes[banks[node.array.expect("mem op without array")]]]
+        } else {
+            let mut pes: Vec<usize> = (0..arch.n_pes()).collect();
+            rng.shuffle(&mut pes);
+            let partners: Vec<usize> = cons_of[v]
+                .iter()
+                .filter_map(|&ci| {
+                    let (s, d, _, _) = cons[ci];
+                    let other = if d == v { s } else { d };
+                    place.pe[other]
+                })
+                .collect();
+            if !partners.is_empty() {
+                pes.sort_by_key(|&pe| {
+                    partners.iter().map(|&p| arch.min_steps(pe, p)).sum::<usize>()
+                });
+            }
+            // HyCube's single-cycle multi-hop reach makes placement far
+            // less position-sensitive: fewer candidates suffice
+            let hycube = matches!(arch.topology, crate::cgra::arch::Topology::HyCube { .. });
+            let cap = match (effort, partners.is_empty()) {
+                (Effort::Heuristic, _) => pes.len(),
+                // placing an unconstrained node is symmetric: sample a few
+                (Effort::Negotiated, true) => 6.min(pes.len()),
+                (Effort::Negotiated, false) => if hycube { 10 } else { 16 }.min(pes.len()),
+            };
+            pes.truncate(cap);
+            pes
+        };
+
+        let mut best: Option<(i64, usize, i64, Vec<RoutedPath>)> = None;
+        't_loop: for t in est..=(est + ii as i64 - 1).min(lst) {
+            // total = routing cost + t, so once t exceeds the incumbent no
+            // later slot can win
+            if best.as_ref().is_some_and(|b| b.0 <= t) {
+                break;
+            }
+            for &pe in &cand_pes {
+                if !occ.fu_free(pe, t) {
+                    continue;
+                }
+                evals_left -= 1;
+                if evals_left < 0 {
+                    return None;
+                }
+                // try routing all constraint edges touching placed partners
+                let mut trial: Vec<RoutedPath> = Vec::new();
+                let mut cost = 0i64;
+                let mark = occ.mark();
+                let mut ok = true;
+                for &ci in &cons_of[v] {
+                    let (s, d, dist, routed) = cons[ci];
+                    if !routed {
+                        continue;
+                    }
+                    let (src_pe, src_t, dst_pe, dst_t) = if d == v {
+                        match (place.pe[s], place.tau[s]) {
+                            (Some(p), Some(ts)) => (p, ts, pe, t + (ii as i64) * dist as i64),
+                            _ => continue,
+                        }
+                    } else if s == v {
+                        match (place.pe[d], place.tau[d]) {
+                            (Some(p), Some(td)) => (pe, t, p, td + (ii as i64) * dist as i64),
+                            _ => continue,
+                        }
+                    } else {
+                        continue;
+                    };
+                    let src_node = if d == v { s } else { v };
+                    let lat = dfg.nodes[src_node].kind.latency() as i64;
+                    let birth = src_t + lat;
+                    let slack = dst_t - birth;
+                    match route_edge(
+                        arch,
+                        &mut occ,
+                        ValueId(src_node as u32),
+                        src_pe,
+                        birth,
+                        dst_pe,
+                        slack,
+                    ) {
+                        Some(rp) => {
+                            cost += rp.cost;
+                            trial.push(rp);
+                        }
+                        None => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if !ok {
+                    occ.rollback(mark);
+                    continue;
+                }
+                // timing-only constraints against placed partners
+                for &ci in &cons_of[v] {
+                    let (s, d, dist, routed) = cons[ci];
+                    if routed {
+                        continue;
+                    }
+                    let viol = if d == v {
+                        place.tau[s].is_some_and(|ts| {
+                            ts + dfg.nodes[s].kind.latency() as i64
+                                > t + (ii as i64) * dist as i64
+                        })
+                    } else if s == v {
+                        place.tau[d].is_some_and(|td| {
+                            t + dfg.nodes[v].kind.latency() as i64
+                                > td + (ii as i64) * dist as i64
+                        })
+                    } else {
+                        false
+                    };
+                    if viol {
+                        ok = false;
+                        break;
+                    }
+                }
+                if !ok {
+                    occ.rollback(mark);
+                    continue;
+                }
+
+                let total = cost + t; // prefer earlier slots
+                match effort {
+                    Effort::Heuristic => {
+                        // first feasible
+                        occ.reserve_fu(pe, t);
+                        place.pe[v] = Some(pe);
+                        place.tau[v] = Some(t);
+                        routes.extend(trial);
+                        best = None;
+                        // mark placement done via labeled break
+                        // (fall through to next node)
+                        continue_outer(&mut best);
+                        break 't_loop;
+                    }
+                    Effort::Negotiated => {
+                        if best.as_ref().is_none_or(|b| total < b.0) {
+                            occ.rollback(mark);
+                            // re-evaluate best candidate later; store trial
+                            best = Some((total, pe, t, trial));
+                        } else {
+                            occ.rollback(mark);
+                        }
+                    }
+                }
+            }
+        }
+
+        if place.tau[v].is_none() {
+            match best.take() {
+                Some((_c, pe, t, _trial)) => {
+                    // re-route for real (occupancy changed since trial rollback)
+                    let mark = occ.mark();
+                    let mut committed = Vec::new();
+                    let mut ok = true;
+                    for &ci in &cons_of[v] {
+                        let (s, d, dist, routed) = cons[ci];
+                        if !routed {
+                            continue;
+                        }
+                        let (src_pe, src_t, dst_pe, dst_t, src_node) = if d == v {
+                            match (place.pe[s], place.tau[s]) {
+                                (Some(p), Some(ts)) => {
+                                    (p, ts, pe, t + (ii as i64) * dist as i64, s)
+                                }
+                                _ => continue,
+                            }
+                        } else if s == v {
+                            match (place.pe[d], place.tau[d]) {
+                                (Some(p), Some(td)) => {
+                                    (pe, t, p, td + (ii as i64) * dist as i64, v)
+                                }
+                                _ => continue,
+                            }
+                        } else {
+                            continue;
+                        };
+                        let lat = dfg.nodes[src_node].kind.latency() as i64;
+                        let birth = src_t + lat;
+                        match route_edge(
+                            arch,
+                            &mut occ,
+                            ValueId(src_node as u32),
+                            src_pe,
+                            birth,
+                            dst_pe,
+                            dst_t - birth,
+                        ) {
+                            Some(rp) => committed.push(rp),
+                            None => {
+                                ok = false;
+                                break;
+                            }
+                        }
+                    }
+                    if !ok {
+                        occ.rollback(mark);
+                        return None;
+                    }
+                    occ.reserve_fu(pe, t);
+                    place.pe[v] = Some(pe);
+                    place.tau[v] = Some(t);
+                    routes.extend(committed);
+                }
+                None => return None,
+            }
+        }
+    }
+
+    let binding: Vec<usize> = place.pe.iter().map(|p| p.unwrap()).collect();
+    let tau: Vec<u32> = place.tau.iter().map(|t| t.unwrap() as u32).collect();
+    let sched_len = (0..n)
+        .map(|v| tau[v] + dfg.nodes[v].kind.latency())
+        .max()
+        .unwrap_or(1);
+    Some(Mapping {
+        ii,
+        binding,
+        tau,
+        routes,
+        sched_len,
+        banks: banks.to_vec(),
+    })
+}
+
+#[inline]
+fn continue_outer(_b: &mut Option<(i64, usize, i64, Vec<RoutedPath>)>) {}
+
+/// Stable topological sort over dist-0 deps using `pref` order as priority.
+fn topo_with_priority(dfg: &Dfg, pref: &[usize]) -> Vec<usize> {
+    let n = dfg.n_nodes();
+    let mut rank = vec![0usize; n];
+    for (r, &v) in pref.iter().enumerate() {
+        rank[v] = r;
+    }
+    let mut indeg = vec![0usize; n];
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (s, d, dist) in dfg.sched_deps() {
+        if dist == 0 {
+            indeg[d] += 1;
+            succ[s].push(d);
+        }
+    }
+    let mut ready: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let mut out = Vec::with_capacity(n);
+    while !ready.is_empty() {
+        // pick the ready node with the best (lowest) preference rank
+        let (pos, _) = ready
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &v)| rank[v])
+            .unwrap();
+        let v = ready.swap_remove(pos);
+        out.push(v);
+        for &s in &succ[v] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+    assert_eq!(out.len(), n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::dfg_gen::{generate, GenOpts};
+    use crate::ir::loopnest::{idx, ArrayKind, Expr, NestBuilder};
+    use crate::ir::op::Dtype;
+
+    fn gemm_nest(n: i64) -> crate::ir::loopnest::LoopNest {
+        let d = 3;
+        NestBuilder::new("gemm", Dtype::I32)
+            .dim("i0", n)
+            .dim("i1", n)
+            .dim("i2", n)
+            .array("A", vec![n, n], ArrayKind::Input)
+            .array("B", vec![n, n], ArrayKind::Input)
+            .array("D", vec![n, n], ArrayKind::InOut)
+            .stmt(
+                "D",
+                vec![idx(d, 0), idx(d, 1)],
+                Expr::bin(
+                    OpKind::Add,
+                    Expr::read(2, vec![idx(d, 0), idx(d, 1)]),
+                    Expr::bin(
+                        OpKind::Mul,
+                        Expr::read(0, vec![idx(d, 0), idx(d, 2)]),
+                        Expr::read(1, vec![idx(d, 2), idx(d, 1)]),
+                    ),
+                ),
+            )
+            .finish()
+    }
+
+    fn check_mapping(dfg: &Dfg, arch: &CgraArch, m: &Mapping) {
+        // every node placed on a valid PE; mem nodes on their bank PE
+        let mem_pes = arch.mem_pes();
+        for (v, node) in dfg.nodes.iter().enumerate() {
+            assert!(m.binding[v] < arch.n_pes());
+            if node.kind.is_mem() {
+                let want = mem_pes[m.banks[node.array.unwrap()]];
+                assert_eq!(m.binding[v], want, "mem op {} not on its bank PE", node.name);
+            }
+        }
+        // every data edge timed exactly: τ_dst + II·dist = τ_src + lat + |route|
+        for rp in &m.routes {
+            assert_eq!(
+                rp.path.len() as i64 - 1,
+                rp.slack,
+                "route length mismatch for value {:?}",
+                rp.value
+            );
+        }
+        // dependence timing
+        for (s, d, dist) in dfg.sched_deps() {
+            let lhs = m.tau[s] as i64 + dfg.nodes[s].kind.latency() as i64;
+            let rhs = m.tau[d] as i64 + (m.ii as i64) * dist as i64;
+            assert!(
+                lhs <= rhs,
+                "dep ({s}->{d}, dist {dist}) violated: {lhs} > {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn maps_gemm_on_4x4_classical() {
+        let gen = generate(&gemm_nest(4), &GenOpts::flat()).unwrap();
+        let arch = CgraArch::classical(4, 4);
+        let m = map(&gen.dfg, &arch, &gen.inter_iteration_hazards, &MapOpts::negotiated())
+            .expect("gemm must map");
+        assert!(m.ii >= 3, "II can't beat RecMII");
+        assert!(m.ii <= 12, "II {} unexpectedly high", m.ii);
+        check_mapping(&gen.dfg, &arch, &m);
+    }
+
+    #[test]
+    fn heuristic_also_maps_gemm() {
+        let gen = generate(&gemm_nest(4), &GenOpts::flat()).unwrap();
+        let arch = CgraArch::classical(4, 4);
+        let m = map(&gen.dfg, &arch, &gen.inter_iteration_hazards, &MapOpts::heuristic())
+            .expect("gemm must map heuristically");
+        check_mapping(&gen.dfg, &arch, &m);
+    }
+
+    #[test]
+    fn hycube_ii_not_worse_than_mesh() {
+        let gen = generate(&gemm_nest(4), &GenOpts::flat()).unwrap();
+        let mesh = map(
+            &gen.dfg,
+            &CgraArch::classical(4, 4),
+            &gen.inter_iteration_hazards,
+            &MapOpts::negotiated(),
+        )
+        .unwrap();
+        let hy = map(
+            &gen.dfg,
+            &CgraArch::hycube(4, 4),
+            &gen.inter_iteration_hazards,
+            &MapOpts::negotiated(),
+        )
+        .unwrap();
+        assert!(hy.ii <= mesh.ii, "HyCUBE II {} > mesh II {}", hy.ii, mesh.ii);
+    }
+
+    #[test]
+    fn spm_overflow_detected() {
+        // N=64 GEMM: 3 × 4096 words on 4 × 1024-word banks -> overflow
+        let gen = generate(&gemm_nest(64), &GenOpts::flat()).unwrap();
+        let arch = CgraArch::classical(4, 4);
+        let err = map(&gen.dfg, &arch, &[], &MapOpts::heuristic()).unwrap_err();
+        assert!(matches!(err, MapError::SpmOverflow { .. }));
+    }
+
+    #[test]
+    fn latency_formula() {
+        let gen = generate(&gemm_nest(4), &GenOpts::flat()).unwrap();
+        let arch = CgraArch::classical(4, 4);
+        let m = map(&gen.dfg, &arch, &[], &MapOpts::heuristic()).unwrap();
+        assert_eq!(
+            m.latency(64),
+            63 * m.ii as u64 + m.sched_len as u64
+        );
+    }
+}

@@ -1,0 +1,246 @@
+//! Modulo resource-reservation tables for the space-time router.
+//!
+//! Resources are keyed by their slot `t mod II`:
+//! * **FU slots** — one operation issue per PE per slot.
+//! * **Route registers** — `route_regs` words per PE per slot (the 10
+//!   multiplexed datapath registers of §V-B1).
+//! * **Links** — one word per PE output direction per slot.
+//!
+//! Resource *sharing* is by value instance: the same `(value, absolute
+//! cycle)` word may occupy a register/link slot any number of times for free
+//! (fan-out), while different instances — including the *same* node's value
+//! from a different iteration, which lands in the same slot when a lifetime
+//! exceeds II — each consume capacity. A journal enables cheap rollback of
+//! tentative routes.
+
+use std::collections::HashMap;
+
+/// Identity of a produced value (the producing DFG node).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ValueId(pub u32);
+
+/// A value instance: which node's value, born at which absolute cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Instance {
+    pub value: ValueId,
+    pub birth: i64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum ResKey {
+    Fu { pe: u32, slot: u32 },
+    Reg { pe: u32, slot: u32 },
+    Link { pe: u32, dir: u8, slot: u32 },
+}
+
+#[derive(Debug, Clone, Copy)]
+enum JournalOp {
+    InsertedFu(ResKey),
+    PushedOccupant(ResKey, Instance),
+}
+
+/// Occupancy table with journaling.
+pub struct Occupancy {
+    ii: u32,
+    route_regs: usize,
+    fu: HashMap<ResKey, ()>,
+    occupants: HashMap<ResKey, Vec<Instance>>,
+    journal: Vec<JournalOp>,
+}
+
+/// A rollback point.
+#[derive(Debug, Clone, Copy)]
+pub struct Mark(usize);
+
+impl Occupancy {
+    pub fn new(ii: u32, route_regs: usize) -> Self {
+        Occupancy {
+            ii,
+            route_regs,
+            fu: HashMap::new(),
+            occupants: HashMap::new(),
+            journal: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn slot(&self, t: i64) -> u32 {
+        (t.rem_euclid(self.ii as i64)) as u32
+    }
+
+    pub fn mark(&self) -> Mark {
+        Mark(self.journal.len())
+    }
+
+    pub fn ii(&self) -> u32 {
+        self.ii
+    }
+
+    pub fn rollback(&mut self, mark: Mark) {
+        while self.journal.len() > mark.0 {
+            match self.journal.pop().unwrap() {
+                JournalOp::InsertedFu(k) => {
+                    self.fu.remove(&k);
+                }
+                JournalOp::PushedOccupant(k, inst) => {
+                    let v = self.occupants.get_mut(&k).expect("journal corrupt");
+                    let pos = v
+                        .iter()
+                        .rposition(|&x| x == inst)
+                        .expect("journal corrupt");
+                    v.remove(pos);
+                }
+            }
+        }
+    }
+
+    pub fn fu_free(&self, pe: usize, t: i64) -> bool {
+        !self.fu.contains_key(&ResKey::Fu {
+            pe: pe as u32,
+            slot: self.slot(t),
+        })
+    }
+
+    pub fn reserve_fu(&mut self, pe: usize, t: i64) {
+        let k = ResKey::Fu {
+            pe: pe as u32,
+            slot: self.slot(t),
+        };
+        let prev = self.fu.insert(k, ());
+        assert!(prev.is_none(), "double FU reservation at pe {pe} t {t}");
+        self.journal.push(JournalOp::InsertedFu(k));
+    }
+
+    /// Cost to occupy a register slot with `inst` at cycle `t` on `pe`:
+    /// `Some(0)` if the same instance already holds a register there (shared
+    /// fan-out), `Some(1)` if capacity remains, `None` if full.
+    pub fn reg_cost(&self, pe: usize, t: i64, inst: Instance) -> Option<i64> {
+        let k = ResKey::Reg {
+            pe: pe as u32,
+            slot: self.slot(t),
+        };
+        match self.occupants.get(&k) {
+            None => Some(1),
+            Some(v) => {
+                if v.contains(&inst) {
+                    Some(0)
+                } else if v.len() < self.route_regs {
+                    Some(1)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    pub fn occupy_reg(&mut self, pe: usize, t: i64, inst: Instance) {
+        let k = ResKey::Reg {
+            pe: pe as u32,
+            slot: self.slot(t),
+        };
+        let v = self.occupants.entry(k).or_default();
+        if !v.contains(&inst) {
+            v.push(inst);
+            self.journal.push(JournalOp::PushedOccupant(k, inst));
+        }
+    }
+
+    /// Link occupancy (capacity 1 per direction per slot, shared by the same
+    /// instance).
+    pub fn link_cost(&self, pe: usize, dir: u8, t: i64, inst: Instance) -> Option<i64> {
+        let k = ResKey::Link {
+            pe: pe as u32,
+            dir,
+            slot: self.slot(t),
+        };
+        match self.occupants.get(&k) {
+            None => Some(1),
+            Some(v) => {
+                if v.contains(&inst) {
+                    Some(0)
+                } else if v.is_empty() {
+                    Some(1)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    pub fn occupy_link(&mut self, pe: usize, dir: u8, t: i64, inst: Instance) {
+        let k = ResKey::Link {
+            pe: pe as u32,
+            dir,
+            slot: self.slot(t),
+        };
+        let v = self.occupants.entry(k).or_default();
+        if !v.contains(&inst) {
+            v.push(inst);
+            self.journal.push(JournalOp::PushedOccupant(k, inst));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst(v: u32, birth: i64) -> Instance {
+        Instance {
+            value: ValueId(v),
+            birth,
+        }
+    }
+
+    #[test]
+    fn fu_reserved_modulo() {
+        let mut o = Occupancy::new(4, 2);
+        assert!(o.fu_free(3, 1));
+        o.reserve_fu(3, 1);
+        assert!(!o.fu_free(3, 1));
+        assert!(!o.fu_free(3, 5), "t=5 aliases slot 1 at II=4");
+        assert!(o.fu_free(3, 2));
+    }
+
+    #[test]
+    fn reg_capacity_and_sharing() {
+        let mut o = Occupancy::new(4, 2);
+        let a = inst(0, 0);
+        let b = inst(1, 0);
+        let c = inst(2, 0);
+        assert_eq!(o.reg_cost(0, 0, a), Some(1));
+        o.occupy_reg(0, 0, a);
+        assert_eq!(o.reg_cost(0, 0, a), Some(0), "same instance shares");
+        assert_eq!(o.reg_cost(0, 0, b), Some(1));
+        o.occupy_reg(0, 0, b);
+        assert_eq!(o.reg_cost(0, 0, c), None, "capacity 2 exhausted");
+        // same value from the next iteration is a different instance
+        let a_next = inst(0, 4);
+        assert_eq!(o.reg_cost(0, 0, a_next), None);
+    }
+
+    #[test]
+    fn rollback_restores_state() {
+        let mut o = Occupancy::new(4, 2);
+        let a = inst(0, 0);
+        let m = o.mark();
+        o.reserve_fu(1, 2);
+        o.occupy_reg(1, 3, a);
+        o.occupy_link(1, 0, 3, a);
+        assert!(!o.fu_free(1, 2));
+        o.rollback(m);
+        assert!(o.fu_free(1, 2));
+        assert_eq!(o.reg_cost(1, 3, inst(9, 9)), Some(1));
+        assert_eq!(o.link_cost(1, 0, 3, inst(9, 9)), Some(1));
+    }
+
+    #[test]
+    fn link_exclusive_unless_shared() {
+        let mut o = Occupancy::new(2, 1);
+        let a = inst(0, 0);
+        o.occupy_link(0, 1, 0, a);
+        assert_eq!(o.link_cost(0, 1, 0, a), Some(0));
+        assert_eq!(o.link_cost(0, 1, 0, inst(1, 0)), None);
+        assert_eq!(o.link_cost(0, 2, 0, inst(1, 0)), Some(1), "other dir free");
+    }
+}

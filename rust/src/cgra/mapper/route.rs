@@ -1,0 +1,276 @@
+//! Space-time routing: deliver a value produced at `(src_pe, birth)` to
+//! `(dst_pe, birth + slack)` in exactly `slack` cycles, holding in route
+//! registers or moving across links each cycle (paper §II-B: allocate
+//! `r_{i,j}` register slots such that `τ(v_i) + d_i + r_{i,j} = τ(v_j)`).
+//!
+//! The search is a layered DP over (step, pe) — PathFinder-flavored in that
+//! already-occupied resources usable by the same value instance cost 0
+//! (fan-out sharing) while new resources cost 1, so congested regions are
+//! avoided when alternatives exist.
+
+use super::super::arch::{CgraArch, Topology};
+use super::resources::{Instance, Occupancy, ValueId};
+
+/// A committed route: the PE the value occupies at each step.
+/// `path[0]` is the producer PE at cycle `birth`; `path[slack]` is the
+/// consumer PE at cycle `birth + slack`.
+#[derive(Debug, Clone)]
+pub struct RoutedPath {
+    pub value: ValueId,
+    pub birth: i64,
+    pub slack: i64,
+    pub path: Vec<usize>,
+    pub cost: i64,
+}
+
+/// First mesh direction from `a` toward `b` (0 N, 1 E, 2 S, 3 W) — used as
+/// the output-port resource for a (possibly multi-hop) move.
+fn first_dir(arch: &CgraArch, a: usize, b: usize) -> u8 {
+    let (ax, ay) = arch.pe_xy(a);
+    let (bx, by) = arch.pe_xy(b);
+    if bx > ax {
+        1
+    } else if bx < ax {
+        3
+    } else if by > ay {
+        2
+    } else {
+        0
+    }
+}
+
+/// Per-arch memoized step-target table (the HyCube neighborhood enumeration
+/// allocates; rebuilding it inside the routing DP dominated the profile).
+fn step_targets_table(arch: &CgraArch) -> std::rc::Rc<Vec<Vec<usize>>> {
+    use std::cell::RefCell;
+    thread_local! {
+        static CACHE: RefCell<Vec<(String, std::rc::Rc<Vec<Vec<usize>>>)>> =
+            const { RefCell::new(Vec::new()) };
+    }
+    CACHE.with(|c| {
+        let mut c = c.borrow_mut();
+        if let Some((_, t)) = c.iter().find(|(k, _)| *k == arch.name) {
+            return t.clone();
+        }
+        let table: Vec<Vec<usize>> = (0..arch.n_pes()).map(|pe| arch.step_targets(pe)).collect();
+        let rc = std::rc::Rc::new(table);
+        c.push((arch.name.clone(), rc.clone()));
+        rc.clone()
+    })
+}
+
+/// Route one edge. Returns `None` if infeasible under current occupancy.
+/// On success the resources along the chosen path are committed.
+pub fn route_edge(
+    arch: &CgraArch,
+    occ: &mut Occupancy,
+    value: ValueId,
+    src_pe: usize,
+    birth: i64,
+    dst_pe: usize,
+    slack: i64,
+) -> Option<RoutedPath> {
+    if slack < 0 {
+        return None;
+    }
+    if slack == 0 {
+        // same-cycle consumption requires same PE (direct FU forwarding)
+        if src_pe == dst_pe {
+            return Some(RoutedPath {
+                value,
+                birth,
+                slack,
+                path: vec![src_pe],
+                cost: 0,
+            });
+        }
+        return None;
+    }
+    if (arch.min_steps(src_pe, dst_pe) as i64) > slack {
+        return None;
+    }
+    // register-pressure guard: a value parked longer than ~II + one array
+    // crossing would monopolize route registers across multiple overlapped
+    // iterations; reject early (also bounds the DP cost)
+    let diameter = (arch.width + arch.height) as i64;
+    if slack > occ.ii() as i64 + 2 * diameter + 4 {
+        return None;
+    }
+
+    let inst = Instance { value, birth };
+    let n = arch.n_pes();
+    let targets = step_targets_table(arch);
+    const INF: i64 = i64::MAX / 4;
+    // dp[pe] = min cost to have the value at `pe` after `s` steps
+    let mut dp = vec![INF; n];
+    let mut prev: Vec<Vec<u32>> = vec![vec![u32::MAX; n]; (slack + 1) as usize];
+    dp[src_pe] = 0;
+
+    for s in 0..slack {
+        let cycle = birth + s; // departure cycle of this step
+        let mut next = vec![INF; n];
+        for pe in 0..n {
+            if dp[pe] >= INF {
+                continue;
+            }
+            // hold: value stays in a route register of `pe` during cycle+1
+            if let Some(c) = occ.reg_cost(pe, cycle + 1, inst) {
+                let nc = dp[pe] + c;
+                if nc < next[pe] {
+                    next[pe] = nc;
+                    prev[(s + 1) as usize][pe] = pe as u32;
+                }
+            }
+            // move: cross link(s) departing at `cycle`
+            for &tgt in &targets[pe] {
+                // prune hopeless moves
+                if (arch.min_steps(tgt, dst_pe) as i64) > slack - s - 1 {
+                    continue;
+                }
+                let dir = first_dir(arch, pe, tgt);
+                if let Some(lc) = occ.link_cost(pe, dir, cycle, inst) {
+                    // arriving value occupies a register at tgt unless it is
+                    // consumed this very cycle (s+1 == slack && tgt == dst)
+                    let reg_c = if s + 1 == slack && tgt == dst_pe {
+                        Some(0)
+                    } else {
+                        occ.reg_cost(tgt, cycle + 1, inst)
+                    };
+                    if let Some(rc) = reg_c {
+                        // multi-hop moves cost extra (they burn bypass wires)
+                        let hop_cost = match arch.topology {
+                            Topology::Mesh => 1,
+                            Topology::HyCube { .. } => arch.manhattan(pe, tgt) as i64,
+                        };
+                        let nc = dp[pe] + lc + rc + hop_cost - 1;
+                        if nc < next[tgt] {
+                            next[tgt] = nc;
+                            prev[(s + 1) as usize][tgt] = pe as u32;
+                        }
+                    }
+                }
+            }
+        }
+        dp = next;
+    }
+
+    if dp[dst_pe] >= INF {
+        return None;
+    }
+
+    // reconstruct path
+    let mut path = vec![0usize; (slack + 1) as usize];
+    path[slack as usize] = dst_pe;
+    for s in (1..=slack as usize).rev() {
+        let p = prev[s][path[s]];
+        debug_assert!(p != u32::MAX);
+        path[s - 1] = p as usize;
+    }
+    debug_assert_eq!(path[0], src_pe);
+
+    // commit resources
+    let mut cost = 0i64;
+    for s in 0..slack as usize {
+        let cycle = birth + s as i64;
+        let (a, b) = (path[s], path[s + 1]);
+        if a == b {
+            cost += occ.reg_cost(a, cycle + 1, inst).expect("hold became infeasible");
+            occ.occupy_reg(a, cycle + 1, inst);
+        } else {
+            let dir = first_dir(arch, a, b);
+            cost += occ.link_cost(a, dir, cycle, inst).expect("link became infeasible");
+            occ.occupy_link(a, dir, cycle, inst);
+            if s + 1 < slack as usize || b != dst_pe {
+                occ.occupy_reg(b, cycle + 1, inst);
+            } else if s as i64 + 1 == slack && b == dst_pe {
+                // consumed directly at arrival
+            }
+        }
+    }
+    Some(RoutedPath {
+        value,
+        birth,
+        slack,
+        path,
+        cost,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_slack_same_pe_ok() {
+        let arch = CgraArch::classical(4, 4);
+        let mut occ = Occupancy::new(4, 10);
+        let r = route_edge(&arch, &mut occ, ValueId(0), 5, 3, 5, 0).unwrap();
+        assert_eq!(r.path, vec![5]);
+        assert_eq!(r.cost, 0);
+    }
+
+    #[test]
+    fn zero_slack_different_pe_fails() {
+        let arch = CgraArch::classical(4, 4);
+        let mut occ = Occupancy::new(4, 10);
+        assert!(route_edge(&arch, &mut occ, ValueId(0), 0, 3, 1, 0).is_none());
+    }
+
+    #[test]
+    fn exact_arrival_neighbor() {
+        let arch = CgraArch::classical(4, 4);
+        let mut occ = Occupancy::new(4, 10);
+        let r = route_edge(&arch, &mut occ, ValueId(0), 0, 0, 1, 1).unwrap();
+        assert_eq!(r.path, vec![0, 1]);
+    }
+
+    #[test]
+    fn waits_in_registers_when_early() {
+        let arch = CgraArch::classical(4, 4);
+        let mut occ = Occupancy::new(8, 10);
+        // neighbor 1 hop away but slack 3: two holds + one move (in any order)
+        let r = route_edge(&arch, &mut occ, ValueId(0), 0, 0, 1, 3).unwrap();
+        assert_eq!(r.path.len(), 4);
+        assert_eq!(*r.path.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn insufficient_slack_fails() {
+        let arch = CgraArch::classical(4, 4);
+        let mut occ = Occupancy::new(4, 10);
+        // corner to corner is 6 hops on a mesh; slack 3 infeasible
+        assert!(route_edge(&arch, &mut occ, ValueId(0), 0, 0, 15, 3).is_none());
+    }
+
+    #[test]
+    fn hycube_covers_distance_faster() {
+        let arch = CgraArch::hycube(4, 4);
+        let mut occ = Occupancy::new(4, 10);
+        let r = route_edge(&arch, &mut occ, ValueId(0), 0, 0, 15, 2).unwrap();
+        assert_eq!(*r.path.last().unwrap(), 15);
+    }
+
+    #[test]
+    fn link_contention_forces_detour_or_failure() {
+        let arch = CgraArch::classical(2, 1);
+        let mut occ = Occupancy::new(1, 1);
+        // II=1: a single link East from pe0; first value takes it
+        let r1 = route_edge(&arch, &mut occ, ValueId(0), 0, 0, 1, 1);
+        assert!(r1.is_some());
+        // a different value at the same slot cannot use the same link,
+        // and with II=1 every cycle aliases to the same slot
+        let r2 = route_edge(&arch, &mut occ, ValueId(1), 0, 0, 1, 1);
+        assert!(r2.is_none());
+    }
+
+    #[test]
+    fn fanout_shares_resources_for_free() {
+        let arch = CgraArch::classical(4, 4);
+        let mut occ = Occupancy::new(4, 1);
+        let r1 = route_edge(&arch, &mut occ, ValueId(7), 0, 0, 1, 1).unwrap();
+        // same value, same birth, same first step: shared, cost 0
+        let r2 = route_edge(&arch, &mut occ, ValueId(7), 0, 0, 1, 1).unwrap();
+        assert_eq!(r1.path, r2.path);
+        assert_eq!(r2.cost, 0);
+    }
+}

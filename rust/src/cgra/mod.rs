@@ -1,0 +1,8 @@
+//! The CGRA substrate: architecture model, operation-centric modulo-scheduling
+//! mapper (binding + scheduling + routing, paper §II-B), configuration
+//! lowering and a cycle-accurate simulator.
+
+pub mod arch;
+pub mod mapper;
+pub mod config;
+pub mod sim;

@@ -1,0 +1,74 @@
+//! Simple latency/throughput metrics for the coordinator.
+
+use std::time::Duration;
+
+/// Aggregated statistics over served requests.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub served: u64,
+    pub failed: u64,
+    pub total_sim_cycles: u64,
+    pub total_wall: Duration,
+    /// Compile-cache hits/misses.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl Metrics {
+    pub fn record(&mut self, cycles: u64, wall: Duration, ok: bool, cache_hit: bool) {
+        if ok {
+            self.served += 1;
+        } else {
+            self.failed += 1;
+        }
+        self.total_sim_cycles += cycles;
+        self.total_wall += wall;
+        if cache_hit {
+            self.cache_hits += 1;
+        } else {
+            self.cache_misses += 1;
+        }
+    }
+
+    /// Simulated PE-cycles per wall-clock second (simulator throughput).
+    pub fn sim_cycles_per_sec(&self) -> f64 {
+        let s = self.total_wall.as_secs_f64();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.total_sim_cycles as f64 / s
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "served={} failed={} cache={}H/{}M sim_cycles={} wall={:?} ({:.2e} cy/s)",
+            self.served,
+            self.failed,
+            self.cache_hits,
+            self.cache_misses,
+            self.total_sim_cycles,
+            self.total_wall,
+            self.sim_cycles_per_sec()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates() {
+        let mut m = Metrics::default();
+        m.record(100, Duration::from_millis(10), true, false);
+        m.record(50, Duration::from_millis(5), true, true);
+        m.record(0, Duration::from_millis(1), false, true);
+        assert_eq!(m.served, 2);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.total_sim_cycles, 150);
+        assert_eq!(m.cache_hits, 2);
+        assert!(m.sim_cycles_per_sec() > 0.0);
+        assert!(m.summary().contains("served=2"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Layer-3 coordinator: the runtime a user deploys. It owns the compiled
+//! mapping caches, the simulated array "devices", the XLA golden service,
+//! and a request loop that accepts kernel invocations, dispatches them to a
+//! target array and reports latency/validation results — including the
+//! TCPA's overlapped back-to-back invocations (paper §V-A: the next call may
+//! start as soon as the first PE is free).
+
+pub mod session;
+pub mod metrics;
+
+pub use session::{Request, Response, Session, Target};

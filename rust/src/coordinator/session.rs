@@ -1,0 +1,329 @@
+//! The coordinator session: request queue, compile caches, dispatch to the
+//! simulated arrays, golden validation, and overlapped-batch accounting.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use crate::bench::harness::{map_cgra_row, map_turtle, MapRow, TurtleRow};
+use crate::bench::toolchains::{rows_for, Tool};
+use crate::bench::workloads::{build, inputs, BenchId};
+use crate::cgra::sim as cgra_sim;
+use crate::ir::loopnest::ArrayData;
+use crate::ir::op::Dtype;
+use crate::runtime::golden::GoldenService;
+use crate::tcpa::arch::TcpaArch;
+use crate::tcpa::sim as tcpa_sim;
+
+use super::metrics::Metrics;
+
+/// Which simulated array a request targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Target {
+    /// 4×4 TCPA (paper reference).
+    Tcpa,
+    /// Best register-aware CGRA mapping (Morpher profile, classical 4×4).
+    Cgra,
+}
+
+/// One kernel-invocation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub bench: BenchId,
+    pub n: i64,
+    pub target: Target,
+    /// Number of back-to-back invocations (batch). On the TCPA, invocation
+    /// k+1 starts as soon as the first PE of invocation k is free (§V-A).
+    pub batch: u64,
+    /// Validate outputs against the golden model.
+    pub validate: bool,
+    pub seed: u64,
+}
+
+/// The coordinator's answer.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub bench: BenchId,
+    pub target: Target,
+    /// Latency of a single invocation in array cycles.
+    pub latency_cycles: u64,
+    /// Total cycles for the whole batch (overlapped on the TCPA).
+    pub batch_cycles: u64,
+    pub validated: Option<bool>,
+    pub error: Option<String>,
+    pub wall: std::time::Duration,
+}
+
+/// A session: owns caches and serves requests (optionally from a worker
+/// thread via [`Session::serve`]).
+pub struct Session {
+    tcpa_arch: TcpaArch,
+    tcpa_cache: HashMap<(BenchId, i64), TurtleRow>,
+    cgra_cache: HashMap<(BenchId, i64), MapRow>,
+    golden: GoldenService,
+    pub metrics: Metrics,
+}
+
+impl Session {
+    pub fn new() -> Session {
+        Session {
+            tcpa_arch: TcpaArch::paper(4, 4),
+            tcpa_cache: HashMap::new(),
+            cgra_cache: HashMap::new(),
+            golden: GoldenService::new(),
+            metrics: Metrics::default(),
+        }
+    }
+
+    /// Handle one request synchronously.
+    pub fn handle(&mut self, req: &Request) -> Response {
+        let t0 = Instant::now();
+        let mut cache_hit = true;
+        let result = (|| -> Result<(u64, u64, ArrayData), String> {
+            match req.target {
+                Target::Tcpa => {
+                    if !self.tcpa_cache.contains_key(&(req.bench, req.n)) {
+                        cache_hit = false;
+                        let wl = build(req.bench, req.n);
+                        let tr = map_turtle(&wl, &self.tcpa_arch);
+                        if let Some(e) = &tr.error {
+                            return Err(e.clone());
+                        }
+                        self.tcpa_cache.insert((req.bench, req.n), tr);
+                    }
+                    let tr = &self.tcpa_cache[&(req.bench, req.n)];
+                    let ins = inputs(req.bench, req.n, req.seed);
+                    let run = tcpa_sim::simulate_workload(&tr.configs, &self.tcpa_arch, &ins)
+                        .map_err(|e| e.to_string())?;
+                    let single = run.total_latency;
+                    // overlapped batch: each further invocation starts after
+                    // the previous one's first PE finished
+                    let batch = if req.batch <= 1 {
+                        single
+                    } else {
+                        single + (req.batch - 1) * run.overlapped_latency.max(1)
+                    };
+                    Ok((single, batch, run.outputs))
+                }
+                Target::Cgra => {
+                    if !self.cgra_cache.contains_key(&(req.bench, req.n)) {
+                        cache_hit = false;
+                        let wl = build(req.bench, req.n);
+                        let spec = rows_for(wl.n_loops, 4, 4)
+                            .into_iter()
+                            .find(|s| s.tool == Tool::Morpher)
+                            .expect("morpher profile");
+                        let row = map_cgra_row(&wl, &spec);
+                        if let Some(e) = &row.error {
+                            return Err(e.clone());
+                        }
+                        self.cgra_cache.insert((req.bench, req.n), row);
+                    }
+                    let row = &self.cgra_cache[&(req.bench, req.n)];
+                    let ins = inputs(req.bench, req.n, req.seed);
+                    let mut pool = ins.clone();
+                    let mut outs = ArrayData::new();
+                    for (dfg, m) in &row.mappings {
+                        let r = cgra_sim::simulate(dfg, m, &pool);
+                        for (k, v) in r.outputs {
+                            pool.insert(k.clone(), v.clone());
+                            outs.insert(k, v);
+                        }
+                    }
+                    let single = row.latency.unwrap_or(0);
+                    // CGRAs drain fully between invocations (§V-A: overlapped
+                    // execution "was not available on the considered CGRAs")
+                    Ok((single, single * req.batch.max(1), outs))
+                }
+            }
+        })();
+
+        let (resp, cycles, ok) = match result {
+            Ok((single, batch, outs)) => {
+                let validated = if req.validate {
+                    Some(self.validate_outputs(req, &outs))
+                } else {
+                    None
+                };
+                let ok = validated != Some(false);
+                (
+                    Response {
+                        bench: req.bench,
+                        target: req.target,
+                        latency_cycles: single,
+                        batch_cycles: batch,
+                        validated,
+                        error: None,
+                        wall: t0.elapsed(),
+                    },
+                    batch,
+                    ok,
+                )
+            }
+            Err(e) => (
+                Response {
+                    bench: req.bench,
+                    target: req.target,
+                    latency_cycles: 0,
+                    batch_cycles: 0,
+                    validated: None,
+                    error: Some(e),
+                    wall: t0.elapsed(),
+                },
+                0,
+                false,
+            ),
+        };
+        self.metrics.record(cycles, resp.wall, ok, cache_hit);
+        resp
+    }
+
+    fn validate_outputs(&mut self, req: &Request, outs: &ArrayData) -> bool {
+        let ins = inputs(req.bench, req.n, req.seed);
+        let Ok((want, _)) = self.golden.run(req.bench, req.n, &ins) else {
+            return false;
+        };
+        let wl = build(req.bench, req.n);
+        for name in wl.output_names() {
+            let (Some(a), Some(b)) = (want.get(&name), outs.get(&name)) else {
+                return false;
+            };
+            for (x, y) in a.iter().zip(b.iter()) {
+                let ok = match req.bench.dtype() {
+                    Dtype::I32 => x == y,
+                    Dtype::F32 => {
+                        let (x, y) = (x.as_f64(), y.as_f64());
+                        (x - y).abs() <= 1e-3 * (1.0 + x.abs())
+                    }
+                };
+                if !ok {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Spawn a worker thread serving requests from a channel; returns the
+    /// request sender and the response receiver. Dropping the sender shuts
+    /// the worker down.
+    pub fn serve() -> (mpsc::Sender<Request>, mpsc::Receiver<Response>, thread::JoinHandle<Metrics>)
+    {
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+        let handle = thread::spawn(move || {
+            let mut session = Session::new();
+            while let Ok(req) = req_rx.recv() {
+                let resp = session.handle(&req);
+                if resp_tx.send(resp).is_err() {
+                    break;
+                }
+            }
+            session.metrics
+        });
+        (req_tx, resp_rx, handle)
+    }
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcpa_request_validates() {
+        let mut s = Session::new();
+        let resp = s.handle(&Request {
+            bench: BenchId::Gemm,
+            n: 8,
+            target: Target::Tcpa,
+            batch: 1,
+            validate: true,
+            seed: 3,
+        });
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.validated, Some(true));
+        assert!(resp.latency_cycles > 0);
+    }
+
+    #[test]
+    fn overlapped_batching_beats_serial() {
+        let mut s = Session::new();
+        let single = s
+            .handle(&Request {
+                bench: BenchId::Gemm,
+                n: 8,
+                target: Target::Tcpa,
+                batch: 1,
+                validate: false,
+                seed: 3,
+            })
+            .latency_cycles;
+        let batch4 = s
+            .handle(&Request {
+                bench: BenchId::Gemm,
+                n: 8,
+                target: Target::Tcpa,
+                batch: 4,
+                validate: false,
+                seed: 3,
+            })
+            .batch_cycles;
+        assert!(
+            batch4 < 4 * single,
+            "overlap must beat serial: {batch4} vs {}",
+            4 * single
+        );
+    }
+
+    #[test]
+    fn cgra_request_works_and_cache_hits() {
+        let mut s = Session::new();
+        let r1 = s.handle(&Request {
+            bench: BenchId::Gesummv,
+            n: 8,
+            target: Target::Cgra,
+            batch: 1,
+            validate: true,
+            seed: 1,
+        });
+        assert!(r1.error.is_none(), "{:?}", r1.error);
+        let r2 = s.handle(&Request {
+            bench: BenchId::Gesummv,
+            n: 8,
+            target: Target::Cgra,
+            batch: 2,
+            validate: false,
+            seed: 1,
+        });
+        assert!(r2.error.is_none());
+        assert_eq!(s.metrics.cache_hits, 1);
+        assert_eq!(r2.batch_cycles, 2 * r2.latency_cycles);
+    }
+
+    #[test]
+    fn threaded_serve_loop() {
+        let (tx, rx, handle) = Session::serve();
+        tx.send(Request {
+            bench: BenchId::Atax,
+            n: 8,
+            target: Target::Tcpa,
+            batch: 2,
+            validate: true,
+            seed: 9,
+        })
+        .unwrap();
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.validated, Some(true));
+        drop(tx);
+        let metrics = handle.join().unwrap();
+        assert_eq!(metrics.served, 1);
+    }
+}

@@ -1,0 +1,424 @@
+//! The data-flow graph of one (flattened) loop iteration — the unit the
+//! operation-centric mapping approach binds, schedules and routes (paper
+//! §II-B and Fig. 1).
+//!
+//! Nodes are operations; operands either reference another node's value at an
+//! inter-iteration distance `dist` (0 = same iteration) or an immediate.
+//! The DFG carries its own interpreter: executing `iters` iterations over the
+//! scratchpad-resident arrays gives the semantic reference that the mapped
+//! configuration and the cycle-accurate simulator must agree with.
+
+use std::collections::BTreeMap;
+
+use crate::ir::loopnest::{ArrayData, ArrayDecl, ArrayKind};
+use crate::ir::op::{Dtype, OpKind, Value};
+
+/// Which of the paper's four op groups a node belongs to (Fig. 1's coloring).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpGroup {
+    /// Loop-index computation (Sel/Add/Cmp chains).
+    Index,
+    /// Address computation (strides × indices).
+    Address,
+    /// Loads/stores to the scratchpad.
+    Memory,
+    /// The actual loop-body computation.
+    Compute,
+}
+
+/// A node operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Operand {
+    /// The value of node `src`, `dist` iterations ago (dist 0 = current).
+    Node { src: usize, dist: u32 },
+    /// An immediate constant baked into the instruction.
+    Imm(i64),
+}
+
+impl Operand {
+    pub fn node(src: usize) -> Operand {
+        Operand::Node { src, dist: 0 }
+    }
+
+    pub fn prev(src: usize) -> Operand {
+        Operand::Node { src, dist: 1 }
+    }
+}
+
+/// One DFG node.
+#[derive(Debug, Clone)]
+pub struct DfgNode {
+    pub kind: OpKind,
+    pub group: OpGroup,
+    pub operands: Vec<Operand>,
+    /// For `Load`/`Store`: the array accessed (operand 0 is the address
+    /// offset within that array; `Store`'s operand 1 is the value).
+    pub array: Option<usize>,
+    /// Initial value seen by `dist > 0` operands for the first iteration(s).
+    pub init: i64,
+    /// Memory-ordering dependences `(node, dist)`: this node must be
+    /// scheduled after `node` (of `dist` iterations ago) but no data is
+    /// routed — used to serialize loads/stores to the same scratchpad bank.
+    pub extra_deps: Vec<(usize, u32)>,
+    pub name: String,
+}
+
+/// A dependency edge (derived from operands).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DfgEdge {
+    pub src: usize,
+    pub dst: usize,
+    pub port: usize,
+    pub dist: u32,
+}
+
+/// The data-flow graph of one loop-body iteration.
+#[derive(Debug, Clone)]
+pub struct Dfg {
+    pub name: String,
+    pub dtype: Dtype,
+    pub nodes: Vec<DfgNode>,
+    /// Arrays live in the scratchpad (one logical bank per array; the paper
+    /// notes CGRA-Flow assumes base address 0 per buffer, which we follow).
+    pub arrays: Vec<ArrayDecl>,
+    /// Number of iterations the flattened loop executes.
+    pub iters: u64,
+    /// Unroll factor already applied (1 = none) — `iters` counts *unrolled*
+    /// iterations, i.e. original iterations = `iters × unroll`.
+    pub unroll: usize,
+}
+
+impl Dfg {
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// All dependency edges.
+    pub fn edges(&self) -> Vec<DfgEdge> {
+        let mut out = Vec::new();
+        for (dst, n) in self.nodes.iter().enumerate() {
+            for (port, op) in n.operands.iter().enumerate() {
+                if let Operand::Node { src, dist } = op {
+                    out.push(DfgEdge {
+                        src: *src,
+                        dst,
+                        port,
+                        dist: *dist,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of memory-access nodes (constrained to border PEs).
+    pub fn n_mem_ops(&self) -> usize {
+        self.nodes.iter().filter(|n| n.kind.is_mem()).count()
+    }
+
+    /// Per-group node counts (the Fig. 1 breakdown).
+    pub fn group_counts(&self) -> BTreeMap<&'static str, usize> {
+        let mut m = BTreeMap::new();
+        for n in &self.nodes {
+            let k = match n.group {
+                OpGroup::Index => "index",
+                OpGroup::Address => "address",
+                OpGroup::Memory => "memory",
+                OpGroup::Compute => "compute",
+            };
+            *m.entry(k).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// All scheduling dependences: data edges plus memory-ordering deps,
+    /// as `(src, dst, dist)` triples.
+    pub fn sched_deps(&self) -> Vec<(usize, usize, u32)> {
+        let mut out: Vec<(usize, usize, u32)> = self
+            .edges()
+            .iter()
+            .map(|e| (e.src, e.dst, e.dist))
+            .collect();
+        for (dst, n) in self.nodes.iter().enumerate() {
+            for &(src, dist) in &n.extra_deps {
+                out.push((src, dst, dist));
+            }
+        }
+        out
+    }
+
+    /// Topological order of the intra-iteration (dist = 0) subgraph
+    /// (including memory-ordering deps). Panics if a zero-distance cycle
+    /// exists (ill-formed DFG).
+    pub fn topo_order(&self) -> Vec<usize> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (src, dst, dist) in self.sched_deps() {
+            if dist == 0 {
+                indeg[dst] += 1;
+                succ[src].push(dst);
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(v) = queue.pop() {
+            order.push(v);
+            for &s in &succ[v] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        assert_eq!(
+            order.len(),
+            n,
+            "DFG {} has a zero-distance cycle",
+            self.name
+        );
+        order
+    }
+
+    /// Allocate scratchpad storage (one bank per array) from named inputs.
+    pub fn alloc_spm(&self, inputs: &ArrayData) -> Vec<Vec<Value>> {
+        self.arrays
+            .iter()
+            .map(|a| match inputs.get(&a.name) {
+                Some(data) => {
+                    assert_eq!(data.len(), a.len(), "input {} wrong length", a.name);
+                    data.clone()
+                }
+                None => vec![self.dtype.zero(); a.len()],
+            })
+            .collect()
+    }
+
+    /// Execute the DFG for `self.iters` iterations over the given inputs —
+    /// the operational semantics of the mapped loop. Returns output arrays.
+    pub fn execute(&self, inputs: &ArrayData) -> ArrayData {
+        let mut spm = self.alloc_spm(inputs);
+        self.execute_on(&mut spm);
+        self.collect_outputs(&spm)
+    }
+
+    /// Execute over already-allocated scratchpad banks (used by the CGRA
+    /// simulator's reference check and multi-stage kernels).
+    pub fn execute_on(&self, spm: &mut [Vec<Value>]) {
+        let order = self.topo_order();
+        let n = self.nodes.len();
+        // Ring buffers of the last `max_dist+1` iteration values per node.
+        let max_dist = self
+            .edges()
+            .iter()
+            .map(|e| e.dist)
+            .max()
+            .unwrap_or(0) as usize;
+        let depth = max_dist + 1;
+        let mut hist: Vec<Vec<Value>> = self
+            .nodes
+            .iter()
+            .map(|node| vec![self.dtype.from_i64(node.init); depth])
+            .collect();
+
+        for it in 0..self.iters {
+            let slot = (it as usize) % depth;
+            for &v in &order {
+                let node = &self.nodes[v];
+                let fetch = |op: &Operand| -> Value {
+                    match op {
+                        Operand::Imm(c) => self.dtype.from_i64(*c),
+                        Operand::Node { src, dist } => {
+                            if (*dist as u64) > it {
+                                // before the first write: initial value
+                                self.dtype.from_i64(self.nodes[*src].init)
+                            } else {
+                                let s = (it - *dist as u64) as usize % depth;
+                                hist[*src][s]
+                            }
+                        }
+                    }
+                };
+                let val = match node.kind {
+                    OpKind::Const => self.dtype.from_i64(node.init),
+                    OpKind::Load => {
+                        let addr = fetch(&node.operands[0]).as_i64();
+                        let arr = node.array.expect("load without array");
+                        let bank = &spm[arr];
+                        let a = addr.rem_euclid(bank.len() as i64) as usize;
+                        bank[a]
+                    }
+                    OpKind::Store => {
+                        let addr = fetch(&node.operands[0]).as_i64();
+                        let val = fetch(&node.operands[1]);
+                        let arr = node.array.expect("store without array");
+                        let bank = &mut spm[arr];
+                        let a = addr.rem_euclid(bank.len() as i64) as usize;
+                        bank[a] = val;
+                        val
+                    }
+                    OpKind::Nop => self.dtype.zero(),
+                    kind => {
+                        let args: Vec<Value> =
+                            node.operands.iter().map(&fetch).collect();
+                        Value::apply(kind, &args)
+                    }
+                };
+                hist[v][slot] = val;
+            }
+        }
+        let _ = n;
+    }
+
+    /// Gather output / in-out arrays from scratchpad banks.
+    pub fn collect_outputs(&self, spm: &[Vec<Value>]) -> ArrayData {
+        self.arrays
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| matches!(a.kind, ArrayKind::Output | ArrayKind::InOut))
+            .map(|(id, a)| (a.name.clone(), spm[id].clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A 1-D accumulator DFG: out[0] = sum of in[0..iters].
+    /// idx: Sel/Add/Cmp chain; acc: load+add with dist-1 self edge; store.
+    fn sum_dfg(n: i64) -> Dfg {
+        let mut nodes = Vec::new();
+        // 0: Sel(cmp@1, 0, add@1)  — index register
+        nodes.push(DfgNode {
+            kind: OpKind::Select,
+            group: OpGroup::Index,
+            operands: vec![Operand::prev(2), Operand::Imm(0), Operand::prev(1)],
+            array: None,
+            init: 0,
+            extra_deps: Vec::new(),
+            name: "sel_i".into(),
+        });
+        // 1: Add(sel, 1)
+        nodes.push(DfgNode {
+            kind: OpKind::Add,
+            group: OpGroup::Index,
+            operands: vec![Operand::node(0), Operand::Imm(1)],
+            array: None,
+            init: 0,
+            extra_deps: Vec::new(),
+            name: "add_i".into(),
+        });
+        // 2: Cmp(add >= n)
+        nodes.push(DfgNode {
+            kind: OpKind::CmpGe,
+            group: OpGroup::Index,
+            operands: vec![Operand::node(1), Operand::Imm(n)],
+            array: None,
+            init: 0,
+            extra_deps: Vec::new(),
+            name: "cmp_i".into(),
+        });
+        // 3: Load in[sel]
+        nodes.push(DfgNode {
+            kind: OpKind::Load,
+            group: OpGroup::Memory,
+            operands: vec![Operand::node(0)],
+            array: Some(0),
+            init: 0,
+            extra_deps: Vec::new(),
+            name: "ld".into(),
+        });
+        // 4: acc = acc@1 + load
+        nodes.push(DfgNode {
+            kind: OpKind::Add,
+            group: OpGroup::Compute,
+            operands: vec![Operand::prev(4), Operand::node(3)],
+            array: None,
+            init: 0,
+            extra_deps: Vec::new(),
+            name: "acc".into(),
+        });
+        // 5: Store out[0] = acc
+        nodes.push(DfgNode {
+            kind: OpKind::Store,
+            group: OpGroup::Memory,
+            operands: vec![Operand::Imm(0), Operand::node(4)],
+            array: Some(1),
+            init: 0,
+            extra_deps: Vec::new(),
+            name: "st".into(),
+        });
+        Dfg {
+            name: "sum".into(),
+            dtype: Dtype::I32,
+            nodes,
+            arrays: vec![
+                ArrayDecl {
+                    name: "in".into(),
+                    shape: vec![n],
+                    kind: ArrayKind::Input,
+                },
+                ArrayDecl {
+                    name: "out".into(),
+                    shape: vec![1],
+                    kind: ArrayKind::Output,
+                },
+            ],
+            iters: n as u64,
+            unroll: 1,
+        }
+    }
+
+    #[test]
+    fn sum_dfg_accumulates() {
+        let n = 8;
+        let dfg = sum_dfg(n);
+        let mut inputs = ArrayData::new();
+        inputs.insert(
+            "in".into(),
+            (0..n).map(|i| Value::I32(i as i32 + 1)).collect(),
+        );
+        let out = dfg.execute(&inputs);
+        assert_eq!(out["out"][0], Value::I32((1..=n as i32).sum()));
+    }
+
+    #[test]
+    fn index_chain_counts_correctly() {
+        // run 2*n iterations: index must wrap and re-run
+        let n = 4;
+        let mut dfg = sum_dfg(n);
+        dfg.iters = 2 * n as u64;
+        let mut inputs = ArrayData::new();
+        inputs.insert(
+            "in".into(),
+            (0..n).map(|i| Value::I32(i as i32 + 1)).collect(),
+        );
+        let out = dfg.execute(&inputs);
+        // accumulator never resets: sums the array twice
+        assert_eq!(out["out"][0], Value::I32(2 * (1..=n as i32).sum::<i32>()));
+    }
+
+    #[test]
+    fn topo_order_is_valid() {
+        let dfg = sum_dfg(4);
+        let order = dfg.topo_order();
+        let pos: BTreeMap<usize, usize> =
+            order.iter().enumerate().map(|(p, &v)| (v, p)).collect();
+        for e in dfg.edges() {
+            if e.dist == 0 {
+                assert!(pos[&e.src] < pos[&e.dst], "edge {:?} violates topo", e);
+            }
+        }
+    }
+
+    #[test]
+    fn edges_and_mem_ops() {
+        let dfg = sum_dfg(4);
+        assert_eq!(dfg.n_mem_ops(), 2);
+        let groups = dfg.group_counts();
+        assert_eq!(groups["index"], 3);
+        assert_eq!(groups["memory"], 2);
+        assert_eq!(groups["compute"], 1);
+    }
+}

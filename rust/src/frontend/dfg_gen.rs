@@ -1,0 +1,608 @@
+//! Loop nest → DFG generation (paper §II-B, Fig. 1).
+//!
+//! The generated DFG contains the four op groups of Fig. 1:
+//!
+//! 1. **Index computation** — a Sel/Add/Cmp chain per loop dimension that
+//!    implements a multi-dimensional counter with carries. Two styles are
+//!    provided: [`IndexStyle::Naive`] (the general form with And-carry
+//!    conjunction, produced by toolchains' native multi-dimensional support —
+//!    the paper's "no optimization" rows) and [`IndexStyle::Optimized`] (the
+//!    manually *flattened* form exploiting the exact-increment invariant —
+//!    the `flat` rows). The optimized chain has the paper's RecMII of 3
+//!    (`Sel → Add → Cmp → Sel`); the naive chain adds the And to each outer
+//!    dimension's recurrence, lengthening it to 4.
+//! 2. **Address computation** — strides × indices with hash-consed sharing
+//!    (LLVM CSE analog).
+//! 3. **Memory access** — Load/Store nodes, restricted to border PEs by the
+//!    mapper. Memory-ordering constraints are recorded as `extra_deps`
+//!    (intra-iteration, always respected) and returned separately as
+//!    inter-iteration hazards (respected only by register-aware toolchains —
+//!    Table I shows CGRA-Flow is not).
+//! 4. **Compute** — the actual loop-body operations.
+
+use std::collections::HashMap;
+
+use crate::ir::affine::AffineExpr;
+use crate::ir::loopnest::{Expr, LoopNest};
+use crate::ir::op::OpKind;
+
+use super::dfg::{Dfg, DfgNode, OpGroup, Operand};
+
+/// Index-chain generation style.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IndexStyle {
+    /// General carry-conjunction form (toolchain-native multidim support).
+    Naive,
+    /// Manually flattened single-loop form (the paper's `flat` optimization).
+    Optimized,
+}
+
+/// How much of the nest the DFG covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// The whole (flattened) nest.
+    Full,
+    /// Only the innermost loop (Morpher / CGRA-ME restriction). With
+    /// `bound_checks: false` even the loop-bound test is omitted
+    /// (CGRA-ME, §V-A: "omits any loop-bound checks").
+    InnerOnly { bound_checks: bool },
+}
+
+/// DFG generation options.
+#[derive(Debug, Clone, Copy)]
+pub struct GenOpts {
+    pub style: IndexStyle,
+    pub scope: Scope,
+}
+
+impl GenOpts {
+    pub fn flat() -> Self {
+        GenOpts {
+            style: IndexStyle::Optimized,
+            scope: Scope::Full,
+        }
+    }
+
+    pub fn naive() -> Self {
+        GenOpts {
+            style: IndexStyle::Naive,
+            scope: Scope::Full,
+        }
+    }
+
+    pub fn inner_only(bound_checks: bool) -> Self {
+        GenOpts {
+            style: IndexStyle::Optimized,
+            scope: Scope::InnerOnly { bound_checks },
+        }
+    }
+}
+
+/// Hash-consing node builder (emulates the CSE a real compiler frontend
+/// performs on index/address computation).
+struct Builder {
+    nodes: Vec<DfgNode>,
+    cache: HashMap<(OpKind, Vec<Operand>, Option<usize>, i64), usize>,
+    /// Bumped on every store per array — invalidates load sharing.
+    store_epoch: Vec<u64>,
+    /// Memory nodes in emission order (for ordering constraints):
+    /// (node, array, is_store).
+    mem_ops: Vec<(usize, usize, bool)>,
+}
+
+impl Builder {
+    fn new(n_arrays: usize) -> Self {
+        Builder {
+            nodes: Vec::new(),
+            cache: HashMap::new(),
+            store_epoch: vec![0; n_arrays],
+            mem_ops: Vec::new(),
+        }
+    }
+
+    /// Push a raw node without caching.
+    fn raw(
+        &mut self,
+        kind: OpKind,
+        group: OpGroup,
+        operands: Vec<Operand>,
+        array: Option<usize>,
+        init: i64,
+        name: String,
+    ) -> usize {
+        let id = self.nodes.len();
+        self.nodes.push(DfgNode {
+            kind,
+            group,
+            operands,
+            array,
+            init,
+            extra_deps: Vec::new(),
+            name,
+        });
+        id
+    }
+
+    /// Push a pure op with hash-consing.
+    fn pure(
+        &mut self,
+        kind: OpKind,
+        group: OpGroup,
+        operands: Vec<Operand>,
+        name: &str,
+    ) -> usize {
+        let key = (kind, operands.clone(), None, 0i64);
+        if let Some(&id) = self.cache.get(&key) {
+            return id;
+        }
+        let id = self.raw(kind, group, operands, None, 0, name.to_string());
+        self.cache.insert(key, id);
+        id
+    }
+
+    /// Push a load with epoch-aware caching (shared only if no store to the
+    /// array intervened).
+    fn load(&mut self, array: usize, addr: Operand, name: &str) -> usize {
+        let key = (
+            OpKind::Load,
+            vec![addr],
+            Some(array),
+            self.store_epoch[array] as i64,
+        );
+        if let Some(&id) = self.cache.get(&key) {
+            return id;
+        }
+        let id = self.raw(
+            OpKind::Load,
+            OpGroup::Memory,
+            vec![addr],
+            Some(array),
+            0,
+            name.to_string(),
+        );
+        self.cache.insert(key, id);
+        self.mem_ops.push((id, array, false));
+        id
+    }
+
+    fn store(&mut self, array: usize, addr: Operand, val: Operand, name: &str) -> usize {
+        let id = self.raw(
+            OpKind::Store,
+            OpGroup::Memory,
+            vec![addr, val],
+            Some(array),
+            0,
+            name.to_string(),
+        );
+        self.store_epoch[array] += 1;
+        self.mem_ops.push((id, array, true));
+        id
+    }
+}
+
+/// Result of DFG generation: the graph plus the inter-iteration memory
+/// hazards that only register-aware mappers respect.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub dfg: Dfg,
+    /// `(later_node, earlier_node)`: `later_node` at iteration `it+1` must
+    /// start after `earlier_node` at iteration `it` completes.
+    pub inter_iteration_hazards: Vec<(usize, usize)>,
+}
+
+/// Generate the DFG of one (flattened) iteration of `nest`.
+pub fn generate(nest: &LoopNest, opts: &GenOpts) -> Result<GenResult, String> {
+    if !nest.is_rectangular() {
+        return Err(format!(
+            "DFG generation requires a rectangular nest (use predication); {} is not",
+            nest.name
+        ));
+    }
+    let d = nest.depth();
+    if d == 0 {
+        return Err("empty nest".into());
+    }
+    let mut b = Builder::new(nest.arrays.len());
+
+    // --- 1. index chain -------------------------------------------------
+    // sel[k] = the current value of loop index k (as a node id); for
+    // InnerOnly scope the outer indices are pinned to 0 (Imm operand).
+    let (index_nodes, iters) = match opts.scope {
+        Scope::Full => {
+            let sels = build_index_chain(&mut b, nest, opts.style);
+            (sels, nest.iteration_count())
+        }
+        Scope::InnerOnly { bound_checks } => {
+            let inner = d - 1;
+            let n_inner = nest.dims[inner].extent.c;
+            let mut sels: Vec<Option<usize>> = vec![None; d];
+            if bound_checks {
+                let only = build_dim_counter(&mut b, inner, n_inner, Operand::Imm(1), true);
+                sels[inner] = Some(only);
+            } else {
+                // plain self-incrementing counter, no wrap test
+                let id = b.raw(
+                    OpKind::Add,
+                    OpGroup::Index,
+                    vec![Operand::Imm(1)],
+                    None,
+                    -1,
+                    format!("i{inner}"),
+                );
+                // self edge: i = i@1 + 1, init -1 so iteration 0 reads 0
+                b.nodes[id].operands = vec![Operand::prev(id), Operand::Imm(1)];
+                sels[inner] = Some(id);
+            }
+            (sels, n_inner as u64)
+        }
+    };
+
+    // --- 2..4. addresses, loads, compute, stores ------------------------
+    let mut hazards: Vec<(usize, usize)> = Vec::new();
+    for (s, stmt) in nest.body.iter().enumerate() {
+        let val = emit_expr(&mut b, nest, &stmt.expr, &index_nodes, s)?;
+        let addr = emit_address(&mut b, nest, stmt.array, &stmt.idx, &index_nodes)?;
+        b.store(stmt.array, addr, val, &format!("st_{}", nest.arrays[stmt.array].name));
+    }
+
+    // --- memory-ordering constraints -------------------------------------
+    // Intra-iteration: preserve program order between accesses to the same
+    // array when at least one is a store. Inter-iteration (hazards): the
+    // reverse direction with distance 1.
+    let mem = b.mem_ops.clone();
+    for i in 0..mem.len() {
+        for j in (i + 1)..mem.len() {
+            let (ni, ai, si) = mem[i];
+            let (nj, aj, sj) = mem[j];
+            if ai == aj && (si || sj) {
+                b.nodes[nj].extra_deps.push((ni, 0));
+                hazards.push((ni, nj));
+            }
+        }
+    }
+
+    let dfg = Dfg {
+        name: nest.name.clone(),
+        dtype: nest.dtype,
+        nodes: b.nodes,
+        arrays: nest.arrays.clone(),
+        iters,
+        unroll: 1,
+    };
+    Ok(GenResult {
+        dfg,
+        inter_iteration_hazards: hazards,
+    })
+}
+
+/// Build the full multi-dimensional counter; returns per-dim index node ids.
+fn build_index_chain(
+    b: &mut Builder,
+    nest: &LoopNest,
+    style: IndexStyle,
+) -> Vec<Option<usize>> {
+    let d = nest.depth();
+    let mut sels: Vec<Option<usize>> = vec![None; d];
+    // innermost to outermost; carry into dim k is the wrap signal of dim k+1
+    let mut carry = Operand::Imm(1);
+    for k in (0..d).rev() {
+        let n_k = nest.dims[k].extent.c;
+        match style {
+            IndexStyle::Optimized => {
+                let sel = build_dim_counter(b, k, n_k, carry, false);
+                sels[k] = Some(sel);
+                // wrap signal = the CmpEq node (sel's operand 0 source)
+                let wrap = match b.nodes[sel].operands[0] {
+                    Operand::Node { src, .. } => src,
+                    _ => unreachable!(),
+                };
+                carry = Operand::node(wrap);
+            }
+            IndexStyle::Naive => {
+                // general form: add = sel + carry; cmp_ge = add >= N;
+                // wrap = cmp_ge AND carry (except innermost where carry = 1)
+                let sel = b.raw(
+                    OpKind::Select,
+                    OpGroup::Index,
+                    vec![Operand::Imm(0), Operand::Imm(0), Operand::Imm(0)],
+                    None,
+                    0,
+                    format!("sel_i{k}"),
+                );
+                let add = b.pure(
+                    OpKind::Add,
+                    OpGroup::Index,
+                    vec![Operand::node(sel), carry],
+                    &format!("add_i{k}"),
+                );
+                let cmp = b.pure(
+                    OpKind::CmpGe,
+                    OpGroup::Index,
+                    vec![Operand::node(add), Operand::Imm(n_k)],
+                    &format!("cmp_i{k}"),
+                );
+                let wrap = if matches!(carry, Operand::Imm(_)) {
+                    cmp
+                } else {
+                    b.pure(
+                        OpKind::And,
+                        OpGroup::Index,
+                        vec![Operand::node(cmp), carry],
+                        &format!("and_i{k}"),
+                    )
+                };
+                b.nodes[sel].operands = vec![
+                    Operand::prev(wrap),
+                    Operand::Imm(0),
+                    Operand::prev(add),
+                ];
+                sels[k] = Some(sel);
+                carry = Operand::node(wrap);
+            }
+        }
+    }
+    sels
+}
+
+/// One optimized dimension counter: returns the Sel node (current index).
+/// `standalone` marks a single-dim counter (InnerOnly with bound checks).
+fn build_dim_counter(
+    b: &mut Builder,
+    k: usize,
+    n_k: i64,
+    carry: Operand,
+    standalone: bool,
+) -> usize {
+    let _ = standalone;
+    let sel = b.raw(
+        OpKind::Select,
+        OpGroup::Index,
+        vec![Operand::Imm(0), Operand::Imm(0), Operand::Imm(0)],
+        None,
+        0,
+        format!("sel_i{k}"),
+    );
+    let add = b.pure(
+        OpKind::Add,
+        OpGroup::Index,
+        vec![Operand::node(sel), carry],
+        &format!("add_i{k}"),
+    );
+    // exact-increment invariant: equality test suffices (the paper's
+    // manually optimized chain)
+    let cmp = b.pure(
+        OpKind::CmpEq,
+        OpGroup::Index,
+        vec![Operand::node(add), Operand::Imm(n_k)],
+        &format!("cmp_i{k}"),
+    );
+    b.nodes[sel].operands = vec![Operand::prev(cmp), Operand::Imm(0), Operand::prev(add)];
+    sel
+}
+
+/// Emit the affine combination `coeffs · index + c` as nodes; returns an
+/// operand (an Imm when the combination is constant).
+fn emit_affine(
+    b: &mut Builder,
+    e: &AffineExpr,
+    index_nodes: &[Option<usize>],
+    group: OpGroup,
+) -> Result<Operand, String> {
+    let mut terms: Vec<Operand> = Vec::new();
+    for (k, &c) in e.coeffs.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        match index_nodes[k] {
+            None => { /* pinned to 0 (InnerOnly scope) — contributes nothing */ }
+            Some(sel) => {
+                if c == 1 {
+                    terms.push(Operand::node(sel));
+                } else {
+                    let m = b.pure(
+                        OpKind::Mul,
+                        group,
+                        vec![Operand::node(sel), Operand::Imm(c)],
+                        &format!("mul_i{k}x{c}"),
+                    );
+                    terms.push(Operand::node(m));
+                }
+            }
+        }
+    }
+    if terms.is_empty() {
+        return Ok(Operand::Imm(e.c));
+    }
+    let mut acc = terms[0];
+    for t in &terms[1..] {
+        let a = b.pure(OpKind::Add, group, vec![acc, *t], "addr_add");
+        acc = Operand::node(a);
+    }
+    if e.c != 0 {
+        let a = b.pure(
+            OpKind::Add,
+            group,
+            vec![acc, Operand::Imm(e.c)],
+            "addr_off",
+        );
+        acc = Operand::node(a);
+    }
+    Ok(acc)
+}
+
+/// Emit the linear scratchpad address of `array[idx...]`.
+fn emit_address(
+    b: &mut Builder,
+    nest: &LoopNest,
+    array: usize,
+    idx: &[AffineExpr],
+    index_nodes: &[Option<usize>],
+) -> Result<Operand, String> {
+    let strides = nest.arrays[array].strides();
+    // addr = Σ_r stride_r * idx_r  — compose into one affine expr first
+    let d = nest.depth();
+    let mut combined = AffineExpr::constant(d, 0);
+    for (r, e) in idx.iter().enumerate() {
+        combined = combined.add(&e.scale(strides[r]));
+    }
+    emit_affine(b, &combined, index_nodes, OpGroup::Address)
+}
+
+fn emit_expr(
+    b: &mut Builder,
+    nest: &LoopNest,
+    e: &Expr,
+    index_nodes: &[Option<usize>],
+    stmt_no: usize,
+) -> Result<Operand, String> {
+    match e {
+        Expr::Const(c) => Ok(Operand::Imm(*c)),
+        Expr::Idx(a) => emit_affine(b, a, index_nodes, OpGroup::Address),
+        Expr::Read { array, idx } => {
+            let addr = emit_address(b, nest, *array, idx, index_nodes)?;
+            let id = b.load(
+                *array,
+                addr,
+                &format!("ld_{}_{stmt_no}", nest.arrays[*array].name),
+            );
+            Ok(Operand::node(id))
+        }
+        Expr::Bin { op, a, b: bb } => {
+            let va = emit_expr(b, nest, a, index_nodes, stmt_no)?;
+            let vb = emit_expr(b, nest, bb, index_nodes, stmt_no)?;
+            let id = b.pure(*op, OpGroup::Compute, vec![va, vb], &format!("{op}"));
+            Ok(Operand::node(id))
+        }
+        Expr::Sel { c, t, e: ee } => {
+            let vc = emit_expr(b, nest, c, index_nodes, stmt_no)?;
+            let vt = emit_expr(b, nest, t, index_nodes, stmt_no)?;
+            let ve = emit_expr(b, nest, ee, index_nodes, stmt_no)?;
+            let id = b.pure(
+                OpKind::Select,
+                OpGroup::Compute,
+                vec![vc, vt, ve],
+                "sel",
+            );
+            Ok(Operand::node(id))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::loopnest::{idx, ArrayData, ArrayKind, NestBuilder};
+    use crate::ir::op::{Dtype, Value};
+
+    fn gemm_nest(n: i64) -> LoopNest {
+        let d = 3;
+        NestBuilder::new("gemm", Dtype::I32)
+            .dim("i0", n)
+            .dim("i1", n)
+            .dim("i2", n)
+            .array("A", vec![n, n], ArrayKind::Input)
+            .array("B", vec![n, n], ArrayKind::Input)
+            .array("D", vec![n, n], ArrayKind::InOut)
+            .stmt(
+                "D",
+                vec![idx(d, 0), idx(d, 1)],
+                Expr::bin(
+                    OpKind::Add,
+                    Expr::read(2, vec![idx(d, 0), idx(d, 1)]),
+                    Expr::bin(
+                        OpKind::Mul,
+                        Expr::read(0, vec![idx(d, 0), idx(d, 2)]),
+                        Expr::read(1, vec![idx(d, 2), idx(d, 1)]),
+                    ),
+                ),
+            )
+            .finish()
+    }
+
+    fn iota(n: usize, base: i64) -> Vec<Value> {
+        (0..n).map(|i| Value::I32((base + i as i64) as i32)).collect()
+    }
+
+    #[test]
+    fn gemm_dfg_matches_interpreter_optimized() {
+        let n = 4usize;
+        let nest = gemm_nest(n as i64);
+        let gen = generate(&nest, &GenOpts::flat()).unwrap();
+        let mut inputs = ArrayData::new();
+        inputs.insert("A".into(), iota(n * n, 1));
+        inputs.insert("B".into(), iota(n * n, 2));
+        let want = nest.execute(&inputs);
+        let got = gen.dfg.execute(&inputs);
+        assert_eq!(got["D"], want["D"]);
+    }
+
+    #[test]
+    fn gemm_dfg_matches_interpreter_naive() {
+        let n = 3usize;
+        let nest = gemm_nest(n as i64);
+        let gen = generate(&nest, &GenOpts::naive()).unwrap();
+        let mut inputs = ArrayData::new();
+        inputs.insert("A".into(), iota(n * n, 5));
+        inputs.insert("B".into(), iota(n * n, 3));
+        let want = nest.execute(&inputs);
+        let got = gen.dfg.execute(&inputs);
+        assert_eq!(got["D"], want["D"]);
+    }
+
+    #[test]
+    fn op_counts_are_paper_shaped() {
+        // paper §II-B: GEMM DFG ~22 nodes; index group = 3 per dim.
+        let nest = gemm_nest(4);
+        let gen = generate(&nest, &GenOpts::flat()).unwrap();
+        let groups = gen.dfg.group_counts();
+        assert_eq!(groups["index"], 9, "3 ops per dim × 3 dims");
+        assert_eq!(groups["memory"], 4, "3 loads + 1 store");
+        assert_eq!(groups["compute"], 2, "mul + add");
+        let total = gen.dfg.n_nodes();
+        assert!(
+            (18..=26).contains(&total),
+            "GEMM DFG should be ~22 nodes, got {total}"
+        );
+        // naive chain adds And nodes for the two outer dims
+        let naive = generate(&nest, &GenOpts::naive()).unwrap();
+        assert!(naive.dfg.group_counts()["index"] > groups["index"]);
+    }
+
+    #[test]
+    fn inner_only_restricts_iterations() {
+        let nest = gemm_nest(4);
+        let gen = generate(&nest, &GenOpts::inner_only(false)).unwrap();
+        assert_eq!(gen.dfg.iters, 4);
+        // no Select/Cmp in the index group without bound checks
+        assert!(gen
+            .dfg
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.group, OpGroup::Index))
+            .all(|n| n.kind == OpKind::Add));
+    }
+
+    #[test]
+    fn hazards_reported_for_rmw() {
+        let nest = gemm_nest(4);
+        let gen = generate(&nest, &GenOpts::flat()).unwrap();
+        // D is loaded and stored: at least one intra-iteration ordering pair
+        assert!(!gen.inter_iteration_hazards.is_empty());
+    }
+
+    #[test]
+    fn unrolled_dfg_matches_interpreter() {
+        use crate::frontend::transforms::unroll_innermost;
+        let n = 4usize;
+        let nest = gemm_nest(n as i64);
+        let un = unroll_innermost(&nest, 2).unwrap();
+        let gen = generate(&un, &GenOpts::flat()).unwrap();
+        let mut inputs = ArrayData::new();
+        inputs.insert("A".into(), iota(n * n, 1));
+        inputs.insert("B".into(), iota(n * n, 2));
+        let want = nest.execute(&inputs);
+        let got = gen.dfg.execute(&inputs);
+        assert_eq!(got["D"], want["D"]);
+        assert_eq!(gen.dfg.iters, (n * n * n / 2) as u64);
+    }
+}

@@ -1,0 +1,14 @@
+//! The operation-centric (CGRA) frontend: loop nest → data-flow graph.
+//!
+//! * [`dfg`] — the DFG representation (Fig. 1 of the paper) with an
+//!   interpreter used as the semantic reference for CGRA mappings.
+//! * [`dfg_gen`] — generation of index / address / memory / compute op groups
+//!   from a [`crate::ir::loopnest::LoopNest`].
+//! * [`transforms`] — loop flattening and unrolling (the paper's `flat` and
+//!   `flat+unroll` optimization levels).
+//! * [`mii`] — RecMII / ResMII lower bounds (paper §II-B, Fig. 8).
+
+pub mod dfg;
+pub mod dfg_gen;
+pub mod transforms;
+pub mod mii;

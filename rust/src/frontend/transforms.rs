@@ -1,0 +1,149 @@
+//! Loop transformations applied before DFG generation.
+//!
+//! The paper evaluates three optimization levels per CGRA toolchain
+//! (Table II): none, `flat` (flattening — handled as a DFG-generation mode in
+//! [`super::dfg_gen`]), and `flat+unroll`. No considered toolchain unrolls
+//! automatically; the authors unrolled manually (§V-A). [`unroll_innermost`]
+//! performs exactly that source-level transformation.
+
+use crate::ir::affine::AffineExpr;
+use crate::ir::loopnest::{Expr, LoopNest, Stmt};
+
+/// Unroll the innermost loop by factor `u`: the innermost extent becomes
+/// `extent / u` and the body is replicated `u` times with the innermost index
+/// rewritten `i ↦ u·i + c` for copy `c`.
+///
+/// Requires a rectangular innermost extent divisible by `u` (the paper's
+/// benchmarks all satisfy this for the evaluated factors).
+pub fn unroll_innermost(nest: &LoopNest, u: usize) -> Result<LoopNest, String> {
+    if u == 0 {
+        return Err("unroll factor must be >= 1".into());
+    }
+    if u == 1 {
+        return Ok(nest.clone());
+    }
+    let d = nest.depth();
+    if d == 0 {
+        return Err("cannot unroll a 0-deep nest".into());
+    }
+    let inner = d - 1;
+    let extent = &nest.dims[inner].extent;
+    if !extent.is_constant() {
+        return Err(format!(
+            "innermost extent of {} is not constant; cannot unroll",
+            nest.name
+        ));
+    }
+    let n = extent.c;
+    if n % u as i64 != 0 {
+        return Err(format!(
+            "innermost extent {n} not divisible by unroll factor {u}"
+        ));
+    }
+
+    let mut out = nest.clone();
+    out.name = format!("{}_u{}", nest.name, u);
+    out.dims[inner].extent = AffineExpr::constant(d, n / u as i64);
+    out.body = Vec::new();
+    for c in 0..u as i64 {
+        for stmt in &nest.body {
+            out.body.push(Stmt {
+                array: stmt.array,
+                idx: stmt
+                    .idx
+                    .iter()
+                    .map(|e| rewrite_affine(e, inner, u as i64, c))
+                    .collect(),
+                expr: rewrite_expr(&stmt.expr, inner, u as i64, c),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Rewrite `i_k ↦ u·i_k + c` inside an affine expression.
+fn rewrite_affine(e: &AffineExpr, k: usize, u: i64, c: i64) -> AffineExpr {
+    let mut out = e.clone();
+    let coeff = out.coeffs[k];
+    out.coeffs[k] = coeff * u;
+    out.c += coeff * c;
+    out
+}
+
+fn rewrite_expr(e: &Expr, k: usize, u: i64, c: i64) -> Expr {
+    match e {
+        Expr::Const(v) => Expr::Const(*v),
+        Expr::Idx(a) => Expr::Idx(rewrite_affine(a, k, u, c)),
+        Expr::Read { array, idx } => Expr::Read {
+            array: *array,
+            idx: idx.iter().map(|a| rewrite_affine(a, k, u, c)).collect(),
+        },
+        Expr::Bin { op, a, b } => Expr::Bin {
+            op: *op,
+            a: Box::new(rewrite_expr(a, k, u, c)),
+            b: Box::new(rewrite_expr(b, k, u, c)),
+        },
+        Expr::Sel { c: cc, t, e: ee } => Expr::Sel {
+            c: Box::new(rewrite_expr(cc, k, u, c)),
+            t: Box::new(rewrite_expr(t, k, u, c)),
+            e: Box::new(rewrite_expr(ee, k, u, c)),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::loopnest::{idx, ArrayData, ArrayKind, NestBuilder};
+    use crate::ir::op::{Dtype, OpKind, Value};
+
+    /// y[i] = a[i] * a[i] over 1-D nest.
+    fn square_nest(n: i64) -> LoopNest {
+        NestBuilder::new("sq", Dtype::I32)
+            .dim("i0", n)
+            .array("a", vec![n], ArrayKind::Input)
+            .array("y", vec![n], ArrayKind::Output)
+            .stmt(
+                "y",
+                vec![idx(1, 0)],
+                Expr::bin(
+                    OpKind::Mul,
+                    Expr::read(0, vec![idx(1, 0)]),
+                    Expr::read(0, vec![idx(1, 0)]),
+                ),
+            )
+            .finish()
+    }
+
+    #[test]
+    fn unroll_preserves_semantics() {
+        let n = 8;
+        let nest = square_nest(n);
+        let mut inputs = ArrayData::new();
+        inputs.insert(
+            "a".into(),
+            (0..n).map(|i| Value::I32(i as i32 + 2)).collect(),
+        );
+        let base = nest.execute(&inputs);
+        for u in [2, 4, 8] {
+            let un = unroll_innermost(&nest, u).unwrap();
+            assert_eq!(un.iteration_count(), (n as u64) / u as u64);
+            assert_eq!(un.body.len(), nest.body.len() * u);
+            let got = un.execute(&inputs);
+            assert_eq!(got["y"], base["y"], "unroll {u} changed semantics");
+        }
+    }
+
+    #[test]
+    fn unroll_1_is_identity() {
+        let nest = square_nest(4);
+        let un = unroll_innermost(&nest, 1).unwrap();
+        assert_eq!(un.body.len(), nest.body.len());
+    }
+
+    #[test]
+    fn unroll_rejects_indivisible() {
+        let nest = square_nest(6);
+        assert!(unroll_innermost(&nest, 4).is_err());
+    }
+}

@@ -1,0 +1,238 @@
+//! Integer affine algebra over ℤⁿ: vectors, affine expressions (one output
+//! dimension) and affine maps (many output dimensions).
+//!
+//! These are the workhorses of the polyhedral side: PRA indexing functions
+//! `P·i + f` and `Q·i − d`, storage layouts `s_x`, address translations
+//! `m_x·i + μ_x` (paper §III-G), and schedule vectors λ are all affine.
+
+/// An integer vector in ℤⁿ.
+pub type IVec = Vec<i64>;
+
+/// Dot product. Panics if lengths differ.
+pub fn dot(a: &[i64], b: &[i64]) -> i64 {
+    assert_eq!(a.len(), b.len(), "dot: dimension mismatch");
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Component-wise `a + b`.
+pub fn vadd(a: &[i64], b: &[i64]) -> IVec {
+    assert_eq!(a.len(), b.len(), "vadd: dimension mismatch");
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// Component-wise `a - b`.
+pub fn vsub(a: &[i64], b: &[i64]) -> IVec {
+    assert_eq!(a.len(), b.len(), "vsub: dimension mismatch");
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Scalar multiple `c * a`.
+pub fn vscale(c: i64, a: &[i64]) -> IVec {
+    a.iter().map(|x| c * x).collect()
+}
+
+/// The zero vector of dimension `n`.
+pub fn zeros(n: usize) -> IVec {
+    vec![0; n]
+}
+
+/// The `k`-th unit vector of dimension `n`.
+pub fn unit(n: usize, k: usize) -> IVec {
+    let mut v = vec![0; n];
+    v[k] = 1;
+    v
+}
+
+/// A single-output affine expression `coeffs · i + c`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AffineExpr {
+    pub coeffs: IVec,
+    pub c: i64,
+}
+
+impl AffineExpr {
+    pub fn new(coeffs: IVec, c: i64) -> Self {
+        AffineExpr { coeffs, c }
+    }
+
+    /// A constant expression of dimension `n`.
+    pub fn constant(n: usize, c: i64) -> Self {
+        AffineExpr {
+            coeffs: zeros(n),
+            c,
+        }
+    }
+
+    /// The expression selecting index variable `k`.
+    pub fn var(n: usize, k: usize) -> Self {
+        AffineExpr {
+            coeffs: unit(n, k),
+            c: 0,
+        }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    pub fn eval(&self, i: &[i64]) -> i64 {
+        dot(&self.coeffs, i) + self.c
+    }
+
+    pub fn is_constant(&self) -> bool {
+        self.coeffs.iter().all(|&c| c == 0)
+    }
+
+    pub fn add(&self, other: &AffineExpr) -> AffineExpr {
+        AffineExpr {
+            coeffs: vadd(&self.coeffs, &other.coeffs),
+            c: self.c + other.c,
+        }
+    }
+
+    pub fn scale(&self, k: i64) -> AffineExpr {
+        AffineExpr {
+            coeffs: vscale(k, &self.coeffs),
+            c: k * self.c,
+        }
+    }
+}
+
+/// A multi-output affine map `i ↦ M·i + off` (rows of `mat` are the output
+/// coordinates). Used for PRA indexing functions and AG address patterns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AffineMap {
+    /// Row-major matrix: `mat[r]` is the coefficient vector of output `r`.
+    pub mat: Vec<IVec>,
+    pub off: IVec,
+}
+
+impl AffineMap {
+    pub fn new(mat: Vec<IVec>, off: IVec) -> Self {
+        assert_eq!(mat.len(), off.len(), "AffineMap: rows must match offset");
+        for row in &mat {
+            assert_eq!(
+                row.len(),
+                mat[0].len(),
+                "AffineMap: ragged matrix rows"
+            );
+        }
+        AffineMap { mat, off }
+    }
+
+    /// The identity map on ℤⁿ.
+    pub fn identity(n: usize) -> Self {
+        AffineMap {
+            mat: (0..n).map(|k| unit(n, k)).collect(),
+            off: zeros(n),
+        }
+    }
+
+    /// Identity shifted by `-d` — the PRA read pattern `y[i − d]`.
+    pub fn translation(d: &[i64]) -> Self {
+        AffineMap {
+            mat: (0..d.len()).map(|k| unit(d.len(), k)).collect(),
+            off: vscale(-1, d),
+        }
+    }
+
+    /// A projection selecting the given input dims (e.g. `C[i0, i1]` reads
+    /// dims `[0, 1]` of a 3-D space).
+    pub fn select_dims(n: usize, dims: &[usize]) -> Self {
+        AffineMap {
+            mat: dims.iter().map(|&k| unit(n, k)).collect(),
+            off: zeros(dims.len()),
+        }
+    }
+
+    pub fn in_dims(&self) -> usize {
+        self.mat.first().map(|r| r.len()).unwrap_or(0)
+    }
+
+    pub fn out_dims(&self) -> usize {
+        self.mat.len()
+    }
+
+    pub fn apply(&self, i: &[i64]) -> IVec {
+        self.mat
+            .iter()
+            .zip(&self.off)
+            .map(|(row, o)| dot(row, i) + o)
+            .collect()
+    }
+
+    /// Compose with a row vector on the left: `s · (M·i + off)` as an
+    /// [`AffineExpr`] — the storage-layout ∘ indexing composition of §III-G.
+    pub fn compose_row(&self, s: &[i64]) -> AffineExpr {
+        assert_eq!(s.len(), self.out_dims());
+        let n = self.in_dims();
+        let mut coeffs = zeros(n);
+        for (r, row) in self.mat.iter().enumerate() {
+            for (k, v) in row.iter().enumerate() {
+                coeffs[k] += s[r] * v;
+            }
+        }
+        AffineExpr {
+            coeffs,
+            c: dot(s, &self.off),
+        }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.out_dims() == self.in_dims()
+            && self.off.iter().all(|&o| o == 0)
+            && self
+                .mat
+                .iter()
+                .enumerate()
+                .all(|(r, row)| row.iter().enumerate().all(|(c, &v)| v == i64::from(r == c)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_vec_ops() {
+        assert_eq!(dot(&[1, 2, 3], &[4, 5, 6]), 32);
+        assert_eq!(vadd(&[1, 2], &[3, 4]), vec![4, 6]);
+        assert_eq!(vsub(&[1, 2], &[3, 4]), vec![-2, -2]);
+        assert_eq!(vscale(2, &[1, -1]), vec![2, -2]);
+    }
+
+    #[test]
+    fn affine_expr_eval() {
+        let e = AffineExpr::new(vec![2, 0, 1], 5);
+        assert_eq!(e.eval(&[1, 9, 3]), 2 + 3 + 5);
+        assert!(AffineExpr::constant(3, 7).is_constant());
+        assert_eq!(AffineExpr::var(3, 1).eval(&[4, 5, 6]), 5);
+    }
+
+    #[test]
+    fn affine_expr_algebra() {
+        let a = AffineExpr::new(vec![1, 0], 1);
+        let b = AffineExpr::new(vec![0, 2], 3);
+        assert_eq!(a.add(&b), AffineExpr::new(vec![1, 2], 4));
+        assert_eq!(a.scale(3), AffineExpr::new(vec![3, 0], 3));
+    }
+
+    #[test]
+    fn map_identity_and_translation() {
+        let id = AffineMap::identity(3);
+        assert!(id.is_identity());
+        assert_eq!(id.apply(&[1, 2, 3]), vec![1, 2, 3]);
+        let t = AffineMap::translation(&[0, 1, 0]);
+        assert_eq!(t.apply(&[5, 5, 5]), vec![5, 4, 5]);
+        assert!(!t.is_identity());
+    }
+
+    #[test]
+    fn map_projection_and_compose() {
+        // C[i0, i1] in a 3-D space, row-major N=4 layout: addr = 4*i0 + i1.
+        let p = AffineMap::select_dims(3, &[0, 1]);
+        assert_eq!(p.apply(&[2, 3, 9]), vec![2, 3]);
+        let addr = p.compose_row(&[4, 1]);
+        assert_eq!(addr.eval(&[2, 3, 9]), 11);
+    }
+}

@@ -1,0 +1,475 @@
+//! The imperative loop-nest IR — the "C/C++ program" a CGRA toolchain consumes
+//! (paper §II-B). A nest is a perfect n-deep loop with affine bounds and a
+//! body of array-assignment statements with affine accesses.
+//!
+//! The IR carries its own *interpreter*, which is the semantic reference that
+//! every CGRA mapping/simulation is validated against (and cross-checked
+//! against the PRA interpreter and the XLA golden model).
+
+use std::collections::BTreeMap;
+
+use super::affine::AffineExpr;
+use super::op::{Dtype, OpKind, Value};
+
+/// Array role in a kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrayKind {
+    Input,
+    Output,
+    /// Read-modify-write (e.g. GEMM's `D += …` accumulator target).
+    InOut,
+}
+
+/// A dense row-major array.
+#[derive(Debug, Clone)]
+pub struct ArrayDecl {
+    pub name: String,
+    /// Concrete shape (row-major layout).
+    pub shape: Vec<i64>,
+    pub kind: ArrayKind,
+}
+
+impl ArrayDecl {
+    pub fn len(&self) -> usize {
+        self.shape.iter().map(|&d| d as usize).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<i64> {
+        let n = self.shape.len();
+        let mut s = vec![1i64; n];
+        for k in (0..n.saturating_sub(1)).rev() {
+            s[k] = s[k + 1] * self.shape[k + 1];
+        }
+        s
+    }
+
+    /// Linearize a (already evaluated) index tuple.
+    pub fn linearize(&self, idx: &[i64]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = self.strides();
+        let mut addr = 0i64;
+        for (k, &i) in idx.iter().enumerate() {
+            debug_assert!(
+                i >= 0 && i < self.shape[k],
+                "array {}: index {:?} out of shape {:?}",
+                self.name,
+                idx,
+                self.shape
+            );
+            addr += i * strides[k];
+        }
+        addr as usize
+    }
+}
+
+/// One loop dimension. `extent` is an affine expression over *outer* loop
+/// indices (coefficients for this and inner dims must be zero), enabling
+/// triangular nests like TRISOLV's `for j in 0..i`.
+#[derive(Debug, Clone)]
+pub struct LoopDim {
+    pub name: String,
+    pub extent: AffineExpr,
+}
+
+/// An expression tree evaluated per iteration.
+#[derive(Debug, Clone)]
+pub enum Expr {
+    /// Read `array[idx...]` where each index is affine in the loop indices.
+    Read {
+        array: usize,
+        idx: Vec<AffineExpr>,
+    },
+    Bin {
+        op: OpKind,
+        a: Box<Expr>,
+        b: Box<Expr>,
+    },
+    /// Ternary select `c != 0 ? t : e` — predication in the loop body
+    /// (needed by TRISOLV/TRSM-style guarded updates).
+    Sel {
+        c: Box<Expr>,
+        t: Box<Expr>,
+        e: Box<Expr>,
+    },
+    /// The value of an affine combination of the loop indices (compiled to
+    /// index-register reads on the CGRA side).
+    Idx(AffineExpr),
+    Const(i64),
+}
+
+impl Expr {
+    pub fn read(array: usize, idx: Vec<AffineExpr>) -> Expr {
+        Expr::Read { array, idx }
+    }
+
+    pub fn bin(op: OpKind, a: Expr, b: Expr) -> Expr {
+        Expr::Bin {
+            op,
+            a: Box::new(a),
+            b: Box::new(b),
+        }
+    }
+
+    pub fn sel(c: Expr, t: Expr, e: Expr) -> Expr {
+        Expr::Sel {
+            c: Box::new(c),
+            t: Box::new(t),
+            e: Box::new(e),
+        }
+    }
+
+    /// Count of operation nodes (for ResMII / DFG size accounting).
+    pub fn op_count(&self) -> usize {
+        match self {
+            Expr::Read { .. } => 1, // the load
+            Expr::Const(_) => 0,
+            Expr::Idx(_) => 0, // index values come from the index chain
+            Expr::Bin { a, b, .. } => 1 + a.op_count() + b.op_count(),
+            Expr::Sel { c, t, e } => 1 + c.op_count() + t.op_count() + e.op_count(),
+        }
+    }
+}
+
+/// One statement: `arrays[array][idx...] = expr`.
+#[derive(Debug, Clone)]
+pub struct Stmt {
+    pub array: usize,
+    pub idx: Vec<AffineExpr>,
+    pub expr: Expr,
+}
+
+/// A perfect loop nest with a straight-line body.
+#[derive(Debug, Clone)]
+pub struct LoopNest {
+    pub name: String,
+    pub dtype: Dtype,
+    /// Outermost dimension first.
+    pub dims: Vec<LoopDim>,
+    pub arrays: Vec<ArrayDecl>,
+    pub body: Vec<Stmt>,
+}
+
+/// Named array storage used by the interpreters and simulators.
+pub type ArrayData = BTreeMap<String, Vec<Value>>;
+
+impl LoopNest {
+    pub fn depth(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn array_id(&self, name: &str) -> Option<usize> {
+        self.arrays.iter().position(|a| a.name == name)
+    }
+
+    /// Are all loop bounds constants (rectangular nest)?
+    pub fn is_rectangular(&self) -> bool {
+        self.dims.iter().all(|d| d.extent.is_constant())
+    }
+
+    /// Total number of iterations (walks triangular bounds exactly).
+    pub fn iteration_count(&self) -> u64 {
+        let mut count = 0u64;
+        self.for_each_iteration(|_| count += 1);
+        count
+    }
+
+    /// Visit every iteration index in lexicographic (program) order.
+    pub fn for_each_iteration<F: FnMut(&[i64])>(&self, mut f: F) {
+        let n = self.depth();
+        let mut idx = vec![0i64; n];
+        self.walk(0, &mut idx, &mut f);
+    }
+
+    fn walk<F: FnMut(&[i64])>(&self, k: usize, idx: &mut Vec<i64>, f: &mut F) {
+        if k == self.depth() {
+            f(idx);
+            return;
+        }
+        let extent = self.dims[k].extent.eval(idx);
+        for v in 0..extent.max(0) {
+            idx[k] = v;
+            self.walk(k + 1, idx, f);
+        }
+        idx[k] = 0;
+    }
+
+    /// Allocate zero-initialized storage for all arrays, then overwrite the
+    /// inputs from `inputs` (missing inputs stay zero).
+    pub fn alloc_arrays(&self, inputs: &ArrayData) -> Vec<Vec<Value>> {
+        self.arrays
+            .iter()
+            .map(|a| match inputs.get(&a.name) {
+                Some(data) => {
+                    assert_eq!(
+                        data.len(),
+                        a.len(),
+                        "input {} has wrong length",
+                        a.name
+                    );
+                    data.clone()
+                }
+                None => vec![self.dtype.zero(); a.len()],
+            })
+            .collect()
+    }
+
+    /// Reference interpreter: execute the nest sequentially and return all
+    /// output / in-out arrays by name.
+    pub fn execute(&self, inputs: &ArrayData) -> ArrayData {
+        let mut store = self.alloc_arrays(inputs);
+        self.for_each_iteration(|i| {
+            for stmt in &self.body {
+                let val = self.eval_expr(&stmt.expr, i, &store);
+                let arr = &self.arrays[stmt.array];
+                let idx: Vec<i64> = stmt.idx.iter().map(|e| e.eval(i)).collect();
+                let addr = arr.linearize(&idx);
+                store[stmt.array][addr] = val;
+            }
+        });
+        self.collect_outputs(&store)
+    }
+
+    /// Gather output/in-out arrays from a raw store.
+    pub fn collect_outputs(&self, store: &[Vec<Value>]) -> ArrayData {
+        self.arrays
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| matches!(a.kind, ArrayKind::Output | ArrayKind::InOut))
+            .map(|(id, a)| (a.name.clone(), store[id].clone()))
+            .collect()
+    }
+
+    fn eval_expr(&self, e: &Expr, i: &[i64], store: &[Vec<Value>]) -> Value {
+        match e {
+            Expr::Const(c) => self.dtype.from_i64(*c),
+            Expr::Idx(ae) => self.dtype.from_i64(ae.eval(i)),
+            Expr::Read { array, idx } => {
+                let arr = &self.arrays[*array];
+                let pt: Vec<i64> = idx.iter().map(|e| e.eval(i)).collect();
+                store[*array][arr.linearize(&pt)]
+            }
+            Expr::Bin { op, a, b } => {
+                let va = self.eval_expr(a, i, store);
+                let vb = self.eval_expr(b, i, store);
+                Value::apply(*op, &[va, vb])
+            }
+            Expr::Sel { c, t, e } => {
+                let vc = self.eval_expr(c, i, store);
+                if vc.is_truthy() {
+                    self.eval_expr(t, i, store)
+                } else {
+                    self.eval_expr(e, i, store)
+                }
+            }
+        }
+    }
+
+    /// Number of operation nodes in one iteration of the body (loads, stores
+    /// and arithmetic; excludes index/address overhead, which the DFG
+    /// generator adds).
+    pub fn body_op_count(&self) -> usize {
+        self.body
+            .iter()
+            .map(|s| s.expr.op_count() + 1) // +1 for the store
+            .sum()
+    }
+}
+
+/// Convenience builder for rectangular nests.
+pub struct NestBuilder {
+    nest: LoopNest,
+}
+
+impl NestBuilder {
+    pub fn new(name: &str, dtype: Dtype) -> Self {
+        NestBuilder {
+            nest: LoopNest {
+                name: name.to_string(),
+                dtype,
+                dims: Vec::new(),
+                arrays: Vec::new(),
+                body: Vec::new(),
+            },
+        }
+    }
+
+    /// Add a loop dimension with a constant extent. Call outermost-first.
+    pub fn dim(mut self, name: &str, extent: i64) -> Self {
+        // Extent coefficients are sized later in `finish` once the depth is
+        // known; store the constant for now.
+        self.nest.dims.push(LoopDim {
+            name: name.to_string(),
+            extent: AffineExpr::new(Vec::new(), extent),
+        });
+        self
+    }
+
+    /// Add a loop dimension whose extent depends affinely on outer indices
+    /// (`coeff_of_outer` pairs of (outer_dim, coeff) plus constant).
+    pub fn dim_affine(mut self, name: &str, terms: &[(usize, i64)], c: i64) -> Self {
+        let mut e = AffineExpr::new(Vec::new(), c);
+        // encode terms sparsely; resolved in finish()
+        e.coeffs = terms
+            .iter()
+            .flat_map(|&(d, co)| vec![d as i64, co])
+            .collect();
+        // mark as sparse by storing pairs — finish() rebuilds
+        self.nest.dims.push(LoopDim {
+            name: name.to_string(),
+            extent: e,
+        });
+        self
+    }
+
+    pub fn array(mut self, name: &str, shape: Vec<i64>, kind: ArrayKind) -> Self {
+        self.nest.arrays.push(ArrayDecl {
+            name: name.to_string(),
+            shape,
+            kind,
+        });
+        self
+    }
+
+    pub fn stmt(mut self, array: &str, idx: Vec<AffineExpr>, expr: Expr) -> Self {
+        let id = self
+            .nest
+            .array_id(array)
+            .unwrap_or_else(|| panic!("unknown array {array}"));
+        self.nest.body.push(Stmt {
+            array: id,
+            idx,
+            expr,
+        });
+        self
+    }
+
+    /// Resolve dimension-extent coefficient vectors to the final depth.
+    pub fn finish(mut self) -> LoopNest {
+        let n = self.nest.dims.len();
+        for dim in &mut self.nest.dims {
+            let raw = std::mem::take(&mut dim.extent.coeffs);
+            let mut coeffs = vec![0i64; n];
+            // raw is a sparse list of (dim, coeff) pairs flattened
+            let mut it = raw.chunks_exact(2);
+            for pair in &mut it {
+                coeffs[pair[0] as usize] = pair[1];
+            }
+            dim.extent.coeffs = coeffs;
+        }
+        self.nest
+    }
+}
+
+/// Build an index-expression helper of dimension `n`: `idx(n, k)` = `i_k`.
+pub fn idx(n: usize, k: usize) -> AffineExpr {
+    AffineExpr::var(n, k)
+}
+
+/// `i_k + c`.
+pub fn idx_plus(n: usize, k: usize, c: i64) -> AffineExpr {
+    let mut e = AffineExpr::var(n, k);
+    e.c = c;
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::op::OpKind;
+
+    /// Tiny GEMM-like nest: D[i,j] = D[i,j] + A[i,k]*B[k,j], 3-deep, N=3.
+    fn tiny_gemm(n: i64) -> LoopNest {
+        let d = 3;
+        NestBuilder::new("gemm", Dtype::I32)
+            .dim("i0", n)
+            .dim("i1", n)
+            .dim("i2", n)
+            .array("A", vec![n, n], ArrayKind::Input)
+            .array("B", vec![n, n], ArrayKind::Input)
+            .array("D", vec![n, n], ArrayKind::InOut)
+            .stmt(
+                "D",
+                vec![idx(d, 0), idx(d, 1)],
+                Expr::bin(
+                    OpKind::Add,
+                    Expr::read(2, vec![idx(d, 0), idx(d, 1)]),
+                    Expr::bin(
+                        OpKind::Mul,
+                        Expr::read(0, vec![idx(d, 0), idx(d, 2)]),
+                        Expr::read(1, vec![idx(d, 2), idx(d, 1)]),
+                    ),
+                ),
+            )
+            .finish()
+    }
+
+    fn iota(n: usize, base: i64) -> Vec<Value> {
+        (0..n).map(|i| Value::I32((base + i as i64) as i32)).collect()
+    }
+
+    #[test]
+    fn gemm_interpreter_matches_naive() {
+        let n = 3usize;
+        let nest = tiny_gemm(n as i64);
+        let mut inputs = ArrayData::new();
+        inputs.insert("A".into(), iota(n * n, 1));
+        inputs.insert("B".into(), iota(n * n, 2));
+        let out = nest.execute(&inputs);
+        let d = &out["D"];
+        // naive reference
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0i64;
+                for k in 0..n {
+                    let a = 1 + (i * n + k) as i64;
+                    let b = 2 + (k * n + j) as i64;
+                    acc += a * b;
+                }
+                assert_eq!(d[i * n + j], Value::I32(acc as i32));
+            }
+        }
+    }
+
+    #[test]
+    fn iteration_count_rectangular() {
+        let nest = tiny_gemm(4);
+        assert_eq!(nest.iteration_count(), 64);
+        assert!(nest.is_rectangular());
+    }
+
+    #[test]
+    fn triangular_extent() {
+        // for i0 in 0..4 { for i1 in 0..i0 } -> 0+1+2+3 = 6 iterations
+        let nest = NestBuilder::new("tri", Dtype::I32)
+            .dim("i0", 4)
+            .dim_affine("i1", &[(0, 1)], 0)
+            .array("X", vec![4], ArrayKind::Output)
+            .stmt("X", vec![idx(2, 0)], Expr::Const(1))
+            .finish();
+        assert_eq!(nest.iteration_count(), 6);
+        assert!(!nest.is_rectangular());
+    }
+
+    #[test]
+    fn body_op_count_counts_loads_and_stores() {
+        let nest = tiny_gemm(3);
+        // loads: D, A, B = 3; mul, add = 2; store = 1 -> 6
+        assert_eq!(nest.body_op_count(), 6);
+    }
+
+    #[test]
+    fn array_linearize_row_major() {
+        let a = ArrayDecl {
+            name: "A".into(),
+            shape: vec![3, 4],
+            kind: ArrayKind::Input,
+        };
+        assert_eq!(a.strides(), vec![4, 1]);
+        assert_eq!(a.linearize(&[2, 3]), 11);
+    }
+}

@@ -1,0 +1,17 @@
+//! Intermediate representations shared by both mapping stacks.
+//!
+//! * [`affine`] — integer vectors, matrices and affine maps over ℤⁿ.
+//! * [`space`] — rectangular iteration spaces and polyhedral condition spaces.
+//! * [`op`] — the common operation set + value type + latency model.
+//! * [`loopnest`] — the imperative ("C/C++-like") loop-nest IR consumed by the
+//!   operation-centric (CGRA) frontend.
+//! * [`pra`] — Piecewise Regular Algorithms, the polyhedral input of the
+//!   iteration-centric (TCPA) stack.
+//! * [`paula`] — a PAULA-like textual DSL frontend for PRAs.
+
+pub mod affine;
+pub mod space;
+pub mod op;
+pub mod loopnest;
+pub mod pra;
+pub mod paula;

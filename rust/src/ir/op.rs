@@ -1,0 +1,336 @@
+//! The common operation set, scalar value type and latency model.
+//!
+//! Both architectures execute the same word-level operations (paper §V-B1:
+//! 32-bit integer add/mul/div plus logic, comparison and load/store; all
+//! single-cycle except division which takes 16 cycles). TRISOLV/TRSM need
+//! division, so values are either `i32` or `f32`; simulators are generic over
+//! [`Value`].
+
+use std::fmt;
+
+/// Operation kinds executable by a functional unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    And,
+    Or,
+    Xor,
+    /// Comparison: less-than. Produces 0/1.
+    CmpLt,
+    /// Comparison: greater-or-equal. Produces 0/1.
+    CmpGe,
+    /// Comparison: equal. Produces 0/1.
+    CmpEq,
+    /// Comparison: not-equal. Produces 0/1.
+    CmpNe,
+    /// `Select(c, a, b) = c != 0 ? a : b` — the predication/multiplex op.
+    Select,
+    /// Register-to-register move / propagation (TCPA copy units).
+    Mov,
+    /// Materialize an immediate constant.
+    Const,
+    /// Load a word from scratchpad / I/O buffer memory.
+    Load,
+    /// Store a word to scratchpad / I/O buffer memory.
+    Store,
+    /// No operation (filler slots in generated configurations).
+    Nop,
+}
+
+impl OpKind {
+    /// Is this a memory-access operation (restricted to border PEs on CGRAs)?
+    pub fn is_mem(self) -> bool {
+        matches!(self, OpKind::Load | OpKind::Store)
+    }
+
+    pub fn is_cmp(self) -> bool {
+        matches!(
+            self,
+            OpKind::CmpLt | OpKind::CmpGe | OpKind::CmpEq | OpKind::CmpNe
+        )
+    }
+
+    /// Number of data inputs.
+    pub fn arity(self) -> usize {
+        match self {
+            OpKind::Const | OpKind::Nop => 0,
+            OpKind::Mov | OpKind::Load => 1,
+            OpKind::Select => 3,
+            OpKind::Store => 2, // (address, value)
+            _ => 2,
+        }
+    }
+
+    /// Latency in clock cycles (paper §V-B1: all single-cycle except the
+    /// 16-cycle divider; both architectures instantiate the same arithmetic
+    /// units, so the table is shared).
+    pub fn latency(self) -> u32 {
+        match self {
+            OpKind::Div => 16,
+            _ => 1,
+        }
+    }
+
+    /// The TCPA functional-unit class this op executes on (paper §V-B1: each
+    /// TCPA PE has 2 adders, 1 multiplier, 1 divider and 3 copy units; the
+    /// adders also execute logic/compare/select).
+    pub fn fu_class(self) -> FuClass {
+        match self {
+            OpKind::Mul => FuClass::Mul,
+            OpKind::Div => FuClass::Div,
+            OpKind::Mov | OpKind::Load | OpKind::Store | OpKind::Const => FuClass::Copy,
+            _ => FuClass::Add,
+        }
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            OpKind::Add => "add",
+            OpKind::Sub => "sub",
+            OpKind::Mul => "mul",
+            OpKind::Div => "div",
+            OpKind::And => "and",
+            OpKind::Or => "or",
+            OpKind::Xor => "xor",
+            OpKind::CmpLt => "cmplt",
+            OpKind::CmpGe => "cmpge",
+            OpKind::CmpEq => "cmpeq",
+            OpKind::CmpNe => "cmpne",
+            OpKind::Select => "sel",
+            OpKind::Mov => "mov",
+            OpKind::Const => "const",
+            OpKind::Load => "load",
+            OpKind::Store => "store",
+            OpKind::Nop => "nop",
+        };
+        f.write_str(s)
+    }
+}
+
+/// TCPA functional-unit classes (paper §III-A / §V-B1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FuClass {
+    Add,
+    Mul,
+    Div,
+    Copy,
+}
+
+impl FuClass {
+    pub const ALL: [FuClass; 4] = [FuClass::Add, FuClass::Mul, FuClass::Div, FuClass::Copy];
+}
+
+impl fmt::Display for FuClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            FuClass::Add => "add-fu",
+            FuClass::Mul => "mul-fu",
+            FuClass::Div => "div-fu",
+            FuClass::Copy => "copy-fu",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A scalar machine word: 32-bit integer or 32-bit float.
+///
+/// Integer benchmarks validate bit-exactly against the XLA golden model;
+/// float benchmarks (division) validate with a tolerance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Value {
+    I32(i32),
+    F32(f32),
+}
+
+impl Value {
+    pub fn zero_like(self) -> Value {
+        match self {
+            Value::I32(_) => Value::I32(0),
+            Value::F32(_) => Value::F32(0.0),
+        }
+    }
+
+    pub fn as_i64(self) -> i64 {
+        match self {
+            Value::I32(v) => v as i64,
+            Value::F32(v) => v as i64,
+        }
+    }
+
+    pub fn as_f64(self) -> f64 {
+        match self {
+            Value::I32(v) => v as f64,
+            Value::F32(v) => v as f64,
+        }
+    }
+
+    pub fn is_truthy(self) -> bool {
+        match self {
+            Value::I32(v) => v != 0,
+            Value::F32(v) => v != 0.0,
+        }
+    }
+
+    /// Apply a binary/unary/ternary ALU operation. `Select` takes
+    /// (cond, then, else). Comparison results are `I32(0|1)`. Mixed
+    /// int/float operands promote to float (index/predicate values feeding
+    /// a floating-point datapath, as in the f32 TRISOLV/TRSM kernels).
+    pub fn apply(kind: OpKind, args: &[Value]) -> Value {
+        use OpKind::*;
+        let bin_i = |f: fn(i32, i32) -> i32, a: Value, b: Value| match (a, b) {
+            (Value::I32(x), Value::I32(y)) => Value::I32(f(x, y)),
+            _ => panic!("integer op {kind} applied to float operands"),
+        };
+        let promote = |a: Value, b: Value| -> Option<(f32, f32)> {
+            match (a, b) {
+                (Value::I32(_), Value::I32(_)) => None,
+                (x, y) => Some((x.as_f64() as f32, y.as_f64() as f32)),
+            }
+        };
+        match kind {
+            Add => match promote(args[0], args[1]) {
+                Some((a, b)) => Value::F32(a + b),
+                None => bin_i(i32::wrapping_add, args[0], args[1]),
+            },
+            Sub => match promote(args[0], args[1]) {
+                Some((a, b)) => Value::F32(a - b),
+                None => bin_i(i32::wrapping_sub, args[0], args[1]),
+            },
+            Mul => match promote(args[0], args[1]) {
+                Some((a, b)) => Value::F32(a * b),
+                None => bin_i(i32::wrapping_mul, args[0], args[1]),
+            },
+            Div => match promote(args[0], args[1]) {
+                Some((a, b)) => Value::F32(a / b),
+                None => bin_i(
+                    |a, b| if b == 0 { 0 } else { a.wrapping_div(b) },
+                    args[0],
+                    args[1],
+                ),
+            },
+            And => bin_i(|a, b| a & b, args[0], args[1]),
+            Or => bin_i(|a, b| a | b, args[0], args[1]),
+            Xor => bin_i(|a, b| a ^ b, args[0], args[1]),
+            CmpLt => Value::I32(i32::from(args[0].as_f64() < args[1].as_f64())),
+            CmpGe => Value::I32(i32::from(args[0].as_f64() >= args[1].as_f64())),
+            CmpEq => Value::I32(i32::from(args[0] == args[1])),
+            CmpNe => Value::I32(i32::from(args[0] != args[1])),
+            Select => {
+                if args[0].is_truthy() {
+                    args[1]
+                } else {
+                    args[2]
+                }
+            }
+            Mov => args[0],
+            Const | Load | Store | Nop => {
+                panic!("{kind} is not a pure ALU op — handled by the simulator")
+            }
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::I32(v) => write!(f, "{v}"),
+            Value::F32(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// Element type tag for a whole workload (all arrays share one type).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    I32,
+    F32,
+}
+
+impl Dtype {
+    pub fn zero(self) -> Value {
+        match self {
+            Dtype::I32 => Value::I32(0),
+            Dtype::F32 => Value::F32(0.0),
+        }
+    }
+
+    pub fn from_i64(self, v: i64) -> Value {
+        match self {
+            Dtype::I32 => Value::I32(v as i32),
+            Dtype::F32 => Value::F32(v as f32),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latencies_match_paper() {
+        assert_eq!(OpKind::Div.latency(), 16);
+        assert_eq!(OpKind::Add.latency(), 1);
+        assert_eq!(OpKind::Mul.latency(), 1);
+        assert_eq!(OpKind::Load.latency(), 1);
+    }
+
+    #[test]
+    fn fu_classes() {
+        assert_eq!(OpKind::Add.fu_class(), FuClass::Add);
+        assert_eq!(OpKind::CmpLt.fu_class(), FuClass::Add);
+        assert_eq!(OpKind::Mul.fu_class(), FuClass::Mul);
+        assert_eq!(OpKind::Div.fu_class(), FuClass::Div);
+        assert_eq!(OpKind::Mov.fu_class(), FuClass::Copy);
+    }
+
+    #[test]
+    fn integer_alu_semantics() {
+        let a = Value::I32(7);
+        let b = Value::I32(3);
+        assert_eq!(Value::apply(OpKind::Add, &[a, b]), Value::I32(10));
+        assert_eq!(Value::apply(OpKind::Sub, &[a, b]), Value::I32(4));
+        assert_eq!(Value::apply(OpKind::Mul, &[a, b]), Value::I32(21));
+        assert_eq!(Value::apply(OpKind::Div, &[a, b]), Value::I32(2));
+        assert_eq!(Value::apply(OpKind::CmpLt, &[b, a]), Value::I32(1));
+        assert_eq!(Value::apply(OpKind::CmpGe, &[b, a]), Value::I32(0));
+    }
+
+    #[test]
+    fn divide_by_zero_is_zero_for_i32() {
+        assert_eq!(
+            Value::apply(OpKind::Div, &[Value::I32(5), Value::I32(0)]),
+            Value::I32(0)
+        );
+    }
+
+    #[test]
+    fn select_semantics() {
+        let c1 = Value::I32(1);
+        let c0 = Value::I32(0);
+        let a = Value::I32(11);
+        let b = Value::I32(22);
+        assert_eq!(Value::apply(OpKind::Select, &[c1, a, b]), a);
+        assert_eq!(Value::apply(OpKind::Select, &[c0, a, b]), b);
+    }
+
+    #[test]
+    fn float_ops() {
+        let a = Value::F32(1.5);
+        let b = Value::F32(0.5);
+        assert_eq!(Value::apply(OpKind::Div, &[a, b]), Value::F32(3.0));
+        assert_eq!(Value::apply(OpKind::Add, &[a, b]), Value::F32(2.0));
+    }
+
+    #[test]
+    fn arity() {
+        assert_eq!(OpKind::Select.arity(), 3);
+        assert_eq!(OpKind::Store.arity(), 2);
+        assert_eq!(OpKind::Load.arity(), 1);
+        assert_eq!(OpKind::Const.arity(), 0);
+    }
+}

@@ -1,0 +1,581 @@
+//! A PAULA-like textual frontend for PRAs (paper §III-I, Listing 1).
+//!
+//! PAULA is the domain-specific language of the TURTLE toolchain. We support
+//! a compact dialect sufficient for all evaluated benchmarks:
+//!
+//! ```text
+//! program gemm
+//! dtype i32
+//! space 4 4 4                     # iteration-space extents (i0, i1, i2)
+//! var a
+//! var b
+//! var p
+//! var c
+//! input  A 4 4                    # external arrays: name + shape
+//! input  B 4 4
+//! output C 4 4
+//! eq S1a: a[i] = A[i0, i2]            if i1 == 0
+//! eq S1b: a[i] = a[i0, i1-1, i2]      if i1 >= 1
+//! eq S2a: b[i] = B[i2, i1]            if i0 == 0
+//! eq S2b: b[i] = b[i0-1, i1, i2]      if i0 >= 1
+//! eq S3:  p[i] = a[i] * b[i]
+//! eq S4a: c[i] = p[i]                 if i2 == 0
+//! eq S4b: c[i] = c[i0, i1, i2-1] + p[i] if i2 >= 1
+//! eq S5C: C[i0, i1] = c[i]            if i2 == 3
+//! ```
+//!
+//! `x[i]` abbreviates the identity read/definition. Conditions are
+//! conjunctions (`if c1 and c2`) of `i_k OP e` or `i_a - i_b OP e` with
+//! integer `e` and `OP ∈ {==, >=, <=, >, <}` (loop bounds are substituted to
+//! integers before parsing, matching TURTLE's instantiation step).
+
+use super::affine::{AffineMap, IVec};
+use super::loopnest::ArrayKind;
+use super::op::{Dtype, OpKind};
+use super::pra::{Arg, Equation, Pra};
+use super::space::{CondSpace, Constraint, RectSpace};
+
+/// Parse error with a line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "paula:{}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError {
+        line,
+        msg: msg.into(),
+    })
+}
+
+/// Parse a PAULA program into a [`Pra`].
+pub fn parse(src: &str) -> Result<Pra, ParseError> {
+    let mut name = String::from("unnamed");
+    let mut dtype = Dtype::I32;
+    let mut space: Option<RectSpace> = None;
+    let mut vars: Vec<String> = Vec::new();
+    let mut arrays: Vec<super::loopnest::ArrayDecl> = Vec::new();
+    let mut eqs: Vec<Equation> = Vec::new();
+
+    for (ln0, raw) in src.lines().enumerate() {
+        let ln = ln0 + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (kw, rest) = match line.split_once(char::is_whitespace) {
+            Some((k, r)) => (k, r.trim()),
+            None => (line, ""),
+        };
+        match kw {
+            "program" => name = rest.to_string(),
+            "dtype" => {
+                dtype = match rest {
+                    "i32" => Dtype::I32,
+                    "f32" => Dtype::F32,
+                    other => return err(ln, format!("unknown dtype {other}")),
+                }
+            }
+            "space" => {
+                let extents: Result<IVec, _> =
+                    rest.split_whitespace().map(|t| t.parse::<i64>()).collect();
+                match extents {
+                    Ok(e) if !e.is_empty() => space = Some(RectSpace::new(e)),
+                    _ => return err(ln, "space wants positive integer extents"),
+                }
+            }
+            "var" => {
+                for v in rest.split_whitespace() {
+                    if vars.iter().any(|x| x == v) {
+                        return err(ln, format!("duplicate var {v}"));
+                    }
+                    vars.push(v.to_string());
+                }
+            }
+            "input" | "output" | "inout" => {
+                let mut toks = rest.split_whitespace();
+                let aname = match toks.next() {
+                    Some(n) => n.to_string(),
+                    None => return err(ln, "array wants a name"),
+                };
+                let shape: Result<Vec<i64>, _> = toks.map(|t| t.parse::<i64>()).collect();
+                let shape = match shape {
+                    Ok(s) if !s.is_empty() => s,
+                    _ => return err(ln, "array wants integer shape dims"),
+                };
+                arrays.push(super::loopnest::ArrayDecl {
+                    name: aname,
+                    shape,
+                    kind: match kw {
+                        "input" => ArrayKind::Input,
+                        "output" => ArrayKind::Output,
+                        _ => ArrayKind::InOut,
+                    },
+                });
+            }
+            "eq" => {
+                let sp = space
+                    .as_ref()
+                    .ok_or(ParseError {
+                        line: ln,
+                        msg: "space must be declared before equations".into(),
+                    })?
+                    .clone();
+                let eq = parse_eq(ln, rest, sp.dims(), &vars, &arrays)?;
+                eqs.push(eq);
+            }
+            other => return err(ln, format!("unknown keyword {other}")),
+        }
+    }
+
+    let space = space.ok_or(ParseError {
+        line: 0,
+        msg: "missing space declaration".into(),
+    })?;
+    let pra = Pra {
+        name,
+        dtype,
+        space,
+        vars,
+        arrays,
+        eqs,
+    };
+    pra.validate().map_err(|msg| ParseError { line: 0, msg })?;
+    Ok(pra)
+}
+
+/// Parse `NAME: target = rhs [if cond]`.
+fn parse_eq(
+    ln: usize,
+    s: &str,
+    dims: usize,
+    vars: &[String],
+    arrays: &[super::loopnest::ArrayDecl],
+) -> Result<Equation, ParseError> {
+    let (ename, rest) = match s.split_once(':') {
+        Some((n, r)) => (n.trim().to_string(), r.trim()),
+        None => (format!("S{ln}"), s),
+    };
+    let (def, cond_s) = match rest.split_once(" if ") {
+        Some((d, c)) => (d.trim(), Some(c.trim())),
+        None => (rest, None),
+    };
+    let (lhs, rhs) = def
+        .split_once('=')
+        .ok_or(ParseError {
+            line: ln,
+            msg: "equation wants `lhs = rhs`".into(),
+        })
+        .map(|(l, r)| (l.trim(), r.trim()))?;
+
+    // --- left-hand side: `var[i]`, `var[i0, i1-1, …]` or `Array[exprs]`
+    let (tname, tidx) = parse_access(ln, lhs)?;
+    let var = vars.iter().position(|v| *v == tname);
+    let array = arrays.iter().position(|a| a.name == tname);
+
+    // --- right-hand side: `arg`, `arg OP arg`
+    let (op, args_s) = split_rhs(rhs);
+    let mut args = Vec::new();
+    for a in args_s {
+        args.push(parse_arg(ln, a, dims, vars, arrays)?);
+    }
+
+    // --- condition
+    let cond = match cond_s {
+        Some(c) => parse_cond(ln, c, dims)?,
+        None => CondSpace::all(),
+    };
+
+    if let Some(v) = var {
+        // internal definition must be the identity `x[i]`
+        if tidx != IdxKind::Identity {
+            return err(ln, "internal variable definitions must be `x[i]`");
+        }
+        Ok(Equation {
+            name: ename,
+            var: Some(v),
+            output: None,
+            op,
+            args,
+            cond,
+        })
+    } else if let Some(a) = array {
+        let map = match tidx {
+            IdxKind::Exprs(terms) => affine_map_from_terms(ln, &terms, dims)?,
+            IdxKind::Identity => AffineMap::identity(dims),
+        };
+        Ok(Equation {
+            name: ename,
+            var: None,
+            output: Some((a, map)),
+            op,
+            args,
+            cond,
+        })
+    } else {
+        err(ln, format!("unknown definition target {tname}"))
+    }
+}
+
+/// An index term: `coeff-on-dim` pairs + constant (only `i_k ± c` or `c`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct IdxTerm {
+    dim: Option<usize>,
+    c: i64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum IdxKind {
+    /// the literal `[i]`
+    Identity,
+    Exprs(Vec<IdxTerm>),
+}
+
+/// Parse `name[terms]` into name + index kind.
+fn parse_access(ln: usize, s: &str) -> Result<(String, IdxKind), ParseError> {
+    let open = s.find('[').ok_or(ParseError {
+        line: ln,
+        msg: format!("expected `name[...]`, got `{s}`"),
+    })?;
+    if !s.ends_with(']') {
+        return err(ln, format!("unterminated index in `{s}`"));
+    }
+    let name = s[..open].trim().to_string();
+    let inner = &s[open + 1..s.len() - 1];
+    if inner.trim() == "i" {
+        return Ok((name, IdxKind::Identity));
+    }
+    let mut terms = Vec::new();
+    for t in inner.split(',') {
+        terms.push(parse_idx_term(ln, t.trim())?);
+    }
+    Ok((name, IdxKind::Exprs(terms)))
+}
+
+/// Parse one index term: `i2`, `i2-1`, `i2+3`, or `5`.
+fn parse_idx_term(ln: usize, t: &str) -> Result<IdxTerm, ParseError> {
+    if let Ok(c) = t.parse::<i64>() {
+        return Ok(IdxTerm { dim: None, c });
+    }
+    let t = t.replace(' ', "");
+    if let Some(rest) = t.strip_prefix('i') {
+        // find +/- split
+        let split = rest.find(['+', '-']);
+        let (dim_s, c) = match split {
+            Some(p) => {
+                let (d, tail) = rest.split_at(p);
+                let c: i64 = tail.parse().map_err(|_| ParseError {
+                    line: ln,
+                    msg: format!("bad index offset in `{t}`"),
+                })?;
+                (d, c)
+            }
+            None => (rest, 0),
+        };
+        let dim: usize = dim_s.parse().map_err(|_| ParseError {
+            line: ln,
+            msg: format!("bad index var in `{t}`"),
+        })?;
+        return Ok(IdxTerm { dim: Some(dim), c });
+    }
+    err(ln, format!("cannot parse index term `{t}`"))
+}
+
+fn affine_map_from_terms(
+    ln: usize,
+    terms: &[IdxTerm],
+    dims: usize,
+) -> Result<AffineMap, ParseError> {
+    let mut mat = Vec::new();
+    let mut off = Vec::new();
+    for t in terms {
+        let mut row = vec![0i64; dims];
+        if let Some(d) = t.dim {
+            if d >= dims {
+                return err(ln, format!("index dim i{d} out of range"));
+            }
+            row[d] = 1;
+        }
+        mat.push(row);
+        off.push(t.c);
+    }
+    Ok(AffineMap::new(mat, off))
+}
+
+/// Split an RHS into op + argument strings: `a * b`, `a + b`, or `a`.
+fn split_rhs(rhs: &str) -> (OpKind, Vec<&str>) {
+    // scan at depth 0 (outside brackets) for a binary operator
+    let bytes = rhs.as_bytes();
+    let mut depth = 0i32;
+    for (p, &b) in bytes.iter().enumerate() {
+        match b {
+            b'[' => depth += 1,
+            b']' => depth -= 1,
+            b'*' | b'/' | b'+' if depth == 0 && p > 0 => {
+                let op = match b {
+                    b'*' => OpKind::Mul,
+                    b'/' => OpKind::Div,
+                    _ => OpKind::Add,
+                };
+                return (op, vec![rhs[..p].trim(), rhs[p + 1..].trim()]);
+            }
+            b'-' if depth == 0 && p > 0 && bytes[p - 1] == b' ' => {
+                return (OpKind::Sub, vec![rhs[..p].trim(), rhs[p + 1..].trim()]);
+            }
+            _ => {}
+        }
+    }
+    (OpKind::Mov, vec![rhs.trim()])
+}
+
+fn parse_arg(
+    ln: usize,
+    s: &str,
+    dims: usize,
+    vars: &[String],
+    arrays: &[super::loopnest::ArrayDecl],
+) -> Result<Arg, ParseError> {
+    if let Ok(c) = s.parse::<i64>() {
+        return Ok(Arg::Const(c));
+    }
+    let (name, idx) = parse_access(ln, s)?;
+    if let Some(var) = vars.iter().position(|v| *v == name) {
+        let d = match idx {
+            IdxKind::Identity => vec![0; dims],
+            IdxKind::Exprs(terms) => {
+                if terms.len() != dims {
+                    return err(ln, format!("var read `{s}` wants {dims} indices"));
+                }
+                let mut d = vec![0i64; dims];
+                for (k, t) in terms.iter().enumerate() {
+                    match t.dim {
+                        Some(dd) if dd == k => d[k] = -t.c, // i_k - c  => distance c
+                        _ => {
+                            return err(
+                                ln,
+                                format!(
+                                    "internal var read `{s}` must be a translation \
+                                     (i{k} ± c at position {k})"
+                                ),
+                            )
+                        }
+                    }
+                }
+                d
+            }
+        };
+        return Ok(Arg::Var { var, d });
+    }
+    if let Some(array) = arrays.iter().position(|a| a.name == name) {
+        let map = match idx {
+            IdxKind::Identity => AffineMap::identity(dims),
+            IdxKind::Exprs(terms) => affine_map_from_terms(ln, &terms, dims)?,
+        };
+        return Ok(Arg::Input { array, map });
+    }
+    err(ln, format!("unknown identifier `{name}`"))
+}
+
+/// Parse `c1 and c2 …` into a [`CondSpace`].
+fn parse_cond(ln: usize, s: &str, dims: usize) -> Result<CondSpace, ParseError> {
+    let mut cond = CondSpace::all();
+    for part in s.split(" and ") {
+        let part = part.trim();
+        let (lhs, op, rhs) = split_cmp(ln, part)?;
+        let rhs_v: i64 = rhs.trim().parse().map_err(|_| ParseError {
+            line: ln,
+            msg: format!("condition rhs must be an integer in `{part}`"),
+        })?;
+        // lhs: `iK` or `iA - iB`
+        let coeffs = parse_lin(ln, lhs.trim(), dims)?;
+        let cs = match op {
+            "==" => CondSpace {
+                constraints: vec![
+                    Constraint {
+                        coeffs: coeffs.clone(),
+                        rhs: rhs_v,
+                    },
+                    Constraint {
+                        coeffs: coeffs.iter().map(|&c| -c).collect(),
+                        rhs: -rhs_v,
+                    },
+                ],
+            },
+            ">=" => CondSpace {
+                constraints: vec![Constraint {
+                    coeffs,
+                    rhs: rhs_v,
+                }],
+            },
+            "<=" => CondSpace {
+                constraints: vec![Constraint {
+                    coeffs: coeffs.iter().map(|&c| -c).collect(),
+                    rhs: -rhs_v,
+                }],
+            },
+            ">" => CondSpace {
+                constraints: vec![Constraint {
+                    coeffs,
+                    rhs: rhs_v + 1,
+                }],
+            },
+            "<" => CondSpace {
+                constraints: vec![Constraint {
+                    coeffs: coeffs.iter().map(|&c| -c).collect(),
+                    rhs: -(rhs_v - 1),
+                }],
+            },
+            _ => unreachable!(),
+        };
+        cond = cond.and(cs);
+    }
+    Ok(cond)
+}
+
+fn split_cmp<'a>(ln: usize, s: &'a str) -> Result<(&'a str, &'a str, &'a str), ParseError> {
+    for op in ["==", ">=", "<=", ">", "<"] {
+        if let Some(p) = s.find(op) {
+            return Ok((&s[..p], op, &s[p + op.len()..]));
+        }
+    }
+    err(ln, format!("no comparison operator in `{s}`"))
+}
+
+/// Parse `iK` or `iA - iB` / `iA + iB` into a coefficient vector.
+fn parse_lin(ln: usize, s: &str, dims: usize) -> Result<IVec, ParseError> {
+    let mut coeffs = vec![0i64; dims];
+    let s = s.replace(' ', "");
+    let mut sign = 1i64;
+    let mut cur = String::new();
+    let flush = |cur: &mut String, sign: i64, coeffs: &mut IVec| -> Result<(), ParseError> {
+        if cur.is_empty() {
+            return Ok(());
+        }
+        let t = std::mem::take(cur);
+        let d: usize = t
+            .strip_prefix('i')
+            .and_then(|x| x.parse().ok())
+            .ok_or(ParseError {
+                line: ln,
+                msg: format!("bad term `{t}` in condition"),
+            })?;
+        if d >= dims {
+            return err(ln, format!("dim i{d} out of range"));
+        }
+        coeffs[d] += sign;
+        Ok(())
+    };
+    for ch in s.chars() {
+        match ch {
+            '+' => {
+                flush(&mut cur, sign, &mut coeffs)?;
+                sign = 1;
+            }
+            '-' => {
+                flush(&mut cur, sign, &mut coeffs)?;
+                sign = -1;
+            }
+            c => cur.push(c),
+        }
+    }
+    flush(&mut cur, sign, &mut coeffs)?;
+    Ok(coeffs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::loopnest::ArrayData;
+    use crate::ir::op::Value;
+
+    const GEMM_SRC: &str = r#"
+program gemm
+dtype i32
+space 4 4 4
+var a
+var b
+var p
+var c
+input  A 4 4
+input  B 4 4
+output C 4 4
+eq S1a: a[i] = A[i0, i2]            if i1 == 0
+eq S1b: a[i] = a[i0, i1-1, i2]      if i1 >= 1
+eq S2a: b[i] = B[i2, i1]            if i0 == 0
+eq S2b: b[i] = b[i0-1, i1, i2]      if i0 >= 1
+eq S3:  p[i] = a[i] * b[i]
+eq S4a: c[i] = p[i]                 if i2 == 0
+eq S4b: c[i] = c[i0, i1, i2-1] + p[i] if i2 >= 1
+eq S5C: C[i0, i1] = c[i]            if i2 == 3
+"#;
+
+    fn iota(n: usize, base: i64) -> Vec<Value> {
+        (0..n).map(|i| Value::I32((base + i as i64) as i32)).collect()
+    }
+
+    #[test]
+    fn parses_listing1_gemm() {
+        let pra = parse(GEMM_SRC).expect("parse");
+        assert_eq!(pra.name, "gemm");
+        assert_eq!(pra.vars.len(), 4);
+        assert_eq!(pra.eqs.len(), 8);
+        assert_eq!(pra.space.extents, vec![4, 4, 4]);
+    }
+
+    #[test]
+    fn parsed_gemm_executes_like_builder_version() {
+        let pra = parse(GEMM_SRC).unwrap();
+        let n = 4usize;
+        let mut inputs = ArrayData::new();
+        inputs.insert("A".into(), iota(n * n, 1));
+        inputs.insert("B".into(), iota(n * n, 2));
+        let out = pra.execute(&inputs);
+        let c = &out["C"];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0i64;
+                for k in 0..n {
+                    acc += (1 + (i * n + k) as i64) * (2 + (k * n + j) as i64);
+                }
+                assert_eq!(c[i * n + j], Value::I32(acc as i32));
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_identifier() {
+        let src = "program x\nspace 2\nvar a\neq e: a[i] = zz[i]\n";
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_space() {
+        let src = "program x\nvar a\neq e: a[i] = 1\n";
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn parses_triangular_condition() {
+        let src = "program t\nspace 4 4\nvar x\neq a: x[i] = 1 if i0 - i1 >= 1\neq b: x[i] = 2 if i0 - i1 <= 0\n";
+        let pra = parse(src).unwrap();
+        assert!(pra.eqs[0].cond.contains(&[2, 1]));
+        assert!(!pra.eqs[0].cond.contains(&[1, 1]));
+        assert!(pra.eqs[1].cond.contains(&[1, 1]));
+    }
+
+    #[test]
+    fn subtraction_rhs() {
+        let src = "program s\nspace 2 2\nvar x\nvar y\neq a: x[i] = 5\neq b: y[i] = x[i] - 1\n";
+        let pra = parse(src).unwrap();
+        assert_eq!(pra.eqs[1].op, OpKind::Sub);
+    }
+}

@@ -1,0 +1,534 @@
+//! Piecewise Regular Algorithms (paper §III-B).
+//!
+//! A PRA describes an n-dimensional loop nest as a set of quantized equations
+//!
+//! ```text
+//! S_i : x_i[i + f_i] = F_i(…, y_{i,j}[i − d_{i,j}], …)   if i ∈ I_i
+//! ```
+//!
+//! over an iteration space `I ⊆ ℤⁿ`. Internal variables are restricted to
+//! pure translations (identity indexing matrices); input/output variables may
+//! use general affine indexing (`Q·i − d` / `P·i + f`).
+//!
+//! This module provides the IR, a single-assignment-checking interpreter
+//! (the TCPA-side semantic reference) and dependence extraction, which feeds
+//! the LSGP partitioner and the scheduler.
+
+use std::collections::BTreeMap;
+
+use super::affine::{vsub, AffineMap, IVec};
+use super::loopnest::{ArrayData, ArrayDecl, ArrayKind};
+use super::op::{Dtype, OpKind, Value};
+use super::space::{CondSpace, RectSpace};
+
+/// Index of an internal PRA variable.
+pub type VarId = usize;
+/// Index of an external array.
+pub type ArrayId = usize;
+/// Index of an equation.
+pub type EqId = usize;
+
+/// An argument of an equation's right-hand side.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    /// Internal variable read `y[i − d]` (pure translation by PRA rules).
+    Var { var: VarId, d: IVec },
+    /// Input array read `A[Q·i + f]` (general affine indexing).
+    Input { array: ArrayId, map: AffineMap },
+    /// An immediate constant.
+    Const(i64),
+}
+
+/// One quantized equation.
+#[derive(Debug, Clone)]
+pub struct Equation {
+    pub name: String,
+    /// The defined internal variable (`x_i`), or `None` when the equation
+    /// writes an output array instead.
+    pub var: Option<VarId>,
+    /// Output array target `X[P·i + f]` (paper's `X_out` case).
+    pub output: Option<(ArrayId, AffineMap)>,
+    /// The function `F_i`. `Mov` expresses identity/propagation.
+    pub op: OpKind,
+    pub args: Vec<Arg>,
+    /// The condition space `I_i` restricting where the equation applies.
+    pub cond: CondSpace,
+}
+
+impl Equation {
+    /// Dependence distances on internal variables used by this equation.
+    pub fn var_reads(&self) -> impl Iterator<Item = (VarId, &IVec)> {
+        self.args.iter().filter_map(|a| match a {
+            Arg::Var { var, d } => Some((*var, d)),
+            _ => None,
+        })
+    }
+}
+
+/// A complete PRA.
+#[derive(Debug, Clone)]
+pub struct Pra {
+    pub name: String,
+    pub dtype: Dtype,
+    pub space: RectSpace,
+    /// Internal variable names (`X_var`).
+    pub vars: Vec<String>,
+    /// External arrays (inputs `X_in` and outputs `X_out`).
+    pub arrays: Vec<ArrayDecl>,
+    /// Equations in definition order (order is irrelevant semantically —
+    /// single assignment — but used as a stable id).
+    pub eqs: Vec<Equation>,
+}
+
+/// A uniform dependence between two equations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dependence {
+    /// Producing equation (defines `var`).
+    pub from: EqId,
+    /// Consuming equation.
+    pub to: EqId,
+    pub var: VarId,
+    /// Distance vector `d ≥ 0` (consumer at `i` reads producer at `i − d`).
+    pub d: IVec,
+}
+
+impl Dependence {
+    pub fn is_intra_iteration(&self) -> bool {
+        self.d.iter().all(|&x| x == 0)
+    }
+}
+
+impl Pra {
+    pub fn dims(&self) -> usize {
+        self.space.dims()
+    }
+
+    pub fn var_id(&self, name: &str) -> Option<VarId> {
+        self.vars.iter().position(|v| v == name)
+    }
+
+    pub fn array_id(&self, name: &str) -> Option<ArrayId> {
+        self.arrays.iter().position(|a| a.name == name)
+    }
+
+    /// Equations defining a given internal variable.
+    pub fn defs_of(&self, var: VarId) -> Vec<EqId> {
+        self.eqs
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.var == Some(var))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Extract all uniform dependences between equations. A consumer reading
+    /// `y[i − d]` depends on *every* equation defining `y` (the applicable
+    /// one is resolved per iteration by the condition spaces; for scheduling
+    /// the worst case over definitions is what matters).
+    pub fn dependences(&self) -> Vec<Dependence> {
+        let mut out = Vec::new();
+        for (to, eq) in self.eqs.iter().enumerate() {
+            for (var, d) in eq.var_reads() {
+                for from in self.defs_of(var) {
+                    out.push(Dependence {
+                        from,
+                        to,
+                        var,
+                        d: d.clone(),
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Validate PRA well-formedness: non-negative dependence distances
+    /// (lexicographic executability), argument arity, and index bounds.
+    pub fn validate(&self) -> Result<(), String> {
+        for (id, eq) in self.eqs.iter().enumerate() {
+            if eq.var.is_none() && eq.output.is_none() {
+                return Err(format!("eq {id} ({}) defines nothing", eq.name));
+            }
+            if eq.var.is_some() && eq.output.is_some() {
+                return Err(format!(
+                    "eq {id} ({}) defines both a variable and an output",
+                    eq.name
+                ));
+            }
+            let arity = eq.op.arity();
+            if eq.op != OpKind::Mov && eq.args.len() != arity {
+                return Err(format!(
+                    "eq {id} ({}): op {} wants {} args, got {}",
+                    eq.name,
+                    eq.op,
+                    arity,
+                    eq.args.len()
+                ));
+            }
+            for arg in &eq.args {
+                if let Arg::Var { d, var } = arg {
+                    if d.len() != self.dims() {
+                        return Err(format!(
+                            "eq {id} ({}): distance {:?} has wrong dims",
+                            eq.name, d
+                        ));
+                    }
+                    if d.iter().any(|&x| x < 0) {
+                        return Err(format!(
+                            "eq {id} ({}): negative dependence distance {:?} on {}",
+                            eq.name, d, self.vars[*var]
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Single-assignment interpreter: evaluate every iteration in
+    /// lexicographic order, resolving condition spaces, and return the output
+    /// arrays. Panics on double definition or read-before-write — both
+    /// indicate an ill-formed PRA.
+    pub fn execute(&self, inputs: &ArrayData) -> ArrayData {
+        let size = self.space.size() as usize;
+        // vals[var][rank] = Option<Value>
+        let mut vals: Vec<Vec<Option<Value>>> = self
+            .vars
+            .iter()
+            .map(|_| vec![None; size])
+            .collect();
+        let mut arrays: Vec<Vec<Value>> = self
+            .arrays
+            .iter()
+            .map(|a| match inputs.get(&a.name) {
+                Some(data) => {
+                    assert_eq!(data.len(), a.len(), "input {} wrong length", a.name);
+                    data.clone()
+                }
+                None => vec![self.dtype.zero(); a.len()],
+            })
+            .collect();
+
+        for i in self.space.points() {
+            let rank = self.space.rank(&i) as usize;
+            for eq in &self.eqs {
+                if !eq.cond.contains(&i) {
+                    continue;
+                }
+                let argv: Vec<Value> = eq
+                    .args
+                    .iter()
+                    .map(|a| self.eval_arg(a, &i, &vals, &arrays))
+                    .collect();
+                let v = match eq.op {
+                    OpKind::Mov => argv[0],
+                    op => Value::apply(op, &argv),
+                };
+                if let Some(var) = eq.var {
+                    assert!(
+                        vals[var][rank].is_none(),
+                        "double assignment of {} at {:?} (eq {})",
+                        self.vars[var],
+                        i,
+                        eq.name
+                    );
+                    vals[var][rank] = Some(v);
+                }
+                if let Some((arr, map)) = &eq.output {
+                    let idx = map.apply(&i);
+                    let addr = self.arrays[*arr].linearize(&idx);
+                    arrays[*arr][addr] = v;
+                }
+            }
+        }
+
+        self.arrays
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| matches!(a.kind, ArrayKind::Output | ArrayKind::InOut))
+            .map(|(id, a)| (a.name.clone(), arrays[id].clone()))
+            .collect()
+    }
+
+    fn eval_arg(
+        &self,
+        arg: &Arg,
+        i: &[i64],
+        vals: &[Vec<Option<Value>>],
+        arrays: &[Vec<Value>],
+    ) -> Value {
+        match arg {
+            Arg::Const(c) => self.dtype.from_i64(*c),
+            Arg::Input { array, map } => {
+                let idx = map.apply(i);
+                arrays[*array][self.arrays[*array].linearize(&idx)]
+            }
+            Arg::Var { var, d } => {
+                let src = vsub(i, d);
+                assert!(
+                    self.space.contains(&src),
+                    "read of {}[{:?}] outside space at i={:?}",
+                    self.vars[*var],
+                    src,
+                    i
+                );
+                let rank = self.space.rank(&src) as usize;
+                vals[*var][rank].unwrap_or_else(|| {
+                    panic!(
+                        "read-before-write of {} at {:?} (from {:?})",
+                        self.vars[*var], src, i
+                    )
+                })
+            }
+        }
+    }
+
+    /// Count of *compute* equations (op ≠ Mov) — the paper's "#op." column
+    /// for TURTLE counts the operations within one iteration, including
+    /// propagation moves; we expose both.
+    pub fn op_counts(&self) -> BTreeMap<OpKind, usize> {
+        let mut m = BTreeMap::new();
+        for eq in &self.eqs {
+            *m.entry(eq.op).or_insert(0) += 1;
+        }
+        m
+    }
+}
+
+/// Builder for PRAs (used by the workload suite; the PAULA parser produces
+/// the same structure from text).
+pub struct PraBuilder {
+    pra: Pra,
+}
+
+impl PraBuilder {
+    pub fn new(name: &str, dtype: Dtype, extents: IVec) -> Self {
+        PraBuilder {
+            pra: Pra {
+                name: name.to_string(),
+                dtype,
+                space: RectSpace::new(extents),
+                vars: Vec::new(),
+                arrays: Vec::new(),
+                eqs: Vec::new(),
+            },
+        }
+    }
+
+    pub fn var(mut self, name: &str) -> Self {
+        assert!(self.pra.var_id(name).is_none(), "duplicate var {name}");
+        self.pra.vars.push(name.to_string());
+        self
+    }
+
+    pub fn array(mut self, name: &str, shape: Vec<i64>, kind: ArrayKind) -> Self {
+        self.pra.arrays.push(ArrayDecl {
+            name: name.to_string(),
+            shape,
+            kind,
+        });
+        self
+    }
+
+    /// `var[i] = op(args) if cond`.
+    pub fn eq(
+        mut self,
+        name: &str,
+        var: &str,
+        op: OpKind,
+        args: Vec<Arg>,
+        cond: CondSpace,
+    ) -> Self {
+        let v = self
+            .pra
+            .var_id(var)
+            .unwrap_or_else(|| panic!("unknown var {var}"));
+        self.pra.eqs.push(Equation {
+            name: name.to_string(),
+            var: Some(v),
+            output: None,
+            op,
+            args,
+            cond,
+        });
+        self
+    }
+
+    /// `OutArray[map(i)] = op(args) if cond`.
+    pub fn out_eq(
+        mut self,
+        name: &str,
+        array: &str,
+        map: AffineMap,
+        op: OpKind,
+        args: Vec<Arg>,
+        cond: CondSpace,
+    ) -> Self {
+        let a = self
+            .pra
+            .array_id(array)
+            .unwrap_or_else(|| panic!("unknown array {array}"));
+        self.pra.eqs.push(Equation {
+            name: name.to_string(),
+            var: None,
+            output: Some((a, map)),
+            op,
+            args,
+            cond,
+        });
+        self
+    }
+
+    /// Shorthand: read internal var at distance d.
+    pub fn v(&self, name: &str, d: IVec) -> Arg {
+        let var = self
+            .pra
+            .var_id(name)
+            .unwrap_or_else(|| panic!("unknown var {name}"));
+        Arg::Var { var, d }
+    }
+
+    /// Shorthand: read internal var at the current iteration.
+    pub fn v0(&self, name: &str) -> Arg {
+        self.v(name, vec![0; self.pra.dims()])
+    }
+
+    /// Shorthand: input array read through an affine map.
+    pub fn input(&self, name: &str, map: AffineMap) -> Arg {
+        let array = self
+            .pra
+            .array_id(name)
+            .unwrap_or_else(|| panic!("unknown array {name}"));
+        Arg::Input { array, map }
+    }
+
+    pub fn finish(self) -> Pra {
+        self.pra.validate().expect("PRA validation failed");
+        self.pra
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::affine::AffineMap;
+    use crate::ir::space::CondSpace;
+
+    /// The paper's Figure 3 GEMM PRA (without +C term): C = A·B.
+    pub fn matmul_pra(n: i64) -> Pra {
+        let b = PraBuilder::new("matmul", Dtype::I32, vec![n, n, n])
+            .var("a")
+            .var("b")
+            .var("p")
+            .var("c")
+            .array("A", vec![n, n], ArrayKind::Input)
+            .array("B", vec![n, n], ArrayKind::Input)
+            .array("C", vec![n, n], ArrayKind::Output);
+        let a_in = b.input("A", AffineMap::select_dims(3, &[0, 2]));
+        let b_in = b.input("B", AffineMap::select_dims(3, &[2, 1]));
+        let a_prop = b.v("a", vec![0, 1, 0]);
+        let b_prop = b.v("b", vec![1, 0, 0]);
+        let a0 = b.v0("a");
+        let b0 = b.v0("b");
+        let p0 = b.v0("p");
+        let p0b = b.v0("p");
+        let c_prev = b.v("c", vec![0, 0, 1]);
+        let c_out = b.v0("c");
+        b.eq("S1a", "a", OpKind::Mov, vec![a_in], CondSpace::dim_eq(3, 1, 0))
+            .eq(
+                "S1b",
+                "a",
+                OpKind::Mov,
+                vec![a_prop],
+                CondSpace::dim_ge(3, 1, 1),
+            )
+            .eq("S2a", "b", OpKind::Mov, vec![b_in], CondSpace::dim_eq(3, 0, 0))
+            .eq(
+                "S2b",
+                "b",
+                OpKind::Mov,
+                vec![b_prop],
+                CondSpace::dim_ge(3, 0, 1),
+            )
+            .eq("S3", "p", OpKind::Mul, vec![a0, b0], CondSpace::all())
+            .eq("S4a", "c", OpKind::Mov, vec![p0], CondSpace::dim_eq(3, 2, 0))
+            .eq(
+                "S4b",
+                "c",
+                OpKind::Add,
+                vec![c_prev, p0b],
+                CondSpace::dim_ge(3, 2, 1),
+            )
+            .out_eq(
+                "S5C",
+                "C",
+                AffineMap::select_dims(3, &[0, 1]),
+                OpKind::Mov,
+                vec![c_out],
+                CondSpace::dim_eq(3, 2, n - 1),
+            )
+            .finish()
+    }
+
+    fn iota(n: usize, base: i64) -> Vec<Value> {
+        (0..n).map(|i| Value::I32((base + i as i64) as i32)).collect()
+    }
+
+    #[test]
+    fn matmul_pra_executes_correctly() {
+        let n = 4usize;
+        let pra = matmul_pra(n as i64);
+        let mut inputs = ArrayData::new();
+        inputs.insert("A".into(), iota(n * n, 1));
+        inputs.insert("B".into(), iota(n * n, 2));
+        let out = pra.execute(&inputs);
+        let c = &out["C"];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0i64;
+                for k in 0..n {
+                    acc += (1 + (i * n + k) as i64) * (2 + (k * n + j) as i64);
+                }
+                assert_eq!(c[i * n + j], Value::I32(acc as i32), "C[{i}][{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn dependences_extracted() {
+        let pra = matmul_pra(4);
+        let deps = pra.dependences();
+        // c accumulation dependence exists with d = (0,0,1)
+        assert!(deps
+            .iter()
+            .any(|d| d.d == vec![0, 0, 1] && pra.vars[d.var] == "c"));
+        // a propagation along i1
+        assert!(deps
+            .iter()
+            .any(|d| d.d == vec![0, 1, 0] && pra.vars[d.var] == "a"));
+        // intra-iteration deps from p to c
+        assert!(deps
+            .iter()
+            .any(|d| d.is_intra_iteration() && pra.vars[d.var] == "p"));
+    }
+
+    #[test]
+    fn validate_rejects_negative_distance() {
+        let b = PraBuilder::new("bad", Dtype::I32, vec![4]).var("x");
+        let arg = b.v("x", vec![-1]);
+        let pra_builder = b.eq("e", "x", OpKind::Mov, vec![arg], CondSpace::all());
+        assert!(pra_builder.pra.validate().is_err());
+    }
+
+    #[test]
+    fn op_counts() {
+        let pra = matmul_pra(4);
+        let counts = pra.op_counts();
+        // S1a, S1b, S2a, S2b, S4a, S5C are Mov
+        assert_eq!(counts[&OpKind::Mov], 6);
+        let total: usize = counts.values().sum();
+        assert_eq!(total, 8);
+        assert_eq!(counts[&OpKind::Mul], 1);
+        assert_eq!(counts[&OpKind::Add], 1);
+    }
+}

@@ -1,0 +1,258 @@
+//! Iteration spaces and condition spaces.
+//!
+//! The TCPA stack works on an n-dimensional *rectangular* iteration space
+//! `I = {i | 0 ≤ i_k < extent_k}` (paper §III-B assumes polyhedral spaces;
+//! every benchmark in the evaluation is rectangular, with triangular behaviour
+//! expressed through condition spaces). Each PRA equation carries a
+//! *condition space* `I_i = {i | A·i ≥ b}` restricting where it applies.
+
+use super::affine::{dot, IVec};
+
+/// A rectangular iteration space `0 ≤ i_k < extents[k]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RectSpace {
+    pub extents: IVec,
+}
+
+impl RectSpace {
+    pub fn new(extents: IVec) -> Self {
+        assert!(
+            extents.iter().all(|&e| e > 0),
+            "RectSpace extents must be positive, got {:?}",
+            extents
+        );
+        RectSpace { extents }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.extents.len()
+    }
+
+    /// Total number of iterations.
+    pub fn size(&self) -> u64 {
+        self.extents.iter().map(|&e| e as u64).product()
+    }
+
+    pub fn contains(&self, i: &[i64]) -> bool {
+        i.len() == self.dims()
+            && i.iter()
+                .zip(&self.extents)
+                .all(|(&x, &e)| x >= 0 && x < e)
+    }
+
+    /// Lexicographic scan of all points (outermost dim 0 slowest). This is
+    /// the same order a sequential loop nest executes and the order the TCPA
+    /// intra-tile schedule scans a tile.
+    pub fn points(&self) -> PointIter<'_> {
+        PointIter {
+            space: self,
+            cur: vec![0; self.dims()],
+            done: self.size() == 0,
+        }
+    }
+
+    /// Convert a linear index (lexicographic rank) to a point.
+    pub fn unrank(&self, mut r: u64) -> IVec {
+        let mut out = vec![0i64; self.dims()];
+        for k in (0..self.dims()).rev() {
+            let e = self.extents[k] as u64;
+            out[k] = (r % e) as i64;
+            r /= e;
+        }
+        out
+    }
+
+    /// Lexicographic rank of a point.
+    pub fn rank(&self, i: &[i64]) -> u64 {
+        debug_assert!(self.contains(i));
+        let mut r = 0u64;
+        for k in 0..self.dims() {
+            r = r * self.extents[k] as u64 + i[k] as u64;
+        }
+        r
+    }
+}
+
+/// Iterator over the points of a [`RectSpace`] in lexicographic order.
+pub struct PointIter<'a> {
+    space: &'a RectSpace,
+    cur: IVec,
+    done: bool,
+}
+
+impl<'a> Iterator for PointIter<'a> {
+    type Item = IVec;
+
+    fn next(&mut self) -> Option<IVec> {
+        if self.done {
+            return None;
+        }
+        let out = self.cur.clone();
+        // Advance odometer from the innermost dimension.
+        let n = self.space.dims();
+        let mut k = n;
+        while k > 0 {
+            k -= 1;
+            self.cur[k] += 1;
+            if self.cur[k] < self.space.extents[k] {
+                break;
+            }
+            self.cur[k] = 0;
+            if k == 0 {
+                self.done = true;
+            }
+        }
+        if n == 0 {
+            self.done = true;
+        }
+        Some(out)
+    }
+}
+
+/// One linear constraint `coeffs · i ≥ rhs`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Constraint {
+    pub coeffs: IVec,
+    pub rhs: i64,
+}
+
+impl Constraint {
+    pub fn holds(&self, i: &[i64]) -> bool {
+        dot(&self.coeffs, i) >= self.rhs
+    }
+}
+
+/// A condition space `I_i = {i | A·i ≥ b}` (conjunction of constraints).
+/// The empty conjunction is the whole space.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CondSpace {
+    pub constraints: Vec<Constraint>,
+}
+
+impl CondSpace {
+    /// The unrestricted condition space (always true).
+    pub fn all() -> Self {
+        CondSpace {
+            constraints: Vec::new(),
+        }
+    }
+
+    /// `i_k == c` (as two inequalities).
+    pub fn dim_eq(n: usize, k: usize, c: i64) -> Self {
+        let mut pos = vec![0i64; n];
+        pos[k] = 1;
+        let neg: IVec = pos.iter().map(|&v| -v).collect();
+        CondSpace {
+            constraints: vec![
+                Constraint {
+                    coeffs: pos,
+                    rhs: c,
+                },
+                Constraint {
+                    coeffs: neg,
+                    rhs: -c,
+                },
+            ],
+        }
+    }
+
+    /// `i_k >= c`.
+    pub fn dim_ge(n: usize, k: usize, c: i64) -> Self {
+        let mut coeffs = vec![0i64; n];
+        coeffs[k] = 1;
+        CondSpace {
+            constraints: vec![Constraint { coeffs, rhs: c }],
+        }
+    }
+
+    /// `i_k <= c`.
+    pub fn dim_le(n: usize, k: usize, c: i64) -> Self {
+        let mut coeffs = vec![0i64; n];
+        coeffs[k] = -1;
+        CondSpace {
+            constraints: vec![Constraint { coeffs, rhs: -c }],
+        }
+    }
+
+    /// `i_a - i_b >= c`  (e.g. triangular conditions `i0 > i1`).
+    pub fn diff_ge(n: usize, a: usize, b: usize, c: i64) -> Self {
+        let mut coeffs = vec![0i64; n];
+        coeffs[a] = 1;
+        coeffs[b] = -1;
+        CondSpace {
+            constraints: vec![Constraint { coeffs, rhs: c }],
+        }
+    }
+
+    /// Conjunction of two condition spaces.
+    pub fn and(mut self, other: CondSpace) -> Self {
+        self.constraints.extend(other.constraints);
+        self
+    }
+
+    pub fn contains(&self, i: &[i64]) -> bool {
+        self.constraints.iter().all(|c| c.holds(i))
+    }
+
+    pub fn is_unrestricted(&self) -> bool {
+        self.constraints.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_space_size_and_contains() {
+        let s = RectSpace::new(vec![2, 3, 4]);
+        assert_eq!(s.size(), 24);
+        assert!(s.contains(&[1, 2, 3]));
+        assert!(!s.contains(&[2, 0, 0]));
+        assert!(!s.contains(&[0, -1, 0]));
+    }
+
+    #[test]
+    fn points_lexicographic_and_complete() {
+        let s = RectSpace::new(vec![2, 3]);
+        let pts: Vec<IVec> = s.points().collect();
+        assert_eq!(pts.len(), 6);
+        assert_eq!(pts[0], vec![0, 0]);
+        assert_eq!(pts[1], vec![0, 1]);
+        assert_eq!(pts[5], vec![1, 2]);
+        // strictly increasing lexicographically
+        for w in pts.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn rank_unrank_roundtrip() {
+        let s = RectSpace::new(vec![3, 4, 5]);
+        for (r, p) in s.points().enumerate() {
+            assert_eq!(s.rank(&p), r as u64);
+            assert_eq!(s.unrank(r as u64), p);
+        }
+    }
+
+    #[test]
+    fn cond_space_eq_and_bounds() {
+        let c = CondSpace::dim_eq(3, 1, 0);
+        assert!(c.contains(&[5, 0, 7]));
+        assert!(!c.contains(&[5, 1, 7]));
+        let ge = CondSpace::dim_ge(2, 0, 1);
+        assert!(ge.contains(&[1, 0]) && !ge.contains(&[0, 0]));
+        let le = CondSpace::dim_le(2, 0, 1);
+        assert!(le.contains(&[1, 9]) && !le.contains(&[2, 0]));
+    }
+
+    #[test]
+    fn cond_space_conjunction_and_diff() {
+        let tri = CondSpace::diff_ge(2, 0, 1, 1); // i0 - i1 >= 1, i.e. i0 > i1
+        assert!(tri.contains(&[3, 2]));
+        assert!(!tri.contains(&[2, 2]));
+        let band = CondSpace::dim_ge(2, 0, 1).and(CondSpace::dim_le(2, 0, 2));
+        assert!(band.contains(&[1, 0]) && band.contains(&[2, 0]));
+        assert!(!band.contains(&[3, 0]));
+    }
+}

@@ -1,0 +1,29 @@
+//! # repro — CGRAs vs. TCPAs: Mapping and Execution of Nested Loops on Processor Arrays
+//!
+//! A from-scratch reproduction of the paper's two loop-accelerator stacks:
+//!
+//! * **Operation-centric (CGRA)**: loop nest → data-flow graph (DFG, including
+//!   index / address / memory-access operations) → modulo-scheduled
+//!   place-and-route onto a 2-D grid of single-FU PEs → cycle-accurate
+//!   simulation ([`cgra`]).
+//! * **Iteration-centric (TCPA)**: loop nest as a Piecewise Regular Algorithm
+//!   (PRA) → LSGP tiling → linear schedule vector λ* = (λʲ, λᵏ) → register
+//!   binding (RD/FD/ID/OD/VD) → per-processor-class code generation →
+//!   cycle-accurate array simulation ([`tcpa`]).
+//!
+//! On top sit the PPA models ([`ppa`]), the PolyBench workload suite and the
+//! per-table/per-figure reproduction harness ([`bench`]), the PJRT golden-model
+//! runtime ([`runtime`]) that loads JAX/Pallas-lowered HLO artifacts, and the
+//! L3 coordinator ([`coordinator`]) that serves mapped-kernel invocations.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index.
+
+pub mod util;
+pub mod ir;
+pub mod frontend;
+pub mod cgra;
+pub mod tcpa;
+pub mod ppa;
+pub mod bench;
+pub mod runtime;
+pub mod coordinator;

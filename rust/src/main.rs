@@ -1,0 +1,147 @@
+//! `repro` — the leader entrypoint: maps/simulates benchmarks and regenerates
+//! every table and figure of the paper's evaluation.
+//!
+//! ```text
+//! repro table1                 # qualitative toolchain features (Table I)
+//! repro table2 [--quick]      # mapping results (Table II)
+//! repro table3                 # FPGA resources + power (Table III)
+//! repro fig6 [--bench gemm] [--sizes 8,12,16,20]
+//! repro fig7 [--quick]        # speedups at the paper's sizes
+//! repro fig8 [--quick]        # PE-count / unroll scaling incl. bounds
+//! repro asic                   # §V-B2/§V-C2 published-chip comparison
+//! repro validate [--bench gemm] [--n 8]   # end-to-end numeric validation
+//! repro serve [--requests 16] # coordinator demo: batched invocations
+//! repro paula <file.paula>    # compile a PAULA program onto the TCPA
+//! repro all [--quick]         # everything above, in order
+//! ```
+
+use repro::bench::harness;
+use repro::bench::workloads::BenchId;
+use repro::coordinator::{Request, Session, Target};
+use repro::ir::paula;
+use repro::tcpa::arch::TcpaArch;
+use repro::tcpa::config::compile;
+use repro::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let quick = args.flag("quick");
+    match cmd {
+        "table1" => println!("{}", harness::table1().render()),
+        "table2" => {
+            let (t, _, _) = harness::table2(&BenchId::PAPER5, 4, 4, quick);
+            println!("{}", t.render());
+        }
+        "table3" => println!("{}", harness::table3().render()),
+        "fig6" => {
+            let benches: Vec<BenchId> = match args.opt("bench") {
+                Some(b) => vec![BenchId::parse(b).expect("unknown benchmark")],
+                None => BenchId::ALL.to_vec(),
+            };
+            for id in benches {
+                let sizes: Vec<i64> = match args.opt("sizes") {
+                    Some(_) => args
+                        .opt_usize_list("sizes", &[])
+                        .into_iter()
+                        .map(|x| x as i64)
+                        .collect(),
+                    None => harness::fig6_sizes(id),
+                };
+                println!("== Fig. 6: {} ==", id.name());
+                println!("{}", harness::fig6(id, &sizes, quick).render());
+            }
+        }
+        "fig7" => println!("{}", harness::fig7(quick).render()),
+        "fig8" => println!("{}", harness::fig8(quick).render()),
+        "asic" => println!("{}", harness::asic_table().render()),
+        "validate" => {
+            let benches: Vec<BenchId> = match args.opt("bench") {
+                Some(b) => vec![BenchId::parse(b).expect("unknown benchmark")],
+                None => BenchId::ALL.to_vec(),
+            };
+            let n = args.opt_usize("n", 8) as i64;
+            for id in benches {
+                match harness::validate(id, n, 42) {
+                    Ok(lines) => {
+                        println!("[ok] {} (N={n})", id.name());
+                        for l in lines {
+                            println!("     {l}");
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("[FAIL] {} (N={n}): {e}", id.name());
+                        std::process::exit(1);
+                    }
+                }
+            }
+        }
+        "serve" => {
+            let n_req = args.opt_usize("requests", 12);
+            let (tx, rx, handle) = Session::serve();
+            let benches = [BenchId::Gemm, BenchId::Atax, BenchId::Gesummv];
+            for i in 0..n_req {
+                tx.send(Request {
+                    bench: benches[i % benches.len()],
+                    n: 8,
+                    target: if i % 2 == 0 { Target::Tcpa } else { Target::Cgra },
+                    batch: 1 + (i % 4) as u64,
+                    validate: true,
+                    seed: i as u64,
+                })
+                .unwrap();
+            }
+            for _ in 0..n_req {
+                let r = rx.recv().unwrap();
+                println!(
+                    "{:<8} {:?} batch_cycles={} validated={:?} wall={:?}{}",
+                    r.bench.name(),
+                    r.target,
+                    r.batch_cycles,
+                    r.validated,
+                    r.wall,
+                    r.error.map(|e| format!(" ERROR: {e}")).unwrap_or_default()
+                );
+            }
+            drop(tx);
+            let m = handle.join().unwrap();
+            println!("{}", m.summary());
+        }
+        "paula" => {
+            let path = args.positional.get(1).expect("usage: repro paula <file>");
+            let src = std::fs::read_to_string(path).expect("read paula file");
+            let pra = paula::parse(&src).unwrap_or_else(|e| panic!("{e}"));
+            let arch = TcpaArch::paper(
+                args.opt_usize("width", 4),
+                args.opt_usize("height", 4),
+            );
+            match compile(&pra, &arch) {
+                Ok(cfg) => println!("{}", cfg.summary()),
+                Err(e) => {
+                    eprintln!("compile failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        "all" => {
+            println!("== Table I ==\n{}", harness::table1().render());
+            let (t2, _, _) = harness::table2(&BenchId::PAPER5, 4, 4, quick);
+            println!("== Table II ==\n{}", t2.render());
+            println!("== Table III ==\n{}", harness::table3().render());
+            for id in BenchId::ALL {
+                println!("== Fig. 6: {} ==", id.name());
+                println!("{}", harness::fig6(id, &harness::fig6_sizes(id), quick).render());
+            }
+            println!("== Fig. 7 ==\n{}", harness::fig7(quick).render());
+            println!("== Fig. 8 ==\n{}", harness::fig8(quick).render());
+            println!("== ASIC ==\n{}", harness::asic_table().render());
+        }
+        _ => {
+            eprintln!(
+                "usage: repro <table1|table2|table3|fig6|fig7|fig8|asic|validate|serve|paula|all> \
+                 [--quick] [--bench NAME] [--n N] [--sizes a,b,c]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! FPGA resource model calibrated to Table III.
+//!
+//! Every component is a linear model in the architecture parameters whose
+//! constants are chosen so the paper's two reference configurations (§V-B1:
+//! generic 4×4 CGRA, 4×4 TCPA) reproduce the published LUT/FF/BRAM/DSP
+//! numbers exactly (to rounding); swept configurations (more PEs, different
+//! FU complements, larger FIFOs) extrapolate linearly, which §VI argues is
+//! the right first-order model for processor arrays.
+
+use std::collections::BTreeMap;
+use std::ops::{Add, AddAssign, Mul};
+
+use crate::cgra::arch::CgraArch;
+use crate::tcpa::arch::TcpaArch;
+
+/// An FPGA resource vector.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub lut: f64,
+    pub ff: f64,
+    pub bram: f64,
+    pub dsp: f64,
+}
+
+impl Resources {
+    pub fn new(lut: f64, ff: f64, bram: f64, dsp: f64) -> Self {
+        Resources { lut, ff, bram, dsp }
+    }
+
+    pub fn round(&self) -> (u64, u64, u64, u64) {
+        (
+            self.lut.round() as u64,
+            self.ff.round() as u64,
+            self.bram.round() as u64,
+            self.dsp.round() as u64,
+        )
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, o: Resources) -> Resources {
+        Resources::new(
+            self.lut + o.lut,
+            self.ff + o.ff,
+            self.bram + o.bram,
+            self.dsp + o.dsp,
+        )
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, o: Resources) {
+        *self = *self + o;
+    }
+}
+
+impl Mul<f64> for Resources {
+    type Output = Resources;
+    fn mul(self, k: f64) -> Resources {
+        Resources::new(self.lut * k, self.ff * k, self.bram * k, self.dsp * k)
+    }
+}
+
+/// An itemized area report (component → count × resources).
+#[derive(Debug, Clone, Default)]
+pub struct AreaReport {
+    pub items: BTreeMap<String, (usize, Resources)>,
+    pub total: Resources,
+}
+
+impl AreaReport {
+    fn add(&mut self, name: &str, count: usize, per_instance: Resources) {
+        self.items
+            .insert(name.to_string(), (count, per_instance));
+        self.total += per_instance * count as f64;
+    }
+}
+
+// ---------------------------- CGRA model ------------------------------------
+
+/// Table III, CGRA section: calibrated per-component constants.
+mod cgra_cal {
+    use super::Resources;
+    /// ALU without division (505 LUT, 102 FF, 3 DSP).
+    pub const ALU: Resources = Resources { lut: 505.0, ff: 102.0, bram: 0.0, dsp: 3.0 };
+    /// 16-cycle divider (1293 LUT, 1629 FF).
+    pub const DIVIDER: Resources = Resources { lut: 1293.0, ff: 1629.0, bram: 0.0, dsp: 0.0 };
+    /// Instruction memory + decoder per 16 configurations (400 LUT, 16 FF, 1 BRAM).
+    pub const IMEM_16: Resources = Resources { lut: 400.0, ff: 16.0, bram: 1.0, dsp: 0.0 };
+    /// Crossbar + one route register (Table III's residual: 10 registers ↔
+    /// 4 LUT + 287 FF per PE).
+    pub const ROUTE_REG: Resources = Resources { lut: 0.4, ff: 28.7, bram: 0.0, dsp: 0.0 };
+    /// Multi-bank scratchpad controller (37 LUT, 2 FF) + 1 BRAM per 4 KiB bank.
+    pub const SPM_CTRL: Resources = Resources { lut: 37.0, ff: 2.0, bram: 0.0, dsp: 0.0 };
+    pub const SPM_BANK_BRAM_PER_KW: f64 = 1.0; // 1 BRAM per 1024 words
+}
+
+/// Area of a CGRA instance.
+pub fn cgra_area(arch: &CgraArch) -> AreaReport {
+    use cgra_cal::*;
+    let mut r = AreaReport::default();
+    let mut pe = ALU;
+    if arch.supports_div {
+        pe += DIVIDER;
+    }
+    pe += IMEM_16 * (arch.instr_mem as f64 / 16.0).max(1.0).ceil();
+    pe += ROUTE_REG * arch.route_regs as f64;
+    r.add("pe", arch.n_pes(), pe);
+    let banks = arch.mem_pes().len();
+    let spm = SPM_CTRL
+        + Resources::new(
+            0.0,
+            0.0,
+            SPM_BANK_BRAM_PER_KW * (arch.spm_bank_words as f64 / 1024.0) * banks as f64,
+            0.0,
+        );
+    r.add("spm", 1, spm);
+    r
+}
+
+// ---------------------------- TCPA model ------------------------------------
+
+/// Table III, TCPA section: calibrated per-component constants.
+mod tcpa_cal {
+    use super::Resources;
+    /// Per-FU average (7 FUs ↔ 2967 LUT, 3380 FF, 7 BRAM, 3 DSP per PE).
+    /// The divider dominates like in the CGRA; the remainder spreads across
+    /// adders/multiplier/copy units and their OIP instruction pipelines.
+    pub const FU_ADD: Resources = Resources { lut: 260.0, ff: 230.0, bram: 1.0, dsp: 0.0 };
+    pub const FU_MUL: Resources = Resources { lut: 180.0, ff: 190.0, bram: 1.0, dsp: 3.0 };
+    pub const FU_DIV: Resources = Resources { lut: 1293.0, ff: 1629.0, bram: 1.0, dsp: 0.0 };
+    pub const FU_COPY: Resources = Resources { lut: 148.0, ff: 167.0, bram: 1.0, dsp: 0.0 };
+    /// Virtual-register broadcast fabric per FU (lets all FUs write any
+    /// register simultaneously — §V-B1's stated FU cost driver).
+    pub const VD_PER_FU: Resources = Resources { lut: 75.7, ff: 85.7, bram: 0.0, dsp: 0.0 };
+    /// Data register file: per addressable register + per FIFO word
+    /// (32 regs + 280 words ↔ 6000 LUT, 2947 FF, 2 BRAM).
+    pub const REG: Resources = Resources { lut: 100.0, ff: 32.0, bram: 0.0, dsp: 0.0 };
+    pub const FIFO_WORD: Resources = Resources { lut: 10.0, ff: 6.868, bram: 0.00714, dsp: 0.0 };
+    /// Control register file (645 LUT, 711 FF, 30 BRAM).
+    pub const CTRL_RF: Resources = Resources { lut: 645.0, ff: 711.0, bram: 30.0, dsp: 0.0 };
+    /// Interconnect per channel-per-neighbor (8 ↔ 712 LUT, 683 FF).
+    pub const CHANNEL: Resources = Resources { lut: 89.0, ff: 85.375, bram: 0.0, dsp: 0.0 };
+    /// OIP glue per PE (residual to Table III's 11091/8563).
+    pub const PE_GLUE: Resources = Resources { lut: 767.0, ff: 842.0, bram: 0.0, dsp: 0.0 };
+    /// One I/O buffer (incl. its AGs): 6523 LUT, 11197 FF, 8 BRAM.
+    pub const AG: Resources = Resources { lut: 483.0, ff: 740.0, bram: 0.0, dsp: 0.0 };
+    pub const IO_BUF_BASE: Resources = Resources { lut: 2659.0, ff: 5277.0, bram: 0.0, dsp: 0.0 };
+    pub const IO_BANK: Resources = Resources { lut: 0.0, ff: 0.0, bram: 1.0, dsp: 0.0 };
+    /// Global controller (9741 LUT, 17861 FF).
+    pub const GC: Resources = Resources { lut: 9741.0, ff: 17861.0, bram: 0.0, dsp: 0.0 };
+    /// LION I/O transfer controller (5738 LUT, 4277 FF, 4 BRAM).
+    pub const LION: Resources = Resources { lut: 5738.0, ff: 4277.0, bram: 4.0, dsp: 0.0 };
+}
+
+/// Area of a TCPA instance.
+pub fn tcpa_area(arch: &TcpaArch) -> AreaReport {
+    use tcpa_cal::*;
+    let mut r = AreaReport::default();
+    let n_fus = arch.fus.total() as f64;
+    let mut pe = FU_ADD * arch.fus.adders as f64
+        + FU_MUL * arch.fus.multipliers as f64
+        + FU_DIV * arch.fus.dividers as f64
+        + FU_COPY * arch.fus.copy_units as f64
+        + VD_PER_FU * n_fus;
+    let n_regs = (arch.rd_regs + arch.fd_fifos + arch.id_fifos + arch.od_regs) as f64;
+    pe += REG * n_regs + FIFO_WORD * arch.fifo_words as f64;
+    pe += CTRL_RF;
+    pe += CHANNEL * arch.channels_per_neighbor as f64;
+    pe += PE_GLUE;
+    r.add("pe", arch.n_pes(), pe);
+    let banks_per_buf = arch.io_banks as f64 / 4.0;
+    let ags_per_buf = banks_per_buf; // one AG per bank (§III-G)
+    let io = IO_BUF_BASE + AG * ags_per_buf + IO_BANK * banks_per_buf;
+    r.add("io_buffer", 4, io);
+    r.add("gc", 1, GC);
+    r.add("lion", 1, LION);
+    r
+}
+
+/// Area ratio TCPA : CGRA in LUTs (the paper's headline 6.26×).
+pub fn area_ratio(tcpa: &AreaReport, cgra: &AreaReport) -> f64 {
+    tcpa.total.lut / cgra.total.lut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * b.abs()
+    }
+
+    #[test]
+    fn cgra_4x4_matches_table3() {
+        let r = cgra_area(&CgraArch::classical(4, 4));
+        // Table III: 35250 LUT, 32552 FF, 20 BRAM, 48 DSP
+        assert!(close(r.total.lut, 35250.0, 0.03), "lut {}", r.total.lut);
+        assert!(close(r.total.ff, 32552.0, 0.03), "ff {}", r.total.ff);
+        assert!(close(r.total.bram, 20.0, 0.35), "bram {}", r.total.bram);
+        assert!(close(r.total.dsp, 48.0, 0.01), "dsp {}", r.total.dsp);
+    }
+
+    #[test]
+    fn cgra_pe_matches_table3() {
+        let r = cgra_area(&CgraArch::classical(4, 4));
+        let (_, pe) = r.items["pe"];
+        // Table III: avg PE = 2202 LUT, 2034 FF
+        assert!(close(pe.lut, 2202.0, 0.03), "pe lut {}", pe.lut);
+        assert!(close(pe.ff, 2034.0, 0.03), "pe ff {}", pe.ff);
+    }
+
+    #[test]
+    fn tcpa_4x4_matches_table3() {
+        let r = tcpa_area(&TcpaArch::paper(4, 4));
+        // Table III: 220524 LUT, 205774 FF, 656 BRAM, 48 DSP
+        assert!(close(r.total.lut, 220524.0, 0.03), "lut {}", r.total.lut);
+        assert!(close(r.total.ff, 205774.0, 0.03), "ff {}", r.total.ff);
+        assert!(close(r.total.bram, 656.0, 0.10), "bram {}", r.total.bram);
+        assert!(close(r.total.dsp, 48.0, 0.01), "dsp {}", r.total.dsp);
+    }
+
+    #[test]
+    fn tcpa_pe_matches_table3() {
+        let r = tcpa_area(&TcpaArch::paper(4, 4));
+        let (_, pe) = r.items["pe"];
+        // Table III: avg PE = 11091 LUT, 8563 FF — ~5× the CGRA PE
+        assert!(close(pe.lut, 11091.0, 0.03), "pe lut {}", pe.lut);
+        assert!(close(pe.ff, 8563.0, 0.03), "pe ff {}", pe.ff);
+        let cgra = cgra_area(&CgraArch::classical(4, 4));
+        let (_, cpe) = cgra.items["pe"];
+        let ratio = pe.lut / cpe.lut;
+        assert!((4.5..=5.5).contains(&ratio), "PE ratio {ratio}");
+    }
+
+    #[test]
+    fn headline_area_ratio_6_26() {
+        let t = tcpa_area(&TcpaArch::paper(4, 4));
+        let c = cgra_area(&CgraArch::classical(4, 4));
+        let ratio = area_ratio(&t, &c);
+        assert!(
+            (6.0..=6.6).contains(&ratio),
+            "area ratio {ratio} should be ≈6.26"
+        );
+    }
+
+    #[test]
+    fn area_scales_linearly_with_pes() {
+        let a4 = cgra_area(&CgraArch::classical(4, 4));
+        let a8 = cgra_area(&CgraArch::classical(8, 8));
+        // §VI: area scales linearly with PEs; peripherals are small
+        let ratio = a8.total.lut / a4.total.lut;
+        assert!((3.8..=4.2).contains(&ratio), "lut scale {ratio}");
+        let t4 = tcpa_area(&TcpaArch::paper(4, 4));
+        let t8 = tcpa_area(&TcpaArch::paper(8, 8));
+        let tr = t8.total.lut / t4.total.lut;
+        assert!((3.2..=4.2).contains(&tr), "tcpa lut scale {tr}");
+    }
+}

@@ -1,0 +1,123 @@
+//! ASIC comparison data and technology normalization (paper §V-B2, §V-C2).
+//!
+//! Published chips: ALPACA (8×8 TCPA, 10 mm², 22 nm, fp32), HyCUBE
+//! (16 PEs, 4.7 mm², 40 nm, fixed32) and Amber (384 PEs, 20.1 mm², 16 nm,
+//! bf16/int16). Areas are normalized to 16 nm with the paper's scaling
+//! factors (1.89 for 22 nm, 6.25 for 40 nm).
+
+/// One published chip datapoint.
+#[derive(Debug, Clone)]
+pub struct ChipData {
+    pub name: &'static str,
+    pub class: &'static str,
+    pub n_pes: usize,
+    pub area_mm2: f64,
+    pub tech_nm: u32,
+    pub number_format: &'static str,
+    /// Peak power in watts (`None` when unpublished).
+    pub peak_watts: Option<f64>,
+    /// Peak efficiency in GOPS/W (GFLOPS/W for fp chips).
+    pub gops_per_watt: Option<f64>,
+}
+
+impl ChipData {
+    /// Technology scaling factor to 16 nm (paper §V-B2).
+    pub fn tech_scale(&self) -> f64 {
+        match self.tech_nm {
+            22 => 1.89,
+            40 => 6.25,
+            16 => 1.0,
+            nm => {
+                // generic quadratic scaling fallback
+                let r = nm as f64 / 16.0;
+                r * r
+            }
+        }
+    }
+
+    /// Normalized area per PE in mm² (paper: 0.083 / 0.047 / 0.052).
+    pub fn norm_area_per_pe(&self) -> f64 {
+        self.area_mm2 / self.n_pes as f64 / self.tech_scale()
+    }
+
+    /// Peak power per PE in mW.
+    pub fn watts_per_pe_mw(&self) -> Option<f64> {
+        self.peak_watts.map(|w| w * 1000.0 / self.n_pes as f64)
+    }
+}
+
+/// The three chips discussed in §V-B2 / §V-C2.
+pub fn published_chips() -> Vec<ChipData> {
+    vec![
+        ChipData {
+            name: "ALPACA [30]",
+            class: "TCPA",
+            n_pes: 64,
+            area_mm2: 10.0,
+            tech_nm: 22,
+            number_format: "fp32",
+            peak_watts: Some(7.5),
+            gops_per_watt: Some(270.0), // GFLOPS/W
+        },
+        ChipData {
+            name: "HyCUBE [12]",
+            class: "CGRA",
+            n_pes: 16,
+            area_mm2: 4.7,
+            tech_nm: 40,
+            number_format: "fixed32",
+            peak_watts: Some(0.102),
+            gops_per_watt: Some(26.4),
+        },
+        ChipData {
+            name: "Amber [43]",
+            class: "CGRA",
+            n_pes: 384,
+            area_mm2: 20.1,
+            tech_nm: 16,
+            number_format: "bf16/int16",
+            peak_watts: None,
+            gops_per_watt: Some(538.0),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalized_areas_match_paper() {
+        let chips = published_chips();
+        let alpaca = &chips[0];
+        let hycube = &chips[1];
+        let amber = &chips[2];
+        assert!((alpaca.norm_area_per_pe() - 0.083).abs() < 0.002);
+        assert!((hycube.norm_area_per_pe() - 0.047).abs() < 0.001);
+        assert!((amber.norm_area_per_pe() - 0.052).abs() < 0.001);
+    }
+
+    #[test]
+    fn per_pe_power_matches_paper() {
+        let chips = published_chips();
+        // ALPACA: 117 mW/PE; HyCUBE: 6.375 mW/PE (§V-C2)
+        assert!((chips[0].watts_per_pe_mw().unwrap() - 117.19).abs() < 0.5);
+        assert!((chips[1].watts_per_pe_mw().unwrap() - 6.375).abs() < 0.01);
+        assert!(chips[2].watts_per_pe_mw().is_none());
+    }
+
+    #[test]
+    fn generic_scaling_fallback() {
+        let c = ChipData {
+            name: "x",
+            class: "x",
+            n_pes: 1,
+            area_mm2: 1.0,
+            tech_nm: 32,
+            number_format: "x",
+            peak_watts: None,
+            gops_per_watt: None,
+        };
+        assert!((c.tech_scale() - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Power / performance / area models (paper §V-B, §V-C).
+//!
+//! * [`area`] — a component-level FPGA resource model calibrated to the
+//!   paper's Table III (AMD Ultrascale+ via Vivado), parameterized by the
+//!   architecture configs so swept instances (Fig. 8's 8×8 arrays, different
+//!   FU complements, FIFO sizes) extrapolate consistently.
+//! * [`power`] — a vectorless-style power model over the resource vector,
+//!   two-point-calibrated to the published 1.957 W (CGRA) / 3.313 W (TCPA).
+//! * [`asic`] — the published chip data (ALPACA, HyCUBE, Amber) and the
+//!   technology-normalized area/power comparison of §V-B2 / §V-C2.
+
+pub mod area;
+pub mod power;
+pub mod asic;

@@ -1,0 +1,209 @@
+//! Golden-model service: per-benchmark reference outputs computed by the
+//! XLA executables lowered from the JAX/Pallas models (`artifacts/*.hlo.txt`).
+//!
+//! When an artifact for a (benchmark, size) pair is missing — e.g. a size
+//! outside `AOT_SIZES`, or `make artifacts` not yet run — the service falls
+//! back to the pure-rust loop-nest interpreter, so tests remain hermetic.
+//! The integration suite asserts XLA ⟷ interpreter agreement whenever the
+//! artifacts are present.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::bench::workloads::{build, BenchId};
+use crate::ir::loopnest::ArrayData;
+
+
+use super::pjrt::{from_literal, to_literal, Executable, PjrtRuntime};
+
+/// How a golden result was produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GoldenSource {
+    Xla,
+    Interpreter,
+}
+
+/// The golden-model service.
+pub struct GoldenService {
+    runtime: Option<PjrtRuntime>,
+    dir: PathBuf,
+    cache: HashMap<(BenchId, i64), Executable>,
+}
+
+impl GoldenService {
+    /// Create the service, locating artifacts via `REPRO_ARTIFACTS` or
+    /// `./artifacts`. The PJRT client is created lazily-but-once.
+    pub fn new() -> GoldenService {
+        let dir = std::env::var("REPRO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        let runtime = if dir.join("MANIFEST").exists() {
+            PjrtRuntime::cpu().ok()
+        } else {
+            None
+        };
+        GoldenService {
+            runtime,
+            dir,
+            cache: HashMap::new(),
+        }
+    }
+
+    pub fn has_xla(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Compute golden outputs for a benchmark instance.
+    pub fn run(
+        &mut self,
+        id: BenchId,
+        n: i64,
+        inputs: &ArrayData,
+    ) -> Result<(ArrayData, GoldenSource)> {
+        if self.runtime.is_some() {
+            let path = self.dir.join(format!("{}_n{}.hlo.txt", id.name(), n));
+            if path.exists() {
+                let out = self.run_xla(id, n, &path, inputs)?;
+                return Ok((out, GoldenSource::Xla));
+            }
+        }
+        // hermetic fallback: the loop-nest reference interpreter
+        let wl = build(id, n);
+        Ok((wl.reference_nest(inputs), GoldenSource::Interpreter))
+    }
+
+    fn run_xla(
+        &mut self,
+        id: BenchId,
+        n: i64,
+        path: &std::path::Path,
+        inputs: &ArrayData,
+    ) -> Result<ArrayData> {
+        let rt = self.runtime.as_ref().expect("xla runtime");
+        if !self.cache.contains_key(&(id, n)) {
+            let exe = rt.load_hlo_text(path)?;
+            self.cache.insert((id, n), exe);
+        }
+        let exe = &self.cache[&(id, n)];
+        let dt = id.dtype();
+        let sq = [n, n];
+        let v = [n];
+        // argument order mirrors model.example_args
+        let args: Vec<xla::Literal> = match id {
+            BenchId::Gemm => vec![
+                to_literal(&inputs["A"], &sq, dt)?,
+                to_literal(&inputs["B"], &sq, dt)?,
+                to_literal(&inputs["D"], &sq, dt)?, // the preloaded C
+            ],
+            BenchId::Atax => vec![
+                to_literal(&inputs["A"], &sq, dt)?,
+                to_literal(&inputs["x"], &v, dt)?,
+            ],
+            BenchId::Gesummv => vec![
+                to_literal(&inputs["A"], &sq, dt)?,
+                to_literal(&inputs["B"], &sq, dt)?,
+                to_literal(&inputs["x"], &v, dt)?,
+            ],
+            BenchId::Mvt => vec![
+                to_literal(&inputs["A"], &sq, dt)?,
+                to_literal(&inputs["y1"], &v, dt)?,
+                to_literal(&inputs["y2"], &v, dt)?,
+                to_literal(&inputs["z1"], &v, dt)?, // preloaded x1
+                to_literal(&inputs["z2"], &v, dt)?, // preloaded x2
+            ],
+            BenchId::Trisolv => vec![
+                to_literal(&inputs["L"], &sq, dt)?,
+                to_literal(&inputs["b"], &v, dt)?,
+            ],
+            BenchId::Trsm => vec![
+                to_literal(&inputs["L"], &sq, dt)?,
+                to_literal(&inputs["B"], &sq, dt)?,
+            ],
+        };
+        let outs = exe.run(&args)?;
+        let mut m = ArrayData::new();
+        let flat = |lit: &xla::Literal, len: i64| -> Result<Vec<crate::ir::op::Value>> {
+            from_literal(&lit.reshape(&[len])?, dt)
+        };
+        match id {
+            BenchId::Gemm => {
+                m.insert("D".into(), flat(&outs[0], n * n)?);
+            }
+            BenchId::Atax => {
+                m.insert("y".into(), flat(&outs[0], n)?);
+            }
+            BenchId::Gesummv => {
+                m.insert("y".into(), flat(&outs[0], n)?);
+            }
+            BenchId::Mvt => {
+                m.insert("z1".into(), flat(&outs[0], n)?);
+                m.insert("z2".into(), flat(&outs[1], n)?);
+            }
+            BenchId::Trisolv => {
+                m.insert("x".into(), flat(&outs[0], n)?);
+            }
+            BenchId::Trsm => {
+                m.insert("X".into(), flat(&outs[0], n * n)?);
+            }
+        }
+        Ok(m)
+    }
+}
+
+impl Default for GoldenService {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::inputs;
+    use crate::ir::op::{Dtype, Value};
+
+    fn check_agreement(id: BenchId, n: i64) {
+        let mut svc = GoldenService::new();
+        let ins = inputs(id, n, 5);
+        let (got, src) = svc.run(id, n, &ins).expect("golden run");
+        let wl = build(id, n);
+        let want = wl.reference_nest(&ins);
+        for name in wl.output_names() {
+            let (a, b) = (&want[&name], &got[&name]);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b.iter()) {
+                match id.dtype() {
+                    Dtype::I32 => assert_eq!(x, y, "{}/{name} via {src:?}", id.name()),
+                    Dtype::F32 => {
+                        let (x, y) = (x.as_f64(), y.as_f64());
+                        assert!(
+                            (x - y).abs() <= 1e-3 * (1.0 + x.abs()),
+                            "{}/{name}: {x} vs {y} via {src:?}",
+                            id.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn golden_agrees_with_interpreter_all_benches_n8() {
+        // exercises the XLA path when artifacts exist, the fallback otherwise
+        for id in BenchId::ALL {
+            check_agreement(id, 8);
+        }
+    }
+
+    #[test]
+    fn fallback_works_for_unknown_size() {
+        let mut svc = GoldenService::new();
+        let ins = inputs(BenchId::Gemm, 4, 1);
+        let (out, src) = svc.run(BenchId::Gemm, 4, &ins).unwrap();
+        assert_eq!(src, GoldenSource::Interpreter, "no n=4 artifact");
+        assert_eq!(out["D"].len(), 16);
+        assert!(matches!(out["D"][0], Value::I32(_)));
+    }
+}

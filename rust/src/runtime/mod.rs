@@ -1,0 +1,6 @@
+//! Runtime: load AOT-lowered HLO artifacts and execute them on the PJRT CPU
+//! client — the golden-model oracle on the rust side. Python is never on
+//! this path; `make artifacts` runs once at build time.
+
+pub mod pjrt;
+pub mod golden;

@@ -1,0 +1,151 @@
+//! PJRT wrapper: HLO-text artifact → compiled executable → execution with
+//! typed literals (pattern from /opt/xla-example/load_hlo).
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::ir::op::{Dtype, Value};
+
+/// A loaded, compiled HLO computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The PJRT CPU client plus an executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &std::path::Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// Convert a flat [`Value`] buffer to an XLA literal with the given shape.
+pub fn to_literal(data: &[Value], shape: &[i64], dtype: Dtype) -> Result<xla::Literal> {
+    let dims: Vec<usize> = shape.iter().map(|&d| d as usize).collect();
+    let lit = match dtype {
+        Dtype::I32 => {
+            let v: Vec<i32> = data
+                .iter()
+                .map(|x| match x {
+                    Value::I32(i) => *i,
+                    Value::F32(f) => *f as i32,
+                })
+                .collect();
+            xla::Literal::vec1(&v)
+        }
+        Dtype::F32 => {
+            let v: Vec<f32> = data.iter().map(|x| x.as_f64() as f32).collect();
+            xla::Literal::vec1(&v)
+        }
+    };
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims_i64)?)
+}
+
+/// Convert an XLA literal back to a flat [`Value`] buffer.
+pub fn from_literal(lit: &xla::Literal, dtype: Dtype) -> Result<Vec<Value>> {
+    Ok(match dtype {
+        Dtype::I32 => lit
+            .to_vec::<i32>()?
+            .into_iter()
+            .map(Value::I32)
+            .collect(),
+        Dtype::F32 => lit
+            .to_vec::<f32>()?
+            .into_iter()
+            .map(Value::F32)
+            .collect(),
+    })
+}
+
+impl Executable {
+    /// Execute with the given literals; returns the elements of the result
+    /// tuple (models are lowered with `return_tuple=True`).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut result = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        let shape = result.shape()?;
+        let n = match &shape {
+            xla::Shape::Tuple(elems) => elems.len(),
+            _ => return Ok(vec![result]),
+        };
+        let out = result.decompose_tuple()?;
+        debug_assert_eq!(out.len(), n);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::env::var("REPRO_ARTIFACTS")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"));
+        dir.join("MANIFEST").exists().then_some(dir)
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let vals: Vec<Value> = (0..6).map(Value::I32).collect();
+        let lit = to_literal(&vals, &[2, 3], Dtype::I32).unwrap();
+        let back = from_literal(&lit.reshape(&[6]).unwrap(), Dtype::I32).unwrap();
+        assert_eq!(back, vals);
+    }
+
+    #[test]
+    fn load_and_run_gemm_artifact_if_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = PjrtRuntime::cpu().unwrap();
+        let exe = rt.load_hlo_text(&dir.join("gemm_n8.hlo.txt")).unwrap();
+        let n = 8usize;
+        let a: Vec<Value> = (0..n * n).map(|i| Value::I32((i % 5) as i32)).collect();
+        let b: Vec<Value> = (0..n * n).map(|i| Value::I32((i % 3) as i32)).collect();
+        let c: Vec<Value> = vec![Value::I32(1); n * n];
+        let args = vec![
+            to_literal(&a, &[8, 8], Dtype::I32).unwrap(),
+            to_literal(&b, &[8, 8], Dtype::I32).unwrap(),
+            to_literal(&c, &[8, 8], Dtype::I32).unwrap(),
+        ];
+        let out = exe.run(&args).unwrap();
+        assert_eq!(out.len(), 1);
+        let d = from_literal(&out[0].reshape(&[64]).unwrap(), Dtype::I32).unwrap();
+        // spot check element [0][0]: sum_k a[0,k]*b[k,0] + 1
+        let want: i64 = (0..n)
+            .map(|k| ((k % 5) as i64) * (((k * n) % 3) as i64))
+            .sum::<i64>()
+            + 1;
+        assert_eq!(d[0], Value::I32(want as i32));
+    }
+}

@@ -1,0 +1,94 @@
+//! Address generators (paper §III-G): programmable affine address units
+//! inside each I/O buffer bank. They compute `m_x·i + μ_x` — the storage
+//! layout `s_x` composed with the variable's indexing function — so the PEs
+//! never see an address calculation (unlike CGRAs, where ~70 % of the DFG is
+//! index/address overhead).
+
+use crate::ir::affine::AffineExpr;
+use crate::ir::pra::{Arg, ArrayId, Pra};
+
+/// One configured address generator.
+#[derive(Debug, Clone)]
+pub struct AgConfig {
+    pub array: ArrayId,
+    /// Linear word address as an affine function of the *global* iteration
+    /// index: `m_x · i + μ_x`.
+    pub expr: AffineExpr,
+    pub is_output: bool,
+}
+
+impl AgConfig {
+    #[inline]
+    pub fn addr(&self, i: &[i64]) -> usize {
+        let a = self.expr.eval(i);
+        debug_assert!(a >= 0, "negative address {a}");
+        a as usize
+    }
+}
+
+/// Collect the AG configurations a PRA needs: one per distinct input access
+/// pattern and one per output equation.
+pub fn collect_ags(pra: &Pra) -> Vec<AgConfig> {
+    let mut out: Vec<AgConfig> = Vec::new();
+    let mut push_unique = |cfg: AgConfig| {
+        if !out
+            .iter()
+            .any(|c| c.array == cfg.array && c.expr == cfg.expr && c.is_output == cfg.is_output)
+        {
+            out.push(cfg);
+        }
+    };
+    for eq in &pra.eqs {
+        for arg in &eq.args {
+            if let Arg::Input { array, map } = arg {
+                let strides = pra.arrays[*array].strides();
+                push_unique(AgConfig {
+                    array: *array,
+                    expr: map.compose_row(&strides),
+                    is_output: false,
+                });
+            }
+        }
+        if let Some((array, map)) = &eq.output {
+            let strides = pra.arrays[*array].strides();
+            push_unique(AgConfig {
+                array: *array,
+                expr: map.compose_row(&strides),
+                is_output: true,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::gemm_pra;
+
+    #[test]
+    fn gemm_ag_addresses() {
+        let pra = gemm_pra(4);
+        let ags = collect_ags(&pra);
+        // A[i0,i2], B[i2,i1], D (read) + D (write) = 4 AGs
+        assert_eq!(ags.len(), 4);
+        let a_ag = ags
+            .iter()
+            .find(|c| c.array == pra.array_id("A").unwrap())
+            .unwrap();
+        // A is 4×4 row-major: addr(i) = 4·i0 + i2
+        assert_eq!(a_ag.addr(&[2, 9, 3]), 11);
+        let out_ag = ags.iter().find(|c| c.is_output).unwrap();
+        assert_eq!(out_ag.array, pra.array_id("D").unwrap());
+        // D[i0,i1]: addr = 4·i0 + i1
+        assert_eq!(out_ag.addr(&[1, 2, 9]), 6);
+    }
+
+    #[test]
+    fn duplicate_patterns_deduplicated() {
+        let pra = gemm_pra(4);
+        let a = collect_ags(&pra);
+        let b = collect_ags(&pra);
+        assert_eq!(a.len(), b.len());
+    }
+}

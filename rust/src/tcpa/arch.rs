@@ -1,0 +1,138 @@
+//! TCPA architecture model (paper §III-A, Fig. 2, §V-B1).
+//!
+//! A W×H array of multi-FU PEs with orthogonal instruction processing: each
+//! FU runs its own micro-program but shares the PE's register files. The
+//! register file distinguishes general-purpose (RD), feedback-FIFO (FD),
+//! input (ID) and output (OD) registers; virtual registers (VD) broadcast one
+//! write to several targets. Four I/O buffers with address generators
+//! surround the array; a Global Controller broadcasts control signals and a
+//! LION-style controller moves data between external memory and the buffers.
+
+use crate::ir::op::FuClass;
+
+/// Per-PE functional-unit complement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FuComplement {
+    pub adders: usize,
+    pub multipliers: usize,
+    pub dividers: usize,
+    pub copy_units: usize,
+}
+
+impl FuComplement {
+    /// §V-B1: two adders, one multiplier, one divider, three copy units.
+    pub fn paper() -> Self {
+        FuComplement {
+            adders: 2,
+            multipliers: 1,
+            dividers: 1,
+            copy_units: 3,
+        }
+    }
+
+    pub fn count(&self, class: FuClass) -> usize {
+        match class {
+            FuClass::Add => self.adders,
+            FuClass::Mul => self.multipliers,
+            FuClass::Div => self.dividers,
+            FuClass::Copy => self.copy_units,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.adders + self.multipliers + self.dividers + self.copy_units
+    }
+}
+
+/// A TCPA architecture instance.
+#[derive(Debug, Clone)]
+pub struct TcpaArch {
+    pub name: String,
+    pub width: usize,
+    pub height: usize,
+    pub fus: FuComplement,
+    /// General-purpose data registers per PE (8 in §V-B1).
+    pub rd_regs: usize,
+    /// Feedback-FIFO registers per PE (8 FIFOs in §V-B1).
+    pub fd_fifos: usize,
+    /// Input registers (FIFO heads) per PE.
+    pub id_fifos: usize,
+    /// Output registers per PE.
+    pub od_regs: usize,
+    /// Combined FD+ID FIFO capacity in words per PE (280 × 32 bit, §V-B1).
+    pub fifo_words: usize,
+    /// Interconnect channels to each neighbor (8 in §V-B1).
+    pub channels_per_neighbor: usize,
+    /// Words per I/O-buffer bank (512 B = 128 words, 32 banks total §V-B1).
+    pub io_bank_words: usize,
+    /// Number of I/O buffer banks (8 per border × 4 borders).
+    pub io_banks: usize,
+    /// Can the LION refill I/O buffers during execution (paper §IV-6: TCPAs
+    /// may stream data larger than the buffers)?
+    pub lion_streaming: bool,
+    /// Loop dimensions the peripherals (GC, AGs) support (4 in §V-B1).
+    pub max_loop_dims: usize,
+}
+
+impl TcpaArch {
+    /// The paper's reference 4×4 TCPA (§V-B1).
+    pub fn paper(width: usize, height: usize) -> Self {
+        TcpaArch {
+            name: format!("tcpa-{width}x{height}"),
+            width,
+            height,
+            fus: FuComplement::paper(),
+            rd_regs: 8,
+            fd_fifos: 8,
+            id_fifos: 8,
+            od_regs: 8,
+            fifo_words: 280,
+            channels_per_neighbor: 8,
+            io_bank_words: 128,
+            io_banks: 32,
+            lion_streaming: true,
+            max_loop_dims: 4,
+        }
+    }
+
+    pub fn n_pes(&self) -> usize {
+        self.width * self.height
+    }
+
+    #[inline]
+    pub fn pe_id(&self, x: usize, y: usize) -> usize {
+        y * self.width + x
+    }
+
+    #[inline]
+    pub fn pe_xy(&self, pe: usize) -> (usize, usize) {
+        (pe % self.width, pe / self.width)
+    }
+
+    /// Total I/O buffer capacity in words.
+    pub fn io_words(&self) -> usize {
+        self.io_banks * self.io_bank_words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_complement() {
+        let f = FuComplement::paper();
+        assert_eq!(f.total(), 7);
+        assert_eq!(f.count(FuClass::Add), 2);
+        assert_eq!(f.count(FuClass::Copy), 3);
+    }
+
+    #[test]
+    fn arch_capacities() {
+        let a = TcpaArch::paper(4, 4);
+        assert_eq!(a.n_pes(), 16);
+        assert_eq!(a.io_words(), 32 * 128);
+        let (x, y) = a.pe_xy(a.pe_id(2, 3));
+        assert_eq!((x, y), (2, 3));
+    }
+}

@@ -1,0 +1,165 @@
+//! Code generation (paper §III-F): enumerate each tile's iteration variants
+//! (distinct active-equation/boundary combinations), derive the per-FU
+//! instruction bundles and group PEs into *processor classes* sharing the
+//! same program.
+
+use std::collections::BTreeMap;
+
+use crate::ir::op::FuClass;
+use crate::ir::pra::Pra;
+
+use super::gc::{variants_of_tile, Gc};
+use super::partition::Partition;
+use super::schedule::Schedule;
+
+/// One scheduled instruction inside a bundle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScheduledOp {
+    pub eq: usize,
+    pub fu: (FuClass, usize),
+    pub tau: u32,
+}
+
+/// The program inventory of the whole array.
+#[derive(Debug, Clone)]
+pub struct Programs {
+    /// Distinct variant keys per PE (indexed by tile rank).
+    pub variants_per_pe: Vec<Vec<u64>>,
+    /// Processor classes: groups of tile-ranks sharing a variant set.
+    pub classes: Vec<Vec<usize>>,
+    pub class_of_pe: Vec<usize>,
+    /// Instruction bundle per distinct variant key (shared across classes).
+    pub bundles: BTreeMap<u64, Vec<ScheduledOp>>,
+    /// Total FU instruction count across one PE of each class (program size).
+    pub instr_per_class: Vec<usize>,
+}
+
+/// Generate programs for all PEs.
+pub fn codegen(pra: &Pra, part: &Partition, sched: &Schedule) -> Programs {
+    let gc = Gc::new(pra, part);
+    let mut variants_per_pe: Vec<Vec<u64>> = Vec::new();
+    let mut bundles: BTreeMap<u64, Vec<ScheduledOp>> = BTreeMap::new();
+
+    let tiles: Vec<Vec<i64>> = part.inter.points().collect();
+    for k in &tiles {
+        let vs = variants_of_tile(&gc, k);
+        for &key in &vs {
+            bundles.entry(key).or_insert_with(|| {
+                let mut ops: Vec<ScheduledOp> = (0..pra.eqs.len())
+                    .filter(|&e| key & (1 << e) != 0)
+                    .map(|e| ScheduledOp {
+                        eq: e,
+                        fu: sched.fu[e],
+                        tau: sched.tau[e],
+                    })
+                    .collect();
+                ops.sort_by_key(|o| o.tau);
+                ops
+            });
+        }
+        variants_per_pe.push(vs);
+    }
+
+    // processor classes = identical variant sets
+    let mut class_map: BTreeMap<Vec<u64>, usize> = BTreeMap::new();
+    let mut classes: Vec<Vec<usize>> = Vec::new();
+    let mut class_of_pe = vec![0usize; tiles.len()];
+    for (rank, vs) in variants_per_pe.iter().enumerate() {
+        let id = *class_map.entry(vs.clone()).or_insert_with(|| {
+            classes.push(Vec::new());
+            classes.len() - 1
+        });
+        classes[id].push(rank);
+        class_of_pe[rank] = id;
+    }
+
+    let instr_per_class: Vec<usize> = classes
+        .iter()
+        .map(|members| {
+            let rank = members[0];
+            variants_per_pe[rank]
+                .iter()
+                .map(|key| bundles[key].len())
+                .sum()
+        })
+        .collect();
+
+    Programs {
+        variants_per_pe,
+        classes,
+        class_of_pe,
+        bundles,
+        instr_per_class,
+    }
+}
+
+impl Programs {
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Maximum ops issued in any single iteration (Table II's
+    /// "max(#op. per PE)" analog for the TCPA: the full loop body runs on
+    /// one PE).
+    pub fn max_ops_per_iteration(&self) -> usize {
+        self.bundles.values().map(|b| b.len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::gemm_pra;
+    use crate::tcpa::arch::TcpaArch;
+    use crate::tcpa::schedule::schedule;
+
+    #[test]
+    fn gemm_classes_on_2x2() {
+        let pra = gemm_pra(4);
+        let arch = TcpaArch::paper(2, 2);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let sched = schedule(&pra, &part, &arch).unwrap();
+        let progs = codegen(&pra, &part, &sched);
+        // 4 tiles: corner (reads A and B), top edge, left edge, interior —
+        // all four differ (paper §III-F: "minor differences necessitate
+        // different programs")
+        assert_eq!(progs.variants_per_pe.len(), 4);
+        assert_eq!(progs.n_classes(), 4);
+        assert!(progs.max_ops_per_iteration() >= 4);
+    }
+
+    #[test]
+    fn larger_arrays_share_programs() {
+        // paper §III-F: "in larger arrays, multiple PEs may share the same
+        // program" — a 4×4 array on N=20 has repeated interior tiles
+        let pra = gemm_pra(20);
+        let arch = TcpaArch::paper(4, 4);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let sched = schedule(&pra, &part, &arch).unwrap();
+        let progs = codegen(&pra, &part, &sched);
+        assert_eq!(progs.variants_per_pe.len(), 16);
+        assert!(
+            progs.n_classes() < 16,
+            "interior PEs must share a class, got {}",
+            progs.n_classes()
+        );
+        // instruction memory content is bounded (per-FU programs stay small)
+        for &n in &progs.instr_per_class {
+            assert!(n > 0 && n < 256, "program size {n}");
+        }
+    }
+
+    #[test]
+    fn bundles_sorted_by_tau() {
+        let pra = gemm_pra(4);
+        let arch = TcpaArch::paper(2, 2);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let sched = schedule(&pra, &part, &arch).unwrap();
+        let progs = codegen(&pra, &part, &sched);
+        for b in progs.bundles.values() {
+            for w in b.windows(2) {
+                assert!(w[0].tau <= w[1].tau);
+            }
+        }
+    }
+}

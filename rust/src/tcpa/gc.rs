@@ -1,0 +1,202 @@
+//! Global Controller model (paper §III-A/F): computes, once for the whole
+//! array, which equations are active at each iteration and which register
+//! destinations/sources apply (boundary vs interior) — the control signals
+//! that drive each FU's branch unit so the PEs never evaluate conditions
+//! themselves.
+
+use crate::ir::affine::{vadd, vsub};
+use crate::ir::pra::{EqId, Pra};
+
+use super::partition::Partition;
+
+/// The GC for one compiled loop nest.
+#[derive(Debug, Clone)]
+pub struct Gc<'a> {
+    pub pra: &'a Pra,
+    pub part: &'a Partition,
+}
+
+impl<'a> Gc<'a> {
+    pub fn new(pra: &'a Pra, part: &'a Partition) -> Self {
+        Gc { pra, part }
+    }
+
+    /// Is equation `e` active at global iteration `i`?
+    #[inline]
+    pub fn active(&self, e: EqId, i: &[i64]) -> bool {
+        self.pra.eqs[e].cond.contains(i)
+    }
+
+    /// Active-equation set at `(k, j)` as a bitmask (≤ 64 equations).
+    pub fn active_mask(&self, k: &[i64], j: &[i64]) -> u64 {
+        let i = self.part.global(k, j);
+        let mut m = 0u64;
+        for e in 0..self.pra.eqs.len().min(64) {
+            if self.active(e, &i) {
+                m |= 1 << e;
+            }
+        }
+        m
+    }
+
+    /// Variant key for `(k, j)`: the active mask combined with the boundary
+    /// signature (which dims of `j` sit at a sending or receiving tile
+    /// border) — together they determine the instruction bundle including
+    /// register-destination selection (paper Fig. 4's observation that
+    /// iterations differ in dependence *type*, not operations).
+    pub fn variant_key(&self, k: &[i64], j: &[i64]) -> u64 {
+        let mut key = self.active_mask(k, j);
+        let n = self.part.dims();
+        for (b, m) in (0..n).enumerate() {
+            if self.part.grid[m] > 1 {
+                if j[m] == self.part.tile[m] - 1 {
+                    key |= 1 << (40 + b); // sending border
+                }
+                if j[m] == 0 {
+                    key |= 1 << (48 + b); // receiving border
+                }
+            }
+        }
+        key
+    }
+
+    /// Does the value produced for `(var at distance d)` at `(k, j)` have an
+    /// active consumer at `i + d`, and does that consumer sit in this tile?
+    /// Returns `None` if no active consumer, `Some(true)` for an intra-tile
+    /// consumer, `Some(false)` for one in a neighboring tile.
+    pub fn consumer_location(
+        &self,
+        consumers: &[EqId],
+        k: &[i64],
+        j: &[i64],
+        d: &[i64],
+    ) -> Option<bool> {
+        let i = self.part.global(k, j);
+        let i_next = vadd(&i, d);
+        if !self.pra.space.contains(&i_next) {
+            return None;
+        }
+        if !consumers.iter().any(|&e| self.active(e, &i_next)) {
+            return None;
+        }
+        let j_next = vadd(j, d);
+        Some(self.part.intra.contains(&j_next))
+    }
+
+    /// Does the read of `(var at distance d)` at `(k, j)` come from within
+    /// this tile (`true`) or from a neighbor's channel (`false`)?
+    pub fn source_is_local(&self, j: &[i64], d: &[i64]) -> bool {
+        let j_prev = vsub(j, d);
+        j_prev.iter().all(|&x| x >= 0)
+    }
+
+    /// Number of distinct control signals the GC must distribute: one per
+    /// equation with a non-trivial condition plus one per boundary dim.
+    pub fn n_control_signals(&self) -> usize {
+        let conds = self
+            .pra
+            .eqs
+            .iter()
+            .filter(|e| !e.cond.is_unrestricted())
+            .count();
+        let borders = (0..self.part.dims())
+            .filter(|&m| self.part.grid[m] > 1)
+            .count();
+        conds + 2 * borders
+    }
+}
+
+/// Per-PE iteration-variant inventory (computed like TURTLE's instantiation
+/// step folds the polyhedral syntax tree).
+pub fn variants_of_tile(gc: &Gc<'_>, k: &[i64]) -> Vec<u64> {
+    let mut seen = Vec::new();
+    for j in gc.part.intra.points() {
+        let key = gc.variant_key(k, &j);
+        if !seen.contains(&key) {
+            seen.push(key);
+        }
+    }
+    seen.sort_unstable();
+    seen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::gemm_pra;
+    use crate::tcpa::arch::TcpaArch;
+
+    #[test]
+    fn gemm_active_masks_follow_conditions() {
+        let pra = gemm_pra(4);
+        let arch = TcpaArch::paper(2, 2);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let gc = Gc::new(&pra, &part);
+        // at the global origin every read-in equation is active
+        let m = gc.active_mask(&[0, 0, 0], &[0, 0, 0]);
+        // S1a (i1=0) bit 0, S2a (i0=0) bit 2, S3 bit 4, S4a (i2=0) bit 5
+        assert_ne!(m & 1, 0, "S1a active at origin");
+        assert_ne!(m & (1 << 2), 0, "S2a active at origin");
+        assert_ne!(m & (1 << 4), 0, "S3 always active");
+        assert_eq!(m & (1 << 6), 0, "S4b inactive at i2=0");
+    }
+
+    #[test]
+    fn interior_tiles_use_propagation_equations() {
+        let pra = gemm_pra(4);
+        let arch = TcpaArch::paper(2, 2);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let gc = Gc::new(&pra, &part);
+        // tile (1,1): away from both read-in borders at j=(1,1,0)
+        let m = gc.active_mask(&[1, 1, 0], &[1, 1, 0]);
+        assert_eq!(m & 1, 0, "S1a inactive in interior");
+        assert_ne!(m & 2, 0, "S1b active in interior");
+    }
+
+    #[test]
+    fn variant_count_is_small() {
+        let pra = gemm_pra(4);
+        let arch = TcpaArch::paper(2, 2);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let gc = Gc::new(&pra, &part);
+        for k in part.inter.points() {
+            let v = variants_of_tile(&gc, &k);
+            assert!(!v.is_empty());
+            assert!(v.len() <= 16, "tile {k:?} has {} variants", v.len());
+        }
+    }
+
+    #[test]
+    fn consumer_location_boundary_vs_interior() {
+        let pra = gemm_pra(4);
+        let arch = TcpaArch::paper(2, 2);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let gc = Gc::new(&pra, &part);
+        // a-propagation (d = (0,1,0)), consumer S1b (eq index 1)
+        let consumers = vec![1usize];
+        // interior j: consumer in same tile
+        assert_eq!(
+            gc.consumer_location(&consumers, &[0, 0, 0], &[0, 0, 0], &[0, 1, 0]),
+            Some(true)
+        );
+        // at tile border j1 = 1 (tile 2 wide): consumer in the next tile
+        assert_eq!(
+            gc.consumer_location(&consumers, &[0, 0, 0], &[0, 1, 0], &[0, 1, 0]),
+            Some(false)
+        );
+        // at the global border: no consumer
+        assert_eq!(
+            gc.consumer_location(&consumers, &[0, 1, 0], &[0, 1, 0], &[0, 1, 0]),
+            None
+        );
+    }
+
+    #[test]
+    fn control_signal_count() {
+        let pra = gemm_pra(4);
+        let arch = TcpaArch::paper(2, 2);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let gc = Gc::new(&pra, &part);
+        assert!(gc.n_control_signals() >= 7, "7 conditioned eqs + borders");
+    }
+}

@@ -1,0 +1,123 @@
+//! I/O buffers surrounding the array (paper §III-A/G, Fig. 2) and the
+//! LION-style transfer controller that fills/drains them.
+//!
+//! The four border buffers are modeled as whole-array storage addressed by
+//! the AGs. Capacity is checked against the architecture; when the data
+//! exceeds the buffers, a streaming (LION-refilling) architecture still
+//! executes — the §IV-6 advantage over CGRAs, whose scratchpad must hold
+//! everything — while a non-streaming one reports an overflow.
+
+use crate::ir::loopnest::{ArrayData, ArrayKind};
+use crate::ir::op::Value;
+use crate::ir::pra::Pra;
+
+use super::arch::TcpaArch;
+
+/// I/O buffer state for one kernel execution.
+#[derive(Debug, Clone)]
+pub struct IoBuffers {
+    arrays: Vec<Vec<Value>>,
+    /// Total words resident.
+    pub words: usize,
+    /// Whether the data fits the physical buffers without LION streaming.
+    pub fits_buffers: bool,
+}
+
+/// I/O capacity error (non-streaming architectures only).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IoOverflow {
+    pub needed: usize,
+    pub capacity: usize,
+}
+
+impl std::fmt::Display for IoOverflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "I/O buffer overflow: need {} words, have {} (enable LION streaming)",
+            self.needed, self.capacity
+        )
+    }
+}
+
+impl IoBuffers {
+    /// Load inputs into the buffers (LION fill). Missing inputs are zero.
+    pub fn new(pra: &Pra, inputs: &ArrayData, arch: &TcpaArch) -> Result<IoBuffers, IoOverflow> {
+        let arrays: Vec<Vec<Value>> = pra
+            .arrays
+            .iter()
+            .map(|a| match inputs.get(&a.name) {
+                Some(d) => {
+                    assert_eq!(d.len(), a.len(), "input {} wrong length", a.name);
+                    d.clone()
+                }
+                None => vec![pra.dtype.zero(); a.len()],
+            })
+            .collect();
+        let words: usize = arrays.iter().map(|a| a.len()).sum();
+        let fits = words <= arch.io_words();
+        if !fits && !arch.lion_streaming {
+            return Err(IoOverflow {
+                needed: words,
+                capacity: arch.io_words(),
+            });
+        }
+        Ok(IoBuffers {
+            arrays,
+            words,
+            fits_buffers: fits,
+        })
+    }
+
+    #[inline]
+    pub fn read(&self, array: usize, addr: usize) -> Value {
+        self.arrays[array][addr]
+    }
+
+    #[inline]
+    pub fn write(&mut self, array: usize, addr: usize, v: Value) {
+        self.arrays[array][addr] = v;
+    }
+
+    /// Drain the output arrays (LION writeback).
+    pub fn outputs(&self, pra: &Pra) -> ArrayData {
+        pra.arrays
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| matches!(a.kind, ArrayKind::Output | ArrayKind::InOut))
+            .map(|(id, a)| (a.name.clone(), self.arrays[id].clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::{gemm_pra, inputs, BenchId};
+
+    #[test]
+    fn roundtrip_and_capacity() {
+        let pra = gemm_pra(4);
+        let arch = TcpaArch::paper(4, 4);
+        let ins = inputs(BenchId::Gemm, 4, 1);
+        let mut io = IoBuffers::new(&pra, &ins, &arch).unwrap();
+        assert!(io.fits_buffers);
+        io.write(2, 3, Value::I32(42));
+        assert_eq!(io.read(2, 3), Value::I32(42));
+        let outs = io.outputs(&pra);
+        assert_eq!(outs["D"][3], Value::I32(42));
+    }
+
+    #[test]
+    fn streaming_allows_oversize_data() {
+        // N = 64 GEMM: 3 × 4096 = 12288 words > 4096-word buffers
+        let pra = gemm_pra(64);
+        let mut arch = TcpaArch::paper(4, 4);
+        let ins = inputs(BenchId::Gemm, 64, 1);
+        arch.lion_streaming = true;
+        let io = IoBuffers::new(&pra, &ins, &arch).unwrap();
+        assert!(!io.fits_buffers, "oversize marked but accepted");
+        arch.lion_streaming = false;
+        assert!(IoBuffers::new(&pra, &ins, &arch).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! The TCPA substrate (paper §III): iteration-centric compilation of
+//! Piecewise Regular Algorithms and a cycle-accurate array simulator.
+//!
+//! Pipeline (mirroring the TURTLE toolchain, Fig. 5):
+//! [`partition`] (LSGP tiling) → [`schedule`] (FU modulo scheduling + linear
+//! schedule vector λ* = (λʲ, λᵏ)) → [`registers`] (RD/FD/ID/OD/VD binding) →
+//! [`codegen`] (iteration variants, processor classes) → [`config`]
+//! (the concrete configuration) → [`sim`] (execution). [`gc`] models the
+//! Global Controller, [`agu`] the I/O address generators, [`iobuf`] the
+//! surrounding I/O buffers fed by a LION-style transfer controller.
+
+pub mod arch;
+pub mod partition;
+pub mod schedule;
+pub mod registers;
+pub mod codegen;
+pub mod gc;
+pub mod agu;
+pub mod iobuf;
+pub mod config;
+pub mod sim;

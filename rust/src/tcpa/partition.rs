@@ -1,0 +1,296 @@
+//! LSGP partitioning (paper §III-C): the iteration space `I` is divided into
+//! `t_0 × … × t_{n−1}` congruent rectangular tiles of size
+//! `p_0 × … × p_{n−1}`; each tile is executed sequentially by one PE while
+//! all PEs run in parallel ("local sequential, global parallel").
+//!
+//! The partitioned space decomposes as `I* = J ⊕ K`: `j ∈ J` indexes an
+//! iteration within a tile, `k ∈ K` indexes the tile (= the PE). The first
+//! (up to) two dimensions are spread across the PE grid rows/columns — the
+//! natural choice for the evaluated benchmarks and the paper's Fig. 4.
+
+use crate::ir::affine::IVec;
+use crate::ir::pra::{Dependence, Pra};
+use crate::ir::space::RectSpace;
+
+use super::arch::TcpaArch;
+
+/// How a uniform dependence behaves under a partition (paper Fig. 4 colors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepClass {
+    /// `d = 0`: within one iteration (white).
+    IntraIteration,
+    /// `d ≠ 0` but never leaves a tile (yellow).
+    IntraTile,
+    /// Crosses tile boundaries in at least one dimension for boundary
+    /// iterations — needs PE-to-PE communication (green). Most instances of
+    /// such a dependence are still intra-tile.
+    InterTile,
+}
+
+/// A partitioning of a PRA's iteration space.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Tile size `p_k` per dimension.
+    pub tile: IVec,
+    /// Tile count `t_k` per dimension.
+    pub grid: IVec,
+    /// Intra-tile space `J` (extents = tile sizes).
+    pub intra: RectSpace,
+    /// Inter-tile space `K` (extents = grid).
+    pub inter: RectSpace,
+    /// Which space dimension maps to the PE-array x axis (columns) and
+    /// y axis (rows). Dims beyond the first two are fully local (t_k = 1).
+    pub x_dim: Option<usize>,
+    pub y_dim: Option<usize>,
+}
+
+/// Partitioning errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PartitionError {
+    /// A spread dimension's extent is not divisible by the chosen tile count.
+    NotDivisible { dim: usize, extent: i64, tiles: i64 },
+    /// More loop dimensions than the peripherals support.
+    TooManyDims { dims: usize, max: usize },
+}
+
+impl std::fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionError::NotDivisible { dim, extent, tiles } => write!(
+                f,
+                "dimension {dim} (extent {extent}) not divisible into {tiles} tiles"
+            ),
+            PartitionError::TooManyDims { dims, max } => {
+                write!(f, "{dims} loop dims exceed peripheral support ({max})")
+            }
+        }
+    }
+}
+
+impl Partition {
+    /// Default LSGP partition: spread dim 0 over array rows and dim 1 over
+    /// array columns (paper Fig. 4: a 4×4×4 space tiled 2×2×1 onto 2×2 PEs);
+    /// 1-D spaces spread dim 0 over columns.
+    pub fn lsgp(pra: &Pra, arch: &TcpaArch) -> Result<Partition, PartitionError> {
+        let n = pra.dims();
+        if n > arch.max_loop_dims {
+            return Err(PartitionError::TooManyDims {
+                dims: n,
+                max: arch.max_loop_dims,
+            });
+        }
+        let ext = &pra.space.extents;
+        let mut grid: IVec = vec![1; n];
+        let x_dim;
+        let mut y_dim = None;
+        if n == 1 {
+            let t = (arch.width as i64).min(ext[0]);
+            grid[0] = t;
+            x_dim = Some(0);
+        } else {
+            let ty = (arch.height as i64).min(ext[0]);
+            let tx = (arch.width as i64).min(ext[1]);
+            grid[0] = ty;
+            grid[1] = tx;
+            y_dim = Some(0);
+            x_dim = Some(1);
+        }
+        let mut tile: IVec = vec![0; n];
+        for k in 0..n {
+            if ext[k] % grid[k] != 0 {
+                return Err(PartitionError::NotDivisible {
+                    dim: k,
+                    extent: ext[k],
+                    tiles: grid[k],
+                });
+            }
+            tile[k] = ext[k] / grid[k];
+        }
+        Ok(Partition {
+            intra: RectSpace::new(tile.clone()),
+            inter: RectSpace::new(grid.clone()),
+            tile,
+            grid,
+            x_dim,
+            y_dim,
+        })
+    }
+
+    pub fn dims(&self) -> usize {
+        self.tile.len()
+    }
+
+    /// Iterations per tile (|J|).
+    pub fn iterations_per_pe(&self) -> u64 {
+        self.intra.size()
+    }
+
+    /// Number of PEs used (|K|).
+    pub fn n_tiles(&self) -> u64 {
+        self.inter.size()
+    }
+
+    /// The PE (x, y) executing tile `k`.
+    pub fn pe_of_tile(&self, k: &[i64]) -> (usize, usize) {
+        let x = self.x_dim.map(|d| k[d] as usize).unwrap_or(0);
+        let y = self.y_dim.map(|d| k[d] as usize).unwrap_or(0);
+        (x, y)
+    }
+
+    /// Global iteration index of intra-tile `j` in tile `k`.
+    pub fn global(&self, k: &[i64], j: &[i64]) -> IVec {
+        (0..self.dims())
+            .map(|d| k[d] * self.tile[d] + j[d])
+            .collect()
+    }
+
+    /// Decompose a global index into (k, j).
+    pub fn decompose(&self, i: &[i64]) -> (IVec, IVec) {
+        let k: IVec = (0..self.dims()).map(|d| i[d] / self.tile[d]).collect();
+        let j: IVec = (0..self.dims()).map(|d| i[d] % self.tile[d]).collect();
+        (k, j)
+    }
+
+    /// Classify a dependence distance under this partition.
+    pub fn classify(&self, d: &[i64]) -> DepClass {
+        if d.iter().all(|&x| x == 0) {
+            return DepClass::IntraIteration;
+        }
+        // crosses a tile boundary iff some dim with d_k > 0 has more than one
+        // tile (boundary iterations then read from the neighboring tile)
+        let crosses = d
+            .iter()
+            .enumerate()
+            .any(|(k, &x)| x > 0 && self.grid[k] > 1);
+        if crosses {
+            DepClass::InterTile
+        } else {
+            DepClass::IntraTile
+        }
+    }
+
+    /// Dimensions in which a dependence crosses tiles.
+    pub fn crossing_dims(&self, d: &[i64]) -> Vec<usize> {
+        d.iter()
+            .enumerate()
+            .filter(|&(k, &x)| x > 0 && self.grid[k] > 1)
+            .map(|(k, _)| k)
+            .collect()
+    }
+
+    /// Does dependence `d` at intra-tile position `j` stay inside the tile?
+    pub fn reads_within_tile(&self, j: &[i64], d: &[i64]) -> bool {
+        (0..self.dims()).all(|k| j[k] - d[k] >= 0)
+    }
+
+    /// Classify every dependence of a PRA.
+    pub fn classify_all(&self, deps: &[Dependence]) -> Vec<(Dependence, DepClass)> {
+        deps.iter()
+            .map(|dep| (dep.clone(), self.classify(&dep.d)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::affine::AffineMap;
+    use crate::ir::loopnest::ArrayKind;
+    use crate::ir::op::{Dtype, OpKind};
+    use crate::ir::pra::PraBuilder;
+    use crate::ir::space::CondSpace;
+
+    fn matmul_pra(n: i64) -> Pra {
+        let b = PraBuilder::new("matmul", Dtype::I32, vec![n, n, n])
+            .var("a")
+            .var("b")
+            .var("p")
+            .var("c")
+            .array("A", vec![n, n], ArrayKind::Input)
+            .array("B", vec![n, n], ArrayKind::Input)
+            .array("C", vec![n, n], ArrayKind::Output);
+        let a_in = b.input("A", AffineMap::select_dims(3, &[0, 2]));
+        let b_in = b.input("B", AffineMap::select_dims(3, &[2, 1]));
+        let a_prop = b.v("a", vec![0, 1, 0]);
+        let b_prop = b.v("b", vec![1, 0, 0]);
+        let (a0, b0, p0, p0b) = (b.v0("a"), b.v0("b"), b.v0("p"), b.v0("p"));
+        let c_prev = b.v("c", vec![0, 0, 1]);
+        let c_out = b.v0("c");
+        b.eq("S1a", "a", OpKind::Mov, vec![a_in], CondSpace::dim_eq(3, 1, 0))
+            .eq("S1b", "a", OpKind::Mov, vec![a_prop], CondSpace::dim_ge(3, 1, 1))
+            .eq("S2a", "b", OpKind::Mov, vec![b_in], CondSpace::dim_eq(3, 0, 0))
+            .eq("S2b", "b", OpKind::Mov, vec![b_prop], CondSpace::dim_ge(3, 0, 1))
+            .eq("S3", "p", OpKind::Mul, vec![a0, b0], CondSpace::all())
+            .eq("S4a", "c", OpKind::Mov, vec![p0], CondSpace::dim_eq(3, 2, 0))
+            .eq("S4b", "c", OpKind::Add, vec![c_prev, p0b], CondSpace::dim_ge(3, 2, 1))
+            .out_eq(
+                "S5C",
+                "C",
+                AffineMap::select_dims(3, &[0, 1]),
+                OpKind::Mov,
+                vec![c_out],
+                CondSpace::dim_eq(3, 2, n - 1),
+            )
+            .finish()
+    }
+
+    #[test]
+    fn fig4_partition_2x2() {
+        // the paper's Fig. 4: 4×4×4 space on a 2×2 array → 2×2×1 tiles of 2×2×4
+        let pra = matmul_pra(4);
+        let arch = TcpaArch::paper(2, 2);
+        let p = Partition::lsgp(&pra, &arch).unwrap();
+        assert_eq!(p.grid, vec![2, 2, 1]);
+        assert_eq!(p.tile, vec![2, 2, 4]);
+        assert_eq!(p.iterations_per_pe(), 16);
+        assert_eq!(p.n_tiles(), 4);
+    }
+
+    #[test]
+    fn global_decompose_roundtrip() {
+        let pra = matmul_pra(4);
+        let arch = TcpaArch::paper(2, 2);
+        let p = Partition::lsgp(&pra, &arch).unwrap();
+        for i in pra.space.points() {
+            let (k, j) = p.decompose(&i);
+            assert!(p.inter.contains(&k));
+            assert!(p.intra.contains(&j));
+            assert_eq!(p.global(&k, &j), i);
+        }
+    }
+
+    #[test]
+    fn dependence_classification_matches_fig4() {
+        let pra = matmul_pra(4);
+        let arch = TcpaArch::paper(2, 2);
+        let p = Partition::lsgp(&pra, &arch).unwrap();
+        // c accumulation along i2 (p2 = 4, t2 = 1): intra-tile
+        assert_eq!(p.classify(&[0, 0, 1]), DepClass::IntraTile);
+        // a propagation along i1 (t1 = 2): inter-tile
+        assert_eq!(p.classify(&[0, 1, 0]), DepClass::InterTile);
+        // b propagation along i0 (t0 = 2): inter-tile
+        assert_eq!(p.classify(&[1, 0, 0]), DepClass::InterTile);
+        // intra-iteration
+        assert_eq!(p.classify(&[0, 0, 0]), DepClass::IntraIteration);
+        assert_eq!(p.crossing_dims(&[0, 1, 0]), vec![1]);
+    }
+
+    #[test]
+    fn indivisible_extent_rejected() {
+        let pra = matmul_pra(5);
+        let arch = TcpaArch::paper(2, 2);
+        assert!(matches!(
+            Partition::lsgp(&pra, &arch),
+            Err(PartitionError::NotDivisible { .. })
+        ));
+    }
+
+    #[test]
+    fn reads_within_tile_boundary() {
+        let pra = matmul_pra(4);
+        let arch = TcpaArch::paper(2, 2);
+        let p = Partition::lsgp(&pra, &arch).unwrap();
+        assert!(p.reads_within_tile(&[1, 1, 0], &[0, 1, 0]));
+        assert!(!p.reads_within_tile(&[1, 0, 0], &[0, 1, 0]));
+    }
+}

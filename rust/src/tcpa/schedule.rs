@@ -1,0 +1,411 @@
+//! TCPA scheduling (paper §III-D): assign every equation a functional unit
+//! and an intra-iteration start offset τᵢ, pick the initiation interval II,
+//! and construct the linear loop schedule λ* = (λʲ, λᵏ).
+//!
+//! * Intra-iteration: modulo list scheduling over the PE's FU complement
+//!   (conservative: all equations are scheduled together even though
+//!   condition spaces make some mutually exclusive — matching TURTLE's
+//!   all-combinations code generation).
+//! * λʲ realizes the lexicographic scan of a tile: `λʲ_k = II · Π_{l>k} p_l`,
+//!   so iteration `j` starts `II · rank(j)` cycles into its tile.
+//! * λᵏ delays each PE just enough that every inter-tile dependence arrives
+//!   in time (wavefront start), including the interconnect hop delay.
+//!
+//! Because the construction is symbolic in the loop bounds (closed forms in
+//! `p`, `t`), *compile time is independent of the problem size and the PE
+//! count* — the paper's central scalability claim for TCPAs (§IV-4).
+
+use crate::ir::affine::{dot, IVec};
+use crate::ir::op::FuClass;
+use crate::ir::pra::Pra;
+use crate::util::ceil_div;
+
+use super::arch::TcpaArch;
+use super::partition::Partition;
+
+/// A complete loop schedule.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub ii: u32,
+    /// Per-equation start offset within an iteration.
+    pub tau: Vec<u32>,
+    /// Per-equation FU assignment (class, instance).
+    pub fu: Vec<(FuClass, usize)>,
+    /// Intra-tile schedule vector (start of iteration j = λʲ·j).
+    pub lambda_j: IVec,
+    /// Inter-tile schedule vector (start of PE k = λᵏ·k).
+    pub lambda_k: IVec,
+    /// Length of one iteration's schedule: max(τ + latency).
+    pub iter_len: u32,
+}
+
+/// Scheduling failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SchedError {
+    /// No II up to the bound satisfied all constraints.
+    NoIi { tried_up_to: u32 },
+}
+
+impl std::fmt::Display for SchedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchedError::NoIi { tried_up_to } => {
+                write!(f, "no feasible II up to {tried_up_to}")
+            }
+        }
+    }
+}
+
+/// Interconnect delay in cycles for an inter-tile hop (adjacent PEs, §III-A).
+pub const HOP_DELAY: i64 = 1;
+
+impl Schedule {
+    /// Cycle (relative to the tile start) at which iteration `j` issues.
+    pub fn iter_start(&self, j: &[i64]) -> i64 {
+        dot(&self.lambda_j, j)
+    }
+
+    /// Start cycle of PE (tile) `k`.
+    pub fn pe_start(&self, k: &[i64]) -> i64 {
+        dot(&self.lambda_k, k)
+    }
+
+    /// Completion time of a single tile after its start.
+    pub fn tile_span(&self, part: &Partition) -> i64 {
+        let last: IVec = part.tile.iter().map(|&p| p - 1).collect();
+        self.iter_start(&last) + self.iter_len as i64
+    }
+
+    /// Latency until the *first* PE completes (paper Fig. 6 plots this
+    /// separately — it bounds when the next invocation may start).
+    pub fn first_pe_latency(&self, part: &Partition) -> i64 {
+        self.tile_span(part)
+    }
+
+    /// Latency until the *last* PE completes (full-problem latency).
+    pub fn last_pe_latency(&self, part: &Partition) -> i64 {
+        let lastk: IVec = part.grid.iter().map(|&t| t - 1).collect();
+        self.pe_start(&lastk) + self.tile_span(part)
+    }
+}
+
+/// Group equations that are *alternatives* of each other: equations defining
+/// the same variable (or output array) on the same FU class apply under
+/// disjoint condition spaces, so TURTLE's instantiator folds them into a
+/// single instruction slot whose operand sources are switched by GC control
+/// signals (§III-F). Returns per-equation group ids and the groups.
+pub fn alternative_groups(pra: &Pra) -> (Vec<usize>, Vec<Vec<usize>>) {
+    use std::collections::HashMap;
+    let mut key_to_group: HashMap<(usize, usize, u8), usize> = HashMap::new();
+    let mut group_of = vec![0usize; pra.eqs.len()];
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for (e, eq) in pra.eqs.iter().enumerate() {
+        // key: (0, var) or (1, array) plus FU class
+        let key = match (eq.var, &eq.output) {
+            (Some(v), _) => (0usize, v, class_idx(eq.op.fu_class()) as u8),
+            (None, Some((a, _))) => (1usize, *a, class_idx(eq.op.fu_class()) as u8),
+            _ => unreachable!(),
+        };
+        let g = *key_to_group.entry(key).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        group_of[e] = g;
+        groups[g].push(e);
+    }
+    (group_of, groups)
+}
+
+/// Compute a schedule for a partitioned PRA on the given architecture.
+pub fn schedule(pra: &Pra, part: &Partition, arch: &TcpaArch) -> Result<Schedule, SchedError> {
+    let n_eq = pra.eqs.len();
+    let deps = pra.dependences();
+    let (group_of, groups) = alternative_groups(pra);
+
+    // resource lower bound: instruction slots (groups) per FU class
+    let mut class_count = [0usize; 4];
+    for g in &groups {
+        let c = pra.eqs[g[0]].op.fu_class();
+        class_count[class_idx(c)] += 1;
+    }
+    let ii_res = FuClass::ALL
+        .iter()
+        .map(|&c| {
+            let cnt = class_count[class_idx(c)] as u64;
+            let fus = arch.fus.count(c) as u64;
+            if cnt == 0 {
+                1
+            } else {
+                ceil_div(cnt, fus.max(1)) as u32
+            }
+        })
+        .max()
+        .unwrap_or(1);
+
+    const II_MAX: u32 = 256;
+    'ii_loop: for ii in ii_res..=II_MAX {
+        // ---- intra-iteration list schedule of groups over d = 0 deps ----
+        let order = topo_d0(pra);
+        let mut gorder: Vec<usize> = Vec::new();
+        for &e in &order {
+            if !gorder.contains(&group_of[e]) {
+                gorder.push(group_of[e]);
+            }
+        }
+        let mut gtau: Vec<Option<u32>> = vec![None; groups.len()];
+        let mut gfu: Vec<(FuClass, usize)> = vec![(FuClass::Add, 0); groups.len()];
+        // per (class, instance): reserved slots mod ii
+        let mut busy: Vec<Vec<Vec<bool>>> = FuClass::ALL
+            .iter()
+            .map(|&c| vec![vec![false; ii as usize]; arch.fus.count(c).max(1)])
+            .collect();
+
+        for &g in &gorder {
+            // earliest start: max over zero-distance deps into any member
+            let mut t: u32 = deps
+                .iter()
+                .filter(|d| {
+                    groups[g].contains(&d.to)
+                        && d.d.iter().all(|&x| x == 0)
+                        && group_of[d.from] != g
+                })
+                .filter_map(|d| {
+                    gtau[group_of[d.from]]
+                        .map(|tf| tf + pra.eqs[d.from].op.latency())
+                })
+                .max()
+                .unwrap_or(0);
+            let class = pra.eqs[groups[g][0]].op.fu_class();
+            let ci = class_idx(class);
+            let n_inst = arch.fus.count(class).max(1);
+            let mut placed = false;
+            for _ in 0..(2 * ii) {
+                for inst in 0..n_inst {
+                    if !busy[ci][inst][(t % ii) as usize] {
+                        busy[ci][inst][(t % ii) as usize] = true;
+                        gtau[g] = Some(t);
+                        gfu[g] = (class, inst);
+                        placed = true;
+                        break;
+                    }
+                }
+                if placed {
+                    break;
+                }
+                t += 1;
+            }
+            if !placed {
+                continue 'ii_loop;
+            }
+        }
+        let tau: Vec<u32> = (0..n_eq).map(|e| gtau[group_of[e]].unwrap()).collect();
+        let fu: Vec<(FuClass, usize)> = (0..n_eq).map(|e| gfu[group_of[e]]).collect();
+
+        // ---- λʲ: lexicographic tile scan ----
+        let n = part.dims();
+        let mut lambda_j: IVec = vec![0; n];
+        let mut stride = ii as i64;
+        for k in (0..n).rev() {
+            lambda_j[k] = stride;
+            stride *= part.tile[k];
+        }
+
+        // ---- check d ≠ 0 dependences against λʲ ----
+        // producer result at τ_from + lat must be ready by λʲ·d + τ_to
+        for d in &deps {
+            if d.d.iter().all(|&x| x == 0) {
+                continue;
+            }
+            let lat = pra.eqs[d.from].op.latency() as i64;
+            let lhs = tau[d.from] as i64 + lat;
+            let rhs = dot(&lambda_j, &d.d) + tau[d.to] as i64;
+            if lhs > rhs {
+                continue 'ii_loop;
+            }
+        }
+
+        // ---- λᵏ: wavefront start offsets ----
+        let mut lambda_k: IVec = vec![0; n];
+        for d in &deps {
+            for m in part.crossing_dims(&d.d) {
+                // boundary producer j, consumer j' = j + d − p_m·e_m
+                // (in the neighboring tile). Need:
+                //   λᵏ_m + λʲ·j' + τ_to ≥ λʲ·j + τ_from + lat + HOP_DELAY
+                // with λʲ·(j − j') = λʲ_m·p_m − λʲ·d.
+                let lat = pra.eqs[d.from].op.latency() as i64;
+                let need = lambda_j[m] * part.tile[m] - dot(&lambda_j, &d.d)
+                    + tau[d.from] as i64
+                    + lat
+                    + HOP_DELAY
+                    - tau[d.to] as i64;
+                if need > lambda_k[m] {
+                    lambda_k[m] = need;
+                }
+            }
+        }
+
+        let iter_len = (0..n_eq)
+            .map(|e| tau[e] + pra.eqs[e].op.latency())
+            .max()
+            .unwrap_or(1);
+
+        return Ok(Schedule {
+            ii,
+            tau,
+            fu,
+            lambda_j,
+            lambda_k,
+            iter_len,
+        });
+    }
+    Err(SchedError::NoIi { tried_up_to: II_MAX })
+}
+
+fn class_idx(c: FuClass) -> usize {
+    match c {
+        FuClass::Add => 0,
+        FuClass::Mul => 1,
+        FuClass::Div => 2,
+        FuClass::Copy => 3,
+    }
+}
+
+/// Topological order of equations over zero-distance dependences.
+fn topo_d0(pra: &Pra) -> Vec<usize> {
+    let n = pra.eqs.len();
+    let deps = pra.dependences();
+    let mut indeg = vec![0usize; n];
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for d in &deps {
+        if d.d.iter().all(|&x| x == 0) && d.from != d.to {
+            indeg[d.to] += 1;
+            succ[d.from].push(d.to);
+        }
+    }
+    let mut q: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let mut out = Vec::with_capacity(n);
+    while let Some(v) = q.pop() {
+        out.push(v);
+        for &s in &succ[v] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                q.push(s);
+            }
+        }
+    }
+    assert_eq!(out.len(), n, "zero-distance dependence cycle in PRA");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::gemm_pra as matmul_pra;
+
+    #[test]
+    fn gemm_schedules_at_ii_1() {
+        // paper Table II: TURTLE GEMM II = 1 (4 ops fit the 7-FU PE)
+        let pra = matmul_pra(20);
+        let arch = TcpaArch::paper(4, 4);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let s = schedule(&pra, &part, &arch).unwrap();
+        assert_eq!(s.ii, 1, "GEMM must reach II=1 on the paper's PE");
+    }
+
+    #[test]
+    fn lambda_j_is_lex_scan() {
+        let pra = matmul_pra(20);
+        let arch = TcpaArch::paper(4, 4);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let s = schedule(&pra, &part, &arch).unwrap();
+        // tile 5×5×20, II=1: λʲ = (100, 20, 1)
+        assert_eq!(s.lambda_j, vec![100, 20, 1]);
+        // iteration start = II·rank(j)
+        for j in part.intra.points().take(50) {
+            assert_eq!(
+                s.iter_start(&j),
+                s.ii as i64 * part.intra.rank(&j) as i64
+            );
+        }
+    }
+
+    #[test]
+    fn dependences_satisfied_by_schedule() {
+        let pra = matmul_pra(20);
+        let arch = TcpaArch::paper(4, 4);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let s = schedule(&pra, &part, &arch).unwrap();
+        for d in pra.dependences() {
+            let lat = pra.eqs[d.from].op.latency() as i64;
+            let lhs = s.tau[d.from] as i64 + lat;
+            let rhs = dot(&s.lambda_j, &d.d) + s.tau[d.to] as i64;
+            if d.d.iter().all(|&x| x == 0) {
+                if d.from != d.to {
+                    assert!(lhs <= rhs, "intra-iteration dep {:?} violated", d);
+                }
+            } else {
+                assert!(lhs <= rhs, "intra-tile dep {:?} violated", d);
+            }
+        }
+    }
+
+    #[test]
+    fn wavefront_offsets_positive_for_crossing_dims() {
+        let pra = matmul_pra(20);
+        let arch = TcpaArch::paper(4, 4);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let s = schedule(&pra, &part, &arch).unwrap();
+        // dims 0 and 1 cross tiles (a/b propagation): positive offsets
+        assert!(s.lambda_k[0] > 0);
+        assert!(s.lambda_k[1] > 0);
+        assert_eq!(s.lambda_k[2], 0);
+    }
+
+    #[test]
+    fn latencies_first_vs_last_pe() {
+        let pra = matmul_pra(20);
+        let arch = TcpaArch::paper(4, 4);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let s = schedule(&pra, &part, &arch).unwrap();
+        let first = s.first_pe_latency(&part);
+        let last = s.last_pe_latency(&part);
+        assert!(first > 0 && last > first);
+        // first PE computes 500 iterations at II=1 plus drain
+        assert!(first >= 500, "got {first}");
+        assert!(first <= 520, "got {first}");
+    }
+
+    #[test]
+    fn fu_slots_exclusive_modulo_ii_per_group() {
+        let pra = matmul_pra(4);
+        let arch = TcpaArch::paper(2, 2);
+        let part = Partition::lsgp(&pra, &arch).unwrap();
+        let s = schedule(&pra, &part, &arch).unwrap();
+        // no two *groups* share (class, instance, τ mod II); alternatives
+        // within a group intentionally share their slot
+        let (group_of, groups) = alternative_groups(&pra);
+        let mut seen = std::collections::HashSet::new();
+        for (g, members) in groups.iter().enumerate() {
+            let e = members[0];
+            let key = (s.fu[e], s.tau[e] % s.ii);
+            assert!(seen.insert(key), "FU slot collision for group {g}: {:?}", key);
+            // members agree on τ and FU
+            for &m in members {
+                assert_eq!(s.tau[m], s.tau[e]);
+                assert_eq!(s.fu[m], s.fu[e]);
+                assert_eq!(group_of[m], g);
+            }
+        }
+    }
+
+    #[test]
+    fn alternatives_grouped_by_var_and_class() {
+        let pra = matmul_pra(4);
+        let (_, groups) = alternative_groups(&pra);
+        // a: S1a+S1b share; b: S2a+S2b share; p alone; c: S4a (copy) and
+        // S4b (add) are different classes -> separate; out S5D alone
+        assert!(groups.iter().any(|g| g.len() == 2));
+        let n_eqs: usize = groups.iter().map(|g| g.len()).sum();
+        assert_eq!(n_eqs, pra.eqs.len());
+    }
+}

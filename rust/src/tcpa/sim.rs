@@ -1,0 +1,506 @@
+//! Cycle-accurate TCPA array simulator.
+//!
+//! Executes a compiled configuration event-by-event: every active equation
+//! instance reads its operands at `PE-start + λʲ·j + τ` (RD registers, FD
+//! FIFO pops, channel ID pops, AG-addressed I/O buffer reads) and commits its
+//! result `latency` cycles later (RD writes, FD pushes, OD→channel sends,
+//! AG-addressed output writes). All writes of a cycle commit before any read
+//! of the same cycle — exactly the register-file semantics of the RTL.
+//!
+//! The simulator *measures* what the compiler only estimated: FIFO and
+//! channel occupancies, per-PE completion times, and any timing violation
+//! (a FIFO underflow or a channel value consumed before arrival), which
+//! would indicate a scheduling bug and is asserted zero by the test suite.
+
+use std::collections::HashMap;
+
+use crate::ir::affine::{unit, vadd, IVec};
+use crate::ir::loopnest::ArrayData;
+use crate::ir::op::{OpKind, Value};
+use crate::ir::pra::{Arg, EqId, VarId};
+
+use super::arch::TcpaArch;
+use super::config::TcpaConfig;
+use super::gc::Gc;
+use super::iobuf::{IoBuffers, IoOverflow};
+use super::registers::RegKind;
+use super::schedule::HOP_DELAY;
+
+/// Result of one simulated kernel execution.
+#[derive(Debug, Clone)]
+pub struct TcpaSimResult {
+    pub outputs: ArrayData,
+    /// Cycle at which the last PE completed.
+    pub cycles: u64,
+    /// Cycle at which the first PE completed (paper Fig. 6's lower series).
+    pub first_pe_done: u64,
+    pub per_pe_done: Vec<u64>,
+    pub issued_ops: u64,
+    /// Maximum FD FIFO occupancy observed (validated against the binding).
+    pub max_fd_occupancy: usize,
+    /// Maximum inter-PE channel occupancy observed.
+    pub max_channel_occupancy: usize,
+    /// FIFO underflows / premature channel consumption (must be 0).
+    pub timing_violations: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Event {
+    cycle: i64,
+    /// 0 = write (commit), 1 = read (issue).
+    phase: u8,
+    tile: u32,
+    j_rank: u32,
+    eq: u16,
+}
+
+/// A value destination derived from the register binding: all consumers of
+/// `var` at distance `d` share one physical resource.
+#[derive(Debug, Clone)]
+struct Dest {
+    d: IVec,
+    kind: RegKind,
+    consumers: Vec<EqId>,
+}
+
+struct PeState {
+    rd: Vec<Value>,
+    fd: HashMap<usize, std::collections::VecDeque<Value>>,
+    chan: HashMap<usize, std::collections::VecDeque<(i64, Value)>>,
+}
+
+/// Simulate one compiled kernel over the given inputs.
+pub fn simulate(
+    cfg: &TcpaConfig,
+    arch: &TcpaArch,
+    inputs: &ArrayData,
+) -> Result<TcpaSimResult, IoOverflow> {
+    let pra = &cfg.pra;
+    let part = &cfg.part;
+    let sched = &cfg.sched;
+    let gc = Gc::new(pra, part);
+    let mut io = IoBuffers::new(pra, inputs, arch)?;
+
+    // --- destinations per variable --------------------------------------
+    // RDs are shared (one write serves all same-iteration readers); FIFO
+    // destinations are per-consumer (VD multicast), identified by their
+    // FIFO/channel id.
+    let mut dests: HashMap<VarId, Vec<Dest>> = HashMap::new();
+    {
+        let mut seen_rd: Vec<(VarId, usize)> = Vec::new();
+        for s in &cfg.binding.sinks {
+            match &s.kind {
+                RegKind::Rd { slot } => {
+                    if seen_rd.contains(&(s.var, *slot)) {
+                        continue;
+                    }
+                    seen_rd.push((s.var, *slot));
+                    dests.entry(s.var).or_default().push(Dest {
+                        d: s.d.clone(),
+                        kind: s.kind.clone(),
+                        consumers: vec![s.to_eq],
+                    });
+                }
+                _ => {
+                    dests.entry(s.var).or_default().push(Dest {
+                        d: s.d.clone(),
+                        kind: s.kind.clone(),
+                        consumers: vec![s.to_eq],
+                    });
+                }
+            }
+        }
+    }
+    // sink lookup per (eq, arg position)
+    let mut sink_of: HashMap<(EqId, usize), RegKind> = HashMap::new();
+    for s in &cfg.binding.sinks {
+        sink_of.insert((s.to_eq, s.arg_pos), s.kind.clone());
+    }
+
+    // --- event list (static: the schedule fully determines timing) ------
+    let tiles: Vec<IVec> = part.inter.points().collect();
+    let mut events: Vec<Event> = Vec::new();
+    for (tr, k) in tiles.iter().enumerate() {
+        let start = sched.pe_start(k);
+        for (jr, j) in part.intra.points().enumerate() {
+            let i = part.global(k, &j);
+            let ibase = start + sched.iter_start(&j);
+            for (e, eq) in pra.eqs.iter().enumerate() {
+                if !eq.cond.contains(&i) {
+                    continue;
+                }
+                let t_read = ibase + sched.tau[e] as i64;
+                let t_write = t_read + eq.op.latency() as i64;
+                events.push(Event {
+                    cycle: t_read,
+                    phase: 1,
+                    tile: tr as u32,
+                    j_rank: jr as u32,
+                    eq: e as u16,
+                });
+                events.push(Event {
+                    cycle: t_write,
+                    phase: 0,
+                    tile: tr as u32,
+                    j_rank: jr as u32,
+                    eq: e as u16,
+                });
+            }
+        }
+    }
+    events.sort_unstable();
+
+    // --- simulation state ------------------------------------------------
+    let n_tiles = tiles.len();
+    let mut pes: Vec<PeState> = (0..n_tiles)
+        .map(|_| PeState {
+            rd: vec![pra.dtype.zero(); arch.rd_regs.max(cfg.binding.rd_used)],
+            fd: HashMap::new(),
+            chan: HashMap::new(),
+        })
+        .collect();
+    let mut pending: HashMap<(u32, u32, u16), Value> = HashMap::new();
+    let mut per_pe_done = vec![0u64; n_tiles];
+    let mut issued = 0u64;
+    let mut violations = 0u64;
+    let mut max_fd = 0usize;
+    let mut max_chan = 0usize;
+
+    for ev in &events {
+        let k = &tiles[ev.tile as usize];
+        let j = part.intra.unrank(ev.j_rank as u64);
+        let i = part.global(k, &j);
+        let e = ev.eq as usize;
+        let eq = &pra.eqs[e];
+        if ev.phase == 1 {
+            // ---- read/issue ----
+            let mut argv: Vec<Value> = Vec::with_capacity(eq.args.len());
+            for (pos, arg) in eq.args.iter().enumerate() {
+                let v = match arg {
+                    Arg::Const(c) => pra.dtype.from_i64(*c),
+                    Arg::Input { array, map } => {
+                        let addr = pra.arrays[*array].linearize(&map.apply(&i));
+                        io.read(*array, addr)
+                    }
+                    Arg::Var { d, .. } => {
+                        let kind = sink_of
+                            .get(&(e, pos))
+                            .expect("unbound sink")
+                            .clone();
+                        read_operand(
+                            &mut pes[ev.tile as usize],
+                            &kind,
+                            &gc,
+                            &j,
+                            d,
+                            ev.cycle,
+                            pra.dtype,
+                            &mut violations,
+                        )
+                    }
+                };
+                argv.push(v);
+            }
+            let val = match eq.op {
+                OpKind::Mov => argv[0],
+                op => Value::apply(op, &argv),
+            };
+            pending.insert((ev.tile, ev.j_rank, ev.eq), val);
+            issued += 1;
+        } else {
+            // ---- write/commit ----
+            let val = pending
+                .remove(&(ev.tile, ev.j_rank, ev.eq))
+                .expect("write without read");
+            if let Some((array, map)) = &eq.output {
+                let addr = pra.arrays[*array].linearize(&map.apply(&i));
+                io.write(*array, addr, val);
+            }
+            if let Some(var) = eq.var {
+                if let Some(dest_list) = dests.get(&var) {
+                    for dest in dest_list {
+                        write_dest(
+                            &mut pes,
+                            part,
+                            &gc,
+                            &tiles,
+                            ev.tile as usize,
+                            dest,
+                            k,
+                            &j,
+                            ev.cycle,
+                            val,
+                            &mut max_fd,
+                            &mut max_chan,
+                        );
+                    }
+                }
+            }
+            per_pe_done[ev.tile as usize] =
+                per_pe_done[ev.tile as usize].max(ev.cycle.max(0) as u64);
+        }
+    }
+
+    let cycles = per_pe_done.iter().copied().max().unwrap_or(0);
+    let first = per_pe_done.iter().copied().min().unwrap_or(0);
+    Ok(TcpaSimResult {
+        outputs: io.outputs(pra),
+        cycles,
+        first_pe_done: first,
+        per_pe_done,
+        issued_ops: issued,
+        max_fd_occupancy: max_fd,
+        max_channel_occupancy: max_chan,
+        timing_violations: violations,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn read_operand(
+    pe: &mut PeState,
+    kind: &RegKind,
+    gc: &Gc<'_>,
+    j: &[i64],
+    d: &[i64],
+    cycle: i64,
+    dtype: crate::ir::op::Dtype,
+    violations: &mut u64,
+) -> Value {
+    match kind {
+        RegKind::Rd { slot } => pe.rd[*slot],
+        RegKind::Fd { fifo, .. } => match pe.fd.entry(*fifo).or_default().pop_front() {
+            Some(v) => v,
+            None => {
+                *violations += 1;
+                dtype.zero()
+            }
+        },
+        RegKind::Channel {
+            channel, intra, ..
+        } => {
+            if gc.source_is_local(j, d) {
+                read_operand(pe, intra, gc, j, d, cycle, dtype, violations)
+            } else {
+                match pe.chan.entry(*channel).or_default().pop_front() {
+                    Some((arrive, v)) => {
+                        if arrive > cycle {
+                            *violations += 1;
+                        }
+                        v
+                    }
+                    None => {
+                        *violations += 1;
+                        dtype.zero()
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_dest(
+    pes: &mut [PeState],
+    part: &super::partition::Partition,
+    gc: &Gc<'_>,
+    tiles: &[IVec],
+    tile: usize,
+    dest: &Dest,
+    k: &[i64],
+    j: &[i64],
+    cycle: i64,
+    val: Value,
+    max_fd: &mut usize,
+    max_chan: &mut usize,
+) {
+    match &dest.kind {
+        RegKind::Rd { slot } => {
+            pes[tile].rd[*slot] = val;
+        }
+        RegKind::Fd { fifo, .. } => {
+            // push only when an in-tile consumer will pop it
+            if gc.consumer_location(&dest.consumers, k, j, &dest.d) == Some(true) {
+                let q = pes[tile].fd.entry(*fifo).or_default();
+                q.push_back(val);
+                *max_fd = (*max_fd).max(q.len());
+            }
+        }
+        RegKind::Channel {
+            channel,
+            dim,
+            intra,
+            ..
+        } => match gc.consumer_location(&dest.consumers, k, j, &dest.d) {
+            Some(true) => {
+                // interior: use the intra-tile binding
+                let inner = Dest {
+                    d: dest.d.clone(),
+                    kind: intra.as_ref().clone(),
+                    consumers: dest.consumers.clone(),
+                };
+                write_dest(
+                    pes, part, gc, tiles, tile, &inner, k, j, cycle, val, max_fd, max_chan,
+                );
+            }
+            Some(false) => {
+                // boundary: send to the neighboring tile in `dim`
+                let k_next = vadd(k, &unit(part.dims(), *dim));
+                if part.inter.contains(&k_next) {
+                    let dest_tile = part.inter.rank(&k_next) as usize;
+                    let q = pes[dest_tile].chan.entry(*channel).or_default();
+                    q.push_back((cycle + HOP_DELAY, val));
+                    *max_chan = (*max_chan).max(q.len());
+                }
+            }
+            None => {}
+        },
+    }
+}
+
+/// Simulate a multi-kernel workload (e.g. ATAX's two PRAs) back-to-back,
+/// chaining intermediate arrays through the I/O buffers. Returns the final
+/// outputs plus per-kernel results. `total_latency` is the sum of last-PE
+/// latencies; `overlapped_latency` is the *restart interval* — the earliest
+/// a following invocation of the same workload may start, i.e. the sum of
+/// first-PE latencies (the paper's §V-A overlapped-invocation argument).
+/// A batch of `k` invocations therefore takes
+/// `total_latency + (k − 1) · overlapped_latency` cycles.
+pub struct WorkloadRun {
+    pub outputs: ArrayData,
+    pub kernels: Vec<TcpaSimResult>,
+    pub total_latency: u64,
+    pub overlapped_latency: u64,
+}
+
+pub fn simulate_workload(
+    cfgs: &[TcpaConfig],
+    arch: &TcpaArch,
+    inputs: &ArrayData,
+) -> Result<WorkloadRun, IoOverflow> {
+    let mut pool = inputs.clone();
+    let mut outs = ArrayData::new();
+    let mut kernels = Vec::new();
+    let mut total = 0u64;
+    let mut overlapped = 0u64;
+    for cfg in cfgs {
+        let r = simulate(cfg, arch, &pool)?;
+        for (name, data) in &r.outputs {
+            pool.insert(name.clone(), data.clone());
+            outs.insert(name.clone(), data.clone());
+        }
+        total += r.cycles;
+        overlapped += r.first_pe_done;
+        kernels.push(r);
+    }
+    Ok(WorkloadRun {
+        outputs: outs,
+        kernels,
+        total_latency: total,
+        overlapped_latency: overlapped.min(total),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::{build, inputs as bench_inputs, BenchId};
+    use crate::ir::op::Dtype;
+    use crate::tcpa::config::compile;
+
+    fn check_close(a: &[Value], b: &[Value], dtype: Dtype, ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: length");
+        for (x, y) in a.iter().zip(b.iter()) {
+            match dtype {
+                Dtype::I32 => assert_eq!(x, y, "{ctx}"),
+                Dtype::F32 => {
+                    let (x, y) = (x.as_f64(), y.as_f64());
+                    assert!(
+                        (x - y).abs() <= 1e-3 * (1.0 + x.abs()),
+                        "{ctx}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    fn run_bench(id: BenchId, n: i64, w: usize, h: usize) {
+        let wl = build(id, n);
+        let arch = TcpaArch::paper(w, h);
+        let cfgs: Vec<_> = wl
+            .pras
+            .iter()
+            .map(|p| compile(p, &arch).expect("compile"))
+            .collect();
+        let ins = bench_inputs(id, n, 11);
+        let want = wl.reference_pra(&ins);
+        let run = simulate_workload(&cfgs, &arch, &ins).expect("simulate");
+        for k in &run.kernels {
+            assert_eq!(k.timing_violations, 0, "{}: timing violations", id.name());
+        }
+        for name in wl.output_names() {
+            check_close(
+                &run.outputs[&name],
+                &want[&name],
+                id.dtype(),
+                &format!("{} output {}", id.name(), name),
+            );
+        }
+        assert!(run.overlapped_latency <= run.total_latency);
+    }
+
+    #[test]
+    fn gemm_simulates_correctly_4x4() {
+        run_bench(BenchId::Gemm, 8, 4, 4);
+    }
+
+    #[test]
+    fn gemm_simulates_correctly_2x2() {
+        run_bench(BenchId::Gemm, 4, 2, 2);
+    }
+
+    #[test]
+    fn atax_two_kernels() {
+        run_bench(BenchId::Atax, 8, 4, 4);
+    }
+
+    #[test]
+    fn gesummv_simulates() {
+        run_bench(BenchId::Gesummv, 8, 4, 4);
+    }
+
+    #[test]
+    fn mvt_simulates() {
+        run_bench(BenchId::Mvt, 8, 4, 4);
+    }
+
+    #[test]
+    fn trisolv_simulates() {
+        run_bench(BenchId::Trisolv, 8, 4, 4);
+    }
+
+    #[test]
+    fn trsm_simulates() {
+        run_bench(BenchId::Trsm, 8, 4, 4);
+    }
+
+    #[test]
+    fn sim_latency_matches_closed_form() {
+        let wl = build(BenchId::Gemm, 8);
+        let arch = TcpaArch::paper(4, 4);
+        let cfg = compile(&wl.pras[0], &arch).unwrap();
+        let ins = bench_inputs(BenchId::Gemm, 8, 3);
+        let r = simulate(&cfg, &arch, &ins).unwrap();
+        assert_eq!(r.cycles, cfg.last_pe_latency());
+        assert_eq!(r.first_pe_done, cfg.first_pe_latency());
+    }
+
+    #[test]
+    fn fifo_occupancy_within_binding_estimate() {
+        let wl = build(BenchId::Gemm, 16);
+        let arch = TcpaArch::paper(4, 4);
+        let cfg = compile(&wl.pras[0], &arch).unwrap();
+        let ins = bench_inputs(BenchId::Gemm, 16, 3);
+        let r = simulate(&cfg, &arch, &ins).unwrap();
+        assert!(r.max_fd_occupancy <= cfg.binding.fd_words);
+    }
+}

@@ -1,0 +1,112 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the vendored crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments: positionals + key/value options + flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argument list. Every `--key` followed by a non-`--` token
+    /// becomes an option; a trailing or `--key`-followed-by-`--other` token
+    /// becomes a flag. `--key=value` is always an option.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let toks: Vec<String> = raw.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.options.insert(
+                        stripped[..eq].to_string(),
+                        stripped[eq + 1..].to_string(),
+                    );
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.options
+                        .insert(stripped.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn opt_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    /// Parse a comma-separated list of usize, e.g. `--sizes 4,8,16`.
+    pub fn opt_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.opt(name) {
+            Some(s) => s
+                .split(',')
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_positional_options_flags() {
+        let a = parse(&["table2", "--bench", "gemm", "--verbose", "--n=8"]);
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.opt("bench"), Some("gemm"));
+        assert_eq!(a.opt("n"), Some("8"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["--sizes", "4,8,16"]);
+        assert_eq!(a.opt_usize_list("sizes", &[1]), vec![4, 8, 16]);
+        assert_eq!(a.opt_usize_list("other", &[1]), vec![1]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.opt_usize("n", 7), 7);
+        assert_eq!(a.opt_str("x", "d"), "d");
+    }
+}

@@ -1,0 +1,44 @@
+//! Small self-contained utilities (the vendored crate set is limited to the
+//! `xla` closure, so RNG, tables, JSON and CLI parsing are hand-rolled on std).
+
+pub mod rng;
+pub mod table;
+pub mod json;
+pub mod cli;
+
+/// Ceiling division for non-negative integers.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Ceiling division for i64 (used for RecMII = ceil(latency / distance)).
+#[inline]
+pub fn ceil_div_i64(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    if a <= 0 {
+        0
+    } else {
+        (a + b - 1) / b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn ceil_div_i64_negative_clamps_to_zero() {
+        assert_eq!(ceil_div_i64(-3, 2), 0);
+        assert_eq!(ceil_div_i64(3, 2), 2);
+    }
+}

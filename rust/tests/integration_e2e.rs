@@ -1,0 +1,100 @@
+//! End-to-end: XLA golden model (JAX/Pallas-lowered HLO via PJRT) vs both
+//! cycle-accurate simulators, through the coordinator — all three layers
+//! composing. Uses the artifacts from `make artifacts` when present and the
+//! hermetic interpreter fallback otherwise.
+
+use repro::bench::harness;
+use repro::bench::workloads::{build, inputs, BenchId};
+use repro::coordinator::{Request, Session, Target};
+use repro::ir::op::Dtype;
+use repro::runtime::golden::{GoldenService, GoldenSource};
+
+#[test]
+fn golden_vs_simulators_all_benchmarks() {
+    let mut session = Session::new();
+    for id in BenchId::ALL {
+        for target in [Target::Tcpa, Target::Cgra] {
+            let resp = session.handle(&Request {
+                bench: id,
+                n: 8,
+                target,
+                batch: 1,
+                validate: true,
+                seed: 99,
+            });
+            assert!(
+                resp.error.is_none(),
+                "{} on {:?}: {:?}",
+                id.name(),
+                target,
+                resp.error
+            );
+            assert_eq!(
+                resp.validated,
+                Some(true),
+                "{} on {:?} failed golden validation",
+                id.name(),
+                target
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_golden_used_when_artifacts_present() {
+    let mut svc = GoldenService::new();
+    let ins = inputs(BenchId::Gemm, 8, 1);
+    let (_, src) = svc.run(BenchId::Gemm, 8, &ins).unwrap();
+    if std::path::Path::new("artifacts/MANIFEST").exists() {
+        assert_eq!(src, GoldenSource::Xla, "artifacts exist but XLA not used");
+    } else {
+        eprintln!("artifacts missing; interpreter fallback exercised");
+        assert_eq!(src, GoldenSource::Interpreter);
+    }
+}
+
+#[test]
+fn golden_matches_both_ir_interpreters() {
+    let mut svc = GoldenService::new();
+    for id in BenchId::ALL {
+        let n = 8;
+        let wl = build(id, n);
+        let ins = inputs(id, n, 17);
+        let (golden, _) = svc.run(id, n, &ins).unwrap();
+        let nest_ref = wl.reference_nest(&ins);
+        let pra_ref = wl.reference_pra(&ins);
+        for name in wl.output_names() {
+            for (which, other) in [("nest", &nest_ref), ("pra", &pra_ref)] {
+                for (a, b) in golden[&name].iter().zip(other[&name].iter()) {
+                    match id.dtype() {
+                        Dtype::I32 => {
+                            assert_eq!(a, b, "{}/{name} golden vs {which}", id.name())
+                        }
+                        Dtype::F32 => {
+                            let (x, y) = (a.as_f64(), b.as_f64());
+                            assert!(
+                                (x - y).abs() <= 1e-3 * (1.0 + x.abs()),
+                                "{}/{name} golden vs {which}: {x} vs {y}",
+                                id.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn harness_validate_all_benchmarks() {
+    for id in BenchId::ALL {
+        harness::validate(id, 8, 5).unwrap_or_else(|e| panic!("{}: {e}", id.name()));
+    }
+}
+
+#[test]
+fn paper_size_gemm_validates_against_xla() {
+    // the paper's GEMM size (N = 20) end to end
+    let lines = harness::validate(BenchId::Gemm, 20, 123).expect("validate n=20");
+    assert_eq!(lines.len(), 2);
+}

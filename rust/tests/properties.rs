@@ -1,0 +1,280 @@
+//! Property-based tests (hand-rolled generators on the deterministic
+//! xorshift RNG — the vendored crate set has no proptest). Each property
+//! runs across many random cases and checks a structural invariant of the
+//! compilation pipelines.
+
+use repro::cgra::arch::CgraArch;
+use repro::cgra::mapper::{map, MapOpts};
+use repro::frontend::dfg_gen::{generate, GenOpts};
+use repro::frontend::mii;
+use repro::frontend::transforms::unroll_innermost;
+use repro::ir::affine::dot;
+use repro::ir::loopnest::{idx, ArrayData, ArrayKind, Expr, LoopNest, NestBuilder};
+use repro::ir::op::{Dtype, OpKind, Value};
+use repro::ir::space::RectSpace;
+use repro::tcpa::arch::TcpaArch;
+use repro::tcpa::config::compile;
+use repro::tcpa::partition::Partition;
+use repro::util::rng::Rng;
+
+/// Random rectangular nest: 1–3 dims, small extents, a reduction-flavored
+/// body over 2 input arrays and 1 in-out array.
+fn random_nest(rng: &mut Rng) -> LoopNest {
+    let depth = 1 + rng.below(3);
+    let extents: Vec<i64> = (0..depth).map(|_| 2 + rng.below(3) as i64).collect();
+    let out_dims = 1 + rng.below(depth.min(2));
+    let out_shape: Vec<i64> = extents[..out_dims].to_vec();
+    let mut b = NestBuilder::new("rand", Dtype::I32);
+    for (k, &e) in extents.iter().enumerate() {
+        b = b.dim(&format!("i{k}"), e);
+    }
+    b = b
+        .array("X", extents.clone(), ArrayKind::Input)
+        .array("Y", extents.clone(), ArrayKind::Input)
+        .array("O", out_shape, ArrayKind::InOut);
+    let full_idx: Vec<_> = (0..depth).map(|k| idx(depth, k)).collect();
+    let out_idx: Vec<_> = (0..out_dims).map(|k| idx(depth, k)).collect();
+    let op = *rng.choose(&[OpKind::Add, OpKind::Sub, OpKind::Mul]);
+    let inner = Expr::bin(
+        op,
+        Expr::read(0, full_idx.clone()),
+        Expr::read(1, full_idx),
+    );
+    let body = Expr::bin(OpKind::Add, Expr::read(2, out_idx.clone()), inner);
+    b.stmt("O", out_idx, body).finish()
+}
+
+fn random_inputs(rng: &mut Rng, nest: &LoopNest) -> ArrayData {
+    let mut m = ArrayData::new();
+    for a in &nest.arrays {
+        m.insert(
+            a.name.clone(),
+            (0..a.len())
+                .map(|_| Value::I32(rng.range_i64(-9, 10) as i32))
+                .collect(),
+        );
+    }
+    m
+}
+
+#[test]
+fn prop_dfg_generation_preserves_semantics() {
+    let mut rng = Rng::new(0xD0D0);
+    for case in 0..60 {
+        let nest = random_nest(&mut rng);
+        let ins = random_inputs(&mut rng, &nest);
+        let want = nest.execute(&ins);
+        for opts in [GenOpts::flat(), GenOpts::naive()] {
+            let gen = generate(&nest, &opts).expect("dfg gen");
+            let got = gen.dfg.execute(&ins);
+            assert_eq!(got["O"], want["O"], "case {case}: {:?}", opts);
+        }
+    }
+}
+
+#[test]
+fn prop_unroll_preserves_semantics() {
+    let mut rng = Rng::new(0xBEE);
+    for case in 0..40 {
+        let nest = random_nest(&mut rng);
+        // only even innermost extents are unrollable by 2 (bumping the
+        // extent would read outside the generated arrays)
+        let d = nest.depth();
+        if nest.dims[d - 1].extent.c % 2 != 0 {
+            continue;
+        }
+        let ins = random_inputs(&mut rng, &nest);
+        let want = nest.execute(&ins);
+        let un = unroll_innermost(&nest, 2).expect("unroll");
+        assert_eq!(un.execute(&ins)["O"], want["O"], "case {case} (nest)");
+        let gen = generate(&un, &GenOpts::flat()).expect("dfg");
+        assert_eq!(gen.dfg.execute(&ins)["O"], want["O"], "case {case} (dfg)");
+    }
+}
+
+#[test]
+fn prop_mapping_respects_all_dependences() {
+    let mut rng = Rng::new(0xAB);
+    let arch = CgraArch::classical(4, 4);
+    for case in 0..12 {
+        let nest = random_nest(&mut rng);
+        let gen = generate(&nest, &GenOpts::flat()).expect("dfg");
+        let opts = MapOpts {
+            seed: case,
+            ..MapOpts::negotiated()
+        };
+        let m = match map(&gen.dfg, &arch, &gen.inter_iteration_hazards, &opts) {
+            Ok(m) => m,
+            Err(e) => panic!("case {case}: mapping failed: {e}"),
+        };
+        // every dependence satisfied: τ_src + lat ≤ τ_dst + II·dist
+        for (s, d, dist) in gen.dfg.sched_deps() {
+            let lhs = m.tau[s] as i64 + gen.dfg.nodes[s].kind.latency() as i64;
+            let rhs = m.tau[d] as i64 + (m.ii as i64) * dist as i64;
+            assert!(lhs <= rhs, "case {case}: dep ({s}->{d},{dist})");
+        }
+        // every route has exactly the slack it claims
+        for rp in &m.routes {
+            assert_eq!(rp.path.len() as i64 - 1, rp.slack, "case {case}");
+        }
+        // achieved II is at least the analytic lower bound
+        let lb = mii::mii(
+            &gen.dfg,
+            &gen.inter_iteration_hazards,
+            arch.n_pes(),
+            arch.mem_pes().len(),
+        );
+        assert!(m.ii >= lb, "case {case}: II {} < bound {lb}", m.ii);
+    }
+}
+
+#[test]
+fn prop_partition_is_exact_cover() {
+    let mut rng = Rng::new(0x51);
+    for _ in 0..40 {
+        let dims = 1 + rng.below(3);
+        let w = 1 + rng.below(4);
+        let h = 1 + rng.below(4);
+        let extents: Vec<i64> = (0..dims)
+            .map(|k| {
+                let grid = if k == 0 { h as i64 } else if k == 1 { w as i64 } else { 1 };
+                grid * (1 + rng.below(4) as i64)
+            })
+            .collect();
+        let pra = repro::ir::pra::PraBuilder::new("p", Dtype::I32, extents.clone())
+            .var("x")
+            .eq(
+                "e",
+                "x",
+                OpKind::Mov,
+                vec![repro::ir::pra::Arg::Const(1)],
+                repro::ir::space::CondSpace::all(),
+            )
+            .finish();
+        let arch = TcpaArch::paper(w, h);
+        let part = match Partition::lsgp(&pra, &arch) {
+            Ok(p) => p,
+            Err(e) => panic!("partition failed for {extents:?} on {w}x{h}: {e}"),
+        };
+        // decompose∘global == identity and the tiles cover the space exactly
+        let space = RectSpace::new(extents);
+        let mut count = 0u64;
+        for i in space.points() {
+            let (k, j) = part.decompose(&i);
+            assert!(part.inter.contains(&k));
+            assert!(part.intra.contains(&j));
+            assert_eq!(part.global(&k, &j), i);
+            count += 1;
+        }
+        assert_eq!(count, part.n_tiles() * part.iterations_per_pe());
+    }
+}
+
+#[test]
+fn prop_tcpa_schedule_satisfies_dependences() {
+    let mut rng = Rng::new(0x77);
+    use repro::bench::workloads::{build, BenchId};
+    for _ in 0..10 {
+        let id = *rng.choose(&BenchId::ALL.as_slice());
+        let n = 8;
+        let wl = build(id, n);
+        let arch = TcpaArch::paper(4, 4);
+        for pra in &wl.pras {
+            let cfg = compile(pra, &arch).expect("compile");
+            for dep in pra.dependences() {
+                let lat = pra.eqs[dep.from].op.latency() as i64;
+                let lhs = cfg.sched.tau[dep.from] as i64 + lat;
+                let rhs =
+                    dot(&cfg.sched.lambda_j, &dep.d) + cfg.sched.tau[dep.to] as i64;
+                if dep.d.iter().all(|&x| x == 0) {
+                    if dep.from != dep.to {
+                        assert!(lhs <= rhs, "{}: intra dep {:?}", id.name(), dep);
+                    }
+                } else {
+                    assert!(lhs <= rhs, "{}: dep {:?}", id.name(), dep);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simulated_latency_equals_closed_form() {
+    use repro::bench::workloads::{build, inputs, BenchId};
+    use repro::tcpa::sim::simulate;
+    let mut rng = Rng::new(0x99);
+    for _ in 0..6 {
+        let id = *rng.choose(&[BenchId::Gemm, BenchId::Gesummv, BenchId::Trisolv].as_slice());
+        let wl = build(id, 8);
+        let arch = TcpaArch::paper(4, 4);
+        let cfg = compile(&wl.pras[0], &arch).unwrap();
+        let r = simulate(&cfg, &arch, &inputs(id, 8, rng.next_u64())).unwrap();
+        // the closed form is an upper bound tight to within one iteration's
+        // schedule length: the final iterations of a tile need not activate
+        // the latest-scheduled equation (condition spaces)
+        let slack = cfg.sched.iter_len as u64;
+        assert!(
+            r.cycles <= cfg.last_pe_latency() && r.cycles + slack >= cfg.last_pe_latency(),
+            "{}: sim {} vs closed {}",
+            id.name(),
+            r.cycles,
+            cfg.last_pe_latency()
+        );
+        // triangular problems leave whole tiles with no active equations
+        // (e.g. TRISOLV's strict upper triangle), so compare the earliest
+        // *busy* PE against the closed form
+        let first_busy = r
+            .per_pe_done
+            .iter()
+            .copied()
+            .filter(|&c| c > 0)
+            .min()
+            .unwrap_or(0);
+        assert!(
+            first_busy <= cfg.first_pe_latency()
+                && first_busy + slack >= cfg.first_pe_latency().min(first_busy + slack),
+            "{}: first {} vs closed {}",
+            id.name(),
+            first_busy,
+            cfg.first_pe_latency()
+        );
+    }
+}
+
+#[test]
+fn prop_paula_roundtrip_random_conditions() {
+    // random 2-D PRAs written as PAULA text parse back to the same semantics
+    let mut rng = Rng::new(0x42);
+    for case in 0..20 {
+        let n = 3 + rng.below(4) as i64;
+        let c = rng.range_i64(0, n);
+        let src = format!(
+            "program p{case}\ndtype i32\nspace {n} {n}\nvar x\nvar y\n\
+             input A {n} {n}\noutput B {n} {n}\n\
+             eq E1: x[i] = A[i0, i1]\n\
+             eq E2: y[i] = x[i] + 1 if i0 >= {c}\n\
+             eq E2b: y[i] = x[i] if i0 < {c}\n\
+             eq E3: B[i0, i1] = y[i]\n"
+        );
+        let pra = repro::ir::paula::parse(&src).expect("parse");
+        let mut ins = ArrayData::new();
+        ins.insert(
+            "A".into(),
+            (0..(n * n) as usize)
+                .map(|i| Value::I32(i as i32))
+                .collect(),
+        );
+        let out = pra.execute(&ins);
+        for i0 in 0..n {
+            for i1 in 0..n {
+                let base = (i0 * n + i1) as i32;
+                let want = if i0 >= c { base + 1 } else { base };
+                assert_eq!(
+                    out["B"][(i0 * n + i1) as usize],
+                    Value::I32(want),
+                    "case {case} at ({i0},{i1})"
+                );
+            }
+        }
+    }
+}
