@@ -1,0 +1,61 @@
+//! Bench: coordinator v2 throughput — a mixed PolyBench request trace served
+//! by 1 worker vs 4 workers over the shared compile cache. Demonstrates the
+//! acceptance criterion of the parallel-coordinator PR: with 4 workers,
+//! aggregate requests/sec ≥ 2× the single-worker baseline, and each distinct
+//! (bench, n, target) kernel is compiled exactly once across all workers.
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use repro::bench::workloads::BenchId;
+use repro::coordinator::{pool, Metrics, Request, Target};
+
+fn mixed_trace(n_req: usize) -> Vec<Request> {
+    Request::round_robin(&BenchId::ALL, 8, n_req, 0)
+}
+
+fn run(workers: usize, trace: &[Request]) -> (Duration, Metrics, u64) {
+    let (wall, m, responses) = pool::run_trace(workers, trace);
+    for r in &responses {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    // every compile is a recorded miss, so the merged metrics carry the
+    // single-flight invariant directly
+    let compiles = m.cache_misses;
+    (wall, m, compiles)
+}
+
+fn main() {
+    let trace = mixed_trace(96);
+    let distinct: HashSet<(BenchId, i64, Target)> =
+        trace.iter().map(|r| (r.bench, r.n, r.target)).collect();
+
+    let (w1, m1, c1) = run(1, &trace);
+    let (w4, m4, c4) = run(4, &trace);
+
+    assert_eq!(m1.served, trace.len() as u64);
+    assert_eq!(m4.served, trace.len() as u64);
+    assert_eq!(c1, distinct.len() as u64, "1-worker compiles once per kernel");
+    assert_eq!(c4, distinct.len() as u64, "4-worker compiles once per kernel");
+
+    let rps = |w: Duration| trace.len() as f64 / w.as_secs_f64().max(1e-9);
+    let speedup = w1.as_secs_f64() / w4.as_secs_f64().max(1e-9);
+    println!(
+        "{:<52} {:>10.1} req/s",
+        format!("serve: {} mixed requests, 1 worker", trace.len()),
+        rps(w1)
+    );
+    println!(
+        "{:<52} {:>10.1} req/s  ({speedup:.2}x)",
+        format!("serve: {} mixed requests, 4 workers", trace.len()),
+        rps(w4)
+    );
+    println!("cache: {} distinct kernels, compiled once each", distinct.len());
+    println!("4-worker metrics:\n{}", m4.report());
+    if speedup < 2.0 {
+        eprintln!(
+            "WARNING: speedup {speedup:.2}x below the 2x acceptance target \
+             (core-starved machine?)"
+        );
+    }
+}

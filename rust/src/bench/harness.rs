@@ -20,7 +20,9 @@ use crate::util::table::Table;
 use super::toolchains::{feature_matrix, rows_for, OptLevel, RowSpec, Tool};
 use super::workloads::{build, inputs, BenchId, Workload};
 
-/// Result of mapping one benchmark under one toolchain row.
+/// Result of mapping one benchmark under one toolchain row. Immutable once
+/// built; the coordinator's compile cache shares rows across workers behind
+/// an `Arc` rather than cloning the embedded mappings.
 #[derive(Debug, Clone)]
 pub struct MapRow {
     pub bench: BenchId,
@@ -98,7 +100,8 @@ pub fn map_cgra_row(wl: &Workload, spec: &RowSpec) -> MapRow {
     }
 }
 
-/// TURTLE result over a workload (one config per PRA kernel).
+/// TURTLE result over a workload (one config per PRA kernel). Immutable
+/// once built and shared across coordinator workers behind an `Arc`.
 #[derive(Debug, Clone)]
 pub struct TurtleRow {
     pub bench: BenchId,
@@ -576,9 +579,12 @@ pub fn validate(id: BenchId, n: i64, seed: u64) -> Result<Vec<String>, String> {
         }
     }
     compare(&want, &run.outputs, &wl, "TCPA")?;
+    let Some(last_kernel) = run.kernels.last() else {
+        return Err("TCPA simulation produced no kernel runs".into());
+    };
     lines.push(format!(
         "TCPA (II={}, first PE {} cy, last PE {} cy): outputs match reference",
-        tr.ii, run.kernels.last().map(|k| k.first_pe_done).unwrap_or(0), run.total_latency
+        tr.ii, last_kernel.first_pe_done, run.total_latency
     ));
     Ok(lines)
 }
@@ -597,14 +603,9 @@ fn compare(
             .get(&name)
             .ok_or_else(|| format!("{what}: missing output {name}"))?;
         for (idx, (a, b)) in w.iter().zip(g.iter()).enumerate() {
-            let (x, y) = (a.as_f64(), b.as_f64());
-            let ok = match wl.id.dtype() {
-                crate::ir::op::Dtype::I32 => a == b,
-                crate::ir::op::Dtype::F32 => (x - y).abs() <= 1e-3 * (1.0 + x.abs()),
-            };
-            if !ok {
+            if !crate::ir::op::values_close(wl.id.dtype(), *a, *b) {
                 return Err(format!(
-                    "{what}: {name}[{idx}] mismatch: expected {x}, got {y}"
+                    "{what}: {name}[{idx}] mismatch: expected {a}, got {b}"
                 ));
             }
         }

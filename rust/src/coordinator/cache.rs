@@ -1,0 +1,309 @@
+//! Shared, thread-safe compile cache with single-flight semantics.
+//!
+//! The map/schedule pipeline (workload build → [`map_turtle`] /
+//! [`map_cgra_row`]) dominates request latency, so its results are cached
+//! behind an `Arc<RwLock<HashMap>>` keyed by `(BenchId, n, Target)` and
+//! shared by every worker of a [`super::pool`]. When N workers race on the
+//! same cold key, exactly one runs the pipeline (the *leader*); the rest
+//! park on a condvar and receive the leader's result — each distinct kernel
+//! is compiled once per process, which is what amortizes compile time across
+//! invocations (the §V-A batching argument at service scale).
+//!
+//! Compile failures are cached too: the pipeline is deterministic, so a
+//! failing `(bench, n, target)` would fail identically on every retry.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+use crate::bench::harness::{map_cgra_row, map_turtle, MapRow, TurtleRow};
+use crate::bench::toolchains::{rows_for, Tool};
+use crate::bench::workloads::{build, BenchId};
+use crate::tcpa::arch::TcpaArch;
+
+use super::session::Target;
+
+/// Cache key: one compiled artifact per benchmark instance per target.
+pub type CacheKey = (BenchId, i64, Target);
+
+/// A compiled, immutable, cheaply shareable kernel (always behind an `Arc`;
+/// workers clone the pointer, never the rows).
+#[derive(Debug)]
+pub enum CompiledKernel {
+    /// TURTLE-flow result: per-PRA TCPA configurations.
+    Tcpa(TurtleRow),
+    /// Register-aware CGRA mapping (Morpher profile).
+    Cgra(MapRow),
+}
+
+/// What `get_or_compile` observed for a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Result was already cached.
+    Hit,
+    /// This caller ran the compile pipeline.
+    Miss,
+    /// Another caller was compiling; this one waited for its result.
+    Waited,
+}
+
+type CacheResult = Result<Arc<CompiledKernel>, String>;
+
+/// Rendezvous for callers that arrive while the leader is compiling.
+struct Flight {
+    done: Mutex<Option<CacheResult>>,
+    cv: Condvar,
+}
+
+enum Slot {
+    InFlight(Arc<Flight>),
+    Ready(CacheResult),
+}
+
+/// What a caller holds after consulting the slot map.
+enum Claim {
+    Ready(CacheResult),
+    Join(Arc<Flight>),
+    Lead(Arc<Flight>),
+}
+
+/// Lock-striped-enough for this workload: reads (the steady state) take the
+/// RwLock in shared mode; the write lock is held only to flip slot states,
+/// never across a compile.
+pub struct CompileCache {
+    slots: RwLock<HashMap<CacheKey, Slot>>,
+    tcpa_arch: TcpaArch,
+    pub stats: CacheStats,
+}
+
+/// Atomic counters exposed to metrics and the concurrency tests.
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub waits: AtomicU64,
+    /// Actual pipeline executions — the single-flight invariant is
+    /// `compiles == distinct keys requested`.
+    pub compiles: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn waits(&self) -> u64 {
+        self.waits.load(Ordering::Relaxed)
+    }
+
+    pub fn compiles(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+}
+
+impl CompileCache {
+    pub fn new() -> CompileCache {
+        CompileCache::with_arch(TcpaArch::paper(4, 4))
+    }
+
+    pub fn with_arch(tcpa_arch: TcpaArch) -> CompileCache {
+        CompileCache {
+            slots: RwLock::new(HashMap::new()),
+            tcpa_arch,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn tcpa_arch(&self) -> &TcpaArch {
+        &self.tcpa_arch
+    }
+
+    /// Number of resident entries (ready or in flight).
+    pub fn len(&self) -> usize {
+        self.slots.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fetch the compiled kernel for `key`, compiling at most once across
+    /// all threads.
+    pub fn get_or_compile(&self, key: CacheKey) -> (CacheResult, CacheOutcome) {
+        // fast path: shared read lock
+        let seen = {
+            let slots = self.slots.read().unwrap();
+            match slots.get(&key) {
+                Some(Slot::Ready(r)) => Some(Claim::Ready(r.clone())),
+                Some(Slot::InFlight(f)) => Some(Claim::Join(f.clone())),
+                None => None,
+            }
+        };
+        let claim = match seen {
+            Some(c) => c,
+            None => {
+                // slow path: claim or join the flight under the write lock
+                let mut slots = self.slots.write().unwrap();
+                let existing = match slots.get(&key) {
+                    Some(Slot::Ready(r)) => Some(Claim::Ready(r.clone())),
+                    Some(Slot::InFlight(f)) => Some(Claim::Join(f.clone())),
+                    None => None,
+                };
+                match existing {
+                    Some(c) => c,
+                    None => {
+                        let flight = Arc::new(Flight {
+                            done: Mutex::new(None),
+                            cv: Condvar::new(),
+                        });
+                        slots.insert(key, Slot::InFlight(flight.clone()));
+                        Claim::Lead(flight)
+                    }
+                }
+            }
+        };
+
+        match claim {
+            Claim::Ready(r) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                (r, CacheOutcome::Hit)
+            }
+            Claim::Join(flight) => (self.wait(&flight), CacheOutcome::Waited),
+            Claim::Lead(flight) => {
+                // leader: compile with no lock held; a panic inside the
+                // pipeline must still resolve the flight, or every waiter
+                // (and all future requests for this key) would hang forever
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+                let arch = &self.tcpa_arch;
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || compile_kernel(key, arch),
+                ))
+                .unwrap_or_else(|p| {
+                    Err(format!("compile pipeline panicked: {}", panic_message(&p)))
+                });
+
+                {
+                    let mut slots = self.slots.write().unwrap();
+                    slots.insert(key, Slot::Ready(result.clone()));
+                }
+                {
+                    let mut done = flight.done.lock().unwrap();
+                    *done = Some(result.clone());
+                }
+                flight.cv.notify_all();
+                (result, CacheOutcome::Miss)
+            }
+        }
+    }
+
+    fn wait(&self, flight: &Flight) -> CacheResult {
+        self.stats.waits.fetch_add(1, Ordering::Relaxed);
+        let mut done = flight.done.lock().unwrap();
+        while done.is_none() {
+            done = flight.cv.wait(done).unwrap();
+        }
+        done.as_ref().unwrap().clone()
+    }
+}
+
+impl Default for CompileCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Best-effort message extraction from a caught panic payload.
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "unknown panic".into())
+}
+
+/// Run the expensive pipeline for one key. Deterministic in its inputs, so
+/// results (including failures) are safe to cache process-wide.
+fn compile_kernel(key: CacheKey, tcpa_arch: &TcpaArch) -> CacheResult {
+    let (bench, n, target) = key;
+    let wl = build(bench, n);
+    match target {
+        Target::Tcpa => {
+            let tr = map_turtle(&wl, tcpa_arch);
+            match &tr.error {
+                Some(e) => Err(e.clone()),
+                None => Ok(Arc::new(CompiledKernel::Tcpa(tr))),
+            }
+        }
+        Target::Cgra => {
+            let spec = rows_for(wl.n_loops, 4, 4)
+                .into_iter()
+                .find(|s| s.tool == Tool::Morpher)
+                .expect("morpher profile");
+            let row = map_cgra_row(&wl, &spec);
+            match &row.error {
+                Some(e) => Err(e.clone()),
+                None => Ok(Arc::new(CompiledKernel::Cgra(row))),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn hit_after_miss() {
+        let cache = CompileCache::new();
+        let key = (BenchId::Gemm, 8, Target::Tcpa);
+        let (r1, o1) = cache.get_or_compile(key);
+        assert!(r1.is_ok());
+        assert_eq!(o1, CacheOutcome::Miss);
+        let (r2, o2) = cache.get_or_compile(key);
+        assert!(r2.is_ok());
+        assert_eq!(o2, CacheOutcome::Hit);
+        assert_eq!(cache.stats.compiles(), 1);
+        assert!(Arc::ptr_eq(&r1.unwrap(), &r2.unwrap()), "shared artifact");
+    }
+
+    #[test]
+    fn failures_are_cached() {
+        let cache = CompileCache::new();
+        // GEMM N=64 overflows the CGRA scratchpad: deterministic failure
+        let key = (BenchId::Gemm, 64, Target::Cgra);
+        let (r1, o1) = cache.get_or_compile(key);
+        assert!(r1.is_err());
+        assert_eq!(o1, CacheOutcome::Miss);
+        let (r2, o2) = cache.get_or_compile(key);
+        assert!(r2.is_err());
+        assert_eq!(o2, CacheOutcome::Hit);
+        assert_eq!(cache.stats.compiles(), 1, "error not recompiled");
+    }
+
+    #[test]
+    fn concurrent_same_key_compiles_once() {
+        let cache = Arc::new(CompileCache::new());
+        let key = (BenchId::Gesummv, 8, Target::Tcpa);
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = cache.clone();
+            handles.push(thread::spawn(move || {
+                let (r, _) = c.get_or_compile(key);
+                assert!(r.is_ok());
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cache.stats.compiles(), 1, "single-flight violated");
+        assert_eq!(
+            cache.stats.hits() + cache.stats.misses() + cache.stats.waits(),
+            8
+        );
+    }
+}

@@ -1,6 +1,103 @@
-//! Simple latency/throughput metrics for the coordinator.
+//! Latency/throughput metrics for the coordinator: aggregate counters,
+//! per-target breakdowns, log₂ wall-latency histograms and queue-depth
+//! tracking. Every pool worker records into its own `Metrics` (no contention
+//! on the hot path) and the pool merges them at shutdown.
 
 use std::time::Duration;
+
+use super::session::Target;
+
+/// Log₂-bucketed histogram of request wall latencies in microseconds.
+/// Bucket `i` counts requests with `wall_us` in `[2^i, 2^(i+1))`; the last
+/// bucket absorbs the tail.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    pub buckets: [u64; 24],
+    pub count: u64,
+    pub total_us: u64,
+    pub max_us: u64,
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, wall: Duration) {
+        let us = wall.as_micros() as u64;
+        let idx = (63 - us.max(1).leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.total_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.total_us += other.total_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_us as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate percentile (bucket upper bound), `p` in `[0, 1]`. The
+    /// overflow bucket reports the observed maximum rather than a fabricated
+    /// bound.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count as f64) * p.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                return if i + 1 == self.buckets.len() {
+                    self.max_us
+                } else {
+                    1u64 << (i + 1)
+                };
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Per-target latency/outcome statistics.
+#[derive(Debug, Default, Clone)]
+pub struct TargetMetrics {
+    pub served: u64,
+    pub failed: u64,
+    pub sim_cycles: u64,
+    pub wall: Duration,
+    pub hist: LatencyHistogram,
+}
+
+impl TargetMetrics {
+    fn record(&mut self, cycles: u64, wall: Duration, ok: bool) {
+        if ok {
+            self.served += 1;
+        } else {
+            self.failed += 1;
+        }
+        self.sim_cycles += cycles;
+        self.wall += wall;
+        self.hist.record(wall);
+    }
+
+    fn merge(&mut self, other: &TargetMetrics) {
+        self.served += other.served;
+        self.failed += other.failed;
+        self.sim_cycles += other.sim_cycles;
+        self.wall += other.wall;
+        self.hist.merge(&other.hist);
+    }
+}
 
 /// Aggregated statistics over served requests.
 #[derive(Debug, Default, Clone)]
@@ -9,9 +106,18 @@ pub struct Metrics {
     pub failed: u64,
     pub total_sim_cycles: u64,
     pub total_wall: Duration,
-    /// Compile-cache hits/misses.
+    /// Compile-cache hits/misses (a wait on another worker's in-flight
+    /// compile counts as a hit: this worker did not run the pipeline).
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Per-target breakdowns with latency histograms.
+    pub tcpa: TargetMetrics,
+    pub cgra: TargetMetrics,
+    /// Highest backlog (requests still queued behind the one being taken)
+    /// this worker observed at dequeue time.
+    pub peak_queue_depth: u64,
+    /// Workers merged into this aggregate (1 for a plain session).
+    pub workers: u64,
 }
 
 impl Metrics {
@@ -28,6 +134,40 @@ impl Metrics {
         } else {
             self.cache_misses += 1;
         }
+    }
+
+    /// Record a request including its per-target breakdown.
+    pub fn record_request(
+        &mut self,
+        target: Target,
+        cycles: u64,
+        wall: Duration,
+        ok: bool,
+        cache_hit: bool,
+    ) {
+        self.record(cycles, wall, ok, cache_hit);
+        match target {
+            Target::Tcpa => self.tcpa.record(cycles, wall, ok),
+            Target::Cgra => self.cgra.record(cycles, wall, ok),
+        }
+    }
+
+    pub fn observe_queue_depth(&mut self, depth: u64) {
+        self.peak_queue_depth = self.peak_queue_depth.max(depth);
+    }
+
+    /// Fold another worker's metrics into this aggregate.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.served += other.served;
+        self.failed += other.failed;
+        self.total_sim_cycles += other.total_sim_cycles;
+        self.total_wall += other.total_wall;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.tcpa.merge(&other.tcpa);
+        self.cgra.merge(&other.cgra);
+        self.peak_queue_depth = self.peak_queue_depth.max(other.peak_queue_depth);
+        self.workers += other.workers.max(1);
     }
 
     /// Simulated PE-cycles per wall-clock second (simulator throughput).
@@ -52,6 +192,29 @@ impl Metrics {
             self.sim_cycles_per_sec()
         )
     }
+
+    /// Multi-line report including per-target histograms and queue depth.
+    pub fn report(&self) -> String {
+        let line = |name: &str, t: &TargetMetrics| {
+            format!(
+                "  {name:<5} served={:<6} failed={:<4} mean={:.0}us p50={}us p99={}us max={}us",
+                t.served,
+                t.failed,
+                t.hist.mean_us(),
+                t.hist.percentile_us(0.50),
+                t.hist.percentile_us(0.99),
+                t.hist.max_us,
+            )
+        };
+        format!(
+            "{}\n{}\n{}\n  peak queue depth: {} | workers merged: {}",
+            self.summary(),
+            line("tcpa", &self.tcpa),
+            line("cgra", &self.cgra),
+            self.peak_queue_depth,
+            self.workers.max(1),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -70,5 +233,53 @@ mod tests {
         assert_eq!(m.cache_hits, 2);
         assert!(m.sim_cycles_per_sec() > 0.0);
         assert!(m.summary().contains("served=2"));
+    }
+
+    #[test]
+    fn per_target_breakdown() {
+        let mut m = Metrics::default();
+        m.record_request(Target::Tcpa, 100, Duration::from_micros(300), true, false);
+        m.record_request(Target::Cgra, 200, Duration::from_micros(700), true, true);
+        m.record_request(Target::Cgra, 0, Duration::from_micros(9), false, true);
+        assert_eq!(m.tcpa.served, 1);
+        assert_eq!(m.cgra.served, 1);
+        assert_eq!(m.cgra.failed, 1);
+        assert_eq!(m.served, 2);
+        assert_eq!(m.tcpa.hist.count, 1);
+        assert_eq!(m.cgra.hist.count, 2);
+        assert!(m.report().contains("tcpa"));
+    }
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        let mut h = LatencyHistogram::default();
+        for us in [1u64, 2, 3, 4, 100, 1000, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count, 7);
+        assert_eq!(h.max_us, 100_000);
+        assert!(h.mean_us() > 0.0);
+        // p50 upper bound must not exceed p99's
+        assert!(h.percentile_us(0.5) <= h.percentile_us(0.99));
+        let mut h2 = LatencyHistogram::default();
+        h2.record(Duration::from_micros(50));
+        h.merge(&h2);
+        assert_eq!(h.count, 8);
+    }
+
+    #[test]
+    fn merge_folds_workers() {
+        let mut a = Metrics::default();
+        a.record_request(Target::Tcpa, 10, Duration::from_micros(10), true, false);
+        a.observe_queue_depth(3);
+        let mut b = Metrics::default();
+        b.record_request(Target::Cgra, 20, Duration::from_micros(20), true, true);
+        b.observe_queue_depth(7);
+        a.merge(&b);
+        assert_eq!(a.served, 2);
+        assert_eq!(a.total_sim_cycles, 30);
+        assert_eq!(a.peak_queue_depth, 7);
+        assert_eq!(a.tcpa.served, 1);
+        assert_eq!(a.cgra.served, 1);
     }
 }

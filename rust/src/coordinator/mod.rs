@@ -1,11 +1,26 @@
-//! Layer-3 coordinator: the runtime a user deploys. It owns the compiled
-//! mapping caches, the simulated array "devices", the XLA golden service,
+//! Layer-3 coordinator: the runtime a user deploys. It owns the shared
+//! compile cache, the simulated array "devices", the golden-model service,
 //! and a request loop that accepts kernel invocations, dispatches them to a
 //! target array and reports latency/validation results — including the
 //! TCPA's overlapped back-to-back invocations (paper §V-A: the next call may
 //! start as soon as the first PE is free).
+//!
+//! v2 architecture (see `rust/DESIGN.md`):
+//! * [`cache`] — `Arc<RwLock<HashMap>>` compile cache with single-flight
+//!   semantics; each distinct `(bench, n, target)` is compiled exactly once
+//!   per process regardless of worker count.
+//! * [`session`] — one worker: request execution, validation, metrics.
+//! * [`pool`] — N sessions over one cache behind the channel-based
+//!   `serve()` API, with graceful drain-on-shutdown and merged metrics.
+//! * [`metrics`] — per-target latency histograms, cache hit/miss counters,
+//!   queue-depth tracking, worker merge.
 
-pub mod session;
+pub mod cache;
 pub mod metrics;
+pub mod pool;
+pub mod session;
 
+pub use cache::{CacheOutcome, CompileCache, CompiledKernel};
+pub use metrics::Metrics;
+pub use pool::{serve as serve_pool, PoolHandle, PoolSender};
 pub use session::{Request, Response, Session, Target};

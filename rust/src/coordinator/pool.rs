@@ -1,0 +1,218 @@
+//! Multi-worker coordinator service: N [`Session`] workers over one shared
+//! [`CompileCache`], fed from a single request channel and answering on a
+//! single response channel — the same channel API as [`Session::serve`],
+//! scaled across cores.
+//!
+//! Routing is work-stealing-simple: workers take the next request from the
+//! shared queue as they free up, so a slow request (cold compile, big batch)
+//! never blocks the others. Shutdown is graceful: dropping the
+//! [`PoolSender`] closes the queue, every worker finishes its in-flight
+//! request, and [`PoolHandle::join`] returns the merged [`Metrics`].
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+use super::cache::CompileCache;
+use super::metrics::Metrics;
+use super::session::{Request, Response, Session};
+
+/// Request handle into the pool. Cloneable; dropping every clone shuts the
+/// pool down once the queue drains.
+#[derive(Clone)]
+pub struct PoolSender {
+    tx: mpsc::Sender<Request>,
+    depth: Arc<AtomicI64>,
+}
+
+impl PoolSender {
+    pub fn send(&self, req: Request) -> Result<(), mpsc::SendError<Request>> {
+        self.depth.fetch_add(1, Ordering::SeqCst);
+        let r = self.tx.send(req);
+        if r.is_err() {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+        }
+        r
+    }
+
+    /// Requests enqueued but not yet picked up by a worker.
+    pub fn queue_depth(&self) -> u64 {
+        self.depth.load(Ordering::SeqCst).max(0) as u64
+    }
+}
+
+/// Join handle over the worker threads plus the shared cache.
+pub struct PoolHandle {
+    workers: Vec<thread::JoinHandle<Metrics>>,
+    cache: Arc<CompileCache>,
+}
+
+impl PoolHandle {
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn cache(&self) -> &Arc<CompileCache> {
+        &self.cache
+    }
+
+    /// Wait for every worker to drain and exit; returns the merged metrics.
+    pub fn join(self) -> Metrics {
+        let mut total = Metrics::default();
+        for w in self.workers {
+            let m = w.join().expect("pool worker panicked");
+            total.merge(&m);
+        }
+        total
+    }
+}
+
+/// Start a pool with `n_workers` sessions over a fresh shared cache.
+pub fn serve(n_workers: usize) -> (PoolSender, mpsc::Receiver<Response>, PoolHandle) {
+    serve_with_cache(n_workers, Arc::new(CompileCache::new()))
+}
+
+/// Start a pool over an existing (possibly pre-warmed) cache.
+pub fn serve_with_cache(
+    n_workers: usize,
+    cache: Arc<CompileCache>,
+) -> (PoolSender, mpsc::Receiver<Response>, PoolHandle) {
+    let n = n_workers.max(1);
+    let (req_tx, req_rx) = mpsc::channel::<Request>();
+    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    let shared_rx = Arc::new(Mutex::new(req_rx));
+    let depth = Arc::new(AtomicI64::new(0));
+
+    let mut workers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rx = shared_rx.clone();
+        let tx = resp_tx.clone();
+        let worker_cache = cache.clone();
+        let depth = depth.clone();
+        workers.push(thread::spawn(move || {
+            let mut session = Session::with_cache(worker_cache);
+            session.metrics.workers = 1;
+            loop {
+                // Hold the queue lock only while blocked in recv; handling
+                // happens unlocked so workers overlap freely.
+                let req = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let req = match req {
+                    Ok(r) => r,
+                    Err(_) => break, // every sender dropped: drain complete
+                };
+                // backlog after taking this request off the queue
+                let backlog = depth.fetch_sub(1, Ordering::SeqCst) - 1;
+                session.metrics.observe_queue_depth(backlog.max(0) as u64);
+                // A panic inside handle must not kill the worker silently:
+                // clients count one response per request, so a vanished
+                // worker would deadlock them. Convert it to an error reply.
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || session.handle(&req),
+                ));
+                let resp = match caught {
+                    Ok(r) => r,
+                    Err(p) => {
+                        session.metrics.failed += 1;
+                        Response {
+                            bench: req.bench,
+                            target: req.target,
+                            latency_cycles: 0,
+                            batch_cycles: 0,
+                            validated: None,
+                            error: Some(format!(
+                                "worker panicked: {}",
+                                super::cache::panic_message(&p)
+                            )),
+                            wall: std::time::Duration::ZERO,
+                        }
+                    }
+                };
+                if tx.send(resp).is_err() {
+                    break; // client hung up: stop consuming
+                }
+            }
+            session.metrics
+        }));
+    }
+    drop(resp_tx);
+
+    (
+        PoolSender {
+            tx: req_tx,
+            depth,
+        },
+        resp_rx,
+        PoolHandle { workers, cache },
+    )
+}
+
+/// Drive a whole trace through a fresh pool: send everything, collect one
+/// response per request, drain the workers. Returns the wall time of the
+/// send→last-response window (no I/O inside), the merged metrics, and the
+/// responses in arrival order. Shared by the `serve` CLI and the throughput
+/// bench so the timed region is defined once.
+pub fn run_trace(
+    n_workers: usize,
+    trace: &[Request],
+) -> (std::time::Duration, Metrics, Vec<Response>) {
+    let t0 = std::time::Instant::now();
+    let (tx, rx, handle) = serve(n_workers);
+    for r in trace {
+        tx.send(r.clone()).expect("pool alive");
+    }
+    let responses: Vec<Response> = (0..trace.len())
+        .map(|_| rx.recv().expect("pool response"))
+        .collect();
+    let wall = t0.elapsed();
+    drop(tx);
+    (wall, handle.join(), responses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::BenchId;
+    use crate::coordinator::session::Target;
+
+    fn req(bench: BenchId, target: Target, seed: u64) -> Request {
+        Request {
+            bench,
+            n: 8,
+            target,
+            batch: 1,
+            validate: false,
+            seed,
+        }
+    }
+
+    #[test]
+    fn pool_serves_and_drains() {
+        let (tx, rx, handle) = serve(3);
+        for i in 0..9 {
+            tx.send(req(BenchId::Gemm, Target::Tcpa, i)).unwrap();
+        }
+        let mut got = 0;
+        for _ in 0..9 {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            got += 1;
+        }
+        assert_eq!(got, 9);
+        drop(tx);
+        let m = handle.join();
+        assert_eq!(m.served, 9);
+        assert_eq!(m.workers, 3);
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let (tx, rx, handle) = serve(0);
+        tx.send(req(BenchId::Gesummv, Target::Tcpa, 1)).unwrap();
+        assert!(rx.recv().unwrap().error.is_none());
+        drop(tx);
+        assert_eq!(handle.join().workers, 1);
+    }
+}

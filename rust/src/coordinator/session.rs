@@ -1,21 +1,21 @@
-//! The coordinator session: request queue, compile caches, dispatch to the
-//! simulated arrays, golden validation, and overlapped-batch accounting.
+//! A coordinator session: request handling against the shared compile
+//! cache, dispatch to the simulated arrays, golden validation, and
+//! overlapped-batch accounting. A session is one *worker's* view of the
+//! service — [`super::pool`] runs many of them over one [`CompileCache`].
 
-use std::collections::HashMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
-use crate::bench::harness::{map_cgra_row, map_turtle, MapRow, TurtleRow};
-use crate::bench::toolchains::{rows_for, Tool};
-use crate::bench::workloads::{build, inputs, BenchId};
+use crate::bench::workloads::{inputs, BenchId};
 use crate::cgra::sim as cgra_sim;
 use crate::ir::loopnest::ArrayData;
-use crate::ir::op::Dtype;
+use crate::ir::op::values_close;
 use crate::runtime::golden::GoldenService;
-use crate::tcpa::arch::TcpaArch;
 use crate::tcpa::sim as tcpa_sim;
 
+use super::cache::{CacheOutcome, CompileCache, CompiledKernel};
 use super::metrics::Metrics;
 
 /// Which simulated array a request targets.
@@ -41,6 +41,33 @@ pub struct Request {
     pub seed: u64,
 }
 
+impl Request {
+    /// Deterministic round-robin trace over `benches` × both targets with
+    /// cycling batch sizes (1..=4) — the one workload shape shared by the
+    /// `serve` CLI, the throughput bench and the pool tests, so they all
+    /// observe the same traffic. Validation is off; callers opt in per use.
+    pub fn round_robin(benches: &[BenchId], n: i64, n_req: usize, seed: u64) -> Vec<Request> {
+        assert!(!benches.is_empty(), "round_robin wants at least one bench");
+        (0..n_req)
+            .map(|i| Request {
+                bench: benches[i % benches.len()],
+                n,
+                // flip the target once per full bench cycle, so every bench
+                // hits both targets even when benches.len() is even (a plain
+                // `i % 2` would lock bench parity to target parity)
+                target: if (i / benches.len()) % 2 == 0 {
+                    Target::Tcpa
+                } else {
+                    Target::Cgra
+                },
+                batch: 1 + (i % 4) as u64,
+                validate: false,
+                seed: seed.wrapping_add(i as u64),
+            })
+            .collect()
+    }
+}
+
 /// The coordinator's answer.
 #[derive(Debug, Clone)]
 pub struct Response {
@@ -55,89 +82,40 @@ pub struct Response {
     pub wall: std::time::Duration,
 }
 
-/// A session: owns caches and serves requests (optionally from a worker
-/// thread via [`Session::serve`]).
+/// A session: one worker over a (possibly shared) compile cache.
 pub struct Session {
-    tcpa_arch: TcpaArch,
-    tcpa_cache: HashMap<(BenchId, i64), TurtleRow>,
-    cgra_cache: HashMap<(BenchId, i64), MapRow>,
+    cache: Arc<CompileCache>,
     golden: GoldenService,
     pub metrics: Metrics,
 }
 
 impl Session {
+    /// A standalone session with a private cache.
     pub fn new() -> Session {
+        Session::with_cache(Arc::new(CompileCache::new()))
+    }
+
+    /// A session over a shared cache (what pool workers use).
+    pub fn with_cache(cache: Arc<CompileCache>) -> Session {
         Session {
-            tcpa_arch: TcpaArch::paper(4, 4),
-            tcpa_cache: HashMap::new(),
-            cgra_cache: HashMap::new(),
+            cache,
             golden: GoldenService::new(),
             metrics: Metrics::default(),
         }
     }
 
+    pub fn cache(&self) -> &Arc<CompileCache> {
+        &self.cache
+    }
+
     /// Handle one request synchronously.
     pub fn handle(&mut self, req: &Request) -> Response {
         let t0 = Instant::now();
-        let mut cache_hit = true;
-        let result = (|| -> Result<(u64, u64, ArrayData), String> {
-            match req.target {
-                Target::Tcpa => {
-                    if !self.tcpa_cache.contains_key(&(req.bench, req.n)) {
-                        cache_hit = false;
-                        let wl = build(req.bench, req.n);
-                        let tr = map_turtle(&wl, &self.tcpa_arch);
-                        if let Some(e) = &tr.error {
-                            return Err(e.clone());
-                        }
-                        self.tcpa_cache.insert((req.bench, req.n), tr);
-                    }
-                    let tr = &self.tcpa_cache[&(req.bench, req.n)];
-                    let ins = inputs(req.bench, req.n, req.seed);
-                    let run = tcpa_sim::simulate_workload(&tr.configs, &self.tcpa_arch, &ins)
-                        .map_err(|e| e.to_string())?;
-                    let single = run.total_latency;
-                    // overlapped batch: each further invocation starts after
-                    // the previous one's first PE finished
-                    let batch = if req.batch <= 1 {
-                        single
-                    } else {
-                        single + (req.batch - 1) * run.overlapped_latency.max(1)
-                    };
-                    Ok((single, batch, run.outputs))
-                }
-                Target::Cgra => {
-                    if !self.cgra_cache.contains_key(&(req.bench, req.n)) {
-                        cache_hit = false;
-                        let wl = build(req.bench, req.n);
-                        let spec = rows_for(wl.n_loops, 4, 4)
-                            .into_iter()
-                            .find(|s| s.tool == Tool::Morpher)
-                            .expect("morpher profile");
-                        let row = map_cgra_row(&wl, &spec);
-                        if let Some(e) = &row.error {
-                            return Err(e.clone());
-                        }
-                        self.cgra_cache.insert((req.bench, req.n), row);
-                    }
-                    let row = &self.cgra_cache[&(req.bench, req.n)];
-                    let ins = inputs(req.bench, req.n, req.seed);
-                    let mut pool = ins.clone();
-                    let mut outs = ArrayData::new();
-                    for (dfg, m) in &row.mappings {
-                        let r = cgra_sim::simulate(dfg, m, &pool);
-                        for (k, v) in r.outputs {
-                            pool.insert(k.clone(), v.clone());
-                            outs.insert(k, v);
-                        }
-                    }
-                    let single = row.latency.unwrap_or(0);
-                    // CGRAs drain fully between invocations (§V-A: overlapped
-                    // execution "was not available on the considered CGRAs")
-                    Ok((single, single * req.batch.max(1), outs))
-                }
-            }
-        })();
+        let (compiled, outcome) = self
+            .cache
+            .get_or_compile((req.bench, req.n, req.target));
+        let cache_hit = outcome != CacheOutcome::Miss;
+        let result = compiled.and_then(|kernel| self.execute(req, &kernel));
 
         let (resp, cycles, ok) = match result {
             Ok((single, batch, outs)) => {
@@ -175,8 +153,57 @@ impl Session {
                 false,
             ),
         };
-        self.metrics.record(cycles, resp.wall, ok, cache_hit);
+        self.metrics
+            .record_request(req.target, cycles, resp.wall, ok, cache_hit);
         resp
+    }
+
+    /// Simulate a compiled kernel: (single-invocation cycles, batch cycles,
+    /// outputs).
+    fn execute(
+        &self,
+        req: &Request,
+        kernel: &CompiledKernel,
+    ) -> Result<(u64, u64, ArrayData), String> {
+        match kernel {
+            CompiledKernel::Tcpa(tr) => {
+                let ins = inputs(req.bench, req.n, req.seed);
+                let run =
+                    tcpa_sim::simulate_workload(&tr.configs, self.cache.tcpa_arch(), &ins)
+                        .map_err(|e| e.to_string())?;
+                let single = run.total_latency;
+                // overlapped batch: each further invocation starts after
+                // the previous one's first PE finished
+                let batch = if req.batch <= 1 {
+                    single
+                } else {
+                    single + (req.batch - 1) * run.overlapped_latency.max(1)
+                };
+                Ok((single, batch, run.outputs))
+            }
+            CompiledKernel::Cgra(row) => {
+                let single = row.latency.ok_or_else(|| {
+                    format!(
+                        "CGRA mapping for {} (N={}) reports no pipelined latency",
+                        req.bench.name(),
+                        req.n
+                    )
+                })?;
+                let ins = inputs(req.bench, req.n, req.seed);
+                let mut pool = ins.clone();
+                let mut outs = ArrayData::new();
+                for (dfg, m) in &row.mappings {
+                    let r = cgra_sim::simulate(dfg, m, &pool);
+                    for (k, v) in r.outputs {
+                        pool.insert(k.clone(), v.clone());
+                        outs.insert(k, v);
+                    }
+                }
+                // CGRAs drain fully between invocations (§V-A: overlapped
+                // execution "was not available on the considered CGRAs")
+                Ok((single, single * req.batch.max(1), outs))
+            }
+        }
     }
 
     fn validate_outputs(&mut self, req: &Request, outs: &ArrayData) -> bool {
@@ -184,20 +211,13 @@ impl Session {
         let Ok((want, _)) = self.golden.run(req.bench, req.n, &ins) else {
             return false;
         };
-        let wl = build(req.bench, req.n);
+        let wl = crate::bench::workloads::build(req.bench, req.n);
         for name in wl.output_names() {
             let (Some(a), Some(b)) = (want.get(&name), outs.get(&name)) else {
                 return false;
             };
             for (x, y) in a.iter().zip(b.iter()) {
-                let ok = match req.bench.dtype() {
-                    Dtype::I32 => x == y,
-                    Dtype::F32 => {
-                        let (x, y) = (x.as_f64(), y.as_f64());
-                        (x - y).abs() <= 1e-3 * (1.0 + x.abs())
-                    }
-                };
-                if !ok {
+                if !values_close(req.bench.dtype(), *x, *y) {
                     return false;
                 }
             }
@@ -205,9 +225,10 @@ impl Session {
         true
     }
 
-    /// Spawn a worker thread serving requests from a channel; returns the
-    /// request sender and the response receiver. Dropping the sender shuts
-    /// the worker down.
+    /// Spawn a single worker thread serving requests from a channel; returns
+    /// the request sender and the response receiver. Dropping the sender
+    /// shuts the worker down. For a multi-worker service over a shared cache
+    /// use [`super::pool::serve`].
     pub fn serve() -> (mpsc::Sender<Request>, mpsc::Receiver<Response>, thread::JoinHandle<Metrics>)
     {
         let (req_tx, req_rx) = mpsc::channel::<Request>();
@@ -305,6 +326,45 @@ mod tests {
         assert!(r2.error.is_none());
         assert_eq!(s.metrics.cache_hits, 1);
         assert_eq!(r2.batch_cycles, 2 * r2.latency_cycles);
+        assert_eq!(s.cache().stats.compiles(), 1);
+    }
+
+    #[test]
+    fn compile_failure_is_a_response_error() {
+        let mut s = Session::new();
+        // GEMM N=64 overflows the CGRA scratchpad (§IV-6)
+        let resp = s.handle(&Request {
+            bench: BenchId::Gemm,
+            n: 64,
+            target: Target::Cgra,
+            batch: 1,
+            validate: false,
+            seed: 1,
+        });
+        assert!(resp.error.is_some());
+        assert_eq!(resp.latency_cycles, 0);
+        assert_eq!(s.metrics.failed, 1);
+    }
+
+    #[test]
+    fn sessions_share_a_cache() {
+        let cache = Arc::new(CompileCache::new());
+        let mut a = Session::with_cache(cache.clone());
+        let mut b = Session::with_cache(cache.clone());
+        let req = Request {
+            bench: BenchId::Atax,
+            n: 8,
+            target: Target::Tcpa,
+            batch: 1,
+            validate: false,
+            seed: 2,
+        };
+        let ra = a.handle(&req);
+        let rb = b.handle(&req);
+        assert!(ra.error.is_none() && rb.error.is_none());
+        assert_eq!(ra.latency_cycles, rb.latency_cycles);
+        assert_eq!(cache.stats.compiles(), 1, "second session reuses the artifact");
+        assert_eq!(b.metrics.cache_hits, 1);
     }
 
     #[test]

@@ -251,6 +251,27 @@ pub enum Dtype {
     F32,
 }
 
+/// Absolute term of the shared F32 validation tolerance.
+pub const F32_ABS_TOL: f64 = 1e-3;
+/// Relative term of the shared F32 validation tolerance.
+pub const F32_REL_TOL: f64 = 1e-3;
+
+/// Symmetric absolute+relative closeness test used by every F32 validation
+/// site: `|a − b| ≤ abs + rel·max(|a|, |b|)`. Symmetric in its arguments, so
+/// golden-vs-simulated and simulated-vs-golden agree on the verdict.
+pub fn f64_close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= F32_ABS_TOL + F32_REL_TOL * a.abs().max(b.abs())
+}
+
+/// Compare two values under a workload dtype: bit-exact for I32, the shared
+/// symmetric tolerance for F32.
+pub fn values_close(dtype: Dtype, a: Value, b: Value) -> bool {
+    match dtype {
+        Dtype::I32 => a == b,
+        Dtype::F32 => f64_close(a.as_f64(), b.as_f64()),
+    }
+}
+
 impl Dtype {
     pub fn zero(self) -> Value {
         match self {
@@ -332,5 +353,18 @@ mod tests {
         assert_eq!(OpKind::Store.arity(), 2);
         assert_eq!(OpKind::Load.arity(), 1);
         assert_eq!(OpKind::Const.arity(), 0);
+    }
+
+    #[test]
+    fn tolerance_is_symmetric() {
+        // the old check `|x−y| ≤ 1e-3·(1+|x|)` flipped verdicts with argument
+        // order at the boundary; the shared helper must not
+        let (a, b) = (100.0_f64, 100.09_f64);
+        assert_eq!(f64_close(a, b), f64_close(b, a));
+        assert!(f64_close(a, b));
+        assert!(!f64_close(100.0, 100.3));
+        assert!(f64_close(0.0, 0.0005) && f64_close(0.0005, 0.0));
+        assert!(values_close(Dtype::F32, Value::F32(1.0), Value::F32(1.0005)));
+        assert!(!values_close(Dtype::I32, Value::I32(1), Value::I32(2)));
     }
 }

@@ -10,14 +10,17 @@
 //! repro fig8 [--quick]        # PE-count / unroll scaling incl. bounds
 //! repro asic                   # §V-B2/§V-C2 published-chip comparison
 //! repro validate [--bench gemm] [--n 8]   # end-to-end numeric validation
-//! repro serve [--requests 16] # coordinator demo: batched invocations
+//! repro serve [--workers 4] [--requests 24] [--trace mixed|gemm] [--compare]
+//!                              # coordinator v2: worker pool + shared cache
 //! repro paula <file.paula>    # compile a PAULA program onto the TCPA
 //! repro all [--quick]         # everything above, in order
 //! ```
 
+use std::time::Duration;
+
 use repro::bench::harness;
 use repro::bench::workloads::BenchId;
-use repro::coordinator::{Request, Session, Target};
+use repro::coordinator::{pool, Metrics, Request};
 use repro::ir::paula;
 use repro::tcpa::arch::TcpaArch;
 use repro::tcpa::config::compile;
@@ -77,35 +80,47 @@ fn main() {
             }
         }
         "serve" => {
-            let n_req = args.opt_usize("requests", 12);
-            let (tx, rx, handle) = Session::serve();
-            let benches = [BenchId::Gemm, BenchId::Atax, BenchId::Gesummv];
-            for i in 0..n_req {
-                tx.send(Request {
-                    bench: benches[i % benches.len()],
-                    n: 8,
-                    target: if i % 2 == 0 { Target::Tcpa } else { Target::Cgra },
-                    batch: 1 + (i % 4) as u64,
-                    validate: true,
-                    seed: i as u64,
+            let n_req = args.opt_usize("requests", 24);
+            let workers = args.opt_usize("workers", 4);
+            let trace = build_trace(args.opt_str("trace", "mixed"), n_req);
+            // the demo validates every response against the golden model;
+            // --compare measures raw throughput, so validation is off there
+            // unless explicitly requested
+            let validate = if args.flag("compare") {
+                args.flag("validate")
+            } else {
+                !args.flag("no-validate")
+            };
+            let quiet = args.flag("quiet") || args.flag("compare");
+            let trace: Vec<Request> = trace
+                .into_iter()
+                .map(|mut r| {
+                    r.validate = validate;
+                    r
                 })
-                .unwrap();
-            }
-            for _ in 0..n_req {
-                let r = rx.recv().unwrap();
+                .collect();
+            if args.flag("compare") {
+                let (wall1, m1) = run_trace(1, &trace, true);
+                let (walln, mn) = run_trace(workers, &trace, true);
+                let rps = |w: Duration| trace.len() as f64 / w.as_secs_f64().max(1e-9);
+                println!("1 worker : {:?}  ({:.1} req/s)", wall1, rps(wall1));
                 println!(
-                    "{:<8} {:?} batch_cycles={} validated={:?} wall={:?}{}",
-                    r.bench.name(),
-                    r.target,
-                    r.batch_cycles,
-                    r.validated,
-                    r.wall,
-                    r.error.map(|e| format!(" ERROR: {e}")).unwrap_or_default()
+                    "{workers} workers: {:?}  ({:.1} req/s)  speedup {:.2}x",
+                    walln,
+                    rps(walln),
+                    wall1.as_secs_f64() / walln.as_secs_f64().max(1e-9)
                 );
+                println!("1 worker : {}", m1.summary());
+                println!("{workers} workers: {}", mn.report());
+            } else {
+                let (wall, m) = run_trace(workers, &trace, quiet);
+                println!(
+                    "{} requests on {workers} workers in {wall:?} ({:.1} req/s)",
+                    trace.len(),
+                    trace.len() as f64 / wall.as_secs_f64().max(1e-9)
+                );
+                println!("{}", m.report());
             }
-            drop(tx);
-            let m = handle.join().unwrap();
-            println!("{}", m.summary());
         }
         "paula" => {
             let path = args.positional.get(1).expect("usage: repro paula <file>");
@@ -139,9 +154,52 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: repro <table1|table2|table3|fig6|fig7|fig8|asic|validate|serve|paula|all> \
-                 [--quick] [--bench NAME] [--n N] [--sizes a,b,c]"
+                 [--quick] [--bench NAME] [--n N] [--sizes a,b,c] \
+                 [--workers N] [--requests N] [--trace mixed|NAME] [--compare] [--no-validate]"
             );
             std::process::exit(2);
         }
     }
+}
+
+/// Build a request trace: `mixed` cycles through all PolyBench benchmarks,
+/// both targets and several batch sizes; a benchmark name pins the bench and
+/// cycles targets/batches only. Unknown names are an error, not a silent
+/// fallback to the mixed trace.
+fn build_trace(kind: &str, n_req: usize) -> Vec<Request> {
+    let benches: Vec<BenchId> = if kind == "mixed" {
+        BenchId::ALL.to_vec()
+    } else {
+        match BenchId::parse(kind) {
+            Some(b) => vec![b],
+            None => {
+                eprintln!(
+                    "unknown --trace `{kind}` (want mixed or one of: {})",
+                    BenchId::ALL.map(|b| b.name()).join(", ")
+                );
+                std::process::exit(2);
+            }
+        }
+    };
+    Request::round_robin(&benches, 8, n_req, 0)
+}
+
+/// Run a trace through [`pool::run_trace`], printing the responses after
+/// the timed window so the req/s figure is not skewed by terminal I/O.
+fn run_trace(workers: usize, trace: &[Request], quiet: bool) -> (Duration, Metrics) {
+    let (wall, metrics, responses) = pool::run_trace(workers, trace);
+    if !quiet {
+        for r in responses {
+            println!(
+                "{:<8} {:?} batch_cycles={} validated={:?} wall={:?}{}",
+                r.bench.name(),
+                r.target,
+                r.batch_cycles,
+                r.validated,
+                r.wall,
+                r.error.map(|e| format!(" ERROR: {e}")).unwrap_or_default()
+            );
+        }
+    }
+    (wall, metrics)
 }

@@ -2,21 +2,23 @@
 //! XLA executables lowered from the JAX/Pallas models (`artifacts/*.hlo.txt`).
 //!
 //! When an artifact for a (benchmark, size) pair is missing — e.g. a size
-//! outside `AOT_SIZES`, or `make artifacts` not yet run — the service falls
-//! back to the pure-rust loop-nest interpreter, so tests remain hermetic.
-//! The integration suite asserts XLA ⟷ interpreter agreement whenever the
-//! artifacts are present.
+//! outside `AOT_SIZES`, `make artifacts` not yet run, or the hermetic stub
+//! build without a PJRT backend — the service falls back to the pure-rust
+//! loop-nest interpreter, so tests remain hermetic. The integration suite
+//! asserts XLA ⟷ interpreter agreement whenever the artifacts are present.
+//!
+//! Every coordinator worker owns its own `GoldenService` (the executable
+//! cache is per-instance and `run` takes `&mut self`); the service itself is
+//! `Send`, so handing one to each pool worker is free.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use anyhow::Result;
-
 use crate::bench::workloads::{build, BenchId};
 use crate::ir::loopnest::ArrayData;
 
-
-use super::pjrt::{from_literal, to_literal, Executable, PjrtRuntime};
+use super::pjrt::{from_literal, to_literal, Executable, Literal, PjrtRuntime};
+use super::Result;
 
 /// How a golden result was produced.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,7 +93,7 @@ impl GoldenService {
         let sq = [n, n];
         let v = [n];
         // argument order mirrors model.example_args
-        let args: Vec<xla::Literal> = match id {
+        let args: Vec<Literal> = match id {
             BenchId::Gemm => vec![
                 to_literal(&inputs["A"], &sq, dt)?,
                 to_literal(&inputs["B"], &sq, dt)?,
@@ -124,7 +126,7 @@ impl GoldenService {
         };
         let outs = exe.run(&args)?;
         let mut m = ArrayData::new();
-        let flat = |lit: &xla::Literal, len: i64| -> Result<Vec<crate::ir::op::Value>> {
+        let flat = |lit: &Literal, len: i64| -> Result<Vec<crate::ir::op::Value>> {
             from_literal(&lit.reshape(&[len])?, dt)
         };
         match id {
@@ -162,7 +164,7 @@ impl Default for GoldenService {
 mod tests {
     use super::*;
     use crate::bench::workloads::inputs;
-    use crate::ir::op::{Dtype, Value};
+    use crate::ir::op::{values_close, Value};
 
     fn check_agreement(id: BenchId, n: i64) {
         let mut svc = GoldenService::new();
@@ -174,17 +176,11 @@ mod tests {
             let (a, b) = (&want[&name], &got[&name]);
             assert_eq!(a.len(), b.len());
             for (x, y) in a.iter().zip(b.iter()) {
-                match id.dtype() {
-                    Dtype::I32 => assert_eq!(x, y, "{}/{name} via {src:?}", id.name()),
-                    Dtype::F32 => {
-                        let (x, y) = (x.as_f64(), y.as_f64());
-                        assert!(
-                            (x - y).abs() <= 1e-3 * (1.0 + x.abs()),
-                            "{}/{name}: {x} vs {y} via {src:?}",
-                            id.name()
-                        );
-                    }
-                }
+                assert!(
+                    values_close(id.dtype(), *x, *y),
+                    "{}/{name}: {x} vs {y} via {src:?}",
+                    id.name()
+                );
             }
         }
     }

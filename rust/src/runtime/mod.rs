@@ -1,6 +1,31 @@
 //! Runtime: load AOT-lowered HLO artifacts and execute them on the PJRT CPU
 //! client — the golden-model oracle on the rust side. Python is never on
 //! this path; `make artifacts` runs once at build time.
+//!
+//! The default build has no XLA toolchain available, so [`pjrt`] is a
+//! hermetic stub behind the same API seam and [`golden`] always serves
+//! results from the pure-rust loop-nest interpreter.
 
 pub mod pjrt;
 pub mod golden;
+
+/// Runtime-layer error (artifact loading, literal conversion, execution).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> RuntimeError {
+        RuntimeError(msg.into())
+    }
+}
+
+/// Result alias used across the runtime layer.
+pub type Result<T> = std::result::Result<T, RuntimeError>;

@@ -1,117 +1,127 @@
-//! PJRT wrapper: HLO-text artifact → compiled executable → execution with
-//! typed literals (pattern from /opt/xla-example/load_hlo).
-
-use anyhow::{anyhow, Context, Result};
+//! PJRT seam: HLO-text artifact → compiled executable → execution with
+//! typed literals.
+//!
+//! The offline build has no XLA/PJRT toolchain, so this module ships a
+//! hermetic implementation of the *interface*: [`Literal`] is a local typed
+//! buffer, and [`PjrtRuntime::cpu`] reports the backend as unavailable, which
+//! makes [`super::golden::GoldenService`] fall back to the pure-rust
+//! loop-nest interpreter. A real backend can be slotted in behind the `xla`
+//! cargo feature without touching any caller.
 
 use crate::ir::op::{Dtype, Value};
 
-/// A loaded, compiled HLO computation.
+use super::{Result, RuntimeError};
+
+/// A typed, shaped, row-major buffer — the stand-in for `xla::Literal`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    pub dtype: Dtype,
+    pub shape: Vec<i64>,
+    pub values: Vec<Value>,
+}
+
+impl Literal {
+    pub fn new(dtype: Dtype, shape: Vec<i64>, values: Vec<Value>) -> Result<Literal> {
+        let n: i64 = shape.iter().product();
+        if n as usize != values.len() {
+            return Err(RuntimeError::new(format!(
+                "literal shape {shape:?} wants {n} elements, got {}",
+                values.len()
+            )));
+        }
+        Ok(Literal {
+            dtype,
+            shape,
+            values,
+        })
+    }
+
+    /// Reinterpret under a new shape with the same element count.
+    pub fn reshape(&self, shape: &[i64]) -> Result<Literal> {
+        Literal::new(self.dtype, shape.to_vec(), self.values.clone())
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// A loaded, compiled HLO computation (unavailable in the stub build).
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
     pub name: String,
 }
 
 /// The PJRT CPU client plus an executable cache.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-}
+pub struct PjrtRuntime {}
 
 impl PjrtRuntime {
+    /// Create the CPU client. The stub build always reports unavailable; the
+    /// caller (the golden service) treats that as "use the interpreter".
     pub fn cpu() -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtRuntime { client })
+        Err(RuntimeError::new(
+            "PJRT/XLA backend not available in this build (hermetic stub; \
+             enable a real backend behind the `xla` feature)",
+        ))
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "pjrt-stub".to_string()
     }
 
     /// Load an HLO-text artifact and compile it.
     pub fn load_hlo_text(&self, path: &std::path::Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable {
-            exe,
-            name: path
-                .file_stem()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-        })
+        Err(RuntimeError::new(format!(
+            "cannot compile {}: PJRT backend unavailable",
+            path.display()
+        )))
     }
 }
 
-/// Convert a flat [`Value`] buffer to an XLA literal with the given shape.
-pub fn to_literal(data: &[Value], shape: &[i64], dtype: Dtype) -> Result<xla::Literal> {
-    let dims: Vec<usize> = shape.iter().map(|&d| d as usize).collect();
-    let lit = match dtype {
-        Dtype::I32 => {
-            let v: Vec<i32> = data
-                .iter()
-                .map(|x| match x {
-                    Value::I32(i) => *i,
-                    Value::F32(f) => *f as i32,
-                })
-                .collect();
-            xla::Literal::vec1(&v)
-        }
-        Dtype::F32 => {
-            let v: Vec<f32> = data.iter().map(|x| x.as_f64() as f32).collect();
-            xla::Literal::vec1(&v)
-        }
-    };
-    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims_i64)?)
+/// Convert a flat [`Value`] buffer to a literal with the given shape.
+pub fn to_literal(data: &[Value], shape: &[i64], dtype: Dtype) -> Result<Literal> {
+    let values: Vec<Value> = data
+        .iter()
+        .map(|x| match dtype {
+            Dtype::I32 => match x {
+                Value::I32(i) => Value::I32(*i),
+                Value::F32(f) => Value::I32(*f as i32),
+            },
+            Dtype::F32 => Value::F32(x.as_f64() as f32),
+        })
+        .collect();
+    Literal::new(dtype, shape.to_vec(), values)
 }
 
-/// Convert an XLA literal back to a flat [`Value`] buffer.
-pub fn from_literal(lit: &xla::Literal, dtype: Dtype) -> Result<Vec<Value>> {
-    Ok(match dtype {
-        Dtype::I32 => lit
-            .to_vec::<i32>()?
-            .into_iter()
-            .map(Value::I32)
-            .collect(),
-        Dtype::F32 => lit
-            .to_vec::<f32>()?
-            .into_iter()
-            .map(Value::F32)
-            .collect(),
-    })
+/// Convert a literal back to a flat [`Value`] buffer.
+pub fn from_literal(lit: &Literal, dtype: Dtype) -> Result<Vec<Value>> {
+    if lit.dtype != dtype {
+        return Err(RuntimeError::new(format!(
+            "literal dtype {:?} does not match requested {:?}",
+            lit.dtype, dtype
+        )));
+    }
+    Ok(lit.values.clone())
 }
 
 impl Executable {
     /// Execute with the given literals; returns the elements of the result
-    /// tuple (models are lowered with `return_tuple=True`).
-    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let mut result = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
-        let shape = result.shape()?;
-        let n = match &shape {
-            xla::Shape::Tuple(elems) => elems.len(),
-            _ => return Ok(vec![result]),
-        };
-        let out = result.decompose_tuple()?;
-        debug_assert_eq!(out.len(), n);
-        Ok(out)
+    /// tuple. Unreachable in the stub build — the runtime cannot hand out an
+    /// [`Executable`] in the first place.
+    pub fn run(&self, _args: &[Literal]) -> Result<Vec<Literal>> {
+        Err(RuntimeError::new(format!(
+            "cannot execute {}: PJRT backend unavailable",
+            self.name
+        )))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn artifacts_dir() -> Option<std::path::PathBuf> {
-        let dir = std::env::var("REPRO_ARTIFACTS")
-            .map(std::path::PathBuf::from)
-            .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"));
-        dir.join("MANIFEST").exists().then_some(dir)
-    }
 
     #[test]
     fn literal_roundtrip_i32() {
@@ -122,30 +132,22 @@ mod tests {
     }
 
     #[test]
-    fn load_and_run_gemm_artifact_if_present() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: no artifacts (run `make artifacts`)");
-            return;
-        };
-        let rt = PjrtRuntime::cpu().unwrap();
-        let exe = rt.load_hlo_text(&dir.join("gemm_n8.hlo.txt")).unwrap();
-        let n = 8usize;
-        let a: Vec<Value> = (0..n * n).map(|i| Value::I32((i % 5) as i32)).collect();
-        let b: Vec<Value> = (0..n * n).map(|i| Value::I32((i % 3) as i32)).collect();
-        let c: Vec<Value> = vec![Value::I32(1); n * n];
-        let args = vec![
-            to_literal(&a, &[8, 8], Dtype::I32).unwrap(),
-            to_literal(&b, &[8, 8], Dtype::I32).unwrap(),
-            to_literal(&c, &[8, 8], Dtype::I32).unwrap(),
-        ];
-        let out = exe.run(&args).unwrap();
-        assert_eq!(out.len(), 1);
-        let d = from_literal(&out[0].reshape(&[64]).unwrap(), Dtype::I32).unwrap();
-        // spot check element [0][0]: sum_k a[0,k]*b[k,0] + 1
-        let want: i64 = (0..n)
-            .map(|k| ((k % 5) as i64) * (((k * n) % 3) as i64))
-            .sum::<i64>()
-            + 1;
-        assert_eq!(d[0], Value::I32(want as i32));
+    fn literal_shape_mismatch_rejected() {
+        let vals: Vec<Value> = (0..6).map(Value::I32).collect();
+        assert!(to_literal(&vals, &[2, 2], Dtype::I32).is_err());
+        let lit = to_literal(&vals, &[6], Dtype::I32).unwrap();
+        assert!(lit.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn literal_converts_dtype() {
+        let vals = vec![Value::F32(1.5), Value::F32(2.0)];
+        let lit = to_literal(&vals, &[2], Dtype::I32).unwrap();
+        assert_eq!(lit.values, vec![Value::I32(1), Value::I32(2)]);
+    }
+
+    #[test]
+    fn stub_backend_reports_unavailable() {
+        assert!(PjrtRuntime::cpu().is_err());
     }
 }

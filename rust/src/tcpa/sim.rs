@@ -410,16 +410,10 @@ mod tests {
     fn check_close(a: &[Value], b: &[Value], dtype: Dtype, ctx: &str) {
         assert_eq!(a.len(), b.len(), "{ctx}: length");
         for (x, y) in a.iter().zip(b.iter()) {
-            match dtype {
-                Dtype::I32 => assert_eq!(x, y, "{ctx}"),
-                Dtype::F32 => {
-                    let (x, y) = (x.as_f64(), y.as_f64());
-                    assert!(
-                        (x - y).abs() <= 1e-3 * (1.0 + x.abs()),
-                        "{ctx}: {x} vs {y}"
-                    );
-                }
-            }
+            assert!(
+                crate::ir::op::values_close(dtype, *x, *y),
+                "{ctx}: {x} vs {y}"
+            );
         }
     }
 

@@ -1,0 +1,127 @@
+//! Integration: coordinator v2 — the worker pool over the shared
+//! single-flight compile cache. M workers × K duplicate requests must
+//! compile each distinct kernel exactly once, produce the same responses as
+//! a single-threaded session, and drain cleanly when the sender drops.
+
+use std::collections::HashSet;
+
+use repro::bench::workloads::BenchId;
+use repro::coordinator::{pool, CompileCache, Request, Session, Target};
+
+fn mixed_trace(n_req: usize) -> Vec<Request> {
+    // the shared trace shape, over a smaller bench set to keep tests fast
+    Request::round_robin(&[BenchId::Gemm, BenchId::Atax, BenchId::Gesummv], 8, n_req, 7)
+}
+
+fn response_key(r: &repro::coordinator::Response) -> String {
+    format!(
+        "{} {:?} lat={} batch={} validated={:?} err={:?}",
+        r.bench.name(),
+        r.target,
+        r.latency_cycles,
+        r.batch_cycles,
+        r.validated,
+        r.error
+    )
+}
+
+#[test]
+fn duplicate_requests_compile_each_kernel_exactly_once() {
+    let trace = mixed_trace(24);
+    let distinct: HashSet<(BenchId, i64, Target)> = trace
+        .iter()
+        .map(|r| (r.bench, r.n, r.target))
+        .collect();
+
+    let (tx, rx, handle) = pool::serve(4);
+    let cache = handle.cache().clone();
+    for r in &trace {
+        tx.send(r.clone()).unwrap();
+    }
+    for _ in 0..trace.len() {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    drop(tx);
+    let m = handle.join();
+
+    assert_eq!(
+        cache.stats.compiles(),
+        distinct.len() as u64,
+        "single-flight must compile each (bench, n, target) once"
+    );
+    assert_eq!(
+        m.cache_hits + m.cache_misses,
+        trace.len() as u64,
+        "every request consults the cache"
+    );
+    assert_eq!(m.served, trace.len() as u64);
+    assert_eq!(m.workers, 4);
+}
+
+#[test]
+fn pool_responses_match_single_threaded_session() {
+    let trace = mixed_trace(18);
+
+    // sequential oracle
+    let mut session = Session::new();
+    let mut want: Vec<String> = trace.iter().map(|r| response_key(&session.handle(r))).collect();
+    want.sort();
+
+    // pooled run over the same trace
+    let (tx, rx, handle) = pool::serve(4);
+    for r in &trace {
+        tx.send(r.clone()).unwrap();
+    }
+    let mut got: Vec<String> = (0..trace.len())
+        .map(|_| response_key(&rx.recv().unwrap()))
+        .collect();
+    got.sort();
+    drop(tx);
+    handle.join();
+
+    assert_eq!(got, want, "pool must be observationally equal to a session");
+}
+
+#[test]
+fn dropping_the_sender_drains_in_flight_work() {
+    let trace = mixed_trace(12);
+    let (tx, rx, handle) = pool::serve(3);
+    for r in &trace {
+        tx.send(r.clone()).unwrap();
+    }
+    // hang up immediately: everything already queued must still be served
+    drop(tx);
+    let mut served = 0;
+    while let Ok(r) = rx.recv() {
+        assert!(r.error.is_none(), "{:?}", r.error);
+        served += 1;
+    }
+    assert_eq!(served, trace.len(), "queued requests lost on shutdown");
+    let m = handle.join();
+    assert_eq!(m.served, trace.len() as u64);
+}
+
+#[test]
+fn prewarmed_cache_serves_hits_only() {
+    let cache = std::sync::Arc::new(CompileCache::new());
+    // warm synchronously through a session sharing the cache
+    let mut warmer = Session::with_cache(cache.clone());
+    let trace = mixed_trace(12);
+    for r in &trace {
+        warmer.handle(r);
+    }
+    let compiles_after_warm = cache.stats.compiles();
+
+    let (tx, rx, handle) = pool::serve_with_cache(4, cache.clone());
+    for r in &trace {
+        tx.send(r.clone()).unwrap();
+    }
+    for _ in 0..trace.len() {
+        assert!(rx.recv().unwrap().error.is_none());
+    }
+    drop(tx);
+    let m = handle.join();
+    assert_eq!(cache.stats.compiles(), compiles_after_warm, "no recompiles");
+    assert_eq!(m.cache_misses, 0, "pre-warmed pool must only hit");
+}

@@ -11,7 +11,7 @@ use repro::cgra::sim::simulate;
 use repro::frontend::dfg_gen::{generate, GenOpts};
 use repro::frontend::transforms::unroll_innermost;
 use repro::ir::loopnest::ArrayData;
-use repro::ir::op::Dtype;
+use repro::ir::op::values_close;
 
 fn run_and_check(id: BenchId, n: i64, gen_opts: &GenOpts, unroll: usize, arch: &CgraArch) {
     let wl = build(id, n);
@@ -37,19 +37,13 @@ fn run_and_check(id: BenchId, n: i64, gen_opts: &GenOpts, unroll: usize, arch: &
         }
     }
     for name in wl.output_names() {
-        match id.dtype() {
-            Dtype::I32 => assert_eq!(outs[&name], want[&name], "{}/{}", id.name(), name),
-            Dtype::F32 => {
-                for (a, b) in want[&name].iter().zip(outs[&name].iter()) {
-                    let (x, y) = (a.as_f64(), b.as_f64());
-                    assert!(
-                        (x - y).abs() <= 1e-3 * (1.0 + x.abs()),
-                        "{}/{}: {x} vs {y}",
-                        id.name(),
-                        name
-                    );
-                }
-            }
+        for (a, b) in want[&name].iter().zip(outs[&name].iter()) {
+            assert!(
+                values_close(id.dtype(), *a, *b),
+                "{}/{}: {a} vs {b}",
+                id.name(),
+                name
+            );
         }
     }
 }

@@ -6,7 +6,7 @@
 use repro::bench::harness;
 use repro::bench::workloads::{build, inputs, BenchId};
 use repro::coordinator::{Request, Session, Target};
-use repro::ir::op::Dtype;
+use repro::ir::op::values_close;
 use repro::runtime::golden::{GoldenService, GoldenSource};
 
 #[test]
@@ -66,19 +66,11 @@ fn golden_matches_both_ir_interpreters() {
         for name in wl.output_names() {
             for (which, other) in [("nest", &nest_ref), ("pra", &pra_ref)] {
                 for (a, b) in golden[&name].iter().zip(other[&name].iter()) {
-                    match id.dtype() {
-                        Dtype::I32 => {
-                            assert_eq!(a, b, "{}/{name} golden vs {which}", id.name())
-                        }
-                        Dtype::F32 => {
-                            let (x, y) = (a.as_f64(), b.as_f64());
-                            assert!(
-                                (x - y).abs() <= 1e-3 * (1.0 + x.abs()),
-                                "{}/{name} golden vs {which}: {x} vs {y}",
-                                id.name()
-                            );
-                        }
-                    }
+                    assert!(
+                        values_close(id.dtype(), *a, *b),
+                        "{}/{name} golden vs {which}: {a} vs {b}",
+                        id.name()
+                    );
                 }
             }
         }

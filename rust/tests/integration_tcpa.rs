@@ -5,7 +5,7 @@
 
 use repro::bench::workloads::{build, inputs, BenchId};
 use repro::ir::loopnest::ArrayData;
-use repro::ir::op::{Dtype, Value};
+use repro::ir::op::{values_close, Value};
 use repro::ir::paula;
 use repro::tcpa::arch::TcpaArch;
 use repro::tcpa::config::compile;
@@ -26,14 +26,13 @@ fn check(id: BenchId, n: i64, w: usize, h: usize) {
         assert_eq!(k.timing_violations, 0, "{}", id.name());
     }
     for name in wl.output_names() {
-        match id.dtype() {
-            Dtype::I32 => assert_eq!(run.outputs[&name], want[&name], "{}/{}", id.name(), name),
-            Dtype::F32 => {
-                for (a, b) in want[&name].iter().zip(run.outputs[&name].iter()) {
-                    let (x, y) = (a.as_f64(), b.as_f64());
-                    assert!((x - y).abs() <= 1e-3 * (1.0 + x.abs()), "{}", id.name());
-                }
-            }
+        for (a, b) in want[&name].iter().zip(run.outputs[&name].iter()) {
+            assert!(
+                values_close(id.dtype(), *a, *b),
+                "{}/{}: {a} vs {b}",
+                id.name(),
+                name
+            );
         }
     }
 }
