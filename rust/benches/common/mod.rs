@@ -3,6 +3,8 @@
 
 use std::time::Instant;
 
+use repro::util::json::Json;
+
 /// Run `f` `iters` times, print mean wall time per iteration and return it
 /// in milliseconds.
 pub fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
@@ -15,4 +17,44 @@ pub fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
     let per = t0.elapsed().as_secs_f64() * 1000.0 / iters as f64;
     println!("{name:<52} {per:>10.2} ms/iter  ({iters} iters)");
     per
+}
+
+/// Machine-readable bench sink: collects `name → ns/iter [+ events/sec]`
+/// records and writes them as one JSON file alongside the text report, so
+/// the perf trajectory stays diffable across PRs (see EXPERIMENTS.md §Perf).
+#[allow(dead_code)] // each bench target compiles its own copy of `common`
+pub struct JsonReport {
+    schema: &'static str,
+    entries: Vec<Json>,
+}
+
+#[allow(dead_code)]
+impl JsonReport {
+    pub fn new(schema: &'static str) -> JsonReport {
+        JsonReport {
+            schema,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Record one bench result. `events_per_sec` is the domain-level rate
+    /// (simulated array-cycles/s, mapped-cycles/s, …) when one applies.
+    pub fn record(&mut self, name: &str, ms_per_iter: f64, events_per_sec: Option<f64>) {
+        self.entries.push(Json::obj(vec![
+            ("name", Json::from(name)),
+            ("ns_per_iter", Json::Float(ms_per_iter * 1e6)),
+            (
+                "events_per_sec",
+                events_per_sec.map(Json::Float).unwrap_or(Json::Null),
+            ),
+        ]));
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        let doc = Json::obj(vec![
+            ("schema", Json::from(self.schema)),
+            ("results", Json::Array(self.entries.clone())),
+        ]);
+        std::fs::write(path, doc.render() + "\n")
+    }
 }

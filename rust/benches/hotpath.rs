@@ -1,6 +1,8 @@
 //! Bench: the three hot paths of the stack — the CGRA modulo-scheduling
 //! mapper, the CGRA cycle simulator and the TCPA array simulator — tracked
-//! across the performance pass (EXPERIMENTS.md §Perf).
+//! across the performance pass (EXPERIMENTS.md §Perf). Besides the text
+//! report, every run writes `BENCH_hotpath.json` (name → ns/iter and
+//! events/sec) so the perf trajectory is machine-diffable across PRs.
 mod common;
 use repro::bench::workloads::{build, inputs, BenchId};
 use repro::cgra::arch::CgraArch;
@@ -12,26 +14,31 @@ use repro::tcpa::config::compile;
 use repro::tcpa::sim as tcpa_sim;
 
 fn main() {
+    let mut report = common::JsonReport::new("hotpath-v1");
+
     // --- CGRA mapper: negotiated effort on the trickiest single-nest DFG ---
     let wl = build(BenchId::Trisolv, 8);
     let gen = generate(&wl.stages[0], &GenOpts::flat()).unwrap();
     let arch = CgraArch::classical(4, 4);
-    common::bench("mapper: trisolv flat on classical 4x4", 5, || {
+    let per = common::bench("mapper: trisolv flat on classical 4x4", 5, || {
         let m = map(&gen.dfg, &arch, &gen.inter_iteration_hazards, &MapOpts::negotiated());
         assert!(m.is_ok());
     });
+    report.record("mapper: trisolv flat on classical 4x4", per, None);
     let hyc = CgraArch::hycube(4, 4);
-    common::bench("mapper: trisolv flat on hycube 4x4", 5, || {
+    let per = common::bench("mapper: trisolv flat on hycube 4x4", 5, || {
         let m = map(&gen.dfg, &hyc, &gen.inter_iteration_hazards, &MapOpts::negotiated());
         assert!(m.is_ok());
     });
+    report.record("mapper: trisolv flat on hycube 4x4", per, None);
     let wl8 = build(BenchId::Gesummv, 32);
     let gen8 = generate(&wl8.stages[0], &GenOpts::flat()).unwrap();
     let arch8 = CgraArch::classical(8, 8);
-    common::bench("mapper: gesummv flat on classical 8x8", 3, || {
+    let per = common::bench("mapper: gesummv flat on classical 8x8", 3, || {
         let m = map(&gen8.dfg, &arch8, &gen8.inter_iteration_hazards, &MapOpts::negotiated());
         assert!(m.is_ok());
     });
+    report.record("mapper: gesummv flat on classical 8x8", per, None);
 
     // --- CGRA cycle simulator ---
     let m = map(&gen8.dfg, &arch8, &gen8.inter_iteration_hazards, &MapOpts::negotiated()).unwrap();
@@ -41,10 +48,9 @@ fn main() {
         let r = cgra_sim::simulate(&gen8.dfg, &m, &ins8);
         assert!(r.cycles > 0);
     });
-    println!(
-        "    -> {:.2e} mapped-cycles/s",
-        total_cycles as f64 / (per / 1000.0)
-    );
+    let cgra_rate = total_cycles as f64 / (per / 1000.0);
+    println!("    -> {:.2e} mapped-cycles/s", cgra_rate);
+    report.record("cgra sim: gesummv N=32 (full run)", per, Some(cgra_rate));
 
     // --- TCPA array simulator ---
     let wl_t = build(BenchId::Trsm, 16);
@@ -56,19 +62,28 @@ fn main() {
         let r = tcpa_sim::simulate(&cfg, &tarch, &ins_t).unwrap();
         assert_eq!(r.timing_violations, 0);
     });
+    let tcpa_rate = cyc as f64 / (per / 1000.0);
     println!(
         "    -> {:.2e} array-cycles/s ({:.2e} PE-cycles/s)",
-        cyc as f64 / (per / 1000.0),
-        cyc as f64 * 16.0 / (per / 1000.0)
+        tcpa_rate,
+        tcpa_rate * 16.0
     );
+    report.record("tcpa sim: trsm N=16 (full run)", per, Some(tcpa_rate));
 
     // --- TCPA compile (must stay size-independent) ---
-    common::bench("tcpa compile: gemm N=8", 50, || {
+    let per = common::bench("tcpa compile: gemm N=8", 50, || {
         let c = compile(&build(BenchId::Gemm, 8).pras[0], &tarch);
         assert!(c.is_ok());
     });
-    common::bench("tcpa compile: gemm N=20", 50, || {
+    report.record("tcpa compile: gemm N=8", per, None);
+    let per = common::bench("tcpa compile: gemm N=20", 50, || {
         let c = compile(&build(BenchId::Gemm, 20).pras[0], &tarch);
         assert!(c.is_ok());
     });
+    report.record("tcpa compile: gemm N=20", per, None);
+
+    match report.write("BENCH_hotpath.json") {
+        Ok(()) => println!("wrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
 }

@@ -15,6 +15,7 @@ use crate::ppa::power::PowerModel;
 use crate::tcpa::arch::TcpaArch;
 use crate::tcpa::config::{compile, TcpaConfig};
 use crate::tcpa::sim as tcpa_sim;
+use crate::util::par::par_map;
 use crate::util::table::Table;
 
 use super::toolchains::{feature_matrix, rows_for, OptLevel, RowSpec, Tool};
@@ -177,54 +178,84 @@ pub fn table1() -> Table {
 // ============================ Table II ======================================
 
 /// Mapping results of every benchmark on every toolchain (paper Table II).
-pub fn table2(benches: &[BenchId], width: usize, height: usize, quick: bool) -> (Table, Vec<MapRow>, Vec<TurtleRow>) {
+/// Every (benchmark, toolchain) point is an independent compile, so the
+/// sweep fans across cores; rows are emitted in the original deterministic
+/// order (each benchmark's toolchain rows, then its TURTLE row).
+pub fn table2(
+    benches: &[BenchId],
+    width: usize,
+    height: usize,
+    quick: bool,
+) -> (Table, Vec<MapRow>, Vec<TurtleRow>) {
     let mut t = Table::new(vec![
         "Benchmark", "Toolchain", "Optimization", "Architecture", "#Loops", "#op.",
         "II", "#unused PE", "max(#op/PE)",
     ]);
-    let mut rows_out = Vec::new();
-    let mut turtle_out = Vec::new();
     let tcpa = TcpaArch::paper(width, height);
+    let wls: Vec<Workload> = benches.iter().map(|&id| build(id, id.paper_size())).collect();
 
-    for &id in benches {
-        let wl = build(id, id.paper_size());
+    enum Point {
+        Cgra(usize, RowSpec),
+        Turtle(usize),
+    }
+    enum Res {
+        Cgra(MapRow),
+        Turtle(usize, TurtleRow),
+    }
+    let mut points = Vec::new();
+    for (i, wl) in wls.iter().enumerate() {
         for mut spec in rows_for(wl.n_loops, width, height) {
             if quick {
                 spec.map.restarts = spec.map.restarts.min(3);
             }
-            let row = map_cgra_row(&wl, &spec);
-            t.row(vec![
-                id.name().to_string(),
-                row.tool.name().to_string(),
-                row.opt.clone(),
-                row.arch.clone(),
-                row.n_loops.to_string(),
-                row.n_ops.to_string(),
-                row.ii.map(|x| x.to_string()).unwrap_or("-".into()),
-                row.unused_pes.map(|x| x.to_string()).unwrap_or("-".into()),
-                row.max_ops_per_pe
-                    .map(|x| x.to_string())
-                    .unwrap_or("-".into()),
-            ]);
-            rows_out.push(row);
+            points.push(Point::Cgra(i, spec));
         }
-        let tr = map_turtle(&wl, &tcpa);
-        t.row(vec![
-            id.name().to_string(),
-            "TURTLE".into(),
-            "-".into(),
-            tcpa.name.clone(),
-            wl.n_loops.to_string(),
-            tr.n_ops.to_string(),
-            if tr.error.is_none() {
-                tr.ii.to_string()
-            } else {
-                "-".into()
-            },
-            tr.unused_pes.to_string(),
-            tr.max_ops_per_pe.to_string(),
-        ]);
-        turtle_out.push(tr);
+        points.push(Point::Turtle(i));
+    }
+    let results = par_map(&points, |p| match p {
+        Point::Cgra(i, spec) => Res::Cgra(map_cgra_row(&wls[*i], spec)),
+        Point::Turtle(i) => Res::Turtle(*i, map_turtle(&wls[*i], &tcpa)),
+    });
+
+    let mut rows_out = Vec::new();
+    let mut turtle_out = Vec::new();
+    for res in results {
+        match res {
+            Res::Cgra(row) => {
+                t.row(vec![
+                    row.bench.name().to_string(),
+                    row.tool.name().to_string(),
+                    row.opt.clone(),
+                    row.arch.clone(),
+                    row.n_loops.to_string(),
+                    row.n_ops.to_string(),
+                    row.ii.map(|x| x.to_string()).unwrap_or("-".into()),
+                    row.unused_pes.map(|x| x.to_string()).unwrap_or("-".into()),
+                    row.max_ops_per_pe
+                        .map(|x| x.to_string())
+                        .unwrap_or("-".into()),
+                ]);
+                rows_out.push(row);
+            }
+            Res::Turtle(i, tr) => {
+                t.row(vec![
+                    tr.bench.name().to_string(),
+                    "TURTLE".into(),
+                    "-".into(),
+                    tcpa.name.clone(),
+                    wls[i].n_loops.to_string(),
+                    tr.n_ops.to_string(),
+                    if tr.error.is_none() {
+                        tr.ii.to_string()
+                    } else {
+                        "-".into()
+                    },
+                    tr.unused_pes.to_string(),
+                    tr.max_ops_per_pe.to_string(),
+                ]);
+                turtle_out.push(tr);
+            }
+        }
     }
     (t, rows_out, turtle_out)
 }
@@ -286,16 +317,26 @@ pub fn table3() -> Table {
 // ============================ Fig. 6 ========================================
 
 /// Latency vs problem size per benchmark (best CGRA-Flow, best Morpher,
-/// TCPA first/last PE).
+/// TCPA first/last PE). All (size, toolchain) sweep points run in parallel;
+/// each size's points end with its TURTLE sentinel, so the in-order fold
+/// below reconstructs the per-size best-of rows deterministically.
 pub fn fig6(id: BenchId, sizes: &[i64], quick: bool) -> Table {
     let mut t = Table::new(vec![
         "N", "CGRA-Flow", "Morpher", "TCPA first PE", "TCPA last PE",
     ]);
     let tcpa = TcpaArch::paper(4, 4);
-    for &n in sizes {
-        let wl = build(id, n);
-        let mut cf_best: Option<u64> = None;
-        let mut mo_best: Option<u64> = None;
+    let wls: Vec<Workload> = sizes.iter().map(|&n| build(id, n)).collect();
+
+    enum Point {
+        Cgra(usize, RowSpec),
+        Turtle(usize),
+    }
+    enum Res {
+        Cgra(Tool, Option<u64>),
+        Turtle(i64, TurtleRow),
+    }
+    let mut points = Vec::new();
+    for (i, wl) in wls.iter().enumerate() {
         for mut spec in rows_for(wl.n_loops, 4, 4) {
             if spec.inner_only {
                 continue;
@@ -303,32 +344,49 @@ pub fn fig6(id: BenchId, sizes: &[i64], quick: bool) -> Table {
             if quick {
                 spec.map.restarts = spec.map.restarts.min(3);
             }
-            let row = map_cgra_row(&wl, &spec);
-            if let Some(lat) = row.latency {
-                match spec.tool {
-                    Tool::CgraFlow => cf_best = Some(cf_best.map_or(lat, |b| b.min(lat))),
-                    Tool::Morpher => mo_best = Some(mo_best.map_or(lat, |b| b.min(lat))),
-                    _ => {}
+            points.push(Point::Cgra(i, spec));
+        }
+        points.push(Point::Turtle(i));
+    }
+    let results = par_map(&points, |p| match p {
+        Point::Cgra(i, spec) => Res::Cgra(spec.tool, map_cgra_row(&wls[*i], spec).latency),
+        Point::Turtle(i) => Res::Turtle(wls[*i].n, map_turtle(&wls[*i], &tcpa)),
+    });
+
+    let mut cf_best: Option<u64> = None;
+    let mut mo_best: Option<u64> = None;
+    for res in results {
+        match res {
+            Res::Cgra(tool, latency) => {
+                if let Some(lat) = latency {
+                    match tool {
+                        Tool::CgraFlow => cf_best = Some(cf_best.map_or(lat, |b| b.min(lat))),
+                        Tool::Morpher => mo_best = Some(mo_best.map_or(lat, |b| b.min(lat))),
+                        _ => {}
+                    }
                 }
             }
+            Res::Turtle(n, tr) => {
+                let fmt = |x: Option<u64>| x.map(|v| v.to_string()).unwrap_or("-".into());
+                t.row(vec![
+                    n.to_string(),
+                    fmt(cf_best),
+                    fmt(mo_best),
+                    if tr.error.is_none() {
+                        tr.latency_first.to_string()
+                    } else {
+                        "-".into()
+                    },
+                    if tr.error.is_none() {
+                        tr.latency_last.to_string()
+                    } else {
+                        "-".into()
+                    },
+                ]);
+                cf_best = None;
+                mo_best = None;
+            }
         }
-        let tr = map_turtle(&wl, &tcpa);
-        let fmt = |x: Option<u64>| x.map(|v| v.to_string()).unwrap_or("-".into());
-        t.row(vec![
-            n.to_string(),
-            fmt(cf_best),
-            fmt(mo_best),
-            if tr.error.is_none() {
-                tr.latency_first.to_string()
-            } else {
-                "-".into()
-            },
-            if tr.error.is_none() {
-                tr.latency_last.to_string()
-            } else {
-                "-".into()
-            },
-        ]);
     }
     t
 }
@@ -345,28 +403,26 @@ pub fn fig6_sizes(id: BenchId) -> Vec<i64> {
 // ============================ Fig. 7 ========================================
 
 /// Speedup of TURTLE-compiled loop nests vs each CGRA framework at the
-/// paper's sizes (GEMM 20, others 32).
+/// paper's sizes (GEMM 20, others 32). The cheap closed-form TURTLE
+/// compiles run first so a failing benchmark skips its expensive CGRA
+/// mapping sweep entirely (as the sequential driver did); the surviving
+/// (benchmark, toolchain) points then fan across cores.
 pub fn fig7(quick: bool) -> Table {
     let mut t = Table::new(vec![
         "Benchmark", "vs CGRA-Flow", "vs Morpher", "TCPA latency (last PE)",
     ]);
     let tcpa = TcpaArch::paper(4, 4);
-    for id in BenchId::PAPER5 {
-        let wl = build(id, id.paper_size());
-        let tr = map_turtle(&wl, &tcpa);
-        let tcpa_lat = if tr.error.is_none() {
-            tr.latency_last.max(1)
-        } else {
-            t.row(vec![
-                id.name().to_string(),
-                "-".to_string(),
-                "-".to_string(),
-                "-".to_string(),
-            ]);
+    let wls: Vec<Workload> = BenchId::PAPER5
+        .iter()
+        .map(|&id| build(id, id.paper_size()))
+        .collect();
+    let turtles = par_map(&wls, |wl| map_turtle(wl, &tcpa));
+
+    let mut points: Vec<(usize, RowSpec)> = Vec::new();
+    for (i, wl) in wls.iter().enumerate() {
+        if turtles[i].error.is_some() {
             continue;
-        };
-        let mut cf_best: Option<u64> = None;
-        let mut mo_best: Option<u64> = None;
+        }
         for mut spec in rows_for(wl.n_loops, 4, 4) {
             if spec.inner_only {
                 continue;
@@ -374,9 +430,32 @@ pub fn fig7(quick: bool) -> Table {
             if quick {
                 spec.map.restarts = spec.map.restarts.min(3);
             }
-            let row = map_cgra_row(&wl, &spec);
-            if let Some(lat) = row.latency {
-                match spec.tool {
+            points.push((i, spec));
+        }
+    }
+    let lats: Vec<(usize, Tool, Option<u64>)> =
+        par_map(&points, |(i, spec)| (*i, spec.tool, map_cgra_row(&wls[*i], spec).latency));
+
+    for (i, wl) in wls.iter().enumerate() {
+        let tr = &turtles[i];
+        if tr.error.is_some() {
+            t.row(vec![
+                wl.id.name().to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ]);
+            continue;
+        }
+        let tcpa_lat = tr.latency_last.max(1);
+        let mut cf_best: Option<u64> = None;
+        let mut mo_best: Option<u64> = None;
+        for (pi, tool, latency) in &lats {
+            if *pi != i {
+                continue;
+            }
+            if let Some(lat) = *latency {
+                match tool {
                     Tool::CgraFlow => cf_best = Some(cf_best.map_or(lat, |b| b.min(lat))),
                     Tool::Morpher => mo_best = Some(mo_best.map_or(lat, |b| b.min(lat))),
                     _ => {}
@@ -388,7 +467,7 @@ pub fn fig7(quick: bool) -> Table {
                 .unwrap_or("-".into())
         };
         t.row(vec![
-            id.name().into(),
+            wl.id.name().into(),
             sp(cf_best),
             sp(mo_best),
             tcpa_lat.to_string(),
@@ -401,59 +480,103 @@ pub fn fig7(quick: bool) -> Table {
 
 /// Speedup across PE counts (4×4, 8×8) and unroll levels. When no mapping is
 /// found, the theoretical ResMII/RecMII lower bound is reported with a `*`
-/// (the paper's striped bars).
+/// (the paper's striped bars). Each (benchmark, array, unroll) cell is an
+/// independent mapping job and runs in parallel; within a cell, toolchain
+/// rows keep their sequential best-of fold (the tie rule is order-sensitive).
 pub fn fig8(quick: bool) -> Table {
     let mut t = Table::new(vec![
         "Benchmark", "Array", "Unroll", "CGRA-Flow lat", "Morpher lat", "TCPA last PE",
         "speedup (best CGRA / TCPA)",
     ]);
-    for id in BenchId::PAPER5 {
-        // GEMM at 16 so both 4×4 and 8×8 arrays divide it (paper uses 20,
-        // which an 8×8 cannot tile evenly)
-        let n = if id == BenchId::Gemm { 16 } else { 32 };
+
+    // GEMM at 16 so both 4×4 and 8×8 arrays divide it (paper uses 20,
+    // which an 8×8 cannot tile evenly)
+    let wls: Vec<Workload> = BenchId::PAPER5
+        .iter()
+        .map(|&id| build(id, if id == BenchId::Gemm { 16 } else { 32 }))
+        .collect();
+
+    enum Point {
+        Turtle { wl_idx: usize, pes: usize },
+        Cell { wl_idx: usize, pes: usize, u: usize },
+    }
+    enum Res {
+        Turtle(Option<u64>),
+        Cell {
+            cf: Option<(u64, bool)>, // (latency, is_bound)
+            mo: Option<(u64, bool)>,
+        },
+    }
+    let mut points = Vec::new();
+    for wl_idx in 0..wls.len() {
         for pes in [4usize, 8usize] {
-            let tcpa = TcpaArch::paper(pes, pes);
-            let wl = build(id, n);
-            let tr = map_turtle(&wl, &tcpa);
-            let tcpa_lat = if tr.error.is_none() {
+            points.push(Point::Turtle { wl_idx, pes });
+            for u in [1usize, 2, 4] {
+                points.push(Point::Cell { wl_idx, pes, u });
+            }
+        }
+    }
+    let results = par_map(&points, |p| match p {
+        Point::Turtle { wl_idx, pes } => {
+            let tr = map_turtle(&wls[*wl_idx], &TcpaArch::paper(*pes, *pes));
+            Res::Turtle(if tr.error.is_none() {
                 Some(tr.latency_last.max(1))
             } else {
                 None
+            })
+        }
+        Point::Cell { wl_idx, pes, u } => {
+            let wl = &wls[*wl_idx];
+            let mut cf: Option<(u64, bool)> = None;
+            let mut mo: Option<(u64, bool)> = None;
+            for mut spec in rows_for(wl.n_loops, *pes, *pes) {
+                if spec.inner_only || spec.opt == OptLevel::None {
+                    continue;
+                }
+                // override the unroll factor
+                spec.opt = if *u == 1 {
+                    OptLevel::Flat
+                } else {
+                    OptLevel::FlatUnroll(*u)
+                };
+                if quick {
+                    spec.map.restarts = spec.map.restarts.min(2);
+                }
+                let target = match spec.tool {
+                    Tool::CgraFlow => &mut cf,
+                    Tool::Morpher => &mut mo,
+                    _ => continue,
+                };
+                let row = map_cgra_row(wl, &spec);
+                let entry = match row.latency {
+                    Some(lat) => (lat, false),
+                    None => match theoretical_bound(wl, &spec) {
+                        Some(lb) => (lb, true),
+                        None => continue,
+                    },
+                };
+                *target = Some(match *target {
+                    Some(prev) if prev.0 <= entry.0 => prev,
+                    _ => entry,
+                });
+            }
+            Res::Cell { cf, mo }
+        }
+    });
+
+    // emission replays the point construction order, consuming positionally
+    let mut it = results.into_iter();
+    for id in BenchId::PAPER5 {
+        for pes in [4usize, 8usize] {
+            let tcpa_lat = match it.next() {
+                Some(Res::Turtle(l)) => l,
+                _ => unreachable!("fig8 result stream out of sync"),
             };
             for u in [1usize, 2, 4] {
-                let mut cf: Option<(u64, bool)> = None; // (latency, is_bound)
-                let mut mo: Option<(u64, bool)> = None;
-                for mut spec in rows_for(wl.n_loops, pes, pes) {
-                    if spec.inner_only || spec.opt == OptLevel::None {
-                        continue;
-                    }
-                    // override the unroll factor
-                    spec.opt = if u == 1 {
-                        OptLevel::Flat
-                    } else {
-                        OptLevel::FlatUnroll(u)
-                    };
-                    if quick {
-                        spec.map.restarts = spec.map.restarts.min(2);
-                    }
-                    let target = match spec.tool {
-                        Tool::CgraFlow => &mut cf,
-                        Tool::Morpher => &mut mo,
-                        _ => continue,
-                    };
-                    let row = map_cgra_row(&wl, &spec);
-                    let entry = match row.latency {
-                        Some(lat) => (lat, false),
-                        None => match theoretical_bound(&wl, &spec) {
-                            Some(lb) => (lb, true),
-                            None => continue,
-                        },
-                    };
-                    *target = Some(match *target {
-                        Some(prev) if prev.0 <= entry.0 => prev,
-                        _ => entry,
-                    });
-                }
+                let (cf, mo) = match it.next() {
+                    Some(Res::Cell { cf, mo }) => (cf, mo),
+                    _ => unreachable!("fig8 result stream out of sync"),
+                };
                 let fmt = |x: Option<(u64, bool)>| match x {
                     Some((v, true)) => format!("{v}*"),
                     Some((v, false)) => v.to_string(),

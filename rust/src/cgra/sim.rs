@@ -66,6 +66,9 @@ pub fn simulate_on(dfg: &Dfg, m: &Mapping, spm: &mut [Vec<Value>]) -> SimResult 
 
     // execution order within a cycle: by (is_mem, pe) then node id — mem ops
     // of one bank are on one PE and one FU slot, so at most one per cycle.
+    // Each slot is sorted by (τ, v): nodes not yet started form a suffix
+    // (scan breaks early) and finished nodes form a prefix (a monotone
+    // cursor skips them), so no cycle wastes scans on inactive nodes.
     let mut by_slot: Vec<Vec<usize>> = vec![Vec::new(); m.ii as usize];
     for v in 0..n {
         by_slot[(m.tau[v] % m.ii) as usize].push(v);
@@ -73,6 +76,7 @@ pub fn simulate_on(dfg: &Dfg, m: &Mapping, spm: &mut [Vec<Value>]) -> SimResult 
     for slot in by_slot.iter_mut() {
         slot.sort_by_key(|&v| (m.tau[v], v));
     }
+    let mut first_active: Vec<usize> = vec![0; m.ii as usize];
 
     let total_cycles = if iters == 0 {
         0
@@ -84,20 +88,26 @@ pub fn simulate_on(dfg: &Dfg, m: &Mapping, spm: &mut [Vec<Value>]) -> SimResult 
 
     for c in 0..total_cycles {
         let slot = (c % ii) as usize;
-        for &v in &by_slot[slot] {
+        let list = &by_slot[slot];
+        // node v is finished once c ≥ τ(v) + iters·II (its last instance
+        // issued at τ(v) + (iters−1)·II); finished nodes are a prefix
+        let mut start = first_active[slot];
+        while start < list.len() && m.tau[list[start]] as u64 + iters * ii <= c {
+            start += 1;
+        }
+        first_active[slot] = start;
+        for &v in &list[start..] {
             // which iteration instance issues at cycle c (if any)?
             let tau = m.tau[v] as u64;
             if c < tau {
-                continue;
+                // sorted by τ: every later node starts even later
+                break;
             }
+            // slot membership means τ ≡ c (mod II), so an instance issues
             let k = c - tau;
-            if k % ii != 0 {
-                continue;
-            }
+            debug_assert_eq!(k % ii, 0);
             let it = k / ii;
-            if it >= iters {
-                continue;
-            }
+            debug_assert!(it < iters);
             let node = &dfg.nodes[v];
             let hslot = (it as usize) % depth;
             let fetch = |op: &Operand, hazards: &mut u64| -> Value {
@@ -137,12 +147,14 @@ pub fn simulate_on(dfg: &Dfg, m: &Mapping, spm: &mut [Vec<Value>]) -> SimResult 
                 }
                 OpKind::Nop => dfg.dtype.zero(),
                 kind => {
-                    let args: Vec<Value> = node
-                        .operands
-                        .iter()
-                        .map(|o| fetch(o, &mut hazards))
-                        .collect();
-                    Value::apply(kind, &args)
+                    // fixed-size operand buffer: max arity is 3 (Select),
+                    // so the per-instance Vec collect is pure overhead
+                    debug_assert!(node.operands.len() <= 3);
+                    let mut args = [dfg.dtype.zero(); 3];
+                    for (p, o) in node.operands.iter().enumerate() {
+                        args[p] = fetch(o, &mut hazards);
+                    }
+                    Value::apply(kind, &args[..node.operands.len()])
                 }
             };
             hist[v][hslot] = val;

@@ -63,6 +63,13 @@ pub fn compile(pra: &Pra, arch: &TcpaArch) -> Result<TcpaConfig, TcpaError> {
 }
 
 impl TcpaConfig {
+    /// Lower the configuration to the simulator's precompiled execution
+    /// plan (resolved register sinks, affine buffer addresses, per-tile
+    /// condition thresholds — see [`super::plan`]).
+    pub fn execution_plan(&self) -> super::plan::ExecPlan {
+        super::plan::ExecPlan::new(self)
+    }
+
     /// Closed-form latency of the first PE to complete (Fig. 6's lower
     /// series) — also the earliest time the next invocation may start.
     pub fn first_pe_latency(&self) -> u64 {

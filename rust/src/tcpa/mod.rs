@@ -5,7 +5,8 @@
 //! [`partition`] (LSGP tiling) → [`schedule`] (FU modulo scheduling + linear
 //! schedule vector λ* = (λʲ, λᵏ)) → [`registers`] (RD/FD/ID/OD/VD binding) →
 //! [`codegen`] (iteration variants, processor classes) → [`config`]
-//! (the concrete configuration) → [`sim`] (execution). [`gc`] models the
+//! (the concrete configuration) → [`plan`] (the precompiled execution plan)
+//! → [`sim`] (streaming execution). [`gc`] models the
 //! Global Controller, [`agu`] the I/O address generators, [`iobuf`] the
 //! surrounding I/O buffers fed by a LION-style transfer controller.
 
@@ -18,4 +19,5 @@ pub mod gc;
 pub mod agu;
 pub mod iobuf;
 pub mod config;
+pub mod plan;
 pub mod sim;

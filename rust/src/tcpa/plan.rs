@@ -1,0 +1,486 @@
+//! Precompiled execution plans for the TCPA array simulator.
+//!
+//! The simulator's hot loop executes one event per active equation instance.
+//! Everything that is invariant across events — which physical register a
+//! sink resolves to, the affine I/O-buffer address of an input read, the
+//! condition-space constraints, the per-tile start offsets — is resolved
+//! *once* here, so the per-event work reduces to a handful of integer dot
+//! products over ≤3-element vectors and direct `Vec` indexing. In
+//! particular:
+//!
+//! * every `Arg` is lowered to an [`ArgPlan`] with the bound [`RegKind`]
+//!   already looked up (no per-event `HashMap` probe) and input addresses
+//!   decomposed into `tile_base + ⟨j_coeffs, j⟩` (no per-event
+//!   `map.apply`/`linearize` vector allocation);
+//! * condition spaces are split into per-tile thresholds
+//!   (`⟨coeffs, j⟩ ≥ rhs − ⟨coeffs∘tile, k⟩`), so activity tests never
+//!   materialize the global iteration vector;
+//! * value destinations are a dense `Vec` indexed by `VarId`;
+//! * the inter-tile rank strides let a boundary send compute its
+//!   destination PE with one addition instead of `RectSpace::rank`.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::ir::affine::{dot, IVec};
+use crate::ir::op::{Dtype, OpKind, Value};
+use crate::ir::pra::{Arg, EqId, VarId};
+
+use super::config::TcpaConfig;
+use super::registers::RegKind;
+
+/// Maximum equation arity the simulator's fixed operand buffer supports
+/// (`Select` is the widest op at 3; 4 leaves headroom).
+pub const MAX_ARGS: usize = 4;
+
+/// One lowered equation argument.
+#[derive(Debug, Clone)]
+pub enum ArgPlan {
+    /// An immediate, already converted to the workload dtype.
+    Const(Value),
+    /// An input-array read. The buffer address of instance `(k, j)` is
+    /// `TilePlan::arg_base[eq][pos] + ⟨j_coeffs, j⟩`; `base`/`k_coeffs`
+    /// only feed the per-tile base precomputation.
+    Input {
+        array: usize,
+        j_coeffs: IVec,
+        k_coeffs: IVec,
+        base: i64,
+    },
+    /// An internal-variable read through its bound register resource.
+    Var { kind: RegKind, d: IVec },
+}
+
+/// An output-array write target (`addr = out_base[eq] + ⟨j_coeffs, j⟩`).
+#[derive(Debug, Clone)]
+pub struct OutPlan {
+    pub array: usize,
+    pub j_coeffs: IVec,
+    pub k_coeffs: IVec,
+    pub base: i64,
+}
+
+/// One condition-space constraint `⟨coeffs, i⟩ ≥ rhs` with the tile part
+/// pre-split out: at tile `k` it holds iff
+/// `⟨coeffs, j⟩ ≥ rhs − ⟨k_coeffs, k⟩` (see [`TilePlan::cond_thresh`]).
+#[derive(Debug, Clone)]
+pub struct CondPlan {
+    pub coeffs: IVec,
+    pub k_coeffs: IVec,
+    pub rhs: i64,
+}
+
+/// One lowered equation.
+#[derive(Debug, Clone)]
+pub struct EqPlan {
+    pub tau: i64,
+    pub latency: i64,
+    pub op: OpKind,
+    pub var: Option<VarId>,
+    pub output: Option<OutPlan>,
+    pub args: Vec<ArgPlan>,
+    pub cond: Vec<CondPlan>,
+}
+
+impl EqPlan {
+    /// Is this equation active at intra-tile `j`, given the owning tile's
+    /// precomputed thresholds?
+    #[inline]
+    pub fn active_at(&self, j: &[i64], thresh: &[i64]) -> bool {
+        self.cond
+            .iter()
+            .zip(thresh)
+            .all(|(c, &t)| dot(&c.coeffs, j) >= t)
+    }
+
+    /// Is this equation active at global iteration `k∘tile + j + d`
+    /// (evaluated without materializing the vector)?
+    #[inline]
+    pub fn active_at_shifted(&self, tile: &[i64], k: &[i64], j: &[i64], d: &[i64]) -> bool {
+        self.cond.iter().all(|c| {
+            let mut acc = 0i64;
+            for (dd, &coef) in c.coeffs.iter().enumerate() {
+                acc += coef * (k[dd] * tile[dd] + j[dd] + d[dd]);
+            }
+            acc >= c.rhs
+        })
+    }
+}
+
+/// A value destination derived from the register binding: all consumers of
+/// `var` at distance `d` share one physical resource.
+#[derive(Debug, Clone)]
+pub struct DestPlan {
+    pub d: IVec,
+    pub kind: RegKind,
+    pub consumers: Vec<EqId>,
+}
+
+/// Per-tile precomputation: the tile coordinate, its wavefront start, and
+/// the tile-dependent bases of every affine form in the equation plans.
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    pub k: IVec,
+    /// `λᵏ·k` — the PE's start cycle.
+    pub start: i64,
+    /// `[eq][constraint]`: RHS threshold for [`EqPlan::active_at`].
+    pub cond_thresh: Vec<Vec<i64>>,
+    /// `[eq][arg]`: input-read base address (0 for non-input args).
+    pub arg_base: Vec<Vec<i64>>,
+    /// `[eq]`: output-write base address (0 when the eq has no output).
+    pub out_base: Vec<i64>,
+}
+
+/// The complete precompiled plan for one [`TcpaConfig`].
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    pub dims: usize,
+    pub dtype: Dtype,
+    /// Tile shape `p` (copy of `part.tile`).
+    pub tile: IVec,
+    /// Grid shape `t` (copy of `part.grid`).
+    pub grid: IVec,
+    /// Global iteration-space extents.
+    pub space: IVec,
+    /// Intra-tile schedule vector (strictly lexicographic by construction).
+    pub lambda_j: IVec,
+    pub eqs: Vec<EqPlan>,
+    /// Destinations per defined variable, dense by `VarId`.
+    pub dests: Vec<Vec<DestPlan>>,
+    /// Tiles in lexicographic (= rank) order.
+    pub tiles: Vec<TilePlan>,
+    /// `rank(k + e_m) − rank(k)` in the inter-tile space.
+    pub inter_stride: IVec,
+    /// Bound FD FIFO depths (index = fifo id) — also the FIFO count.
+    pub fifo_depth: Vec<usize>,
+    /// Estimated channel depths (index = channel id) — also the count.
+    pub chan_depth: Vec<usize>,
+}
+
+impl ExecPlan {
+    pub fn new(cfg: &TcpaConfig) -> ExecPlan {
+        let pra = &cfg.pra;
+        let part = &cfg.part;
+        let sched = &cfg.sched;
+        let dims = pra.dims();
+
+        // The streaming event generator relies on per-(tile, eq) cycles
+        // being monotone in the lexicographic scan of `j`; the scheduler
+        // constructs λʲ as exactly that scan (λʲ_k = II·Π_{l>k} p_l).
+        {
+            let mut stride = sched.ii as i64;
+            for dd in (0..dims).rev() {
+                assert_eq!(
+                    sched.lambda_j[dd], stride,
+                    "λʲ {:?} is not a lexicographic tile scan",
+                    sched.lambda_j
+                );
+                stride *= part.tile[dd];
+            }
+        }
+
+        // Resolved sink per (eq, arg position).
+        let mut sink_of: HashMap<(EqId, usize), &RegKind> = HashMap::new();
+        for s in &cfg.binding.sinks {
+            sink_of.insert((s.to_eq, s.arg_pos), &s.kind);
+        }
+
+        let eqs: Vec<EqPlan> = pra
+            .eqs
+            .iter()
+            .enumerate()
+            .map(|(e, eq)| {
+                assert!(eq.args.len() <= MAX_ARGS, "equation arity > {MAX_ARGS}");
+                let args = eq
+                    .args
+                    .iter()
+                    .enumerate()
+                    .map(|(pos, a)| match a {
+                        Arg::Const(c) => ArgPlan::Const(pra.dtype.from_i64(*c)),
+                        Arg::Input { array, map } => {
+                            let expr = map.compose_row(&pra.arrays[*array].strides());
+                            ArgPlan::Input {
+                                array: *array,
+                                k_coeffs: scale_by_tile(&expr.coeffs, &part.tile),
+                                j_coeffs: expr.coeffs,
+                                base: expr.c,
+                            }
+                        }
+                        Arg::Var { d, .. } => ArgPlan::Var {
+                            kind: (*sink_of.get(&(e, pos)).expect("unbound sink")).clone(),
+                            d: d.clone(),
+                        },
+                    })
+                    .collect();
+                let output = eq.output.as_ref().map(|(array, map)| {
+                    let expr = map.compose_row(&pra.arrays[*array].strides());
+                    OutPlan {
+                        array: *array,
+                        k_coeffs: scale_by_tile(&expr.coeffs, &part.tile),
+                        j_coeffs: expr.coeffs,
+                        base: expr.c,
+                    }
+                });
+                let cond = eq
+                    .cond
+                    .constraints
+                    .iter()
+                    .map(|c| CondPlan {
+                        k_coeffs: scale_by_tile(&c.coeffs, &part.tile),
+                        coeffs: c.coeffs.clone(),
+                        rhs: c.rhs,
+                    })
+                    .collect();
+                EqPlan {
+                    tau: sched.tau[e] as i64,
+                    latency: eq.op.latency() as i64,
+                    op: eq.op,
+                    var: eq.var,
+                    output,
+                    args,
+                    cond,
+                }
+            })
+            .collect();
+
+        // Destinations per variable. RDs are shared (one write serves all
+        // same-iteration readers, deduplicated by (var, slot)); FIFO and
+        // channel destinations are per-consumer (VD multicast).
+        let mut dests: Vec<Vec<DestPlan>> = vec![Vec::new(); pra.vars.len()];
+        let mut seen_rd: HashSet<(VarId, usize)> = HashSet::new();
+        for s in &cfg.binding.sinks {
+            if let RegKind::Rd { slot } = &s.kind {
+                if !seen_rd.insert((s.var, *slot)) {
+                    continue;
+                }
+            }
+            dests[s.var].push(DestPlan {
+                d: s.d.clone(),
+                kind: s.kind.clone(),
+                consumers: vec![s.to_eq],
+            });
+        }
+
+        // FD/channel inventory (depths keyed by the dense resource ids the
+        // binder assigned).
+        let mut fifo_depth: Vec<usize> = Vec::new();
+        let mut chan_depth: Vec<usize> = Vec::new();
+        for s in &cfg.binding.sinks {
+            record_depths(&s.kind, &mut fifo_depth, &mut chan_depth);
+        }
+
+        let tiles: Vec<TilePlan> = part
+            .inter
+            .points()
+            .map(|k| {
+                let cond_thresh = eqs
+                    .iter()
+                    .map(|ep| {
+                        ep.cond
+                            .iter()
+                            .map(|c| c.rhs - dot(&c.k_coeffs, &k))
+                            .collect()
+                    })
+                    .collect();
+                let arg_base = eqs
+                    .iter()
+                    .map(|ep| {
+                        ep.args
+                            .iter()
+                            .map(|a| match a {
+                                ArgPlan::Input { k_coeffs, base, .. } => {
+                                    base + dot(k_coeffs, &k)
+                                }
+                                _ => 0,
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let out_base = eqs
+                    .iter()
+                    .map(|ep| {
+                        ep.output
+                            .as_ref()
+                            .map(|o| o.base + dot(&o.k_coeffs, &k))
+                            .unwrap_or(0)
+                    })
+                    .collect();
+                TilePlan {
+                    start: sched.pe_start(&k),
+                    k,
+                    cond_thresh,
+                    arg_base,
+                    out_base,
+                }
+            })
+            .collect();
+
+        let mut inter_stride: IVec = vec![1; dims];
+        for dd in (0..dims.saturating_sub(1)).rev() {
+            inter_stride[dd] = inter_stride[dd + 1] * part.grid[dd + 1];
+        }
+
+        ExecPlan {
+            dims,
+            dtype: pra.dtype,
+            tile: part.tile.clone(),
+            grid: part.grid.clone(),
+            space: pra.space.extents.clone(),
+            lambda_j: sched.lambda_j.clone(),
+            eqs,
+            dests,
+            tiles,
+            inter_stride,
+            fifo_depth,
+            chan_depth,
+        }
+    }
+
+    /// Number of equations.
+    pub fn n_eqs(&self) -> usize {
+        self.eqs.len()
+    }
+
+    /// Number of tiles (= PEs in use).
+    pub fn n_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+}
+
+/// Component-wise `coeffs[d] * tile[d]` — the `k` part of an affine form
+/// evaluated at `i = k∘tile + j`.
+fn scale_by_tile(coeffs: &[i64], tile: &[i64]) -> IVec {
+    coeffs.iter().zip(tile).map(|(&c, &p)| c * p).collect()
+}
+
+fn record_depths(kind: &RegKind, fifo_depth: &mut Vec<usize>, chan_depth: &mut Vec<usize>) {
+    match kind {
+        RegKind::Rd { .. } => {}
+        RegKind::Fd { fifo, depth } => {
+            if *fifo >= fifo_depth.len() {
+                fifo_depth.resize(*fifo + 1, 0);
+            }
+            fifo_depth[*fifo] = fifo_depth[*fifo].max(*depth);
+        }
+        RegKind::Channel {
+            channel,
+            est_depth,
+            intra,
+            ..
+        } => {
+            if *channel >= chan_depth.len() {
+                chan_depth.resize(*channel + 1, 0);
+            }
+            chan_depth[*channel] = chan_depth[*channel].max(*est_depth);
+            record_depths(intra, fifo_depth, chan_depth);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::{build, BenchId};
+    use crate::ir::pra::Arg;
+    use crate::tcpa::arch::TcpaArch;
+    use crate::tcpa::config::compile;
+
+    fn plan_for(id: BenchId, n: i64, w: usize, h: usize) -> (TcpaConfig, ExecPlan) {
+        let wl = build(id, n);
+        let arch = TcpaArch::paper(w, h);
+        let cfg = compile(&wl.pras[0], &arch).expect("compile");
+        let plan = ExecPlan::new(&cfg);
+        (cfg, plan)
+    }
+
+    #[test]
+    fn affine_addresses_match_linearize() {
+        for (id, n) in [(BenchId::Gemm, 8), (BenchId::Trisolv, 8)] {
+            let (cfg, plan) = plan_for(id, n, 4, 4);
+            let pra = &cfg.pra;
+            for (tr, k) in cfg.part.inter.points().enumerate() {
+                let tp = &plan.tiles[tr];
+                for j in cfg.part.intra.points() {
+                    let i = cfg.part.global(&k, &j);
+                    for (e, eq) in pra.eqs.iter().enumerate() {
+                        for (pos, arg) in eq.args.iter().enumerate() {
+                            if let Arg::Input { array, map } = arg {
+                                let want =
+                                    pra.arrays[*array].linearize(&map.apply(&i)) as i64;
+                                let got = match &plan.eqs[e].args[pos] {
+                                    ArgPlan::Input { j_coeffs, .. } => {
+                                        tp.arg_base[e][pos] + dot(j_coeffs, &j)
+                                    }
+                                    _ => panic!("arg plan kind mismatch"),
+                                };
+                                assert_eq!(got, want, "{}: eq {e} arg {pos}", id.name());
+                            }
+                        }
+                        if let Some((array, map)) = &eq.output {
+                            if eq.cond.contains(&i) {
+                                let want =
+                                    pra.arrays[*array].linearize(&map.apply(&i)) as i64;
+                                let o = plan.eqs[e].output.as_ref().unwrap();
+                                let got = tp.out_base[e] + dot(&o.j_coeffs, &j);
+                                assert_eq!(got, want, "{}: eq {e} output", id.name());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn activity_matches_cond_spaces() {
+        for id in BenchId::ALL {
+            let (cfg, plan) = plan_for(id, 8, 2, 2);
+            for (tr, k) in cfg.part.inter.points().enumerate() {
+                let tp = &plan.tiles[tr];
+                for j in cfg.part.intra.points() {
+                    let i = cfg.part.global(&k, &j);
+                    for (e, eq) in cfg.pra.eqs.iter().enumerate() {
+                        assert_eq!(
+                            plan.eqs[e].active_at(&j, &tp.cond_thresh[e]),
+                            eq.cond.contains(&i),
+                            "{}: eq {e} at {i:?}",
+                            id.name()
+                        );
+                        let zeros = vec![0i64; plan.dims];
+                        assert_eq!(
+                            plan.eqs[e].active_at_shifted(&plan.tile, &k, &j, &zeros),
+                            eq.cond.contains(&i),
+                            "{}: shifted eq {e} at {i:?}",
+                            id.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inter_strides_match_rank_deltas() {
+        let (cfg, plan) = plan_for(BenchId::Gemm, 8, 4, 4);
+        for k in cfg.part.inter.points() {
+            let r = cfg.part.inter.rank(&k) as i64;
+            for m in 0..plan.dims {
+                let mut kn = k.clone();
+                kn[m] += 1;
+                if cfg.part.inter.contains(&kn) {
+                    assert_eq!(
+                        cfg.part.inter.rank(&kn) as i64,
+                        r + plan.inter_stride[m]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fifo_inventory_matches_binding() {
+        let (cfg, plan) = plan_for(BenchId::Gemm, 8, 4, 4);
+        assert_eq!(plan.fifo_depth.len(), cfg.binding.fd_used);
+        assert_eq!(plan.chan_depth.len(), cfg.binding.channels_used);
+        assert!(plan.fifo_depth.iter().all(|&d| d >= 1));
+    }
+}

@@ -5,6 +5,7 @@ pub mod rng;
 pub mod table;
 pub mod json;
 pub mod cli;
+pub mod par;
 
 /// Ceiling division for non-negative integers.
 #[inline]

@@ -1,0 +1,97 @@
+//! Scoped, std-only parallel map for embarrassingly parallel sweeps.
+//!
+//! The reproduction drivers (`fig6`/`fig7`/`fig8`/`table2`) evaluate many
+//! independent (benchmark, size, toolchain) points; each point is a
+//! deterministic compile-and-map job, so fanning them across cores changes
+//! wall-clock only, never results. Workers pull indices from a shared
+//! atomic counter (self-balancing for uneven point costs) and write each
+//! result into its input's slot, so output order always matches input
+//! order. `std::thread::scope` keeps borrows of the input slice safe and
+//! propagates worker panics to the caller.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+
+/// Map `f` over `items` using up to [`available_parallelism`] threads,
+/// returning results in input order. Falls back to a sequential map for a
+/// single item or a single core.
+///
+/// [`available_parallelism`]: std::thread::available_parallelism
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(items.len());
+    if threads <= 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<R>>> = Mutex::new((0..items.len()).map(|_| None).collect());
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                out.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("par_map: worker skipped a slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let got = par_map(&items, |&x| x * 2);
+        assert_eq!(got, items.iter().map(|&x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<u32> = Vec::new();
+        assert!(par_map(&none, |&x| x).is_empty());
+        assert_eq!(par_map(&[7u32], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn every_item_visited_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        let idx: Vec<usize> = (0..100).collect();
+        par_map(&idx, |&i| hits[i].fetch_add(1, Ordering::SeqCst));
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn uneven_work_is_balanced_to_completion() {
+        let items: Vec<u64> = (0..32).map(|i| (i % 7) * 100).collect();
+        let got = par_map(&items, |&spin| {
+            // spin a little so workers genuinely interleave
+            let mut acc = 0u64;
+            for x in 0..spin {
+                acc = acc.wrapping_add(x);
+            }
+            (spin, acc)
+        });
+        assert_eq!(got.len(), items.len());
+        for (i, (spin, _)) in got.iter().enumerate() {
+            assert_eq!(*spin, items[i]);
+        }
+    }
+}
