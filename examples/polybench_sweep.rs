@@ -1,4 +1,4 @@
-//! End-to-end driver (DESIGN.md §4, EXPERIMENTS.md): run every PolyBench
+//! End-to-end driver (DESIGN.md §6, EXPERIMENTS.md): run every PolyBench
 //! benchmark through the whole stack — loop-nest/PRA frontends, both mapping
 //! stacks, both cycle-accurate simulators — and validate every output
 //! against the XLA golden model loaded from `artifacts/` (falling back to

@@ -6,8 +6,7 @@ use repro::bench::workloads::BenchId;
 fn main() {
     let mut out = String::new();
     common::bench("table2 (all benchmarks, quick)", 1, || {
-        let (t, _, _) = table2(&BenchId::PAPER5, 4, 4, true);
-        out = t.render();
+        out = table2(&BenchId::PAPER5, 4, 4, true).render();
     });
     println!("{out}");
 }

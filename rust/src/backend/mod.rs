@@ -1,0 +1,234 @@
+//! The unified target-facing API: one compile→execute→report pipeline for
+//! every processor-array backend.
+//!
+//! The paper's contribution is a *side-by-side* comparison of
+//! operation-centric (CGRA) and iteration-centric (TCPA) mapping; follow-up
+//! work (arXiv:2502.19114 on CGRA toolchain evaluation, arXiv:2101.04395 on
+//! symbolic TCPA compilation) extends the comparison to many more targets.
+//! This module is the seam that makes new targets pluggable: the
+//! coordinator, the figure/table sweeps and `repro validate` all speak the
+//! same three-step protocol and never match on a target enum again.
+//!
+//! * [`Backend::compile`] turns a [`Workload`] into a [`Mapped`] artifact
+//!   (or a [`CompileError`] that still carries the partial [`MappedStats`]
+//!   the paper's Table II reports for failed rows).
+//! * [`Mapped::execute`] simulates the artifact on concrete inputs and
+//!   returns an [`ExecReport`]. Each target's *batch semantics* live here:
+//!   the TCPA restarts an invocation as soon as its first PE is free
+//!   (paper §V-A overlapped execution), the evaluated CGRAs drain fully
+//!   between invocations, the sequential reference PE is trivially serial.
+//!   Callers never re-implement that accounting.
+//! * [`BackendRegistry`] maps a [`Target`] to its backend. The default
+//!   registry serves the paper's two arrays *plus* [`seq::SeqBackend`], a
+//!   single-PE reference interpreter proving the API is open for extension.
+//!
+//! Concrete backends: [`cgra::CgraBackend`] (operation-centric,
+//! Morpher-profile by default), [`tcpa::TcpaBackend`] (iteration-centric
+//! TURTLE flow), [`seq::SeqBackend`] (sequential reference).
+
+pub mod cgra;
+pub mod registry;
+pub mod seq;
+pub mod tcpa;
+
+pub use cgra::{map_cgra_row, CgraBackend, MapRow};
+pub use registry::BackendRegistry;
+pub use seq::SeqBackend;
+pub use tcpa::{map_turtle, TcpaBackend, TurtleRow};
+
+use crate::bench::toolchains::Tool;
+use crate::bench::workloads::{BenchId, Workload};
+use crate::ir::loopnest::ArrayData;
+
+/// Which simulated array a request targets. Every variant has a registered
+/// backend in [`BackendRegistry::with_defaults`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Target {
+    /// 4×4 TCPA (paper reference, TURTLE flow).
+    Tcpa,
+    /// Best register-aware CGRA mapping (Morpher profile, classical 4×4).
+    Cgra,
+    /// Sequential single-PE reference backend wrapping the loop-nest
+    /// interpreter (one operation per cycle, no overlap).
+    Seq,
+}
+
+impl Target {
+    pub const ALL: [Target; 3] = [Target::Tcpa, Target::Cgra, Target::Seq];
+    pub const COUNT: usize = 3;
+
+    /// Dense index for per-target tables (metrics, registry slots).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// CLI-facing lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Target::Tcpa => "tcpa",
+            Target::Cgra => "cgra",
+            Target::Seq => "seq",
+        }
+    }
+
+    /// Human-facing label used in validation/report lines.
+    pub fn label(self) -> &'static str {
+        match self {
+            Target::Tcpa => "TCPA",
+            Target::Cgra => "CGRA",
+            Target::Seq => "SEQ",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Target> {
+        Target::ALL.iter().copied().find(|t| t.name() == s)
+    }
+}
+
+/// Compile-time statistics of a mapped (or partially mapped) workload — the
+/// columns of the paper's Table II plus the closed-form latencies the
+/// figure sweeps chart. Fields a backend cannot report for a failed compile
+/// are `None`; fields it *can* still report (e.g. the TURTLE flow's
+/// PE-utilization numbers) stay `Some`, matching what the tables print.
+#[derive(Debug, Clone)]
+pub struct MappedStats {
+    pub bench: BenchId,
+    /// Problem size the workload was built at.
+    pub n: i64,
+    /// Toolchain identity for Table-II-style rows (`None` for backends
+    /// outside the paper's toolchain matrix, e.g. the sequential reference).
+    pub tool: Option<Tool>,
+    /// Optimization-level column ("-" where not applicable).
+    pub opt: String,
+    /// Architecture column (e.g. "4x4 classical", the TCPA name).
+    pub arch: String,
+    /// Loop depth reported ("#Loops"; 1 for inner-only rows).
+    pub n_loops: usize,
+    /// Static operation count ("#op."), partial sums for failed compiles.
+    pub n_ops: usize,
+    /// Achieved initiation interval.
+    pub ii: Option<u32>,
+    pub unused_pes: Option<usize>,
+    pub max_ops_per_pe: Option<usize>,
+    /// Single-invocation latency in cycles (last-PE latency on the TCPA).
+    /// `None` for failures and inner-only rows.
+    pub latency: Option<u64>,
+    /// Overlapped restart interval (first-PE latency on the TCPA); equals
+    /// `latency` on targets without overlapped execution.
+    pub latency_overlapped: Option<u64>,
+}
+
+impl MappedStats {
+    /// Toolchain column label ("TURTLE", "Morpher", …; "reference" outside
+    /// the paper's matrix).
+    pub fn tool_label(&self) -> &'static str {
+        self.tool.map(|t| t.name()).unwrap_or("reference")
+    }
+}
+
+/// What one (possibly batched) execution of a [`Mapped`] artifact reports.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    /// Latency of a single invocation in array cycles.
+    pub latency_cycles: u64,
+    /// Total cycles for the whole batch under the *target's* batch
+    /// semantics (overlapped restart on the TCPA, full drain on CGRAs and
+    /// the sequential reference).
+    pub batch_cycles: u64,
+    /// Operation instances issued by one invocation.
+    pub issued_ops: u64,
+    /// Average PE utilization of one invocation:
+    /// `issued_ops / (n_pes · latency_cycles)` — ops per PE-cycle, which
+    /// can exceed 1.0 on multi-FU PEs (the TCPA's VLIW-style processors).
+    pub occupancy: f64,
+    /// Output arrays of one invocation.
+    pub outputs: ArrayData,
+    /// Target-specific human-readable run description, e.g.
+    /// `CGRA (4x4 classical, II=4)` — what `repro validate` prints.
+    pub detail: String,
+}
+
+/// Average PE utilization; 0 when the run is degenerate.
+pub(crate) fn occupancy(issued_ops: u64, n_pes: usize, latency: u64) -> f64 {
+    if n_pes == 0 || latency == 0 {
+        0.0
+    } else {
+        issued_ops as f64 / (n_pes as f64 * latency as f64)
+    }
+}
+
+/// A compiled, immutable, cheaply shareable artifact. The coordinator's
+/// compile cache stores these behind `Arc<dyn Mapped>`; workers clone the
+/// pointer, never the artifact.
+pub trait Mapped: Send + Sync + std::fmt::Debug {
+    /// Compile-time statistics (Table II columns, closed-form latencies).
+    fn stats(&self) -> &MappedStats;
+
+    /// Simulate `batch` back-to-back invocations on `inputs`. Timing faults
+    /// (FIFO underflows, operands consumed before arrival) and artifacts
+    /// with no pipelined latency surface as `Err`, never as a zero.
+    fn execute(&self, inputs: &ArrayData, batch: u64) -> Result<ExecReport, String>;
+}
+
+/// A compile failure that still carries the partial statistics the paper's
+/// tables print for failed rows ("-" columns next to real op counts).
+#[derive(Debug, Clone)]
+pub struct CompileError {
+    /// What failed, target-specific (e.g. "CGRA mapping", "TCPA compile").
+    pub stage: &'static str,
+    /// The pipeline's error message (what the compile cache stores).
+    pub message: String,
+    /// Partial stats gathered before the failure.
+    pub stats: MappedStats,
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+/// A target-facing compiler: turns a [`Workload`] into a [`Mapped`]
+/// artifact. Implementations are deterministic in their inputs, so results
+/// (including failures) are safe to cache process-wide.
+pub trait Backend: Send + Sync {
+    /// Which [`Target`] this backend serves.
+    fn target(&self) -> Target;
+
+    /// Human-readable backend name.
+    fn name(&self) -> &'static str;
+
+    /// Run the map/schedule pipeline for one workload.
+    fn compile(&self, wl: &Workload) -> Result<Box<dyn Mapped>, CompileError>;
+}
+
+/// Compile and return the stats, whether or not the compile succeeded —
+/// what the table/figure sweeps consume (failed rows still render).
+pub fn compile_stats(backend: &dyn Backend, wl: &Workload) -> MappedStats {
+    match backend.compile(wl) {
+        Ok(m) => m.stats().clone(),
+        Err(e) => e.stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_roundtrip() {
+        for t in Target::ALL {
+            assert_eq!(Target::parse(t.name()), Some(t));
+        }
+        assert_eq!(Target::parse("nope"), None);
+        let idx: Vec<usize> = Target::ALL.iter().map(|t| t.index()).collect();
+        assert_eq!(idx, vec![0, 1, 2], "dense, stable indices");
+    }
+
+    #[test]
+    fn occupancy_bounds() {
+        assert_eq!(occupancy(0, 16, 0), 0.0);
+        assert_eq!(occupancy(10, 0, 5), 0.0);
+        assert!((occupancy(32, 16, 4) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,90 @@
+//! [`Target`]-keyed backend registry.
+//!
+//! One registry instance backs a whole coordinator (it lives inside the
+//! shared compile cache), so backends must be `Send + Sync`; they are held
+//! behind `Arc` and shared by every worker. Registering a backend for an
+//! already-occupied target replaces it — that is how a deployment swaps the
+//! paper's 4×4 arrays for scaled-up ones without touching any caller.
+
+use std::sync::Arc;
+
+use super::cgra::CgraBackend;
+use super::seq::SeqBackend;
+use super::tcpa::TcpaBackend;
+use super::{Backend, Target};
+
+/// Registry mapping each [`Target`] to its backend, dense over
+/// [`Target::COUNT`] slots.
+pub struct BackendRegistry {
+    slots: Vec<Option<Arc<dyn Backend>>>,
+}
+
+impl BackendRegistry {
+    /// An empty registry (no targets servable).
+    pub fn new() -> BackendRegistry {
+        BackendRegistry {
+            slots: (0..Target::COUNT).map(|_| None).collect(),
+        }
+    }
+
+    /// The paper's two reference arrays plus the sequential single-PE
+    /// reference backend: TCPA (4×4, TURTLE flow), CGRA (Morpher profile on
+    /// the classical 4×4) and SEQ (loop-nest interpreter).
+    pub fn with_defaults() -> BackendRegistry {
+        let mut r = BackendRegistry::new();
+        r.register(Arc::new(TcpaBackend::paper(4, 4)));
+        r.register(Arc::new(CgraBackend::morpher(4, 4)));
+        r.register(Arc::new(SeqBackend::new()));
+        r
+    }
+
+    /// Register (or replace) the backend for its own target.
+    pub fn register(&mut self, backend: Arc<dyn Backend>) {
+        let idx = backend.target().index();
+        self.slots[idx] = Some(backend);
+    }
+
+    /// The backend serving `target`, if any.
+    pub fn get(&self, target: Target) -> Option<Arc<dyn Backend>> {
+        self.slots.get(target.index()).and_then(|s| s.clone())
+    }
+
+    /// Registered targets, in [`Target::ALL`] order.
+    pub fn targets(&self) -> Vec<Target> {
+        Target::ALL
+            .iter()
+            .copied()
+            .filter(|t| self.slots[t.index()].is_some())
+            .collect()
+    }
+}
+
+impl Default for BackendRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_cover_every_target() {
+        let r = BackendRegistry::with_defaults();
+        assert_eq!(r.targets(), Target::ALL.to_vec());
+        for t in Target::ALL {
+            let b = r.get(t).expect("registered");
+            assert_eq!(b.target(), t);
+        }
+    }
+
+    #[test]
+    fn register_replaces() {
+        let mut r = BackendRegistry::new();
+        assert!(r.get(Target::Seq).is_none());
+        r.register(Arc::new(SeqBackend::new()));
+        r.register(Arc::new(SeqBackend::new()));
+        assert_eq!(r.targets(), vec![Target::Seq]);
+    }
+}

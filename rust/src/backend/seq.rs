@@ -1,0 +1,134 @@
+//! Sequential single-PE reference backend.
+//!
+//! Wraps the loop-nest interpreter ([`crate::ir::loopnest::LoopNest::execute`])
+//! behind the same [`Backend`] seam as the two processor arrays: one PE,
+//! one operation per cycle, no pipelining and no overlap, so a batch of B
+//! costs exactly B single invocations. It is the "1 PE" baseline of the
+//! paper's scaling arguments, the numerically-trusted oracle (the same
+//! interpreter backs the golden service's hermetic fallback), and the
+//! proof that [`super::BackendRegistry`] is open for extension: it arrived
+//! without touching the coordinator, the harness, or either array backend.
+
+use crate::ir::loopnest::ArrayData;
+
+use crate::bench::workloads::Workload;
+
+use super::{Backend, CompileError, ExecReport, Mapped, MappedStats, Target};
+
+/// The sequential reference [`Backend`]. "Compilation" is a cost model:
+/// one op per cycle over every loop-nest iteration.
+pub struct SeqBackend;
+
+impl SeqBackend {
+    pub fn new() -> SeqBackend {
+        SeqBackend
+    }
+}
+
+impl Default for SeqBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for SeqBackend {
+    fn target(&self) -> Target {
+        Target::Seq
+    }
+
+    fn name(&self) -> &'static str {
+        "seq"
+    }
+
+    fn compile(&self, wl: &Workload) -> Result<Box<dyn Mapped>, CompileError> {
+        // ops per iteration of each stage (incl. the store), and the total
+        // issue count over all stages — the single PE's cycle count
+        let per_iter: usize = wl.stages.iter().map(|s| s.body_op_count()).sum();
+        let total: u64 = wl
+            .stages
+            .iter()
+            .map(|s| s.iteration_count() * s.body_op_count() as u64)
+            .sum();
+        let stats = MappedStats {
+            bench: wl.id,
+            n: wl.n,
+            tool: None,
+            opt: "-".into(),
+            arch: "single-PE".into(),
+            n_loops: wl.n_loops,
+            n_ops: per_iter,
+            ii: None,
+            unused_pes: Some(0),
+            max_ops_per_pe: Some(per_iter),
+            latency: Some(total),
+            latency_overlapped: Some(total),
+        };
+        Ok(Box::new(SeqMapped {
+            wl: wl.clone(),
+            stats,
+        }))
+    }
+}
+
+/// A workload "mapped" onto the sequential reference PE.
+#[derive(Debug)]
+pub struct SeqMapped {
+    wl: Workload,
+    stats: MappedStats,
+}
+
+impl Mapped for SeqMapped {
+    fn stats(&self) -> &MappedStats {
+        &self.stats
+    }
+
+    fn execute(&self, inputs: &ArrayData, batch: u64) -> Result<ExecReport, String> {
+        let outputs = self.wl.reference_nest(inputs);
+        let single = self
+            .stats
+            .latency
+            .expect("sequential latency is closed-form");
+        Ok(ExecReport {
+            latency_cycles: single,
+            // strictly serial: no pipelining, no overlap
+            batch_cycles: single * batch.max(1),
+            issued_ops: single,
+            occupancy: 1.0,
+            outputs,
+            detail: format!("SEQ (single PE, {single} ops/invocation)"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::{build, inputs, BenchId};
+
+    #[test]
+    fn seq_matches_reference_interpreter() {
+        for id in BenchId::ALL {
+            let wl = build(id, 4);
+            let ins = inputs(id, 4, 11);
+            let want = wl.reference_nest(&ins);
+            let m = SeqBackend::new().compile(&wl).expect("always compiles");
+            let rep = m.execute(&ins, 1).expect("executes");
+            for name in wl.output_names() {
+                assert_eq!(rep.outputs[&name], want[&name], "{} {name}", id.name());
+            }
+            assert!(rep.latency_cycles > 0);
+            assert_eq!(rep.issued_ops, rep.latency_cycles, "one op per cycle");
+            assert_eq!(rep.occupancy, 1.0);
+        }
+    }
+
+    #[test]
+    fn seq_batches_serially() {
+        let wl = build(BenchId::Atax, 8);
+        let ins = inputs(BenchId::Atax, 8, 2);
+        let m = SeqBackend::new().compile(&wl).unwrap();
+        let one = m.execute(&ins, 1).unwrap();
+        let five = m.execute(&ins, 5).unwrap();
+        assert_eq!(five.batch_cycles, 5 * one.latency_cycles);
+    }
+}

@@ -1,0 +1,238 @@
+//! Iteration-centric backend: PRAs through the TURTLE-like flow (LSGP
+//! tiling → linear schedule → register binding → codegen) onto a TCPA,
+//! simulated kernel by kernel.
+//!
+//! [`map_turtle`] is the raw compile pipeline; [`TcpaBackend`] wraps it
+//! behind the [`Backend`] seam. Batch semantics (paper §V-A): invocation
+//! k+1 starts as soon as the first PE of invocation k is free, so a batch
+//! of B costs `last + (B−1)·first` cycles instead of `B·last`.
+
+use crate::ir::loopnest::ArrayData;
+use crate::tcpa::arch::TcpaArch;
+use crate::tcpa::config::{compile, TcpaConfig};
+use crate::tcpa::sim as tcpa_sim;
+
+use crate::bench::toolchains::Tool;
+use crate::bench::workloads::{BenchId, Workload};
+
+use super::{occupancy, Backend, CompileError, ExecReport, Mapped, MappedStats, Target};
+
+/// TURTLE result over a workload (one config per PRA kernel). Immutable
+/// once built and shared across coordinator workers behind an `Arc`.
+#[derive(Debug, Clone)]
+pub struct TurtleRow {
+    pub bench: BenchId,
+    pub n_ops: usize,
+    pub ii: u32,
+    pub unused_pes: usize,
+    pub max_ops_per_pe: usize,
+    /// Sum of last-PE latencies across kernels.
+    pub latency_last: u64,
+    /// Sum of first-PE latencies (+ final drain) — overlapped invocations.
+    pub latency_first: u64,
+    pub configs: Vec<TcpaConfig>,
+    pub error: Option<String>,
+}
+
+/// Compile a workload with the TURTLE-like flow.
+pub fn map_turtle(wl: &Workload, arch: &TcpaArch) -> TurtleRow {
+    let mut n_ops = 0;
+    let mut ii = 0;
+    let mut unused = 0;
+    let mut maxops = 0;
+    let mut last = 0u64;
+    let mut first = 0u64;
+    let mut configs = Vec::new();
+    let mut error = None;
+    for pra in &wl.pras {
+        match compile(pra, arch) {
+            Ok(cfg) => {
+                n_ops += cfg.n_ops();
+                ii = ii.max(cfg.sched.ii);
+                unused = unused.max(cfg.unused_pes(arch));
+                maxops = maxops.max(cfg.programs.max_ops_per_iteration());
+                last += cfg.last_pe_latency();
+                first += cfg.first_pe_latency();
+                configs.push(cfg);
+            }
+            Err(e) => {
+                error = Some(e.to_string());
+                break;
+            }
+        }
+    }
+    TurtleRow {
+        bench: wl.id,
+        n_ops,
+        ii,
+        unused_pes: unused,
+        max_ops_per_pe: maxops,
+        latency_last: last,
+        latency_first: first.min(last),
+        configs,
+        error,
+    }
+}
+
+fn stats_of(row: &TurtleRow, wl: &Workload, arch: &TcpaArch) -> MappedStats {
+    let ok = row.error.is_none();
+    MappedStats {
+        bench: row.bench,
+        n: wl.n,
+        tool: Some(Tool::Turtle),
+        opt: "-".into(),
+        arch: arch.name.clone(),
+        n_loops: wl.n_loops,
+        n_ops: row.n_ops,
+        ii: ok.then_some(row.ii),
+        // the TURTLE flow knows its PE utilization even for partial
+        // compiles — Table II prints these columns on failed rows too
+        unused_pes: Some(row.unused_pes),
+        max_ops_per_pe: Some(row.max_ops_per_pe),
+        latency: ok.then_some(row.latency_last),
+        latency_overlapped: ok.then_some(row.latency_first),
+    }
+}
+
+/// The iteration-centric [`Backend`].
+pub struct TcpaBackend {
+    arch: TcpaArch,
+}
+
+impl TcpaBackend {
+    /// A backend over a given array model.
+    pub fn new(arch: TcpaArch) -> TcpaBackend {
+        TcpaBackend { arch }
+    }
+
+    /// The paper's reference array at the given dimensions.
+    pub fn paper(width: usize, height: usize) -> TcpaBackend {
+        TcpaBackend::new(TcpaArch::paper(width, height))
+    }
+
+    pub fn arch(&self) -> &TcpaArch {
+        &self.arch
+    }
+}
+
+impl Backend for TcpaBackend {
+    fn target(&self) -> Target {
+        Target::Tcpa
+    }
+
+    fn name(&self) -> &'static str {
+        "tcpa"
+    }
+
+    fn compile(&self, wl: &Workload) -> Result<Box<dyn Mapped>, CompileError> {
+        let row = map_turtle(wl, &self.arch);
+        let stats = stats_of(&row, wl, &self.arch);
+        match row.error.clone() {
+            Some(message) => Err(CompileError {
+                stage: "TCPA compile",
+                message,
+                stats,
+            }),
+            None => {
+                let n_pes = self.arch.n_pes();
+                Ok(Box::new(TcpaMapped {
+                    row,
+                    arch: self.arch.clone(),
+                    stats,
+                    n_pes,
+                }))
+            }
+        }
+    }
+}
+
+/// A successfully compiled TCPA workload: per-kernel configurations plus
+/// the array they were scheduled for.
+#[derive(Debug)]
+pub struct TcpaMapped {
+    row: TurtleRow,
+    arch: TcpaArch,
+    stats: MappedStats,
+    n_pes: usize,
+}
+
+impl Mapped for TcpaMapped {
+    fn stats(&self) -> &MappedStats {
+        &self.stats
+    }
+
+    fn execute(&self, inputs: &ArrayData, batch: u64) -> Result<ExecReport, String> {
+        let run = tcpa_sim::simulate_workload(&self.row.configs, &self.arch, inputs)
+            .map_err(|e| e.to_string())?;
+        for k in &run.kernels {
+            if k.timing_violations > 0 {
+                return Err(format!(
+                    "TCPA sim reported {} violations",
+                    k.timing_violations
+                ));
+            }
+        }
+        let last_kernel = run
+            .kernels
+            .last()
+            .ok_or("TCPA simulation produced no kernel runs")?;
+        let single = run.total_latency;
+        // overlapped batch: each further invocation starts after the
+        // previous one's first PE finished (§V-A)
+        let batch_cycles = if batch <= 1 {
+            single
+        } else {
+            single + (batch - 1) * run.overlapped_latency.max(1)
+        };
+        let issued: u64 = run.kernels.iter().map(|k| k.issued_ops).sum();
+        let detail = format!(
+            "TCPA (II={}, first PE {} cy, last PE {} cy)",
+            self.row.ii, last_kernel.first_pe_done, run.total_latency
+        );
+        Ok(ExecReport {
+            latency_cycles: single,
+            batch_cycles,
+            issued_ops: issued,
+            occupancy: occupancy(issued, self.n_pes, single),
+            outputs: run.outputs,
+            detail,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::{build, inputs};
+
+    #[test]
+    fn paper_backend_compiles_and_overlaps_batches() {
+        let wl = build(BenchId::Gemm, 8);
+        let b = TcpaBackend::paper(4, 4);
+        let m = b.compile(&wl).expect("gemm n=8 compiles");
+        assert_eq!(m.stats().tool, Some(Tool::Turtle));
+        let ins = inputs(BenchId::Gemm, 8, 3);
+        let one = m.execute(&ins, 1).expect("sim");
+        let four = m.execute(&ins, 4).expect("sim");
+        assert_eq!(one.batch_cycles, one.latency_cycles);
+        assert!(
+            four.batch_cycles < 4 * one.latency_cycles,
+            "overlap must beat serial: {} vs {}",
+            four.batch_cycles,
+            4 * one.latency_cycles
+        );
+        assert!(one.detail.starts_with("TCPA (II="), "{}", one.detail);
+    }
+
+    #[test]
+    fn stats_mirror_turtle_row() {
+        let wl = build(BenchId::Gemm, 20);
+        let row = map_turtle(&wl, &TcpaArch::paper(4, 4));
+        let m = TcpaBackend::paper(4, 4).compile(&wl).expect("compiles");
+        let s = m.stats();
+        assert_eq!(s.ii, Some(row.ii));
+        assert_eq!(s.latency, Some(row.latency_last));
+        assert_eq!(s.latency_overlapped, Some(row.latency_first));
+        assert_eq!(s.unused_pes, Some(row.unused_pes));
+    }
+}

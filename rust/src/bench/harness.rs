@@ -1,10 +1,22 @@
 //! The reproduction harness: one driver per table/figure of the paper's
-//! evaluation (see DESIGN.md §4 for the experiment index). Each driver
-//! returns a [`Table`] whose rows mirror what the paper reports; the CLI and
-//! the `cargo bench` targets print them.
+//! evaluation. Each driver
+//! returns a [`Table`] whose rows mirror what the paper reports (see
+//! DESIGN.md §6 for the experiment index); the CLI and the `cargo bench`
+//! targets print them.
+//!
+//! Every sweep point is compiled through the unified [`Backend`] seam
+//! ([`crate::backend`]): the drivers construct backends (one per toolchain
+//! row spec / array model), harvest [`MappedStats`] via
+//! [`compile_stats`] — which failed compiles still report partially, as the
+//! paper's Table II does — and never match on a target. `validate` runs the
+//! full compile→execute→report pipeline out of the default
+//! [`BackendRegistry`].
 
-use crate::cgra::mapper::{map, Mapping};
-use crate::cgra::sim as cgra_sim;
+use std::sync::Arc;
+
+use crate::backend::{
+    compile_stats, Backend, BackendRegistry, CgraBackend, MappedStats, Target, TcpaBackend,
+};
 use crate::frontend::dfg_gen::generate;
 use crate::frontend::mii;
 use crate::frontend::transforms::unroll_innermost;
@@ -13,150 +25,15 @@ use crate::ppa::area::{area_ratio, cgra_area, tcpa_area};
 use crate::ppa::asic::published_chips;
 use crate::ppa::power::PowerModel;
 use crate::tcpa::arch::TcpaArch;
-use crate::tcpa::config::{compile, TcpaConfig};
-use crate::tcpa::sim as tcpa_sim;
 use crate::util::par::par_map;
 use crate::util::table::Table;
 
 use super::toolchains::{feature_matrix, rows_for, OptLevel, RowSpec, Tool};
 use super::workloads::{build, inputs, BenchId, Workload};
 
-/// Result of mapping one benchmark under one toolchain row. Immutable once
-/// built; the coordinator's compile cache shares rows across workers behind
-/// an `Arc` rather than cloning the embedded mappings.
-#[derive(Debug, Clone)]
-pub struct MapRow {
-    pub bench: BenchId,
-    pub tool: Tool,
-    pub opt: String,
-    pub arch: String,
-    pub n_loops: usize,
-    pub n_ops: usize,
-    pub ii: Option<u32>,
-    pub unused_pes: Option<usize>,
-    pub max_ops_per_pe: Option<usize>,
-    /// Pipelined latency over the full problem (None for failures and
-    /// inner-only rows, which the paper doesn't chart either).
-    pub latency: Option<u64>,
-    pub error: Option<String>,
-    /// Per-stage mappings (for simulation).
-    pub mappings: Vec<(crate::frontend::dfg::Dfg, Mapping)>,
-}
-
-/// Map all stages of a workload under a row spec.
-pub fn map_cgra_row(wl: &Workload, spec: &RowSpec) -> MapRow {
-    let mut n_ops = 0usize;
-    let mut ii_max = 0u32;
-    let mut unused = usize::MAX;
-    let mut maxops = 0usize;
-    let mut latency = 0u64;
-    let mut mappings = Vec::new();
-    let mut error: Option<String> = None;
-
-    for nest in &wl.stages {
-        let nest_u = match unroll_innermost(nest, spec.opt.unroll()) {
-            Ok(n) => n,
-            Err(e) => {
-                error = Some(e);
-                break;
-            }
-        };
-        let gen = match generate(&nest_u, &spec.gen) {
-            Ok(g) => g,
-            Err(e) => {
-                error = Some(e);
-                break;
-            }
-        };
-        n_ops += gen.dfg.n_nodes();
-        match map(&gen.dfg, &spec.arch, &gen.inter_iteration_hazards, &spec.map) {
-            Ok(m) => {
-                ii_max = ii_max.max(m.ii);
-                unused = unused.min(m.unused_pes(&spec.arch));
-                maxops = maxops.max(m.max_ops_per_pe(&spec.arch));
-                latency += m.latency(gen.dfg.iters);
-                mappings.push((gen.dfg, m));
-            }
-            Err(e) => {
-                error = Some(e.to_string());
-                break;
-            }
-        }
-    }
-
-    let ok = error.is_none();
-    MapRow {
-        bench: wl.id,
-        tool: spec.tool,
-        opt: spec.opt.label(),
-        arch: spec.arch.name.clone(),
-        n_loops: if spec.inner_only { 1 } else { wl.n_loops },
-        n_ops,
-        ii: ok.then_some(ii_max),
-        unused_pes: ok.then_some(if unused == usize::MAX { 0 } else { unused }),
-        max_ops_per_pe: ok.then_some(maxops),
-        latency: (ok && !spec.inner_only).then_some(latency),
-        error,
-        mappings,
-    }
-}
-
-/// TURTLE result over a workload (one config per PRA kernel). Immutable
-/// once built and shared across coordinator workers behind an `Arc`.
-#[derive(Debug, Clone)]
-pub struct TurtleRow {
-    pub bench: BenchId,
-    pub n_ops: usize,
-    pub ii: u32,
-    pub unused_pes: usize,
-    pub max_ops_per_pe: usize,
-    /// Sum of last-PE latencies across kernels.
-    pub latency_last: u64,
-    /// Sum of first-PE latencies (+ final drain) — overlapped invocations.
-    pub latency_first: u64,
-    pub configs: Vec<TcpaConfig>,
-    pub error: Option<String>,
-}
-
-/// Compile a workload with the TURTLE-like flow.
-pub fn map_turtle(wl: &Workload, arch: &TcpaArch) -> TurtleRow {
-    let mut n_ops = 0;
-    let mut ii = 0;
-    let mut unused = 0;
-    let mut maxops = 0;
-    let mut last = 0u64;
-    let mut first = 0u64;
-    let mut configs = Vec::new();
-    let mut error = None;
-    for pra in &wl.pras {
-        match compile(pra, arch) {
-            Ok(cfg) => {
-                n_ops += cfg.n_ops();
-                ii = ii.max(cfg.sched.ii);
-                unused = unused.max(cfg.unused_pes(arch));
-                maxops = maxops.max(cfg.programs.max_ops_per_iteration());
-                last += cfg.last_pe_latency();
-                first += cfg.first_pe_latency();
-                configs.push(cfg);
-            }
-            Err(e) => {
-                error = Some(e.to_string());
-                break;
-            }
-        }
-    }
-    TurtleRow {
-        bench: wl.id,
-        n_ops,
-        ii,
-        unused_pes: unused,
-        max_ops_per_pe: maxops,
-        latency_last: last,
-        latency_first: first.min(last),
-        configs,
-        error,
-    }
-}
+// The raw row pipelines live with their backends now; re-exported here so
+// examples and older callers keep one stable path.
+pub use crate::backend::{map_cgra_row, map_turtle, MapRow, TurtleRow};
 
 // ============================ Table I =======================================
 
@@ -177,87 +54,48 @@ pub fn table1() -> Table {
 
 // ============================ Table II ======================================
 
+fn opt_col<T: ToString>(v: Option<T>) -> String {
+    v.map(|x| x.to_string()).unwrap_or("-".into())
+}
+
 /// Mapping results of every benchmark on every toolchain (paper Table II).
-/// Every (benchmark, toolchain) point is an independent compile, so the
-/// sweep fans across cores; rows are emitted in the original deterministic
-/// order (each benchmark's toolchain rows, then its TURTLE row).
-pub fn table2(
-    benches: &[BenchId],
-    width: usize,
-    height: usize,
-    quick: bool,
-) -> (Table, Vec<MapRow>, Vec<TurtleRow>) {
+/// Every (benchmark, toolchain) point is an independent compile through its
+/// backend, so the sweep fans across cores; rows are emitted in the
+/// original deterministic order (each benchmark's toolchain rows, then its
+/// TURTLE row) straight from the per-point [`MappedStats`].
+pub fn table2(benches: &[BenchId], width: usize, height: usize, quick: bool) -> Table {
     let mut t = Table::new(vec![
         "Benchmark", "Toolchain", "Optimization", "Architecture", "#Loops", "#op.",
         "II", "#unused PE", "max(#op/PE)",
     ]);
-    let tcpa = TcpaArch::paper(width, height);
     let wls: Vec<Workload> = benches.iter().map(|&id| build(id, id.paper_size())).collect();
 
-    enum Point {
-        Cgra(usize, RowSpec),
-        Turtle(usize),
-    }
-    enum Res {
-        Cgra(MapRow),
-        Turtle(usize, TurtleRow),
-    }
-    let mut points = Vec::new();
+    let mut points: Vec<(usize, Arc<dyn Backend>)> = Vec::new();
     for (i, wl) in wls.iter().enumerate() {
         for mut spec in rows_for(wl.n_loops, width, height) {
             if quick {
                 spec.map.restarts = spec.map.restarts.min(3);
             }
-            points.push(Point::Cgra(i, spec));
+            points.push((i, Arc::new(CgraBackend::from_spec(spec))));
         }
-        points.push(Point::Turtle(i));
+        points.push((i, Arc::new(TcpaBackend::paper(width, height))));
     }
-    let results = par_map(&points, |p| match p {
-        Point::Cgra(i, spec) => Res::Cgra(map_cgra_row(&wls[*i], spec)),
-        Point::Turtle(i) => Res::Turtle(*i, map_turtle(&wls[*i], &tcpa)),
-    });
+    let stats = par_map(&points, |(i, b)| compile_stats(b.as_ref(), &wls[*i]));
 
-    let mut rows_out = Vec::new();
-    let mut turtle_out = Vec::new();
-    for res in results {
-        match res {
-            Res::Cgra(row) => {
-                t.row(vec![
-                    row.bench.name().to_string(),
-                    row.tool.name().to_string(),
-                    row.opt.clone(),
-                    row.arch.clone(),
-                    row.n_loops.to_string(),
-                    row.n_ops.to_string(),
-                    row.ii.map(|x| x.to_string()).unwrap_or("-".into()),
-                    row.unused_pes.map(|x| x.to_string()).unwrap_or("-".into()),
-                    row.max_ops_per_pe
-                        .map(|x| x.to_string())
-                        .unwrap_or("-".into()),
-                ]);
-                rows_out.push(row);
-            }
-            Res::Turtle(i, tr) => {
-                t.row(vec![
-                    tr.bench.name().to_string(),
-                    "TURTLE".into(),
-                    "-".into(),
-                    tcpa.name.clone(),
-                    wls[i].n_loops.to_string(),
-                    tr.n_ops.to_string(),
-                    if tr.error.is_none() {
-                        tr.ii.to_string()
-                    } else {
-                        "-".into()
-                    },
-                    tr.unused_pes.to_string(),
-                    tr.max_ops_per_pe.to_string(),
-                ]);
-                turtle_out.push(tr);
-            }
-        }
+    for s in stats {
+        t.row(vec![
+            s.bench.name().to_string(),
+            s.tool_label().to_string(),
+            s.opt.clone(),
+            s.arch.clone(),
+            s.n_loops.to_string(),
+            s.n_ops.to_string(),
+            opt_col(s.ii),
+            opt_col(s.unused_pes),
+            opt_col(s.max_ops_per_pe),
+        ]);
     }
-    (t, rows_out, turtle_out)
+    t
 }
 
 // ============================ Table III =====================================
@@ -318,24 +156,17 @@ pub fn table3() -> Table {
 
 /// Latency vs problem size per benchmark (best CGRA-Flow, best Morpher,
 /// TCPA first/last PE). All (size, toolchain) sweep points run in parallel;
-/// each size's points end with its TURTLE sentinel, so the in-order fold
-/// below reconstructs the per-size best-of rows deterministically.
+/// each size's points end with its TURTLE backend, so the in-order fold
+/// below reconstructs the per-size best-of rows deterministically — the
+/// TURTLE stats (identified by [`Tool::Turtle`]) emit the row and reset the
+/// fold.
 pub fn fig6(id: BenchId, sizes: &[i64], quick: bool) -> Table {
     let mut t = Table::new(vec![
         "N", "CGRA-Flow", "Morpher", "TCPA first PE", "TCPA last PE",
     ]);
-    let tcpa = TcpaArch::paper(4, 4);
     let wls: Vec<Workload> = sizes.iter().map(|&n| build(id, n)).collect();
 
-    enum Point {
-        Cgra(usize, RowSpec),
-        Turtle(usize),
-    }
-    enum Res {
-        Cgra(Tool, Option<u64>),
-        Turtle(i64, TurtleRow),
-    }
-    let mut points = Vec::new();
+    let mut points: Vec<(usize, Arc<dyn Backend>)> = Vec::new();
     for (i, wl) in wls.iter().enumerate() {
         for mut spec in rows_for(wl.n_loops, 4, 4) {
             if spec.inner_only {
@@ -344,48 +175,38 @@ pub fn fig6(id: BenchId, sizes: &[i64], quick: bool) -> Table {
             if quick {
                 spec.map.restarts = spec.map.restarts.min(3);
             }
-            points.push(Point::Cgra(i, spec));
+            points.push((i, Arc::new(CgraBackend::from_spec(spec))));
         }
-        points.push(Point::Turtle(i));
+        points.push((i, Arc::new(TcpaBackend::paper(4, 4))));
     }
-    let results = par_map(&points, |p| match p {
-        Point::Cgra(i, spec) => Res::Cgra(spec.tool, map_cgra_row(&wls[*i], spec).latency),
-        Point::Turtle(i) => Res::Turtle(wls[*i].n, map_turtle(&wls[*i], &tcpa)),
-    });
+    let stats = par_map(&points, |(i, b)| compile_stats(b.as_ref(), &wls[*i]));
 
     let mut cf_best: Option<u64> = None;
     let mut mo_best: Option<u64> = None;
-    for res in results {
-        match res {
-            Res::Cgra(tool, latency) => {
-                if let Some(lat) = latency {
-                    match tool {
-                        Tool::CgraFlow => cf_best = Some(cf_best.map_or(lat, |b| b.min(lat))),
-                        Tool::Morpher => mo_best = Some(mo_best.map_or(lat, |b| b.min(lat))),
-                        _ => {}
-                    }
+    for s in stats {
+        match s.tool {
+            Some(Tool::CgraFlow) => {
+                if let Some(lat) = s.latency {
+                    cf_best = Some(cf_best.map_or(lat, |b| b.min(lat)));
                 }
             }
-            Res::Turtle(n, tr) => {
-                let fmt = |x: Option<u64>| x.map(|v| v.to_string()).unwrap_or("-".into());
+            Some(Tool::Morpher) => {
+                if let Some(lat) = s.latency {
+                    mo_best = Some(mo_best.map_or(lat, |b| b.min(lat)));
+                }
+            }
+            Some(Tool::Turtle) => {
                 t.row(vec![
-                    n.to_string(),
-                    fmt(cf_best),
-                    fmt(mo_best),
-                    if tr.error.is_none() {
-                        tr.latency_first.to_string()
-                    } else {
-                        "-".into()
-                    },
-                    if tr.error.is_none() {
-                        tr.latency_last.to_string()
-                    } else {
-                        "-".into()
-                    },
+                    s.n.to_string(),
+                    opt_col(cf_best),
+                    opt_col(mo_best),
+                    opt_col(s.latency_overlapped),
+                    opt_col(s.latency),
                 ]);
                 cf_best = None;
                 mo_best = None;
             }
+            _ => {}
         }
     }
     t
@@ -411,16 +232,16 @@ pub fn fig7(quick: bool) -> Table {
     let mut t = Table::new(vec![
         "Benchmark", "vs CGRA-Flow", "vs Morpher", "TCPA latency (last PE)",
     ]);
-    let tcpa = TcpaArch::paper(4, 4);
     let wls: Vec<Workload> = BenchId::PAPER5
         .iter()
         .map(|&id| build(id, id.paper_size()))
         .collect();
-    let turtles = par_map(&wls, |wl| map_turtle(wl, &tcpa));
+    let tcpa = TcpaBackend::paper(4, 4);
+    let turtles: Vec<MappedStats> = par_map(&wls, |wl| compile_stats(&tcpa, wl));
 
-    let mut points: Vec<(usize, RowSpec)> = Vec::new();
+    let mut points: Vec<(usize, Arc<dyn Backend>)> = Vec::new();
     for (i, wl) in wls.iter().enumerate() {
-        if turtles[i].error.is_some() {
+        if turtles[i].latency.is_none() {
             continue;
         }
         for mut spec in rows_for(wl.n_loops, 4, 4) {
@@ -430,15 +251,16 @@ pub fn fig7(quick: bool) -> Table {
             if quick {
                 spec.map.restarts = spec.map.restarts.min(3);
             }
-            points.push((i, spec));
+            points.push((i, Arc::new(CgraBackend::from_spec(spec))));
         }
     }
-    let lats: Vec<(usize, Tool, Option<u64>)> =
-        par_map(&points, |(i, spec)| (*i, spec.tool, map_cgra_row(&wls[*i], spec).latency));
+    let lats: Vec<(usize, Option<Tool>, Option<u64>)> = par_map(&points, |(i, b)| {
+        let s = compile_stats(b.as_ref(), &wls[*i]);
+        (*i, s.tool, s.latency)
+    });
 
     for (i, wl) in wls.iter().enumerate() {
-        let tr = &turtles[i];
-        if tr.error.is_some() {
+        let Some(tcpa_lat) = turtles[i].latency.map(|l| l.max(1)) else {
             t.row(vec![
                 wl.id.name().to_string(),
                 "-".to_string(),
@@ -446,8 +268,7 @@ pub fn fig7(quick: bool) -> Table {
                 "-".to_string(),
             ]);
             continue;
-        }
-        let tcpa_lat = tr.latency_last.max(1);
+        };
         let mut cf_best: Option<u64> = None;
         let mut mo_best: Option<u64> = None;
         for (pi, tool, latency) in &lats {
@@ -456,8 +277,8 @@ pub fn fig7(quick: bool) -> Table {
             }
             if let Some(lat) = *latency {
                 match tool {
-                    Tool::CgraFlow => cf_best = Some(cf_best.map_or(lat, |b| b.min(lat))),
-                    Tool::Morpher => mo_best = Some(mo_best.map_or(lat, |b| b.min(lat))),
+                    Some(Tool::CgraFlow) => cf_best = Some(cf_best.map_or(lat, |b| b.min(lat))),
+                    Some(Tool::Morpher) => mo_best = Some(mo_best.map_or(lat, |b| b.min(lat))),
                     _ => {}
                 }
             }
@@ -518,12 +339,8 @@ pub fn fig8(quick: bool) -> Table {
     }
     let results = par_map(&points, |p| match p {
         Point::Turtle { wl_idx, pes } => {
-            let tr = map_turtle(&wls[*wl_idx], &TcpaArch::paper(*pes, *pes));
-            Res::Turtle(if tr.error.is_none() {
-                Some(tr.latency_last.max(1))
-            } else {
-                None
-            })
+            let s = compile_stats(&TcpaBackend::paper(*pes, *pes), &wls[*wl_idx]);
+            Res::Turtle(s.latency.map(|l| l.max(1)))
         }
         Point::Cell { wl_idx, pes, u } => {
             let wl = &wls[*wl_idx];
@@ -542,20 +359,21 @@ pub fn fig8(quick: bool) -> Table {
                 if quick {
                     spec.map.restarts = spec.map.restarts.min(2);
                 }
-                let target = match spec.tool {
+                let slot = match spec.tool {
                     Tool::CgraFlow => &mut cf,
                     Tool::Morpher => &mut mo,
                     _ => continue,
                 };
-                let row = map_cgra_row(wl, &spec);
-                let entry = match row.latency {
+                let stats =
+                    compile_stats(&CgraBackend::from_spec(spec.clone()), wl);
+                let entry = match stats.latency {
                     Some(lat) => (lat, false),
                     None => match theoretical_bound(wl, &spec) {
                         Some(lb) => (lb, true),
                         None => continue,
                     },
                 };
-                *target = Some(match *target {
+                *slot = Some(match *slot {
                     Some(prev) if prev.0 <= entry.0 => prev,
                     _ => entry,
                 });
@@ -650,65 +468,31 @@ pub fn asic_table() -> Table {
 
 // ===================== end-to-end validation helper =========================
 
-/// Validate one benchmark end-to-end: simulate the best register-aware CGRA
-/// mapping and the TCPA configuration, compare both against the reference
-/// interpreter (and, via the runtime, the XLA golden model). Returns
-/// human-readable status lines.
+/// Validate one benchmark end-to-end through the default
+/// [`BackendRegistry`]: compile each array target's artifact, execute it on
+/// seeded inputs (the backend reports latency and outputs through the same
+/// [`crate::backend::ExecReport`] the coordinator serves), and compare the
+/// outputs against the reference interpreter. Returns human-readable
+/// status lines, one per array target.
 pub fn validate(id: BenchId, n: i64, seed: u64) -> Result<Vec<String>, String> {
     let wl = build(id, n);
     let ins = inputs(id, n, seed);
     let want = wl.reference_nest(&ins);
+    let registry = BackendRegistry::with_defaults();
     let mut lines = Vec::new();
 
-    // --- CGRA (Morpher profile: register-aware) ---
-    let spec = rows_for(wl.n_loops, 4, 4)
-        .into_iter()
-        .find(|s| s.tool == Tool::Morpher)
-        .unwrap();
-    let row = map_cgra_row(&wl, &spec);
-    if let Some(err) = &row.error {
-        return Err(format!("CGRA mapping failed: {err}"));
+    // the paper's two arrays, in the order the original driver reported
+    for target in [Target::Cgra, Target::Tcpa] {
+        let backend = registry
+            .get(target)
+            .ok_or_else(|| format!("no backend registered for target `{}`", target.name()))?;
+        let mapped = backend
+            .compile(&wl)
+            .map_err(|e| format!("{} failed: {}", e.stage, e.message))?;
+        let report = mapped.execute(&ins, 1)?;
+        compare(&want, &report.outputs, &wl, target.label())?;
+        lines.push(format!("{}: outputs match reference", report.detail));
     }
-    let mut pool = ins.clone();
-    let mut got = ArrayData::new();
-    for (dfg, m) in &row.mappings {
-        let r = cgra_sim::simulate(dfg, m, &pool);
-        if r.timing_hazards > 0 {
-            return Err(format!("CGRA sim reported {} hazards", r.timing_hazards));
-        }
-        for (k, v) in r.outputs {
-            pool.insert(k.clone(), v.clone());
-            got.insert(k, v);
-        }
-    }
-    compare(&want, &got, &wl, "CGRA")?;
-    lines.push(format!(
-        "CGRA ({}, II={}): outputs match reference",
-        spec.arch.name,
-        row.ii.unwrap()
-    ));
-
-    // --- TCPA ---
-    let tcpa = TcpaArch::paper(4, 4);
-    let tr = map_turtle(&wl, &tcpa);
-    if let Some(err) = &tr.error {
-        return Err(format!("TCPA compile failed: {err}"));
-    }
-    let run = tcpa_sim::simulate_workload(&tr.configs, &tcpa, &ins)
-        .map_err(|e| e.to_string())?;
-    for k in &run.kernels {
-        if k.timing_violations > 0 {
-            return Err(format!("TCPA sim reported {} violations", k.timing_violations));
-        }
-    }
-    compare(&want, &run.outputs, &wl, "TCPA")?;
-    let Some(last_kernel) = run.kernels.last() else {
-        return Err("TCPA simulation produced no kernel runs".into());
-    };
-    lines.push(format!(
-        "TCPA (II={}, first PE {} cy, last PE {} cy): outputs match reference",
-        tr.ii, last_kernel.first_pe_done, run.total_latency
-    ));
     Ok(lines)
 }
 
@@ -766,6 +550,8 @@ mod tests {
     fn validate_gemm_small() {
         let lines = validate(BenchId::Gemm, 8, 42).expect("validate");
         assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("CGRA ("), "{}", lines[0]);
+        assert!(lines[1].starts_with("TCPA (II="), "{}", lines[1]);
     }
 
     #[test]

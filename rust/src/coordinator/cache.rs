@@ -1,13 +1,17 @@
 //! Shared, thread-safe compile cache with single-flight semantics.
 //!
-//! The map/schedule pipeline (workload build → [`map_turtle`] /
-//! [`map_cgra_row`]) dominates request latency, so its results are cached
-//! behind an `Arc<RwLock<HashMap>>` keyed by `(BenchId, n, Target)` and
-//! shared by every worker of a [`super::pool`]. When N workers race on the
-//! same cold key, exactly one runs the pipeline (the *leader*); the rest
-//! park on a condvar and receive the leader's result — each distinct kernel
-//! is compiled once per process, which is what amortizes compile time across
+//! The map/schedule pipeline ([`crate::backend::Backend::compile`] over the
+//! registered backends) dominates request latency, so its results are cached behind an
+//! `Arc<RwLock<HashMap>>` keyed by `(BenchId, n, Target)` and shared by
+//! every worker of a [`super::pool`]. When N workers race on the same cold
+//! key, exactly one runs the pipeline (the *leader*); the rest park on a
+//! condvar and receive the leader's result — each distinct kernel is
+//! compiled once per process, which is what amortizes compile time across
 //! invocations (the §V-A batching argument at service scale).
+//!
+//! The cache is target-agnostic: it stores `Arc<dyn Mapped>` and resolves
+//! the pipeline through its [`BackendRegistry`], so a new backend plugs in
+//! by registration alone — no cache change, no new enum variant.
 //!
 //! Compile failures are cached too: the pipeline is deterministic, so a
 //! failing `(bench, n, target)` would fail identically on every retry.
@@ -16,25 +20,11 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
-use crate::bench::harness::{map_cgra_row, map_turtle, MapRow, TurtleRow};
-use crate::bench::toolchains::{rows_for, Tool};
+use crate::backend::{BackendRegistry, Mapped, Target};
 use crate::bench::workloads::{build, BenchId};
-use crate::tcpa::arch::TcpaArch;
-
-use super::session::Target;
 
 /// Cache key: one compiled artifact per benchmark instance per target.
 pub type CacheKey = (BenchId, i64, Target);
-
-/// A compiled, immutable, cheaply shareable kernel (always behind an `Arc`;
-/// workers clone the pointer, never the rows).
-#[derive(Debug)]
-pub enum CompiledKernel {
-    /// TURTLE-flow result: per-PRA TCPA configurations.
-    Tcpa(TurtleRow),
-    /// Register-aware CGRA mapping (Morpher profile).
-    Cgra(MapRow),
-}
 
 /// What `get_or_compile` observed for a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,7 +37,7 @@ pub enum CacheOutcome {
     Waited,
 }
 
-type CacheResult = Result<Arc<CompiledKernel>, String>;
+type CacheResult = Result<Arc<dyn Mapped>, String>;
 
 /// Rendezvous for callers that arrive while the leader is compiling.
 struct Flight {
@@ -72,7 +62,7 @@ enum Claim {
 /// never across a compile.
 pub struct CompileCache {
     slots: RwLock<HashMap<CacheKey, Slot>>,
-    tcpa_arch: TcpaArch,
+    registry: BackendRegistry,
     pub stats: CacheStats,
 }
 
@@ -106,20 +96,23 @@ impl CacheStats {
 }
 
 impl CompileCache {
+    /// A cache over the default registry (paper TCPA + Morpher CGRA + the
+    /// sequential reference backend).
     pub fn new() -> CompileCache {
-        CompileCache::with_arch(TcpaArch::paper(4, 4))
+        CompileCache::with_registry(BackendRegistry::with_defaults())
     }
 
-    pub fn with_arch(tcpa_arch: TcpaArch) -> CompileCache {
+    /// A cache over a custom backend registry.
+    pub fn with_registry(registry: BackendRegistry) -> CompileCache {
         CompileCache {
             slots: RwLock::new(HashMap::new()),
-            tcpa_arch,
+            registry,
             stats: CacheStats::default(),
         }
     }
 
-    pub fn tcpa_arch(&self) -> &TcpaArch {
-        &self.tcpa_arch
+    pub fn registry(&self) -> &BackendRegistry {
+        &self.registry
     }
 
     /// Number of resident entries (ready or in flight).
@@ -179,9 +172,9 @@ impl CompileCache {
                 // (and all future requests for this key) would hang forever
                 self.stats.misses.fetch_add(1, Ordering::Relaxed);
                 self.stats.compiles.fetch_add(1, Ordering::Relaxed);
-                let arch = &self.tcpa_arch;
+                let registry = &self.registry;
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                    || compile_kernel(key, arch),
+                    || compile_kernel(registry, key),
                 ))
                 .unwrap_or_else(|p| {
                     Err(format!("compile pipeline panicked: {}", panic_message(&p)))
@@ -225,31 +218,19 @@ pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
         .unwrap_or_else(|| "unknown panic".into())
 }
 
-/// Run the expensive pipeline for one key. Deterministic in its inputs, so
-/// results (including failures) are safe to cache process-wide.
-fn compile_kernel(key: CacheKey, tcpa_arch: &TcpaArch) -> CacheResult {
+/// Run the expensive pipeline for one key through the registry.
+/// Deterministic in its inputs, so results (including failures) are safe to
+/// cache process-wide.
+fn compile_kernel(registry: &BackendRegistry, key: CacheKey) -> CacheResult {
     let (bench, n, target) = key;
+    let backend = registry
+        .get(target)
+        .ok_or_else(|| format!("no backend registered for target `{}`", target.name()))?;
     let wl = build(bench, n);
-    match target {
-        Target::Tcpa => {
-            let tr = map_turtle(&wl, tcpa_arch);
-            match &tr.error {
-                Some(e) => Err(e.clone()),
-                None => Ok(Arc::new(CompiledKernel::Tcpa(tr))),
-            }
-        }
-        Target::Cgra => {
-            let spec = rows_for(wl.n_loops, 4, 4)
-                .into_iter()
-                .find(|s| s.tool == Tool::Morpher)
-                .expect("morpher profile");
-            let row = map_cgra_row(&wl, &spec);
-            match &row.error {
-                Some(e) => Err(e.clone()),
-                None => Ok(Arc::new(CompiledKernel::Cgra(row))),
-            }
-        }
-    }
+    backend
+        .compile(&wl)
+        .map(Arc::from)
+        .map_err(|e| e.message)
 }
 
 #[cfg(test)]
@@ -305,5 +286,25 @@ mod tests {
             cache.stats.hits() + cache.stats.misses() + cache.stats.waits(),
             8
         );
+    }
+
+    #[test]
+    fn every_registered_target_is_compilable() {
+        let cache = CompileCache::new();
+        for target in cache.registry().targets() {
+            let (r, _) = cache.get_or_compile((BenchId::Gesummv, 8, target));
+            assert!(r.is_ok(), "{target:?}: {:?}", r.err());
+        }
+        assert_eq!(cache.stats.compiles(), Target::COUNT as u64);
+    }
+
+    #[test]
+    fn unregistered_target_is_a_cached_error() {
+        let cache = CompileCache::with_registry(BackendRegistry::new());
+        let key = (BenchId::Gemm, 8, Target::Seq);
+        let (r, _) = cache.get_or_compile(key);
+        assert!(r.unwrap_err().contains("no backend registered"));
+        let (_, o2) = cache.get_or_compile(key);
+        assert_eq!(o2, CacheOutcome::Hit, "lookup failures cache like compiles");
     }
 }

@@ -2,10 +2,13 @@
 //! per-target breakdowns, log₂ wall-latency histograms and queue-depth
 //! tracking. Every pool worker records into its own `Metrics` (no contention
 //! on the hot path) and the pool merges them at shutdown.
+//!
+//! Per-target state is a dense table indexed by [`Target::index`], so a new
+//! backend gets its own breakdown by existing — no new field, no match.
 
 use std::time::Duration;
 
-use super::session::Target;
+use crate::backend::Target;
 
 /// Log₂-bucketed histogram of request wall latencies in microseconds.
 /// Bucket `i` counts requests with `wall_us` in `[2^i, 2^(i+1))`; the last
@@ -100,7 +103,7 @@ impl TargetMetrics {
 }
 
 /// Aggregated statistics over served requests.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 pub struct Metrics {
     pub served: u64,
     pub failed: u64,
@@ -110,14 +113,30 @@ pub struct Metrics {
     /// compile counts as a hit: this worker did not run the pipeline).
     pub cache_hits: u64,
     pub cache_misses: u64,
-    /// Per-target breakdowns with latency histograms.
-    pub tcpa: TargetMetrics,
-    pub cgra: TargetMetrics,
+    /// Per-target breakdowns with latency histograms, indexed by
+    /// [`Target::index`].
+    per_target: Vec<TargetMetrics>,
     /// Highest backlog (requests still queued behind the one being taken)
     /// this worker observed at dequeue time.
     pub peak_queue_depth: u64,
     /// Workers merged into this aggregate (1 for a plain session).
     pub workers: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            served: 0,
+            failed: 0,
+            total_sim_cycles: 0,
+            total_wall: Duration::ZERO,
+            cache_hits: 0,
+            cache_misses: 0,
+            per_target: vec![TargetMetrics::default(); Target::COUNT],
+            peak_queue_depth: 0,
+            workers: 0,
+        }
+    }
 }
 
 impl Metrics {
@@ -146,10 +165,12 @@ impl Metrics {
         cache_hit: bool,
     ) {
         self.record(cycles, wall, ok, cache_hit);
-        match target {
-            Target::Tcpa => self.tcpa.record(cycles, wall, ok),
-            Target::Cgra => self.cgra.record(cycles, wall, ok),
-        }
+        self.per_target[target.index()].record(cycles, wall, ok);
+    }
+
+    /// The breakdown for one target.
+    pub fn target(&self, target: Target) -> &TargetMetrics {
+        &self.per_target[target.index()]
     }
 
     pub fn observe_queue_depth(&mut self, depth: u64) {
@@ -164,8 +185,9 @@ impl Metrics {
         self.total_wall += other.total_wall;
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
-        self.tcpa.merge(&other.tcpa);
-        self.cgra.merge(&other.cgra);
+        for (mine, theirs) in self.per_target.iter_mut().zip(&other.per_target) {
+            mine.merge(theirs);
+        }
         self.peak_queue_depth = self.peak_queue_depth.max(other.peak_queue_depth);
         self.workers += other.workers.max(1);
     }
@@ -206,14 +228,17 @@ impl Metrics {
                 t.hist.max_us,
             )
         };
-        format!(
-            "{}\n{}\n{}\n  peak queue depth: {} | workers merged: {}",
-            self.summary(),
-            line("tcpa", &self.tcpa),
-            line("cgra", &self.cgra),
+        let mut out = self.summary();
+        for t in Target::ALL {
+            out.push('\n');
+            out.push_str(&line(t.name(), self.target(t)));
+        }
+        out.push_str(&format!(
+            "\n  peak queue depth: {} | workers merged: {}",
             self.peak_queue_depth,
             self.workers.max(1),
-        )
+        ));
+        out
     }
 }
 
@@ -241,13 +266,18 @@ mod tests {
         m.record_request(Target::Tcpa, 100, Duration::from_micros(300), true, false);
         m.record_request(Target::Cgra, 200, Duration::from_micros(700), true, true);
         m.record_request(Target::Cgra, 0, Duration::from_micros(9), false, true);
-        assert_eq!(m.tcpa.served, 1);
-        assert_eq!(m.cgra.served, 1);
-        assert_eq!(m.cgra.failed, 1);
-        assert_eq!(m.served, 2);
-        assert_eq!(m.tcpa.hist.count, 1);
-        assert_eq!(m.cgra.hist.count, 2);
-        assert!(m.report().contains("tcpa"));
+        m.record_request(Target::Seq, 10, Duration::from_micros(4), true, true);
+        assert_eq!(m.target(Target::Tcpa).served, 1);
+        assert_eq!(m.target(Target::Cgra).served, 1);
+        assert_eq!(m.target(Target::Cgra).failed, 1);
+        assert_eq!(m.target(Target::Seq).served, 1);
+        assert_eq!(m.served, 3);
+        assert_eq!(m.target(Target::Tcpa).hist.count, 1);
+        assert_eq!(m.target(Target::Cgra).hist.count, 2);
+        let report = m.report();
+        for t in Target::ALL {
+            assert!(report.contains(t.name()), "{report}");
+        }
     }
 
     #[test]
@@ -279,7 +309,7 @@ mod tests {
         assert_eq!(a.served, 2);
         assert_eq!(a.total_sim_cycles, 30);
         assert_eq!(a.peak_queue_depth, 7);
-        assert_eq!(a.tcpa.served, 1);
-        assert_eq!(a.cgra.served, 1);
+        assert_eq!(a.target(Target::Tcpa).served, 1);
+        assert_eq!(a.target(Target::Cgra).served, 1);
     }
 }

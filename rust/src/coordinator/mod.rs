@@ -8,8 +8,12 @@
 //! v2 architecture (see `rust/DESIGN.md`):
 //! * [`cache`] — `Arc<RwLock<HashMap>>` compile cache with single-flight
 //!   semantics; each distinct `(bench, n, target)` is compiled exactly once
-//!   per process regardless of worker count.
-//! * [`session`] — one worker: request execution, validation, metrics.
+//!   per process regardless of worker count. Artifacts are stored as
+//!   `Arc<dyn Mapped>` and compiled through the
+//!   [`crate::backend::BackendRegistry`], so the coordinator is
+//!   target-agnostic end to end.
+//! * [`session`] — one worker: request execution through the uniform
+//!   [`crate::backend::Mapped`] seam, validation, metrics.
 //! * [`pool`] — N sessions over one cache behind the channel-based
 //!   `serve()` API, with graceful drain-on-shutdown and merged metrics.
 //! * [`metrics`] — per-target latency histograms, cache hit/miss counters,
@@ -20,7 +24,7 @@ pub mod metrics;
 pub mod pool;
 pub mod session;
 
-pub use cache::{CacheOutcome, CompileCache, CompiledKernel};
+pub use cache::{CacheOutcome, CompileCache};
 pub use metrics::Metrics;
 pub use pool::{serve as serve_pool, PoolHandle, PoolSender};
 pub use session::{Request, Response, Session, Target};

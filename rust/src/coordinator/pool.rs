@@ -122,6 +122,7 @@ pub fn serve_with_cache(
                             latency_cycles: 0,
                             batch_cycles: 0,
                             validated: None,
+                            cache_hit: false,
                             error: Some(format!(
                                 "worker panicked: {}",
                                 super::cache::panic_message(&p)

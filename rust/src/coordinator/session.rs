@@ -1,31 +1,27 @@
 //! A coordinator session: request handling against the shared compile
-//! cache, dispatch to the simulated arrays, golden validation, and
-//! overlapped-batch accounting. A session is one *worker's* view of the
-//! service — [`super::pool`] runs many of them over one [`CompileCache`].
+//! cache, dispatch through the uniform [`crate::backend::Mapped`] seam,
+//! golden validation, and per-request accounting. A session is one
+//! *worker's* view of the service — [`super::pool`] runs many of them over
+//! one [`CompileCache`].
+//!
+//! The session is target-agnostic: batch semantics (TCPA overlapped
+//! restart vs CGRA full drain vs sequential replay) live inside each
+//! backend's `execute`, so a new target serves through this code unchanged.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
+pub use crate::backend::Target;
+use crate::backend::ExecReport;
 use crate::bench::workloads::{inputs, BenchId};
-use crate::cgra::sim as cgra_sim;
 use crate::ir::loopnest::ArrayData;
 use crate::ir::op::values_close;
 use crate::runtime::golden::GoldenService;
-use crate::tcpa::sim as tcpa_sim;
 
-use super::cache::{CacheOutcome, CompileCache, CompiledKernel};
+use super::cache::{CacheOutcome, CompileCache};
 use super::metrics::Metrics;
-
-/// Which simulated array a request targets.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Target {
-    /// 4×4 TCPA (paper reference).
-    Tcpa,
-    /// Best register-aware CGRA mapping (Morpher profile, classical 4×4).
-    Cgra,
-}
 
 /// One kernel-invocation request.
 #[derive(Debug, Clone)]
@@ -42,10 +38,11 @@ pub struct Request {
 }
 
 impl Request {
-    /// Deterministic round-robin trace over `benches` × both targets with
-    /// cycling batch sizes (1..=4) — the one workload shape shared by the
-    /// `serve` CLI, the throughput bench and the pool tests, so they all
-    /// observe the same traffic. Validation is off; callers opt in per use.
+    /// Deterministic round-robin trace over `benches` × both array targets
+    /// with cycling batch sizes (1..=4) — the one workload shape shared by
+    /// the `serve` CLI, the throughput bench and the pool tests, so they
+    /// all observe the same traffic. Validation is off; callers opt in per
+    /// use.
     pub fn round_robin(benches: &[BenchId], n: i64, n_req: usize, seed: u64) -> Vec<Request> {
         assert!(!benches.is_empty(), "round_robin wants at least one bench");
         (0..n_req)
@@ -78,6 +75,9 @@ pub struct Response {
     /// Total cycles for the whole batch (overlapped on the TCPA).
     pub batch_cycles: u64,
     pub validated: Option<bool>,
+    /// Whether the compiled artifact came out of the shared cache (a wait
+    /// on another worker's in-flight compile counts as a hit).
+    pub cache_hit: bool,
     pub error: Option<String>,
     pub wall: std::time::Duration,
 }
@@ -108,30 +108,38 @@ impl Session {
         &self.cache
     }
 
-    /// Handle one request synchronously.
+    /// Handle one request synchronously: fetch (or compile) the artifact,
+    /// execute it under the backend's own batch semantics, validate if
+    /// asked. The request inputs are materialized once and shared between
+    /// execution and validation.
     pub fn handle(&mut self, req: &Request) -> Response {
         let t0 = Instant::now();
         let (compiled, outcome) = self
             .cache
             .get_or_compile((req.bench, req.n, req.target));
         let cache_hit = outcome != CacheOutcome::Miss;
-        let result = compiled.and_then(|kernel| self.execute(req, &kernel));
+        let result: Result<(ExecReport, ArrayData), String> = compiled.and_then(|kernel| {
+            let ins = inputs(req.bench, req.n, req.seed);
+            kernel.execute(&ins, req.batch).map(|rep| (rep, ins))
+        });
 
         let (resp, cycles, ok) = match result {
-            Ok((single, batch, outs)) => {
+            Ok((rep, ins)) => {
                 let validated = if req.validate {
-                    Some(self.validate_outputs(req, &outs))
+                    Some(self.validate_outputs(req, &rep.outputs, &ins))
                 } else {
                     None
                 };
                 let ok = validated != Some(false);
+                let batch = rep.batch_cycles;
                 (
                     Response {
                         bench: req.bench,
                         target: req.target,
-                        latency_cycles: single,
+                        latency_cycles: rep.latency_cycles,
                         batch_cycles: batch,
                         validated,
+                        cache_hit,
                         error: None,
                         wall: t0.elapsed(),
                     },
@@ -146,6 +154,7 @@ impl Session {
                     latency_cycles: 0,
                     batch_cycles: 0,
                     validated: None,
+                    cache_hit,
                     error: Some(e),
                     wall: t0.elapsed(),
                 },
@@ -158,57 +167,8 @@ impl Session {
         resp
     }
 
-    /// Simulate a compiled kernel: (single-invocation cycles, batch cycles,
-    /// outputs).
-    fn execute(
-        &self,
-        req: &Request,
-        kernel: &CompiledKernel,
-    ) -> Result<(u64, u64, ArrayData), String> {
-        match kernel {
-            CompiledKernel::Tcpa(tr) => {
-                let ins = inputs(req.bench, req.n, req.seed);
-                let run =
-                    tcpa_sim::simulate_workload(&tr.configs, self.cache.tcpa_arch(), &ins)
-                        .map_err(|e| e.to_string())?;
-                let single = run.total_latency;
-                // overlapped batch: each further invocation starts after
-                // the previous one's first PE finished
-                let batch = if req.batch <= 1 {
-                    single
-                } else {
-                    single + (req.batch - 1) * run.overlapped_latency.max(1)
-                };
-                Ok((single, batch, run.outputs))
-            }
-            CompiledKernel::Cgra(row) => {
-                let single = row.latency.ok_or_else(|| {
-                    format!(
-                        "CGRA mapping for {} (N={}) reports no pipelined latency",
-                        req.bench.name(),
-                        req.n
-                    )
-                })?;
-                let ins = inputs(req.bench, req.n, req.seed);
-                let mut pool = ins.clone();
-                let mut outs = ArrayData::new();
-                for (dfg, m) in &row.mappings {
-                    let r = cgra_sim::simulate(dfg, m, &pool);
-                    for (k, v) in r.outputs {
-                        pool.insert(k.clone(), v.clone());
-                        outs.insert(k, v);
-                    }
-                }
-                // CGRAs drain fully between invocations (§V-A: overlapped
-                // execution "was not available on the considered CGRAs")
-                Ok((single, single * req.batch.max(1), outs))
-            }
-        }
-    }
-
-    fn validate_outputs(&mut self, req: &Request, outs: &ArrayData) -> bool {
-        let ins = inputs(req.bench, req.n, req.seed);
-        let Ok((want, _)) = self.golden.run(req.bench, req.n, &ins) else {
+    fn validate_outputs(&mut self, req: &Request, outs: &ArrayData, ins: &ArrayData) -> bool {
+        let Ok((want, _)) = self.golden.run(req.bench, req.n, ins) else {
             return false;
         };
         let wl = crate::bench::workloads::build(req.bench, req.n);
@@ -315,6 +275,7 @@ mod tests {
             seed: 1,
         });
         assert!(r1.error.is_none(), "{:?}", r1.error);
+        assert!(!r1.cache_hit, "first request compiles");
         let r2 = s.handle(&Request {
             bench: BenchId::Gesummv,
             n: 8,
@@ -324,9 +285,26 @@ mod tests {
             seed: 1,
         });
         assert!(r2.error.is_none());
+        assert!(r2.cache_hit, "second request reuses the artifact");
         assert_eq!(s.metrics.cache_hits, 1);
         assert_eq!(r2.batch_cycles, 2 * r2.latency_cycles);
         assert_eq!(s.cache().stats.compiles(), 1);
+    }
+
+    #[test]
+    fn seq_request_validates_like_the_arrays() {
+        let mut s = Session::new();
+        let resp = s.handle(&Request {
+            bench: BenchId::Trisolv,
+            n: 8,
+            target: Target::Seq,
+            batch: 3,
+            validate: true,
+            seed: 5,
+        });
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.validated, Some(true));
+        assert_eq!(resp.batch_cycles, 3 * resp.latency_cycles, "strictly serial");
     }
 
     #[test]
@@ -365,6 +343,7 @@ mod tests {
         assert_eq!(ra.latency_cycles, rb.latency_cycles);
         assert_eq!(cache.stats.compiles(), 1, "second session reuses the artifact");
         assert_eq!(b.metrics.cache_hits, 1);
+        assert!(rb.cache_hit);
     }
 
     #[test]

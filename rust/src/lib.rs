@@ -12,9 +12,13 @@
 //!   cycle-accurate array simulation ([`tcpa`]).
 //!
 //! On top sit the PPA models ([`ppa`]), the PolyBench workload suite and the
-//! per-table/per-figure reproduction harness ([`bench`]), the PJRT golden-model
+//! per-table/per-figure reproduction harness ([`bench`]), the unified
+//! target-facing API ([`backend`]: the `Backend`/`Mapped` traits, the
+//! target registry and the sequential reference backend — every target
+//! speaks one compile→execute→report pipeline), the PJRT golden-model
 //! runtime ([`runtime`]) that loads JAX/Pallas-lowered HLO artifacts, and the
-//! L3 coordinator ([`coordinator`]) that serves mapped-kernel invocations.
+//! L3 coordinator ([`coordinator`]) that serves mapped-kernel invocations
+//! through the backend seam.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index.
 
@@ -25,5 +29,6 @@ pub mod cgra;
 pub mod tcpa;
 pub mod ppa;
 pub mod bench;
+pub mod backend;
 pub mod runtime;
 pub mod coordinator;

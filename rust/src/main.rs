@@ -10,17 +10,21 @@
 //! repro fig8 [--quick]        # PE-count / unroll scaling incl. bounds
 //! repro asic                   # §V-B2/§V-C2 published-chip comparison
 //! repro validate [--bench gemm] [--n 8]   # end-to-end numeric validation
-//! repro serve [--workers 4] [--requests 24] [--trace mixed|gemm] [--compare]
-//!                              # coordinator v2: worker pool + shared cache
+//! repro serve [--workers 4] [--requests 24] [--trace mixed|gemm]
+//!             [--target tcpa|cgra|seq] [--compare]
+//!                              # coordinator v2: worker pool + shared cache,
+//!                              # any registered backend (incl. the
+//!                              # sequential reference) servable end to end
 //! repro paula <file.paula>    # compile a PAULA program onto the TCPA
 //! repro all [--quick]         # everything above, in order
 //! ```
 
 use std::time::Duration;
 
+use repro::backend::Target;
 use repro::bench::harness;
 use repro::bench::workloads::BenchId;
-use repro::coordinator::{pool, Metrics, Request};
+use repro::coordinator::{pool, Metrics, Request, Response};
 use repro::ir::paula;
 use repro::tcpa::arch::TcpaArch;
 use repro::tcpa::config::compile;
@@ -33,8 +37,7 @@ fn main() {
     match cmd {
         "table1" => println!("{}", harness::table1().render()),
         "table2" => {
-            let (t, _, _) = harness::table2(&BenchId::PAPER5, 4, 4, quick);
-            println!("{}", t.render());
+            println!("{}", harness::table2(&BenchId::PAPER5, 4, 4, quick).render());
         }
         "table3" => println!("{}", harness::table3().render()),
         "fig6" => {
@@ -92,16 +95,30 @@ fn main() {
                 !args.flag("no-validate")
             };
             let quiet = args.flag("quiet") || args.flag("compare");
+            // `--target tcpa|cgra|seq` pins every request to one backend —
+            // how the sequential reference is served end to end
+            let forced_target = args.opt("target").map(|t| {
+                Target::parse(t).unwrap_or_else(|| {
+                    eprintln!(
+                        "unknown --target `{t}` (want one of: {})",
+                        Target::ALL.map(|t| t.name()).join(", ")
+                    );
+                    std::process::exit(2);
+                })
+            });
             let trace: Vec<Request> = trace
                 .into_iter()
                 .map(|mut r| {
                     r.validate = validate;
+                    if let Some(t) = forced_target {
+                        r.target = t;
+                    }
                     r
                 })
                 .collect();
             if args.flag("compare") {
-                let (wall1, m1) = run_trace(1, &trace, true);
-                let (walln, mn) = run_trace(workers, &trace, true);
+                let (wall1, m1, r1) = run_trace(1, &trace, true);
+                let (walln, mn, rn) = run_trace(workers, &trace, true);
                 let rps = |w: Duration| trace.len() as f64 / w.as_secs_f64().max(1e-9);
                 println!("1 worker : {:?}  ({:.1} req/s)", wall1, rps(wall1));
                 println!(
@@ -112,8 +129,17 @@ fn main() {
                 );
                 println!("1 worker : {}", m1.summary());
                 println!("{workers} workers: {}", mn.report());
+                // per-request cache outcome (H = hit, M = miss/compile).
+                // Responses arrive in completion order, which under N racing
+                // workers is nondeterministic — so the two strings align
+                // only in their H/M totals, not position-by-position.
+                println!("cache outcomes, 1 worker (completion order): {}", cache_outcomes(&r1));
+                println!(
+                    "cache outcomes, {workers} workers (completion order): {}",
+                    cache_outcomes(&rn)
+                );
             } else {
-                let (wall, m) = run_trace(workers, &trace, quiet);
+                let (wall, m, _) = run_trace(workers, &trace, quiet);
                 println!(
                     "{} requests on {workers} workers in {wall:?} ({:.1} req/s)",
                     trace.len(),
@@ -140,7 +166,7 @@ fn main() {
         }
         "all" => {
             println!("== Table I ==\n{}", harness::table1().render());
-            let (t2, _, _) = harness::table2(&BenchId::PAPER5, 4, 4, quick);
+            let t2 = harness::table2(&BenchId::PAPER5, 4, 4, quick);
             println!("== Table II ==\n{}", t2.render());
             println!("== Table III ==\n{}", harness::table3().render());
             for id in BenchId::ALL {
@@ -155,7 +181,8 @@ fn main() {
             eprintln!(
                 "usage: repro <table1|table2|table3|fig6|fig7|fig8|asic|validate|serve|paula|all> \
                  [--quick] [--bench NAME] [--n N] [--sizes a,b,c] \
-                 [--workers N] [--requests N] [--trace mixed|NAME] [--compare] [--no-validate]"
+                 [--workers N] [--requests N] [--trace mixed|NAME] \
+                 [--target tcpa|cgra|seq] [--compare] [--no-validate]"
             );
             std::process::exit(2);
         }
@@ -186,20 +213,38 @@ fn build_trace(kind: &str, n_req: usize) -> Vec<Request> {
 
 /// Run a trace through [`pool::run_trace`], printing the responses after
 /// the timed window so the req/s figure is not skewed by terminal I/O.
-fn run_trace(workers: usize, trace: &[Request], quiet: bool) -> (Duration, Metrics) {
+fn run_trace(
+    workers: usize,
+    trace: &[Request],
+    quiet: bool,
+) -> (Duration, Metrics, Vec<Response>) {
     let (wall, metrics, responses) = pool::run_trace(workers, trace);
     if !quiet {
-        for r in responses {
+        for r in &responses {
             println!(
-                "{:<8} {:?} batch_cycles={} validated={:?} wall={:?}{}",
+                "{:<8} {:?} batch_cycles={} validated={:?} cache_hit={} wall={:?}{}",
                 r.bench.name(),
                 r.target,
                 r.batch_cycles,
                 r.validated,
+                r.cache_hit,
                 r.wall,
-                r.error.map(|e| format!(" ERROR: {e}")).unwrap_or_default()
+                r.error
+                    .as_ref()
+                    .map(|e| format!(" ERROR: {e}"))
+                    .unwrap_or_default()
             );
         }
     }
-    (wall, metrics)
+    (wall, metrics, responses)
+}
+
+/// Compact per-request cache-outcome string (response completion order):
+/// `H` when the artifact came from the shared cache, `M` when this request
+/// compiled it.
+fn cache_outcomes(responses: &[Response]) -> String {
+    responses
+        .iter()
+        .map(|r| if r.cache_hit { 'H' } else { 'M' })
+        .collect()
 }

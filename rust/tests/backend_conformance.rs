@@ -1,0 +1,155 @@
+//! Backend conformance suite: every backend in the default registry must
+//! honor the unified compile→execute→report contract, parameterized over
+//! all six benchmarks.
+//!
+//! Contract points checked here:
+//! * outputs match the golden interpreter on every benchmark;
+//! * `batch = 1` costs exactly the single-invocation latency;
+//! * batch latency is monotone (non-decreasing) in batch size and never
+//!   beats the per-target lower bound of one full invocation;
+//! * an artifact with no pipelined latency (a CGRA inner-only row)
+//!   surfaces as `Err` from `execute`, never as a zero-cycle success;
+//! * the sequential reference backend is servable end to end through the
+//!   coordinator pool, like any other target.
+
+use repro::backend::{BackendRegistry, CgraBackend, Target};
+use repro::bench::toolchains::{rows_for, Tool};
+use repro::bench::workloads::{build, inputs, BenchId};
+use repro::coordinator::pool;
+use repro::coordinator::Request;
+use repro::ir::op::values_close;
+use repro::runtime::golden::GoldenService;
+
+const N: i64 = 8;
+const SEED: u64 = 33;
+
+#[test]
+fn outputs_match_golden_on_every_backend_and_benchmark() {
+    let registry = BackendRegistry::with_defaults();
+    let mut golden = GoldenService::new();
+    assert_eq!(registry.targets(), Target::ALL.to_vec(), "all targets registered");
+    for target in registry.targets() {
+        let backend = registry.get(target).unwrap();
+        for id in BenchId::ALL {
+            let wl = build(id, N);
+            let ins = inputs(id, N, SEED);
+            let mapped = backend
+                .compile(&wl)
+                .unwrap_or_else(|e| panic!("{} {}: compile failed: {e}", target.name(), id.name()));
+            let rep = mapped
+                .execute(&ins, 1)
+                .unwrap_or_else(|e| panic!("{} {}: execute failed: {e}", target.name(), id.name()));
+            assert!(rep.latency_cycles > 0, "{} {}", target.name(), id.name());
+            assert_eq!(
+                rep.batch_cycles,
+                rep.latency_cycles,
+                "{} {}: batch=1 must equal single latency",
+                target.name(),
+                id.name()
+            );
+            // occupancy is ops per PE-cycle; it can exceed 1 on the TCPA's
+            // multi-FU PEs, but a successful run always issues work
+            assert!(
+                rep.occupancy > 0.0,
+                "{} {}: occupancy {} must be positive",
+                target.name(),
+                id.name(),
+                rep.occupancy
+            );
+            let (want, _) = golden.run(id, N, &ins).expect("golden run");
+            for name in wl.output_names() {
+                let (a, b) = (&want[&name], &rep.outputs[&name]);
+                assert_eq!(a.len(), b.len(), "{} {name}", target.name());
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert!(
+                        values_close(id.dtype(), *x, *y),
+                        "{} {} {name}: {x} vs {y}",
+                        target.name(),
+                        id.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_latency_is_monotone_in_batch_size() {
+    let registry = BackendRegistry::with_defaults();
+    for target in registry.targets() {
+        let backend = registry.get(target).unwrap();
+        for id in [BenchId::Gemm, BenchId::Atax] {
+            let wl = build(id, N);
+            let ins = inputs(id, N, SEED);
+            let mapped = backend.compile(&wl).expect("compiles");
+            let mut prev = 0u64;
+            for batch in [1u64, 2, 4, 8] {
+                let rep = mapped.execute(&ins, batch).expect("executes");
+                assert!(
+                    rep.batch_cycles >= prev,
+                    "{} {}: batch={batch} gave {} after {prev}",
+                    target.name(),
+                    id.name(),
+                    rep.batch_cycles
+                );
+                assert!(
+                    rep.batch_cycles >= rep.latency_cycles,
+                    "{} {}: a batch can never undercut one invocation",
+                    target.name(),
+                    id.name()
+                );
+                prev = rep.batch_cycles;
+            }
+        }
+    }
+}
+
+#[test]
+fn cgra_missing_latency_surfaces_as_error_not_zero() {
+    // inner-only rows map successfully but report no pipelined latency
+    // over the full problem — executing one must be an Err. Flag the
+    // known-good Morpher row inner-only so the mapping itself is the one
+    // the rest of the suite already proves.
+    let wl = build(BenchId::Gemm, N);
+    let mut spec = rows_for(wl.n_loops, 4, 4)
+        .into_iter()
+        .find(|s| s.tool == Tool::Morpher)
+        .expect("the Morpher Table II row");
+    spec.inner_only = true;
+    let mapped = CgraBackend::from_spec(spec)
+        .compile(&wl)
+        .expect("inner-only mapping compiles");
+    assert!(mapped.stats().latency.is_none());
+    let err = mapped
+        .execute(&inputs(BenchId::Gemm, N, SEED), 1)
+        .expect_err("no pipelined latency must not execute");
+    assert!(err.contains("no pipelined latency"), "{err}");
+}
+
+#[test]
+fn seq_backend_serves_end_to_end_through_the_pool() {
+    let (tx, rx, handle) = pool::serve(2);
+    let n_req = 6u64;
+    for i in 0..n_req {
+        tx.send(Request {
+            bench: BenchId::ALL[i as usize % BenchId::ALL.len()],
+            n: N,
+            target: Target::Seq,
+            batch: 1 + i % 3,
+            validate: true,
+            seed: SEED + i,
+        })
+        .unwrap();
+    }
+    for _ in 0..n_req {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.validated, Some(true), "{} seq validation", r.bench.name());
+        assert!(r.latency_cycles > 0);
+    }
+    drop(tx);
+    let m = handle.join();
+    assert_eq!(m.served, n_req);
+    assert_eq!(m.target(Target::Seq).served, n_req);
+    assert_eq!(m.target(Target::Cgra).served, 0);
+}
