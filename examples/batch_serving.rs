@@ -19,22 +19,10 @@ fn main() {
     ]);
     for id in [BenchId::Gemm, BenchId::Atax, BenchId::Trsm] {
         for batch in [1u64, 4, 16] {
-            let cgra = session.handle(&Request {
-                bench: id,
-                n: 8,
-                target: Target::Cgra,
-                batch,
-                validate: false,
-                seed: 1,
-            });
-            let tcpa = session.handle(&Request {
-                bench: id,
-                n: 8,
-                target: Target::Tcpa,
-                batch,
-                validate: false,
-                seed: 1,
-            });
+            let cgra =
+                session.handle(&Request::named(0, id.name(), 8, Target::Cgra, batch, false, 1));
+            let tcpa =
+                session.handle(&Request::named(1, id.name(), 8, Target::Tcpa, batch, false, 1));
             let serial = tcpa.latency_cycles * batch;
             let gain = if tcpa.batch_cycles > 0 {
                 format!("{:.2}x", serial as f64 / tcpa.batch_cycles as f64)

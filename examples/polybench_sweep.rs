@@ -22,22 +22,8 @@ fn main() {
     let t0 = Instant::now();
     for id in BenchId::ALL {
         let n = 8;
-        let cgra = session.handle(&Request {
-            bench: id,
-            n,
-            target: Target::Cgra,
-            batch: 1,
-            validate: true,
-            seed: 7,
-        });
-        let tcpa = session.handle(&Request {
-            bench: id,
-            n,
-            target: Target::Tcpa,
-            batch: 1,
-            validate: true,
-            seed: 7,
-        });
+        let cgra = session.handle(&Request::named(0, id.name(), n, Target::Cgra, 1, true, 7));
+        let tcpa = session.handle(&Request::named(1, id.name(), n, Target::Tcpa, 1, true, 7));
         let speed = if tcpa.latency_cycles > 0 && cgra.latency_cycles > 0 {
             format!(
                 "{:.1}x",

@@ -37,6 +37,12 @@ impl JsonReport {
         }
     }
 
+    /// Record a free-form result object (benches whose natural record shape
+    /// is not ns/iter, e.g. the serve bench's per-worker-count rows).
+    pub fn record_raw(&mut self, obj: Json) {
+        self.entries.push(obj);
+    }
+
     /// Record one bench result. `events_per_sec` is the domain-level rate
     /// (simulated array-cycles/s, mapped-cycles/s, …) when one applies.
     pub fn record(&mut self, name: &str, ms_per_iter: f64, events_per_sec: Option<f64>) {

@@ -1,17 +1,23 @@
-//! Bench: coordinator v2 throughput — a mixed PolyBench request trace served
-//! by 1 worker vs 4 workers over the shared compile cache. Demonstrates the
-//! acceptance criterion of the parallel-coordinator PR: with 4 workers,
-//! aggregate requests/sec ≥ 2× the single-worker baseline, and each distinct
-//! (bench, n, target) kernel is compiled exactly once across all workers.
+//! Bench: coordinator throughput — a mixed catalog request trace served by
+//! 1 / 2 / 4 workers over the shared content-addressed compile cache.
+//! Demonstrates the parallel-coordinator acceptance criterion (4 workers ≥
+//! 2× the single-worker req/s, each distinct kernel compiled exactly once
+//! across all workers) and writes the machine-readable trajectory —
+//! requests/sec plus p50/p99 request latency per worker count — to
+//! `BENCH_serve.json` via the shared [`common::JsonReport`].
 
-use std::collections::HashSet;
+mod common;
+
 use std::time::Duration;
 
-use repro::bench::workloads::BenchId;
-use repro::coordinator::{pool, Metrics, Request, Target};
+use repro::coordinator::{pool, Metrics, Request};
+use repro::util::json::Json;
 
 fn mixed_trace(n_req: usize) -> Vec<Request> {
-    Request::round_robin(&BenchId::ALL, 8, n_req, 0)
+    let catalog = repro::bench::spec::WorkloadCatalog::builtin();
+    let names = catalog.names();
+    let names: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    Request::round_robin(&names, 8, n_req, 0)
 }
 
 fn run(workers: usize, trace: &[Request]) -> (Duration, Metrics, u64) {
@@ -27,35 +33,59 @@ fn run(workers: usize, trace: &[Request]) -> (Duration, Metrics, u64) {
 
 fn main() {
     let trace = mixed_trace(96);
-    let distinct: HashSet<(BenchId, i64, Target)> =
-        trace.iter().map(|r| (r.bench, r.n, r.target)).collect();
+    let mut report = common::JsonReport::new("serve-throughput-v1");
 
-    let (w1, m1, c1) = run(1, &trace);
-    let (w4, m4, c4) = run(4, &trace);
+    let mut walls: Vec<(usize, Duration)> = Vec::new();
+    let rps = |len: usize, w: Duration| len as f64 / w.as_secs_f64().max(1e-9);
+    for workers in [1usize, 2, 4] {
+        let (wall, m, compiles) = run(workers, &trace);
+        assert_eq!(m.served, trace.len() as u64);
+        assert_eq!(
+            compiles,
+            m.distinct_kernels.len() as u64,
+            "{workers} workers must compile once per content address"
+        );
+        let hist = m.latency();
+        println!(
+            "{:<52} {:>10.1} req/s  (p50 {}us, p99 {}us)",
+            format!("serve: {} mixed requests, {workers} worker(s)", trace.len()),
+            rps(trace.len(), wall),
+            hist.percentile_us(0.50),
+            hist.percentile_us(0.99),
+        );
+        report.record_raw(Json::obj(vec![
+            ("name", Json::from(format!("serve/workers={workers}"))),
+            ("workers", Json::from(workers)),
+            ("requests", Json::from(trace.len())),
+            ("req_per_sec", Json::Float(rps(trace.len(), wall))),
+            ("p50_us", Json::from(hist.percentile_us(0.50) as usize)),
+            ("p99_us", Json::from(hist.percentile_us(0.99) as usize)),
+            ("max_us", Json::from(hist.max_us as usize)),
+            ("distinct_kernels", Json::from(m.distinct_kernels.len())),
+            ("cache_hits", Json::from(m.cache_hits as usize)),
+            ("compiles", Json::from(compiles as usize)),
+        ]));
+        if workers == 4 {
+            println!("4-worker metrics:\n{}", m.report());
+        }
+        walls.push((workers, wall));
+    }
 
-    assert_eq!(m1.served, trace.len() as u64);
-    assert_eq!(m4.served, trace.len() as u64);
-    assert_eq!(c1, distinct.len() as u64, "1-worker compiles once per kernel");
-    assert_eq!(c4, distinct.len() as u64, "4-worker compiles once per kernel");
-
-    let rps = |w: Duration| trace.len() as f64 / w.as_secs_f64().max(1e-9);
+    let w1 = walls[0].1;
+    let w4 = walls.last().unwrap().1;
     let speedup = w1.as_secs_f64() / w4.as_secs_f64().max(1e-9);
     println!(
-        "{:<52} {:>10.1} req/s",
-        format!("serve: {} mixed requests, 1 worker", trace.len()),
-        rps(w1)
+        "speedup 1 -> 4 workers: {speedup:.2}x over {} requests",
+        trace.len()
     );
-    println!(
-        "{:<52} {:>10.1} req/s  ({speedup:.2}x)",
-        format!("serve: {} mixed requests, 4 workers", trace.len()),
-        rps(w4)
-    );
-    println!("cache: {} distinct kernels, compiled once each", distinct.len());
-    println!("4-worker metrics:\n{}", m4.report());
     if speedup < 2.0 {
         eprintln!(
             "WARNING: speedup {speedup:.2}x below the 2x acceptance target \
              (core-starved machine?)"
         );
     }
+    report
+        .write("BENCH_serve.json")
+        .expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
 }

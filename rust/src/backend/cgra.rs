@@ -14,7 +14,7 @@ use crate::frontend::transforms::unroll_innermost;
 use crate::ir::loopnest::ArrayData;
 
 use crate::bench::toolchains::{rows_for, RowSpec, Tool};
-use crate::bench::workloads::{BenchId, Workload};
+use crate::bench::workloads::Workload;
 
 use super::{occupancy, Backend, CompileError, ExecReport, Mapped, MappedStats, Target};
 
@@ -23,7 +23,8 @@ use super::{occupancy, Backend, CompileError, ExecReport, Mapped, MappedStats, T
 /// an `Arc` rather than cloning the embedded mappings.
 #[derive(Debug, Clone)]
 pub struct MapRow {
-    pub bench: BenchId,
+    /// Workload name.
+    pub workload: String,
     pub tool: Tool,
     pub opt: String,
     pub arch: String,
@@ -83,7 +84,7 @@ pub fn map_cgra_row(wl: &Workload, spec: &RowSpec) -> MapRow {
 
     let ok = error.is_none();
     MapRow {
-        bench: wl.id,
+        workload: wl.name.clone(),
         tool: spec.tool,
         opt: spec.opt.label(),
         arch: spec.arch.name.clone(),
@@ -100,7 +101,7 @@ pub fn map_cgra_row(wl: &Workload, spec: &RowSpec) -> MapRow {
 
 fn stats_of(row: &MapRow, n: i64) -> MappedStats {
     MappedStats {
-        bench: row.bench,
+        workload: row.workload.clone(),
         n,
         tool: Some(row.tool),
         opt: row.opt.clone(),
@@ -202,7 +203,7 @@ impl Mapped for CgraMapped {
         let single = self.row.latency.ok_or_else(|| {
             format!(
                 "CGRA mapping for {} (N={}) reports no pipelined latency",
-                self.stats.bench.name(),
+                self.stats.workload,
                 self.stats.n
             )
         })?;
@@ -235,7 +236,7 @@ impl Mapped for CgraMapped {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bench::workloads::{build, inputs};
+    use crate::bench::workloads::{build, inputs, BenchId};
 
     #[test]
     fn morpher_backend_compiles_and_executes_gemm() {

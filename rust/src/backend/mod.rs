@@ -37,7 +37,7 @@ pub use seq::SeqBackend;
 pub use tcpa::{map_turtle, TcpaBackend, TurtleRow};
 
 use crate::bench::toolchains::Tool;
-use crate::bench::workloads::{BenchId, Workload};
+use crate::bench::workloads::Workload;
 use crate::ir::loopnest::ArrayData;
 
 /// Which simulated array a request targets. Every variant has a registered
@@ -92,7 +92,8 @@ impl Target {
 /// PE-utilization numbers) stay `Some`, matching what the tables print.
 #[derive(Debug, Clone)]
 pub struct MappedStats {
-    pub bench: BenchId,
+    /// Workload name (catalog name for builtins, client-chosen otherwise).
+    pub workload: String,
     /// Problem size the workload was built at.
     pub n: i64,
     /// Toolchain identity for Table-II-style rows (`None` for backends

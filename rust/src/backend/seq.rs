@@ -50,7 +50,7 @@ impl Backend for SeqBackend {
             .map(|s| s.iteration_count() * s.body_op_count() as u64)
             .sum();
         let stats = MappedStats {
-            bench: wl.id,
+            workload: wl.name.clone(),
             n: wl.n,
             tool: None,
             opt: "-".into(),

@@ -13,7 +13,7 @@ use crate::tcpa::config::{compile, TcpaConfig};
 use crate::tcpa::sim as tcpa_sim;
 
 use crate::bench::toolchains::Tool;
-use crate::bench::workloads::{BenchId, Workload};
+use crate::bench::workloads::Workload;
 
 use super::{occupancy, Backend, CompileError, ExecReport, Mapped, MappedStats, Target};
 
@@ -21,7 +21,8 @@ use super::{occupancy, Backend, CompileError, ExecReport, Mapped, MappedStats, T
 /// once built and shared across coordinator workers behind an `Arc`.
 #[derive(Debug, Clone)]
 pub struct TurtleRow {
-    pub bench: BenchId,
+    /// Workload name.
+    pub workload: String,
     pub n_ops: usize,
     pub ii: u32,
     pub unused_pes: usize,
@@ -62,7 +63,7 @@ pub fn map_turtle(wl: &Workload, arch: &TcpaArch) -> TurtleRow {
         }
     }
     TurtleRow {
-        bench: wl.id,
+        workload: wl.name.clone(),
         n_ops,
         ii,
         unused_pes: unused,
@@ -77,7 +78,7 @@ pub fn map_turtle(wl: &Workload, arch: &TcpaArch) -> TurtleRow {
 fn stats_of(row: &TurtleRow, wl: &Workload, arch: &TcpaArch) -> MappedStats {
     let ok = row.error.is_none();
     MappedStats {
-        bench: row.bench,
+        workload: row.workload.clone(),
         n: wl.n,
         tool: Some(Tool::Turtle),
         opt: "-".into(),
@@ -203,7 +204,7 @@ impl Mapped for TcpaMapped {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bench::workloads::{build, inputs};
+    use crate::bench::workloads::{build, inputs, BenchId};
 
     #[test]
     fn paper_backend_compiles_and_overlaps_batches() {

@@ -84,7 +84,7 @@ pub fn table2(benches: &[BenchId], width: usize, height: usize, quick: bool) -> 
 
     for s in stats {
         t.row(vec![
-            s.bench.name().to_string(),
+            s.workload.clone(),
             s.tool_label().to_string(),
             s.opt.clone(),
             s.arch.clone(),
@@ -215,9 +215,10 @@ pub fn fig6(id: BenchId, sizes: &[i64], quick: bool) -> Table {
 /// Default Fig. 6 sweep sizes per benchmark (divisible by the 4×4 array;
 /// GEMM is capped at 20 by the FIFO budget — §IV-6, matching the paper).
 pub fn fig6_sizes(id: BenchId) -> Vec<i64> {
-    match id {
-        BenchId::Gemm => vec![8, 12, 16, 20],
-        _ => vec![8, 16, 24, 32],
+    if id == BenchId::Gemm {
+        vec![8, 12, 16, 20]
+    } else {
+        vec![8, 16, 24, 32]
     }
 }
 
@@ -262,7 +263,7 @@ pub fn fig7(quick: bool) -> Table {
     for (i, wl) in wls.iter().enumerate() {
         let Some(tcpa_lat) = turtles[i].latency.map(|l| l.max(1)) else {
             t.row(vec![
-                wl.id.name().to_string(),
+                wl.name.clone(),
                 "-".to_string(),
                 "-".to_string(),
                 "-".to_string(),
@@ -288,7 +289,7 @@ pub fn fig7(quick: bool) -> Table {
                 .unwrap_or("-".into())
         };
         t.row(vec![
-            wl.id.name().into(),
+            wl.name.clone(),
             sp(cf_best),
             sp(mo_best),
             tcpa_lat.to_string(),
@@ -510,7 +511,7 @@ fn compare(
             .get(&name)
             .ok_or_else(|| format!("{what}: missing output {name}"))?;
         for (idx, (a, b)) in w.iter().zip(g.iter()).enumerate() {
-            if !crate::ir::op::values_close(wl.id.dtype(), *a, *b) {
+            if !crate::ir::op::values_close(wl.dtype, *a, *b) {
                 return Err(format!(
                     "{what}: {name}[{idx}] mismatch: expected {a}, got {b}"
                 ));

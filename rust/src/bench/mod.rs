@@ -1,6 +1,12 @@
 //! Workload suite, toolchain-emulation profiles and the per-table /
 //! per-figure reproduction harness.
+//!
+//! [`spec`] is the open workload API: serializable kernel descriptions
+//! ([`spec::WorkloadSpec`]), the name → constructor catalog
+//! ([`spec::WorkloadCatalog`]) and content-addressed fingerprints.
+//! [`workloads`] registers the six PolyBench builtins into it.
 
+pub mod spec;
 pub mod workloads;
 pub mod toolchains;
 pub mod harness;

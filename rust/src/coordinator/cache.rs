@@ -1,30 +1,69 @@
-//! Shared, thread-safe compile cache with single-flight semantics.
+//! Shared, thread-safe compile cache with single-flight semantics, keyed by
+//! *content address*.
 //!
 //! The map/schedule pipeline ([`crate::backend::Backend::compile`] over the
-//! registered backends) dominates request latency, so its results are cached behind an
-//! `Arc<RwLock<HashMap>>` keyed by `(BenchId, n, Target)` and shared by
-//! every worker of a [`super::pool`]. When N workers race on the same cold
-//! key, exactly one runs the pipeline (the *leader*); the rest park on a
-//! condvar and receive the leader's result — each distinct kernel is
-//! compiled once per process, which is what amortizes compile time across
-//! invocations (the §V-A batching argument at service scale).
+//! registered backends) dominates request latency, so its results are cached
+//! behind an `Arc<RwLock<HashMap>>` keyed by [`WorkloadKey`] — a stable
+//! FNV-1a fingerprint of the [`WorkloadSpec`] plus problem size and target —
+//! and shared by every worker of a [`super::pool`]. Content addressing means
+//! an *inline* user-submitted spec that is structurally identical to a
+//! catalog entry (or to another client's submission) dedupes onto the same
+//! artifact: the cache never needs to know where a spec came from.
+//!
+//! When N workers race on the same cold key, exactly one runs the pipeline
+//! (the *leader*); the rest park on a condvar and receive the leader's
+//! result — each distinct kernel is compiled once per process, which is what
+//! amortizes compile time across invocations (the §V-A batching argument at
+//! service scale).
 //!
 //! The cache is target-agnostic: it stores `Arc<dyn Mapped>` and resolves
 //! the pipeline through its [`BackendRegistry`], so a new backend plugs in
 //! by registration alone — no cache change, no new enum variant.
 //!
 //! Compile failures are cached too: the pipeline is deterministic, so a
-//! failing `(bench, n, target)` would fail identically on every retry.
+//! failing (spec, target) would fail identically on every retry.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use crate::backend::{BackendRegistry, Mapped, Target};
-use crate::bench::workloads::{build, BenchId};
+use crate::bench::spec::WorkloadSpec;
 
-/// Cache key: one compiled artifact per benchmark instance per target.
-pub type CacheKey = (BenchId, i64, Target);
+/// Content-addressed cache key: one compiled artifact per (spec fingerprint,
+/// size, target). The size rides along for observability — it is already
+/// folded into the fingerprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WorkloadKey {
+    /// [`WorkloadSpec::fingerprint`] — FNV-1a over the spec's canonical JSON.
+    pub fingerprint: u64,
+    /// Problem size the spec was built at.
+    pub n: i64,
+    pub target: Target,
+}
+
+impl WorkloadKey {
+    /// The key a spec compiles under for a target.
+    pub fn of(spec: &WorkloadSpec, target: Target) -> WorkloadKey {
+        WorkloadKey {
+            fingerprint: spec.fingerprint(),
+            n: spec.n,
+            target,
+        }
+    }
+}
+
+impl std::fmt::Display for WorkloadKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:016x}/n{}/{}",
+            self.fingerprint,
+            self.n,
+            self.target.name()
+        )
+    }
+}
 
 /// What `get_or_compile` observed for a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,7 +100,7 @@ enum Claim {
 /// RwLock in shared mode; the write lock is held only to flip slot states,
 /// never across a compile.
 pub struct CompileCache {
-    slots: RwLock<HashMap<CacheKey, Slot>>,
+    slots: RwLock<HashMap<WorkloadKey, Slot>>,
     registry: BackendRegistry,
     pub stats: CacheStats,
 }
@@ -124,9 +163,29 @@ impl CompileCache {
         self.len() == 0
     }
 
-    /// Fetch the compiled kernel for `key`, compiling at most once across
-    /// all threads.
-    pub fn get_or_compile(&self, key: CacheKey) -> (CacheResult, CacheOutcome) {
+    /// Fetch the compiled kernel for `spec` on `target`, compiling at most
+    /// once across all threads per content address. Returns the artifact (or
+    /// cached failure), how this caller observed the cache, and the key the
+    /// spec resolved to.
+    pub fn get_or_compile(
+        &self,
+        spec: &WorkloadSpec,
+        target: Target,
+    ) -> (CacheResult, CacheOutcome, WorkloadKey) {
+        let key = WorkloadKey::of(spec, target);
+        let (result, outcome) = self.get_or_compile_with_key(key, spec);
+        (result, outcome, key)
+    }
+
+    /// Like [`CompileCache::get_or_compile`], but with a caller-provided
+    /// key — the hot path for sessions that memoize fingerprints so cache
+    /// hits skip re-rendering the spec's canonical JSON.
+    pub fn get_or_compile_with_key(
+        &self,
+        key: WorkloadKey,
+        spec: &WorkloadSpec,
+    ) -> (CacheResult, CacheOutcome) {
+        let target = key.target;
         // fast path: shared read lock
         let seen = {
             let slots = self.slots.read().unwrap();
@@ -174,7 +233,7 @@ impl CompileCache {
                 self.stats.compiles.fetch_add(1, Ordering::Relaxed);
                 let registry = &self.registry;
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                    || compile_kernel(registry, key),
+                    || compile_kernel(registry, spec, target),
                 ))
                 .unwrap_or_else(|p| {
                     Err(format!("compile pipeline panicked: {}", panic_message(&p)))
@@ -218,15 +277,18 @@ pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
         .unwrap_or_else(|| "unknown panic".into())
 }
 
-/// Run the expensive pipeline for one key through the registry.
+/// Run the expensive pipeline for one spec/target through the registry.
 /// Deterministic in its inputs, so results (including failures) are safe to
 /// cache process-wide.
-fn compile_kernel(registry: &BackendRegistry, key: CacheKey) -> CacheResult {
-    let (bench, n, target) = key;
+fn compile_kernel(
+    registry: &BackendRegistry,
+    spec: &WorkloadSpec,
+    target: Target,
+) -> CacheResult {
     let backend = registry
         .get(target)
         .ok_or_else(|| format!("no backend registered for target `{}`", target.name()))?;
-    let wl = build(bench, n);
+    let wl = spec.workload();
     backend
         .compile(&wl)
         .map(Arc::from)
@@ -236,31 +298,62 @@ fn compile_kernel(registry: &BackendRegistry, key: CacheKey) -> CacheResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bench::spec::WorkloadCatalog;
     use std::thread;
+
+    fn spec(name: &str, n: i64) -> WorkloadSpec {
+        WorkloadCatalog::builtin().spec(name, n).expect("builtin")
+    }
 
     #[test]
     fn hit_after_miss() {
         let cache = CompileCache::new();
-        let key = (BenchId::Gemm, 8, Target::Tcpa);
-        let (r1, o1) = cache.get_or_compile(key);
+        let s = spec("gemm", 8);
+        let (r1, o1, k1) = cache.get_or_compile(&s, Target::Tcpa);
         assert!(r1.is_ok());
         assert_eq!(o1, CacheOutcome::Miss);
-        let (r2, o2) = cache.get_or_compile(key);
+        let (r2, o2, k2) = cache.get_or_compile(&s, Target::Tcpa);
         assert!(r2.is_ok());
         assert_eq!(o2, CacheOutcome::Hit);
+        assert_eq!(k1, k2, "same spec, same content address");
         assert_eq!(cache.stats.compiles(), 1);
         assert!(Arc::ptr_eq(&r1.unwrap(), &r2.unwrap()), "shared artifact");
+    }
+
+    #[test]
+    fn content_addressing_dedupes_equal_specs_from_different_sources() {
+        let cache = CompileCache::new();
+        let named = spec("gesummv", 8);
+        // a structurally identical spec arriving "inline" over the wire
+        let inline = WorkloadSpec::from_json(&named.to_json()).expect("roundtrip");
+        let (_, o1, k1) = cache.get_or_compile(&named, Target::Tcpa);
+        let (_, o2, k2) = cache.get_or_compile(&inline, Target::Tcpa);
+        assert_eq!(o1, CacheOutcome::Miss);
+        assert_eq!(o2, CacheOutcome::Hit, "inline spec must dedupe onto the builtin");
+        assert_eq!(k1, k2);
+        assert_eq!(cache.stats.compiles(), 1);
+    }
+
+    #[test]
+    fn distinct_sizes_and_targets_get_distinct_keys() {
+        let k1 = WorkloadKey::of(&spec("gemm", 8), Target::Tcpa);
+        let k2 = WorkloadKey::of(&spec("gemm", 12), Target::Tcpa);
+        let k3 = WorkloadKey::of(&spec("gemm", 8), Target::Cgra);
+        assert_ne!(k1.fingerprint, k2.fingerprint);
+        assert_ne!(k1, k3);
+        assert_eq!(k1.fingerprint, k3.fingerprint, "target is outside the spec");
+        assert!(k1.to_string().contains("/n8/tcpa"), "{k1}");
     }
 
     #[test]
     fn failures_are_cached() {
         let cache = CompileCache::new();
         // GEMM N=64 overflows the CGRA scratchpad: deterministic failure
-        let key = (BenchId::Gemm, 64, Target::Cgra);
-        let (r1, o1) = cache.get_or_compile(key);
+        let s = spec("gemm", 64);
+        let (r1, o1, _) = cache.get_or_compile(&s, Target::Cgra);
         assert!(r1.is_err());
         assert_eq!(o1, CacheOutcome::Miss);
-        let (r2, o2) = cache.get_or_compile(key);
+        let (r2, o2, _) = cache.get_or_compile(&s, Target::Cgra);
         assert!(r2.is_err());
         assert_eq!(o2, CacheOutcome::Hit);
         assert_eq!(cache.stats.compiles(), 1, "error not recompiled");
@@ -269,12 +362,13 @@ mod tests {
     #[test]
     fn concurrent_same_key_compiles_once() {
         let cache = Arc::new(CompileCache::new());
-        let key = (BenchId::Gesummv, 8, Target::Tcpa);
+        let s = Arc::new(spec("gesummv", 8));
         let mut handles = Vec::new();
         for _ in 0..8 {
             let c = cache.clone();
+            let s = s.clone();
             handles.push(thread::spawn(move || {
-                let (r, _) = c.get_or_compile(key);
+                let (r, _, _) = c.get_or_compile(&s, Target::Tcpa);
                 assert!(r.is_ok());
             }));
         }
@@ -291,8 +385,9 @@ mod tests {
     #[test]
     fn every_registered_target_is_compilable() {
         let cache = CompileCache::new();
+        let s = spec("gesummv", 8);
         for target in cache.registry().targets() {
-            let (r, _) = cache.get_or_compile((BenchId::Gesummv, 8, target));
+            let (r, _, _) = cache.get_or_compile(&s, target);
             assert!(r.is_ok(), "{target:?}: {:?}", r.err());
         }
         assert_eq!(cache.stats.compiles(), Target::COUNT as u64);
@@ -301,10 +396,10 @@ mod tests {
     #[test]
     fn unregistered_target_is_a_cached_error() {
         let cache = CompileCache::with_registry(BackendRegistry::new());
-        let key = (BenchId::Gemm, 8, Target::Seq);
-        let (r, _) = cache.get_or_compile(key);
+        let s = spec("gemm", 8);
+        let (r, _, _) = cache.get_or_compile(&s, Target::Seq);
         assert!(r.unwrap_err().contains("no backend registered"));
-        let (_, o2) = cache.get_or_compile(key);
+        let (_, o2, _) = cache.get_or_compile(&s, Target::Seq);
         assert_eq!(o2, CacheOutcome::Hit, "lookup failures cache like compiles");
     }
 }

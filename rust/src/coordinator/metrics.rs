@@ -6,9 +6,17 @@
 //! Per-target state is a dense table indexed by [`Target::index`], so a new
 //! backend gets its own breakdown by existing — no new field, no match.
 
+use std::collections::HashSet;
 use std::time::Duration;
 
 use crate::backend::Target;
+
+use super::cache::WorkloadKey;
+
+/// Cap on tracked distinct content addresses (client-controlled keys must
+/// not grow worker memory without bound; beyond the cap the count is a
+/// lower bound, which the report marks with a `+`).
+pub const MAX_DISTINCT_KERNELS: usize = 1 << 16;
 
 /// Log₂-bucketed histogram of request wall latencies in microseconds.
 /// Bucket `i` counts requests with `wall_us` in `[2^i, 2^(i+1))`; the last
@@ -116,6 +124,11 @@ pub struct Metrics {
     /// Per-target breakdowns with latency histograms, indexed by
     /// [`Target::index`].
     per_target: Vec<TargetMetrics>,
+    /// Content addresses served by this worker — with the open workload API
+    /// the kernel population is unbounded, so the service tracks how many
+    /// *distinct* kernels its traffic actually touched (the denominator of
+    /// the compile-amortization argument).
+    pub distinct_kernels: HashSet<WorkloadKey>,
     /// Highest backlog (requests still queued behind the one being taken)
     /// this worker observed at dequeue time.
     pub peak_queue_depth: u64,
@@ -133,6 +146,7 @@ impl Default for Metrics {
             cache_hits: 0,
             cache_misses: 0,
             per_target: vec![TargetMetrics::default(); Target::COUNT],
+            distinct_kernels: HashSet::new(),
             peak_queue_depth: 0,
             workers: 0,
         }
@@ -155,17 +169,32 @@ impl Metrics {
         }
     }
 
-    /// Record a request including its per-target breakdown.
+    /// Record a request including its per-target breakdown and the content
+    /// address it resolved to.
     pub fn record_request(
         &mut self,
         target: Target,
+        key: WorkloadKey,
         cycles: u64,
         wall: Duration,
         ok: bool,
         cache_hit: bool,
     ) {
         self.record(cycles, wall, ok, cache_hit);
+        if self.distinct_kernels.len() < MAX_DISTINCT_KERNELS {
+            self.distinct_kernels.insert(key);
+        }
         self.per_target[target.index()].record(cycles, wall, ok);
+    }
+
+    /// Record a request rejected before it reached the compile cache (an
+    /// unknown catalog name, a bad size, an invalid inline spec). Counts a
+    /// failure but neither a cache hit nor a miss — keeping the
+    /// `compiles == cache_misses` identity the serve bench asserts exact.
+    pub fn record_rejected(&mut self, target: Target, wall: Duration) {
+        self.failed += 1;
+        self.total_wall += wall;
+        self.per_target[target.index()].record(0, wall, false);
     }
 
     /// The breakdown for one target.
@@ -188,8 +217,20 @@ impl Metrics {
         for (mine, theirs) in self.per_target.iter_mut().zip(&other.per_target) {
             mine.merge(theirs);
         }
+        self.distinct_kernels
+            .extend(other.distinct_kernels.iter().copied());
         self.peak_queue_depth = self.peak_queue_depth.max(other.peak_queue_depth);
         self.workers += other.workers.max(1);
+    }
+
+    /// All-target latency histogram (merged per-target views) — what the
+    /// serve bench reports p50/p99 from.
+    pub fn latency(&self) -> LatencyHistogram {
+        let mut h = LatencyHistogram::default();
+        for t in &self.per_target {
+            h.merge(&t.hist);
+        }
+        h
     }
 
     /// Simulated PE-cycles per wall-clock second (simulator throughput).
@@ -233,8 +274,14 @@ impl Metrics {
             out.push('\n');
             out.push_str(&line(t.name(), self.target(t)));
         }
+        let saturated = if self.distinct_kernels.len() >= MAX_DISTINCT_KERNELS {
+            "+"
+        } else {
+            ""
+        };
         out.push_str(&format!(
-            "\n  peak queue depth: {} | workers merged: {}",
+            "\n  distinct kernels: {}{saturated} | peak queue depth: {} | workers merged: {}",
+            self.distinct_kernels.len(),
             self.peak_queue_depth,
             self.workers.max(1),
         ));
@@ -260,20 +307,39 @@ mod tests {
         assert!(m.summary().contains("served=2"));
     }
 
+    fn key(fp: u64, target: Target) -> WorkloadKey {
+        WorkloadKey {
+            fingerprint: fp,
+            n: 8,
+            target,
+        }
+    }
+
     #[test]
     fn per_target_breakdown() {
         let mut m = Metrics::default();
-        m.record_request(Target::Tcpa, 100, Duration::from_micros(300), true, false);
-        m.record_request(Target::Cgra, 200, Duration::from_micros(700), true, true);
-        m.record_request(Target::Cgra, 0, Duration::from_micros(9), false, true);
-        m.record_request(Target::Seq, 10, Duration::from_micros(4), true, true);
+        let us = Duration::from_micros;
+        m.record_request(Target::Tcpa, key(1, Target::Tcpa), 100, us(300), true, false);
+        m.record_request(Target::Cgra, key(1, Target::Cgra), 200, us(700), true, true);
+        m.record_request(Target::Cgra, key(1, Target::Cgra), 0, us(9), false, true);
+        m.record_request(Target::Seq, key(2, Target::Seq), 10, us(4), true, true);
+        m.record_rejected(Target::Seq, us(2));
         assert_eq!(m.target(Target::Tcpa).served, 1);
         assert_eq!(m.target(Target::Cgra).served, 1);
         assert_eq!(m.target(Target::Cgra).failed, 1);
         assert_eq!(m.target(Target::Seq).served, 1);
+        assert_eq!(m.target(Target::Seq).failed, 1, "rejection counts as failure");
         assert_eq!(m.served, 3);
+        assert_eq!(m.failed, 2);
+        assert_eq!(
+            m.cache_hits + m.cache_misses,
+            4,
+            "rejections touch neither cache counter"
+        );
         assert_eq!(m.target(Target::Tcpa).hist.count, 1);
         assert_eq!(m.target(Target::Cgra).hist.count, 2);
+        assert_eq!(m.distinct_kernels.len(), 3, "same fp on several targets");
+        assert_eq!(m.latency().count, 5, "merged histogram sees every request");
         let report = m.report();
         for t in Target::ALL {
             assert!(report.contains(t.name()), "{report}");
@@ -299,17 +365,20 @@ mod tests {
 
     #[test]
     fn merge_folds_workers() {
+        let us = Duration::from_micros;
         let mut a = Metrics::default();
-        a.record_request(Target::Tcpa, 10, Duration::from_micros(10), true, false);
+        a.record_request(Target::Tcpa, key(5, Target::Tcpa), 10, us(10), true, false);
         a.observe_queue_depth(3);
         let mut b = Metrics::default();
-        b.record_request(Target::Cgra, 20, Duration::from_micros(20), true, true);
+        b.record_request(Target::Cgra, key(5, Target::Cgra), 20, us(20), true, true);
+        b.record_request(Target::Cgra, key(5, Target::Cgra), 20, us(20), true, true);
         b.observe_queue_depth(7);
         a.merge(&b);
-        assert_eq!(a.served, 2);
-        assert_eq!(a.total_sim_cycles, 30);
+        assert_eq!(a.served, 3);
+        assert_eq!(a.total_sim_cycles, 50);
         assert_eq!(a.peak_queue_depth, 7);
         assert_eq!(a.target(Target::Tcpa).served, 1);
-        assert_eq!(a.target(Target::Cgra).served, 1);
+        assert_eq!(a.target(Target::Cgra).served, 2);
+        assert_eq!(a.distinct_kernels.len(), 2, "merge unions content addresses");
     }
 }

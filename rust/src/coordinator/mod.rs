@@ -1,30 +1,39 @@
 //! Layer-3 coordinator: the runtime a user deploys. It owns the shared
 //! compile cache, the simulated array "devices", the golden-model service,
-//! and a request loop that accepts kernel invocations, dispatches them to a
-//! target array and reports latency/validation results — including the
-//! TCPA's overlapped back-to-back invocations (paper §V-A: the next call may
-//! start as soon as the first PE is free).
+//! and a request loop that accepts kernel invocations — by catalog name or
+//! as inline workload specs — dispatches them to a target array and reports
+//! latency/validation results, including the TCPA's overlapped back-to-back
+//! invocations (paper §V-A: the next call may start as soon as the first PE
+//! is free).
 //!
-//! v2 architecture (see `rust/DESIGN.md`):
+//! v3 architecture (see `rust/DESIGN.md`):
 //! * [`cache`] — `Arc<RwLock<HashMap>>` compile cache with single-flight
-//!   semantics; each distinct `(bench, n, target)` is compiled exactly once
-//!   per process regardless of worker count. Artifacts are stored as
+//!   semantics, keyed by the content-addressed [`cache::WorkloadKey`]
+//!   (FNV-1a fingerprint of the spec + size + target): each distinct kernel
+//!   is compiled exactly once per process regardless of worker count or
+//!   whether it arrived by name or inline. Artifacts are stored as
 //!   `Arc<dyn Mapped>` and compiled through the
 //!   [`crate::backend::BackendRegistry`], so the coordinator is
 //!   target-agnostic end to end.
-//! * [`session`] — one worker: request execution through the uniform
+//! * [`session`] — one worker: workload resolution against the shared
+//!   [`crate::bench::spec::WorkloadCatalog`], execution through the uniform
 //!   [`crate::backend::Mapped`] seam, validation, metrics.
-//! * [`pool`] — N sessions over one cache behind the channel-based
-//!   `serve()` API, with graceful drain-on-shutdown and merged metrics.
+//! * [`pool`] — N sessions over one cache + catalog behind the
+//!   channel-based `serve()` API, with graceful drain-on-shutdown and
+//!   merged metrics.
 //! * [`metrics`] — per-target latency histograms, cache hit/miss counters,
-//!   queue-depth tracking, worker merge.
+//!   distinct-kernel tracking, queue-depth tracking, worker merge.
+//! * [`wire`] — the versioned JSON wire protocol (`repro serve
+//!   --requests <file.jsonl|->`): requests in, completion-order responses
+//!   out, correlated by the echoed client `id`.
 
 pub mod cache;
 pub mod metrics;
 pub mod pool;
 pub mod session;
+pub mod wire;
 
-pub use cache::{CacheOutcome, CompileCache};
+pub use cache::{CacheOutcome, CompileCache, WorkloadKey};
 pub use metrics::Metrics;
 pub use pool::{serve as serve_pool, PoolHandle, PoolSender};
-pub use session::{Request, Response, Session, Target};
+pub use session::{Request, Response, Session, Target, WorkloadRef};

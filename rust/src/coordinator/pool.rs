@@ -13,6 +13,8 @@ use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 
+use crate::bench::spec::WorkloadCatalog;
+
 use super::cache::CompileCache;
 use super::metrics::Metrics;
 use super::session::{Request, Response, Session};
@@ -67,15 +69,28 @@ impl PoolHandle {
     }
 }
 
-/// Start a pool with `n_workers` sessions over a fresh shared cache.
+/// Start a pool with `n_workers` sessions over a fresh shared cache and the
+/// builtin catalog.
 pub fn serve(n_workers: usize) -> (PoolSender, mpsc::Receiver<Response>, PoolHandle) {
     serve_with_cache(n_workers, Arc::new(CompileCache::new()))
 }
 
-/// Start a pool over an existing (possibly pre-warmed) cache.
+/// Start a pool over an existing (possibly pre-warmed) cache and the
+/// builtin catalog.
 pub fn serve_with_cache(
     n_workers: usize,
     cache: Arc<CompileCache>,
+) -> (PoolSender, mpsc::Receiver<Response>, PoolHandle) {
+    serve_with(n_workers, cache, Arc::new(WorkloadCatalog::builtin()))
+}
+
+/// Start a pool over an existing cache and an explicit workload catalog —
+/// how a deployment serves custom kernels by name (see
+/// `examples/custom_workload.rs`).
+pub fn serve_with(
+    n_workers: usize,
+    cache: Arc<CompileCache>,
+    catalog: Arc<WorkloadCatalog>,
 ) -> (PoolSender, mpsc::Receiver<Response>, PoolHandle) {
     let n = n_workers.max(1);
     let (req_tx, req_rx) = mpsc::channel::<Request>();
@@ -88,9 +103,10 @@ pub fn serve_with_cache(
         let rx = shared_rx.clone();
         let tx = resp_tx.clone();
         let worker_cache = cache.clone();
+        let worker_catalog = catalog.clone();
         let depth = depth.clone();
         workers.push(thread::spawn(move || {
-            let mut session = Session::with_cache(worker_cache);
+            let mut session = Session::with_catalog(worker_cache, worker_catalog);
             session.metrics.workers = 1;
             loop {
                 // Hold the queue lock only while blocked in recv; handling
@@ -116,19 +132,12 @@ pub fn serve_with_cache(
                     Ok(r) => r,
                     Err(p) => {
                         session.metrics.failed += 1;
-                        Response {
-                            bench: req.bench,
-                            target: req.target,
-                            latency_cycles: 0,
-                            batch_cycles: 0,
-                            validated: None,
-                            cache_hit: false,
-                            error: Some(format!(
-                                "worker panicked: {}",
-                                super::cache::panic_message(&p)
-                            )),
-                            wall: std::time::Duration::ZERO,
-                        }
+                        Response::failure(
+                            &req,
+                            format!("worker panicked: {}", super::cache::panic_message(&p)),
+                            false,
+                            std::time::Duration::ZERO,
+                        )
                     }
                 };
                 if tx.send(resp).is_err() {
@@ -175,25 +184,17 @@ pub fn run_trace(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bench::workloads::BenchId;
     use crate::coordinator::session::Target;
 
-    fn req(bench: BenchId, target: Target, seed: u64) -> Request {
-        Request {
-            bench,
-            n: 8,
-            target,
-            batch: 1,
-            validate: false,
-            seed,
-        }
+    fn req(id: u64, name: &str, target: Target, seed: u64) -> Request {
+        Request::named(id, name, 8, target, 1, false, seed)
     }
 
     #[test]
     fn pool_serves_and_drains() {
         let (tx, rx, handle) = serve(3);
         for i in 0..9 {
-            tx.send(req(BenchId::Gemm, Target::Tcpa, i)).unwrap();
+            tx.send(req(i, "gemm", Target::Tcpa, i)).unwrap();
         }
         let mut got = 0;
         for _ in 0..9 {
@@ -211,9 +212,28 @@ mod tests {
     #[test]
     fn zero_workers_clamps_to_one() {
         let (tx, rx, handle) = serve(0);
-        tx.send(req(BenchId::Gesummv, Target::Tcpa, 1)).unwrap();
+        tx.send(req(1, "gesummv", Target::Tcpa, 1)).unwrap();
         assert!(rx.recv().unwrap().error.is_none());
         drop(tx);
         assert_eq!(handle.join().workers, 1);
+    }
+
+    #[test]
+    fn responses_stay_attributable_by_id() {
+        // two requests that differ only in n/batch used to produce
+        // indistinguishable responses under a racing pool; the echoed id
+        // (plus n and batch) disambiguates arrival order
+        let (tx, rx, handle) = serve(4);
+        let a = Request::named(101, "gemm", 8, Target::Tcpa, 1, false, 1);
+        let b = Request::named(202, "gemm", 12, Target::Tcpa, 3, false, 1);
+        tx.send(a).unwrap();
+        tx.send(b).unwrap();
+        let mut got: Vec<Response> = (0..2).map(|_| rx.recv().unwrap()).collect();
+        got.sort_by_key(|r| r.id);
+        assert_eq!((got[0].id, got[0].n, got[0].batch), (101, 8, 1));
+        assert_eq!((got[1].id, got[1].n, got[1].batch), (202, 12, 3));
+        assert!(got.iter().all(|r| r.error.is_none()));
+        drop(tx);
+        handle.join();
     }
 }

@@ -4,9 +4,10 @@
 //! *worker's* view of the service — [`super::pool`] runs many of them over
 //! one [`CompileCache`].
 //!
-//! The session is target-agnostic: batch semantics (TCPA overlapped
-//! restart vs CGRA full drain vs sequential replay) live inside each
-//! backend's `execute`, so a new target serves through this code unchanged.
+//! The session is target-agnostic *and* workload-agnostic: batch semantics
+//! live inside each backend's `execute`, and workloads arrive either as
+//! catalog names or as inline [`WorkloadSpec`]s — a kernel nobody compiled
+//! this binary with serves through this code unchanged.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -15,7 +16,7 @@ use std::time::Instant;
 
 pub use crate::backend::Target;
 use crate::backend::ExecReport;
-use crate::bench::workloads::{inputs, BenchId};
+use crate::bench::spec::{WorkloadCatalog, WorkloadSpec};
 use crate::ir::loopnest::ArrayData;
 use crate::ir::op::values_close;
 use crate::runtime::golden::GoldenService;
@@ -23,11 +24,53 @@ use crate::runtime::golden::GoldenService;
 use super::cache::{CacheOutcome, CompileCache};
 use super::metrics::Metrics;
 
+/// Upper bound on per-worker memoized `(name, n)` resolutions.
+pub const MAX_RESOLVED_MEMO: usize = 1024;
+
+/// Memoized resolution: name → size → (realized spec, fingerprint). Nested
+/// so the steady-state lookup probes without allocating a key.
+type ResolvedMemo = std::collections::HashMap<
+    String,
+    std::collections::HashMap<i64, (Arc<WorkloadSpec>, u64)>,
+>;
+
+/// What a request asks to run: a catalog name at a size, or a full inline
+/// spec (the wire protocol accepts both; identical kernels content-address
+/// to the same compiled artifact either way).
+#[derive(Debug, Clone)]
+pub enum WorkloadRef {
+    /// Look `name` up in the session's [`WorkloadCatalog`].
+    Named { name: String, n: i64 },
+    /// A client-submitted kernel description.
+    Inline(WorkloadSpec),
+}
+
+impl WorkloadRef {
+    /// The workload name (for responses and error reporting).
+    pub fn name(&self) -> &str {
+        match self {
+            WorkloadRef::Named { name, .. } => name,
+            WorkloadRef::Inline(spec) => &spec.name,
+        }
+    }
+
+    /// The problem size.
+    pub fn n(&self) -> i64 {
+        match self {
+            WorkloadRef::Named { n, .. } => *n,
+            WorkloadRef::Inline(spec) => spec.n,
+        }
+    }
+}
+
 /// One kernel-invocation request.
 #[derive(Debug, Clone)]
 pub struct Request {
-    pub bench: BenchId,
-    pub n: i64,
+    /// Client-assigned correlation id, echoed verbatim in the [`Response`].
+    /// Responses arrive in completion order under a multi-worker pool, so
+    /// this is how a client matches answers to questions.
+    pub id: u64,
+    pub workload: WorkloadRef,
     pub target: Target,
     /// Number of back-to-back invocations (batch). On the TCPA, invocation
     /// k+1 starts as soon as the first PE of invocation k is free (§V-A).
@@ -38,38 +81,92 @@ pub struct Request {
 }
 
 impl Request {
-    /// Deterministic round-robin trace over `benches` × both array targets
+    /// A request for a catalog workload by name.
+    pub fn named(
+        id: u64,
+        name: &str,
+        n: i64,
+        target: Target,
+        batch: u64,
+        validate: bool,
+        seed: u64,
+    ) -> Request {
+        Request {
+            id,
+            workload: WorkloadRef::Named {
+                name: name.to_string(),
+                n,
+            },
+            target,
+            batch,
+            validate,
+            seed,
+        }
+    }
+
+    /// A request carrying an inline spec.
+    pub fn inline(
+        id: u64,
+        spec: WorkloadSpec,
+        target: Target,
+        batch: u64,
+        validate: bool,
+        seed: u64,
+    ) -> Request {
+        Request {
+            id,
+            workload: WorkloadRef::Inline(spec),
+            target,
+            batch,
+            validate,
+            seed,
+        }
+    }
+
+    /// Deterministic round-robin trace over `names` × both array targets
     /// with cycling batch sizes (1..=4) — the one workload shape shared by
     /// the `serve` CLI, the throughput bench and the pool tests, so they
-    /// all observe the same traffic. Validation is off; callers opt in per
-    /// use.
-    pub fn round_robin(benches: &[BenchId], n: i64, n_req: usize, seed: u64) -> Vec<Request> {
-        assert!(!benches.is_empty(), "round_robin wants at least one bench");
+    /// all observe the same traffic. Ids are the trace positions.
+    /// Validation is off; callers opt in per use.
+    pub fn round_robin(names: &[&str], n: i64, n_req: usize, seed: u64) -> Vec<Request> {
+        assert!(!names.is_empty(), "round_robin wants at least one workload");
         (0..n_req)
-            .map(|i| Request {
-                bench: benches[i % benches.len()],
-                n,
-                // flip the target once per full bench cycle, so every bench
-                // hits both targets even when benches.len() is even (a plain
-                // `i % 2` would lock bench parity to target parity)
-                target: if (i / benches.len()) % 2 == 0 {
-                    Target::Tcpa
-                } else {
-                    Target::Cgra
-                },
-                batch: 1 + (i % 4) as u64,
-                validate: false,
-                seed: seed.wrapping_add(i as u64),
+            .map(|i| {
+                Request::named(
+                    i as u64,
+                    names[i % names.len()],
+                    n,
+                    // flip the target once per full cycle, so every workload
+                    // hits both targets even when names.len() is even (a
+                    // plain `i % 2` would lock parity to target parity)
+                    if (i / names.len()) % 2 == 0 {
+                        Target::Tcpa
+                    } else {
+                        Target::Cgra
+                    },
+                    1 + (i % 4) as u64,
+                    false,
+                    seed.wrapping_add(i as u64),
+                )
             })
             .collect()
     }
 }
 
-/// The coordinator's answer.
+/// The coordinator's answer. Echoes the request's correlation fields
+/// (`id`, `workload`, `n`, `batch`) so arrival-order responses from a
+/// multi-worker pool stay attributable.
 #[derive(Debug, Clone)]
 pub struct Response {
-    pub bench: BenchId,
+    /// The client-assigned [`Request::id`], echoed.
+    pub id: u64,
+    /// Resolved workload name.
+    pub workload: String,
+    /// Problem size, echoed.
+    pub n: i64,
     pub target: Target,
+    /// Batch size, echoed.
+    pub batch: u64,
     /// Latency of a single invocation in array cycles.
     pub latency_cycles: u64,
     /// Total cycles for the whole batch (overlapped on the TCPA).
@@ -82,24 +179,70 @@ pub struct Response {
     pub wall: std::time::Duration,
 }
 
-/// A session: one worker over a (possibly shared) compile cache.
+impl Response {
+    /// A failure response echoing the request's correlation fields.
+    pub(crate) fn failure(
+        req: &Request,
+        error: String,
+        cache_hit: bool,
+        wall: std::time::Duration,
+    ) -> Response {
+        Response {
+            id: req.id,
+            workload: req.workload.name().to_string(),
+            n: req.workload.n(),
+            target: req.target,
+            batch: req.batch,
+            latency_cycles: 0,
+            batch_cycles: 0,
+            validated: None,
+            cache_hit,
+            error: Some(error),
+            wall,
+        }
+    }
+}
+
+/// A session: one worker over a (possibly shared) compile cache and a
+/// (possibly shared) workload catalog.
 pub struct Session {
     cache: Arc<CompileCache>,
+    catalog: Arc<WorkloadCatalog>,
     golden: GoldenService,
+    /// Memoized catalog resolutions: `(name, n)` → realized spec + its
+    /// fingerprint, so repeat named requests (the steady state) skip both
+    /// the IR reconstruction and the canonical-JSON render behind
+    /// [`WorkloadSpec::fingerprint`]. `n` is client-chosen, so the memo is
+    /// capped at [`MAX_RESOLVED_MEMO`] entries — beyond it resolutions stay
+    /// correct, just unmemoized (a hostile stream of distinct sizes cannot
+    /// grow worker memory without bound). The process-wide artifact cache
+    /// has no eviction yet; see ROADMAP.
+    resolved: ResolvedMemo,
+    /// Entries across all inner maps (for the memo cap).
+    resolved_len: usize,
     pub metrics: Metrics,
 }
 
 impl Session {
-    /// A standalone session with a private cache.
+    /// A standalone session: private cache, builtin catalog.
     pub fn new() -> Session {
         Session::with_cache(Arc::new(CompileCache::new()))
     }
 
-    /// A session over a shared cache (what pool workers use).
+    /// A session over a shared cache and the builtin catalog.
     pub fn with_cache(cache: Arc<CompileCache>) -> Session {
+        Session::with_catalog(cache, Arc::new(WorkloadCatalog::builtin()))
+    }
+
+    /// A session over a shared cache and a shared catalog (what pool
+    /// workers use).
+    pub fn with_catalog(cache: Arc<CompileCache>, catalog: Arc<WorkloadCatalog>) -> Session {
         Session {
             cache,
+            catalog,
             golden: GoldenService::new(),
+            resolved: std::collections::HashMap::new(),
+            resolved_len: 0,
             metrics: Metrics::default(),
         }
     }
@@ -108,25 +251,43 @@ impl Session {
         &self.cache
     }
 
-    /// Handle one request synchronously: fetch (or compile) the artifact,
-    /// execute it under the backend's own batch semantics, validate if
-    /// asked. The request inputs are materialized once and shared between
-    /// execution and validation.
+    pub fn catalog(&self) -> &Arc<WorkloadCatalog> {
+        &self.catalog
+    }
+
+    /// Handle one request synchronously: resolve the workload reference to a
+    /// spec, fetch (or compile) the artifact by content address, execute it
+    /// under the backend's own batch semantics, validate if asked. The
+    /// request inputs are materialized once and shared between execution and
+    /// validation.
     pub fn handle(&mut self, req: &Request) -> Response {
         let t0 = Instant::now();
-        let (compiled, outcome) = self
-            .cache
-            .get_or_compile((req.bench, req.n, req.target));
+        let (spec, fingerprint) = match self.resolve(&req.workload) {
+            Ok(resolved) => resolved,
+            Err(e) => {
+                let resp = Response::failure(req, e, false, t0.elapsed());
+                // rejected before the cache was consulted: a failure, but
+                // neither a cache hit nor a miss
+                self.metrics.record_rejected(req.target, resp.wall);
+                return resp;
+            }
+        };
+        let key = super::cache::WorkloadKey {
+            fingerprint,
+            n: spec.n,
+            target: req.target,
+        };
+        let (compiled, outcome) = self.cache.get_or_compile_with_key(key, &spec);
         let cache_hit = outcome != CacheOutcome::Miss;
         let result: Result<(ExecReport, ArrayData), String> = compiled.and_then(|kernel| {
-            let ins = inputs(req.bench, req.n, req.seed);
+            let ins = spec.gen_inputs(req.seed);
             kernel.execute(&ins, req.batch).map(|rep| (rep, ins))
         });
 
         let (resp, cycles, ok) = match result {
             Ok((rep, ins)) => {
                 let validated = if req.validate {
-                    Some(self.validate_outputs(req, &rep.outputs, &ins))
+                    Some(self.validate_outputs(&spec, &rep.outputs, &ins))
                 } else {
                     None
                 };
@@ -134,8 +295,11 @@ impl Session {
                 let batch = rep.batch_cycles;
                 (
                     Response {
-                        bench: req.bench,
+                        id: req.id,
+                        workload: spec.name.clone(),
+                        n: spec.n,
                         target: req.target,
+                        batch: req.batch,
                         latency_cycles: rep.latency_cycles,
                         batch_cycles: batch,
                         validated,
@@ -148,36 +312,81 @@ impl Session {
                 )
             }
             Err(e) => (
-                Response {
-                    bench: req.bench,
-                    target: req.target,
-                    latency_cycles: 0,
-                    batch_cycles: 0,
-                    validated: None,
-                    cache_hit,
-                    error: Some(e),
-                    wall: t0.elapsed(),
-                },
+                Response::failure(req, e, cache_hit, t0.elapsed()),
                 0,
                 false,
             ),
         };
         self.metrics
-            .record_request(req.target, cycles, resp.wall, ok, cache_hit);
+            .record_request(req.target, key, cycles, resp.wall, ok, cache_hit);
         resp
     }
 
-    fn validate_outputs(&mut self, req: &Request, outs: &ArrayData, ins: &ArrayData) -> bool {
-        let Ok((want, _)) = self.golden.run(req.bench, req.n, ins) else {
+    /// Resolve a workload reference to a validated spec plus its content
+    /// fingerprint. Named resolutions are memoized per `(name, n)`; a
+    /// panicking constructor (e.g. a size its kernel cannot be built at)
+    /// surfaces as a clean error, not a crashed worker.
+    fn resolve(&mut self, wr: &WorkloadRef) -> Result<(Arc<WorkloadSpec>, u64), String> {
+        match wr {
+            WorkloadRef::Named { name, n } => {
+                if *n <= 0 {
+                    return Err(format!("workload size must be positive, got {n}"));
+                }
+                if let Some((spec, fp)) =
+                    self.resolved.get(name.as_str()).and_then(|m| m.get(n))
+                {
+                    return Ok((spec.clone(), *fp));
+                }
+                let ctor = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.catalog.spec(name, *n)
+                }))
+                .map_err(|p| {
+                    format!(
+                        "workload `{name}` (n={n}) constructor failed: {}",
+                        super::cache::panic_message(&p)
+                    )
+                })?;
+                let spec = ctor.ok_or_else(|| {
+                    format!(
+                        "unknown workload `{name}` (catalog: {})",
+                        self.catalog.names().join(", ")
+                    )
+                })?;
+                let fp = spec.fingerprint();
+                let spec = Arc::new(spec);
+                if self.resolved_len < MAX_RESOLVED_MEMO {
+                    self.resolved
+                        .entry(name.clone())
+                        .or_default()
+                        .insert(*n, (spec.clone(), fp));
+                    self.resolved_len += 1;
+                }
+                Ok((spec, fp))
+            }
+            WorkloadRef::Inline(spec) => {
+                spec.validate()
+                    .map_err(|e| format!("invalid workload spec: {e}"))?;
+                Ok((Arc::new(spec.clone()), spec.fingerprint()))
+            }
+        }
+    }
+
+    fn validate_outputs(
+        &mut self,
+        spec: &WorkloadSpec,
+        outs: &ArrayData,
+        ins: &ArrayData,
+    ) -> bool {
+        let Ok((want, _)) = self.golden.run(spec, ins) else {
             return false;
         };
-        let wl = crate::bench::workloads::build(req.bench, req.n);
+        let wl = spec.workload();
         for name in wl.output_names() {
             let (Some(a), Some(b)) = (want.get(&name), outs.get(&name)) else {
                 return false;
             };
             for (x, y) in a.iter().zip(b.iter()) {
-                if !values_close(req.bench.dtype(), *x, *y) {
+                if !values_close(spec.dtype, *x, *y) {
                     return false;
                 }
             }
@@ -216,45 +425,29 @@ impl Default for Session {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bench::spec::WorkloadCatalog;
 
     #[test]
     fn tcpa_request_validates() {
         let mut s = Session::new();
-        let resp = s.handle(&Request {
-            bench: BenchId::Gemm,
-            n: 8,
-            target: Target::Tcpa,
-            batch: 1,
-            validate: true,
-            seed: 3,
-        });
+        let resp = s.handle(&Request::named(1, "gemm", 8, Target::Tcpa, 1, true, 3));
         assert!(resp.error.is_none(), "{:?}", resp.error);
         assert_eq!(resp.validated, Some(true));
         assert!(resp.latency_cycles > 0);
+        assert_eq!(resp.id, 1, "client id echoed");
+        assert_eq!(resp.workload, "gemm");
+        assert_eq!(resp.n, 8);
+        assert_eq!(resp.batch, 1);
     }
 
     #[test]
     fn overlapped_batching_beats_serial() {
         let mut s = Session::new();
         let single = s
-            .handle(&Request {
-                bench: BenchId::Gemm,
-                n: 8,
-                target: Target::Tcpa,
-                batch: 1,
-                validate: false,
-                seed: 3,
-            })
+            .handle(&Request::named(1, "gemm", 8, Target::Tcpa, 1, false, 3))
             .latency_cycles;
         let batch4 = s
-            .handle(&Request {
-                bench: BenchId::Gemm,
-                n: 8,
-                target: Target::Tcpa,
-                batch: 4,
-                validate: false,
-                seed: 3,
-            })
+            .handle(&Request::named(2, "gemm", 8, Target::Tcpa, 4, false, 3))
             .batch_cycles;
         assert!(
             batch4 < 4 * single,
@@ -266,42 +459,77 @@ mod tests {
     #[test]
     fn cgra_request_works_and_cache_hits() {
         let mut s = Session::new();
-        let r1 = s.handle(&Request {
-            bench: BenchId::Gesummv,
-            n: 8,
-            target: Target::Cgra,
-            batch: 1,
-            validate: true,
-            seed: 1,
-        });
+        let r1 = s.handle(&Request::named(7, "gesummv", 8, Target::Cgra, 1, true, 1));
         assert!(r1.error.is_none(), "{:?}", r1.error);
         assert!(!r1.cache_hit, "first request compiles");
-        let r2 = s.handle(&Request {
-            bench: BenchId::Gesummv,
-            n: 8,
-            target: Target::Cgra,
-            batch: 2,
-            validate: false,
-            seed: 1,
-        });
+        let r2 = s.handle(&Request::named(8, "gesummv", 8, Target::Cgra, 2, false, 1));
         assert!(r2.error.is_none());
         assert!(r2.cache_hit, "second request reuses the artifact");
         assert_eq!(s.metrics.cache_hits, 1);
         assert_eq!(r2.batch_cycles, 2 * r2.latency_cycles);
+        assert_eq!(r2.id, 8);
         assert_eq!(s.cache().stats.compiles(), 1);
+    }
+
+    #[test]
+    fn inline_spec_serves_and_dedupes_with_named() {
+        let mut s = Session::new();
+        let named = s.handle(&Request::named(1, "atax", 8, Target::Tcpa, 1, false, 2));
+        assert!(named.error.is_none(), "{:?}", named.error);
+        let spec = WorkloadCatalog::builtin().spec("atax", 8).unwrap();
+        let inline = s.handle(&Request::inline(2, spec, Target::Tcpa, 1, false, 2));
+        assert!(inline.error.is_none(), "{:?}", inline.error);
+        assert!(inline.cache_hit, "identical inline spec must hit the cache");
+        assert_eq!(inline.latency_cycles, named.latency_cycles);
+        assert_eq!(s.cache().stats.compiles(), 1);
+    }
+
+    #[test]
+    fn unknown_workload_is_a_response_error() {
+        let mut s = Session::new();
+        let resp = s.handle(&Request::named(9, "nonesuch", 8, Target::Tcpa, 1, false, 0));
+        let err = resp.error.expect("unknown name must fail");
+        assert!(err.contains("unknown workload `nonesuch`"), "{err}");
+        assert!(err.contains("gemm"), "error lists the catalog: {err}");
+        assert_eq!(resp.id, 9, "even failures echo the id");
+        assert_eq!(s.metrics.failed, 1);
+    }
+
+    #[test]
+    fn bad_named_sizes_and_panicking_ctors_are_clean_errors() {
+        let mut s = Session::new();
+        // n = 0 must not reach the builtin constructor's `.expect(...)`
+        let r = s.handle(&Request::named(1, "gemm", 0, Target::Tcpa, 1, false, 0));
+        assert!(
+            r.error.expect("n=0 must fail").contains("size must be positive")
+        );
+        // a registered constructor that panics for a size it cannot build
+        // at becomes an error response, not a dead worker/aborted process
+        let mut cat = WorkloadCatalog::builtin();
+        cat.register("panicky", |_| panic!("cannot build"));
+        let mut s2 =
+            Session::with_catalog(Arc::new(CompileCache::new()), Arc::new(cat));
+        let r2 = s2.handle(&Request::named(2, "panicky", 4, Target::Seq, 1, false, 0));
+        let err = r2.error.expect("panicking ctor must fail cleanly");
+        assert!(err.contains("constructor failed"), "{err}");
+        assert!(err.contains("cannot build"), "{err}");
+    }
+
+    #[test]
+    fn invalid_inline_spec_is_rejected_before_compiling() {
+        let mut s = Session::new();
+        let mut spec = WorkloadCatalog::builtin().spec("gemm", 8).unwrap();
+        spec.inputs[0].gen = crate::bench::spec::InputGen::Uniform { lo: 9, hi: 2 };
+        let resp = s.handle(&Request::inline(1, spec, Target::Tcpa, 1, false, 0));
+        let err = resp.error.expect("invalid spec must fail");
+        assert!(err.contains("invalid workload spec"), "{err}");
+        assert_eq!(s.cache().stats.compiles(), 0, "nothing reached the pipeline");
     }
 
     #[test]
     fn seq_request_validates_like_the_arrays() {
         let mut s = Session::new();
-        let resp = s.handle(&Request {
-            bench: BenchId::Trisolv,
-            n: 8,
-            target: Target::Seq,
-            batch: 3,
-            validate: true,
-            seed: 5,
-        });
+        let resp = s.handle(&Request::named(1, "trisolv", 8, Target::Seq, 3, true, 5));
         assert!(resp.error.is_none(), "{:?}", resp.error);
         assert_eq!(resp.validated, Some(true));
         assert_eq!(resp.batch_cycles, 3 * resp.latency_cycles, "strictly serial");
@@ -311,14 +539,7 @@ mod tests {
     fn compile_failure_is_a_response_error() {
         let mut s = Session::new();
         // GEMM N=64 overflows the CGRA scratchpad (§IV-6)
-        let resp = s.handle(&Request {
-            bench: BenchId::Gemm,
-            n: 64,
-            target: Target::Cgra,
-            batch: 1,
-            validate: false,
-            seed: 1,
-        });
+        let resp = s.handle(&Request::named(1, "gemm", 64, Target::Cgra, 1, false, 1));
         assert!(resp.error.is_some());
         assert_eq!(resp.latency_cycles, 0);
         assert_eq!(s.metrics.failed, 1);
@@ -329,14 +550,7 @@ mod tests {
         let cache = Arc::new(CompileCache::new());
         let mut a = Session::with_cache(cache.clone());
         let mut b = Session::with_cache(cache.clone());
-        let req = Request {
-            bench: BenchId::Atax,
-            n: 8,
-            target: Target::Tcpa,
-            batch: 1,
-            validate: false,
-            seed: 2,
-        };
+        let req = Request::named(1, "atax", 8, Target::Tcpa, 1, false, 2);
         let ra = a.handle(&req);
         let rb = b.handle(&req);
         assert!(ra.error.is_none() && rb.error.is_none());
@@ -349,18 +563,12 @@ mod tests {
     #[test]
     fn threaded_serve_loop() {
         let (tx, rx, handle) = Session::serve();
-        tx.send(Request {
-            bench: BenchId::Atax,
-            n: 8,
-            target: Target::Tcpa,
-            batch: 2,
-            validate: true,
-            seed: 9,
-        })
-        .unwrap();
+        tx.send(Request::named(3, "atax", 8, Target::Tcpa, 2, true, 9))
+            .unwrap();
         let resp = rx.recv().unwrap();
         assert!(resp.error.is_none(), "{:?}", resp.error);
         assert_eq!(resp.validated, Some(true));
+        assert_eq!(resp.id, 3);
         drop(tx);
         let metrics = handle.join().unwrap();
         assert_eq!(metrics.served, 1);

@@ -1,0 +1,377 @@
+//! Versioned JSON wire protocol for the coordinator: newline-delimited
+//! request/response records, the serialization behind
+//! `repro serve --requests <file.jsonl|->`.
+//!
+//! Every record carries the protocol version (`"v": 1`). A request names a
+//! workload either out of the catalog or as a full inline
+//! [`WorkloadSpec`] — both content-address to the same compiled artifact
+//! when structurally identical (see [`super::cache::WorkloadKey`]):
+//!
+//! ```json
+//! {"v":1,"id":1,"workload":{"name":"gemm","n":8},"target":"tcpa","batch":2,"validate":true,"seed":3}
+//! {"v":1,"id":2,"workload":{"spec":{...}},"target":"cgra"}
+//! ```
+//!
+//! `id` is a client-assigned correlation token echoed in the response;
+//! under a multi-worker pool responses arrive in *completion* order, so the
+//! echo (plus `n`/`batch`) is what keeps them attributable. `batch`
+//! defaults to 1, `validate` to false, `seed` to 0.
+//!
+//! A response mirrors the request's correlation fields and adds the
+//! execution report:
+//!
+//! ```json
+//! {"v":1,"id":1,"workload":"gemm","n":8,"target":"tcpa","batch":2,
+//!  "latency_cycles":1234,"batch_cycles":1300,"validated":true,
+//!  "cache_hit":false,"error":null,"wall_us":842}
+//! ```
+//!
+//! Malformed request lines do not abort the stream: they produce an error
+//! record `{"v":1,"line":<lineno>,"error":"..."}` and serving continues.
+
+use std::io::{BufRead, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::backend::Target;
+use crate::bench::spec::{WorkloadCatalog, WorkloadSpec};
+use crate::util::json::{opt_u64, req_i64, req_str, req_u64, Json};
+
+use super::cache::CompileCache;
+use super::metrics::Metrics;
+use super::pool;
+use super::session::{Request, Response, WorkloadRef};
+
+/// Wire protocol version; bump when any record shape changes.
+pub const WIRE_VERSION: i64 = 1;
+
+/// Largest batch a wire request may ask for. Batch cycle accounting is
+/// closed-form u64 arithmetic (`single * batch`, `last + (B-1)*first`), so
+/// an unbounded client value would overflow it; 2^20 back-to-back
+/// invocations is far beyond any meaningful sweep.
+pub const MAX_BATCH: u64 = 1 << 20;
+
+// ============================ requests ======================================
+
+/// Encode a request as a wire record.
+pub fn request_to_json(r: &Request) -> Json {
+    let workload = match &r.workload {
+        WorkloadRef::Named { name, n } => Json::obj(vec![
+            ("name", Json::from(name.clone())),
+            ("n", Json::Int(*n)),
+        ]),
+        WorkloadRef::Inline(spec) => Json::obj(vec![("spec", spec.to_json())]),
+    };
+    Json::obj(vec![
+        ("v", Json::Int(WIRE_VERSION)),
+        ("id", Json::Int(r.id as i64)),
+        ("workload", workload),
+        ("target", Json::from(r.target.name())),
+        ("batch", Json::Int(r.batch as i64)),
+        ("validate", Json::Bool(r.validate)),
+        ("seed", Json::Int(r.seed as i64)),
+    ])
+}
+
+/// Decode a wire record into a request.
+pub fn request_from_json(j: &Json) -> Result<Request, String> {
+    check_version(j)?;
+    let workload = j.get("workload").ok_or("missing field `workload`")?;
+    let workload = if let Some(spec) = workload.get("spec") {
+        WorkloadRef::Inline(WorkloadSpec::from_json(spec)?)
+    } else if let Some(name) = workload.get("name") {
+        WorkloadRef::Named {
+            name: name
+                .as_str()
+                .ok_or("workload name must be a string")?
+                .to_string(),
+            n: workload
+                .get("n")
+                .and_then(Json::as_i64)
+                .ok_or("named workload needs an integer `n`")?,
+        }
+    } else {
+        return Err("workload must carry `name`+`n` or an inline `spec`".into());
+    };
+    let target_s = j
+        .get("target")
+        .and_then(Json::as_str)
+        .ok_or("missing field `target`")?;
+    let target = Target::parse(target_s).ok_or_else(|| {
+        format!(
+            "unknown target `{target_s}` (want one of: {})",
+            Target::ALL.map(|t| t.name()).join(", ")
+        )
+    })?;
+    let batch = opt_u64(j, "batch", 1)?;
+    if batch == 0 {
+        // reject rather than silently coerce: the response echoes `batch`,
+        // so a rewritten value would break client correlation
+        return Err("field `batch` must be at least 1".into());
+    }
+    if batch > MAX_BATCH {
+        return Err(format!("field `batch` exceeds the maximum of {MAX_BATCH}"));
+    }
+    Ok(Request {
+        id: opt_u64(j, "id", 0)?,
+        workload,
+        target,
+        batch,
+        validate: match j.get("validate") {
+            None | Some(Json::Null) => false,
+            Some(v) => v.as_bool().ok_or("field `validate` must be a boolean")?,
+        },
+        seed: opt_u64(j, "seed", 0)?,
+    })
+}
+
+/// Parse one JSONL request line.
+pub fn parse_request_line(line: &str) -> Result<Request, String> {
+    let j = Json::parse(line).map_err(|e| e.to_string())?;
+    request_from_json(&j)
+}
+
+// ============================ responses =====================================
+
+/// Encode a response as a wire record.
+pub fn response_to_json(r: &Response) -> Json {
+    Json::obj(vec![
+        ("v", Json::Int(WIRE_VERSION)),
+        ("id", Json::Int(r.id as i64)),
+        ("workload", Json::from(r.workload.clone())),
+        ("n", Json::Int(r.n)),
+        ("target", Json::from(r.target.name())),
+        ("batch", Json::Int(r.batch as i64)),
+        ("latency_cycles", Json::Int(r.latency_cycles as i64)),
+        ("batch_cycles", Json::Int(r.batch_cycles as i64)),
+        (
+            "validated",
+            r.validated.map(Json::Bool).unwrap_or(Json::Null),
+        ),
+        ("cache_hit", Json::Bool(r.cache_hit)),
+        (
+            "error",
+            r.error
+                .clone()
+                .map(Json::from)
+                .unwrap_or(Json::Null),
+        ),
+        ("wall_us", Json::Int(r.wall.as_micros() as i64)),
+    ])
+}
+
+/// Decode a wire record into a response (what a JSONL client does).
+pub fn response_from_json(j: &Json) -> Result<Response, String> {
+    check_version(j)?;
+    let target_s = req_str(j, "target")?;
+    Ok(Response {
+        id: req_u64(j, "id")?,
+        workload: req_str(j, "workload")?,
+        n: req_i64(j, "n")?,
+        target: Target::parse(&target_s)
+            .ok_or_else(|| format!("unknown target `{target_s}`"))?,
+        batch: req_u64(j, "batch")?,
+        latency_cycles: req_u64(j, "latency_cycles")?,
+        batch_cycles: req_u64(j, "batch_cycles")?,
+        validated: match j.get("validated") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_bool().ok_or("field `validated` must be a boolean")?),
+        },
+        cache_hit: j
+            .get("cache_hit")
+            .and_then(Json::as_bool)
+            .ok_or("missing field `cache_hit`")?,
+        error: match j.get("error") {
+            None | Some(Json::Null) => None,
+            Some(e) => Some(
+                e.as_str()
+                    .ok_or("field `error` must be a string")?
+                    .to_string(),
+            ),
+        },
+        wall: Duration::from_micros(req_u64(j, "wall_us")?),
+    })
+}
+
+fn check_version(j: &Json) -> Result<(), String> {
+    match j.get("v").and_then(Json::as_i64) {
+        Some(WIRE_VERSION) => Ok(()),
+        Some(v) => Err(format!(
+            "unsupported wire version {v} (this build speaks {WIRE_VERSION})"
+        )),
+        None => Err("missing field `v` (wire version)".into()),
+    }
+}
+
+/// The error record emitted for an unparseable request line.
+pub fn line_error_json(lineno: usize, msg: &str) -> Json {
+    Json::obj(vec![
+        ("v", Json::Int(WIRE_VERSION)),
+        ("line", Json::from(lineno)),
+        ("error", Json::from(msg)),
+    ])
+}
+
+// ============================ JSONL serving =================================
+
+/// Serve newline-delimited JSON requests from `input` through an
+/// `n_workers` pool over `catalog`, writing one JSON response line per
+/// request in *completion* order (the echoed `id` correlates them).
+///
+/// Fully streaming: each request is dispatched to the pool as soon as its
+/// line parses, and a writer thread emits responses as they complete — so
+/// an interactive client on stdin sees its first answer before closing the
+/// pipe, and a huge request file never buffers in memory. Malformed lines
+/// produce error records (interleaved with responses, carrying their line
+/// number) and do not abort the stream. Returns the pool's merged metrics.
+pub fn serve_jsonl(
+    input: &mut dyn BufRead,
+    out: &mut (dyn Write + Send),
+    n_workers: usize,
+    catalog: Arc<WorkloadCatalog>,
+) -> std::io::Result<Metrics> {
+    let (tx, rx, handle) =
+        pool::serve_with(n_workers, Arc::new(CompileCache::new()), catalog);
+    let out = std::sync::Mutex::new(out);
+    std::thread::scope(|s| -> std::io::Result<()> {
+        // writer: stream responses in completion order until the pool drains
+        let out_ref = &out;
+        let writer = s.spawn(move || -> std::io::Result<()> {
+            for resp in rx.iter() {
+                let mut o = out_ref.lock().unwrap();
+                writeln!(o, "{}", response_to_json(&resp).render())?;
+            }
+            Ok(())
+        });
+        // reader: dispatch each request the moment its line parses. Errors
+        // break out instead of early-returning: the queue MUST close before
+        // the scope joins the writer, or both would wait forever.
+        let mut read_result: std::io::Result<()> = Ok(());
+        for (i, line) in input.lines().enumerate() {
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => {
+                    read_result = Err(e);
+                    break;
+                }
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            match parse_request_line(&line) {
+                Ok(req) => {
+                    // send fails only when every worker died; the writer
+                    // side will have surfaced that
+                    let _ = tx.send(req);
+                }
+                Err(e) => {
+                    let mut o = out.lock().unwrap();
+                    let record = line_error_json(i + 1, &e).render();
+                    if let Err(io_err) = writeln!(o, "{record}") {
+                        read_result = Err(io_err);
+                        break;
+                    }
+                }
+            }
+        }
+        drop(tx);
+        let write_result = writer.join().expect("wire writer thread");
+        read_result.and(write_result)
+    })?;
+    Ok(handle.join())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_request_roundtrips() {
+        let req = Request::named(7, "gemm", 8, Target::Tcpa, 2, true, 3);
+        let j = request_to_json(&req);
+        let back = request_from_json(&j).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.workload.name(), "gemm");
+        assert_eq!(back.workload.n(), 8);
+        assert_eq!(back.target, Target::Tcpa);
+        assert_eq!((back.batch, back.validate, back.seed), (2, true, 3));
+    }
+
+    #[test]
+    fn defaults_apply_to_omitted_fields() {
+        let req = parse_request_line(
+            r#"{"v":1,"workload":{"name":"atax","n":8},"target":"seq"}"#,
+        )
+        .unwrap();
+        assert_eq!(req.id, 0);
+        assert_eq!(req.batch, 1);
+        assert!(!req.validate);
+        assert_eq!(req.seed, 0);
+    }
+
+    #[test]
+    fn bad_requests_are_rejected_with_reasons() {
+        for (line, needle) in [
+            (r#"{"workload":{"name":"gemm","n":8},"target":"tcpa"}"#, "wire version"),
+            (
+                r#"{"v":2,"workload":{"name":"gemm","n":8},"target":"tcpa"}"#,
+                "unsupported wire version",
+            ),
+            (r#"{"v":1,"workload":{"name":"gemm","n":8}}"#, "target"),
+            (r#"{"v":1,"workload":{"name":"gemm","n":8},"target":"gpu"}"#, "unknown target"),
+            (r#"{"v":1,"workload":{},"target":"tcpa"}"#, "name"),
+            (r#"{"v":1,"workload":{"name":"gemm"},"target":"tcpa"}"#, "`n`"),
+            (
+                r#"{"v":1,"workload":{"name":"gemm","n":8},"target":"tcpa","batch":0}"#,
+                "`batch` must be at least 1",
+            ),
+            (
+                r#"{"v":1,"workload":{"name":"gemm","n":8},"target":"tcpa","batch":9999999999}"#,
+                "`batch` exceeds",
+            ),
+            (r#"not json"#, "JSON error"),
+        ] {
+            let e = parse_request_line(line).unwrap_err();
+            assert!(e.contains(needle), "{line} -> {e}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrips_including_error_and_null_fields() {
+        let resp = Response {
+            id: 42,
+            workload: "jacobi2d".into(),
+            n: 10,
+            target: Target::Cgra,
+            batch: 3,
+            latency_cycles: 100,
+            batch_cycles: 300,
+            validated: None,
+            cache_hit: true,
+            error: Some("boom".into()),
+            wall: Duration::from_micros(555),
+        };
+        let back = response_from_json(&response_to_json(&resp)).unwrap();
+        assert_eq!(back.id, 42);
+        assert_eq!(back.workload, "jacobi2d");
+        assert_eq!(back.validated, None);
+        assert_eq!(back.error.as_deref(), Some("boom"));
+        assert_eq!(back.wall, Duration::from_micros(555));
+
+        let ok = Response {
+            validated: Some(true),
+            error: None,
+            ..resp
+        };
+        let back = response_from_json(&response_to_json(&ok)).unwrap();
+        assert_eq!(back.validated, Some(true));
+        assert_eq!(back.error, None);
+    }
+
+    #[test]
+    fn line_errors_identify_the_line() {
+        let j = line_error_json(3, "boom");
+        assert_eq!(j.get("line").unwrap().as_i64(), Some(3));
+        assert_eq!(j.get("v").unwrap().as_i64(), Some(WIRE_VERSION));
+    }
+}

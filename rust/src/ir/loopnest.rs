@@ -21,7 +21,7 @@ pub enum ArrayKind {
 }
 
 /// A dense row-major array.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ArrayDecl {
     pub name: String,
     /// Concrete shape (row-major layout).
@@ -70,14 +70,14 @@ impl ArrayDecl {
 /// One loop dimension. `extent` is an affine expression over *outer* loop
 /// indices (coefficients for this and inner dims must be zero), enabling
 /// triangular nests like TRISOLV's `for j in 0..i`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LoopDim {
     pub name: String,
     pub extent: AffineExpr,
 }
 
 /// An expression tree evaluated per iteration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Expr {
     /// Read `array[idx...]` where each index is affine in the loop indices.
     Read {
@@ -136,7 +136,7 @@ impl Expr {
 }
 
 /// One statement: `arrays[array][idx...] = expr`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Stmt {
     pub array: usize,
     pub idx: Vec<AffineExpr>,
@@ -144,7 +144,7 @@ pub struct Stmt {
 }
 
 /// A perfect loop nest with a straight-line body.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LoopNest {
     pub name: String,
     pub dtype: Dtype,

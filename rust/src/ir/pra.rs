@@ -29,7 +29,7 @@ pub type ArrayId = usize;
 pub type EqId = usize;
 
 /// An argument of an equation's right-hand side.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Arg {
     /// Internal variable read `y[i − d]` (pure translation by PRA rules).
     Var { var: VarId, d: IVec },
@@ -40,7 +40,7 @@ pub enum Arg {
 }
 
 /// One quantized equation.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Equation {
     pub name: String,
     /// The defined internal variable (`x_i`), or `None` when the equation
@@ -66,7 +66,7 @@ impl Equation {
 }
 
 /// A complete PRA.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Pra {
     pub name: String,
     pub dtype: Dtype,

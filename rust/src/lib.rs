@@ -11,14 +11,18 @@
 //!   binding (RD/FD/ID/OD/VD) → per-processor-class code generation →
 //!   cycle-accurate array simulation ([`tcpa`]).
 //!
-//! On top sit the PPA models ([`ppa`]), the PolyBench workload suite and the
-//! per-table/per-figure reproduction harness ([`bench`]), the unified
-//! target-facing API ([`backend`]: the `Backend`/`Mapped` traits, the
-//! target registry and the sequential reference backend — every target
-//! speaks one compile→execute→report pipeline), the PJRT golden-model
-//! runtime ([`runtime`]) that loads JAX/Pallas-lowered HLO artifacts, and the
-//! L3 coordinator ([`coordinator`]) that serves mapped-kernel invocations
-//! through the backend seam.
+//! On top sit the PPA models ([`ppa`]), the open workload API and the
+//! PolyBench suite ([`bench`]: serializable [`bench::spec::WorkloadSpec`]s,
+//! the name → constructor [`bench::spec::WorkloadCatalog`] the six builtins
+//! self-register into, and the per-table/per-figure reproduction harness),
+//! the unified target-facing API ([`backend`]: the `Backend`/`Mapped`
+//! traits, the target registry and the sequential reference backend — every
+//! target speaks one compile→execute→report pipeline), the PJRT
+//! golden-model runtime ([`runtime`]) that loads JAX/Pallas-lowered HLO
+//! artifacts, and the L3 coordinator ([`coordinator`]) that serves kernel
+//! invocations — by catalog name or inline spec, over channels or the
+//! versioned JSON wire protocol ([`coordinator::wire`]) — through a compile
+//! cache keyed by content address ([`coordinator::cache::WorkloadKey`]).
 //!
 //! See `DESIGN.md` for the system inventory and experiment index.
 

@@ -12,9 +12,13 @@
 //! repro validate [--bench gemm] [--n 8]   # end-to-end numeric validation
 //! repro serve [--workers 4] [--requests 24] [--trace mixed|gemm]
 //!             [--target tcpa|cgra|seq] [--compare]
-//!                              # coordinator v2: worker pool + shared cache,
-//!                              # any registered backend (incl. the
-//!                              # sequential reference) servable end to end
+//!                              # synthetic trace through the worker pool +
+//!                              # shared content-addressed compile cache
+//! repro serve --requests <file.jsonl|->  [--workers 4]
+//!                              # JSON wire protocol: newline-delimited
+//!                              # requests (catalog name or inline workload
+//!                              # spec) in, completion-order JSON responses
+//!                              # out, correlated by the echoed client id
 //! repro paula <file.paula>    # compile a PAULA program onto the TCPA
 //! repro all [--quick]         # everything above, in order
 //! ```
@@ -23,8 +27,9 @@ use std::time::Duration;
 
 use repro::backend::Target;
 use repro::bench::harness;
+use repro::bench::spec::WorkloadCatalog;
 use repro::bench::workloads::BenchId;
-use repro::coordinator::{pool, Metrics, Request, Response};
+use repro::coordinator::{pool, wire, Metrics, Request, Response};
 use repro::ir::paula;
 use repro::tcpa::arch::TcpaArch;
 use repro::tcpa::config::compile;
@@ -83,8 +88,15 @@ fn main() {
             }
         }
         "serve" => {
-            let n_req = args.opt_usize("requests", 24);
             let workers = args.opt_usize("workers", 4);
+            // `--requests` is either a count (synthetic trace mode) or a
+            // JSONL path / `-` for stdin (wire-protocol mode)
+            let req_arg = args.opt("requests");
+            if let Some(path) = req_arg.filter(|v| v.parse::<usize>().is_err()) {
+                serve_jsonl(path, workers);
+                return;
+            }
+            let n_req = req_arg.and_then(|v| v.parse().ok()).unwrap_or(24);
             let trace = build_trace(args.opt_str("trace", "mixed"), n_req);
             // the demo validates every response against the golden model;
             // --compare measures raw throughput, so validation is off there
@@ -129,10 +141,10 @@ fn main() {
                 );
                 println!("1 worker : {}", m1.summary());
                 println!("{workers} workers: {}", mn.report());
-                // per-request cache outcome (H = hit, M = miss/compile).
-                // Responses arrive in completion order, which under N racing
-                // workers is nondeterministic — so the two strings align
-                // only in their H/M totals, not position-by-position.
+                // per-request cache outcome (`id:H` hit / `id:M`
+                // miss-and-compile). Responses arrive in completion order,
+                // which under N racing workers is nondeterministic — the
+                // echoed ids are what keep the two listings comparable.
                 println!("cache outcomes, 1 worker (completion order): {}", cache_outcomes(&r1));
                 println!(
                     "cache outcomes, {workers} workers (completion order): {}",
@@ -181,7 +193,7 @@ fn main() {
             eprintln!(
                 "usage: repro <table1|table2|table3|fig6|fig7|fig8|asic|validate|serve|paula|all> \
                  [--quick] [--bench NAME] [--n N] [--sizes a,b,c] \
-                 [--workers N] [--requests N] [--trace mixed|NAME] \
+                 [--workers N] [--requests N|FILE.jsonl|-] [--trace mixed|NAME] \
                  [--target tcpa|cgra|seq] [--compare] [--no-validate]"
             );
             std::process::exit(2);
@@ -189,26 +201,53 @@ fn main() {
     }
 }
 
-/// Build a request trace: `mixed` cycles through all PolyBench benchmarks,
-/// both targets and several batch sizes; a benchmark name pins the bench and
-/// cycles targets/batches only. Unknown names are an error, not a silent
-/// fallback to the mixed trace.
-fn build_trace(kind: &str, n_req: usize) -> Vec<Request> {
-    let benches: Vec<BenchId> = if kind == "mixed" {
-        BenchId::ALL.to_vec()
+/// Serve newline-delimited JSON requests from a file (or stdin via `-`)
+/// through the pool, writing JSON responses to stdout and the merged
+/// metrics report to stderr (so piped output stays pure JSONL).
+fn serve_jsonl(path: &str, workers: usize) {
+    let stdin = std::io::stdin();
+    let mut reader: Box<dyn std::io::BufRead> = if path == "-" {
+        Box::new(stdin.lock())
     } else {
-        match BenchId::parse(kind) {
-            Some(b) => vec![b],
-            None => {
-                eprintln!(
-                    "unknown --trace `{kind}` (want mixed or one of: {})",
-                    BenchId::ALL.map(|b| b.name()).join(", ")
-                );
-                std::process::exit(2);
-            }
-        }
+        let file = std::fs::File::open(path).unwrap_or_else(|e| {
+            eprintln!("cannot open --requests `{path}`: {e}");
+            std::process::exit(2);
+        });
+        Box::new(std::io::BufReader::new(file))
     };
-    Request::round_robin(&benches, 8, n_req, 0)
+    let catalog = std::sync::Arc::new(WorkloadCatalog::builtin());
+    let metrics = wire::serve_jsonl(
+        &mut reader,
+        &mut std::io::stdout().lock(),
+        workers,
+        catalog,
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("serve --requests failed: {e}");
+        std::process::exit(1);
+    });
+    eprintln!("{}", metrics.report());
+}
+
+/// Build a request trace: `mixed` cycles through the whole builtin catalog,
+/// both targets and several batch sizes; a workload name pins the kernel
+/// and cycles targets/batches only. Unknown names are an error, not a
+/// silent fallback to the mixed trace.
+fn build_trace(kind: &str, n_req: usize) -> Vec<Request> {
+    let catalog = WorkloadCatalog::builtin();
+    let names: Vec<String> = if kind == "mixed" {
+        catalog.names()
+    } else if catalog.contains(kind) {
+        vec![kind.to_string()]
+    } else {
+        eprintln!(
+            "unknown --trace `{kind}` (want mixed or one of: {})",
+            catalog.names().join(", ")
+        );
+        std::process::exit(2);
+    };
+    let names: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    Request::round_robin(&names, 8, n_req, 0)
 }
 
 /// Run a trace through [`pool::run_trace`], printing the responses after
@@ -222,9 +261,13 @@ fn run_trace(
     if !quiet {
         for r in &responses {
             println!(
-                "{:<8} {:?} batch_cycles={} validated={:?} cache_hit={} wall={:?}{}",
-                r.bench.name(),
+                "[{:>3}] {:<8} n={:<3} {:?} batch={} batch_cycles={} \
+                 validated={:?} cache_hit={} wall={:?}{}",
+                r.id,
+                r.workload,
+                r.n,
                 r.target,
+                r.batch,
                 r.batch_cycles,
                 r.validated,
                 r.cache_hit,
@@ -240,11 +283,13 @@ fn run_trace(
 }
 
 /// Compact per-request cache-outcome string (response completion order):
-/// `H` when the artifact came from the shared cache, `M` when this request
-/// compiled it.
+/// `id:H` when the artifact came from the shared cache, `id:M` when this
+/// request compiled it — the ids make the nondeterministic orderings of
+/// different worker counts comparable.
 fn cache_outcomes(responses: &[Response]) -> String {
     responses
         .iter()
-        .map(|r| if r.cache_hit { 'H' } else { 'M' })
-        .collect()
+        .map(|r| format!("{}:{}", r.id, if r.cache_hit { 'H' } else { 'M' }))
+        .collect::<Vec<_>>()
+        .join(" ")
 }

@@ -1,11 +1,19 @@
-//! Golden-model service: per-benchmark reference outputs computed by the
+//! Golden-model service: per-workload reference outputs computed by the
 //! XLA executables lowered from the JAX/Pallas models (`artifacts/*.hlo.txt`).
 //!
-//! When an artifact for a (benchmark, size) pair is missing — e.g. a size
+//! When an artifact for a (workload, size) pair is missing — e.g. a size
 //! outside `AOT_SIZES`, `make artifacts` not yet run, or the hermetic stub
 //! build without a PJRT backend — the service falls back to the pure-rust
 //! loop-nest interpreter, so tests remain hermetic. The integration suite
 //! asserts XLA ⟷ interpreter agreement whenever the artifacts are present.
+//!
+//! The service is workload-agnostic: it takes a
+//! [`crate::bench::spec::WorkloadSpec`] and marshals XLA arguments straight
+//! from the spec's input declarations (declaration order = `example_args`
+//! order; artifact regeneration must keep that convention) and results from
+//! the workload's output names — no benchmark enum anywhere, so
+//! user-submitted kernels validate through the same path as builtins (via
+//! the interpreter fallback until someone lowers an artifact for them).
 //!
 //! Every coordinator worker owns its own `GoldenService` (the executable
 //! cache is per-instance and `run` takes `&mut self`); the service itself is
@@ -14,11 +22,14 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use crate::bench::workloads::{build, BenchId};
+use crate::bench::spec::{WorkloadCatalog, WorkloadSpec};
 use crate::ir::loopnest::ArrayData;
 
 use super::pjrt::{from_literal, to_literal, Executable, Literal, PjrtRuntime};
 use super::Result;
+
+/// Upper bound on memoized artifact-trust verdicts (client-controlled keys).
+const MAX_TRUST_MEMO: usize = 1024;
 
 /// How a golden result was produced.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,7 +42,18 @@ pub enum GoldenSource {
 pub struct GoldenService {
     runtime: Option<PjrtRuntime>,
     dir: PathBuf,
-    cache: HashMap<(BenchId, i64), Executable>,
+    cache: HashMap<(String, i64), Executable>,
+    /// Memoized builtin fingerprint per (name, n) (`None` = no builtin of
+    /// that name/size, or its constructor failed) — the trust verdict is
+    /// deterministic, so compute it once, not per validated request. The
+    /// key is client-controlled, so the memo is capped like the session's
+    /// resolution memo; beyond the cap verdicts stay correct, unmemoized.
+    builtin_fp: HashMap<(String, i64), Option<u64>>,
+    /// Artifacts on disk are lowered from the *builtin* models, so they are
+    /// only trusted for specs content-identical to the builtin of the same
+    /// name and size — an inline spec that reuses a builtin name with
+    /// different semantics must not validate against the wrong HLO.
+    builtins: WorkloadCatalog,
 }
 
 impl GoldenService {
@@ -50,6 +72,8 @@ impl GoldenService {
             runtime,
             dir,
             cache: HashMap::new(),
+            builtin_fp: HashMap::new(),
+            builtins: WorkloadCatalog::builtin(),
         }
     }
 
@@ -57,98 +81,87 @@ impl GoldenService {
         self.runtime.is_some()
     }
 
-    /// Compute golden outputs for a benchmark instance.
+    /// Compute golden outputs for a workload instance.
     pub fn run(
         &mut self,
-        id: BenchId,
-        n: i64,
+        spec: &WorkloadSpec,
         inputs: &ArrayData,
     ) -> Result<(ArrayData, GoldenSource)> {
-        if self.runtime.is_some() {
-            let path = self.dir.join(format!("{}_n{}.hlo.txt", id.name(), n));
+        if self.runtime.is_some() && self.artifact_trusted(spec) {
+            let path = self
+                .dir
+                .join(format!("{}_n{}.hlo.txt", spec.name, spec.n));
             if path.exists() {
-                let out = self.run_xla(id, n, &path, inputs)?;
+                let out = self.run_xla(spec, &path, inputs)?;
                 return Ok((out, GoldenSource::Xla));
             }
         }
         // hermetic fallback: the loop-nest reference interpreter
-        let wl = build(id, n);
+        let wl = spec.workload();
         Ok((wl.reference_nest(inputs), GoldenSource::Interpreter))
+    }
+
+    /// An on-disk artifact may only stand in as the reference for `spec` if
+    /// the spec is content-identical to the builtin that the artifact was
+    /// lowered from (artifacts are addressed by name+size on disk, but
+    /// correctness is by content).
+    fn artifact_trusted(&mut self, spec: &WorkloadSpec) -> bool {
+        let key = (spec.name.clone(), spec.n);
+        let builtin_fp = match self.builtin_fp.get(&key) {
+            Some(fp) => *fp,
+            None => {
+                // constructors can panic for sizes they cannot build at
+                // (e.g. a builtin name reused inline at an absurd n) — an
+                // untrusted spec must degrade to the interpreter, not
+                // crash the worker
+                let fp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.builtins.spec(&spec.name, spec.n)
+                }))
+                .ok()
+                .flatten()
+                .map(|b| b.fingerprint());
+                if self.builtin_fp.len() < MAX_TRUST_MEMO {
+                    self.builtin_fp.insert(key, fp);
+                }
+                fp
+            }
+        };
+        builtin_fp.is_some() && builtin_fp == Some(spec.fingerprint())
     }
 
     fn run_xla(
         &mut self,
-        id: BenchId,
-        n: i64,
+        spec: &WorkloadSpec,
         path: &std::path::Path,
         inputs: &ArrayData,
     ) -> Result<ArrayData> {
         let rt = self.runtime.as_ref().expect("xla runtime");
-        if !self.cache.contains_key(&(id, n)) {
+        let key = (spec.name.clone(), spec.n);
+        if !self.cache.contains_key(&key) {
             let exe = rt.load_hlo_text(path)?;
-            self.cache.insert((id, n), exe);
+            self.cache.insert(key.clone(), exe);
         }
-        let exe = &self.cache[&(id, n)];
-        let dt = id.dtype();
-        let sq = [n, n];
-        let v = [n];
-        // argument order mirrors model.example_args
-        let args: Vec<Literal> = match id {
-            BenchId::Gemm => vec![
-                to_literal(&inputs["A"], &sq, dt)?,
-                to_literal(&inputs["B"], &sq, dt)?,
-                to_literal(&inputs["D"], &sq, dt)?, // the preloaded C
-            ],
-            BenchId::Atax => vec![
-                to_literal(&inputs["A"], &sq, dt)?,
-                to_literal(&inputs["x"], &v, dt)?,
-            ],
-            BenchId::Gesummv => vec![
-                to_literal(&inputs["A"], &sq, dt)?,
-                to_literal(&inputs["B"], &sq, dt)?,
-                to_literal(&inputs["x"], &v, dt)?,
-            ],
-            BenchId::Mvt => vec![
-                to_literal(&inputs["A"], &sq, dt)?,
-                to_literal(&inputs["y1"], &v, dt)?,
-                to_literal(&inputs["y2"], &v, dt)?,
-                to_literal(&inputs["z1"], &v, dt)?, // preloaded x1
-                to_literal(&inputs["z2"], &v, dt)?, // preloaded x2
-            ],
-            BenchId::Trisolv => vec![
-                to_literal(&inputs["L"], &sq, dt)?,
-                to_literal(&inputs["b"], &v, dt)?,
-            ],
-            BenchId::Trsm => vec![
-                to_literal(&inputs["L"], &sq, dt)?,
-                to_literal(&inputs["B"], &sq, dt)?,
-            ],
-        };
+        let exe = &self.cache[&key];
+        let dt = spec.dtype;
+        // argument order mirrors model.example_args = the spec's input
+        // declarations, in order
+        let args: Vec<Literal> = spec
+            .inputs
+            .iter()
+            .map(|i| to_literal(&inputs[&i.name], &i.shape, dt))
+            .collect::<Result<_>>()?;
         let outs = exe.run(&args)?;
+        let wl = spec.workload();
         let mut m = ArrayData::new();
-        let flat = |lit: &Literal, len: i64| -> Result<Vec<crate::ir::op::Value>> {
-            from_literal(&lit.reshape(&[len])?, dt)
-        };
-        match id {
-            BenchId::Gemm => {
-                m.insert("D".into(), flat(&outs[0], n * n)?);
-            }
-            BenchId::Atax => {
-                m.insert("y".into(), flat(&outs[0], n)?);
-            }
-            BenchId::Gesummv => {
-                m.insert("y".into(), flat(&outs[0], n)?);
-            }
-            BenchId::Mvt => {
-                m.insert("z1".into(), flat(&outs[0], n)?);
-                m.insert("z2".into(), flat(&outs[1], n)?);
-            }
-            BenchId::Trisolv => {
-                m.insert("x".into(), flat(&outs[0], n)?);
-            }
-            BenchId::Trsm => {
-                m.insert("X".into(), flat(&outs[0], n * n)?);
-            }
+        for (k, name) in wl.output_names().into_iter().enumerate() {
+            let decl = wl
+                .stages
+                .iter()
+                .flat_map(|s| s.arrays.iter())
+                .find(|a| a.name == name)
+                .expect("output declared by some stage");
+            let len = decl.len() as i64;
+            m.insert(name, from_literal(&outs[k].reshape(&[len])?, dt)?);
         }
         Ok(m)
     }
@@ -163,13 +176,16 @@ impl Default for GoldenService {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bench::workloads::inputs;
+    use crate::bench::spec::WorkloadCatalog;
+    use crate::bench::workloads::{build, inputs, BenchId};
     use crate::ir::op::{values_close, Value};
 
     fn check_agreement(id: BenchId, n: i64) {
         let mut svc = GoldenService::new();
+        let cat = WorkloadCatalog::builtin();
+        let spec = cat.spec(id.name(), n).expect("builtin");
         let ins = inputs(id, n, 5);
-        let (got, src) = svc.run(id, n, &ins).expect("golden run");
+        let (got, src) = svc.run(&spec, &ins).expect("golden run");
         let wl = build(id, n);
         let want = wl.reference_nest(&ins);
         for name in wl.output_names() {
@@ -177,9 +193,9 @@ mod tests {
             assert_eq!(a.len(), b.len());
             for (x, y) in a.iter().zip(b.iter()) {
                 assert!(
-                    values_close(id.dtype(), *x, *y),
+                    values_close(wl.dtype, *x, *y),
                     "{}/{name}: {x} vs {y} via {src:?}",
-                    id.name()
+                    wl.name
                 );
             }
         }
@@ -196,8 +212,9 @@ mod tests {
     #[test]
     fn fallback_works_for_unknown_size() {
         let mut svc = GoldenService::new();
+        let spec = WorkloadCatalog::builtin().spec("gemm", 4).unwrap();
         let ins = inputs(BenchId::Gemm, 4, 1);
-        let (out, src) = svc.run(BenchId::Gemm, 4, &ins).unwrap();
+        let (out, src) = svc.run(&spec, &ins).unwrap();
         assert_eq!(src, GoldenSource::Interpreter, "no n=4 artifact");
         assert_eq!(out["D"].len(), 16);
         assert!(matches!(out["D"][0], Value::I32(_)));

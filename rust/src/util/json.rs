@@ -1,7 +1,11 @@
-//! Tiny JSON *writer* (no parser needed — we only emit machine-readable
-//! experiment records alongside the human-readable tables).
+//! Tiny JSON reader *and* writer (no external deps — the build environment
+//! is offline). The writer emits machine-readable experiment records
+//! alongside the human-readable tables; the parser backs the coordinator's
+//! versioned wire protocol (`repro serve --requests <file.jsonl|->`) and
+//! inline [`crate::bench::spec::WorkloadSpec`] submissions.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 /// A JSON value. Object keys are ordered (BTreeMap) for stable output.
 #[derive(Debug, Clone, PartialEq)]
@@ -15,6 +19,19 @@ pub enum Json {
     Object(BTreeMap<String, Json>),
 }
 
+/// A parse failure: byte offset into the input plus a message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JsonError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "JSON error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
 impl Json {
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Object(
@@ -24,6 +41,80 @@ impl Json {
                 .collect(),
         )
     }
+
+    // ------------------------------ accessors ------------------------------
+
+    /// Object member lookup (`None` on non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Object(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Numeric view: ints widen to f64.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Int(i) => Some(*i as f64),
+            Json::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    // ------------------------------- parser --------------------------------
+
+    /// Parse one JSON document. The whole input must be consumed (trailing
+    /// non-whitespace is an error), which is what a JSONL reader wants.
+    /// Nesting is capped at [`MAX_DEPTH`] so hostile input cannot overflow
+    /// the stack of a serving process.
+    pub fn parse(s: &str) -> Result<Json, JsonError> {
+        let mut p = Parser {
+            b: s.as_bytes(),
+            pos: 0,
+            depth: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.b.len() {
+            return Err(p.err("trailing characters after document"));
+        }
+        Ok(v)
+    }
+
+    // ------------------------------- writer --------------------------------
 
     pub fn render(&self) -> String {
         let mut s = String::new();
@@ -86,6 +177,299 @@ impl Json {
     }
 }
 
+// ------------------------- field accessors ----------------------------------
+// Shared by the workload-spec serde and the coordinator wire protocol so
+// missing-field / wrong-type errors read the same everywhere.
+
+/// Required object member.
+pub fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("missing field `{key}`"))
+}
+
+/// Required integer member.
+pub fn req_i64(j: &Json, key: &str) -> Result<i64, String> {
+    req(j, key)?
+        .as_i64()
+        .ok_or_else(|| format!("field `{key}` must be an integer"))
+}
+
+/// Required string member (owned).
+pub fn req_str(j: &Json, key: &str) -> Result<String, String> {
+    Ok(req(j, key)?
+        .as_str()
+        .ok_or_else(|| format!("field `{key}` must be a string"))?
+        .to_string())
+}
+
+/// Required array member.
+pub fn req_array<'a>(j: &'a Json, key: &str) -> Result<&'a [Json], String> {
+    req(j, key)?
+        .as_array()
+        .ok_or_else(|| format!("field `{key}` must be an array"))
+}
+
+/// Required non-negative integer member, widened to u64.
+pub fn req_u64(j: &Json, key: &str) -> Result<u64, String> {
+    req_i64(j, key)?
+        .try_into()
+        .map_err(|_| format!("field `{key}` must be a non-negative integer"))
+}
+
+/// Optional non-negative integer member (absent or `null` → `default`).
+pub fn opt_u64(j: &Json, key: &str, default: u64) -> Result<u64, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(_) => req_u64(j, key),
+    }
+}
+
+/// Maximum container nesting the parser accepts. Deep enough for any spec
+/// the IR can express (expression trees nest a handful of levels), shallow
+/// enough that a line of a million `[`s errors instead of blowing the stack.
+pub const MAX_DEPTH: usize = 128;
+
+/// Recursive-descent JSON parser over raw bytes.
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+    depth: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError {
+            pos: self.pos,
+            msg: msg.to_string(),
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{}`", c as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("invalid literal (expected `{word}`)")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        match self.peek() {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(self.err(&format!("unexpected character `{}`", c as char))),
+        }
+    }
+
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(Json::Object(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            m.insert(key, v);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Object(m));
+                }
+                _ => return Err(self.err("expected `,` or `}` in object")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(Json::Array(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Array(xs));
+                }
+                _ => return Err(self.err("expected `,` or `]` in array")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(s),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b'b') => s.push('\u{8}'),
+                    Some(b'f') => s.push('\u{c}'),
+                    Some(b'u') => {
+                        let hi = self.hex4()?;
+                        let cp = if (0xD800..0xDC00).contains(&hi) {
+                            // high surrogate: a \uXXXX low surrogate must follow
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("lone high surrogate"));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                        } else if (0xDC00..0xE000).contains(&hi) {
+                            return Err(self.err("lone low surrogate"));
+                        } else {
+                            hi
+                        };
+                        match char::from_u32(cp) {
+                            Some(c) => s.push(c),
+                            None => return Err(self.err("invalid unicode escape")),
+                        }
+                    }
+                    _ => return Err(self.err("invalid escape sequence")),
+                },
+                Some(c) if c < 0x20 => {
+                    return Err(self.err("raw control character in string"))
+                }
+                Some(c) => {
+                    // re-assemble UTF-8 multibyte sequences byte-for-byte;
+                    // the input is a &str so the bytes are valid UTF-8
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let len = if c >= 0xF0 {
+                            4
+                        } else if c >= 0xE0 {
+                            3
+                        } else {
+                            2
+                        };
+                        let end = start + len;
+                        if end > self.b.len() {
+                            return Err(self.err("truncated UTF-8 sequence"));
+                        }
+                        s.push_str(std::str::from_utf8(&self.b[start..end]).map_err(
+                            |_| self.err("invalid UTF-8 in string"),
+                        )?);
+                        self.pos = end;
+                    }
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = (c as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err("invalid hex digit in \\u escape"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    is_float = true;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        if txt.is_empty() || txt == "-" {
+            return Err(self.err("invalid number"));
+        }
+        if !is_float {
+            if let Ok(i) = txt.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
+        txt.parse::<f64>()
+            .map(Json::Float)
+            .map_err(|_| self.err("invalid number"))
+    }
+}
+
 impl From<&str> for Json {
     fn from(s: &str) -> Json {
         Json::Str(s.to_string())
@@ -138,5 +522,102 @@ mod tests {
     #[test]
     fn nonfinite_floats_become_null() {
         assert_eq!(Json::Float(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("-42").unwrap(), Json::Int(-42));
+        assert_eq!(Json::parse("3.5").unwrap(), Json::Float(3.5));
+        assert_eq!(Json::parse("1e3").unwrap(), Json::Float(1000.0));
+        assert_eq!(Json::parse(r#""hi""#).unwrap(), Json::from("hi"));
+    }
+
+    #[test]
+    fn parses_nested_structures() {
+        let j = Json::parse(r#"{"a":[1,{"b":[true,null,"x"]}],"c":{}}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_array().unwrap().len(), 2);
+        assert_eq!(
+            j.get("a").unwrap().as_array().unwrap()[1]
+                .get("b")
+                .unwrap()
+                .as_array()
+                .unwrap()[2],
+            Json::from("x")
+        );
+        assert_eq!(j.get("c").unwrap(), &Json::Object(BTreeMap::new()));
+    }
+
+    #[test]
+    fn roundtrips_render_parse() {
+        let j = Json::obj(vec![
+            ("n", Json::Int(-7)),
+            ("f", Json::Float(2.25)),
+            ("s", Json::from("quote\" slash\\ nl\n tab\t ctrl\u{1}")),
+            (
+                "deep",
+                Json::Array(vec![Json::obj(vec![("k", Json::Array(vec![Json::Null]))])]),
+            ),
+        ]);
+        assert_eq!(Json::parse(&j.render()).unwrap(), j);
+    }
+
+    #[test]
+    fn parses_unicode_escapes_and_surrogates() {
+        assert_eq!(
+            Json::parse("\"\\u00e9\\u20ac\"").unwrap(),
+            Json::from("\u{e9}\u{20ac}")
+        );
+        // U+1F600 as a surrogate pair
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::from("\u{1F600}")
+        );
+        // raw multibyte UTF-8 passes through
+        assert_eq!(Json::parse("\"héllo\"").unwrap(), Json::from("héllo"));
+    }
+
+    #[test]
+    fn malformed_inputs_error() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "{\"a\":}",
+            "\"unterminated",
+            "truth",
+            "nul",
+            "01x",
+            "-",
+            "[1] trailing",
+            "{\"a\" 1}",
+            r#""\q""#,
+            r#""\ud83d""#,
+            r#""\u12g4""#,
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn error_carries_position() {
+        let e = Json::parse("[1, x]").unwrap_err();
+        assert_eq!(e.pos, 4);
+        assert!(e.to_string().contains("byte 4"), "{e}");
+    }
+
+    #[test]
+    fn nesting_is_depth_limited_not_stack_fatal() {
+        // a hostile one-liner must error cleanly, never overflow the stack
+        let hostile = "[".repeat(100_000);
+        let e = Json::parse(&hostile).unwrap_err();
+        assert!(e.msg.contains("nesting too deep"), "{e}");
+        // and legitimate depth under the cap still parses
+        let deep = format!("{}1{}", "[".repeat(MAX_DEPTH - 1), "]".repeat(MAX_DEPTH - 1));
+        assert!(Json::parse(&deep).is_ok());
+        let too_deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Json::parse(&too_deep).is_err());
     }
 }

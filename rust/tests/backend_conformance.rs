@@ -13,6 +13,7 @@
 //!   coordinator pool, like any other target.
 
 use repro::backend::{BackendRegistry, CgraBackend, Target};
+use repro::bench::spec::WorkloadCatalog;
 use repro::bench::toolchains::{rows_for, Tool};
 use repro::bench::workloads::{build, inputs, BenchId};
 use repro::coordinator::pool;
@@ -21,12 +22,14 @@ use repro::ir::op::values_close;
 use repro::runtime::golden::GoldenService;
 
 const N: i64 = 8;
+
 const SEED: u64 = 33;
 
 #[test]
 fn outputs_match_golden_on_every_backend_and_benchmark() {
     let registry = BackendRegistry::with_defaults();
     let mut golden = GoldenService::new();
+    let cat = WorkloadCatalog::builtin();
     assert_eq!(registry.targets(), Target::ALL.to_vec(), "all targets registered");
     for target in registry.targets() {
         let backend = registry.get(target).unwrap();
@@ -56,7 +59,9 @@ fn outputs_match_golden_on_every_backend_and_benchmark() {
                 id.name(),
                 rep.occupancy
             );
-            let (want, _) = golden.run(id, N, &ins).expect("golden run");
+            let (want, _) = golden
+                .run(&cat.spec(id.name(), N).unwrap(), &ins)
+                .expect("golden run");
             for name in wl.output_names() {
                 let (a, b) = (&want[&name], &rep.outputs[&name]);
                 assert_eq!(a.len(), b.len(), "{} {name}", target.name());
@@ -131,20 +136,14 @@ fn seq_backend_serves_end_to_end_through_the_pool() {
     let (tx, rx, handle) = pool::serve(2);
     let n_req = 6u64;
     for i in 0..n_req {
-        tx.send(Request {
-            bench: BenchId::ALL[i as usize % BenchId::ALL.len()],
-            n: N,
-            target: Target::Seq,
-            batch: 1 + i % 3,
-            validate: true,
-            seed: SEED + i,
-        })
-        .unwrap();
+        let name = BenchId::ALL[i as usize % BenchId::ALL.len()].name();
+        tx.send(Request::named(i, name, N, Target::Seq, 1 + i % 3, true, SEED + i))
+            .unwrap();
     }
     for _ in 0..n_req {
         let r = rx.recv().unwrap();
         assert!(r.error.is_none(), "{:?}", r.error);
-        assert_eq!(r.validated, Some(true), "{} seq validation", r.bench.name());
+        assert_eq!(r.validated, Some(true), "{} seq validation", r.workload);
         assert!(r.latency_cycles > 0);
     }
     drop(tx);

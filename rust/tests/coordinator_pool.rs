@@ -5,18 +5,19 @@
 
 use std::collections::HashSet;
 
-use repro::bench::workloads::BenchId;
-use repro::coordinator::{pool, CompileCache, Request, Session, Target};
+use repro::coordinator::{pool, CompileCache, Request, Session, Target, WorkloadKey};
 
 fn mixed_trace(n_req: usize) -> Vec<Request> {
-    // the shared trace shape, over a smaller bench set to keep tests fast
-    Request::round_robin(&[BenchId::Gemm, BenchId::Atax, BenchId::Gesummv], 8, n_req, 7)
+    // the shared trace shape, over a smaller workload set to keep tests fast
+    Request::round_robin(&["gemm", "atax", "gesummv"], 8, n_req, 7)
 }
 
 fn response_key(r: &repro::coordinator::Response) -> String {
     format!(
-        "{} {:?} lat={} batch={} validated={:?} err={:?}",
-        r.bench.name(),
+        "{} {} n={} {:?} lat={} batch={} validated={:?} err={:?}",
+        r.id,
+        r.workload,
+        r.n,
         r.target,
         r.latency_cycles,
         r.batch_cycles,
@@ -25,13 +26,19 @@ fn response_key(r: &repro::coordinator::Response) -> String {
     )
 }
 
+/// The content address a trace request resolves to (for the single-flight
+/// invariant checks).
+fn key_of(r: &Request) -> WorkloadKey {
+    let spec = repro::bench::spec::WorkloadCatalog::builtin()
+        .spec(r.workload.name(), r.workload.n())
+        .expect("trace uses builtin names");
+    WorkloadKey::of(&spec, r.target)
+}
+
 #[test]
 fn duplicate_requests_compile_each_kernel_exactly_once() {
     let trace = mixed_trace(24);
-    let distinct: HashSet<(BenchId, i64, Target)> = trace
-        .iter()
-        .map(|r| (r.bench, r.n, r.target))
-        .collect();
+    let distinct: HashSet<WorkloadKey> = trace.iter().map(key_of).collect();
 
     let (tx, rx, handle) = pool::serve(4);
     let cache = handle.cache().clone();
@@ -48,7 +55,7 @@ fn duplicate_requests_compile_each_kernel_exactly_once() {
     assert_eq!(
         cache.stats.compiles(),
         distinct.len() as u64,
-        "single-flight must compile each (bench, n, target) once"
+        "single-flight must compile each content address once"
     );
     assert_eq!(
         m.cache_hits + m.cache_misses,

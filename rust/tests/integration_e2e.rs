@@ -4,6 +4,7 @@
 //! hermetic interpreter fallback otherwise.
 
 use repro::bench::harness;
+use repro::bench::spec::WorkloadCatalog;
 use repro::bench::workloads::{build, inputs, BenchId};
 use repro::coordinator::{Request, Session, Target};
 use repro::ir::op::values_close;
@@ -14,14 +15,7 @@ fn golden_vs_simulators_all_benchmarks() {
     let mut session = Session::new();
     for id in BenchId::ALL {
         for target in [Target::Tcpa, Target::Cgra] {
-            let resp = session.handle(&Request {
-                bench: id,
-                n: 8,
-                target,
-                batch: 1,
-                validate: true,
-                seed: 99,
-            });
+            let resp = session.handle(&Request::named(0, id.name(), 8, target, 1, true, 99));
             assert!(
                 resp.error.is_none(),
                 "{} on {:?}: {:?}",
@@ -43,8 +37,9 @@ fn golden_vs_simulators_all_benchmarks() {
 #[test]
 fn xla_golden_used_when_artifacts_present() {
     let mut svc = GoldenService::new();
+    let spec = WorkloadCatalog::builtin().spec("gemm", 8).unwrap();
     let ins = inputs(BenchId::Gemm, 8, 1);
-    let (_, src) = svc.run(BenchId::Gemm, 8, &ins).unwrap();
+    let (_, src) = svc.run(&spec, &ins).unwrap();
     if std::path::Path::new("artifacts/MANIFEST").exists() {
         assert_eq!(src, GoldenSource::Xla, "artifacts exist but XLA not used");
     } else {
@@ -56,11 +51,12 @@ fn xla_golden_used_when_artifacts_present() {
 #[test]
 fn golden_matches_both_ir_interpreters() {
     let mut svc = GoldenService::new();
+    let cat = WorkloadCatalog::builtin();
     for id in BenchId::ALL {
         let n = 8;
         let wl = build(id, n);
         let ins = inputs(id, n, 17);
-        let (golden, _) = svc.run(id, n, &ins).unwrap();
+        let (golden, _) = svc.run(&cat.spec(id.name(), n).unwrap(), &ins).unwrap();
         let nest_ref = wl.reference_nest(&ins);
         let pra_ref = wl.reference_pra(&ins);
         for name in wl.output_names() {

@@ -1,0 +1,265 @@
+//! Integration: the open workload API end to end — catalog vs inline specs,
+//! content-addressed cache dedup, and the JSONL wire protocol serving a
+//! kernel that is *not* in the builtin set on both array targets.
+
+use std::sync::Arc;
+
+use repro::backend::{compile_stats, TcpaBackend};
+use repro::bench::spec::{WorkloadBuilder, WorkloadCatalog, WorkloadSpec};
+use repro::bench::workloads::{build, BenchId};
+use repro::coordinator::{wire, Request, Session, Target, WorkloadKey};
+use repro::ir::affine::AffineMap;
+use repro::ir::loopnest::{idx, idx_plus, ArrayKind, Expr, NestBuilder};
+use repro::ir::op::{Dtype, OpKind};
+use repro::ir::pra::PraBuilder;
+use repro::ir::space::CondSpace;
+use repro::util::json::Json;
+
+/// A 5-point Jacobi-style stencil over the (n−2)×(n−2) interior — the same
+/// non-PolyBench kernel `examples/custom_workload.rs` serves.
+fn jacobi2d_spec(n: i64) -> WorkloadSpec {
+    let d = 2;
+    let m = n - 2;
+    let nest = NestBuilder::new("jacobi2d", Dtype::I32)
+        .dim("i0", m)
+        .dim("i1", m)
+        .array("A", vec![n, n], ArrayKind::Input)
+        .array("S", vec![n, n], ArrayKind::Output)
+        .stmt(
+            "S",
+            vec![idx_plus(d, 0, 1), idx_plus(d, 1, 1)],
+            Expr::bin(
+                OpKind::Add,
+                Expr::read(0, vec![idx_plus(d, 0, 1), idx_plus(d, 1, 1)]),
+                Expr::bin(
+                    OpKind::Add,
+                    Expr::bin(
+                        OpKind::Add,
+                        Expr::read(0, vec![idx(d, 0), idx_plus(d, 1, 1)]),
+                        Expr::read(0, vec![idx_plus(d, 0, 2), idx_plus(d, 1, 1)]),
+                    ),
+                    Expr::bin(
+                        OpKind::Add,
+                        Expr::read(0, vec![idx_plus(d, 0, 1), idx(d, 1)]),
+                        Expr::read(0, vec![idx_plus(d, 0, 1), idx_plus(d, 1, 2)]),
+                    ),
+                ),
+            ),
+        )
+        .finish();
+    let ident_off = |r: i64, c: i64| AffineMap::new(vec![vec![1, 0], vec![0, 1]], vec![r, c]);
+    let b = PraBuilder::new("jacobi2d", Dtype::I32, vec![m, m])
+        .var("h")
+        .var("v")
+        .var("hv")
+        .array("A", vec![n, n], ArrayKind::Input)
+        .array("S", vec![n, n], ArrayKind::Output);
+    let left = b.input("A", ident_off(1, 0));
+    let right = b.input("A", ident_off(1, 2));
+    let up = b.input("A", ident_off(0, 1));
+    let down = b.input("A", ident_off(2, 1));
+    let center = b.input("A", ident_off(1, 1));
+    let (h0, v0, hv0) = (b.v0("h"), b.v0("v"), b.v0("hv"));
+    let pra = b
+        .eq("H", "h", OpKind::Add, vec![left, right], CondSpace::all())
+        .eq("V", "v", OpKind::Add, vec![up, down], CondSpace::all())
+        .eq("HV", "hv", OpKind::Add, vec![h0, v0], CondSpace::all())
+        .out_eq(
+            "Out",
+            "S",
+            ident_off(1, 1),
+            OpKind::Add,
+            vec![hv0, center],
+            CondSpace::all(),
+        )
+        .finish();
+    WorkloadBuilder::new("jacobi2d", n, Dtype::I32)
+        .stage(nest, pra)
+        .uniform_input("A", vec![n, n], 1, 10)
+        .finish()
+        .expect("jacobi2d spec")
+}
+
+#[test]
+fn jacobi_views_agree_with_each_other() {
+    let spec = jacobi2d_spec(10);
+    let wl = spec.workload();
+    let ins = spec.gen_inputs(3);
+    let a = wl.reference_nest(&ins);
+    let b = wl.reference_pra(&ins);
+    assert_eq!(wl.output_names(), vec!["S".to_string()]);
+    assert_eq!(a["S"], b["S"], "nest and PRA views must agree");
+}
+
+/// The acceptance criterion: a kernel not in the builtin set is served end
+/// to end from JSONL requests through the wire protocol on both TCPA and
+/// CGRA targets, validated against the golden model, with a cache hit on
+/// its second submission.
+#[test]
+fn non_builtin_kernel_served_end_to_end_via_jsonl() {
+    let spec = jacobi2d_spec(10);
+    let mut input = String::new();
+    let mut id = 0;
+    for _round in 0..2 {
+        for target in [Target::Tcpa, Target::Cgra] {
+            let req = Request::inline(id, spec.clone(), target, 1, true, 42);
+            input.push_str(&wire::request_to_json(&req).render());
+            input.push('\n');
+            id += 1;
+        }
+    }
+    // one worker => deterministic order and strict Hit (not Waited) repeats
+    let mut out = Vec::new();
+    let metrics = wire::serve_jsonl(
+        &mut input.as_bytes(),
+        &mut out,
+        1,
+        Arc::new(WorkloadCatalog::builtin()),
+    )
+    .expect("serve_jsonl");
+    let lines: Vec<String> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| l.to_string())
+        .collect();
+    assert_eq!(lines.len(), 4, "one response line per request");
+    let responses: Vec<_> = lines
+        .iter()
+        .map(|l| wire::response_from_json(&Json::parse(l).unwrap()).expect("response record"))
+        .collect();
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "single worker preserves order");
+        assert_eq!(r.workload, "jacobi2d");
+        assert_eq!(r.n, 10);
+        assert!(r.error.is_none(), "{:?}: {:?}", r.target, r.error);
+        assert_eq!(r.validated, Some(true), "{:?} golden validation", r.target);
+        assert!(r.latency_cycles > 0);
+    }
+    assert_eq!(responses[0].target, Target::Tcpa);
+    assert_eq!(responses[1].target, Target::Cgra);
+    assert!(!responses[0].cache_hit && !responses[1].cache_hit, "cold compiles");
+    assert!(
+        responses[2].cache_hit && responses[3].cache_hit,
+        "second submission of an identical spec must hit the cache"
+    );
+    assert_eq!(metrics.served, 4);
+    assert_eq!(metrics.distinct_kernels.len(), 2, "one kernel on two targets");
+}
+
+#[test]
+fn malformed_jsonl_lines_become_error_records_without_aborting() {
+    let input = format!(
+        "not json at all\n\n{}\n{{\"v\":1,\"workload\":{{\"name\":\"gemm\",\"n\":8}}}}\n",
+        wire::request_to_json(&Request::named(5, "gemm", 8, Target::Seq, 1, false, 0)).render()
+    );
+    let mut out = Vec::new();
+    wire::serve_jsonl(
+        &mut input.as_bytes(),
+        &mut out,
+        1,
+        Arc::new(WorkloadCatalog::builtin()),
+    )
+    .unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3, "2 error records + 1 response: {text}");
+    // serving streams, so error records and responses may interleave —
+    // classify each record instead of assuming an order
+    let (mut error_lines, mut responses) = (Vec::new(), Vec::new());
+    for l in &lines {
+        let j = Json::parse(l).unwrap();
+        match j.get("line").and_then(Json::as_i64) {
+            Some(lineno) => {
+                assert!(
+                    j.get("error").unwrap().as_str().is_some(),
+                    "error record must carry a message: {l}"
+                );
+                error_lines.push(lineno);
+            }
+            None => responses.push(wire::response_from_json(&j).unwrap()),
+        }
+    }
+    error_lines.sort_unstable();
+    assert_eq!(error_lines, vec![1, 4], "blank lines still count in numbering");
+    assert_eq!(responses.len(), 1);
+    assert_eq!(responses[0].id, 5);
+    assert!(responses[0].error.is_none());
+}
+
+#[test]
+fn inline_spec_of_a_builtin_content_addresses_to_the_named_artifact() {
+    // a builtin spec round-tripped through the wire encoding must produce
+    // the same WorkloadKey — i.e. a user re-submitting gemm inline dedupes
+    // onto the catalog's compiled artifact
+    let named = WorkloadCatalog::builtin().spec("gemm", 8).unwrap();
+    let wire_trip =
+        WorkloadSpec::from_json(&Json::parse(&named.to_json().render()).unwrap()).unwrap();
+    assert_eq!(
+        WorkloadKey::of(&named, Target::Cgra),
+        WorkloadKey::of(&wire_trip, Target::Cgra)
+    );
+
+    // and a live session observes the dedup as a cache hit
+    let mut s = Session::new();
+    let r1 = s.handle(&Request::named(1, "gemm", 8, Target::Cgra, 1, false, 3));
+    let r2 = s.handle(&Request::inline(2, wire_trip, Target::Cgra, 1, false, 3));
+    assert!(r1.error.is_none() && r2.error.is_none());
+    assert!(!r1.cache_hit);
+    assert!(r2.cache_hit, "inline resubmission must not recompile");
+    assert_eq!(r1.latency_cycles, r2.latency_cycles);
+    assert_eq!(s.cache().stats.compiles(), 1);
+}
+
+#[test]
+fn catalog_entries_produce_byte_identical_table_rows() {
+    // Table II rows are rendered from MappedStats; the catalog path and the
+    // BenchId shim path must yield identical row cells for every builtin
+    let cat = WorkloadCatalog::builtin();
+    let backend = TcpaBackend::paper(4, 4);
+    for id in BenchId::ALL {
+        let via_shim = build(id, 8);
+        let via_catalog = cat.spec(id.name(), 8).unwrap().workload();
+        let a = compile_stats(&backend, &via_shim);
+        let b = compile_stats(&backend, &via_catalog);
+        let row = |s: &repro::backend::MappedStats| {
+            format!(
+                "{}|{}|{}|{}|{}|{}|{:?}|{:?}|{:?}|{:?}|{:?}",
+                s.workload,
+                s.n,
+                s.tool_label(),
+                s.opt,
+                s.arch,
+                s.n_loops,
+                s.n_ops,
+                s.ii,
+                s.unused_pes,
+                s.max_ops_per_pe,
+                s.latency
+            )
+        };
+        assert_eq!(row(&a), row(&b), "{} Table II row", id.name());
+    }
+}
+
+#[test]
+fn custom_catalog_serves_by_name_through_the_pool() {
+    use repro::coordinator::{pool, CompileCache};
+    let mut catalog = WorkloadCatalog::builtin();
+    catalog.register("jacobi2d", jacobi2d_spec);
+    let (tx, rx, handle) = pool::serve_with(2, Arc::new(CompileCache::new()), Arc::new(catalog));
+    for (i, target) in [Target::Tcpa, Target::Cgra, Target::Seq].into_iter().enumerate() {
+        tx.send(Request::named(i as u64, "jacobi2d", 10, target, 2, true, 7))
+            .unwrap();
+    }
+    let mut got: Vec<_> = (0..3).map(|_| rx.recv().unwrap()).collect();
+    got.sort_by_key(|r| r.id);
+    for r in &got {
+        assert!(r.error.is_none(), "{:?}: {:?}", r.target, r.error);
+        assert_eq!(r.validated, Some(true));
+        assert_eq!(r.workload, "jacobi2d");
+    }
+    drop(tx);
+    let m = handle.join();
+    assert_eq!(m.served, 3);
+    assert_eq!(m.distinct_kernels.len(), 3);
+}
