@@ -5,6 +5,25 @@ use std::time::Instant;
 
 use repro::util::json::Json;
 
+/// True when the bench binary runs as the CI smoke test
+/// (`cargo bench --benches -- --test`): compile-and-run-once with minimal
+/// workloads, so bench code cannot silently rot without burning CI time on
+/// full measurement runs.
+#[allow(dead_code)] // each bench target compiles its own copy of `common`
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--test")
+}
+
+/// `n` measurement iterations normally, 1 under smoke mode.
+#[allow(dead_code)]
+pub fn iters(n: u32) -> u32 {
+    if smoke() {
+        1
+    } else {
+        n
+    }
+}
+
 /// Run `f` `iters` times, print mean wall time per iteration and return it
 /// in milliseconds.
 pub fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {

@@ -1,0 +1,98 @@
+//! Bench: the execute hot path — plan-hoisted vs re-lowered simulation per
+//! benchmark, on both arrays. "Re-lowered" is what a naive serve loop does
+//! (derive the TCPA `ExecPlan` / CGRA `StagePlan` inside every call);
+//! "hoisted" is what the serving plane actually does since the execution
+//! plane PR: plans built once at compile time, replayed per invocation with
+//! a recycled scratch arena. Writes `BENCH_exec.json` (name → ns/iter) so
+//! the perf trajectory of the execute path is machine-diffable across PRs
+//! (EXPERIMENTS.md §Perf).
+
+mod common;
+
+use std::sync::Arc;
+
+use repro::bench::harness::map_cgra_row;
+use repro::bench::toolchains::{rows_for, Tool};
+use repro::bench::workloads::{build, inputs, BenchId};
+use repro::cgra::sim as cgra_sim;
+use repro::tcpa::arch::TcpaArch;
+use repro::tcpa::config::compile;
+use repro::tcpa::sim as tcpa_sim;
+
+fn main() {
+    let mut report = common::JsonReport::new("exec-plan-hoisting-v1");
+    let n = 8i64;
+    let arch = TcpaArch::paper(4, 4);
+    let iters = common::iters(10);
+
+    for id in BenchId::ALL {
+        let wl = build(id, n);
+        let ins = inputs(id, n, 23);
+
+        // --- TCPA: lower the ExecPlan per call vs replay hoisted plans ---
+        let cfgs: Vec<_> = wl
+            .pras
+            .iter()
+            .map(|p| compile(p, &arch).expect("compile"))
+            .collect();
+        let name = format!("exec/tcpa/{}/relowered", id.name());
+        let per = common::bench(&name, iters, || {
+            let r = tcpa_sim::simulate_workload(&cfgs, &arch, &ins).expect("sim");
+            assert!(r.total_latency > 0);
+        });
+        report.record(&name, per, None);
+
+        // the serving plane's actual execute path: plans AND read-sets
+        // hoisted to compile time (what TcpaMapped::execute replays)
+        let plans: Vec<_> = cfgs
+            .iter()
+            .map(|c| Arc::new(c.execution_plan()))
+            .collect();
+        let read_sets = tcpa_sim::workload_read_sets(&cfgs);
+        let name = format!("exec/tcpa/{}/hoisted", id.name());
+        let per = common::bench(&name, iters, || {
+            let r =
+                tcpa_sim::simulate_workload_prepared(&cfgs, &plans, &read_sets, &arch, &ins)
+                    .expect("sim");
+            assert!(r.total_latency > 0);
+        });
+        report.record(&name, per, None);
+
+        // --- CGRA: derive the StagePlan per call vs replay hoisted plans
+        // (stages simulated independently: identical work on both sides) ---
+        let spec = rows_for(wl.n_loops, 4, 4)
+            .into_iter()
+            .find(|s| s.tool == Tool::Morpher)
+            .expect("morpher row");
+        let row = map_cgra_row(&wl, &spec);
+        assert!(row.error.is_none(), "{}: {:?}", id.name(), row.error);
+        let name = format!("exec/cgra/{}/relowered", id.name());
+        let per = common::bench(&name, iters, || {
+            for (dfg, m) in &row.mappings {
+                let r = cgra_sim::simulate(dfg, m, &ins);
+                assert_eq!(r.timing_hazards, 0);
+            }
+        });
+        report.record(&name, per, None);
+
+        let stage_plans: Vec<_> = row
+            .mappings
+            .iter()
+            .map(|(dfg, m)| cgra_sim::StagePlan::new(dfg, m))
+            .collect();
+        let name = format!("exec/cgra/{}/hoisted", id.name());
+        let per = common::bench(&name, iters, || {
+            let mut scratch = cgra_sim::SimScratch::new();
+            for ((dfg, m), plan) in row.mappings.iter().zip(&stage_plans) {
+                let r = cgra_sim::simulate_with_plan(dfg, m, plan, &mut scratch, &ins);
+                assert_eq!(r.timing_hazards, 0);
+            }
+        });
+        report.record(&name, per, None);
+    }
+
+    report
+        .write("BENCH_exec.json")
+        .expect("write BENCH_exec.json");
+    println!("wrote BENCH_exec.json");
+}

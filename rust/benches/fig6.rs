@@ -1,13 +1,26 @@
-//! Bench: regenerate Fig. 6 (latency vs size) for every benchmark.
+//! Bench: regenerate Fig. 6 (latency vs size) for every benchmark. Under
+//! the CI smoke mode (`-- --test`) only the first benchmark at its two
+//! smallest sizes runs — enough to prove the sweep still compiles and
+//! executes.
 mod common;
 use repro::bench::harness::{fig6, fig6_sizes};
 use repro::bench::workloads::BenchId;
 
 fn main() {
-    for id in BenchId::ALL {
+    let smoke = common::smoke();
+    let ids: &[BenchId] = if smoke {
+        &BenchId::ALL[..1]
+    } else {
+        &BenchId::ALL
+    };
+    for &id in ids {
+        let mut sizes = fig6_sizes(id);
+        if smoke {
+            sizes.truncate(2);
+        }
         let mut out = String::new();
         common::bench(&format!("fig6 {}", id.name()), 1, || {
-            out = fig6(id, &fig6_sizes(id), true).render();
+            out = fig6(id, &sizes, true).render();
         });
         println!("== Fig. 6: {} ==\n{out}", id.name());
     }

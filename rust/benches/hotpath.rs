@@ -20,13 +20,13 @@ fn main() {
     let wl = build(BenchId::Trisolv, 8);
     let gen = generate(&wl.stages[0], &GenOpts::flat()).unwrap();
     let arch = CgraArch::classical(4, 4);
-    let per = common::bench("mapper: trisolv flat on classical 4x4", 5, || {
+    let per = common::bench("mapper: trisolv flat on classical 4x4", common::iters(5), || {
         let m = map(&gen.dfg, &arch, &gen.inter_iteration_hazards, &MapOpts::negotiated());
         assert!(m.is_ok());
     });
     report.record("mapper: trisolv flat on classical 4x4", per, None);
     let hyc = CgraArch::hycube(4, 4);
-    let per = common::bench("mapper: trisolv flat on hycube 4x4", 5, || {
+    let per = common::bench("mapper: trisolv flat on hycube 4x4", common::iters(5), || {
         let m = map(&gen.dfg, &hyc, &gen.inter_iteration_hazards, &MapOpts::negotiated());
         assert!(m.is_ok());
     });
@@ -34,7 +34,7 @@ fn main() {
     let wl8 = build(BenchId::Gesummv, 32);
     let gen8 = generate(&wl8.stages[0], &GenOpts::flat()).unwrap();
     let arch8 = CgraArch::classical(8, 8);
-    let per = common::bench("mapper: gesummv flat on classical 8x8", 3, || {
+    let per = common::bench("mapper: gesummv flat on classical 8x8", common::iters(3), || {
         let m = map(&gen8.dfg, &arch8, &gen8.inter_iteration_hazards, &MapOpts::negotiated());
         assert!(m.is_ok());
     });
@@ -44,7 +44,7 @@ fn main() {
     let m = map(&gen8.dfg, &arch8, &gen8.inter_iteration_hazards, &MapOpts::negotiated()).unwrap();
     let ins8 = inputs(BenchId::Gesummv, 32, 3);
     let total_cycles = m.latency(gen8.dfg.iters);
-    let per = common::bench("cgra sim: gesummv N=32 (full run)", 5, || {
+    let per = common::bench("cgra sim: gesummv N=32 (full run)", common::iters(5), || {
         let r = cgra_sim::simulate(&gen8.dfg, &m, &ins8);
         assert!(r.cycles > 0);
     });
@@ -58,7 +58,7 @@ fn main() {
     let cfg = compile(&wl_t.pras[0], &tarch).unwrap();
     let ins_t = inputs(BenchId::Trsm, 16, 3);
     let cyc = cfg.last_pe_latency();
-    let per = common::bench("tcpa sim: trsm N=16 (full run)", 5, || {
+    let per = common::bench("tcpa sim: trsm N=16 (full run)", common::iters(5), || {
         let r = tcpa_sim::simulate(&cfg, &tarch, &ins_t).unwrap();
         assert_eq!(r.timing_violations, 0);
     });
@@ -71,12 +71,12 @@ fn main() {
     report.record("tcpa sim: trsm N=16 (full run)", per, Some(tcpa_rate));
 
     // --- TCPA compile (must stay size-independent) ---
-    let per = common::bench("tcpa compile: gemm N=8", 50, || {
+    let per = common::bench("tcpa compile: gemm N=8", common::iters(50), || {
         let c = compile(&build(BenchId::Gemm, 8).pras[0], &tarch);
         assert!(c.is_ok());
     });
     report.record("tcpa compile: gemm N=8", per, None);
-    let per = common::bench("tcpa compile: gemm N=20", 50, || {
+    let per = common::bench("tcpa compile: gemm N=20", common::iters(50), || {
         let c = compile(&build(BenchId::Gemm, 20).pras[0], &tarch);
         assert!(c.is_ok());
     });

@@ -4,7 +4,7 @@ use repro::bench::harness::table3;
 
 fn main() {
     let mut out = String::new();
-    common::bench("table3 (area + power model)", 100, || {
+    common::bench("table3 (area + power model)", common::iters(100), || {
         out = table3().render();
     });
     println!("{out}");

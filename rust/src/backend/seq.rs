@@ -8,6 +8,14 @@
 //! interpreter backs the golden service's hermetic fallback), and the
 //! proof that [`super::BackendRegistry`] is open for extension: it arrived
 //! without touching the coordinator, the harness, or either array backend.
+//!
+//! Unlike the array backends there is nothing to hoist at compile time —
+//! "compilation" is already just the closed-form cost model below, and
+//! every `execute` *is* one full interpreter pass. The steady-state saving
+//! for repeat requests comes one level up: the coordinator's exec cache
+//! (`coordinator::exec_cache`) memoizes the whole [`ExecReport`] keyed by
+//! `(workload, seed, batch)`, so an interpreter pass runs at most once per
+//! resident key regardless of backend.
 
 use crate::ir::loopnest::ArrayData;
 

@@ -30,10 +30,101 @@ pub struct SimResult {
     pub timing_hazards: u64,
 }
 
-/// Simulate `iters` iterations of the mapped DFG over the given inputs.
+/// Per-(DFG, mapping) precomputation hoisted out of the per-execute path:
+/// the per-slot issue lists (sorted by `(τ, v)`), the history-ring depth
+/// and the closed-form cycle count. `backend::cgra::CgraBackend` builds one
+/// per stage at *compile* time, so repeat executes of a cached artifact
+/// re-derive nothing.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    /// Execution order within a cycle, per modulo slot: nodes sorted by
+    /// `(τ, v)` — nodes not yet started form a suffix (scan breaks early)
+    /// and finished nodes form a prefix (a monotone cursor skips them), so
+    /// no cycle wastes scans on inactive nodes.
+    by_slot: Vec<Vec<usize>>,
+    /// History ring depth: how many past iterations of a node's value can
+    /// still be referenced. A consumer at distance d and schedule-offset up
+    /// to sched_len needs at most d + ceil(sched_len/II) + 1 slots.
+    depth: usize,
+    /// Total cycles until the last node instance completes (closed form).
+    total_cycles: u64,
+}
+
+impl StagePlan {
+    pub fn new(dfg: &Dfg, m: &Mapping) -> StagePlan {
+        let n = dfg.n_nodes();
+        let ii = m.ii as u64;
+        let max_dist = dfg
+            .edges()
+            .iter()
+            .map(|e| e.dist as u64)
+            .max()
+            .unwrap_or(0);
+        let depth = (max_dist + m.sched_len as u64 / ii.max(1) + 2) as usize;
+        let mut by_slot: Vec<Vec<usize>> = vec![Vec::new(); m.ii as usize];
+        for v in 0..n {
+            by_slot[(m.tau[v] % m.ii) as usize].push(v);
+        }
+        for slot in by_slot.iter_mut() {
+            slot.sort_by_key(|&v| (m.tau[v], v));
+        }
+        let total_cycles = if dfg.iters == 0 {
+            0
+        } else {
+            (dfg.iters - 1) * ii + m.sched_len as u64
+        };
+        StagePlan {
+            by_slot,
+            depth,
+            total_cycles,
+        }
+    }
+}
+
+/// Reusable per-call scratch: flat value-history rings, completion stamps
+/// and per-slot cursors, recycled across the stages of one execute call (a
+/// per-call arena) instead of being reallocated per stage.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    /// `n × depth` ring of node values, flat-indexed `v * depth + slot`.
+    hist: Vec<Value>,
+    /// Completion cycle of each ring slot (for availability assertions).
+    done_at: Vec<i64>,
+    /// Monotone finished-prefix cursor per modulo slot.
+    first_active: Vec<usize>,
+}
+
+impl SimScratch {
+    pub fn new() -> SimScratch {
+        SimScratch::default()
+    }
+}
+
+/// Simulate `iters` iterations of the mapped DFG over the given inputs,
+/// deriving the stage plan on the fly. Repeat consumers (the serving plane)
+/// should build the [`StagePlan`] once and call [`simulate_with_plan`].
 pub fn simulate(dfg: &Dfg, m: &Mapping, inputs: &ArrayData) -> SimResult {
+    simulate_with_plan(
+        dfg,
+        m,
+        &StagePlan::new(dfg, m),
+        &mut SimScratch::new(),
+        inputs,
+    )
+}
+
+/// Simulate over a precomputed [`StagePlan`] (must come from the same
+/// `(dfg, m)` pair), recycling the given scratch arena. Observationally
+/// identical to [`simulate`].
+pub fn simulate_with_plan(
+    dfg: &Dfg,
+    m: &Mapping,
+    plan: &StagePlan,
+    scratch: &mut SimScratch,
+    inputs: &ArrayData,
+) -> SimResult {
     let mut spm = dfg.alloc_spm(inputs);
-    let r = simulate_on(dfg, m, &mut spm);
+    let r = run_with_plan(dfg, m, plan, scratch, &mut spm);
     SimResult {
         outputs: dfg.collect_outputs(&spm),
         ..r
@@ -43,52 +134,44 @@ pub fn simulate(dfg: &Dfg, m: &Mapping, inputs: &ArrayData) -> SimResult {
 /// Simulate over pre-allocated scratchpad banks (multi-stage kernels chain
 /// stages over the same banks).
 pub fn simulate_on(dfg: &Dfg, m: &Mapping, spm: &mut [Vec<Value>]) -> SimResult {
+    run_with_plan(dfg, m, &StagePlan::new(dfg, m), &mut SimScratch::new(), spm)
+}
+
+fn run_with_plan(
+    dfg: &Dfg,
+    m: &Mapping,
+    plan: &StagePlan,
+    scratch: &mut SimScratch,
+    spm: &mut [Vec<Value>],
+) -> SimResult {
     let n = dfg.n_nodes();
     let ii = m.ii as u64;
     let iters = dfg.iters;
-    // History ring depth: how many past iterations of a node's value can
-    // still be referenced. A consumer at distance d and schedule-offset up to
-    // sched_len needs at most d + ceil(sched_len/II) + 1 slots.
-    let max_dist = dfg
-        .edges()
-        .iter()
-        .map(|e| e.dist as u64)
-        .max()
-        .unwrap_or(0);
-    let depth = (max_dist + m.sched_len as u64 / ii.max(1) + 2) as usize;
-    let mut hist: Vec<Vec<Value>> = dfg
-        .nodes
-        .iter()
-        .map(|nd| vec![dfg.dtype.from_i64(nd.init); depth])
-        .collect();
-    // completion cycle of each ring slot (for availability assertions)
-    let mut done_at: Vec<Vec<i64>> = vec![vec![i64::MIN; depth]; n];
+    let depth = plan.depth;
 
-    // execution order within a cycle: by (is_mem, pe) then node id — mem ops
-    // of one bank are on one PE and one FU slot, so at most one per cycle.
-    // Each slot is sorted by (τ, v): nodes not yet started form a suffix
-    // (scan breaks early) and finished nodes form a prefix (a monotone
-    // cursor skips them), so no cycle wastes scans on inactive nodes.
-    let mut by_slot: Vec<Vec<usize>> = vec![Vec::new(); m.ii as usize];
-    for v in 0..n {
-        by_slot[(m.tau[v] % m.ii) as usize].push(v);
+    // reinitialize the arena (reusing its allocations): history rings start
+    // at each node's init value, completion stamps at "never", cursors at 0
+    scratch.hist.clear();
+    scratch.hist.reserve(n * depth);
+    for nd in &dfg.nodes {
+        let init = dfg.dtype.from_i64(nd.init);
+        scratch.hist.extend(std::iter::repeat(init).take(depth));
     }
-    for slot in by_slot.iter_mut() {
-        slot.sort_by_key(|&v| (m.tau[v], v));
-    }
-    let mut first_active: Vec<usize> = vec![0; m.ii as usize];
+    scratch.done_at.clear();
+    scratch.done_at.resize(n * depth, i64::MIN);
+    scratch.first_active.clear();
+    scratch.first_active.resize(plan.by_slot.len(), 0);
+    let hist = &mut scratch.hist;
+    let done_at = &mut scratch.done_at;
+    let first_active = &mut scratch.first_active;
 
-    let total_cycles = if iters == 0 {
-        0
-    } else {
-        (iters - 1) * ii + m.sched_len as u64
-    };
+    let total_cycles = plan.total_cycles;
     let mut issued: u64 = 0;
     let mut hazards: u64 = 0;
 
     for c in 0..total_cycles {
         let slot = (c % ii) as usize;
-        let list = &by_slot[slot];
+        let list = &plan.by_slot[slot];
         // node v is finished once c ≥ τ(v) + iters·II (its last instance
         // issued at τ(v) + (iters−1)·II); finished nodes are a prefix
         let mut start = first_active[slot];
@@ -120,10 +203,10 @@ pub fn simulate_on(dfg: &Dfg, m: &Mapping, spm: &mut [Vec<Value>]) -> SimResult 
                             let sit = it - *dist as u64;
                             let s = (sit as usize) % depth;
                             // availability check: producer completed?
-                            if done_at[*src][s] > c as i64 {
+                            if done_at[*src * depth + s] > c as i64 {
                                 *hazards += 1;
                             }
-                            hist[*src][s]
+                            hist[*src * depth + s]
                         }
                     }
                 }
@@ -157,8 +240,8 @@ pub fn simulate_on(dfg: &Dfg, m: &Mapping, spm: &mut [Vec<Value>]) -> SimResult 
                     Value::apply(kind, &args[..node.operands.len()])
                 }
             };
-            hist[v][hslot] = val;
-            done_at[v][hslot] = (c + node.kind.latency() as u64) as i64;
+            hist[v * depth + hslot] = val;
+            done_at[v * depth + hslot] = (c + node.kind.latency() as u64) as i64;
             issued += 1;
         }
     }
@@ -226,6 +309,31 @@ mod tests {
         assert_eq!(got.timing_hazards, 0, "register-aware mapping must be hazard-free");
         assert_eq!(got.cycles, m.latency(gen.dfg.iters));
         assert_eq!(got.issued_ops, gen.dfg.n_nodes() as u64 * gen.dfg.iters);
+    }
+
+    #[test]
+    fn hoisted_plan_and_recycled_scratch_are_bit_identical() {
+        let n = 4usize;
+        let nest = gemm_nest(n as i64);
+        let gen = generate(&nest, &GenOpts::flat()).unwrap();
+        let arch = CgraArch::classical(4, 4);
+        let m = map(&gen.dfg, &arch, &gen.inter_iteration_hazards, &MapOpts::negotiated())
+            .unwrap();
+        let mut inputs = ArrayData::new();
+        inputs.insert("A".into(), iota(n * n, 1));
+        inputs.insert("B".into(), iota(n * n, 2));
+        let fresh = simulate(&gen.dfg, &m, &inputs);
+        let plan = StagePlan::new(&gen.dfg, &m);
+        let mut scratch = SimScratch::new();
+        let a = simulate_with_plan(&gen.dfg, &m, &plan, &mut scratch, &inputs);
+        // second run recycles the dirty arena: must be reinitialized
+        let b = simulate_with_plan(&gen.dfg, &m, &plan, &mut scratch, &inputs);
+        for r in [&a, &b] {
+            assert_eq!(r.outputs, fresh.outputs);
+            assert_eq!(r.cycles, fresh.cycles);
+            assert_eq!(r.issued_ops, fresh.issued_ops);
+            assert_eq!(r.timing_hazards, fresh.timing_hazards);
+        }
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Shared, thread-safe compile cache with single-flight semantics, keyed by
-//! *content address*.
+//! Shared, thread-safe compile cache with single-flight semantics and a
+//! size-bounded LRU eviction policy, keyed by *content address*.
 //!
 //! The map/schedule pipeline ([`crate::backend::Backend::compile`] over the
 //! registered backends) dominates request latency, so its results are cached
@@ -16,19 +16,36 @@
 //! amortizes compile time across invocations (the §V-A batching argument at
 //! service scale).
 //!
+//! The key space is client-controlled (the open workload API accepts
+//! arbitrary specs), so the cache is *bounded*: beyond
+//! [`CompileCache::capacity`] resident artifacts the least-recently-used
+//! ready entry is evicted (in-flight compiles are never evicted — waiters
+//! hold their flight handle and the leader always publishes its result).
+//! An evicted key simply recompiles on its next request, still
+//! single-flight, and every eviction is counted in [`CacheStats`].
+//!
 //! The cache is target-agnostic: it stores `Arc<dyn Mapped>` and resolves
 //! the pipeline through its [`BackendRegistry`], so a new backend plugs in
 //! by registration alone — no cache change, no new enum variant.
 //!
 //! Compile failures are cached too: the pipeline is deterministic, so a
 //! failing (spec, target) would fail identically on every retry.
+//!
+//! The single-flight + LRU machinery itself is the generic [`FlightMap`],
+//! shared with the execution-report cache
+//! ([`super::exec_cache::ExecCache`]) so both caches follow exactly the
+//! same discipline.
 
 use std::collections::HashMap;
+use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use crate::backend::{BackendRegistry, Mapped, Target};
 use crate::bench::spec::WorkloadSpec;
+
+/// Default bound on resident compiled artifacts per process.
+pub const DEFAULT_COMPILE_CAPACITY: usize = 512;
 
 /// Content-addressed cache key: one compiled artifact per (spec fingerprint,
 /// size, target). The size rides along for observability — it is already
@@ -65,42 +82,215 @@ impl std::fmt::Display for WorkloadKey {
     }
 }
 
-/// What `get_or_compile` observed for a request.
+/// What a single-flight cache lookup observed for a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CacheOutcome {
     /// Result was already cached.
     Hit,
-    /// This caller ran the compile pipeline.
+    /// This caller ran the pipeline.
     Miss,
-    /// Another caller was compiling; this one waited for its result.
+    /// Another caller was running it; this one waited for its result.
     Waited,
 }
 
-type CacheResult = Result<Arc<dyn Mapped>, String>;
+// ===================== generic single-flight LRU map ========================
 
-/// Rendezvous for callers that arrive while the leader is compiling.
-struct Flight {
-    done: Mutex<Option<CacheResult>>,
+/// Rendezvous for callers that arrive while the leader is computing.
+struct Flight<V> {
+    done: Mutex<Option<V>>,
     cv: Condvar,
 }
 
-enum Slot {
-    InFlight(Arc<Flight>),
-    Ready(CacheResult),
+enum Slot<V> {
+    InFlight(Arc<Flight<V>>),
+    Ready(V),
+}
+
+/// One resident entry: the slot plus its LRU stamp (atomic so the shared
+/// read lock on the fast path can still refresh recency).
+struct Entry<V> {
+    slot: Slot<V>,
+    stamp: AtomicU64,
 }
 
 /// What a caller holds after consulting the slot map.
-enum Claim {
-    Ready(CacheResult),
-    Join(Arc<Flight>),
-    Lead(Arc<Flight>),
+enum Claim<V> {
+    Ready(V),
+    Join(Arc<Flight<V>>),
+    Lead(Arc<Flight<V>>),
 }
 
-/// Lock-striped-enough for this workload: reads (the steady state) take the
-/// RwLock in shared mode; the write lock is held only to flip slot states,
-/// never across a compile.
+/// A bounded, single-flight memo map: `get_or_run` computes each key at
+/// most once across all threads, parks concurrent callers on the leader's
+/// flight, and evicts the least-recently-used *ready* entry beyond
+/// `capacity` (in-flight entries are never evicted, so the resident count
+/// may transiently exceed the bound by the number of concurrent leaders).
+///
+/// Lock discipline: reads (the steady state) take the RwLock in shared
+/// mode; the write lock is held only to flip slot states and evict, never
+/// across the computation itself.
+pub(super) struct FlightMap<K, V> {
+    slots: RwLock<HashMap<K, Entry<V>>>,
+    capacity: usize,
+    tick: AtomicU64,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> FlightMap<K, V> {
+    pub fn new(capacity: usize) -> FlightMap<K, V> {
+        assert!(capacity >= 1, "a cache needs room for at least one entry");
+        FlightMap {
+            slots: RwLock::new(HashMap::new()),
+            capacity,
+            tick: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of resident entries (ready or in flight).
+    pub fn len(&self) -> usize {
+        self.slots.read().unwrap().len()
+    }
+
+    fn stamp(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Fetch or compute the value for `key`, running `run` at most once
+    /// across all threads per resident key. A panic inside `run` is caught
+    /// and converted through `on_panic` so waiters (and all future callers)
+    /// still resolve. Evictions increment `evictions`.
+    pub fn get_or_run(
+        &self,
+        key: K,
+        run: impl FnOnce() -> V,
+        on_panic: impl FnOnce(String) -> V,
+        evictions: &AtomicU64,
+    ) -> (V, CacheOutcome) {
+        // fast path: shared read lock
+        let seen = {
+            let slots = self.slots.read().unwrap();
+            self.claim_of(slots.get(&key))
+        };
+        let claim = match seen {
+            Some(c) => c,
+            None => {
+                // slow path: claim or join the flight under the write lock
+                let mut slots = self.slots.write().unwrap();
+                match self.claim_of(slots.get(&key)) {
+                    Some(c) => c,
+                    None => {
+                        let flight = Arc::new(Flight {
+                            done: Mutex::new(None),
+                            cv: Condvar::new(),
+                        });
+                        slots.insert(
+                            key.clone(),
+                            Entry {
+                                slot: Slot::InFlight(flight.clone()),
+                                stamp: AtomicU64::new(self.stamp()),
+                            },
+                        );
+                        Self::evict(&mut slots, self.capacity, evictions);
+                        Claim::Lead(flight)
+                    }
+                }
+            }
+        };
+
+        match claim {
+            Claim::Ready(v) => (v, CacheOutcome::Hit),
+            Claim::Join(flight) => {
+                let mut done = flight.done.lock().unwrap();
+                while done.is_none() {
+                    done = flight.cv.wait(done).unwrap();
+                }
+                (done.as_ref().unwrap().clone(), CacheOutcome::Waited)
+            }
+            Claim::Lead(flight) => {
+                // leader: compute with no lock held; a panic inside must
+                // still resolve the flight, or every waiter (and all future
+                // requests for this key) would hang forever
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(run))
+                    .unwrap_or_else(|p| on_panic(panic_message(&p)));
+                {
+                    let mut slots = self.slots.write().unwrap();
+                    slots.insert(
+                        key,
+                        Entry {
+                            slot: Slot::Ready(result.clone()),
+                            stamp: AtomicU64::new(self.stamp()),
+                        },
+                    );
+                    Self::evict(&mut slots, self.capacity, evictions);
+                }
+                {
+                    let mut done = flight.done.lock().unwrap();
+                    *done = Some(result.clone());
+                }
+                flight.cv.notify_all();
+                (result, CacheOutcome::Miss)
+            }
+        }
+    }
+
+    /// Interpret a slot lookup, refreshing the LRU stamp on a hit.
+    fn claim_of(&self, entry: Option<&Entry<V>>) -> Option<Claim<V>> {
+        entry.map(|e| match &e.slot {
+            Slot::Ready(v) => {
+                e.stamp.store(self.stamp(), Ordering::Relaxed);
+                Claim::Ready(v.clone())
+            }
+            Slot::InFlight(f) => Claim::Join(f.clone()),
+        })
+    }
+
+    /// Drop least-recently-used ready entries once the map outgrows the
+    /// capacity. In-flight entries are skipped: their waiters hold the
+    /// flight handle, and the leader will re-insert on resolution anyway.
+    ///
+    /// Eviction is *batched with hysteresis*: one sorted scan brings the
+    /// map down to `capacity − capacity/8`, so a miss-heavy stream of
+    /// distinct keys pays one O(n log n) scan per batch of inserts instead
+    /// of a full-map scan under the write lock on every insert. (For
+    /// capacities below 8 the slack is zero and eviction degenerates to
+    /// exact LRU, which is what the bound tests exercise.)
+    fn evict(slots: &mut HashMap<K, Entry<V>>, capacity: usize, evictions: &AtomicU64) {
+        if slots.len() <= capacity {
+            return;
+        }
+        let target = capacity - capacity / 8;
+        let mut ready: Vec<(u64, K)> = slots
+            .iter()
+            .filter(|(_, e)| matches!(e.slot, Slot::Ready(_)))
+            .map(|(k, e)| (e.stamp.load(Ordering::Relaxed), k.clone()))
+            .collect();
+        // The bound applies to the *ready* population: in-flight entries
+        // ride on top and are never removed, so they must not count toward
+        // the excess either — a burst of concurrent leaders beyond the
+        // capacity would otherwise flush every just-published result.
+        let excess = ready.len().saturating_sub(target);
+        if excess == 0 {
+            return;
+        }
+        ready.sort_unstable_by_key(|(stamp, _)| *stamp);
+        for (_, k) in ready.into_iter().take(excess) {
+            slots.remove(&k);
+            evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+// ============================ compile cache =================================
+
+type CacheResult = Result<Arc<dyn Mapped>, String>;
+
+/// The process-wide compiled-artifact cache: a [`FlightMap`] over
+/// [`WorkloadKey`]s plus the backend registry that runs cold compiles.
 pub struct CompileCache {
-    slots: RwLock<HashMap<WorkloadKey, Slot>>,
+    slots: FlightMap<WorkloadKey, CacheResult>,
     registry: BackendRegistry,
     pub stats: CacheStats,
 }
@@ -112,8 +302,12 @@ pub struct CacheStats {
     pub misses: AtomicU64,
     pub waits: AtomicU64,
     /// Actual pipeline executions — the single-flight invariant is
-    /// `compiles == distinct keys requested`.
+    /// `compiles == misses` (each miss runs the pipeline exactly once),
+    /// which eviction preserves: a re-request of an evicted key is a fresh
+    /// miss *and* a fresh compile.
     pub compiles: AtomicU64,
+    /// Ready entries dropped by the LRU bound.
+    pub evictions: AtomicU64,
 }
 
 impl CacheStats {
@@ -132,19 +326,29 @@ impl CacheStats {
     pub fn compiles(&self) -> u64 {
         self.compiles.load(Ordering::Relaxed)
     }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
 }
 
 impl CompileCache {
     /// A cache over the default registry (paper TCPA + Morpher CGRA + the
-    /// sequential reference backend).
+    /// sequential reference backend) at the default capacity.
     pub fn new() -> CompileCache {
         CompileCache::with_registry(BackendRegistry::with_defaults())
     }
 
-    /// A cache over a custom backend registry.
+    /// A cache over a custom backend registry at the default capacity.
     pub fn with_registry(registry: BackendRegistry) -> CompileCache {
+        CompileCache::with_capacity(registry, DEFAULT_COMPILE_CAPACITY)
+    }
+
+    /// A cache holding at most `capacity` ready artifacts (in-flight
+    /// compiles ride on top of the bound and are never evicted).
+    pub fn with_capacity(registry: BackendRegistry, capacity: usize) -> CompileCache {
         CompileCache {
-            slots: RwLock::new(HashMap::new()),
+            slots: FlightMap::new(capacity),
             registry,
             stats: CacheStats::default(),
         }
@@ -154,9 +358,14 @@ impl CompileCache {
         &self.registry
     }
 
+    /// Most ready artifacts the cache will keep resident.
+    pub fn capacity(&self) -> usize {
+        self.slots.capacity()
+    }
+
     /// Number of resident entries (ready or in flight).
     pub fn len(&self) -> usize {
-        self.slots.read().unwrap().len()
+        self.slots.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -186,80 +395,22 @@ impl CompileCache {
         spec: &WorkloadSpec,
     ) -> (CacheResult, CacheOutcome) {
         let target = key.target;
-        // fast path: shared read lock
-        let seen = {
-            let slots = self.slots.read().unwrap();
-            match slots.get(&key) {
-                Some(Slot::Ready(r)) => Some(Claim::Ready(r.clone())),
-                Some(Slot::InFlight(f)) => Some(Claim::Join(f.clone())),
-                None => None,
-            }
-        };
-        let claim = match seen {
-            Some(c) => c,
-            None => {
-                // slow path: claim or join the flight under the write lock
-                let mut slots = self.slots.write().unwrap();
-                let existing = match slots.get(&key) {
-                    Some(Slot::Ready(r)) => Some(Claim::Ready(r.clone())),
-                    Some(Slot::InFlight(f)) => Some(Claim::Join(f.clone())),
-                    None => None,
-                };
-                match existing {
-                    Some(c) => c,
-                    None => {
-                        let flight = Arc::new(Flight {
-                            done: Mutex::new(None),
-                            cv: Condvar::new(),
-                        });
-                        slots.insert(key, Slot::InFlight(flight.clone()));
-                        Claim::Lead(flight)
-                    }
-                }
-            }
-        };
-
-        match claim {
-            Claim::Ready(r) => {
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                (r, CacheOutcome::Hit)
-            }
-            Claim::Join(flight) => (self.wait(&flight), CacheOutcome::Waited),
-            Claim::Lead(flight) => {
-                // leader: compile with no lock held; a panic inside the
-                // pipeline must still resolve the flight, or every waiter
-                // (and all future requests for this key) would hang forever
-                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        let registry = &self.registry;
+        let (result, outcome) = self.slots.get_or_run(
+            key,
+            || compile_kernel(registry, spec, target),
+            |msg| Err(format!("compile pipeline panicked: {msg}")),
+            &self.stats.evictions,
+        );
+        match outcome {
+            CacheOutcome::Hit => self.stats.hits.fetch_add(1, Ordering::Relaxed),
+            CacheOutcome::Waited => self.stats.waits.fetch_add(1, Ordering::Relaxed),
+            CacheOutcome::Miss => {
                 self.stats.compiles.fetch_add(1, Ordering::Relaxed);
-                let registry = &self.registry;
-                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                    || compile_kernel(registry, spec, target),
-                ))
-                .unwrap_or_else(|p| {
-                    Err(format!("compile pipeline panicked: {}", panic_message(&p)))
-                });
-
-                {
-                    let mut slots = self.slots.write().unwrap();
-                    slots.insert(key, Slot::Ready(result.clone()));
-                }
-                {
-                    let mut done = flight.done.lock().unwrap();
-                    *done = Some(result.clone());
-                }
-                flight.cv.notify_all();
-                (result, CacheOutcome::Miss)
+                self.stats.misses.fetch_add(1, Ordering::Relaxed)
             }
-        }
-    }
-
-    fn wait(&self, flight: &Flight) -> CacheResult {
-        self.stats.waits.fetch_add(1, Ordering::Relaxed);
-        let mut done = flight.done.lock().unwrap();
-        while done.is_none() {
-            done = flight.cv.wait(done).unwrap();
-        }
-        done.as_ref().unwrap().clone()
+        };
+        (result, outcome)
     }
 }
 
@@ -317,6 +468,7 @@ mod tests {
         assert_eq!(o2, CacheOutcome::Hit);
         assert_eq!(k1, k2, "same spec, same content address");
         assert_eq!(cache.stats.compiles(), 1);
+        assert_eq!(cache.stats.evictions(), 0);
         assert!(Arc::ptr_eq(&r1.unwrap(), &r2.unwrap()), "shared artifact");
     }
 
@@ -401,5 +553,42 @@ mod tests {
         assert!(r.unwrap_err().contains("no backend registered"));
         let (_, o2, _) = cache.get_or_compile(&s, Target::Seq);
         assert_eq!(o2, CacheOutcome::Hit, "lookup failures cache like compiles");
+    }
+
+    #[test]
+    fn lru_bound_is_enforced_and_counted() {
+        // the sequential backend compiles any gemm size instantly
+        let cache = CompileCache::with_capacity(BackendRegistry::with_defaults(), 3);
+        for n in 4..=9 {
+            let (r, o, _) = cache.get_or_compile(&spec("gemm", n), Target::Seq);
+            assert!(r.is_ok());
+            assert_eq!(o, CacheOutcome::Miss);
+            assert!(cache.len() <= 3, "bound violated at n={n}: {}", cache.len());
+        }
+        assert_eq!(cache.stats.evictions(), 3);
+        // the oldest key was evicted: re-requesting it is a miss again —
+        // and the compiles == misses identity survives the round trip
+        let (_, o, _) = cache.get_or_compile(&spec("gemm", 4), Target::Seq);
+        assert_eq!(o, CacheOutcome::Miss, "evicted entries recompile");
+        assert_eq!(cache.stats.compiles(), cache.stats.misses());
+        // the freshest key is still resident
+        let (_, o, _) = cache.get_or_compile(&spec("gemm", 9), Target::Seq);
+        assert_eq!(o, CacheOutcome::Hit);
+    }
+
+    #[test]
+    fn lru_recency_is_refreshed_by_hits() {
+        let cache = CompileCache::with_capacity(BackendRegistry::with_defaults(), 2);
+        let (a, b, c) = (spec("gemm", 4), spec("gemm", 5), spec("gemm", 6));
+        cache.get_or_compile(&a, Target::Seq);
+        cache.get_or_compile(&b, Target::Seq);
+        // touch `a` so `b` becomes the LRU victim
+        let (_, o, _) = cache.get_or_compile(&a, Target::Seq);
+        assert_eq!(o, CacheOutcome::Hit);
+        cache.get_or_compile(&c, Target::Seq);
+        let (_, oa, _) = cache.get_or_compile(&a, Target::Seq);
+        assert_eq!(oa, CacheOutcome::Hit, "recently-used entry survived");
+        let (_, ob, _) = cache.get_or_compile(&b, Target::Seq);
+        assert_eq!(ob, CacheOutcome::Miss, "stale entry was the victim");
     }
 }

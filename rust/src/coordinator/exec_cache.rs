@@ -1,0 +1,245 @@
+//! Shared execution-report cache: the steady-state serve path.
+//!
+//! A byte-identical repeat request — same content-addressed workload, same
+//! problem size, same target, same input seed, same batch — deterministically
+//! produces the same [`ExecReport`]: input generation is a pure function of
+//! `(spec, seed)`, the compiled artifact is immutable, and both simulators
+//! are cycle-deterministic. So the coordinator memoizes whole reports behind
+//! `Arc<ExecReport>` keyed by [`ExecKey`] and serves repeats with **zero
+//! plan lowering, zero input regeneration and zero simulation** — the
+//! TCPA-side discipline (pay at compile time, replay cheaply per invocation)
+//! applied one level up, to the serving plane itself.
+//!
+//! The cache rides on the same [`FlightMap`] as the compile cache
+//! ([`super::cache`]): single-flight (N workers racing on a cold key run
+//! the pipeline once; the rest park and share the leader's report),
+//! size-bounded LRU eviction (client-controlled key space must not grow
+//! server memory without bound; in-flight executions are never evicted),
+//! and cached failures (execution errors — timing violations, missing
+//! pipelined latency — are as deterministic as the reports).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::backend::ExecReport;
+
+use super::cache::{CacheOutcome, FlightMap, WorkloadKey};
+
+/// Default bound on resident execution reports per process. Each entry
+/// holds one invocation's output arrays (bounded by the spec validator's
+/// input/iteration caps), so the bound is what keeps a hostile stream of
+/// distinct `(seed, batch)` values from growing server memory.
+pub const DEFAULT_EXEC_CAPACITY: usize = 1024;
+
+/// Key of one memoized execution: the compiled artifact's content address
+/// plus everything else `execute` depends on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ExecKey {
+    /// Which compiled artifact ran (spec fingerprint + size + target).
+    pub workload: WorkloadKey,
+    /// Input-generation seed.
+    pub seed: u64,
+    /// Batch size (batch semantics are the backend's, but the resulting
+    /// cycle accounting differs per batch, so it is part of the key).
+    pub batch: u64,
+}
+
+impl std::fmt::Display for ExecKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/s{}/b{}", self.workload, self.seed, self.batch)
+    }
+}
+
+/// What one cached execution resolves to: a shared report, or the
+/// deterministic error the pipeline produced.
+pub type ExecResult = Result<Arc<ExecReport>, String>;
+
+/// Atomic counters exposed to metrics and the eviction tests.
+#[derive(Debug, Default)]
+pub struct ExecCacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub waits: AtomicU64,
+    /// Actual pipeline executions — mirrors the compile cache's
+    /// `compiles == misses` identity.
+    pub execs: AtomicU64,
+    /// Ready entries dropped by the LRU bound.
+    pub evictions: AtomicU64,
+}
+
+impl ExecCacheStats {
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn waits(&self) -> u64 {
+        self.waits.load(Ordering::Relaxed)
+    }
+
+    pub fn execs(&self) -> u64 {
+        self.execs.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+/// The process-wide execution-report cache (see module docs).
+pub struct ExecCache {
+    slots: FlightMap<ExecKey, ExecResult>,
+    pub stats: ExecCacheStats,
+}
+
+impl ExecCache {
+    /// A cache at the default capacity.
+    pub fn new() -> ExecCache {
+        ExecCache::with_capacity(DEFAULT_EXEC_CAPACITY)
+    }
+
+    /// A cache holding at most `capacity` ready reports (in-flight
+    /// executions ride on top of the bound and are never evicted).
+    pub fn with_capacity(capacity: usize) -> ExecCache {
+        ExecCache {
+            slots: FlightMap::new(capacity),
+            stats: ExecCacheStats::default(),
+        }
+    }
+
+    /// Most ready reports the cache will keep resident.
+    pub fn capacity(&self) -> usize {
+        self.slots.capacity()
+    }
+
+    /// Number of resident entries (ready or in flight).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fetch the memoized report for `key`, running `exec` (the full
+    /// compile-lookup → input-gen → execute pipeline) at most once across
+    /// all threads per resident key. `exec` runs with no cache lock held,
+    /// so it may itself block on the compile cache's single flight.
+    pub fn get_or_run(
+        &self,
+        key: ExecKey,
+        exec: impl FnOnce() -> Result<ExecReport, String>,
+    ) -> (ExecResult, CacheOutcome) {
+        let (result, outcome) = self.slots.get_or_run(
+            key,
+            || exec().map(Arc::new),
+            |msg| Err(format!("execution pipeline panicked: {msg}")),
+            &self.stats.evictions,
+        );
+        match outcome {
+            CacheOutcome::Hit => self.stats.hits.fetch_add(1, Ordering::Relaxed),
+            CacheOutcome::Waited => self.stats.waits.fetch_add(1, Ordering::Relaxed),
+            CacheOutcome::Miss => {
+                self.stats.execs.fetch_add(1, Ordering::Relaxed);
+                self.stats.misses.fetch_add(1, Ordering::Relaxed)
+            }
+        };
+        (result, outcome)
+    }
+}
+
+impl Default for ExecCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Target;
+    use crate::ir::loopnest::ArrayData;
+
+    fn key(fp: u64, seed: u64, batch: u64) -> ExecKey {
+        ExecKey {
+            workload: WorkloadKey {
+                fingerprint: fp,
+                n: 8,
+                target: Target::Seq,
+            },
+            seed,
+            batch,
+        }
+    }
+
+    fn report(latency: u64) -> ExecReport {
+        ExecReport {
+            latency_cycles: latency,
+            batch_cycles: latency,
+            issued_ops: latency,
+            occupancy: 1.0,
+            outputs: ArrayData::new(),
+            detail: "test".into(),
+        }
+    }
+
+    #[test]
+    fn memoizes_reports_and_shares_the_arc() {
+        let cache = ExecCache::new();
+        let (r1, o1) = cache.get_or_run(key(1, 0, 1), || Ok(report(7)));
+        assert_eq!(o1, CacheOutcome::Miss);
+        let (r2, o2) = cache.get_or_run(key(1, 0, 1), || panic!("must not re-execute"));
+        assert_eq!(o2, CacheOutcome::Hit);
+        assert!(Arc::ptr_eq(&r1.unwrap(), &r2.unwrap()), "shared report");
+        assert_eq!(cache.stats.execs(), 1);
+    }
+
+    #[test]
+    fn seed_and_batch_are_part_of_the_key() {
+        let cache = ExecCache::new();
+        cache.get_or_run(key(1, 0, 1), || Ok(report(1)));
+        let (_, o_seed) = cache.get_or_run(key(1, 9, 1), || Ok(report(2)));
+        let (_, o_batch) = cache.get_or_run(key(1, 0, 4), || Ok(report(3)));
+        assert_eq!(o_seed, CacheOutcome::Miss);
+        assert_eq!(o_batch, CacheOutcome::Miss);
+        assert_eq!(cache.stats.execs(), 3);
+        assert!(key(1, 9, 1).to_string().ends_with("/s9/b1"));
+    }
+
+    #[test]
+    fn errors_are_cached_like_reports() {
+        let cache = ExecCache::new();
+        let (r1, _) = cache.get_or_run(key(2, 0, 1), || Err("boom".into()));
+        assert_eq!(r1.unwrap_err(), "boom");
+        let (r2, o2) = cache.get_or_run(key(2, 0, 1), || panic!("must not retry"));
+        assert_eq!(o2, CacheOutcome::Hit);
+        assert_eq!(r2.unwrap_err(), "boom");
+    }
+
+    #[test]
+    fn panics_resolve_to_cached_errors() {
+        let cache = ExecCache::new();
+        let (r, o) = cache.get_or_run(key(3, 0, 1), || panic!("kaboom"));
+        assert_eq!(o, CacheOutcome::Miss);
+        assert!(r.unwrap_err().contains("kaboom"));
+        let (r2, o2) = cache.get_or_run(key(3, 0, 1), || Ok(report(1)));
+        assert_eq!(o2, CacheOutcome::Hit, "panic results are cached too");
+        assert!(r2.is_err());
+    }
+
+    #[test]
+    fn lru_bound_holds_and_misses_match_execs() {
+        let cache = ExecCache::with_capacity(2);
+        for fp in 0..6 {
+            cache.get_or_run(key(fp, 0, 1), || Ok(report(fp)));
+            assert!(cache.len() <= 2);
+        }
+        assert_eq!(cache.stats.evictions(), 4);
+        let (_, o) = cache.get_or_run(key(0, 0, 1), || Ok(report(0)));
+        assert_eq!(o, CacheOutcome::Miss, "evicted entries re-execute");
+        assert_eq!(cache.stats.execs(), cache.stats.misses());
+    }
+}

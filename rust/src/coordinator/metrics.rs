@@ -11,7 +11,8 @@ use std::time::Duration;
 
 use crate::backend::Target;
 
-use super::cache::WorkloadKey;
+use super::cache::{CacheStats, WorkloadKey};
+use super::exec_cache::ExecCacheStats;
 
 /// Cap on tracked distinct content addresses (client-controlled keys must
 /// not grow worker memory without bound; beyond the cap the count is a
@@ -118,9 +119,25 @@ pub struct Metrics {
     pub total_sim_cycles: u64,
     pub total_wall: Duration,
     /// Compile-cache hits/misses (a wait on another worker's in-flight
-    /// compile counts as a hit: this worker did not run the pipeline).
+    /// compile counts as a hit: this worker did not run the pipeline; a
+    /// request answered wholesale from the exec cache also counts as a hit,
+    /// since the artifact was never recompiled).
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Exec-cache outcomes: a hit (or a wait on another worker's in-flight
+    /// execution) served the whole request from a memoized report — no
+    /// lowering, no input generation, no simulation.
+    pub exec_hits: u64,
+    pub exec_misses: u64,
+    /// Per-worker input-memo outcomes: a hit shares one `Arc<ArrayData>`
+    /// instead of regenerating the arrays from the seed.
+    pub input_hits: u64,
+    pub input_misses: u64,
+    pub input_evictions: u64,
+    /// Eviction counts of the process-wide caches, snapshotted by
+    /// [`Metrics::absorb_cache_stats`] (the pool does this at join time).
+    pub compile_evictions: u64,
+    pub exec_evictions: u64,
     /// Per-target breakdowns with latency histograms, indexed by
     /// [`Target::index`].
     per_target: Vec<TargetMetrics>,
@@ -145,6 +162,13 @@ impl Default for Metrics {
             total_wall: Duration::ZERO,
             cache_hits: 0,
             cache_misses: 0,
+            exec_hits: 0,
+            exec_misses: 0,
+            input_hits: 0,
+            input_misses: 0,
+            input_evictions: 0,
+            compile_evictions: 0,
+            exec_evictions: 0,
             per_target: vec![TargetMetrics::default(); Target::COUNT],
             distinct_kernels: HashSet::new(),
             peak_queue_depth: 0,
@@ -187,6 +211,39 @@ impl Metrics {
         self.per_target[target.index()].record(cycles, wall, ok);
     }
 
+    /// Record how the exec cache answered a request (a wait on another
+    /// worker's in-flight execution counts as a hit: this worker ran
+    /// nothing).
+    pub fn record_exec_outcome(&mut self, hit: bool) {
+        if hit {
+            self.exec_hits += 1;
+        } else {
+            self.exec_misses += 1;
+        }
+    }
+
+    /// Record one input-memo probe.
+    pub fn record_input_outcome(&mut self, hit: bool) {
+        if hit {
+            self.input_hits += 1;
+        } else {
+            self.input_misses += 1;
+        }
+    }
+
+    /// Record input-memo evictions (per-session memo, so per-worker counts
+    /// sum under [`Metrics::merge`]).
+    pub fn record_input_evictions(&mut self, n: u64) {
+        self.input_evictions += n;
+    }
+
+    /// Snapshot the process-wide cache eviction counters into this
+    /// aggregate (called once on the merged total, e.g. at pool join).
+    pub fn absorb_cache_stats(&mut self, compile: &CacheStats, exec: &ExecCacheStats) {
+        self.compile_evictions = compile.evictions();
+        self.exec_evictions = exec.evictions();
+    }
+
     /// Record a request rejected before it reached the compile cache (an
     /// unknown catalog name, a bad size, an invalid inline spec). Counts a
     /// failure but neither a cache hit nor a miss — keeping the
@@ -214,6 +271,14 @@ impl Metrics {
         self.total_wall += other.total_wall;
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
+        self.exec_hits += other.exec_hits;
+        self.exec_misses += other.exec_misses;
+        self.input_hits += other.input_hits;
+        self.input_misses += other.input_misses;
+        self.input_evictions += other.input_evictions;
+        // snapshots of the same process-wide counters, not per-worker sums
+        self.compile_evictions = self.compile_evictions.max(other.compile_evictions);
+        self.exec_evictions = self.exec_evictions.max(other.exec_evictions);
         for (mine, theirs) in self.per_target.iter_mut().zip(&other.per_target) {
             mine.merge(theirs);
         }
@@ -279,6 +344,16 @@ impl Metrics {
         } else {
             ""
         };
+        out.push_str(&format!(
+            "\n  exec cache: {}H/{}M | input memo: {}H/{}M | evictions: compile={} exec={} input={}",
+            self.exec_hits,
+            self.exec_misses,
+            self.input_hits,
+            self.input_misses,
+            self.compile_evictions,
+            self.exec_evictions,
+            self.input_evictions,
+        ));
         out.push_str(&format!(
             "\n  distinct kernels: {}{saturated} | peak queue depth: {} | workers merged: {}",
             self.distinct_kernels.len(),
@@ -361,6 +436,36 @@ mod tests {
         h2.record(Duration::from_micros(50));
         h.merge(&h2);
         assert_eq!(h.count, 8);
+    }
+
+    #[test]
+    fn exec_and_input_counters_merge_and_report() {
+        let mut a = Metrics::default();
+        a.record_exec_outcome(false);
+        a.record_input_outcome(false);
+        a.record_input_outcome(true);
+        a.record_input_evictions(2);
+        let mut b = Metrics::default();
+        b.record_exec_outcome(true);
+        b.record_exec_outcome(true);
+        a.merge(&b);
+        assert_eq!((a.exec_hits, a.exec_misses), (2, 1));
+        assert_eq!((a.input_hits, a.input_misses, a.input_evictions), (1, 1, 2));
+        let compile = CacheStats::default();
+        compile
+            .evictions
+            .store(5, std::sync::atomic::Ordering::Relaxed);
+        let exec = ExecCacheStats::default();
+        exec.evictions
+            .store(7, std::sync::atomic::Ordering::Relaxed);
+        a.absorb_cache_stats(&compile, &exec);
+        assert_eq!((a.compile_evictions, a.exec_evictions), (5, 7));
+        let report = a.report();
+        assert!(report.contains("exec cache: 2H/1M"), "{report}");
+        assert!(
+            report.contains("evictions: compile=5 exec=7 input=2"),
+            "{report}"
+        );
     }
 
     #[test]

@@ -6,34 +6,41 @@
 //! invocations (paper §V-A: the next call may start as soon as the first PE
 //! is free).
 //!
-//! v3 architecture (see `rust/DESIGN.md`):
-//! * [`cache`] — `Arc<RwLock<HashMap>>` compile cache with single-flight
-//!   semantics, keyed by the content-addressed [`cache::WorkloadKey`]
-//!   (FNV-1a fingerprint of the spec + size + target): each distinct kernel
-//!   is compiled exactly once per process regardless of worker count or
-//!   whether it arrived by name or inline. Artifacts are stored as
-//!   `Arc<dyn Mapped>` and compiled through the
-//!   [`crate::backend::BackendRegistry`], so the coordinator is
-//!   target-agnostic end to end.
+//! v4 architecture (see `rust/DESIGN.md`):
+//! * [`cache`] — single-flight, LRU-bounded compile cache keyed by the
+//!   content-addressed [`cache::WorkloadKey`] (FNV-1a fingerprint of the
+//!   spec + size + target): each distinct resident kernel is compiled
+//!   exactly once per process regardless of worker count or whether it
+//!   arrived by name or inline. Artifacts are stored as `Arc<dyn Mapped>`
+//!   and compiled through the [`crate::backend::BackendRegistry`], so the
+//!   coordinator is target-agnostic end to end.
+//! * [`exec_cache`] — single-flight, LRU-bounded memo of whole
+//!   `Arc<ExecReport>`s keyed by `(WorkloadKey, seed, batch)`: a repeat of
+//!   an identical request replays with zero lowering, zero input
+//!   regeneration and zero simulation (the steady-state serve path).
 //! * [`session`] — one worker: workload resolution against the shared
 //!   [`crate::bench::spec::WorkloadCatalog`], execution through the uniform
-//!   [`crate::backend::Mapped`] seam, validation, metrics.
-//! * [`pool`] — N sessions over one cache + catalog behind the
-//!   channel-based `serve()` API, with graceful drain-on-shutdown and
-//!   merged metrics.
-//! * [`metrics`] — per-target latency histograms, cache hit/miss counters,
-//!   distinct-kernel tracking, queue-depth tracking, worker merge.
+//!   [`crate::backend::Mapped`] seam behind the exec cache, an LRU input
+//!   memo shared by execute + validate, golden validation, metrics.
+//! * [`pool`] — N sessions over one compile cache + exec cache + catalog
+//!   behind the channel-based `serve()` API, with graceful
+//!   drain-on-shutdown and merged metrics.
+//! * [`metrics`] — per-target latency histograms, compile/exec/input cache
+//!   hit/miss/eviction counters, distinct-kernel tracking, queue-depth
+//!   tracking, worker merge.
 //! * [`wire`] — the versioned JSON wire protocol (`repro serve
 //!   --requests <file.jsonl|->`): requests in, completion-order responses
 //!   out, correlated by the echoed client `id`.
 
 pub mod cache;
+pub mod exec_cache;
 pub mod metrics;
 pub mod pool;
 pub mod session;
 pub mod wire;
 
 pub use cache::{CacheOutcome, CompileCache, WorkloadKey};
+pub use exec_cache::{ExecCache, ExecKey};
 pub use metrics::Metrics;
 pub use pool::{serve as serve_pool, PoolHandle, PoolSender};
 pub use session::{Request, Response, Session, Target, WorkloadRef};

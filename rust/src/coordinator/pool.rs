@@ -16,6 +16,7 @@ use std::thread;
 use crate::bench::spec::WorkloadCatalog;
 
 use super::cache::CompileCache;
+use super::exec_cache::ExecCache;
 use super::metrics::Metrics;
 use super::session::{Request, Response, Session};
 
@@ -43,10 +44,11 @@ impl PoolSender {
     }
 }
 
-/// Join handle over the worker threads plus the shared cache.
+/// Join handle over the worker threads plus the shared caches.
 pub struct PoolHandle {
     workers: Vec<thread::JoinHandle<Metrics>>,
     cache: Arc<CompileCache>,
+    exec_cache: Arc<ExecCache>,
 }
 
 impl PoolHandle {
@@ -58,13 +60,19 @@ impl PoolHandle {
         &self.cache
     }
 
-    /// Wait for every worker to drain and exit; returns the merged metrics.
+    pub fn exec_cache(&self) -> &Arc<ExecCache> {
+        &self.exec_cache
+    }
+
+    /// Wait for every worker to drain and exit; returns the merged metrics
+    /// with the shared caches' eviction counters snapshotted in.
     pub fn join(self) -> Metrics {
         let mut total = Metrics::default();
         for w in self.workers {
             let m = w.join().expect("pool worker panicked");
             total.merge(&m);
         }
+        total.absorb_cache_stats(&self.cache.stats, &self.exec_cache.stats);
         total
     }
 }
@@ -92,6 +100,17 @@ pub fn serve_with(
     cache: Arc<CompileCache>,
     catalog: Arc<WorkloadCatalog>,
 ) -> (PoolSender, mpsc::Receiver<Response>, PoolHandle) {
+    serve_with_caches(n_workers, cache, Arc::new(ExecCache::new()), catalog)
+}
+
+/// Start a pool over explicit shared caches — compile *and* exec — plus a
+/// workload catalog (what the eviction/steady-state tests drive directly).
+pub fn serve_with_caches(
+    n_workers: usize,
+    cache: Arc<CompileCache>,
+    exec_cache: Arc<ExecCache>,
+    catalog: Arc<WorkloadCatalog>,
+) -> (PoolSender, mpsc::Receiver<Response>, PoolHandle) {
     let n = n_workers.max(1);
     let (req_tx, req_rx) = mpsc::channel::<Request>();
     let (resp_tx, resp_rx) = mpsc::channel::<Response>();
@@ -103,10 +122,12 @@ pub fn serve_with(
         let rx = shared_rx.clone();
         let tx = resp_tx.clone();
         let worker_cache = cache.clone();
+        let worker_exec = exec_cache.clone();
         let worker_catalog = catalog.clone();
         let depth = depth.clone();
         workers.push(thread::spawn(move || {
-            let mut session = Session::with_catalog(worker_cache, worker_catalog);
+            let mut session =
+                Session::with_shared(worker_cache, worker_exec, worker_catalog);
             session.metrics.workers = 1;
             loop {
                 // Hold the queue lock only while blocked in recv; handling
@@ -136,6 +157,7 @@ pub fn serve_with(
                             &req,
                             format!("worker panicked: {}", super::cache::panic_message(&p)),
                             false,
+                            false,
                             std::time::Duration::ZERO,
                         )
                     }
@@ -155,7 +177,11 @@ pub fn serve_with(
             depth,
         },
         resp_rx,
-        PoolHandle { workers, cache },
+        PoolHandle {
+            workers,
+            cache,
+            exec_cache,
+        },
     )
 }
 

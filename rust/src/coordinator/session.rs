@@ -1,8 +1,11 @@
-//! A coordinator session: request handling against the shared compile
-//! cache, dispatch through the uniform [`crate::backend::Mapped`] seam,
-//! golden validation, and per-request accounting. A session is one
-//! *worker's* view of the service — [`super::pool`] runs many of them over
-//! one [`CompileCache`].
+//! A coordinator session: request handling against the shared compile and
+//! exec-report caches, dispatch through the uniform
+//! [`crate::backend::Mapped`] seam, golden validation, and per-request
+//! accounting. A session is one *worker's* view of the service —
+//! [`super::pool`] runs many of them over one [`CompileCache`] and one
+//! [`ExecCache`]. The steady state (a repeat of an identical request) is a
+//! single exec-cache probe: no lowering, no input regeneration, no
+//! simulation.
 //!
 //! The session is target-agnostic *and* workload-agnostic: batch semantics
 //! live inside each backend's `execute`, and workloads arrive either as
@@ -15,17 +18,86 @@ use std::thread;
 use std::time::Instant;
 
 pub use crate::backend::Target;
-use crate::backend::ExecReport;
 use crate::bench::spec::{WorkloadCatalog, WorkloadSpec};
 use crate::ir::loopnest::ArrayData;
 use crate::ir::op::values_close;
 use crate::runtime::golden::GoldenService;
 
-use super::cache::{CacheOutcome, CompileCache};
+use super::cache::{CacheOutcome, CompileCache, WorkloadKey};
+use super::exec_cache::{ExecCache, ExecKey};
 use super::metrics::Metrics;
 
 /// Upper bound on per-worker memoized `(name, n)` resolutions.
 pub const MAX_RESOLVED_MEMO: usize = 1024;
+
+/// Upper bound on per-worker memoized generated-input sets. Inputs are
+/// deterministic in `(spec fingerprint, n, seed)`, so a repeat request — or
+/// the validate leg of the same request — shares one `Arc<ArrayData>`
+/// instead of regenerating the arrays; seeds are client-chosen, so the memo
+/// is LRU-bounded.
+pub const MAX_INPUT_MEMO: usize = 64;
+
+/// Per-session LRU memo of generated inputs keyed by
+/// `(fingerprint, n, seed)`.
+struct InputMemo {
+    map: std::collections::HashMap<(u64, i64, u64), InputEntry>,
+    tick: u64,
+    capacity: usize,
+}
+
+struct InputEntry {
+    data: Arc<ArrayData>,
+    stamp: u64,
+}
+
+impl InputMemo {
+    fn new(capacity: usize) -> InputMemo {
+        InputMemo {
+            map: std::collections::HashMap::new(),
+            tick: 0,
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The inputs for `(spec, seed)`, generated at most once while
+    /// resident. Records hit/miss/eviction counts into `metrics`.
+    fn get_or_gen(
+        &mut self,
+        spec: &WorkloadSpec,
+        fingerprint: u64,
+        seed: u64,
+        metrics: &mut Metrics,
+    ) -> Arc<ArrayData> {
+        self.tick += 1;
+        let key = (fingerprint, spec.n, seed);
+        if let Some(e) = self.map.get_mut(&key) {
+            e.stamp = self.tick;
+            metrics.record_input_outcome(true);
+            return e.data.clone();
+        }
+        metrics.record_input_outcome(false);
+        let data = Arc::new(spec.gen_inputs(seed));
+        if self.map.len() >= self.capacity {
+            if let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| *k)
+            {
+                self.map.remove(&victim);
+                metrics.record_input_evictions(1);
+            }
+        }
+        self.map.insert(
+            key,
+            InputEntry {
+                data: data.clone(),
+                stamp: self.tick,
+            },
+        );
+        data
+    }
+}
 
 /// Memoized resolution: name → size → (realized spec, fingerprint). Nested
 /// so the steady-state lookup probes without allocating a key.
@@ -173,8 +245,15 @@ pub struct Response {
     pub batch_cycles: u64,
     pub validated: Option<bool>,
     /// Whether the compiled artifact came out of the shared cache (a wait
-    /// on another worker's in-flight compile counts as a hit).
+    /// on another worker's in-flight compile counts as a hit; a request
+    /// answered from the exec cache implicitly reused the artifact and
+    /// counts as a hit too).
     pub cache_hit: bool,
+    /// Whether the whole execution report came out of the shared exec
+    /// cache — a repeat of an identical `(workload, n, target, seed,
+    /// batch)` request that ran no lowering, no input generation and no
+    /// simulation.
+    pub exec_cache_hit: bool,
     pub error: Option<String>,
     pub wall: std::time::Duration,
 }
@@ -185,6 +264,7 @@ impl Response {
         req: &Request,
         error: String,
         cache_hit: bool,
+        exec_cache_hit: bool,
         wall: std::time::Duration,
     ) -> Response {
         Response {
@@ -197,16 +277,19 @@ impl Response {
             batch_cycles: 0,
             validated: None,
             cache_hit,
+            exec_cache_hit,
             error: Some(error),
             wall,
         }
     }
 }
 
-/// A session: one worker over a (possibly shared) compile cache and a
-/// (possibly shared) workload catalog.
+/// A session: one worker over a (possibly shared) compile cache, a
+/// (possibly shared) exec-report cache and a (possibly shared) workload
+/// catalog.
 pub struct Session {
     cache: Arc<CompileCache>,
+    exec_cache: Arc<ExecCache>,
     catalog: Arc<WorkloadCatalog>,
     golden: GoldenService,
     /// Memoized catalog resolutions: `(name, n)` → realized spec + its
@@ -215,34 +298,50 @@ pub struct Session {
     /// [`WorkloadSpec::fingerprint`]. `n` is client-chosen, so the memo is
     /// capped at [`MAX_RESOLVED_MEMO`] entries — beyond it resolutions stay
     /// correct, just unmemoized (a hostile stream of distinct sizes cannot
-    /// grow worker memory without bound). The process-wide artifact cache
-    /// has no eviction yet; see ROADMAP.
+    /// grow worker memory without bound). The process-wide artifact and
+    /// exec-report caches are LRU-bounded for the same reason.
     resolved: ResolvedMemo,
     /// Entries across all inner maps (for the memo cap).
     resolved_len: usize,
+    /// Generated inputs memoized by `(fingerprint, n, seed)`, LRU-bounded
+    /// at [`MAX_INPUT_MEMO`] — execute and validate share one
+    /// `Arc<ArrayData>`, repeat seeds skip regeneration entirely.
+    inputs: InputMemo,
     pub metrics: Metrics,
 }
 
 impl Session {
-    /// A standalone session: private cache, builtin catalog.
+    /// A standalone session: private caches, builtin catalog.
     pub fn new() -> Session {
         Session::with_cache(Arc::new(CompileCache::new()))
     }
 
-    /// A session over a shared cache and the builtin catalog.
+    /// A session over a shared compile cache and the builtin catalog.
     pub fn with_cache(cache: Arc<CompileCache>) -> Session {
         Session::with_catalog(cache, Arc::new(WorkloadCatalog::builtin()))
     }
 
-    /// A session over a shared cache and a shared catalog (what pool
-    /// workers use).
+    /// A session over a shared compile cache and a shared catalog, with a
+    /// private exec cache.
     pub fn with_catalog(cache: Arc<CompileCache>, catalog: Arc<WorkloadCatalog>) -> Session {
+        Session::with_shared(cache, Arc::new(ExecCache::new()), catalog)
+    }
+
+    /// A session over fully shared server state — compile cache, exec
+    /// cache and catalog (what pool workers use).
+    pub fn with_shared(
+        cache: Arc<CompileCache>,
+        exec_cache: Arc<ExecCache>,
+        catalog: Arc<WorkloadCatalog>,
+    ) -> Session {
         Session {
             cache,
+            exec_cache,
             catalog,
             golden: GoldenService::new(),
             resolved: std::collections::HashMap::new(),
             resolved_len: 0,
+            inputs: InputMemo::new(MAX_INPUT_MEMO),
             metrics: Metrics::default(),
         }
     }
@@ -251,42 +350,72 @@ impl Session {
         &self.cache
     }
 
+    pub fn exec_cache(&self) -> &Arc<ExecCache> {
+        &self.exec_cache
+    }
+
     pub fn catalog(&self) -> &Arc<WorkloadCatalog> {
         &self.catalog
     }
 
-    /// Handle one request synchronously: resolve the workload reference to a
-    /// spec, fetch (or compile) the artifact by content address, execute it
-    /// under the backend's own batch semantics, validate if asked. The
-    /// request inputs are materialized once and shared between execution and
-    /// validation.
+    /// Handle one request synchronously: resolve the workload reference to
+    /// a spec, then consult the shared exec cache — a repeat of an
+    /// identical `(workload, n, target, seed, batch)` request is answered
+    /// from the memoized report with no lowering, no input generation and
+    /// no simulation. On an exec-cache miss, fetch (or compile) the
+    /// artifact by content address, materialize the inputs through the
+    /// session's input memo and execute under the backend's own batch
+    /// semantics. Validation (if asked) shares the memoized inputs with
+    /// execution via one `Arc<ArrayData>`.
     pub fn handle(&mut self, req: &Request) -> Response {
         let t0 = Instant::now();
         let (spec, fingerprint) = match self.resolve(&req.workload) {
             Ok(resolved) => resolved,
             Err(e) => {
-                let resp = Response::failure(req, e, false, t0.elapsed());
-                // rejected before the cache was consulted: a failure, but
+                let resp = Response::failure(req, e, false, false, t0.elapsed());
+                // rejected before any cache was consulted: a failure, but
                 // neither a cache hit nor a miss
                 self.metrics.record_rejected(req.target, resp.wall);
                 return resp;
             }
         };
-        let key = super::cache::WorkloadKey {
+        let key = WorkloadKey {
             fingerprint,
             n: spec.n,
             target: req.target,
         };
-        let (compiled, outcome) = self.cache.get_or_compile_with_key(key, &spec);
-        let cache_hit = outcome != CacheOutcome::Miss;
-        let result: Result<(ExecReport, ArrayData), String> = compiled.and_then(|kernel| {
-            let ins = spec.gen_inputs(req.seed);
-            kernel.execute(&ins, req.batch).map(|rep| (rep, ins))
+        let exec_key = ExecKey {
+            workload: key,
+            seed: req.seed,
+            batch: req.batch,
+        };
+        // the compile-cache outcome this request observed (None when the
+        // exec cache short-circuited the whole pipeline)
+        let mut compile_outcome: Option<CacheOutcome> = None;
+        let exec_cache = Arc::clone(&self.exec_cache);
+        let cache = &self.cache;
+        let input_memo = &mut self.inputs;
+        let metrics = &mut self.metrics;
+        let (result, exec_outcome) = exec_cache.get_or_run(exec_key, || {
+            let (compiled, outcome) = cache.get_or_compile_with_key(key, &spec);
+            compile_outcome = Some(outcome);
+            let kernel = compiled?;
+            let ins = input_memo.get_or_gen(&spec, fingerprint, req.seed, metrics);
+            kernel.execute(&ins, req.batch)
         });
+        let exec_hit = exec_outcome != CacheOutcome::Miss;
+        self.metrics.record_exec_outcome(exec_hit);
+        // an exec-cache hit implicitly reused the compiled artifact
+        let cache_hit = compile_outcome
+            .map(|o| o != CacheOutcome::Miss)
+            .unwrap_or(true);
 
         let (resp, cycles, ok) = match result {
-            Ok((rep, ins)) => {
+            Ok(rep) => {
                 let validated = if req.validate {
+                    let ins =
+                        self.inputs
+                            .get_or_gen(&spec, fingerprint, req.seed, &mut self.metrics);
                     Some(self.validate_outputs(&spec, &rep.outputs, &ins))
                 } else {
                     None
@@ -304,6 +433,7 @@ impl Session {
                         batch_cycles: batch,
                         validated,
                         cache_hit,
+                        exec_cache_hit: exec_hit,
                         error: None,
                         wall: t0.elapsed(),
                     },
@@ -312,7 +442,7 @@ impl Session {
                 )
             }
             Err(e) => (
-                Response::failure(req, e, cache_hit, t0.elapsed()),
+                Response::failure(req, e, cache_hit, exec_hit, t0.elapsed()),
                 0,
                 false,
             ),
@@ -481,6 +611,57 @@ mod tests {
         assert!(inline.error.is_none(), "{:?}", inline.error);
         assert!(inline.cache_hit, "identical inline spec must hit the cache");
         assert_eq!(inline.latency_cycles, named.latency_cycles);
+        assert_eq!(s.cache().stats.compiles(), 1);
+    }
+
+    #[test]
+    fn identical_requests_hit_the_exec_cache() {
+        let mut s = Session::new();
+        let req = Request::named(1, "gemm", 8, Target::Tcpa, 2, false, 7);
+        let r1 = s.handle(&req);
+        assert!(r1.error.is_none(), "{:?}", r1.error);
+        assert!(!r1.exec_cache_hit, "first request executes");
+        let r2 = s.handle(&req);
+        assert!(r2.exec_cache_hit, "repeat replays the memoized report");
+        assert!(r2.cache_hit, "exec hit implies artifact reuse");
+        assert_eq!(r2.latency_cycles, r1.latency_cycles);
+        assert_eq!(r2.batch_cycles, r1.batch_cycles);
+        assert_eq!((s.metrics.exec_hits, s.metrics.exec_misses), (1, 1));
+        assert_eq!(s.exec_cache().stats.execs(), 1, "simulated exactly once");
+        assert_eq!(s.metrics.input_misses, 1, "inputs generated exactly once");
+        assert_eq!(s.metrics.input_hits, 0, "the hit ran no input generation");
+    }
+
+    #[test]
+    fn validate_shares_memoized_inputs_with_execution() {
+        let mut s = Session::new();
+        let r = s.handle(&Request::named(1, "gemm", 8, Target::Seq, 1, true, 3));
+        assert_eq!(r.validated, Some(true));
+        assert_eq!(s.metrics.input_misses, 1);
+        assert_eq!(s.metrics.input_hits, 1, "validate reused the executed inputs");
+        // repeat with validation: report from the exec cache, inputs from
+        // the memo — nothing regenerated
+        let r2 = s.handle(&Request::named(2, "gemm", 8, Target::Seq, 1, true, 3));
+        assert!(r2.exec_cache_hit);
+        assert_eq!(r2.validated, Some(true));
+        assert_eq!(s.metrics.input_misses, 1, "no regeneration on repeat");
+        assert_eq!(s.metrics.input_hits, 2);
+    }
+
+    #[test]
+    fn failing_requests_cache_their_reports_too() {
+        let mut s = Session::new();
+        // GEMM N=64 overflows the CGRA scratchpad: deterministic failure
+        let req = Request::named(1, "gemm", 64, Target::Cgra, 1, false, 1);
+        let r1 = s.handle(&req);
+        assert!(r1.error.is_some());
+        assert!(!r1.exec_cache_hit);
+        let r2 = s.handle(&req);
+        assert!(
+            r2.exec_cache_hit,
+            "deterministic failures replay from the exec cache"
+        );
+        assert_eq!(r2.error, r1.error);
         assert_eq!(s.cache().stats.compiles(), 1);
     }
 

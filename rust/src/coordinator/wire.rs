@@ -23,8 +23,12 @@
 //! ```json
 //! {"v":1,"id":1,"workload":"gemm","n":8,"target":"tcpa","batch":2,
 //!  "latency_cycles":1234,"batch_cycles":1300,"validated":true,
-//!  "cache_hit":false,"error":null,"wall_us":842}
+//!  "cache_hit":false,"exec_cache_hit":false,"error":null,"wall_us":842}
 //! ```
+//!
+//! `exec_cache_hit` reports whether the whole execution report was served
+//! from the coordinator's exec cache (a byte-identical repeat request); it
+//! defaults to `false` when absent so pre-exec-cache responses still parse.
 //!
 //! Malformed request lines do not abort the stream: they produce an error
 //! record `{"v":1,"line":<lineno>,"error":"..."}` and serving continues.
@@ -149,6 +153,7 @@ pub fn response_to_json(r: &Response) -> Json {
             r.validated.map(Json::Bool).unwrap_or(Json::Null),
         ),
         ("cache_hit", Json::Bool(r.cache_hit)),
+        ("exec_cache_hit", Json::Bool(r.exec_cache_hit)),
         (
             "error",
             r.error
@@ -181,6 +186,11 @@ pub fn response_from_json(j: &Json) -> Result<Response, String> {
             .get("cache_hit")
             .and_then(Json::as_bool)
             .ok_or("missing field `cache_hit`")?,
+        // absent in pre-exec-cache records: default to "not a replay"
+        exec_cache_hit: j
+            .get("exec_cache_hit")
+            .and_then(Json::as_bool)
+            .unwrap_or(false),
         error: match j.get("error") {
             None | Some(Json::Null) => None,
             Some(e) => Some(
@@ -348,6 +358,7 @@ mod tests {
             batch_cycles: 300,
             validated: None,
             cache_hit: true,
+            exec_cache_hit: true,
             error: Some("boom".into()),
             wall: Duration::from_micros(555),
         };
@@ -355,6 +366,7 @@ mod tests {
         assert_eq!(back.id, 42);
         assert_eq!(back.workload, "jacobi2d");
         assert_eq!(back.validated, None);
+        assert!(back.exec_cache_hit);
         assert_eq!(back.error.as_deref(), Some("boom"));
         assert_eq!(back.wall, Duration::from_micros(555));
 
@@ -366,6 +378,14 @@ mod tests {
         let back = response_from_json(&response_to_json(&ok)).unwrap();
         assert_eq!(back.validated, Some(true));
         assert_eq!(back.error, None);
+    }
+
+    #[test]
+    fn responses_without_exec_cache_hit_still_parse() {
+        // a pre-exec-cache v1 record (no `exec_cache_hit` field)
+        let line = r#"{"v":1,"id":1,"workload":"gemm","n":8,"target":"tcpa","batch":1,"latency_cycles":10,"batch_cycles":10,"validated":null,"cache_hit":false,"error":null,"wall_us":5}"#;
+        let r = response_from_json(&Json::parse(line).unwrap()).unwrap();
+        assert!(!r.exec_cache_hit, "absent field defaults to false");
     }
 
     #[test]

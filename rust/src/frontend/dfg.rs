@@ -72,6 +72,17 @@ pub struct DfgEdge {
     pub dist: u32,
 }
 
+/// Precomputed interpreter plan for one [`Dfg`]: the topological order and
+/// the history-ring depth, hoisted out of the per-execution path (serving
+/// repeat consumers re-derive neither).
+#[derive(Debug, Clone)]
+pub struct DfgPlan {
+    /// Valid intra-iteration evaluation order ([`Dfg::topo_order`]).
+    pub order: Vec<usize>,
+    /// History-ring depth (`max inter-iteration distance + 1`).
+    pub depth: usize,
+}
+
 /// The data-flow graph of one loop-body iteration.
 #[derive(Debug, Clone)]
 pub struct Dfg {
@@ -194,6 +205,22 @@ impl Dfg {
             .collect()
     }
 
+    /// Precompute the interpreter's execution plan — topological order and
+    /// history-ring depth — so repeat executions ([`Dfg::execute_with_plan`])
+    /// stop re-deriving them per call.
+    pub fn plan(&self) -> DfgPlan {
+        let max_dist = self
+            .edges()
+            .iter()
+            .map(|e| e.dist)
+            .max()
+            .unwrap_or(0) as usize;
+        DfgPlan {
+            order: self.topo_order(),
+            depth: max_dist + 1,
+        }
+    }
+
     /// Execute the DFG for `self.iters` iterations over the given inputs —
     /// the operational semantics of the mapped loop. Returns output arrays.
     pub fn execute(&self, inputs: &ArrayData) -> ArrayData {
@@ -203,18 +230,19 @@ impl Dfg {
     }
 
     /// Execute over already-allocated scratchpad banks (used by the CGRA
-    /// simulator's reference check and multi-stage kernels).
+    /// simulator's reference check and multi-stage kernels), deriving the
+    /// plan on the fly.
     pub fn execute_on(&self, spm: &mut [Vec<Value>]) {
-        let order = self.topo_order();
-        let n = self.nodes.len();
+        self.execute_with_plan(&self.plan(), spm)
+    }
+
+    /// Execute over already-allocated scratchpad banks with a precomputed
+    /// [`DfgPlan`] (must come from this DFG). Observationally identical to
+    /// [`Dfg::execute_on`].
+    pub fn execute_with_plan(&self, plan: &DfgPlan, spm: &mut [Vec<Value>]) {
+        let order = &plan.order;
         // Ring buffers of the last `max_dist+1` iteration values per node.
-        let max_dist = self
-            .edges()
-            .iter()
-            .map(|e| e.dist)
-            .max()
-            .unwrap_or(0) as usize;
-        let depth = max_dist + 1;
+        let depth = plan.depth;
         let mut hist: Vec<Vec<Value>> = self
             .nodes
             .iter()
@@ -223,7 +251,7 @@ impl Dfg {
 
         for it in 0..self.iters {
             let slot = (it as usize) % depth;
-            for &v in &order {
+            for &v in order {
                 let node = &self.nodes[v];
                 let fetch = |op: &Operand| -> Value {
                     match op {
@@ -267,7 +295,6 @@ impl Dfg {
                 hist[v][slot] = val;
             }
         }
-        let _ = n;
     }
 
     /// Gather output / in-out arrays from scratchpad banks.
@@ -397,6 +424,23 @@ mod tests {
         let out = dfg.execute(&inputs);
         // accumulator never resets: sums the array twice
         assert_eq!(out["out"][0], Value::I32(2 * (1..=n as i32).sum::<i32>()));
+    }
+
+    #[test]
+    fn execute_with_plan_matches_execute_on() {
+        let n = 8;
+        let dfg = sum_dfg(n);
+        let mut inputs = ArrayData::new();
+        inputs.insert(
+            "in".into(),
+            (0..n).map(|i| Value::I32(i as i32 + 1)).collect(),
+        );
+        let want = dfg.execute(&inputs);
+        let plan = dfg.plan();
+        assert_eq!(plan.depth, 2, "dist-1 self edges need a 2-deep ring");
+        let mut spm = dfg.alloc_spm(&inputs);
+        dfg.execute_with_plan(&plan, &mut spm);
+        assert_eq!(dfg.collect_outputs(&spm), want);
     }
 
     #[test]

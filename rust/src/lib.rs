@@ -21,8 +21,12 @@
 //! golden-model runtime ([`runtime`]) that loads JAX/Pallas-lowered HLO
 //! artifacts, and the L3 coordinator ([`coordinator`]) that serves kernel
 //! invocations — by catalog name or inline spec, over channels or the
-//! versioned JSON wire protocol ([`coordinator::wire`]) — through a compile
-//! cache keyed by content address ([`coordinator::cache::WorkloadKey`]).
+//! versioned JSON wire protocol ([`coordinator::wire`]) — through two
+//! bounded single-flight caches: compiled artifacts keyed by content
+//! address ([`coordinator::cache::WorkloadKey`]) and whole execution
+//! reports keyed by ([`coordinator::exec_cache::ExecKey`]: workload +
+//! seed + batch), so byte-identical repeat requests replay with zero
+//! lowering, zero input regeneration and zero simulation.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index.
 

@@ -262,7 +262,7 @@ fn run_trace(
         for r in &responses {
             println!(
                 "[{:>3}] {:<8} n={:<3} {:?} batch={} batch_cycles={} \
-                 validated={:?} cache_hit={} wall={:?}{}",
+                 validated={:?} cache_hit={} exec_hit={} wall={:?}{}",
                 r.id,
                 r.workload,
                 r.n,
@@ -271,6 +271,7 @@ fn run_trace(
                 r.batch_cycles,
                 r.validated,
                 r.cache_hit,
+                r.exec_cache_hit,
                 r.wall,
                 r.error
                     .as_ref()
@@ -283,13 +284,23 @@ fn run_trace(
 }
 
 /// Compact per-request cache-outcome string (response completion order):
-/// `id:H` when the artifact came from the shared cache, `id:M` when this
-/// request compiled it — the ids make the nondeterministic orderings of
-/// different worker counts comparable.
+/// `id:E` when the whole report replayed from the exec cache, `id:H` when
+/// the artifact came from the compile cache, `id:M` when this request
+/// compiled it — the ids make the nondeterministic orderings of different
+/// worker counts comparable.
 fn cache_outcomes(responses: &[Response]) -> String {
     responses
         .iter()
-        .map(|r| format!("{}:{}", r.id, if r.cache_hit { 'H' } else { 'M' }))
+        .map(|r| {
+            let mark = if r.exec_cache_hit {
+                'E'
+            } else if r.cache_hit {
+                'H'
+            } else {
+                'M'
+            };
+            format!("{}:{mark}", r.id)
+        })
         .collect::<Vec<_>>()
         .join(" ")
 }

@@ -5,8 +5,11 @@
 //! sink resolves to, the affine I/O-buffer address of an input read, the
 //! condition-space constraints, the per-tile start offsets — is resolved
 //! *once* here, so the per-event work reduces to a handful of integer dot
-//! products over ≤3-element vectors and direct `Vec` indexing. In
-//! particular:
+//! products over ≤3-element vectors and direct `Vec` indexing. Plans are
+//! immutable once built, so the serving plane hoists them to *compile*
+//! time: `backend::tcpa::TcpaBackend` lowers one `Arc<ExecPlan>` per kernel
+//! when the artifact is compiled and every `execute` replays them (see
+//! [`super::sim::simulate_workload_with_plans`]). In particular:
 //!
 //! * every `Arg` is lowered to an [`ArgPlan`] with the bound [`RegKind`]
 //!   already looked up (no per-event `HashMap` probe) and input addresses
@@ -343,6 +346,13 @@ impl ExecPlan {
     /// Number of tiles (= PEs in use).
     pub fn n_tiles(&self) -> usize {
         self.tiles.len()
+    }
+
+    /// Number of event streams the simulator merges over this plan: one
+    /// read and one write stream per `(tile, equation)` — the capacity hint
+    /// for the merge heap and stream table.
+    pub fn n_streams(&self) -> usize {
+        self.n_tiles() * self.n_eqs() * 2
     }
 }
 

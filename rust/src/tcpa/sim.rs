@@ -130,6 +130,18 @@ impl Stream {
     }
 }
 
+/// Reset a recycled queue table to `depths.len()` empty queues with at
+/// least `depth + 1` capacity each, reusing surviving backing buffers.
+fn reset_queues<T>(qs: &mut Vec<VecDeque<T>>, depths: &[usize]) {
+    qs.truncate(depths.len());
+    for (q, &d) in qs.iter_mut().zip(depths) {
+        q.clear();
+        q.reserve(d + 1);
+    }
+    let kept = qs.len();
+    qs.extend(depths[kept..].iter().map(|&d| VecDeque::with_capacity(d + 1)));
+}
+
 /// Advance a lexicographic odometer; false on wrap-around (scan complete).
 fn odometer_step(j: &mut [i64], extents: &[i64]) -> bool {
     for dd in (0..j.len()).rev() {
@@ -149,10 +161,33 @@ struct PeState {
     chan: Vec<VecDeque<(i64, Value)>>,
 }
 
+/// Reusable per-execution scratch: the merge heap, stream table, in-flight
+/// queues, PE register state and per-PE completion vector. One arena serves
+/// every kernel of a workload execution (see
+/// [`simulate_workload_with_plans`]) — the backing allocations are recycled
+/// via `clear()` instead of being rebuilt per kernel, so repeat executes of
+/// a compiled artifact perform no avoidable setup allocation.
+#[derive(Default)]
+pub struct TcpaScratch {
+    pes: Vec<PeState>,
+    in_flight: Vec<VecDeque<Value>>,
+    streams: Vec<Stream>,
+    heap: BinaryHeap<Reverse<EvKey>>,
+    per_pe_done: Vec<u64>,
+}
+
+impl TcpaScratch {
+    pub fn new() -> TcpaScratch {
+        TcpaScratch::default()
+    }
+}
+
 /// Simulate one compiled kernel over the given inputs, lowering the
 /// execution plan on the fly. Callers that re-simulate one configuration
 /// (batch serving, sweeps over inputs) should lower once via
-/// [`TcpaConfig::execution_plan`] and use [`simulate_with_plan`].
+/// [`TcpaConfig::execution_plan`] and use [`simulate_with_plan`] — the
+/// serving plane does this at *compile* time (see
+/// `backend::tcpa::TcpaBackend`), so its execute path never re-lowers.
 pub fn simulate(
     cfg: &TcpaConfig,
     arch: &TcpaArch,
@@ -170,16 +205,48 @@ pub fn simulate_with_plan(
     arch: &TcpaArch,
     inputs: &ArrayData,
 ) -> Result<TcpaSimResult, IoOverflow> {
+    simulate_with_plan_in(cfg, plan, arch, inputs, &mut TcpaScratch::new())
+}
+
+/// Simulate one compiled kernel over a pre-lowered [`ExecPlan`], recycling
+/// the given scratch arena. Observationally identical to
+/// [`simulate_with_plan`]: the arena only reuses allocations, never state —
+/// every buffer is reinitialized here before use.
+pub fn simulate_with_plan_in(
+    cfg: &TcpaConfig,
+    plan: &ExecPlan,
+    arch: &TcpaArch,
+    inputs: &ArrayData,
+    scratch: &mut TcpaScratch,
+) -> Result<TcpaSimResult, IoOverflow> {
     let pra = &cfg.pra;
     let mut io = IoBuffers::new(pra, inputs, arch)?;
     let n_tiles = plan.n_tiles();
     let n_eqs = plan.n_eqs();
     let ii = (cfg.sched.ii as i64).max(1);
 
+    let TcpaScratch {
+        pes,
+        in_flight,
+        streams,
+        heap,
+        per_pe_done,
+    } = scratch;
+
     // --- dense simulation state -----------------------------------------
+    // Recycle surviving PE states in place: clear + re-reserve keeps the
+    // rd/fd/chan backing buffers alive across kernels, so the steady state
+    // allocates nothing here.
     let rd_size = arch.rd_regs.max(cfg.binding.rd_used);
-    let mut pes: Vec<PeState> = (0..n_tiles)
-        .map(|_| PeState {
+    pes.truncate(n_tiles);
+    for pe in pes.iter_mut() {
+        pe.rd.clear();
+        pe.rd.resize(rd_size, plan.dtype.zero());
+        reset_queues(&mut pe.fd, &plan.fifo_depth);
+        reset_queues(&mut pe.chan, &plan.chan_depth);
+    }
+    while pes.len() < n_tiles {
+        pes.push(PeState {
             rd: vec![plan.dtype.zero(); rd_size],
             fd: plan
                 .fifo_depth
@@ -191,19 +258,27 @@ pub fn simulate_with_plan(
                 .iter()
                 .map(|&d| VecDeque::with_capacity(d + 1))
                 .collect(),
-        })
-        .collect();
+        });
+    }
     // Issued-but-uncommitted values per (tile, eq). Reads push, the matching
     // writes pop `latency` cycles later in the same (FIFO) order, because
-    // both streams scan the identical active-`j` sequence.
-    let mut in_flight: Vec<VecDeque<Value>> = (0..n_tiles * n_eqs)
-        .map(|idx| VecDeque::with_capacity((plan.eqs[idx % n_eqs].latency / ii + 2) as usize))
-        .collect();
+    // both streams scan the identical active-`j` sequence. Queues are
+    // recycled like the PE state above.
+    let in_flight_cap =
+        |idx: usize| (plan.eqs[idx % n_eqs].latency / ii + 2) as usize;
+    in_flight.truncate(n_tiles * n_eqs);
+    for (idx, q) in in_flight.iter_mut().enumerate() {
+        q.clear();
+        q.reserve(in_flight_cap(idx));
+    }
+    let kept = in_flight.len();
+    in_flight.extend((kept..n_tiles * n_eqs).map(|idx| VecDeque::with_capacity(in_flight_cap(idx))));
 
     // --- stream setup ----------------------------------------------------
-    let mut streams: Vec<Stream> = Vec::with_capacity(n_tiles * n_eqs * 2);
-    let mut heap: BinaryHeap<Reverse<EvKey>> =
-        BinaryHeap::with_capacity(n_tiles * n_eqs * 2 + 1);
+    streams.clear();
+    streams.reserve(plan.n_streams());
+    heap.clear();
+    heap.reserve(plan.n_streams() + 1);
     for t in 0..n_tiles {
         for e in 0..n_eqs {
             for phase in [1u8, 0u8] {
@@ -224,7 +299,8 @@ pub fn simulate_with_plan(
     }
 
     // --- merge loop -------------------------------------------------------
-    let mut per_pe_done = vec![0u64; n_tiles];
+    per_pe_done.clear();
+    per_pe_done.resize(n_tiles, 0);
     let mut issued = 0u64;
     let mut violations = 0u64;
     let mut max_fd = 0usize;
@@ -277,7 +353,7 @@ pub fn simulate_with_plan(
             if let Some(var) = ep.var {
                 for dest in &plan.dests[var] {
                     write_dest(
-                        &mut pes,
+                        pes,
                         plan,
                         tile,
                         tp,
@@ -306,7 +382,8 @@ pub fn simulate_with_plan(
         outputs: io.outputs(pra),
         cycles,
         first_pe_done: first,
-        per_pe_done,
+        // the arena keeps its buffer; the result owns a (tiny) copy
+        per_pe_done: per_pe_done.clone(),
         issued_ops: issued,
         max_fd_occupancy: max_fd,
         max_channel_occupancy: max_chan,
@@ -442,8 +519,9 @@ fn consumer_location(
 /// Simulate a multi-kernel workload (e.g. ATAX's two PRAs) back-to-back,
 /// chaining intermediate arrays through the I/O buffers. Returns the final
 /// outputs plus per-kernel results; each kernel's output arrays are drained
-/// into the workload-level [`WorkloadRun::outputs`] (one clone per array for
-/// the inter-kernel pool), so `kernels[i].outputs` is empty and the
+/// into the workload-level [`WorkloadRun::outputs`] (cloned into the
+/// inter-kernel pool only when a later kernel reads them — see
+/// [`workload_read_sets`]), so `kernels[i].outputs` is empty and the
 /// per-kernel entries carry timing/occupancy metrics only.
 /// `total_latency` is the sum of last-PE latencies; `overlapped_latency` is
 /// the *restart interval* — the earliest a following invocation of the same
@@ -462,18 +540,80 @@ pub fn simulate_workload(
     arch: &TcpaArch,
     inputs: &ArrayData,
 ) -> Result<WorkloadRun, IoOverflow> {
+    let plans: Vec<std::sync::Arc<ExecPlan>> = cfgs
+        .iter()
+        .map(|cfg| std::sync::Arc::new(cfg.execution_plan()))
+        .collect();
+    simulate_workload_with_plans(cfgs, &plans, arch, inputs)
+}
+
+/// `read_after[i]`: array names any config *after* `i` loads from the
+/// inter-kernel pool. Every array the simulator loads by name counts as
+/// read, matching `IoBuffers::new`'s loading of all declared arrays —
+/// suffix union of later configs' declarations, derived once per workload
+/// (the serving plane hoists it to compile time next to the plans).
+pub fn workload_read_sets(cfgs: &[TcpaConfig]) -> Vec<std::collections::HashSet<String>> {
+    let stages: Vec<Vec<&str>> = cfgs
+        .iter()
+        .map(|c| c.pra.arrays.iter().map(|a| a.name.as_str()).collect())
+        .collect();
+    crate::util::suffix_name_unions(&stages)
+}
+
+/// [`simulate_workload`] over pre-lowered, shareable execution plans (one
+/// per config, in order), deriving the read-sets on the fly. The serving
+/// plane hoists those too — see [`simulate_workload_prepared`].
+pub fn simulate_workload_with_plans(
+    cfgs: &[TcpaConfig],
+    plans: &[std::sync::Arc<ExecPlan>],
+    arch: &TcpaArch,
+    inputs: &ArrayData,
+) -> Result<WorkloadRun, IoOverflow> {
+    simulate_workload_prepared(cfgs, plans, &workload_read_sets(cfgs), arch, inputs)
+}
+
+/// The serving plane's execute path: plans *and* inter-kernel read-sets are
+/// hoisted to compile time by `backend::tcpa::TcpaBackend` and replayed per
+/// invocation with zero re-lowering and zero re-derivation. All per-kernel
+/// scratch comes from one per-call [`TcpaScratch`] arena.
+///
+/// A kernel's outputs are cloned into the inter-kernel pool only when a
+/// *later* config actually reads them (`read_after`, see
+/// [`workload_read_sets`]); single-kernel workloads therefore clone no
+/// output at all.
+pub fn simulate_workload_prepared(
+    cfgs: &[TcpaConfig],
+    plans: &[std::sync::Arc<ExecPlan>],
+    read_after: &[std::collections::HashSet<String>],
+    arch: &TcpaArch,
+    inputs: &ArrayData,
+) -> Result<WorkloadRun, IoOverflow> {
+    assert_eq!(
+        cfgs.len(),
+        plans.len(),
+        "one pre-lowered plan per configuration"
+    );
+    assert_eq!(
+        cfgs.len(),
+        read_after.len(),
+        "one read-set per configuration"
+    );
+
+    let mut scratch = TcpaScratch::new();
     let mut pool = inputs.clone();
     let mut outs = ArrayData::new();
     let mut kernels = Vec::new();
     let mut total = 0u64;
     let mut overlapped = 0u64;
-    for cfg in cfgs {
-        let mut r = simulate(cfg, arch, &pool)?;
+    for (i, cfg) in cfgs.iter().enumerate() {
+        let mut r = simulate_with_plan_in(cfg, &plans[i], arch, &pool, &mut scratch)?;
         // Later kernels read intermediates from the pool (one clone per
-        // array); the workload-level outputs take ownership of the kernel's
-        // buffers instead of a second clone.
+        // array *actually read later*); the workload-level outputs take
+        // ownership of the kernel's buffers instead of a second clone.
         for (name, data) in std::mem::take(&mut r.outputs) {
-            pool.insert(name.clone(), data.clone());
+            if read_after[i].contains(&name) {
+                pool.insert(name.clone(), data.clone());
+            }
             outs.insert(name, data);
         }
         total += r.cycles;
@@ -584,6 +724,34 @@ mod tests {
         let ins = bench_inputs(BenchId::Gemm, 16, 3);
         let r = simulate(&cfg, &arch, &ins).unwrap();
         assert!(r.max_fd_occupancy <= cfg.binding.fd_words);
+    }
+
+    #[test]
+    fn workload_with_hoisted_plans_matches_fresh_lowering() {
+        // two-kernel workload: exercises the read-set (kernel 2 reads
+        // kernel 1's `tmp`) and the shared scratch arena across kernels
+        let wl = build(BenchId::Atax, 8);
+        let arch = TcpaArch::paper(4, 4);
+        let cfgs: Vec<_> = wl
+            .pras
+            .iter()
+            .map(|p| compile(p, &arch).expect("compile"))
+            .collect();
+        let plans: Vec<_> = cfgs
+            .iter()
+            .map(|c| std::sync::Arc::new(c.execution_plan()))
+            .collect();
+        let ins = bench_inputs(BenchId::Atax, 8, 5);
+        let a = simulate_workload(&cfgs, &arch, &ins).expect("fresh");
+        let b = simulate_workload_with_plans(&cfgs, &plans, &arch, &ins).expect("hoisted");
+        assert_eq!(a.outputs, b.outputs, "bit-identical outputs");
+        assert_eq!(a.total_latency, b.total_latency);
+        assert_eq!(a.overlapped_latency, b.overlapped_latency);
+        for (ka, kb) in a.kernels.iter().zip(&b.kernels) {
+            assert_eq!(ka.issued_ops, kb.issued_ops);
+            assert_eq!(ka.per_pe_done, kb.per_pe_done);
+            assert_eq!(ka.timing_violations, kb.timing_violations);
+        }
     }
 
     #[test]

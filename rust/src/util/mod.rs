@@ -7,6 +7,24 @@ pub mod json;
 pub mod cli;
 pub mod par;
 
+/// `out[i]` = union of all names in `stages[i+1..]` — the suffix read-set
+/// both array backends use to decide which inter-stage outputs must be
+/// cloned into the chaining pool (a stage loads every array it declares,
+/// so declaration = read). Shared so the invariant has exactly one
+/// implementation (see `tcpa::sim::workload_read_sets` and
+/// `backend::cgra`).
+pub fn suffix_name_unions(stages: &[Vec<&str>]) -> Vec<std::collections::HashSet<String>> {
+    let mut out = vec![std::collections::HashSet::new(); stages.len()];
+    let mut acc: std::collections::HashSet<String> = std::collections::HashSet::new();
+    for i in (0..stages.len()).rev() {
+        out[i] = acc.clone();
+        for name in &stages[i] {
+            acc.insert((*name).to_string());
+        }
+    }
+    out
+}
+
 /// Ceiling division for non-negative integers.
 #[inline]
 pub fn ceil_div(a: u64, b: u64) -> u64 {
@@ -28,6 +46,18 @@ pub fn ceil_div_i64(a: i64, b: i64) -> i64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn suffix_name_unions_cover_later_stages_only() {
+        let stages = vec![vec!["A", "x", "tmp"], vec!["A", "tmp", "y"]];
+        let out = suffix_name_unions(&stages);
+        assert_eq!(out.len(), 2);
+        // stage 0's outputs must be kept iff stage 1 declares them
+        assert!(out[0].contains("tmp") && out[0].contains("A") && out[0].contains("y"));
+        assert!(!out[0].contains("x"));
+        assert!(out[1].is_empty(), "nothing runs after the last stage");
+        assert!(suffix_name_unions(&[]).is_empty());
+    }
 
     #[test]
     fn ceil_div_basics() {

@@ -1,0 +1,364 @@
+//! Integration: bounded server-side caches. The compile cache and the exec
+//! cache are LRU-bounded and single-flight; these tests pin the contract
+//! the serving plane relies on:
+//!
+//! * the LRU bound holds under concurrent `get_or_compile` / exec-cache
+//!   traffic (ready entries beyond capacity are evicted, oldest first);
+//! * in-flight entries are never evicted — a blocked leader's flight
+//!   survives arbitrary eviction pressure and its waiters receive the
+//!   leader's result, not a recompile;
+//! * a re-request of an evicted key recompiles, still single-flight;
+//! * the `compiles == misses` (and `execs == misses`) identity is
+//!   preserved across evictions;
+//! * eviction counters surface in the pool's merged `Metrics::report()`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use repro::backend::{
+    Backend, BackendRegistry, CompileError, ExecReport, Mapped, MappedStats, Target,
+};
+use repro::bench::spec::{WorkloadCatalog, WorkloadSpec};
+use repro::bench::workloads::Workload;
+use repro::coordinator::{pool, CacheOutcome, CompileCache, ExecCache, ExecKey, Request, WorkloadKey};
+use repro::ir::loopnest::ArrayData;
+
+fn spec(name: &str, n: i64) -> WorkloadSpec {
+    WorkloadCatalog::builtin().spec(name, n).expect("builtin")
+}
+
+/// A gemm spec under a different name — a distinct content address per
+/// name, without needing new kernel constructors.
+fn named_spec(name: &str) -> WorkloadSpec {
+    let mut s = spec("gemm", 4);
+    s.name = name.to_string();
+    s
+}
+
+// ===================== a compile backend that can block ====================
+
+struct Gate {
+    entered: Mutex<bool>,
+    entered_cv: Condvar,
+    release: Mutex<bool>,
+    release_cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Gate {
+        Gate {
+            entered: Mutex::new(false),
+            entered_cv: Condvar::new(),
+            release: Mutex::new(false),
+            release_cv: Condvar::new(),
+        }
+    }
+
+    /// Called by the blocked pipeline: announce entry, then park until
+    /// released.
+    fn enter_and_wait(&self) {
+        *self.entered.lock().unwrap() = true;
+        self.entered_cv.notify_all();
+        let mut go = self.release.lock().unwrap();
+        while !*go {
+            go = self.release_cv.wait(go).unwrap();
+        }
+    }
+
+    fn wait_entered(&self) {
+        let mut e = self.entered.lock().unwrap();
+        while !*e {
+            e = self.entered_cv.wait(e).unwrap();
+        }
+    }
+
+    fn release(&self) {
+        *self.release.lock().unwrap() = true;
+        self.release_cv.notify_all();
+    }
+}
+
+/// Test backend: counts compiles, parks inside `compile` for the workload
+/// named `block`, and deterministically fails everything (failures cache
+/// exactly like artifacts, so nothing else is needed).
+struct BlockingBackend {
+    gate: Arc<Gate>,
+    compiles: Arc<AtomicU64>,
+}
+
+fn partial_stats(wl: &Workload) -> MappedStats {
+    MappedStats {
+        workload: wl.name.clone(),
+        n: wl.n,
+        tool: None,
+        opt: "-".into(),
+        arch: "test".into(),
+        n_loops: wl.n_loops,
+        n_ops: 0,
+        ii: None,
+        unused_pes: None,
+        max_ops_per_pe: None,
+        latency: None,
+        latency_overlapped: None,
+    }
+}
+
+impl Backend for BlockingBackend {
+    fn target(&self) -> Target {
+        Target::Seq
+    }
+
+    fn name(&self) -> &'static str {
+        "blocking-test"
+    }
+
+    fn compile(&self, wl: &Workload) -> Result<Box<dyn Mapped>, CompileError> {
+        self.compiles.fetch_add(1, Ordering::SeqCst);
+        if wl.name == "block" {
+            self.gate.enter_and_wait();
+        }
+        Err(CompileError {
+            stage: "test backend",
+            message: format!("test backend rejects `{}`", wl.name),
+            stats: partial_stats(wl),
+        })
+    }
+}
+
+// ============================== compile cache ==============================
+
+#[test]
+fn compile_lru_bound_respected_under_concurrent_traffic() {
+    // the sequential backend compiles any gemm size instantly
+    let cache = Arc::new(CompileCache::with_capacity(
+        BackendRegistry::with_defaults(),
+        4,
+    ));
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let c = cache.clone();
+        handles.push(thread::spawn(move || {
+            for _round in 0..3 {
+                for n in 4..=11 {
+                    let (r, _, _) = c.get_or_compile(&spec("gemm", n), Target::Seq);
+                    assert!(r.is_ok());
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(cache.len() <= 4, "LRU bound violated: {} resident", cache.len());
+    assert!(cache.stats.evictions() > 0, "8 keys through 4 slots must evict");
+    assert_eq!(
+        cache.stats.compiles(),
+        cache.stats.misses(),
+        "compiles == misses identity must survive evictions"
+    );
+    assert_eq!(
+        cache.stats.hits() + cache.stats.misses() + cache.stats.waits(),
+        4 * 3 * 8,
+        "every request observed exactly one outcome"
+    );
+}
+
+#[test]
+fn in_flight_compiles_survive_eviction_pressure() {
+    let gate = Arc::new(Gate::new());
+    let compiles = Arc::new(AtomicU64::new(0));
+    let mut registry = BackendRegistry::new();
+    registry.register(Arc::new(BlockingBackend {
+        gate: gate.clone(),
+        compiles: compiles.clone(),
+    }));
+    let cache = Arc::new(CompileCache::with_capacity(registry, 1));
+
+    // leader: claims the flight for `block` and parks inside the pipeline
+    let block_spec = named_spec("block");
+    let leader = {
+        let c = cache.clone();
+        let s = block_spec.clone();
+        thread::spawn(move || c.get_or_compile(&s, Target::Seq).1)
+    };
+    gate.wait_entered();
+
+    // eviction pressure around the blocked flight: capacity 1, so every
+    // ready entry displaces the previous one — but never the in-flight slot
+    for name in ["a", "b", "c", "d"] {
+        let (r, o, _) = cache.get_or_compile(&named_spec(name), Target::Seq);
+        assert!(r.is_err(), "test backend fails everything");
+        assert_eq!(o, CacheOutcome::Miss);
+        assert!(
+            cache.len() <= 2,
+            "bound = capacity + in-flight, got {}",
+            cache.len()
+        );
+    }
+
+    // a joiner arriving while the leader still blocks must wait, not lead
+    let joiner = {
+        let c = cache.clone();
+        let s = block_spec.clone();
+        thread::spawn(move || c.get_or_compile(&s, Target::Seq).1)
+    };
+    thread::sleep(Duration::from_millis(50));
+    gate.release();
+    assert_eq!(leader.join().unwrap(), CacheOutcome::Miss);
+    assert_ne!(
+        joiner.join().unwrap(),
+        CacheOutcome::Miss,
+        "the in-flight entry was evicted: the joiner recompiled"
+    );
+    assert_eq!(
+        compiles.load(Ordering::SeqCst),
+        1 + 4,
+        "`block` ran the pipeline exactly once despite eviction pressure"
+    );
+    // the resolved result landed in the cache (and, being newest, survived)
+    let (_, o, _) = cache.get_or_compile(&block_spec, Target::Seq);
+    assert_eq!(o, CacheOutcome::Hit);
+}
+
+#[test]
+fn recompile_after_eviction_is_single_flight() {
+    let cache = Arc::new(CompileCache::with_capacity(
+        BackendRegistry::with_defaults(),
+        2,
+    ));
+    // fill and overflow: gemm n=4 gets evicted
+    for n in 4..=6 {
+        cache.get_or_compile(&spec("gemm", n), Target::Seq);
+    }
+    assert_eq!(cache.stats.evictions(), 1);
+    // 8 threads race on the evicted key: exactly one recompile
+    let compiles_before = cache.stats.compiles();
+    let s = Arc::new(spec("gemm", 4));
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let c = cache.clone();
+        let s = s.clone();
+        handles.push(thread::spawn(move || {
+            let (r, _, _) = c.get_or_compile(&s, Target::Seq);
+            assert!(r.is_ok());
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        cache.stats.compiles(),
+        compiles_before + 1,
+        "re-compile after eviction must still be single-flight"
+    );
+}
+
+// ================================ exec cache ===============================
+
+fn report(latency: u64) -> ExecReport {
+    ExecReport {
+        latency_cycles: latency,
+        batch_cycles: latency,
+        issued_ops: latency,
+        occupancy: 1.0,
+        outputs: ArrayData::new(),
+        detail: "test".into(),
+    }
+}
+
+fn exec_key(fp: u64) -> ExecKey {
+    ExecKey {
+        workload: WorkloadKey {
+            fingerprint: fp,
+            n: 8,
+            target: Target::Seq,
+        },
+        seed: 1,
+        batch: 1,
+    }
+}
+
+#[test]
+fn exec_cache_in_flight_survives_eviction_and_stays_single_flight() {
+    let cache = Arc::new(ExecCache::with_capacity(1));
+    let gate = Arc::new(Gate::new());
+    let runs = Arc::new(AtomicU64::new(0));
+
+    let leader = {
+        let c = cache.clone();
+        let g = gate.clone();
+        let r = runs.clone();
+        thread::spawn(move || {
+            let (res, o) = c.get_or_run(exec_key(0), || {
+                r.fetch_add(1, Ordering::SeqCst);
+                g.enter_and_wait();
+                Ok(report(1))
+            });
+            assert!(res.is_ok());
+            o
+        })
+    };
+    gate.wait_entered();
+
+    // hammer other keys through the 1-slot cache while key 0 is in flight
+    for fp in 1..=4 {
+        let (_, o) = cache.get_or_run(exec_key(fp), || Ok(report(fp)));
+        assert_eq!(o, CacheOutcome::Miss);
+        assert!(cache.len() <= 2, "bound = capacity + in-flight");
+    }
+
+    let joiner = {
+        let c = cache.clone();
+        thread::spawn(move || c.get_or_run(exec_key(0), || panic!("must join, not re-run")).1)
+    };
+    thread::sleep(Duration::from_millis(50));
+    gate.release();
+    assert_eq!(leader.join().unwrap(), CacheOutcome::Miss);
+    assert_ne!(joiner.join().unwrap(), CacheOutcome::Miss);
+    assert_eq!(runs.load(Ordering::SeqCst), 1, "key 0 executed exactly once");
+    let (_, o) = cache.get_or_run(exec_key(0), || panic!("resolved entry is resident"));
+    assert_eq!(o, CacheOutcome::Hit);
+    assert_eq!(
+        cache.stats.execs(),
+        cache.stats.misses(),
+        "execs == misses identity across evictions"
+    );
+    assert!(cache.stats.evictions() > 0);
+}
+
+// ===================== eviction counters reach the pool ====================
+
+#[test]
+fn pool_metrics_surface_eviction_counters() {
+    let cache = Arc::new(CompileCache::with_capacity(
+        BackendRegistry::with_defaults(),
+        2,
+    ));
+    let exec = Arc::new(ExecCache::with_capacity(2));
+    let catalog = Arc::new(WorkloadCatalog::builtin());
+    let (tx, rx, handle) =
+        pool::serve_with_caches(2, cache.clone(), exec.clone(), catalog);
+    // 4 distinct compile keys through 2 slots; 8 distinct exec keys
+    // (seed = request id) through 2 slots
+    for i in 0..8u64 {
+        let n = 4 + (i % 4) as i64;
+        tx.send(Request::named(i, "gemm", n, Target::Seq, 1, false, i))
+            .unwrap();
+    }
+    for _ in 0..8 {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    drop(tx);
+    let m = handle.join();
+    assert!(cache.len() <= 2 && exec.len() <= 2, "bounds hold at drain");
+    assert!(
+        m.exec_evictions > 0,
+        "8 distinct exec keys through 2 slots must evict"
+    );
+    assert_eq!(m.compile_evictions, cache.stats.evictions());
+    let report = m.report();
+    assert!(report.contains("evictions: compile="), "{report}");
+}

@@ -110,6 +110,44 @@ fn dropping_the_sender_drains_in_flight_work() {
 }
 
 #[test]
+fn repeat_requests_replay_from_the_exec_cache() {
+    // the acceptance criterion of the execution-plane PR: a byte-identical
+    // repeat of a `(workload, n, target, seed, batch)` request must hit the
+    // exec cache — no plan lowering, no simulation, no input regeneration —
+    // asserted via the pool's merged metrics counters
+    let (tx, rx, handle) = pool::serve(4);
+    let exec_stats_probe = handle.exec_cache().clone();
+    let req = Request::named(0, "gemm", 8, Target::Tcpa, 2, false, 9);
+    tx.send(req.clone()).unwrap();
+    let first = rx.recv().unwrap();
+    assert!(first.error.is_none(), "{:?}", first.error);
+    assert!(!first.exec_cache_hit, "cold request must execute");
+
+    let repeats: u64 = 6;
+    for i in 1..=repeats {
+        let mut r = req.clone();
+        r.id = i; // a new id is still the *same* execution key
+        tx.send(r).unwrap();
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(resp.exec_cache_hit, "repeat {i} must replay");
+        assert!(resp.cache_hit, "replay implies artifact reuse");
+        assert_eq!(resp.latency_cycles, first.latency_cycles, "byte-identical");
+        assert_eq!(resp.batch_cycles, first.batch_cycles);
+    }
+    drop(tx);
+    let m = handle.join();
+    assert_eq!(m.exec_misses, 1, "exactly one execution ran");
+    assert_eq!(m.exec_hits, repeats, "every repeat replayed");
+    assert_eq!(exec_stats_probe.stats.execs(), 1, "no re-simulation");
+    assert_eq!(
+        m.input_misses, 1,
+        "inputs were generated exactly once process-wide"
+    );
+    assert_eq!(m.cache_misses, 1, "one compile; repeats never re-lower");
+}
+
+#[test]
 fn prewarmed_cache_serves_hits_only() {
     let cache = std::sync::Arc::new(CompileCache::new());
     // warm synchronously through a session sharing the cache

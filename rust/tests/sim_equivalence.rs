@@ -156,6 +156,56 @@ fn check_both(id: BenchId, sizes: &[i64]) {
     }
 }
 
+/// Plan-hoisting invariant: one *shared* `Arc<ExecPlan>` set executed twice
+/// must be bit-identical to two fresh `simulate` calls — cycles, outputs,
+/// issued ops, per-PE completions — proving hoisted plans carry no mutable
+/// state (the property the compile cache relies on when concurrent workers
+/// replay one cached artifact).
+#[test]
+fn shared_exec_plans_replay_bit_identically() {
+    use std::sync::Arc;
+    for (id, n) in [(BenchId::Gemm, 8), (BenchId::Atax, 8), (BenchId::Trisolv, 8)] {
+        let wl = build(id, n);
+        let arch = TcpaArch::paper(4, 4);
+        let cfgs: Vec<_> = wl
+            .pras
+            .iter()
+            .map(|p| compile(p, &arch).expect("compile"))
+            .collect();
+        let plans: Vec<Arc<repro::tcpa::plan::ExecPlan>> = cfgs
+            .iter()
+            .map(|c| Arc::new(c.execution_plan()))
+            .collect();
+        let ins = inputs(id, n, 23);
+        // two executions over the *same* shared plans...
+        let h1 = tcpa_sim::simulate_workload_with_plans(&cfgs, &plans, &arch, &ins)
+            .expect("hoisted 1");
+        let h2 = tcpa_sim::simulate_workload_with_plans(&cfgs, &plans, &arch, &ins)
+            .expect("hoisted 2");
+        // ...and two fresh per-call lowerings
+        let f1 = tcpa_sim::simulate_workload(&cfgs, &arch, &ins).expect("fresh 1");
+        let f2 = tcpa_sim::simulate_workload(&cfgs, &arch, &ins).expect("fresh 2");
+        for run in [&h2, &f1, &f2] {
+            assert_eq!(h1.outputs, run.outputs, "{}: outputs", id.name());
+            assert_eq!(h1.total_latency, run.total_latency, "{}: cycles", id.name());
+            assert_eq!(
+                h1.overlapped_latency,
+                run.overlapped_latency,
+                "{}: overlap",
+                id.name()
+            );
+            assert_eq!(h1.kernels.len(), run.kernels.len());
+            for (a, b) in h1.kernels.iter().zip(&run.kernels) {
+                assert_eq!(a.issued_ops, b.issued_ops, "{}: issued", id.name());
+                assert_eq!(a.per_pe_done, b.per_pe_done, "{}: per-PE", id.name());
+                assert_eq!(a.cycles, b.cycles);
+                assert_eq!(a.first_pe_done, b.first_pe_done);
+                assert_eq!(a.timing_violations, 0);
+            }
+        }
+    }
+}
+
 #[test]
 fn gemm_equivalence_two_sizes() {
     // 12 stays under the §IV-6 FIFO budget on the 4×4 array
