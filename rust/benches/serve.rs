@@ -6,14 +6,16 @@
 //! acceptance criterion (4 workers ≥ 2× the single-worker req/s, each
 //! distinct kernel compiled exactly once across all workers) and writes the
 //! machine-readable trajectory — requests/sec plus p50/p99 request latency
-//! per worker count, and the repeat-phase (100% exec-cache-hit) rate — to
+//! per worker count, the repeat-phase (100% exec-cache-hit) rate, and the
+//! symbolic n-sweep (one TCPA kernel at many distinct sizes: exactly one
+//! compile of any kind per kernel *shape*, one instantiation per size) — to
 //! `BENCH_serve.json` via the shared [`common::JsonReport`].
 
 mod common;
 
 use std::time::{Duration, Instant};
 
-use repro::coordinator::{pool, Metrics, Request};
+use repro::coordinator::{pool, Metrics, Request, Target};
 use repro::util::json::Json;
 
 fn mixed_trace(n_req: usize) -> Vec<Request> {
@@ -77,9 +79,55 @@ fn run_repeat(workers: usize, trace: &[Request]) -> (Duration, Metrics) {
     (wall, m)
 }
 
+/// Counters the symbolic n-sweep snapshots off the shared compile cache.
+struct SweepStats {
+    concrete_compiles: u64,
+    symbolic_compiles: u64,
+    instantiations: u64,
+    symbolic_hits: u64,
+}
+
+/// Symbolic n-sweep phase: one TCPA kernel served at `count` *distinct*
+/// problem sizes. The shape is compiled symbolically exactly once; every
+/// size is answered by instantiation (sizes past the register budget fail —
+/// through the same instantiate path the concrete pipeline's errors take,
+/// so they count identically). Returns the timed wall, the merged metrics
+/// and the compile-cache counter snapshot.
+fn run_sweep(workers: usize, count: usize) -> (Duration, Metrics, SweepStats) {
+    let trace: Vec<Request> = (0..count)
+        .map(|i| Request::named(i as u64, "atax", 4 * (i as i64 + 1), Target::Tcpa, 1, false, 1))
+        .collect();
+    let t0 = Instant::now();
+    let (tx, rx, handle) = pool::serve(workers);
+    for r in &trace {
+        tx.send(r.clone()).expect("pool alive");
+    }
+    let mut symbolic_hit_responses = 0u64;
+    for _ in 0..trace.len() {
+        let r = rx.recv().expect("pool response");
+        if r.symbolic_hit {
+            symbolic_hit_responses += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    drop(tx);
+    let stats = SweepStats {
+        concrete_compiles: handle.cache().stats.compiles(),
+        symbolic_compiles: handle.cache().stats.symbolic_compiles(),
+        instantiations: handle.cache().stats.instantiations(),
+        symbolic_hits: handle.cache().stats.symbolic_hits(),
+    };
+    let m = handle.join();
+    assert_eq!(
+        stats.symbolic_hits, symbolic_hit_responses,
+        "wire-visible symbolic_hit flags match the cache counter"
+    );
+    (wall, m, stats)
+}
+
 fn main() {
     let trace = mixed_trace(if common::smoke() { 24 } else { 96 });
-    let mut report = common::JsonReport::new("serve-throughput-v2");
+    let mut report = common::JsonReport::new("serve-throughput-v3");
 
     let mut walls: Vec<(usize, Duration)> = Vec::new();
     for workers in [1usize, 2, 4] {
@@ -131,6 +179,41 @@ fn main() {
         ("exec_hits", Json::from(rm.exec_hits as usize)),
         ("exec_misses", Json::from(rm.exec_misses as usize)),
         ("input_misses", Json::from(rm.input_misses as usize)),
+    ]));
+
+    // symbolic n-sweep: one TCPA kernel shape across many distinct sizes
+    let sweep_count = if common::smoke() { 8 } else { 64 };
+    let (sweep_wall, sm, ss) = run_sweep(4, sweep_count);
+    let total_compiles = ss.symbolic_compiles + ss.concrete_compiles;
+    assert_eq!(
+        total_compiles,
+        sm.distinct_shapes.len() as u64,
+        "TCPA sweep: one compile (of any kind) per kernel shape"
+    );
+    assert_eq!(sm.distinct_shapes.len(), 1, "one kernel, one shape");
+    assert_eq!(
+        ss.instantiations, sweep_count as u64,
+        "every distinct size is one instantiation"
+    );
+    assert_eq!(ss.symbolic_hits, sweep_count as u64 - 1);
+    println!(
+        "{:<52} {:>10.1} req/s  ({} compile, {} instantiations)",
+        format!("serve: atax n-sweep, {sweep_count} sizes, 4 workers"),
+        rps(sweep_count, sweep_wall),
+        total_compiles,
+        ss.instantiations,
+    );
+    report.record_raw(Json::obj(vec![
+        ("name", Json::from("serve/symbolic-n-sweep")),
+        ("workers", Json::from(4usize)),
+        ("kernel", Json::from("atax")),
+        ("distinct_sizes", Json::from(sweep_count)),
+        ("req_per_sec", Json::Float(rps(sweep_count, sweep_wall))),
+        ("compiles", Json::from(total_compiles as usize)),
+        ("symbolic_compiles", Json::from(ss.symbolic_compiles as usize)),
+        ("instantiations", Json::from(ss.instantiations as usize)),
+        ("symbolic_hits", Json::from(ss.symbolic_hits as usize)),
+        ("distinct_shapes", Json::from(sm.distinct_shapes.len())),
     ]));
 
     let w1 = walls[0].1;

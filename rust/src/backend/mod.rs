@@ -36,6 +36,7 @@ pub use registry::BackendRegistry;
 pub use seq::SeqBackend;
 pub use tcpa::{map_turtle, TcpaBackend, TurtleRow};
 
+use crate::bench::spec::WorkloadSpec;
 use crate::bench::toolchains::Tool;
 use crate::bench::workloads::Workload;
 use crate::ir::loopnest::ArrayData;
@@ -90,7 +91,7 @@ impl Target {
 /// figure sweeps chart. Fields a backend cannot report for a failed compile
 /// are `None`; fields it *can* still report (e.g. the TURTLE flow's
 /// PE-utilization numbers) stay `Some`, matching what the tables print.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MappedStats {
     /// Workload name (catalog name for builtins, client-chosen otherwise).
     pub workload: String,
@@ -201,6 +202,31 @@ pub trait Backend: Send + Sync {
 
     /// Run the map/schedule pipeline for one workload.
     fn compile(&self, wl: &Workload) -> Result<Box<dyn Mapped>, CompileError>;
+
+    /// Compile the size-independent half of the pipeline once per kernel
+    /// *shape*. Returns `None` when the backend has no symbolic path — the
+    /// evaluated CGRA toolchains re-run their operation-centric mapping per
+    /// problem size, and the sequential reference has nothing to hoist — in
+    /// which case callers fall back to [`Backend::compile`] per size. A
+    /// backend must only return `Some` when every later
+    /// [`SymbolicMapped::instantiate`] is bit-identical to what
+    /// [`Backend::compile`] would produce at that size (including failures).
+    fn compile_symbolic(&self, spec: &WorkloadSpec) -> Option<Box<dyn SymbolicMapped>> {
+        let _ = spec;
+        None
+    }
+}
+
+/// The size-independent half of a backend's compile pipeline, built once per
+/// kernel shape (see [`WorkloadSpec::shape_fingerprint`]).
+/// [`SymbolicMapped::instantiate`] evaluates the remaining closed forms for
+/// one concrete problem size — no modulo scheduling, partitioning search, or
+/// plan lowering beyond what the size actually requires — and must agree
+/// bit-for-bit with the per-n [`Backend::compile`] path, errors included, so
+/// the coordinator may serve either interchangeably.
+pub trait SymbolicMapped: Send + Sync + std::fmt::Debug {
+    /// Evaluate the closed forms at problem size `n`.
+    fn instantiate(&self, n: i64) -> Result<Box<dyn Mapped>, CompileError>;
 }
 
 /// Compile and return the stats, whether or not the compile succeeded —

@@ -12,15 +12,21 @@
 use std::sync::Arc;
 
 use crate::ir::loopnest::ArrayData;
+use crate::ir::pra::Pra;
 use crate::tcpa::arch::TcpaArch;
-use crate::tcpa::config::{compile, TcpaConfig};
+use crate::tcpa::config::{compile, compile_with, TcpaConfig, TcpaError};
 use crate::tcpa::plan::ExecPlan;
+use crate::tcpa::schedule::{schedule_symbolic, SymbolicSchedule};
 use crate::tcpa::sim as tcpa_sim;
+use crate::util::json::Json;
 
+use crate::bench::spec::WorkloadSpec;
 use crate::bench::toolchains::Tool;
 use crate::bench::workloads::Workload;
 
-use super::{occupancy, Backend, CompileError, ExecReport, Mapped, MappedStats, Target};
+use super::{
+    occupancy, Backend, CompileError, ExecReport, Mapped, MappedStats, SymbolicMapped, Target,
+};
 
 /// TURTLE result over a workload (one config per PRA kernel). Immutable
 /// once built and shared across coordinator workers behind an `Arc`.
@@ -42,6 +48,16 @@ pub struct TurtleRow {
 
 /// Compile a workload with the TURTLE-like flow.
 pub fn map_turtle(wl: &Workload, arch: &TcpaArch) -> TurtleRow {
+    map_turtle_via(wl, arch, |_, pra| compile(pra, arch))
+}
+
+/// Row-building shared by the per-n compile path and the symbolic
+/// instantiation path: both accumulate the same Table-II statistics from the
+/// same per-kernel configurations, only the `compile_one` step differs.
+fn map_turtle_via<F>(wl: &Workload, arch: &TcpaArch, mut compile_one: F) -> TurtleRow
+where
+    F: FnMut(usize, &Pra) -> Result<TcpaConfig, TcpaError>,
+{
     let mut n_ops = 0;
     let mut ii = 0;
     let mut unused = 0;
@@ -50,9 +66,20 @@ pub fn map_turtle(wl: &Workload, arch: &TcpaArch) -> TurtleRow {
     let mut first = 0u64;
     let mut configs = Vec::new();
     let mut error = None;
-    for pra in &wl.pras {
-        match compile(pra, arch) {
+    for (i, pra) in wl.pras.iter().enumerate() {
+        match compile_one(i, pra) {
             Ok(cfg) => {
+                // λᵏ ≥ 0 guarantees the first PE finishes no later than the
+                // last for every valid config; enforce it here rather than
+                // clamping the sums below, which would silently mask an
+                // accounting bug in one kernel with slack from another
+                debug_assert!(
+                    cfg.first_pe_latency() <= cfg.last_pe_latency(),
+                    "kernel {}: first-PE latency {} exceeds last-PE latency {}",
+                    cfg.pra.name,
+                    cfg.first_pe_latency(),
+                    cfg.last_pe_latency(),
+                );
                 n_ops += cfg.n_ops();
                 ii = ii.max(cfg.sched.ii);
                 unused = unused.max(cfg.unused_pes(arch));
@@ -74,7 +101,7 @@ pub fn map_turtle(wl: &Workload, arch: &TcpaArch) -> TurtleRow {
         unused_pes: unused,
         max_ops_per_pe: maxops,
         latency_last: last,
-        latency_first: first.min(last),
+        latency_first: first,
         configs,
         error,
     }
@@ -133,35 +160,119 @@ impl Backend for TcpaBackend {
     fn compile(&self, wl: &Workload) -> Result<Box<dyn Mapped>, CompileError> {
         let row = map_turtle(wl, &self.arch);
         let stats = stats_of(&row, wl, &self.arch);
-        match row.error.clone() {
-            Some(message) => Err(CompileError {
-                stage: "TCPA compile",
-                message,
+        mapped_of(row, stats, &self.arch)
+    }
+
+    fn compile_symbolic(&self, spec: &WorkloadSpec) -> Option<Box<dyn SymbolicMapped>> {
+        // eligibility: the spec's size-dependence must be provably confined
+        // to the designated shape positions; otherwise the shape encoding
+        // (and hence any cross-size reuse) would be unsound
+        let shape = spec.shape_json()?;
+        let wl = spec.workload();
+        // the once-per-shape half of the pipeline: record every feasible
+        // modulo placement per kernel (structure-only, size-independent)
+        let scheds: Vec<SymbolicSchedule> = wl
+            .pras
+            .iter()
+            .map(|pra| schedule_symbolic(pra, &self.arch))
+            .collect();
+        Some(Box::new(TcpaSymbolic {
+            shape,
+            arch: self.arch.clone(),
+            scheds,
+        }))
+    }
+}
+
+/// Wrap a compiled row into the coordinator-facing artifact (or the failed
+/// row into the [`CompileError`] the tables still print). Shared verbatim by
+/// the per-n compile path and the symbolic instantiation path so both
+/// produce identical artifacts.
+fn mapped_of(
+    row: TurtleRow,
+    stats: MappedStats,
+    arch: &TcpaArch,
+) -> Result<Box<dyn Mapped>, CompileError> {
+    match row.error.clone() {
+        Some(message) => Err(CompileError {
+            stage: "TCPA compile",
+            message,
+            stats,
+        }),
+        None => {
+            let n_pes = arch.n_pes();
+            // plan hoisting: lower each configuration to its immutable
+            // execution plan (and the inter-kernel read-sets) *once*,
+            // at compile time — execute() replays the shared plans and
+            // never re-lowers (the TCPA discipline of paying at compile
+            // time, applied to the simulator too)
+            let plans: Vec<Arc<ExecPlan>> = row
+                .configs
+                .iter()
+                .map(|cfg| Arc::new(cfg.execution_plan()))
+                .collect();
+            let read_after = tcpa_sim::workload_read_sets(&row.configs);
+            Ok(Box::new(TcpaMapped {
+                row,
+                plans,
+                read_after,
+                arch: arch.clone(),
                 stats,
-            }),
-            None => {
-                let n_pes = self.arch.n_pes();
-                // plan hoisting: lower each configuration to its immutable
-                // execution plan (and the inter-kernel read-sets) *once*,
-                // at compile time — execute() replays the shared plans and
-                // never re-lowers (the TCPA discipline of paying at compile
-                // time, applied to the simulator too)
-                let plans: Vec<Arc<ExecPlan>> = row
-                    .configs
-                    .iter()
-                    .map(|cfg| Arc::new(cfg.execution_plan()))
-                    .collect();
-                let read_after = tcpa_sim::workload_read_sets(&row.configs);
-                Ok(Box::new(TcpaMapped {
-                    row,
-                    plans,
-                    read_after,
-                    arch: self.arch.clone(),
-                    stats,
-                    n_pes,
-                }))
-            }
+                n_pes,
+            }))
         }
+    }
+}
+
+/// The size-independent half of a TCPA compile, built once per kernel
+/// shape: the tokenized shape JSON (every concrete size replaced by a
+/// symbolic offset from `n`) plus the per-kernel feasible placements.
+/// [`SymbolicMapped::instantiate`] decodes the shape at a concrete `n` and
+/// replays the placements through [`compile_with`] — partitioning closed
+/// forms, λ* evaluation, register binding, and codegen run per size, but the
+/// modulo-scheduling search never does. The result is bit-identical to the
+/// per-n [`TcpaBackend::compile`] path (failures included) because both
+/// funnel through [`map_turtle_via`] and [`mapped_of`].
+#[derive(Debug)]
+pub struct TcpaSymbolic {
+    shape: Json,
+    arch: TcpaArch,
+    scheds: Vec<SymbolicSchedule>,
+}
+
+impl SymbolicMapped for TcpaSymbolic {
+    fn instantiate(&self, n: i64) -> Result<Box<dyn Mapped>, CompileError> {
+        let spec = WorkloadSpec::from_shape(&self.shape, n).map_err(|message| CompileError {
+            stage: "TCPA compile",
+            message,
+            stats: MappedStats {
+                workload: self
+                    .shape
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("?")
+                    .to_string(),
+                n,
+                tool: Some(Tool::Turtle),
+                opt: "-".into(),
+                arch: self.arch.name.clone(),
+                n_loops: 0,
+                n_ops: 0,
+                ii: None,
+                unused_pes: None,
+                max_ops_per_pe: None,
+                latency: None,
+                latency_overlapped: None,
+            },
+        })?;
+        let wl = spec.workload();
+        // the shape fixes the kernel structure, so the decoded workload has
+        // exactly one PRA per recorded symbolic schedule, in order
+        let row = map_turtle_via(&wl, &self.arch, |i, pra| {
+            compile_with(pra, &self.arch, &self.scheds[i])
+        });
+        let stats = stats_of(&row, &wl, &self.arch);
+        mapped_of(row, stats, &self.arch)
     }
 }
 
@@ -267,6 +378,77 @@ mod tests {
         assert_eq!(a.batch_cycles, b.batch_cycles);
         assert_eq!(a.issued_ops, b.issued_ops);
         assert_eq!(a.outputs, b.outputs);
+    }
+
+    #[test]
+    fn per_config_latency_ordering_holds_without_the_sum_clamp() {
+        // regression for the old `first.min(last)` clamp: the invariant is
+        // per config (λᵏ ≥ 0 ⇒ first ≤ last), so the summed row must obey
+        // it without any masking at the sum level
+        let arch = TcpaArch::paper(4, 4);
+        for id in BenchId::ALL {
+            let wl = build(id, id.paper_size());
+            let row = map_turtle(&wl, &arch);
+            if row.error.is_some() {
+                continue;
+            }
+            for cfg in &row.configs {
+                assert!(
+                    cfg.first_pe_latency() <= cfg.last_pe_latency(),
+                    "{}/{}: first {} > last {}",
+                    wl.name,
+                    cfg.pra.name,
+                    cfg.first_pe_latency(),
+                    cfg.last_pe_latency(),
+                );
+            }
+            assert_eq!(
+                row.latency_first,
+                row.configs.iter().map(|c| c.first_pe_latency()).sum::<u64>(),
+                "{}: latency_first must be the unclamped per-config sum",
+                wl.name,
+            );
+            assert!(row.latency_first <= row.latency_last, "{}", wl.name);
+        }
+    }
+
+    #[test]
+    fn symbolic_instantiation_matches_the_per_n_compile() {
+        use crate::bench::workloads::builtin_spec;
+        let b = TcpaBackend::paper(4, 4);
+        let spec = builtin_spec(BenchId::Gemm, 8);
+        let sym = b.compile_symbolic(&spec).expect("gemm is shape-eligible");
+        // n=16 is never compiled concretely before instantiation
+        for n in [8, 16, 20] {
+            let inst = sym.instantiate(n).expect("instantiate");
+            let fresh = b.compile(&build(BenchId::Gemm, n)).expect("compile");
+            assert_eq!(inst.stats(), fresh.stats(), "n={n}");
+            let ins = inputs(BenchId::Gemm, n, 7);
+            let a = inst.execute(&ins, 3).expect("sim");
+            let c = fresh.execute(&ins, 3).expect("sim");
+            assert_eq!(a.latency_cycles, c.latency_cycles, "n={n}");
+            assert_eq!(a.batch_cycles, c.batch_cycles, "n={n}");
+            assert_eq!(a.issued_ops, c.issued_ops, "n={n}");
+            assert_eq!(a.outputs, c.outputs, "n={n}");
+        }
+    }
+
+    #[test]
+    fn symbolic_instantiation_reproduces_compile_failures() {
+        let b = TcpaBackend::paper(4, 4);
+        let sym = b
+            .compile_symbolic(&crate::bench::workloads::builtin_spec(BenchId::Gemm, 8))
+            .expect("eligible");
+        // n=32 exceeds the FIFO budget; n=10 does not divide the 4×4 grid
+        for n in [32, 10] {
+            let inst = sym.instantiate(n).expect_err("must fail");
+            let fresh = b.compile(&build(BenchId::Gemm, n)).expect_err("must fail");
+            assert_eq!(inst.message, fresh.message, "n={n}");
+            assert_eq!(inst.stage, fresh.stage, "n={n}");
+            assert_eq!(inst.stats, fresh.stats, "n={n}");
+        }
+        // non-positive sizes are rejected before any decode
+        assert!(sym.instantiate(0).is_err());
     }
 
     #[test]

@@ -155,6 +155,78 @@ impl WorkloadSpec {
         fnv1a64(self.to_json().render().as_bytes())
     }
 
+    /// Size-generic shape encoding: the spec's canonical JSON with every
+    /// *size-bearing* integer replaced by a symbolic placeholder, so that
+    /// the same kernel at two problem sizes renders identically. The
+    /// designated size-bearing positions are exactly where the builders put
+    /// `n`: the top-level size, loop-dim extent constants, declared array
+    /// shapes, PRA space extents, condition-constraint right-hand sides and
+    /// input shapes. A value `v` at such a position is encoded as the token
+    /// string `"n{v-n:+}"` when `v ≥ n − 1` (the builtins use both `n` and
+    /// `n − 1`) and kept literal otherwise — literal constants that happen
+    /// to reach `n − 1` at tiny sizes merely split the shape, they never
+    /// alias it, because the delta a fixed constant produces differs per
+    /// `n`.
+    ///
+    /// Returns `None` — the caller must fall back to the concrete
+    /// [`WorkloadSpec::fingerprint`] — when the spec does not validate, or
+    /// when any *string* in the concrete JSON itself looks like a size
+    /// token (a kernel named `"n+1"` must not decode as arithmetic).
+    pub fn shape_json(&self) -> Option<Json> {
+        if self.validate().is_err() {
+            return None;
+        }
+        let mut j = self.to_json();
+        if has_token_like_string(&j) {
+            return None;
+        }
+        let n = self.n;
+        if let Json::Object(m) = &mut j {
+            m.insert("n".into(), size_token(n, n));
+            if let Some(Json::Array(stages)) = m.get_mut("stages") {
+                for s in stages {
+                    tokenize_nest(s, n);
+                }
+            }
+            if let Some(Json::Array(pras)) = m.get_mut("pras") {
+                for p in pras {
+                    tokenize_pra(p, n);
+                }
+            }
+            if let Some(Json::Array(inputs)) = m.get_mut("inputs") {
+                for i in inputs {
+                    tokenize_field_ivec(i, "shape", n);
+                }
+            }
+        }
+        Some(j)
+    }
+
+    /// Content address of the spec's *shape*: FNV-1a over the symbolic
+    /// [`WorkloadSpec::shape_json`] rendering, so the same kernel at any
+    /// problem size maps to one shape key. Falls back to the concrete
+    /// per-`n` [`WorkloadSpec::fingerprint`] when the spec is not
+    /// shape-encodable (every size then simply gets its own "shape" — safe
+    /// degradation to the per-`n` compile path).
+    pub fn shape_fingerprint(&self) -> u64 {
+        match self.shape_json() {
+            Some(s) => fnv1a64(s.render().as_bytes()),
+            None => self.fingerprint(),
+        }
+    }
+
+    /// Instantiate a shape (from [`WorkloadSpec::shape_json`]) at problem
+    /// size `n`: substitute every size token, then decode + validate. For an
+    /// eligible spec this is exact: `from_shape(spec.shape_json(), spec.n)`
+    /// reproduces `spec` bit-for-bit, and two specs sharing a shape decode
+    /// to each other's concrete JSON at each other's sizes.
+    pub fn from_shape(shape: &Json, n: i64) -> Result<WorkloadSpec, String> {
+        if n <= 0 {
+            return Err(format!("workload size must be positive, got {n}"));
+        }
+        WorkloadSpec::from_json(&concretize(shape, n)?)
+    }
+
     /// Structural validation: run before compiling anything a client sent.
     pub fn validate(&self) -> Result<(), String> {
         if self.name.is_empty() || self.name.chars().any(|c| c.is_whitespace()) {
@@ -724,6 +796,150 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
         h = h.wrapping_mul(0x100000001b3);
     }
     h
+}
+
+// ============================ shape encoding ================================
+//
+// Helpers behind [`WorkloadSpec::shape_json`]: token rendering/parsing and
+// the structural walk that knows which JSON positions are size-bearing.
+
+/// Encode one size-bearing value: a token string for `v ≥ n − 1`, the
+/// literal integer otherwise (see [`WorkloadSpec::shape_json`]).
+fn size_token(v: i64, n: i64) -> Json {
+    if v >= n - 1 {
+        Json::Str(format!("n{:+}", v - n))
+    } else {
+        Json::Int(v)
+    }
+}
+
+/// Parse a size token `n{delta:+}` back to its delta (`"n+0"` → 0,
+/// `"n-1"` → −1). Returns `None` for anything that is not exactly a sign
+/// and a digit run after the `n`.
+fn parse_size_token(s: &str) -> Option<i64> {
+    let rest = s.strip_prefix('n')?;
+    let digits = rest.strip_prefix('+').or_else(|| rest.strip_prefix('-'))?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    rest.parse::<i64>().ok()
+}
+
+/// Does any string in the document parse as a size token? (Eligibility
+/// guard: token substitution must never fire on a client-chosen name.)
+fn has_token_like_string(j: &Json) -> bool {
+    match j {
+        Json::Str(s) => parse_size_token(s).is_some(),
+        Json::Array(a) => a.iter().any(has_token_like_string),
+        // object keys are schema-fixed field names, never client strings
+        Json::Object(m) => m.values().any(has_token_like_string),
+        _ => false,
+    }
+}
+
+/// Tokenize every integer of an integer-array field in place.
+fn tokenize_field_ivec(j: &mut Json, field: &str, n: i64) {
+    if let Json::Object(m) = j {
+        if let Some(Json::Array(a)) = m.get_mut(field) {
+            for v in a {
+                if let Json::Int(x) = v {
+                    *v = size_token(*x, n);
+                }
+            }
+        }
+    }
+}
+
+/// Tokenize one integer field in place.
+fn tokenize_field_int(j: &mut Json, field: &str, n: i64) {
+    if let Json::Object(m) = j {
+        if let Some(v) = m.get_mut(field) {
+            if let Json::Int(x) = v {
+                *v = size_token(*x, n);
+            }
+        }
+    }
+}
+
+/// Size-bearing positions of one loop-nest stage: dim extent constants
+/// (extents are affine in outer dims — `n` lives in the `c` term) and
+/// declared array shapes.
+fn tokenize_nest(j: &mut Json, n: i64) {
+    if let Json::Object(m) = j {
+        if let Some(Json::Array(dims)) = m.get_mut("dims") {
+            for d in dims {
+                if let Json::Object(dm) = d {
+                    if let Some(extent) = dm.get_mut("extent") {
+                        tokenize_field_int(extent, "c", n);
+                    }
+                }
+            }
+        }
+        if let Some(Json::Array(arrays)) = m.get_mut("arrays") {
+            for a in arrays {
+                tokenize_field_ivec(a, "shape", n);
+            }
+        }
+    }
+}
+
+/// Size-bearing positions of one PRA: space extents, declared array shapes
+/// and condition-constraint right-hand sides (the `i2 = n − 1` output
+/// guards).
+fn tokenize_pra(j: &mut Json, n: i64) {
+    if let Json::Object(m) = j {
+        if let Some(space) = m.get_mut("space") {
+            if let Json::Array(a) = space {
+                for v in a.iter_mut() {
+                    if let Json::Int(x) = v {
+                        *v = size_token(*x, n);
+                    }
+                }
+            }
+        }
+        if let Some(Json::Array(arrays)) = m.get_mut("arrays") {
+            for a in arrays {
+                tokenize_field_ivec(a, "shape", n);
+            }
+        }
+        if let Some(Json::Array(eqs)) = m.get_mut("eqs") {
+            for e in eqs {
+                if let Json::Object(em) = e {
+                    if let Some(Json::Array(cond)) = em.get_mut("cond") {
+                        for k in cond {
+                            tokenize_field_int(k, "rhs", n);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Substitute every size token in a shape document at size `n`, leaving all
+/// other values untouched (the exact inverse of the tokenization walk,
+/// given the no-token-like-strings eligibility guard).
+fn concretize(j: &Json, n: i64) -> Result<Json, String> {
+    match j {
+        Json::Str(s) => match parse_size_token(s) {
+            Some(delta) => n
+                .checked_add(delta)
+                .map(Json::Int)
+                .ok_or_else(|| format!("size token `{s}` overflows at n = {n}")),
+            None => Ok(j.clone()),
+        },
+        Json::Array(a) => a
+            .iter()
+            .map(|x| concretize(x, n))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Json::Array),
+        Json::Object(m) => m
+            .iter()
+            .map(|(k, v)| concretize(v, n).map(|v| (k.clone(), v)))
+            .collect::<Result<BTreeMap<_, _>, _>>()
+            .map(Json::Object),
+        other => Ok(other.clone()),
+    }
 }
 
 // ============================ IR serde ======================================
@@ -1438,6 +1654,87 @@ mod tests {
             assert!(WorkloadSpec::from_json(&Json::Object(m)).is_err());
         } else {
             unreachable!()
+        }
+    }
+
+    #[test]
+    fn shape_fingerprints_are_size_invariant_and_kernel_distinct() {
+        let cat = WorkloadCatalog::builtin();
+        let mut shapes = std::collections::HashSet::new();
+        for id in BenchId::ALL {
+            let s8 = cat.spec(id.name(), 8).unwrap();
+            let shape = s8.shape_fingerprint();
+            for n in [12, 16, 20] {
+                let sn = cat.spec(id.name(), n).unwrap();
+                assert_eq!(
+                    sn.shape_fingerprint(),
+                    shape,
+                    "{} shape must not depend on n",
+                    id.name()
+                );
+                assert_ne!(
+                    sn.fingerprint(),
+                    s8.fingerprint(),
+                    "{} concrete fingerprint stays size-sensitive",
+                    id.name()
+                );
+            }
+            assert!(shapes.insert(shape), "shape collision at {}", id.name());
+        }
+    }
+
+    #[test]
+    fn from_shape_reproduces_the_constructor_at_every_size() {
+        let cat = WorkloadCatalog::builtin();
+        for id in BenchId::ALL {
+            let shape = cat.spec(id.name(), 8).unwrap().shape_json().unwrap();
+            for n in [8, 12, 16, 20] {
+                let want = cat.spec(id.name(), n).unwrap();
+                let got = WorkloadSpec::from_shape(&shape, n)
+                    .unwrap_or_else(|e| panic!("{} at n={n}: {e}", id.name()));
+                assert_eq!(got, want, "{} at n={n}", id.name());
+                assert_eq!(got.fingerprint(), want.fingerprint());
+            }
+        }
+        assert!(WorkloadSpec::from_shape(
+            &cat.spec("gemm", 8).unwrap().shape_json().unwrap(),
+            0
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn token_like_names_fall_back_to_the_concrete_fingerprint() {
+        let mut spec = WorkloadCatalog::builtin().spec("gemm", 8).unwrap();
+        spec.name = "n+1".into();
+        assert!(spec.shape_json().is_none(), "token-like name is ineligible");
+        assert_eq!(spec.shape_fingerprint(), spec.fingerprint());
+        // invalid specs are ineligible too
+        let mut broken = WorkloadCatalog::builtin().spec("gemm", 8).unwrap();
+        broken.inputs[0].gen = InputGen::Uniform { lo: 5, hi: 5 };
+        assert_eq!(broken.shape_fingerprint(), broken.fingerprint());
+    }
+
+    #[test]
+    fn tiny_sizes_split_the_shape_but_stay_self_consistent() {
+        // trisolv's condition constants reach n − 1 at n = 3, so its shape
+        // splits from the large-n family — but each shape still decodes
+        // exactly back to the spec it came from.
+        let cat = WorkloadCatalog::builtin();
+        let s3 = cat.spec("trisolv", 3).unwrap();
+        let s8 = cat.spec("trisolv", 8).unwrap();
+        assert_ne!(s3.shape_fingerprint(), s8.shape_fingerprint());
+        let back = WorkloadSpec::from_shape(&s3.shape_json().unwrap(), 3).unwrap();
+        assert_eq!(back, s3);
+    }
+
+    #[test]
+    fn size_tokens_parse_strictly() {
+        assert_eq!(parse_size_token("n+0"), Some(0));
+        assert_eq!(parse_size_token("n-1"), Some(-1));
+        assert_eq!(parse_size_token("n+92"), Some(92));
+        for bad in ["n", "n1", "n+", "n-", "n+1x", "m+1", "n+ 1", ""] {
+            assert_eq!(parse_size_token(bad), None, "{bad:?}");
         }
     }
 

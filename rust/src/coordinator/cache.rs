@@ -41,11 +41,16 @@ use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
-use crate::backend::{BackendRegistry, Mapped, Target};
+use crate::backend::{BackendRegistry, Mapped, SymbolicMapped, Target};
 use crate::bench::spec::WorkloadSpec;
 
 /// Default bound on resident compiled artifacts per process.
 pub const DEFAULT_COMPILE_CAPACITY: usize = 512;
+
+/// Default bound on resident *symbolic* (per-shape) artifacts. The shape
+/// population is O(distinct kernels), not O(distinct sizes), so a small
+/// bound suffices.
+pub const DEFAULT_SYMBOLIC_CAPACITY: usize = 128;
 
 /// Content-addressed cache key: one compiled artifact per (spec fingerprint,
 /// size, target). The size rides along for observability — it is already
@@ -80,6 +85,29 @@ impl std::fmt::Display for WorkloadKey {
             self.target.name()
         )
     }
+}
+
+/// Key of the symbolic (per-shape) cache level: one size-independent
+/// artifact per ([`WorkloadSpec::shape_fingerprint`], target). Every problem
+/// size of the same kernel resolves to the same shape key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeKey {
+    /// [`WorkloadSpec::shape_fingerprint`] — FNV-1a over the spec's
+    /// canonical JSON with sizes replaced by symbolic offsets from `n`.
+    pub shape: u64,
+    pub target: Target,
+}
+
+/// How a request's compile was served with respect to the symbolic level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SymbolicUse {
+    /// The per-n path ran (backend declined a symbolic compile, the spec
+    /// was ineligible, or the per-n artifact was already cached).
+    None,
+    /// The artifact came from instantiating a symbolic compile; `reused`
+    /// is true when the shape artifact was already resident (or in flight)
+    /// rather than built by this request.
+    Instantiated { reused: bool },
 }
 
 /// What a single-flight cache lookup observed for a request.
@@ -286,11 +314,19 @@ impl<K: Eq + Hash + Clone, V: Clone> FlightMap<K, V> {
 // ============================ compile cache =================================
 
 type CacheResult = Result<Arc<dyn Mapped>, String>;
+type SymbolicResult = Option<Arc<dyn SymbolicMapped>>;
 
 /// The process-wide compiled-artifact cache: a [`FlightMap`] over
-/// [`WorkloadKey`]s plus the backend registry that runs cold compiles.
+/// [`WorkloadKey`]s plus the backend registry that runs cold compiles, with
+/// a second, shape-keyed [`FlightMap`] of symbolic artifacts in front of it.
+/// A per-n miss probes the symbolic level first: if the backend compiled the
+/// kernel's *shape* before (at any size), the artifact is instantiated in
+/// closed form instead of re-running the pipeline, and the result feeds the
+/// per-n LRU as usual. Backends without a symbolic path cache a `None` per
+/// shape, so they pay the probe exactly once per kernel.
 pub struct CompileCache {
     slots: FlightMap<WorkloadKey, CacheResult>,
+    shapes: FlightMap<ShapeKey, SymbolicResult>,
     registry: BackendRegistry,
     pub stats: CacheStats,
 }
@@ -308,6 +344,16 @@ pub struct CacheStats {
     pub compiles: AtomicU64,
     /// Ready entries dropped by the LRU bound.
     pub evictions: AtomicU64,
+    /// Per-n misses served by instantiating an *already resident* symbolic
+    /// artifact (no pipeline of any kind ran for them).
+    pub symbolic_hits: AtomicU64,
+    /// Symbolic (per-shape) pipeline executions that produced an artifact.
+    pub symbolic_compiles: AtomicU64,
+    /// Closed-form instantiations of symbolic artifacts. Together:
+    /// `misses == compiles + instantiations` on the shaped path.
+    pub instantiations: AtomicU64,
+    /// Ready symbolic entries dropped by the shape-level LRU bound.
+    pub symbolic_evictions: AtomicU64,
 }
 
 impl CacheStats {
@@ -330,6 +376,22 @@ impl CacheStats {
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
     }
+
+    pub fn symbolic_hits(&self) -> u64 {
+        self.symbolic_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn symbolic_compiles(&self) -> u64 {
+        self.symbolic_compiles.load(Ordering::Relaxed)
+    }
+
+    pub fn instantiations(&self) -> u64 {
+        self.instantiations.load(Ordering::Relaxed)
+    }
+
+    pub fn symbolic_evictions(&self) -> u64 {
+        self.symbolic_evictions.load(Ordering::Relaxed)
+    }
 }
 
 impl CompileCache {
@@ -349,6 +411,7 @@ impl CompileCache {
     pub fn with_capacity(registry: BackendRegistry, capacity: usize) -> CompileCache {
         CompileCache {
             slots: FlightMap::new(capacity),
+            shapes: FlightMap::new(DEFAULT_SYMBOLIC_CAPACITY),
             registry,
             stats: CacheStats::default(),
         }
@@ -411,6 +474,83 @@ impl CompileCache {
             }
         };
         (result, outcome)
+    }
+
+    /// The two-level lookup: like [`CompileCache::get_or_compile_with_key`]
+    /// but a per-n miss probes the symbolic (shape-keyed) level before
+    /// falling back to the concrete pipeline. `shape` is the spec's
+    /// [`WorkloadSpec::shape_fingerprint`] (callers memoize it alongside the
+    /// concrete fingerprint). Returns additionally how the symbolic level
+    /// served this request.
+    pub fn get_or_compile_shaped(
+        &self,
+        key: WorkloadKey,
+        shape: u64,
+        spec: &WorkloadSpec,
+    ) -> (CacheResult, CacheOutcome, SymbolicUse) {
+        let target = key.target;
+        let used = std::cell::Cell::new(SymbolicUse::None);
+        let (result, outcome) = self.slots.get_or_run(
+            key,
+            || {
+                // leader for this (kernel, n): consult the shape level first
+                let (sym, probe) = self.shapes.get_or_run(
+                    ShapeKey { shape, target },
+                    || self.compile_shape(spec, target),
+                    // a panicking symbolic compile caches as "no symbolic
+                    // path"; the concrete fallback below reproduces (and
+                    // per-n-caches) whatever the pipeline does
+                    |_| None,
+                    &self.stats.symbolic_evictions,
+                );
+                match sym {
+                    Some(artifact) => {
+                        let reused = probe != CacheOutcome::Miss;
+                        self.stats.instantiations.fetch_add(1, Ordering::Relaxed);
+                        if reused {
+                            self.stats.symbolic_hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                        used.set(SymbolicUse::Instantiated { reused });
+                        artifact
+                            .instantiate(key.n)
+                            .map(Arc::from)
+                            .map_err(|e| e.message)
+                    }
+                    None => compile_kernel(&self.registry, spec, target),
+                }
+            },
+            |msg| Err(format!("compile pipeline panicked: {msg}")),
+            &self.stats.evictions,
+        );
+        match outcome {
+            CacheOutcome::Hit => self.stats.hits.fetch_add(1, Ordering::Relaxed),
+            CacheOutcome::Waited => self.stats.waits.fetch_add(1, Ordering::Relaxed),
+            CacheOutcome::Miss => {
+                // `compiles` keeps meaning *concrete* pipeline executions:
+                // on the shaped path `misses == compiles + instantiations`
+                if used.get() == SymbolicUse::None {
+                    self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+                }
+                self.stats.misses.fetch_add(1, Ordering::Relaxed)
+            }
+        };
+        (result, outcome, used.get())
+    }
+
+    /// Run the once-per-shape half of a backend's pipeline (`None` when the
+    /// backend has no symbolic path or the spec is shape-ineligible).
+    fn compile_shape(&self, spec: &WorkloadSpec, target: Target) -> SymbolicResult {
+        let sym = self
+            .registry
+            .get(target)
+            .and_then(|b| b.compile_symbolic(spec));
+        match sym {
+            Some(s) => {
+                self.stats.symbolic_compiles.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::from(s))
+            }
+            None => None,
+        }
     }
 }
 
@@ -553,6 +693,82 @@ mod tests {
         assert!(r.unwrap_err().contains("no backend registered"));
         let (_, o2, _) = cache.get_or_compile(&s, Target::Seq);
         assert_eq!(o2, CacheOutcome::Hit, "lookup failures cache like compiles");
+    }
+
+    #[test]
+    fn size_sweep_compiles_the_shape_once_and_instantiates_per_n() {
+        let cache = CompileCache::new();
+        let sizes = [4, 8, 12, 16];
+        for (i, &n) in sizes.iter().enumerate() {
+            let s = spec("atax", n);
+            let key = WorkloadKey::of(&s, Target::Tcpa);
+            let (r, o, u) = cache.get_or_compile_shaped(key, s.shape_fingerprint(), &s);
+            assert!(r.is_ok(), "n={n}: {:?}", r.err());
+            assert_eq!(o, CacheOutcome::Miss, "each n is a fresh per-n key");
+            assert_eq!(
+                u,
+                SymbolicUse::Instantiated { reused: i > 0 },
+                "n={n}"
+            );
+        }
+        assert_eq!(cache.stats.symbolic_compiles(), 1, "one shape, one compile");
+        assert_eq!(cache.stats.instantiations(), sizes.len() as u64);
+        assert_eq!(cache.stats.symbolic_hits(), sizes.len() as u64 - 1);
+        assert_eq!(cache.stats.compiles(), 0, "no concrete pipeline ran");
+        assert_eq!(
+            cache.stats.misses(),
+            cache.stats.compiles() + cache.stats.instantiations()
+        );
+        // a repeat at a seen size is a plain per-n LRU hit
+        let s = spec("atax", 8);
+        let (_, o, u) =
+            cache.get_or_compile_shaped(WorkloadKey::of(&s, Target::Tcpa), s.shape_fingerprint(), &s);
+        assert_eq!(o, CacheOutcome::Hit);
+        assert_eq!(u, SymbolicUse::None);
+        assert_eq!(cache.stats.instantiations(), sizes.len() as u64);
+    }
+
+    #[test]
+    fn backends_without_a_symbolic_path_fall_back_per_n() {
+        let cache = CompileCache::new();
+        for n in [4, 8] {
+            let s = spec("gemm", n);
+            let key = WorkloadKey::of(&s, Target::Cgra);
+            let (r, o, u) = cache.get_or_compile_shaped(key, s.shape_fingerprint(), &s);
+            assert!(r.is_ok());
+            assert_eq!(o, CacheOutcome::Miss);
+            assert_eq!(u, SymbolicUse::None, "CGRA keeps the per-n path");
+        }
+        assert_eq!(cache.stats.symbolic_compiles(), 0);
+        assert_eq!(cache.stats.instantiations(), 0);
+        assert_eq!(cache.stats.compiles(), 2);
+    }
+
+    #[test]
+    fn symbolic_instantiation_failures_cache_like_concrete_failures() {
+        let cache = CompileCache::new();
+        // compile the shape at a feasible size first…
+        let ok = spec("gemm", 8);
+        let (r, _, u) =
+            cache.get_or_compile_shaped(WorkloadKey::of(&ok, Target::Tcpa), ok.shape_fingerprint(), &ok);
+        assert!(r.is_ok());
+        assert_eq!(u, SymbolicUse::Instantiated { reused: false });
+        // …then instantiate at n=32, which exceeds the FIFO budget
+        let bad = spec("gemm", 32);
+        let key = WorkloadKey::of(&bad, Target::Tcpa);
+        let (r1, o1, u1) = cache.get_or_compile_shaped(key, bad.shape_fingerprint(), &bad);
+        assert!(r1.is_err());
+        assert_eq!(o1, CacheOutcome::Miss);
+        assert_eq!(u1, SymbolicUse::Instantiated { reused: true });
+        // the failure is resident per n like any compile failure
+        let (r2, o2, u2) = cache.get_or_compile_shaped(key, bad.shape_fingerprint(), &bad);
+        assert!(r2.is_err());
+        assert_eq!(o2, CacheOutcome::Hit);
+        assert_eq!(u2, SymbolicUse::None);
+        // and it reads identically to what the per-n pipeline reports
+        let fresh = CompileCache::new();
+        let (r3, _, _) = fresh.get_or_compile(&bad, Target::Tcpa);
+        assert_eq!(r1.unwrap_err(), r3.unwrap_err());
     }
 
     #[test]

@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use crate::backend::Target;
 
-use super::cache::{CacheStats, WorkloadKey};
+use super::cache::{CacheStats, SymbolicUse, WorkloadKey};
 use super::exec_cache::ExecCacheStats;
 
 /// Cap on tracked distinct content addresses (client-controlled keys must
@@ -138,6 +138,17 @@ pub struct Metrics {
     /// [`Metrics::absorb_cache_stats`] (the pool does this at join time).
     pub compile_evictions: u64,
     pub exec_evictions: u64,
+    /// Per-n compile misses this worker served by instantiating an already
+    /// resident symbolic (per-shape) artifact — no pipeline of any kind ran.
+    pub symbolic_hits: u64,
+    /// Closed-form instantiations of symbolic artifacts this worker ran
+    /// (every instantiation is a per-n miss that skipped the concrete
+    /// pipeline; `symbolic_hits` counts the subset whose shape artifact was
+    /// already resident).
+    pub instantiations: u64,
+    /// Symbolic (per-shape) pipeline executions, snapshotted from the shared
+    /// compile cache by [`Metrics::absorb_cache_stats`].
+    pub symbolic_compiles: u64,
     /// Per-target breakdowns with latency histograms, indexed by
     /// [`Target::index`].
     per_target: Vec<TargetMetrics>,
@@ -146,6 +157,11 @@ pub struct Metrics {
     /// *distinct* kernels its traffic actually touched (the denominator of
     /// the compile-amortization argument).
     pub distinct_kernels: HashSet<WorkloadKey>,
+    /// Distinct `(shape fingerprint, target)` pairs this worker's traffic
+    /// touched — the denominator of the *symbolic* amortization argument:
+    /// on the TCPA, compile work is O(distinct shapes), not O(distinct
+    /// kernels sizes).
+    pub distinct_shapes: HashSet<(u64, Target)>,
     /// Highest backlog (requests still queued behind the one being taken)
     /// this worker observed at dequeue time.
     pub peak_queue_depth: u64,
@@ -169,8 +185,12 @@ impl Default for Metrics {
             input_evictions: 0,
             compile_evictions: 0,
             exec_evictions: 0,
+            symbolic_hits: 0,
+            instantiations: 0,
+            symbolic_compiles: 0,
             per_target: vec![TargetMetrics::default(); Target::COUNT],
             distinct_kernels: HashSet::new(),
+            distinct_shapes: HashSet::new(),
             peak_queue_depth: 0,
             workers: 0,
         }
@@ -242,6 +262,22 @@ impl Metrics {
     pub fn absorb_cache_stats(&mut self, compile: &CacheStats, exec: &ExecCacheStats) {
         self.compile_evictions = compile.evictions();
         self.exec_evictions = exec.evictions();
+        self.symbolic_compiles = compile.symbolic_compiles();
+    }
+
+    /// Record how the symbolic (per-shape) compile level served a request:
+    /// the shape its spec resolved to and whether the compile was an
+    /// instantiation (and of an already resident artifact).
+    pub fn record_symbolic(&mut self, target: Target, shape: u64, used: SymbolicUse) {
+        if self.distinct_shapes.len() < MAX_DISTINCT_KERNELS {
+            self.distinct_shapes.insert((shape, target));
+        }
+        if let SymbolicUse::Instantiated { reused } = used {
+            self.instantiations += 1;
+            if reused {
+                self.symbolic_hits += 1;
+            }
+        }
     }
 
     /// Record a request rejected before it reached the compile cache (an
@@ -279,6 +315,10 @@ impl Metrics {
         // snapshots of the same process-wide counters, not per-worker sums
         self.compile_evictions = self.compile_evictions.max(other.compile_evictions);
         self.exec_evictions = self.exec_evictions.max(other.exec_evictions);
+        self.symbolic_compiles = self.symbolic_compiles.max(other.symbolic_compiles);
+        self.symbolic_hits += other.symbolic_hits;
+        self.instantiations += other.instantiations;
+        self.distinct_shapes.extend(other.distinct_shapes.iter().copied());
         for (mine, theirs) in self.per_target.iter_mut().zip(&other.per_target) {
             mine.merge(theirs);
         }
@@ -353,6 +393,13 @@ impl Metrics {
             self.compile_evictions,
             self.exec_evictions,
             self.input_evictions,
+        ));
+        out.push_str(&format!(
+            "\n  symbolic: distinct_shapes={} compiles={} instantiations={} hits={}",
+            self.distinct_shapes.len(),
+            self.symbolic_compiles,
+            self.instantiations,
+            self.symbolic_hits,
         ));
         out.push_str(&format!(
             "\n  distinct kernels: {}{saturated} | peak queue depth: {} | workers merged: {}",
@@ -464,6 +511,36 @@ mod tests {
         assert!(report.contains("exec cache: 2H/1M"), "{report}");
         assert!(
             report.contains("evictions: compile=5 exec=7 input=2"),
+            "{report}"
+        );
+    }
+
+    #[test]
+    fn symbolic_counters_record_merge_and_report() {
+        let mut a = Metrics::default();
+        a.record_symbolic(Target::Tcpa, 0xAB, SymbolicUse::Instantiated { reused: false });
+        a.record_symbolic(Target::Tcpa, 0xAB, SymbolicUse::Instantiated { reused: true });
+        a.record_symbolic(Target::Cgra, 0xAB, SymbolicUse::None);
+        let mut b = Metrics::default();
+        b.record_symbolic(Target::Tcpa, 0xAB, SymbolicUse::Instantiated { reused: true });
+        b.record_symbolic(Target::Tcpa, 0xCD, SymbolicUse::Instantiated { reused: false });
+        a.merge(&b);
+        assert_eq!(a.instantiations, 4);
+        assert_eq!(a.symbolic_hits, 2);
+        assert_eq!(
+            a.distinct_shapes.len(),
+            3,
+            "same shape on two targets plus a second shape"
+        );
+        let compile = CacheStats::default();
+        compile
+            .symbolic_compiles
+            .store(2, std::sync::atomic::Ordering::Relaxed);
+        a.absorb_cache_stats(&compile, &ExecCacheStats::default());
+        assert_eq!(a.symbolic_compiles, 2);
+        let report = a.report();
+        assert!(
+            report.contains("symbolic: distinct_shapes=3 compiles=2 instantiations=4 hits=2"),
             "{report}"
         );
     }

@@ -13,7 +13,11 @@
 //!   exactly once per process regardless of worker count or whether it
 //!   arrived by name or inline. Artifacts are stored as `Arc<dyn Mapped>`
 //!   and compiled through the [`crate::backend::BackendRegistry`], so the
-//!   coordinator is target-agnostic end to end.
+//!   coordinator is target-agnostic end to end. In front of the per-size
+//!   store sits a per-*shape* symbolic cache keyed by
+//!   [`cache::ShapeKey`] (size-generic fingerprint + target): backends
+//!   with a symbolic path (the TCPA) compile each kernel shape once and
+//!   serve every size by O(1) instantiation (see `rust/DESIGN.md` §9).
 //! * [`exec_cache`] — single-flight, LRU-bounded memo of whole
 //!   `Arc<ExecReport>`s keyed by `(WorkloadKey, seed, batch)`: a repeat of
 //!   an identical request replays with zero lowering, zero input
@@ -39,7 +43,7 @@ pub mod pool;
 pub mod session;
 pub mod wire;
 
-pub use cache::{CacheOutcome, CompileCache, WorkloadKey};
+pub use cache::{CacheOutcome, CompileCache, ShapeKey, SymbolicUse, WorkloadKey};
 pub use exec_cache::{ExecCache, ExecKey};
 pub use metrics::Metrics;
 pub use pool::{serve as serve_pool, PoolHandle, PoolSender};

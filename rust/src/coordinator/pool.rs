@@ -158,6 +158,7 @@ pub fn serve_with_caches(
                             format!("worker panicked: {}", super::cache::panic_message(&p)),
                             false,
                             false,
+                            false,
                             std::time::Duration::ZERO,
                         )
                     }
@@ -242,6 +243,34 @@ mod tests {
         assert!(rx.recv().unwrap().error.is_none());
         drop(tx);
         assert_eq!(handle.join().workers, 1);
+    }
+
+    #[test]
+    fn symbolic_counters_merge_across_workers() {
+        // a size sweep of one TCPA kernel across racing workers: exactly one
+        // symbolic compile, one instantiation per size, and the per-worker
+        // symbolic counters survive the metrics merge
+        let (tx, rx, handle) = serve(3);
+        let sizes = [8i64, 12, 16, 20];
+        for (i, n) in sizes.into_iter().enumerate() {
+            tx.send(Request::named(i as u64, "gemm", n, Target::Tcpa, 1, false, 1))
+                .unwrap();
+        }
+        for _ in 0..sizes.len() {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+        drop(tx);
+        let m = handle.join();
+        assert_eq!(m.instantiations, sizes.len() as u64);
+        assert_eq!(
+            m.symbolic_hits,
+            sizes.len() as u64 - 1,
+            "every instantiation after the first reused the resident shape"
+        );
+        assert_eq!(m.symbolic_compiles, 1);
+        assert_eq!(m.distinct_shapes.len(), 1);
+        assert!(m.report().contains("symbolic: distinct_shapes=1"), "{}", m.report());
     }
 
     #[test]

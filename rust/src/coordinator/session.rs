@@ -23,7 +23,9 @@ use crate::ir::loopnest::ArrayData;
 use crate::ir::op::values_close;
 use crate::runtime::golden::GoldenService;
 
-use super::cache::{CacheOutcome, CompileCache, WorkloadKey};
+use crate::util::json::Json;
+
+use super::cache::{CacheOutcome, CompileCache, SymbolicUse, WorkloadKey};
 use super::exec_cache::{ExecCache, ExecKey};
 use super::metrics::Metrics;
 
@@ -99,11 +101,12 @@ impl InputMemo {
     }
 }
 
-/// Memoized resolution: name → size → (realized spec, fingerprint). Nested
-/// so the steady-state lookup probes without allocating a key.
+/// Memoized resolution: name → size → (realized spec, fingerprint, shape
+/// fingerprint). Nested so the steady-state lookup probes without
+/// allocating a key.
 type ResolvedMemo = std::collections::HashMap<
     String,
-    std::collections::HashMap<i64, (Arc<WorkloadSpec>, u64)>,
+    std::collections::HashMap<i64, (Arc<WorkloadSpec>, u64, u64)>,
 >;
 
 /// What a request asks to run: a catalog name at a size, or a full inline
@@ -254,6 +257,13 @@ pub struct Response {
     /// batch)` request that ran no lowering, no input generation and no
     /// simulation.
     pub exec_cache_hit: bool,
+    /// Whether the compiled artifact was produced by instantiating an
+    /// *already resident* symbolic (per-shape) artifact: a request at a
+    /// fresh problem size of a known kernel shape that ran no pipeline of
+    /// any kind — the paper's symbolic-compilation property observable per
+    /// response. False on per-n cache hits (the artifact was simply
+    /// resident) and on targets without a symbolic path.
+    pub symbolic_hit: bool,
     pub error: Option<String>,
     pub wall: std::time::Duration,
 }
@@ -265,6 +275,7 @@ impl Response {
         error: String,
         cache_hit: bool,
         exec_cache_hit: bool,
+        symbolic_hit: bool,
         wall: std::time::Duration,
     ) -> Response {
         Response {
@@ -278,6 +289,7 @@ impl Response {
             validated: None,
             cache_hit,
             exec_cache_hit,
+            symbolic_hit,
             error: Some(error),
             wall,
         }
@@ -307,6 +319,14 @@ pub struct Session {
     /// at [`MAX_INPUT_MEMO`] — execute and validate share one
     /// `Arc<ArrayData>`, repeat seeds skip regeneration entirely.
     inputs: InputMemo,
+    /// Per-name tokenized spec skeletons (shape JSON), so a named request
+    /// at a *fresh* size decodes the memoized skeleton in one pass instead
+    /// of re-running the catalog constructor and validation. Installed only
+    /// after a two-point witness — see [`Session::try_install_shape_memo`].
+    shape_memo: std::collections::HashMap<String, Json>,
+    /// Names whose constructor failed the witness (not shape-uniform):
+    /// never probed again, the constructor path stays authoritative.
+    shape_rejected: std::collections::HashSet<String>,
     pub metrics: Metrics,
 }
 
@@ -342,6 +362,8 @@ impl Session {
             resolved: std::collections::HashMap::new(),
             resolved_len: 0,
             inputs: InputMemo::new(MAX_INPUT_MEMO),
+            shape_memo: std::collections::HashMap::new(),
+            shape_rejected: std::collections::HashSet::new(),
             metrics: Metrics::default(),
         }
     }
@@ -369,10 +391,10 @@ impl Session {
     /// execution via one `Arc<ArrayData>`.
     pub fn handle(&mut self, req: &Request) -> Response {
         let t0 = Instant::now();
-        let (spec, fingerprint) = match self.resolve(&req.workload) {
+        let (spec, fingerprint, shape) = match self.resolve(&req.workload) {
             Ok(resolved) => resolved,
             Err(e) => {
-                let resp = Response::failure(req, e, false, false, t0.elapsed());
+                let resp = Response::failure(req, e, false, false, false, t0.elapsed());
                 // rejected before any cache was consulted: a failure, but
                 // neither a cache hit nor a miss
                 self.metrics.record_rejected(req.target, resp.wall);
@@ -392,19 +414,23 @@ impl Session {
         // the compile-cache outcome this request observed (None when the
         // exec cache short-circuited the whole pipeline)
         let mut compile_outcome: Option<CacheOutcome> = None;
+        let mut symbolic_use = SymbolicUse::None;
         let exec_cache = Arc::clone(&self.exec_cache);
         let cache = &self.cache;
         let input_memo = &mut self.inputs;
         let metrics = &mut self.metrics;
         let (result, exec_outcome) = exec_cache.get_or_run(exec_key, || {
-            let (compiled, outcome) = cache.get_or_compile_with_key(key, &spec);
+            let (compiled, outcome, used) = cache.get_or_compile_shaped(key, shape, &spec);
             compile_outcome = Some(outcome);
+            symbolic_use = used;
             let kernel = compiled?;
             let ins = input_memo.get_or_gen(&spec, fingerprint, req.seed, metrics);
             kernel.execute(&ins, req.batch)
         });
         let exec_hit = exec_outcome != CacheOutcome::Miss;
         self.metrics.record_exec_outcome(exec_hit);
+        self.metrics.record_symbolic(req.target, shape, symbolic_use);
+        let symbolic_hit = symbolic_use == (SymbolicUse::Instantiated { reused: true });
         // an exec-cache hit implicitly reused the compiled artifact
         let cache_hit = compile_outcome
             .map(|o| o != CacheOutcome::Miss)
@@ -434,6 +460,7 @@ impl Session {
                         validated,
                         cache_hit,
                         exec_cache_hit: exec_hit,
+                        symbolic_hit,
                         error: None,
                         wall: t0.elapsed(),
                     },
@@ -442,7 +469,7 @@ impl Session {
                 )
             }
             Err(e) => (
-                Response::failure(req, e, cache_hit, exec_hit, t0.elapsed()),
+                Response::failure(req, e, cache_hit, exec_hit, symbolic_hit, t0.elapsed()),
                 0,
                 false,
             ),
@@ -453,50 +480,104 @@ impl Session {
     }
 
     /// Resolve a workload reference to a validated spec plus its content
-    /// fingerprint. Named resolutions are memoized per `(name, n)`; a
-    /// panicking constructor (e.g. a size its kernel cannot be built at)
-    /// surfaces as a clean error, not a crashed worker.
-    fn resolve(&mut self, wr: &WorkloadRef) -> Result<(Arc<WorkloadSpec>, u64), String> {
+    /// fingerprint and shape fingerprint. Named resolutions are memoized per
+    /// `(name, n)`, and names proven shape-uniform decode fresh sizes from
+    /// the per-name skeleton without re-running the constructor; a panicking
+    /// constructor (e.g. a size its kernel cannot be built at) surfaces as a
+    /// clean error, not a crashed worker.
+    fn resolve(&mut self, wr: &WorkloadRef) -> Result<(Arc<WorkloadSpec>, u64, u64), String> {
         match wr {
             WorkloadRef::Named { name, n } => {
                 if *n <= 0 {
                     return Err(format!("workload size must be positive, got {n}"));
                 }
-                if let Some((spec, fp)) =
+                if let Some((spec, fp, shape)) =
                     self.resolved.get(name.as_str()).and_then(|m| m.get(n))
                 {
-                    return Ok((spec.clone(), *fp));
+                    return Ok((spec.clone(), *fp, *shape));
                 }
-                let ctor = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    self.catalog.spec(name, *n)
-                }))
-                .map_err(|p| {
-                    format!(
-                        "workload `{name}` (n={n}) constructor failed: {}",
-                        super::cache::panic_message(&p)
-                    )
-                })?;
-                let spec = ctor.ok_or_else(|| {
-                    format!(
-                        "unknown workload `{name}` (catalog: {})",
-                        self.catalog.names().join(", ")
-                    )
-                })?;
+                let spec = match self.decode_from_shape_memo(name, *n) {
+                    Some(decoded) => decoded,
+                    None => {
+                        let ctor = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || self.catalog.spec(name, *n),
+                        ))
+                        .map_err(|p| {
+                            format!(
+                                "workload `{name}` (n={n}) constructor failed: {}",
+                                super::cache::panic_message(&p)
+                            )
+                        })?;
+                        let spec = ctor.ok_or_else(|| {
+                            format!(
+                                "unknown workload `{name}` (catalog: {})",
+                                self.catalog.names().join(", ")
+                            )
+                        })?;
+                        self.try_install_shape_memo(name, *n, &spec);
+                        spec
+                    }
+                };
                 let fp = spec.fingerprint();
+                let shape = spec.shape_fingerprint();
                 let spec = Arc::new(spec);
                 if self.resolved_len < MAX_RESOLVED_MEMO {
                     self.resolved
                         .entry(name.clone())
                         .or_default()
-                        .insert(*n, (spec.clone(), fp));
+                        .insert(*n, (spec.clone(), fp, shape));
                     self.resolved_len += 1;
                 }
-                Ok((spec, fp))
+                Ok((spec, fp, shape))
             }
             WorkloadRef::Inline(spec) => {
                 spec.validate()
                     .map_err(|e| format!("invalid workload spec: {e}"))?;
-                Ok((Arc::new(spec.clone()), spec.fingerprint()))
+                Ok((
+                    Arc::new(spec.clone()),
+                    spec.fingerprint(),
+                    spec.shape_fingerprint(),
+                ))
+            }
+        }
+    }
+
+    /// Decode a fresh size from the per-name spec skeleton. `None` (no
+    /// memoized skeleton, or a size the skeleton cannot decode at) falls
+    /// back to the constructor path, preserving its error behavior.
+    fn decode_from_shape_memo(&self, name: &str, n: i64) -> Option<WorkloadSpec> {
+        let shape = self.shape_memo.get(name)?;
+        WorkloadSpec::from_shape(shape, n).ok()
+    }
+
+    /// Memoize the parsed spec skeleton for a catalog name, but only after
+    /// a *two-point witness*: the skeleton recorded at the current size must
+    /// reproduce the constructor bit-for-bit at a second size. Constructors
+    /// that are not shape-uniform — size-dependent constants near tiny `n`,
+    /// non-unit size coefficients, piecewise structure — fail the witness
+    /// and keep the constructor path forever. (One extra constructor run
+    /// per name, amortized across every future size of that name.)
+    fn try_install_shape_memo(&mut self, name: &str, n: i64, spec: &WorkloadSpec) {
+        if self.shape_memo.contains_key(name) || self.shape_rejected.contains(name) {
+            return;
+        }
+        let catalog = self.catalog.clone();
+        let witness_n = if n > 1 { n - 1 } else { n + 1 };
+        let proven = spec.shape_json().and_then(|shape| {
+            let witness = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                catalog.spec(name, witness_n)
+            }))
+            .ok()
+            .flatten()?;
+            let decoded = WorkloadSpec::from_shape(&shape, witness_n).ok()?;
+            (decoded == witness).then_some(shape)
+        });
+        match proven {
+            Some(shape) => {
+                self.shape_memo.insert(name.to_string(), shape);
+            }
+            None => {
+                self.shape_rejected.insert(name.to_string());
             }
         }
     }
@@ -610,8 +691,13 @@ mod tests {
         let inline = s.handle(&Request::inline(2, spec, Target::Tcpa, 1, false, 2));
         assert!(inline.error.is_none(), "{:?}", inline.error);
         assert!(inline.cache_hit, "identical inline spec must hit the cache");
+        assert!(!inline.symbolic_hit, "a per-n cache hit is not symbolic");
         assert_eq!(inline.latency_cycles, named.latency_cycles);
-        assert_eq!(s.cache().stats.compiles(), 1);
+        // the TCPA serves the named request through its symbolic path: one
+        // shape compile + one instantiation, no concrete pipeline
+        assert_eq!(s.cache().stats.symbolic_compiles(), 1);
+        assert_eq!(s.cache().stats.instantiations(), 1);
+        assert_eq!(s.cache().stats.compiles(), 0);
     }
 
     #[test]
@@ -736,9 +822,79 @@ mod tests {
         let rb = b.handle(&req);
         assert!(ra.error.is_none() && rb.error.is_none());
         assert_eq!(ra.latency_cycles, rb.latency_cycles);
-        assert_eq!(cache.stats.compiles(), 1, "second session reuses the artifact");
+        assert_eq!(
+            cache.stats.instantiations(),
+            1,
+            "second session reuses the per-n artifact, not a fresh instantiation"
+        );
+        assert_eq!(cache.stats.symbolic_compiles(), 1);
         assert_eq!(b.metrics.cache_hits, 1);
         assert!(rb.cache_hit);
+        assert!(!rb.symbolic_hit, "a per-n cache hit is not symbolic");
+    }
+
+    #[test]
+    fn named_size_sweep_instantiates_from_one_symbolic_compile() {
+        let mut s = Session::new();
+        let sizes = [8i64, 12, 16, 20];
+        for (i, n) in sizes.into_iter().enumerate() {
+            let r = s.handle(&Request::named(i as u64, "gemm", n, Target::Tcpa, 1, false, 1));
+            assert!(r.error.is_none(), "n={n}: {:?}", r.error);
+            assert!(!r.cache_hit, "n={n}: every size is a per-n miss");
+            assert_eq!(
+                r.symbolic_hit,
+                i > 0,
+                "n={n}: fresh sizes after the first reuse the shape artifact"
+            );
+        }
+        let st = &s.cache().stats;
+        assert_eq!(st.symbolic_compiles(), 1, "one kernel shape, one symbolic compile");
+        assert_eq!(st.instantiations(), sizes.len() as u64);
+        assert_eq!(st.symbolic_hits(), sizes.len() as u64 - 1);
+        assert_eq!(st.compiles(), 0, "no concrete pipeline ran");
+        assert_eq!(s.metrics.instantiations, sizes.len() as u64);
+        assert_eq!(s.metrics.symbolic_hits, sizes.len() as u64 - 1);
+        assert_eq!(s.metrics.symbolic_compiles, 1);
+        assert_eq!(s.metrics.distinct_shapes.len(), 1, "one (shape, target) pair");
+        // a repeat at a seen size (fresh batch, so the exec cache misses) is
+        // a plain per-n artifact hit, not a symbolic instantiation
+        let r = s.handle(&Request::named(9, "gemm", 12, Target::Tcpa, 2, false, 1));
+        assert!(r.cache_hit);
+        assert!(!r.symbolic_hit);
+        assert_eq!(s.cache().stats.instantiations(), sizes.len() as u64);
+    }
+
+    #[test]
+    fn shape_memo_skips_the_constructor_at_fresh_sizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        let mut cat = WorkloadCatalog::builtin();
+        cat.register("counted", |n| {
+            CALLS.fetch_add(1, Ordering::SeqCst);
+            WorkloadCatalog::builtin().spec("gemm", n).unwrap()
+        });
+        let mut s = Session::with_catalog(Arc::new(CompileCache::new()), Arc::new(cat));
+        let r8 = s.handle(&Request::named(1, "counted", 8, Target::Tcpa, 1, false, 1));
+        assert!(r8.error.is_none(), "{:?}", r8.error);
+        assert_eq!(
+            CALLS.load(Ordering::SeqCst),
+            2,
+            "first resolution runs the constructor plus one witness call"
+        );
+        // a fresh size decodes the memoized skeleton: no constructor run
+        let r12 = s.handle(&Request::named(2, "counted", 12, Target::Tcpa, 1, false, 1));
+        assert!(r12.error.is_none(), "{:?}", r12.error);
+        assert_eq!(CALLS.load(Ordering::SeqCst), 2, "skeleton decoded, ctor skipped");
+        assert!(r12.symbolic_hit, "decoded spec still rides the symbolic path");
+        // a repeat size resolves from the (name, n) memo
+        let again = s.handle(&Request::named(3, "counted", 8, Target::Tcpa, 2, false, 1));
+        assert!(again.error.is_none(), "{:?}", again.error);
+        assert_eq!(CALLS.load(Ordering::SeqCst), 2);
+        // decoded and constructed specs are the same kernel: same artifact
+        let fresh = Session::new()
+            .handle(&Request::named(4, "gemm", 12, Target::Tcpa, 1, false, 1));
+        assert_eq!(r12.latency_cycles, fresh.latency_cycles);
+        assert_eq!(r12.batch_cycles, fresh.batch_cycles);
     }
 
     #[test]

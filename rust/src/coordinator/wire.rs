@@ -23,12 +23,16 @@
 //! ```json
 //! {"v":1,"id":1,"workload":"gemm","n":8,"target":"tcpa","batch":2,
 //!  "latency_cycles":1234,"batch_cycles":1300,"validated":true,
-//!  "cache_hit":false,"exec_cache_hit":false,"error":null,"wall_us":842}
+//!  "cache_hit":false,"exec_cache_hit":false,"symbolic_hit":false,
+//!  "error":null,"wall_us":842}
 //! ```
 //!
 //! `exec_cache_hit` reports whether the whole execution report was served
-//! from the coordinator's exec cache (a byte-identical repeat request); it
-//! defaults to `false` when absent so pre-exec-cache responses still parse.
+//! from the coordinator's exec cache (a byte-identical repeat request);
+//! `symbolic_hit` whether the artifact was instantiated from an already
+//! resident per-shape symbolic compile (a fresh size of a known kernel
+//! shape). Both default to `false` when absent so records written by older
+//! builds still parse.
 //!
 //! Malformed request lines do not abort the stream: they produce an error
 //! record `{"v":1,"line":<lineno>,"error":"..."}` and serving continues.
@@ -154,6 +158,7 @@ pub fn response_to_json(r: &Response) -> Json {
         ),
         ("cache_hit", Json::Bool(r.cache_hit)),
         ("exec_cache_hit", Json::Bool(r.exec_cache_hit)),
+        ("symbolic_hit", Json::Bool(r.symbolic_hit)),
         (
             "error",
             r.error
@@ -189,6 +194,11 @@ pub fn response_from_json(j: &Json) -> Result<Response, String> {
         // absent in pre-exec-cache records: default to "not a replay"
         exec_cache_hit: j
             .get("exec_cache_hit")
+            .and_then(Json::as_bool)
+            .unwrap_or(false),
+        // absent in pre-symbolic records: default to "not instantiated"
+        symbolic_hit: j
+            .get("symbolic_hit")
             .and_then(Json::as_bool)
             .unwrap_or(false),
         error: match j.get("error") {
@@ -359,6 +369,7 @@ mod tests {
             validated: None,
             cache_hit: true,
             exec_cache_hit: true,
+            symbolic_hit: true,
             error: Some("boom".into()),
             wall: Duration::from_micros(555),
         };
@@ -367,6 +378,7 @@ mod tests {
         assert_eq!(back.workload, "jacobi2d");
         assert_eq!(back.validated, None);
         assert!(back.exec_cache_hit);
+        assert!(back.symbolic_hit);
         assert_eq!(back.error.as_deref(), Some("boom"));
         assert_eq!(back.wall, Duration::from_micros(555));
 
@@ -382,10 +394,11 @@ mod tests {
 
     #[test]
     fn responses_without_exec_cache_hit_still_parse() {
-        // a pre-exec-cache v1 record (no `exec_cache_hit` field)
+        // a pre-exec-cache v1 record (no `exec_cache_hit`/`symbolic_hit`)
         let line = r#"{"v":1,"id":1,"workload":"gemm","n":8,"target":"tcpa","batch":1,"latency_cycles":10,"batch_cycles":10,"validated":null,"cache_hit":false,"error":null,"wall_us":5}"#;
         let r = response_from_json(&Json::parse(line).unwrap()).unwrap();
         assert!(!r.exec_cache_hit, "absent field defaults to false");
+        assert!(!r.symbolic_hit, "absent field defaults to false");
     }
 
     #[test]

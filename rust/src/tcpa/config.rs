@@ -10,7 +10,7 @@ use super::arch::TcpaArch;
 use super::codegen::{codegen, Programs};
 use super::partition::{Partition, PartitionError};
 use super::registers::{bind, RegError, RegisterBinding};
-use super::schedule::{schedule, SchedError, Schedule};
+use super::schedule::{schedule, SchedError, Schedule, SymbolicSchedule};
 
 /// A fully compiled loop-nest configuration.
 #[derive(Debug, Clone)]
@@ -49,6 +49,31 @@ impl std::error::Error for TcpaError {}
 pub fn compile(pra: &Pra, arch: &TcpaArch) -> Result<TcpaConfig, TcpaError> {
     let part = Partition::lsgp(pra, arch).map_err(TcpaError::Partition)?;
     let sched = schedule(pra, &part, arch).map_err(TcpaError::Schedule)?;
+    let binding = bind(pra, &part, &sched, arch).map_err(TcpaError::Registers)?;
+    let programs = codegen(pra, &part, &sched);
+    let ags = collect_ags(pra);
+    Ok(TcpaConfig {
+        pra: pra.clone(),
+        part,
+        sched,
+        binding,
+        programs,
+        ags,
+    })
+}
+
+/// Compile a PRA onto a TCPA reusing a pre-recorded symbolic schedule:
+/// identical to [`compile`] except that the modulo-scheduling search is
+/// replaced by [`SymbolicSchedule::instantiate`], which replays the
+/// once-per-shape placements against this size's partition. Per-size work is
+/// then limited to the closed forms, register binding, and code generation.
+pub fn compile_with(
+    pra: &Pra,
+    arch: &TcpaArch,
+    sym: &SymbolicSchedule,
+) -> Result<TcpaConfig, TcpaError> {
+    let part = Partition::lsgp(pra, arch).map_err(TcpaError::Partition)?;
+    let sched = sym.instantiate(pra, &part).map_err(TcpaError::Schedule)?;
     let binding = bind(pra, &part, &sched, arch).map_err(TcpaError::Registers)?;
     let programs = codegen(pra, &part, &sched);
     let ags = collect_ags(pra);
@@ -146,6 +171,39 @@ mod tests {
             iis.push(cfg.sched.ii);
         }
         assert!(iis.windows(2).all(|w| w[0] == w[1]), "II stable: {iis:?}");
+    }
+
+    #[test]
+    fn compile_with_symbolic_schedule_matches_fresh_compile() {
+        let arch = TcpaArch::paper(4, 4);
+        // record placements once at one size, replay at others
+        let sym = super::super::schedule::schedule_symbolic(&gemm_pra(8), &arch);
+        for n in [8, 12, 16, 20] {
+            let pra = gemm_pra(n);
+            let fresh = compile(&pra, &arch).unwrap();
+            let replay = compile_with(&pra, &arch, &sym).unwrap();
+            assert_eq!(replay.sched.ii, fresh.sched.ii, "n={n}");
+            assert_eq!(replay.sched.tau, fresh.sched.tau, "n={n}");
+            assert_eq!(replay.sched.lambda_j, fresh.sched.lambda_j, "n={n}");
+            assert_eq!(replay.sched.lambda_k, fresh.sched.lambda_k, "n={n}");
+            assert_eq!(replay.summary(), fresh.summary(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn compile_with_reproduces_the_error_paths() {
+        let arch = TcpaArch::paper(4, 4);
+        let sym = super::super::schedule::schedule_symbolic(&gemm_pra(8), &arch);
+        // register overflow at n=32 surfaces identically through both paths
+        let fresh = compile(&gemm_pra(32), &arch).unwrap_err();
+        let replay = compile_with(&gemm_pra(32), &arch, &sym).unwrap_err();
+        assert_eq!(fresh.to_string(), replay.to_string());
+        assert!(matches!(replay, TcpaError::Registers(_)));
+        // non-divisible extents fail in partitioning before any schedule
+        let fresh = compile(&gemm_pra(10), &arch).unwrap_err();
+        let replay = compile_with(&gemm_pra(10), &arch, &sym).unwrap_err();
+        assert_eq!(fresh.to_string(), replay.to_string());
+        assert!(matches!(replay, TcpaError::Partition(_)));
     }
 
     #[test]

@@ -192,6 +192,67 @@ mod tests {
     }
 
     #[test]
+    fn reprogrammed_bounds_scan_tiles_like_a_fresh_compile() {
+        // Instantiating a recorded symbolic schedule at a new problem size
+        // only reprograms iteration bounds (partition + λ wavefront); the
+        // GC-observed tile scan — iterations in schedule order with their
+        // control variants — must be indistinguishable from a fresh
+        // compile's at every size.
+        use crate::bench::workloads::{build, BenchId};
+        use crate::tcpa::schedule::{schedule, schedule_symbolic, Schedule};
+        let arch = TcpaArch::paper(4, 4);
+        let sizes = [8i64, 12, 16];
+        for id in BenchId::ALL {
+            let base = build(id, sizes[0]);
+            let syms: Vec<_> = base
+                .pras
+                .iter()
+                .map(|p| schedule_symbolic(p, &arch))
+                .collect();
+            for &n in &sizes {
+                let wl = build(id, n);
+                assert_eq!(wl.pras.len(), syms.len(), "{id:?}: stage count is shape-level");
+                let mut scanned = 0;
+                for (pra, sym) in wl.pras.iter().zip(&syms) {
+                    let part = match Partition::lsgp(pra, &arch) {
+                        Ok(p) => p,
+                        Err(e) => panic!("{id:?} n={n} {}: partition failed: {e:?}", pra.name),
+                    };
+                    match (schedule(pra, &part, &arch), sym.instantiate(pra, &part)) {
+                        (Ok(fresh), Ok(replay)) => {
+                            let gc = Gc::new(pra, &part);
+                            for k in part.inter.points() {
+                                let scan = |s: &Schedule| -> Vec<(i64, u64)> {
+                                    let mut js: Vec<Vec<i64>> = part.intra.points().collect();
+                                    // stable sort: lex order breaks time ties
+                                    js.sort_by_key(|j| s.iter_start(j));
+                                    js.iter()
+                                        .map(|j| (s.iter_start(j), gc.variant_key(&k, j)))
+                                        .collect()
+                                };
+                                assert_eq!(
+                                    scan(&fresh),
+                                    scan(&replay),
+                                    "{id:?} n={n} {} tile {k:?}: scan order diverged",
+                                    pra.name
+                                );
+                            }
+                            scanned += 1;
+                        }
+                        (fresh, replay) => assert_eq!(
+                            fresh.map(|s| s.ii).err(),
+                            replay.map(|s| s.ii).err(),
+                            "{id:?} n={n} {}: fresh and replayed scheduling must agree",
+                            pra.name
+                        ),
+                    }
+                }
+                assert!(scanned > 0, "{id:?} n={n}: nothing scheduled");
+            }
+        }
+    }
+
+    #[test]
     fn control_signal_count() {
         let pra = gemm_pra(4);
         let arch = TcpaArch::paper(2, 2);

@@ -206,6 +206,86 @@ fn shared_exec_plans_replay_bit_identically() {
     }
 }
 
+/// Symbolic-vs-concrete oracle: one per-shape symbolic compile (recorded at
+/// the smallest size) instantiated at size `n` must be bit-identical to the
+/// per-n concrete compile for every benchmark — `MappedStats`, cycles,
+/// issued ops and outputs on success; stage, message and partial stats on
+/// failure. Each size is instantiated *before* any concrete compile at that
+/// size runs, so the oracle covers sizes the concrete pipeline has never
+/// seen when the symbolic artifact answers.
+#[test]
+fn symbolic_instantiation_matches_concrete_compiles_for_all_benchmarks() {
+    use repro::backend::{Backend, TcpaBackend};
+    use repro::bench::workloads::builtin_spec;
+    let be = TcpaBackend::paper(4, 4);
+    let sizes = [8i64, 12, 16];
+    for id in BenchId::ALL {
+        let sym = be
+            .compile_symbolic(&builtin_spec(id, sizes[0]))
+            .unwrap_or_else(|| panic!("{}: must be shape-eligible", id.name()));
+        for &n in &sizes {
+            let inst = sym.instantiate(n);
+            let fresh = be.compile(&build(id, n));
+            match (inst, fresh) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.stats(), b.stats(), "{} N={n}: stats", id.name());
+                    let ins = inputs(id, n, 23);
+                    let ra = a.execute(&ins, 3).expect("instantiated exec");
+                    let rb = b.execute(&ins, 3).expect("fresh exec");
+                    assert_eq!(
+                        ra.latency_cycles,
+                        rb.latency_cycles,
+                        "{} N={n}: cycles",
+                        id.name()
+                    );
+                    assert_eq!(
+                        ra.batch_cycles,
+                        rb.batch_cycles,
+                        "{} N={n}: batch cycles",
+                        id.name()
+                    );
+                    assert_eq!(ra.issued_ops, rb.issued_ops, "{} N={n}: issued", id.name());
+                    assert_eq!(ra.outputs, rb.outputs, "{} N={n}: outputs", id.name());
+                }
+                (Err(a), Err(b)) => {
+                    assert_eq!(a.stage, b.stage, "{} N={n}: stage", id.name());
+                    assert_eq!(a.message, b.message, "{} N={n}: message", id.name());
+                    assert_eq!(a.stats, b.stats, "{} N={n}: partial stats", id.name());
+                }
+                (a, b) => panic!(
+                    "{} N={n}: symbolic and concrete paths diverged: {:?} vs {:?}",
+                    id.name(),
+                    a.map(|m| m.stats().clone()),
+                    b.map(|m| m.stats().clone())
+                ),
+            }
+        }
+    }
+}
+
+/// The error paths through the oracle: sizes the TCPA pipeline rejects must
+/// be rejected identically by instantiation — same stage, same message,
+/// same partial stats (the paper's tables print failed rows too).
+#[test]
+fn symbolic_instantiation_reproduces_failure_sizes_bit_identically() {
+    use repro::backend::{Backend, TcpaBackend};
+    use repro::bench::workloads::builtin_spec;
+    let be = TcpaBackend::paper(4, 4);
+    let sym = be
+        .compile_symbolic(&builtin_spec(BenchId::Gemm, 8))
+        .expect("gemm is shape-eligible");
+    // n=10 does not divide the 4×4 grid; n=32 exceeds the FIFO budget
+    for n in [10i64, 32] {
+        let a = sym.instantiate(n).expect_err("gemm must fail at this size");
+        let b = be
+            .compile(&build(BenchId::Gemm, n))
+            .expect_err("gemm must fail at this size");
+        assert_eq!(a.stage, b.stage, "N={n}: stage");
+        assert_eq!(a.message, b.message, "N={n}: message");
+        assert_eq!(a.stats, b.stats, "N={n}: partial stats");
+    }
+}
+
 #[test]
 fn gemm_equivalence_two_sizes() {
     // 12 stays under the §IV-6 FIFO budget on the 4×4 array
