@@ -10,12 +10,18 @@
 //! symbolic n-sweep (one TCPA kernel at many distinct sizes: exactly one
 //! compile of any kind per kernel *shape*, one instantiation per size) — to
 //! `BENCH_serve.json` via the shared [`common::JsonReport`].
+//!
+//! An overload phase drives an open-loop burst into a pool with a bounded
+//! admission queue: the pool must shed the overflow with typed responses
+//! while the latency of *admitted* requests stays bounded (the shed-rate
+//! and admitted-p99 land in `BENCH_serve.json` as `serve/overload-shed`).
 
 mod common;
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use repro::coordinator::{pool, Metrics, Request, Target};
+use repro::coordinator::{pool, CompileCache, ErrorKind, ExecCache, Metrics, Request, Target};
 use repro::util::json::Json;
 
 fn mixed_trace(n_req: usize) -> Vec<Request> {
@@ -125,9 +131,81 @@ fn run_sweep(workers: usize, count: usize) -> (Duration, Metrics, SweepStats) {
     (wall, m, stats)
 }
 
+/// Counters the overload phase reports.
+struct OverloadStats {
+    shed: u64,
+    admitted: u64,
+    admitted_p99_us: u64,
+}
+
+/// Overload phase: an open-loop burst of `n_req` distinct requests into a
+/// pool whose admission queue holds only `queue_cap` entries. The sender
+/// never waits for responses, so the queue fills immediately and the pool
+/// must shed the overflow with typed `Shed` responses while every admitted
+/// request completes with a bounded client-side sojourn (send → receive,
+/// queueing included). Returns the merged metrics and the shed/latency
+/// snapshot.
+fn run_overload(workers: usize, n_req: usize, queue_cap: usize) -> (Metrics, OverloadStats) {
+    let config = pool::PoolConfig {
+        queue_cap: Some(queue_cap),
+        ..pool::PoolConfig::default()
+    };
+    let (tx, rx, handle) = pool::serve_configured(
+        workers,
+        Arc::new(CompileCache::new()),
+        Arc::new(ExecCache::new()),
+        Arc::new(repro::bench::spec::WorkloadCatalog::builtin()),
+        config,
+    );
+    // distinct seeds force a full input-gen + simulation per admitted
+    // request, so the workers cannot drain the burst from the exec cache
+    let t0 = Instant::now();
+    let mut send_at = vec![Duration::ZERO; n_req];
+    for i in 0..n_req {
+        send_at[i] = t0.elapsed();
+        let req = Request::named(i as u64, "gemm", 16, Target::Tcpa, 1, false, i as u64);
+        tx.send(req).expect("pool alive");
+    }
+    let mut admitted_sojourn_us: Vec<u64> = Vec::new();
+    let mut shed = 0u64;
+    let mut seen = vec![false; n_req];
+    for _ in 0..n_req {
+        let r = rx.recv().expect("pool response");
+        let sojourn = t0.elapsed() - send_at[r.id as usize];
+        assert!(
+            !std::mem::replace(&mut seen[r.id as usize], true),
+            "request {} answered twice",
+            r.id
+        );
+        match r.error_kind {
+            Some(ErrorKind::Shed) => shed += 1,
+            None => admitted_sojourn_us.push(sojourn.as_micros() as u64),
+            Some(k) => panic!("overload phase produced an unexpected {k:?}: {:?}", r.error),
+        }
+    }
+    drop(tx);
+    let m = handle.join();
+    assert!(seen.iter().all(|s| *s), "every request gets exactly one response");
+    assert_eq!(m.shed, shed, "merged shed counter matches the Shed responses on the wire");
+    assert_eq!(
+        m.shed + m.failed + m.served,
+        n_req as u64,
+        "admission identity: shed + failed + served covers the burst"
+    );
+    admitted_sojourn_us.sort_unstable();
+    let admitted = admitted_sojourn_us.len() as u64;
+    let admitted_p99_us = if admitted_sojourn_us.is_empty() {
+        0
+    } else {
+        let idx = ((admitted as f64 * 0.99).ceil() as usize).saturating_sub(1);
+        admitted_sojourn_us[idx.min(admitted_sojourn_us.len() - 1)]
+    };
+    (m, OverloadStats { shed, admitted, admitted_p99_us })
+}
+
 fn main() {
     let trace = mixed_trace(if common::smoke() { 24 } else { 96 });
-    let mut report = common::JsonReport::new("serve-throughput-v3");
+    let mut report = common::JsonReport::new("serve-throughput-v4");
 
     let mut walls: Vec<(usize, Duration)> = Vec::new();
     for workers in [1usize, 2, 4] {
@@ -214,6 +292,39 @@ fn main() {
         ("instantiations", Json::from(ss.instantiations as usize)),
         ("symbolic_hits", Json::from(ss.symbolic_hits as usize)),
         ("distinct_shapes", Json::from(sm.distinct_shapes.len())),
+    ]));
+
+    // overload phase: open-loop burst into a bounded admission queue
+    let overload_req = if common::smoke() { 24 } else { 64 };
+    let overload_cap = 4usize;
+    let (om, os) = run_overload(2, overload_req, overload_cap);
+    assert!(os.shed > 0, "a {overload_req}-deep burst over a {overload_cap}-slot queue must shed");
+    assert!(
+        os.admitted > 0,
+        "the bounded queue still admits work while shedding the overflow"
+    );
+    assert!(
+        os.admitted_p99_us < 10_000_000,
+        "admitted requests stay bounded under overload (p99 {}us)",
+        os.admitted_p99_us
+    );
+    let shed_rate = os.shed as f64 / overload_req as f64;
+    println!(
+        "{:<52} {:>9.1}% shed  (admitted p99 {}us)",
+        format!("serve: overload burst {overload_req} reqs, cap {overload_cap}, 2 workers"),
+        shed_rate * 100.0,
+        os.admitted_p99_us,
+    );
+    report.record_raw(Json::obj(vec![
+        ("name", Json::from("serve/overload-shed")),
+        ("workers", Json::from(2usize)),
+        ("requests", Json::from(overload_req)),
+        ("queue_cap", Json::from(overload_cap)),
+        ("shed", Json::from(os.shed as usize)),
+        ("admitted", Json::from(os.admitted as usize)),
+        ("shed_rate", Json::Float(shed_rate)),
+        ("admitted_p99_us", Json::from(os.admitted_p99_us as usize)),
+        ("served", Json::from(om.served as usize)),
     ]));
 
     let w1 = walls[0].1;

@@ -18,7 +18,7 @@ use crate::ir::loopnest::ArrayData;
 use crate::bench::toolchains::{rows_for, RowSpec, Tool};
 use crate::bench::workloads::Workload;
 
-use super::{occupancy, Backend, CompileError, ExecReport, Mapped, MappedStats, Target};
+use super::{occupancy, Backend, CancelToken, CompileError, ExecReport, Mapped, MappedStats, Target};
 
 /// Result of mapping one benchmark under one toolchain row. Immutable once
 /// built; the coordinator's compile cache shares rows across workers behind
@@ -45,6 +45,14 @@ pub struct MapRow {
 
 /// Map all stages of a workload under a row spec.
 pub fn map_cgra_row(wl: &Workload, spec: &RowSpec) -> MapRow {
+    map_cgra_row_cancellable(wl, spec, &CancelToken::none())
+}
+
+/// [`map_cgra_row`] with a cooperative deadline polled before each stage's
+/// modulo-scheduled place-and-route — the expensive unit of CGRA mapping —
+/// so a deadline overrun aborts the row between stages with a
+/// [`super::DEADLINE_MARKER`]-tagged error.
+fn map_cgra_row_cancellable(wl: &Workload, spec: &RowSpec, cancel: &CancelToken) -> MapRow {
     let mut n_ops = 0usize;
     let mut ii_max = 0u32;
     let mut unused = usize::MAX;
@@ -54,6 +62,10 @@ pub fn map_cgra_row(wl: &Workload, spec: &RowSpec) -> MapRow {
     let mut error: Option<String> = None;
 
     for nest in &wl.stages {
+        if let Err(e) = cancel.check("CGRA stage mapping") {
+            error = Some(e);
+            break;
+        }
         let nest_u = match unroll_innermost(nest, spec.opt.unroll()) {
             Ok(n) => n,
             Err(e) => {
@@ -173,9 +185,17 @@ impl Backend for CgraBackend {
     }
 
     fn compile(&self, wl: &Workload) -> Result<Box<dyn Mapped>, CompileError> {
+        Backend::compile_cancellable(self, wl, &CancelToken::none())
+    }
+
+    fn compile_cancellable(
+        &self,
+        wl: &Workload,
+        cancel: &CancelToken,
+    ) -> Result<Box<dyn Mapped>, CompileError> {
         let spec = self.spec_for(wl);
         let n_pes = spec.arch.n_pes();
-        let row = map_cgra_row(wl, &spec);
+        let row = map_cgra_row_cancellable(wl, &spec, cancel);
         let stats = stats_of(&row, wl.n);
         match row.error.clone() {
             Some(message) => Err(CompileError {

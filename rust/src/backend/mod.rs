@@ -36,10 +36,79 @@ pub use registry::BackendRegistry;
 pub use seq::SeqBackend;
 pub use tcpa::{map_turtle, TcpaBackend, TurtleRow};
 
+use std::time::{Duration, Instant};
+
 use crate::bench::spec::WorkloadSpec;
 use crate::bench::toolchains::Tool;
 use crate::bench::workloads::Workload;
 use crate::ir::loopnest::ArrayData;
+
+/// Marker every deadline-abort error message carries, so callers (the
+/// coordinator's caches, the session's error classifier) can tell a
+/// *transient* timeout apart from a deterministic compile/execute failure
+/// without a parallel error enum crossing the `Box<dyn Mapped>` seam.
+pub const DEADLINE_MARKER: &str = "[deadline]";
+
+/// Whether an error message records a deadline abort (see
+/// [`DEADLINE_MARKER`]). Uses `contains`, not a prefix test: stage layers
+/// wrap messages (e.g. `compile failed: [deadline] …`) and the marker must
+/// survive the nesting.
+pub fn is_deadline_error(msg: &str) -> bool {
+    msg.contains(DEADLINE_MARKER)
+}
+
+/// Cooperative cancellation token carrying an optional absolute deadline.
+///
+/// Threaded from the pool's admission stamp through
+/// [`Backend::compile_cancellable`] down to per-kernel/per-stage pipeline
+/// boundaries: long compiles poll [`CancelToken::check`] between units of
+/// work and abort with a [`DEADLINE_MARKER`]-tagged error instead of
+/// finishing work nobody is waiting for. The default token never cancels,
+/// so every pre-resilience call path behaves exactly as before.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CancelToken {
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token that never cancels (the default).
+    pub fn none() -> CancelToken {
+        CancelToken { deadline: None }
+    }
+
+    /// A token expiring at an absolute instant (what the pool stamps at
+    /// admission, so queue wait counts against the budget).
+    pub fn at(deadline: Instant) -> CancelToken {
+        CancelToken {
+            deadline: Some(deadline),
+        }
+    }
+
+    /// A token expiring `budget` from now.
+    pub fn deadline_in(budget: Duration) -> CancelToken {
+        CancelToken::at(Instant::now() + budget)
+    }
+
+    /// The absolute deadline, if any.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// Whether the deadline has passed.
+    pub fn cancelled(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Checkpoint: `Err` with a [`DEADLINE_MARKER`]-tagged message naming
+    /// the pipeline stage once the deadline has passed.
+    pub fn check(&self, stage: &str) -> Result<(), String> {
+        if self.cancelled() {
+            Err(format!("{DEADLINE_MARKER} deadline exceeded at {stage}"))
+        } else {
+            Ok(())
+        }
+    }
+}
 
 /// Which simulated array a request targets. Every variant has a registered
 /// backend in [`BackendRegistry::with_defaults`].
@@ -202,6 +271,20 @@ pub trait Backend: Send + Sync {
 
     /// Run the map/schedule pipeline for one workload.
     fn compile(&self, wl: &Workload) -> Result<Box<dyn Mapped>, CompileError>;
+
+    /// [`Backend::compile`] with a cooperative deadline: backends with long
+    /// pipelines poll `cancel` at stage boundaries and abort with a
+    /// [`DEADLINE_MARKER`]-tagged [`CompileError`] once it expires. The
+    /// default ignores the token (correct for cheap backends like the
+    /// sequential reference, whose compile is a closed form).
+    fn compile_cancellable(
+        &self,
+        wl: &Workload,
+        cancel: &CancelToken,
+    ) -> Result<Box<dyn Mapped>, CompileError> {
+        let _ = cancel;
+        self.compile(wl)
+    }
 
     /// Compile the size-independent half of the pipeline once per kernel
     /// *shape*. Returns `None` when the backend has no symbolic path — the

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use crate::ir::loopnest::ArrayData;
 use crate::ir::pra::Pra;
 use crate::tcpa::arch::TcpaArch;
-use crate::tcpa::config::{compile, compile_with, TcpaConfig, TcpaError};
+use crate::tcpa::config::{compile, compile_with, TcpaConfig};
 use crate::tcpa::plan::ExecPlan;
 use crate::tcpa::schedule::{schedule_symbolic, SymbolicSchedule};
 use crate::tcpa::sim as tcpa_sim;
@@ -25,7 +25,8 @@ use crate::bench::toolchains::Tool;
 use crate::bench::workloads::Workload;
 
 use super::{
-    occupancy, Backend, CompileError, ExecReport, Mapped, MappedStats, SymbolicMapped, Target,
+    occupancy, Backend, CancelToken, CompileError, ExecReport, Mapped, MappedStats, SymbolicMapped,
+    Target,
 };
 
 /// TURTLE result over a workload (one config per PRA kernel). Immutable
@@ -48,7 +49,19 @@ pub struct TurtleRow {
 
 /// Compile a workload with the TURTLE-like flow.
 pub fn map_turtle(wl: &Workload, arch: &TcpaArch) -> TurtleRow {
-    map_turtle_via(wl, arch, |_, pra| compile(pra, arch))
+    map_turtle_cancellable(wl, arch, &CancelToken::none())
+}
+
+/// [`map_turtle`] with a cooperative deadline polled before each kernel's
+/// modulo-scheduling search — the expensive unit of TCPA compile work, so a
+/// deadline overrun aborts the row between kernels with a
+/// [`super::DEADLINE_MARKER`]-tagged error instead of mapping PRAs nobody is
+/// waiting for.
+pub fn map_turtle_cancellable(wl: &Workload, arch: &TcpaArch, cancel: &CancelToken) -> TurtleRow {
+    map_turtle_via(wl, arch, |_, pra| {
+        cancel.check("TCPA kernel schedule")?;
+        compile(pra, arch).map_err(|e| e.to_string())
+    })
 }
 
 /// Row-building shared by the per-n compile path and the symbolic
@@ -56,7 +69,7 @@ pub fn map_turtle(wl: &Workload, arch: &TcpaArch) -> TurtleRow {
 /// same per-kernel configurations, only the `compile_one` step differs.
 fn map_turtle_via<F>(wl: &Workload, arch: &TcpaArch, mut compile_one: F) -> TurtleRow
 where
-    F: FnMut(usize, &Pra) -> Result<TcpaConfig, TcpaError>,
+    F: FnMut(usize, &Pra) -> Result<TcpaConfig, String>,
 {
     let mut n_ops = 0;
     let mut ii = 0;
@@ -89,7 +102,7 @@ where
                 configs.push(cfg);
             }
             Err(e) => {
-                error = Some(e.to_string());
+                error = Some(e);
                 break;
             }
         }
@@ -158,7 +171,15 @@ impl Backend for TcpaBackend {
     }
 
     fn compile(&self, wl: &Workload) -> Result<Box<dyn Mapped>, CompileError> {
-        let row = map_turtle(wl, &self.arch);
+        Backend::compile_cancellable(self, wl, &CancelToken::none())
+    }
+
+    fn compile_cancellable(
+        &self,
+        wl: &Workload,
+        cancel: &CancelToken,
+    ) -> Result<Box<dyn Mapped>, CompileError> {
+        let row = map_turtle_cancellable(wl, &self.arch, cancel);
         let stats = stats_of(&row, wl, &self.arch);
         mapped_of(row, stats, &self.arch)
     }
@@ -269,7 +290,7 @@ impl SymbolicMapped for TcpaSymbolic {
         // the shape fixes the kernel structure, so the decoded workload has
         // exactly one PRA per recorded symbolic schedule, in order
         let row = map_turtle_via(&wl, &self.arch, |i, pra| {
-            compile_with(pra, &self.arch, &self.scheds[i])
+            compile_with(pra, &self.arch, &self.scheds[i]).map_err(|e| e.to_string())
         });
         let stats = stats_of(&row, &wl, &self.arch);
         mapped_of(row, stats, &self.arch)

@@ -28,8 +28,15 @@
 //! the pipeline through its [`BackendRegistry`], so a new backend plugs in
 //! by registration alone — no cache change, no new enum variant.
 //!
-//! Compile failures are cached too: the pipeline is deterministic, so a
-//! failing (spec, target) would fail identically on every retry.
+//! *Deterministic* compile failures are cached too: the pipeline is
+//! deterministic, so a failing (spec, target) would fail identically on
+//! every retry. *Transient* results are not — a panicked leader or a
+//! deadline abort says nothing about the next request's fate, so those
+//! flights resolve **poisoned-once**: waiters still receive the error (never
+//! a hang), but the slot is removed instead of cached and the next request
+//! retries fresh. Callers that observed a poisoned flight secondhand (a
+//! `Waited` outcome carrying a transient error) may retry with bounded
+//! backoff via [`CompileCache::get_or_compile_shaped_cancellable`].
 //!
 //! The single-flight + LRU machinery itself is the generic [`FlightMap`],
 //! shared with the execution-report cache
@@ -41,8 +48,27 @@ use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
-use crate::backend::{BackendRegistry, Mapped, SymbolicMapped, Target};
+use crate::backend::{BackendRegistry, CancelToken, Mapped, SymbolicMapped, Target};
 use crate::bench::spec::WorkloadSpec;
+
+/// Marker every panic-quarantine error message carries, so error
+/// classification (the session's `error_kind`, the degradation guard, the
+/// poison-retry policy) survives message nesting the same way
+/// [`crate::backend::DEADLINE_MARKER`] does.
+pub(crate) const PANIC_MARKER: &str = "[panic]";
+
+/// Bound on secondhand retries after observing a poisoned flight: a waiter
+/// that received a transient error it did not cause retries at most this
+/// many times before reporting the error as-is.
+pub(crate) const MAX_POISON_RETRIES: u32 = 2;
+
+/// Whether an error message records a *transient* outcome (a panicked
+/// leader or a deadline abort) rather than a deterministic pipeline
+/// failure. Transient results are never cached and are eligible for
+/// secondhand retry; deterministic failures cache forever.
+pub fn is_transient_error(msg: &str) -> bool {
+    msg.contains(PANIC_MARKER) || crate::backend::is_deadline_error(msg)
+}
 
 /// Default bound on resident compiled artifacts per process.
 pub const DEFAULT_COMPILE_CAPACITY: usize = 512;
@@ -190,12 +216,19 @@ impl<K: Eq + Hash + Clone, V: Clone> FlightMap<K, V> {
     /// across all threads per resident key. A panic inside `run` is caught
     /// and converted through `on_panic` so waiters (and all future callers)
     /// still resolve. Evictions increment `evictions`.
+    ///
+    /// Results for which `transient` holds resolve **poisoned-once**: the
+    /// flight is still published (waiters receive the value, never a hang)
+    /// and `poisoned` is incremented, but the slot is *removed* instead of
+    /// cached — the next `get_or_run` for the key starts a fresh flight.
     pub fn get_or_run(
         &self,
         key: K,
         run: impl FnOnce() -> V,
         on_panic: impl FnOnce(String) -> V,
+        transient: impl FnOnce(&V) -> bool,
         evictions: &AtomicU64,
+        poisoned: &AtomicU64,
     ) -> (V, CacheOutcome) {
         // fast path: shared read lock
         let seen = {
@@ -245,14 +278,22 @@ impl<K: Eq + Hash + Clone, V: Clone> FlightMap<K, V> {
                     .unwrap_or_else(|p| on_panic(panic_message(&p)));
                 {
                     let mut slots = self.slots.write().unwrap();
-                    slots.insert(
-                        key,
-                        Entry {
-                            slot: Slot::Ready(result.clone()),
-                            stamp: AtomicU64::new(self.stamp()),
-                        },
-                    );
-                    Self::evict(&mut slots, self.capacity, evictions);
+                    if transient(&result) {
+                        // poisoned-once: publish to the waiters below but
+                        // drop the slot, so the next request retries fresh
+                        // instead of replaying a panic or a deadline abort
+                        slots.remove(&key);
+                        poisoned.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        slots.insert(
+                            key,
+                            Entry {
+                                slot: Slot::Ready(result.clone()),
+                                stamp: AtomicU64::new(self.stamp()),
+                            },
+                        );
+                        Self::evict(&mut slots, self.capacity, evictions);
+                    }
                 }
                 {
                     let mut done = flight.done.lock().unwrap();
@@ -354,6 +395,9 @@ pub struct CacheStats {
     pub instantiations: AtomicU64,
     /// Ready symbolic entries dropped by the shape-level LRU bound.
     pub symbolic_evictions: AtomicU64,
+    /// Flights resolved poisoned-once (leader panicked or hit its
+    /// deadline): the result reached its waiters but was never cached.
+    pub poisoned: AtomicU64,
 }
 
 impl CacheStats {
@@ -391,6 +435,10 @@ impl CacheStats {
 
     pub fn symbolic_evictions(&self) -> u64 {
         self.symbolic_evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn poisoned(&self) -> u64 {
+        self.poisoned.load(Ordering::Relaxed)
     }
 }
 
@@ -461,9 +509,11 @@ impl CompileCache {
         let registry = &self.registry;
         let (result, outcome) = self.slots.get_or_run(
             key,
-            || compile_kernel(registry, spec, target),
-            |msg| Err(format!("compile pipeline panicked: {msg}")),
+            || compile_kernel(registry, spec, target, &CancelToken::none()),
+            |msg| Err(format!("{PANIC_MARKER} compile pipeline panicked: {msg}")),
+            transient_result,
             &self.stats.evictions,
+            &self.stats.poisoned,
         );
         match outcome {
             CacheOutcome::Hit => self.stats.hits.fetch_add(1, Ordering::Relaxed),
@@ -488,11 +538,63 @@ impl CompileCache {
         shape: u64,
         spec: &WorkloadSpec,
     ) -> (CacheResult, CacheOutcome, SymbolicUse) {
+        self.get_or_compile_shaped_cancellable(
+            key,
+            shape,
+            spec,
+            &CancelToken::none(),
+            &std::cell::Cell::new(0),
+        )
+    }
+
+    /// [`CompileCache::get_or_compile_shaped`] under a cooperative deadline,
+    /// with bounded secondhand retry: a caller that *waited* on a flight and
+    /// received a transient result (the leader panicked or hit *its*
+    /// deadline — the poisoned slot is already gone) retries up to
+    /// [`MAX_POISON_RETRIES`] times with a short backoff, as long as its own
+    /// deadline allows. Each retry increments `retries`. Leaders never
+    /// retry: their own transient result is authoritative for them.
+    pub fn get_or_compile_shaped_cancellable(
+        &self,
+        key: WorkloadKey,
+        shape: u64,
+        spec: &WorkloadSpec,
+        cancel: &CancelToken,
+        retries: &std::cell::Cell<u64>,
+    ) -> (CacheResult, CacheOutcome, SymbolicUse) {
+        let mut attempt = 0u32;
+        loop {
+            let (result, outcome, used) = self.shaped_attempt(key, shape, spec, cancel);
+            let secondhand_transient = outcome == CacheOutcome::Waited
+                && result.as_ref().err().is_some_and(|e| is_transient_error(e));
+            if secondhand_transient && attempt < MAX_POISON_RETRIES && !cancel.cancelled() {
+                attempt += 1;
+                retries.set(retries.get() + 1);
+                std::thread::sleep(std::time::Duration::from_micros(50 << attempt));
+                continue;
+            }
+            return (result, outcome, used);
+        }
+    }
+
+    /// One two-level lookup attempt (the body retried by
+    /// [`CompileCache::get_or_compile_shaped_cancellable`]).
+    fn shaped_attempt(
+        &self,
+        key: WorkloadKey,
+        shape: u64,
+        spec: &WorkloadSpec,
+        cancel: &CancelToken,
+    ) -> (CacheResult, CacheOutcome, SymbolicUse) {
         let target = key.target;
         let used = std::cell::Cell::new(SymbolicUse::None);
         let (result, outcome) = self.slots.get_or_run(
             key,
             || {
+                // a request that spent its whole budget queued aborts here,
+                // before any pipeline runs — the poisoned-once path below
+                // keeps the abort out of the cache
+                cancel.check("compile queue")?;
                 // leader for this (kernel, n): consult the shape level first
                 let (sym, probe) = self.shapes.get_or_run(
                     ShapeKey { shape, target },
@@ -501,7 +603,9 @@ impl CompileCache {
                     // path"; the concrete fallback below reproduces (and
                     // per-n-caches) whatever the pipeline does
                     |_| None,
+                    |_| false,
                     &self.stats.symbolic_evictions,
+                    &self.stats.poisoned,
                 );
                 match sym {
                     Some(artifact) => {
@@ -516,11 +620,13 @@ impl CompileCache {
                             .map(Arc::from)
                             .map_err(|e| e.message)
                     }
-                    None => compile_kernel(&self.registry, spec, target),
+                    None => compile_kernel(&self.registry, spec, target, cancel),
                 }
             },
-            |msg| Err(format!("compile pipeline panicked: {msg}")),
+            |msg| Err(format!("{PANIC_MARKER} compile pipeline panicked: {msg}")),
+            transient_result,
             &self.stats.evictions,
+            &self.stats.poisoned,
         );
         match outcome {
             CacheOutcome::Hit => self.stats.hits.fetch_add(1, Ordering::Relaxed),
@@ -568,20 +674,28 @@ pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
         .unwrap_or_else(|| "unknown panic".into())
 }
 
+/// Whether a cached compile result is transient (poison-once) rather than a
+/// deterministic, cacheable failure.
+fn transient_result(r: &CacheResult) -> bool {
+    r.as_ref().err().is_some_and(|e| is_transient_error(e))
+}
+
 /// Run the expensive pipeline for one spec/target through the registry.
-/// Deterministic in its inputs, so results (including failures) are safe to
-/// cache process-wide.
+/// Deterministic in its inputs (the cancel token only ever converts a slow
+/// compile into a transient, never-cached deadline abort), so settled
+/// results — failures included — are safe to cache process-wide.
 fn compile_kernel(
     registry: &BackendRegistry,
     spec: &WorkloadSpec,
     target: Target,
+    cancel: &CancelToken,
 ) -> CacheResult {
     let backend = registry
         .get(target)
         .ok_or_else(|| format!("no backend registered for target `{}`", target.name()))?;
     let wl = spec.workload();
     backend
-        .compile(&wl)
+        .compile_cancellable(&wl, cancel)
         .map(Arc::from)
         .map_err(|e| e.message)
 }
@@ -790,6 +904,175 @@ mod tests {
         // the freshest key is still resident
         let (_, o, _) = cache.get_or_compile(&spec("gemm", 9), Target::Seq);
         assert_eq!(o, CacheOutcome::Hit);
+    }
+
+    /// Test backend that panics on its first compile and then behaves like
+    /// the sequential reference — the minimal "crashed leader, healthy
+    /// retry" backend the poison-once path exists for.
+    struct FlakyBackend {
+        inner: crate::backend::SeqBackend,
+        armed: std::sync::atomic::AtomicBool,
+    }
+
+    impl FlakyBackend {
+        fn new() -> FlakyBackend {
+            FlakyBackend {
+                inner: crate::backend::SeqBackend::new(),
+                armed: std::sync::atomic::AtomicBool::new(true),
+            }
+        }
+    }
+
+    impl crate::backend::Backend for FlakyBackend {
+        fn target(&self) -> Target {
+            Target::Seq
+        }
+
+        fn name(&self) -> &'static str {
+            "flaky-seq"
+        }
+
+        fn compile(
+            &self,
+            wl: &crate::bench::workloads::Workload,
+        ) -> Result<Box<dyn Mapped>, crate::backend::CompileError> {
+            if self.armed.swap(false, Ordering::SeqCst) {
+                panic!("injected compile panic");
+            }
+            crate::backend::Backend::compile(&self.inner, wl)
+        }
+    }
+
+    #[test]
+    fn panicked_leader_poisons_once_and_the_next_request_retries_fresh() {
+        let mut registry = BackendRegistry::new();
+        registry.register(Arc::new(FlakyBackend::new()));
+        let cache = CompileCache::with_registry(registry);
+        let s = spec("gemm", 8);
+        let (r1, o1, _) = cache.get_or_compile(&s, Target::Seq);
+        let e1 = r1.expect_err("first compile panics");
+        assert!(e1.contains(PANIC_MARKER), "{e1}");
+        assert!(is_transient_error(&e1));
+        assert_eq!(o1, CacheOutcome::Miss);
+        assert_eq!(cache.stats.poisoned(), 1, "flight resolved poisoned-once");
+        assert_eq!(cache.len(), 0, "the poisoned slot is not resident");
+        // poison never sticks: the same key retries fresh and succeeds
+        let (r2, o2, _) = cache.get_or_compile(&s, Target::Seq);
+        assert!(r2.is_ok(), "{:?}", r2.err());
+        assert_eq!(o2, CacheOutcome::Miss, "fresh flight, not a cached panic");
+        assert_eq!(cache.stats.compiles(), cache.stats.misses());
+        // …and from here on it is an ordinary resident artifact
+        let (_, o3, _) = cache.get_or_compile(&s, Target::Seq);
+        assert_eq!(o3, CacheOutcome::Hit);
+    }
+
+    #[test]
+    fn deadline_aborts_are_transient_and_never_cached() {
+        let cache = CompileCache::new();
+        let s = spec("gemm", 8);
+        let key = WorkloadKey::of(&s, Target::Tcpa);
+        let expired = CancelToken::deadline_in(std::time::Duration::ZERO);
+        let retries = std::cell::Cell::new(0u64);
+        let (r1, o1, _) = cache.get_or_compile_shaped_cancellable(
+            key,
+            s.shape_fingerprint(),
+            &s,
+            &expired,
+            &retries,
+        );
+        let e1 = r1.expect_err("expired deadline aborts the compile");
+        assert!(crate::backend::is_deadline_error(&e1), "{e1}");
+        assert_eq!(o1, CacheOutcome::Miss);
+        assert_eq!(retries.get(), 0, "leaders never retry their own abort");
+        assert_eq!(cache.stats.poisoned(), 1);
+        // the abort did not alias the key: an undeadlined request compiles
+        let (r2, o2, _) = cache.get_or_compile_shaped(key, s.shape_fingerprint(), &s);
+        assert!(r2.is_ok(), "{:?}", r2.err());
+        assert_eq!(o2, CacheOutcome::Miss);
+    }
+
+    #[test]
+    fn waiters_on_a_poisoned_flight_retry_and_recover() {
+        use std::sync::atomic::AtomicBool;
+
+        /// Like [`FlakyBackend`], but the first (panicking) compile parks on
+        /// a gate so the test can guarantee a waiter joined the flight.
+        struct GatedFlaky {
+            inner: crate::backend::SeqBackend,
+            armed: AtomicBool,
+            gate: Arc<(Mutex<bool>, Condvar)>,
+        }
+
+        impl crate::backend::Backend for GatedFlaky {
+            fn target(&self) -> Target {
+                Target::Seq
+            }
+
+            fn name(&self) -> &'static str {
+                "gated-flaky-seq"
+            }
+
+            fn compile(
+                &self,
+                wl: &crate::bench::workloads::Workload,
+            ) -> Result<Box<dyn Mapped>, crate::backend::CompileError> {
+                if self.armed.swap(false, Ordering::SeqCst) {
+                    let (lock, cv) = &*self.gate;
+                    let mut open = lock.lock().unwrap();
+                    while !*open {
+                        open = cv.wait(open).unwrap();
+                    }
+                    panic!("injected leader panic");
+                }
+                crate::backend::Backend::compile(&self.inner, wl)
+            }
+        }
+
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let mut registry = BackendRegistry::new();
+        registry.register(Arc::new(GatedFlaky {
+            inner: crate::backend::SeqBackend::new(),
+            armed: AtomicBool::new(true),
+            gate: gate.clone(),
+        }));
+        let cache = Arc::new(CompileCache::with_registry(registry));
+        let s = Arc::new(spec("gemm", 8));
+        let key = WorkloadKey::of(&s, Target::Seq);
+        let shape = s.shape_fingerprint();
+
+        let spawn_probe = |c: Arc<CompileCache>, s: Arc<WorkloadSpec>| {
+            thread::spawn(move || {
+                let retries = std::cell::Cell::new(0u64);
+                let (r, o, _) = c.get_or_compile_shaped_cancellable(
+                    key,
+                    shape,
+                    &s,
+                    &CancelToken::none(),
+                    &retries,
+                );
+                (r, o, retries.get())
+            })
+        };
+        let leader = spawn_probe(cache.clone(), s.clone());
+        let waiter = spawn_probe(cache.clone(), s.clone());
+        // both probes are in the map (one leading, one joined or about to
+        // lead the retry) before the gate opens and the leader panics
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        let (lr, _, l_retries) = leader.join().unwrap();
+        let (wr, _, w_retries) = waiter.join().unwrap();
+        // exactly one probe ate the injected panic; the other — whether it
+        // waited (and retried the poisoned flight) or led fresh — recovered
+        let (failed, recovered) = if lr.is_err() { (lr, wr) } else { (wr, lr) };
+        let msg = failed.expect_err("one probe observes the panic");
+        assert!(msg.contains(PANIC_MARKER), "{msg}");
+        assert!(recovered.is_ok(), "waiters never strand on a poisoned flight");
+        assert_eq!(cache.stats.poisoned(), 1);
+        assert!(l_retries + w_retries <= MAX_POISON_RETRIES as u64);
     }
 
     #[test]

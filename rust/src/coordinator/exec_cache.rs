@@ -16,14 +16,19 @@
 //! size-bounded LRU eviction (client-controlled key space must not grow
 //! server memory without bound; in-flight executions are never evicted),
 //! and cached failures (execution errors — timing violations, missing
-//! pipelined latency — are as deterministic as the reports).
+//! pipelined latency — are as deterministic as the reports). Like the
+//! compile cache, *transient* results (a panicked leader, a deadline abort)
+//! resolve poisoned-once: waiters still receive the error, the slot is
+//! dropped, and the next request retries fresh.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::backend::ExecReport;
 
-use super::cache::{CacheOutcome, FlightMap, WorkloadKey};
+use super::cache::{
+    is_transient_error, CacheOutcome, FlightMap, WorkloadKey, MAX_POISON_RETRIES, PANIC_MARKER,
+};
 
 /// Default bound on resident execution reports per process. Each entry
 /// holds one invocation's output arrays (bounded by the spec validator's
@@ -65,6 +70,9 @@ pub struct ExecCacheStats {
     pub execs: AtomicU64,
     /// Ready entries dropped by the LRU bound.
     pub evictions: AtomicU64,
+    /// Flights resolved poisoned-once (leader panicked or hit its
+    /// deadline): the result reached its waiters but was never cached.
+    pub poisoned: AtomicU64,
 }
 
 impl ExecCacheStats {
@@ -86,6 +94,10 @@ impl ExecCacheStats {
 
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn poisoned(&self) -> u64 {
+        self.poisoned.load(Ordering::Relaxed)
     }
 }
 
@@ -133,21 +145,51 @@ impl ExecCache {
         key: ExecKey,
         exec: impl FnOnce() -> Result<ExecReport, String>,
     ) -> (ExecResult, CacheOutcome) {
-        let (result, outcome) = self.slots.get_or_run(
-            key,
-            || exec().map(Arc::new),
-            |msg| Err(format!("execution pipeline panicked: {msg}")),
-            &self.stats.evictions,
-        );
-        match outcome {
-            CacheOutcome::Hit => self.stats.hits.fetch_add(1, Ordering::Relaxed),
-            CacheOutcome::Waited => self.stats.waits.fetch_add(1, Ordering::Relaxed),
-            CacheOutcome::Miss => {
-                self.stats.execs.fetch_add(1, Ordering::Relaxed);
-                self.stats.misses.fetch_add(1, Ordering::Relaxed)
+        self.get_or_run_tracked(key, exec, &std::cell::Cell::new(0))
+    }
+
+    /// [`ExecCache::get_or_run`] with bounded secondhand retry: a caller
+    /// that *waited* on a flight and received a transient result (the
+    /// leader panicked or aborted on *its* deadline — the poisoned slot is
+    /// already gone) retries up to [`MAX_POISON_RETRIES`] times with a
+    /// short backoff. Each retry increments `retries`. The `exec` closure
+    /// is consumed by the first attempt that leads; retried attempts can
+    /// only lead if the prior attempt waited, so it is never run twice.
+    pub fn get_or_run_tracked(
+        &self,
+        key: ExecKey,
+        exec: impl FnOnce() -> Result<ExecReport, String>,
+        retries: &std::cell::Cell<u64>,
+    ) -> (ExecResult, CacheOutcome) {
+        let mut run = Some(exec);
+        let mut attempt = 0u32;
+        loop {
+            let (result, outcome) = self.slots.get_or_run(
+                key,
+                || (run.take().expect("exec closure led at most once"))().map(Arc::new),
+                |msg| Err(format!("{PANIC_MARKER} execution pipeline panicked: {msg}")),
+                |r| r.as_ref().err().is_some_and(|e| is_transient_error(e)),
+                &self.stats.evictions,
+                &self.stats.poisoned,
+            );
+            match outcome {
+                CacheOutcome::Hit => self.stats.hits.fetch_add(1, Ordering::Relaxed),
+                CacheOutcome::Waited => self.stats.waits.fetch_add(1, Ordering::Relaxed),
+                CacheOutcome::Miss => {
+                    self.stats.execs.fetch_add(1, Ordering::Relaxed);
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed)
+                }
+            };
+            let secondhand_transient = outcome == CacheOutcome::Waited
+                && result.as_ref().err().is_some_and(|e| is_transient_error(e));
+            if secondhand_transient && attempt < MAX_POISON_RETRIES {
+                attempt += 1;
+                retries.set(retries.get() + 1);
+                std::thread::sleep(std::time::Duration::from_micros(50 << attempt));
+                continue;
             }
-        };
-        (result, outcome)
+            return (result, outcome);
+        }
     }
 }
 
@@ -220,14 +262,23 @@ mod tests {
     }
 
     #[test]
-    fn panics_resolve_to_cached_errors() {
+    fn panics_poison_once_and_the_next_request_retries_fresh() {
         let cache = ExecCache::new();
         let (r, o) = cache.get_or_run(key(3, 0, 1), || panic!("kaboom"));
         assert_eq!(o, CacheOutcome::Miss);
-        assert!(r.unwrap_err().contains("kaboom"));
+        let msg = r.unwrap_err();
+        assert!(msg.contains("kaboom"), "{msg}");
+        assert!(is_transient_error(&msg), "panic results carry the marker");
+        assert_eq!(cache.stats.poisoned(), 1);
+        assert_eq!(cache.len(), 0, "the poisoned slot is not resident");
+        // poison never sticks: the same key re-executes and succeeds
         let (r2, o2) = cache.get_or_run(key(3, 0, 1), || Ok(report(1)));
-        assert_eq!(o2, CacheOutcome::Hit, "panic results are cached too");
-        assert!(r2.is_err());
+        assert_eq!(o2, CacheOutcome::Miss, "fresh flight, not a cached panic");
+        assert!(r2.is_ok());
+        // …and from here on it is an ordinary resident report
+        let (_, o3) = cache.get_or_run(key(3, 0, 1), || panic!("must not rerun"));
+        assert_eq!(o3, CacheOutcome::Hit);
+        assert_eq!(cache.stats.execs(), cache.stats.misses());
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Deterministic fault injection for the resilience chaos suite.
+//!
+//! A [`FaultPlan`] is a *seeded, pure* decision function: whether a fault
+//! fires at a given site for a given request id is a hash of
+//! `(seed, site, id)` — no RNG state, no ordering dependence — so a chaos
+//! test replaying the same trace against the same plan injects exactly the
+//! same faults regardless of worker interleaving, and a failure reproduces
+//! from its seed alone.
+//!
+//! The module (and the hooks that consult it in [`super::session`] and
+//! [`super::pool`]) is compiled only under
+//! `#[cfg(any(test, feature = "fault-injection"))]`: production builds
+//! carry no injection branches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// A named injection site in the serving plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Panic inside the compile half of the exec closure — exercises the
+    /// compile/exec single-flight panic quarantine.
+    CompilePanic,
+    /// Sleep [`FaultPlan::delay`] before compiling — makes deadlines
+    /// observable at stage boundaries.
+    CompileDelay,
+    /// Panic after compile, before the simulator runs — poisons the exec
+    /// flight with a partially-executed request.
+    ExecPanic,
+    /// Sleep [`FaultPlan::delay`] in the worker loop between dequeue and
+    /// handling — backs the queue up so admission control engages.
+    QueueStall,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 4] = [
+        FaultSite::CompilePanic,
+        FaultSite::CompileDelay,
+        FaultSite::ExecPanic,
+        FaultSite::QueueStall,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultSite::CompilePanic => "compile_panic",
+            FaultSite::CompileDelay => "compile_delay",
+            FaultSite::ExecPanic => "exec_panic",
+            FaultSite::QueueStall => "queue_stall",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            FaultSite::CompilePanic => 0,
+            FaultSite::CompileDelay => 1,
+            FaultSite::ExecPanic => 2,
+            FaultSite::QueueStall => 3,
+        }
+    }
+}
+
+/// A seeded injection schedule: per-site firing rates in per-mille of
+/// requests, one shared delay for the stall sites, and per-site counters of
+/// faults actually injected (what the chaos suite reconciles against).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    rates: [u16; 4],
+    delay: Duration,
+    injected: [AtomicU64; 4],
+}
+
+impl FaultPlan {
+    /// An empty plan (no site fires) under `seed`.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Fire `site` for `per_mille`‰ of request ids (0 = never, 1000 =
+    /// every request).
+    pub fn with_rate(mut self, site: FaultSite, per_mille: u16) -> FaultPlan {
+        self.rates[site.index()] = per_mille.min(1000);
+        self
+    }
+
+    /// Duration the delay sites sleep when they fire.
+    pub fn with_delay(mut self, delay: Duration) -> FaultPlan {
+        self.delay = delay;
+        self
+    }
+
+    pub fn delay(&self) -> Duration {
+        self.delay
+    }
+
+    /// Decide (purely, from `(seed, site, request id)`) whether `site`
+    /// fires for this request, counting fires in [`FaultPlan::injected`].
+    pub fn should_fire(&self, site: FaultSite, request_id: u64) -> bool {
+        let rate = self.rates[site.index()];
+        if rate == 0 {
+            return false;
+        }
+        // FNV-1a over the decision tuple: deterministic per (seed, site, id)
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in self
+            .seed
+            .to_le_bytes()
+            .into_iter()
+            .chain([site.index() as u8])
+            .chain(request_id.to_le_bytes())
+        {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        let fire = h % 1000 < rate as u64;
+        if fire {
+            self.injected[site.index()].fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// How many times `site` has actually fired.
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.injected[site.index()].load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_in_seed_site_and_id() {
+        let a = FaultPlan::new(7).with_rate(FaultSite::CompilePanic, 500);
+        let b = FaultPlan::new(7).with_rate(FaultSite::CompilePanic, 500);
+        for id in 0..64 {
+            assert_eq!(
+                a.should_fire(FaultSite::CompilePanic, id),
+                b.should_fire(FaultSite::CompilePanic, id),
+                "id={id}"
+            );
+        }
+        assert_eq!(
+            a.injected(FaultSite::CompilePanic),
+            b.injected(FaultSite::CompilePanic)
+        );
+    }
+
+    #[test]
+    fn rates_bound_the_firing_fraction() {
+        let never = FaultPlan::new(1).with_rate(FaultSite::ExecPanic, 0);
+        let always = FaultPlan::new(1).with_rate(FaultSite::ExecPanic, 1000);
+        let half = FaultPlan::new(1).with_rate(FaultSite::ExecPanic, 500);
+        let mut fired = 0;
+        for id in 0..1000u64 {
+            assert!(!never.should_fire(FaultSite::ExecPanic, id));
+            assert!(always.should_fire(FaultSite::ExecPanic, id));
+            if half.should_fire(FaultSite::ExecPanic, id) {
+                fired += 1;
+            }
+        }
+        assert!(
+            (300..=700).contains(&fired),
+            "500‰ should fire roughly half the time, got {fired}/1000"
+        );
+        assert_eq!(half.injected(FaultSite::ExecPanic), fired);
+    }
+
+    #[test]
+    fn sites_decide_independently() {
+        let plan = FaultPlan::new(3)
+            .with_rate(FaultSite::CompilePanic, 1000)
+            .with_rate(FaultSite::QueueStall, 0);
+        assert!(plan.should_fire(FaultSite::CompilePanic, 5));
+        assert!(!plan.should_fire(FaultSite::QueueStall, 5));
+        assert_eq!(plan.injected(FaultSite::CompilePanic), 1);
+        assert_eq!(plan.injected(FaultSite::QueueStall), 0);
+        for site in FaultSite::ALL {
+            assert!(!site.name().is_empty());
+        }
+    }
+}

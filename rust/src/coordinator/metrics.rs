@@ -167,6 +167,25 @@ pub struct Metrics {
     pub peak_queue_depth: u64,
     /// Workers merged into this aggregate (1 for a plain session).
     pub workers: u64,
+    /// Requests shed at admission by the bounded queue (disjoint from
+    /// `failed`: `shed + failed + served == requests`).
+    pub shed: u64,
+    /// Requests that expired their deadline (at admission, at dequeue, at a
+    /// pipeline stage, or before execution). A subset of `failed`.
+    pub timeouts: u64,
+    /// Requests served by falling back to the sequential backend after the
+    /// requested array target failed to compile. A subset of `served`.
+    pub degraded: u64,
+    /// Secondhand poison retries: attempts that waited on a flight, saw a
+    /// transient (panicked/expired-leader) result and re-ran. Equals the sum
+    /// of per-response `retries` fields.
+    pub retries: u64,
+    /// Panics quarantined at the worker level plus workers that died outside
+    /// the quarantine (counted at join).
+    pub worker_panics: u64,
+    /// Flights resolved poisoned-once across both process-wide caches,
+    /// snapshotted by [`Metrics::absorb_cache_stats`].
+    pub poisoned_flights: u64,
 }
 
 impl Default for Metrics {
@@ -193,6 +212,12 @@ impl Default for Metrics {
             distinct_shapes: HashSet::new(),
             peak_queue_depth: 0,
             workers: 0,
+            shed: 0,
+            timeouts: 0,
+            degraded: 0,
+            retries: 0,
+            worker_panics: 0,
+            poisoned_flights: 0,
         }
     }
 }
@@ -263,6 +288,7 @@ impl Metrics {
         self.compile_evictions = compile.evictions();
         self.exec_evictions = exec.evictions();
         self.symbolic_compiles = compile.symbolic_compiles();
+        self.poisoned_flights = compile.poisoned() + exec.poisoned();
     }
 
     /// Record how the symbolic (per-shape) compile level served a request:
@@ -326,6 +352,13 @@ impl Metrics {
             .extend(other.distinct_kernels.iter().copied());
         self.peak_queue_depth = self.peak_queue_depth.max(other.peak_queue_depth);
         self.workers += other.workers.max(1);
+        self.shed += other.shed;
+        self.timeouts += other.timeouts;
+        self.degraded += other.degraded;
+        self.retries += other.retries;
+        self.worker_panics += other.worker_panics;
+        // snapshot of the same process-wide counters, not a per-worker sum
+        self.poisoned_flights = self.poisoned_flights.max(other.poisoned_flights);
     }
 
     /// All-target latency histogram (merged per-target views) — what the
@@ -400,6 +433,16 @@ impl Metrics {
             self.symbolic_compiles,
             self.instantiations,
             self.symbolic_hits,
+        ));
+        out.push_str(&format!(
+            "\n  resilience: shed={} timeouts={} degraded={} retries={} poisoned_flights={} \
+             worker_panics={}",
+            self.shed,
+            self.timeouts,
+            self.degraded,
+            self.retries,
+            self.poisoned_flights,
+            self.worker_panics,
         ));
         out.push_str(&format!(
             "\n  distinct kernels: {}{saturated} | peak queue depth: {} | workers merged: {}",
@@ -541,6 +584,37 @@ mod tests {
         let report = a.report();
         assert!(
             report.contains("symbolic: distinct_shapes=3 compiles=2 instantiations=4 hits=2"),
+            "{report}"
+        );
+    }
+
+    #[test]
+    fn resilience_counters_merge_and_report() {
+        let mut a = Metrics::default();
+        a.shed = 2;
+        a.timeouts = 1;
+        a.retries = 3;
+        let mut b = Metrics::default();
+        b.timeouts = 2;
+        b.degraded = 1;
+        b.worker_panics = 1;
+        a.merge(&b);
+        assert_eq!((a.shed, a.timeouts, a.degraded), (2, 3, 1));
+        assert_eq!((a.retries, a.worker_panics), (3, 1));
+        let compile = CacheStats::default();
+        compile
+            .poisoned
+            .store(4, std::sync::atomic::Ordering::Relaxed);
+        let exec = ExecCacheStats::default();
+        exec.poisoned.store(1, std::sync::atomic::Ordering::Relaxed);
+        a.absorb_cache_stats(&compile, &exec);
+        assert_eq!(a.poisoned_flights, 5, "poison counts sum across both caches");
+        let report = a.report();
+        assert!(
+            report.contains(
+                "resilience: shed=2 timeouts=3 degraded=1 retries=3 poisoned_flights=5 \
+                 worker_panics=1"
+            ),
             "{report}"
         );
     }

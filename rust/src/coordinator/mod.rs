@@ -35,16 +35,27 @@
 //! * [`wire`] — the versioned JSON wire protocol (`repro serve
 //!   --requests <file.jsonl|->`): requests in, completion-order responses
 //!   out, correlated by the echoed client `id`.
+//! * Resilience plane (`rust/DESIGN.md` §10): bounded admission with typed
+//!   load shedding ([`pool::PoolConfig`]), per-request deadlines checked at
+//!   admission/dequeue/stage boundaries via
+//!   [`crate::backend::CancelToken`], graceful degradation onto the
+//!   sequential backend ([`session::Request::allow_fallback`]),
+//!   poisoned-once panic quarantine in both single-flight caches, and
+//!   deterministic fault injection ([`faults`], chaos builds only).
 
 pub mod cache;
 pub mod exec_cache;
+#[cfg(any(test, feature = "fault-injection"))]
+pub mod faults;
 pub mod metrics;
 pub mod pool;
 pub mod session;
 pub mod wire;
 
-pub use cache::{CacheOutcome, CompileCache, ShapeKey, SymbolicUse, WorkloadKey};
+pub use cache::{is_transient_error, CacheOutcome, CompileCache, ShapeKey, SymbolicUse, WorkloadKey};
 pub use exec_cache::{ExecCache, ExecKey};
+#[cfg(any(test, feature = "fault-injection"))]
+pub use faults::{FaultPlan, FaultSite};
 pub use metrics::Metrics;
-pub use pool::{serve as serve_pool, PoolHandle, PoolSender};
-pub use session::{Request, Response, Session, Target, WorkloadRef};
+pub use pool::{serve as serve_pool, PoolConfig, PoolHandle, PoolSender};
+pub use session::{ErrorKind, Request, Response, Session, Target, WorkloadRef};

@@ -8,39 +8,128 @@
 //! never blocks the others. Shutdown is graceful: dropping the
 //! [`PoolSender`] closes the queue, every worker finishes its in-flight
 //! request, and [`PoolHandle::join`] returns the merged [`Metrics`].
+//!
+//! The pool is also the admission edge of the resilience plane
+//! ([`PoolConfig`]): a bounded queue sheds overload at enqueue time with a
+//! typed [`ErrorKind::Shed`] response instead of letting latency grow
+//! without bound, and per-request deadlines are stamped *at admission* so
+//! time spent queued counts against the budget ([`Session::handle_with`]
+//! checks the same token at dequeue and at every pipeline stage). Every
+//! request — admitted, shed, or expired — yields exactly one response on
+//! the response channel.
 
-use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
+use std::time::{Duration, Instant};
 
+use crate::backend::{CancelToken, DEADLINE_MARKER};
 use crate::bench::spec::WorkloadCatalog;
 
 use super::cache::CompileCache;
 use super::exec_cache::ExecCache;
+#[cfg(any(test, feature = "fault-injection"))]
+use super::faults::{FaultPlan, FaultSite};
 use super::metrics::Metrics;
-use super::session::{Request, Response, Session};
+use super::session::{ErrorKind, Request, Response, Session};
+
+/// Admission-control and resilience knobs for a pool. `Default` is the
+/// pre-resilience behaviour: unbounded queue, no deadline, no faults.
+#[derive(Debug, Clone, Default)]
+pub struct PoolConfig {
+    /// Most requests allowed to sit in the queue; beyond it, `send` sheds
+    /// the request with an [`ErrorKind::Shed`] response. `None` = unbounded.
+    pub queue_cap: Option<usize>,
+    /// Deadline applied to requests that do not carry their own
+    /// [`Request::deadline_ms`], measured from admission.
+    pub default_deadline_ms: Option<u64>,
+    /// Deterministic fault plan installed into every worker (chaos tests).
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+/// A request that passed admission, carrying its absolute deadline (stamped
+/// at enqueue so queue wait burns budget).
+struct Admitted {
+    req: Request,
+    deadline: Option<Instant>,
+}
 
 /// Request handle into the pool. Cloneable; dropping every clone shuts the
 /// pool down once the queue drains.
 #[derive(Clone)]
 pub struct PoolSender {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::Sender<Admitted>,
+    /// Response channel, so shed/expired requests answer without queuing.
+    resp_tx: mpsc::Sender<Response>,
     depth: Arc<AtomicI64>,
+    queue_cap: Option<usize>,
+    default_deadline_ms: Option<u64>,
+    shed: Arc<AtomicU64>,
+    admission_timeouts: Arc<AtomicU64>,
 }
 
 impl PoolSender {
+    /// Admit, shed, or expire one request. Shed and already-expired
+    /// requests are answered immediately on the response channel (never
+    /// queued), so the one-response-per-request contract holds either way.
+    /// `Err` means the pool is gone (both channels closed).
     pub fn send(&self, req: Request) -> Result<(), mpsc::SendError<Request>> {
-        self.depth.fetch_add(1, Ordering::SeqCst);
-        let r = self.tx.send(req);
-        if r.is_err() {
-            self.depth.fetch_sub(1, Ordering::SeqCst);
+        if let Some(cap) = self.queue_cap {
+            if self.queue_depth() >= cap as u64 {
+                self.shed.fetch_add(1, Ordering::SeqCst);
+                let resp = Response::failure(
+                    &req,
+                    format!("request shed: queue at capacity {cap}"),
+                    ErrorKind::Shed,
+                    false,
+                    false,
+                    false,
+                    Duration::ZERO,
+                );
+                return self.resp_tx.send(resp).map_err(|_| mpsc::SendError(req));
+            }
         }
-        r
+        let deadline = req
+            .deadline_ms
+            .or(self.default_deadline_ms)
+            .map(|ms| Instant::now() + Duration::from_millis(ms));
+        if let Some(d) = deadline {
+            // a zero (or already-spent) budget expires at admission: answer
+            // now rather than burning a queue slot on a dead request
+            if Instant::now() >= d {
+                self.admission_timeouts.fetch_add(1, Ordering::SeqCst);
+                let resp = Response::failure(
+                    &req,
+                    format!("{DEADLINE_MARKER} deadline exceeded at admission"),
+                    ErrorKind::Timeout,
+                    false,
+                    false,
+                    false,
+                    Duration::ZERO,
+                );
+                return self.resp_tx.send(resp).map_err(|_| mpsc::SendError(req));
+            }
+        }
+        self.depth.fetch_add(1, Ordering::SeqCst);
+        let r = self.tx.send(Admitted { req, deadline });
+        match r {
+            Ok(()) => Ok(()),
+            Err(mpsc::SendError(a)) => {
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+                Err(mpsc::SendError(a.req))
+            }
+        }
     }
 
     /// Requests enqueued but not yet picked up by a worker.
     pub fn queue_depth(&self) -> u64 {
         self.depth.load(Ordering::SeqCst).max(0) as u64
+    }
+
+    /// Requests shed at admission so far.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::SeqCst)
     }
 }
 
@@ -49,6 +138,8 @@ pub struct PoolHandle {
     workers: Vec<thread::JoinHandle<Metrics>>,
     cache: Arc<CompileCache>,
     exec_cache: Arc<ExecCache>,
+    shed: Arc<AtomicU64>,
+    admission_timeouts: Arc<AtomicU64>,
 }
 
 impl PoolHandle {
@@ -65,13 +156,29 @@ impl PoolHandle {
     }
 
     /// Wait for every worker to drain and exit; returns the merged metrics
-    /// with the shared caches' eviction counters snapshotted in.
+    /// with the shared caches' eviction counters snapshotted in, plus the
+    /// admission-side shed/timeout counts. A worker that died to a panic
+    /// the quarantine could not catch is *counted* ([`Metrics::worker_panics`]),
+    /// never propagated: join always returns the aggregate.
     pub fn join(self) -> Metrics {
         let mut total = Metrics::default();
         for w in self.workers {
-            let m = w.join().expect("pool worker panicked");
-            total.merge(&m);
+            match w.join() {
+                Ok(m) => total.merge(&m),
+                Err(_) => {
+                    // the worker's own metrics are lost with its stack, but
+                    // the aggregate stays well-formed and the death is visible
+                    total.worker_panics += 1;
+                    total.workers += 1;
+                }
+            }
         }
+        let admission_timeouts = self.admission_timeouts.load(Ordering::SeqCst);
+        total.shed += self.shed.load(Ordering::SeqCst);
+        // admission-expired requests were answered as failures by the
+        // sender; fold them into the same counters a worker would have used
+        total.timeouts += admission_timeouts;
+        total.failed += admission_timeouts;
         total.absorb_cache_stats(&self.cache.stats, &self.exec_cache.stats);
         total
     }
@@ -111,11 +218,29 @@ pub fn serve_with_caches(
     exec_cache: Arc<ExecCache>,
     catalog: Arc<WorkloadCatalog>,
 ) -> (PoolSender, mpsc::Receiver<Response>, PoolHandle) {
+    serve_configured(n_workers, cache, exec_cache, catalog, PoolConfig::default())
+}
+
+/// Start a pool with explicit caches, catalog *and* resilience
+/// configuration (admission bound, default deadline, fault plan).
+pub fn serve_configured(
+    n_workers: usize,
+    cache: Arc<CompileCache>,
+    exec_cache: Arc<ExecCache>,
+    catalog: Arc<WorkloadCatalog>,
+    config: PoolConfig,
+) -> (PoolSender, mpsc::Receiver<Response>, PoolHandle) {
     let n = n_workers.max(1);
-    let (req_tx, req_rx) = mpsc::channel::<Request>();
+    let (req_tx, req_rx) = mpsc::channel::<Admitted>();
     let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    // the admission edge answers shed/expired requests directly; its sender
+    // clone lives in the PoolSender, so the response stream still ends once
+    // every PoolSender clone is dropped and the workers drain
+    let admission_tx = resp_tx.clone();
     let shared_rx = Arc::new(Mutex::new(req_rx));
     let depth = Arc::new(AtomicI64::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    let admission_timeouts = Arc::new(AtomicU64::new(0));
 
     let mut workers = Vec::with_capacity(n);
     for _ in 0..n {
@@ -125,37 +250,53 @@ pub fn serve_with_caches(
         let worker_exec = exec_cache.clone();
         let worker_catalog = catalog.clone();
         let depth = depth.clone();
+        #[cfg(any(test, feature = "fault-injection"))]
+        let faults = config.faults.clone();
         workers.push(thread::spawn(move || {
-            let mut session =
-                Session::with_shared(worker_cache, worker_exec, worker_catalog);
+            let mut session = Session::with_shared(worker_cache, worker_exec, worker_catalog);
             session.metrics.workers = 1;
+            #[cfg(any(test, feature = "fault-injection"))]
+            if let Some(plan) = faults.clone() {
+                session.set_faults(plan);
+            }
             loop {
                 // Hold the queue lock only while blocked in recv; handling
-                // happens unlocked so workers overlap freely.
-                let req = {
-                    let guard = rx.lock().unwrap();
+                // happens unlocked so workers overlap freely. A sibling
+                // worker dying with the lock held must not take the queue
+                // with it: recover the guard from the poison.
+                let admitted = {
+                    let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
                     guard.recv()
                 };
-                let req = match req {
-                    Ok(r) => r,
+                let Admitted { req, deadline } = match admitted {
+                    Ok(a) => a,
                     Err(_) => break, // every sender dropped: drain complete
                 };
                 // backlog after taking this request off the queue
                 let backlog = depth.fetch_sub(1, Ordering::SeqCst) - 1;
                 session.metrics.observe_queue_depth(backlog.max(0) as u64);
+                #[cfg(any(test, feature = "fault-injection"))]
+                if let Some(plan) = faults.as_deref() {
+                    if plan.should_fire(FaultSite::QueueStall, req.id) {
+                        std::thread::sleep(plan.delay());
+                    }
+                }
+                let cancel = deadline.map(CancelToken::at).unwrap_or_default();
                 // A panic inside handle must not kill the worker silently:
                 // clients count one response per request, so a vanished
                 // worker would deadlock them. Convert it to an error reply.
                 let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                    || session.handle(&req),
+                    || session.handle_with(&req, &cancel),
                 ));
                 let resp = match caught {
                     Ok(r) => r,
                     Err(p) => {
                         session.metrics.failed += 1;
+                        session.metrics.worker_panics += 1;
                         Response::failure(
                             &req,
                             format!("worker panicked: {}", super::cache::panic_message(&p)),
+                            ErrorKind::Failed,
                             false,
                             false,
                             false,
@@ -175,13 +316,20 @@ pub fn serve_with_caches(
     (
         PoolSender {
             tx: req_tx,
+            resp_tx: admission_tx,
             depth,
+            queue_cap: config.queue_cap,
+            default_deadline_ms: config.default_deadline_ms,
+            shed: shed.clone(),
+            admission_timeouts: admission_timeouts.clone(),
         },
         resp_rx,
         PoolHandle {
             workers,
             cache,
             exec_cache,
+            shed,
+            admission_timeouts,
         },
     )
 }
@@ -195,8 +343,25 @@ pub fn run_trace(
     n_workers: usize,
     trace: &[Request],
 ) -> (std::time::Duration, Metrics, Vec<Response>) {
+    run_trace_configured(n_workers, trace, PoolConfig::default())
+}
+
+/// [`run_trace`] under an explicit [`PoolConfig`] (bounded queue, default
+/// deadline, fault plan). Shed and expired requests still produce exactly
+/// one response each, so the response count always equals the trace length.
+pub fn run_trace_configured(
+    n_workers: usize,
+    trace: &[Request],
+    config: PoolConfig,
+) -> (std::time::Duration, Metrics, Vec<Response>) {
     let t0 = std::time::Instant::now();
-    let (tx, rx, handle) = serve(n_workers);
+    let (tx, rx, handle) = serve_configured(
+        n_workers,
+        Arc::new(CompileCache::new()),
+        Arc::new(ExecCache::new()),
+        Arc::new(WorkloadCatalog::builtin()),
+        config,
+    );
     for r in trace {
         tx.send(r.clone()).expect("pool alive");
     }
@@ -290,5 +455,56 @@ mod tests {
         assert!(got.iter().all(|r| r.error.is_none()));
         drop(tx);
         handle.join();
+    }
+
+    #[test]
+    fn zero_capacity_queue_sheds_every_request() {
+        let config = PoolConfig {
+            queue_cap: Some(0),
+            ..PoolConfig::default()
+        };
+        let trace: Vec<Request> = (0..3).map(|i| req(i, "gemm", Target::Tcpa, i)).collect();
+        let (_, m, responses) = run_trace_configured(2, &trace, config);
+        assert_eq!(responses.len(), 3, "shed requests still answer");
+        for r in &responses {
+            assert_eq!(r.error_kind, Some(ErrorKind::Shed), "{:?}", r.error);
+            assert!(r.error.as_deref().unwrap_or("").contains("shed"));
+        }
+        assert_eq!(m.shed, 3);
+        assert_eq!(m.served, 0);
+    }
+
+    #[test]
+    fn zero_default_deadline_expires_at_admission() {
+        let config = PoolConfig {
+            default_deadline_ms: Some(0),
+            ..PoolConfig::default()
+        };
+        let trace: Vec<Request> = (0..2).map(|i| req(i, "gemm", Target::Tcpa, i)).collect();
+        let (_, m, responses) = run_trace_configured(1, &trace, config);
+        assert_eq!(responses.len(), 2);
+        for r in &responses {
+            assert_eq!(r.error_kind, Some(ErrorKind::Timeout));
+            assert!(r.error.as_deref().unwrap_or("").contains("[deadline]"));
+        }
+        assert_eq!(m.timeouts, 2);
+        assert_eq!(m.failed, 2);
+        assert_eq!(m.shed + m.failed + m.served, 2, "response identity");
+    }
+
+    #[test]
+    fn join_survives_a_worker_panic() {
+        // a worker thread dying outside the quarantine must not panic join:
+        // the aggregate stays well-formed and the death is counted
+        let handle = PoolHandle {
+            workers: vec![thread::spawn(|| -> Metrics { panic!("worker died") })],
+            cache: Arc::new(CompileCache::new()),
+            exec_cache: Arc::new(ExecCache::new()),
+            shed: Arc::new(AtomicU64::new(0)),
+            admission_timeouts: Arc::new(AtomicU64::new(0)),
+        };
+        let m = handle.join();
+        assert_eq!(m.worker_panics, 1);
+        assert_eq!(m.workers, 1);
     }
 }

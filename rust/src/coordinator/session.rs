@@ -17,6 +17,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
+use crate::backend::{is_deadline_error, CancelToken};
 pub use crate::backend::Target;
 use crate::bench::spec::{WorkloadCatalog, WorkloadSpec};
 use crate::ir::loopnest::ArrayData;
@@ -25,9 +26,50 @@ use crate::runtime::golden::GoldenService;
 
 use crate::util::json::Json;
 
-use super::cache::{CacheOutcome, CompileCache, SymbolicUse, WorkloadKey};
+use super::cache::{is_transient_error, CacheOutcome, CompileCache, SymbolicUse, WorkloadKey};
 use super::exec_cache::{ExecCache, ExecKey};
+#[cfg(any(test, feature = "fault-injection"))]
+use super::faults::{FaultPlan, FaultSite};
 use super::metrics::Metrics;
+
+/// Prefix the session tags onto compile failures inside the exec closure,
+/// so the classification (compile failure vs. execution failure) survives
+/// exec-cache round trips — the degradation guard keys on it.
+pub(crate) const COMPILE_FAILED_PREFIX: &str = "compile failed: ";
+
+/// Typed classification of a failure response — what the resilience
+/// counters in [`Metrics`] reconcile against per response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Rejected at admission: the bounded queue was at capacity.
+    Shed,
+    /// A deadline expired — at admission, at dequeue, or at a pipeline
+    /// stage boundary.
+    Timeout,
+    /// Any other failure: resolution, compile, execution, worker panic.
+    Failed,
+}
+
+impl ErrorKind {
+    /// Stable wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrorKind::Shed => "shed",
+            ErrorKind::Timeout => "timeout",
+            ErrorKind::Failed => "failed",
+        }
+    }
+
+    /// Inverse of [`ErrorKind::name`].
+    pub fn parse(s: &str) -> Option<ErrorKind> {
+        match s {
+            "shed" => Some(ErrorKind::Shed),
+            "timeout" => Some(ErrorKind::Timeout),
+            "failed" => Some(ErrorKind::Failed),
+            _ => None,
+        }
+    }
+}
 
 /// Upper bound on per-worker memoized `(name, n)` resolutions.
 pub const MAX_RESOLVED_MEMO: usize = 1024;
@@ -153,6 +195,15 @@ pub struct Request {
     /// Validate outputs against the golden model.
     pub validate: bool,
     pub seed: u64,
+    /// Optional end-to-end deadline in milliseconds. The pool stamps the
+    /// absolute deadline at *admission*, so queue wait counts against the
+    /// budget; expiry at dequeue or at a compile-stage boundary yields a
+    /// [`ErrorKind::Timeout`] response.
+    pub deadline_ms: Option<u64>,
+    /// Opt into graceful degradation: when the requested array target fails
+    /// to compile (deterministically), retry once on the sequential
+    /// reference backend and mark the response [`Response::degraded`].
+    pub allow_fallback: bool,
 }
 
 impl Request {
@@ -176,6 +227,8 @@ impl Request {
             batch,
             validate,
             seed,
+            deadline_ms: None,
+            allow_fallback: false,
         }
     }
 
@@ -195,7 +248,21 @@ impl Request {
             batch,
             validate,
             seed,
+            deadline_ms: None,
+            allow_fallback: false,
         }
+    }
+
+    /// Builder: attach an end-to-end deadline in milliseconds.
+    pub fn with_deadline_ms(mut self, ms: u64) -> Request {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Builder: opt into sequential-backend fallback on compile failure.
+    pub fn with_fallback(mut self) -> Request {
+        self.allow_fallback = true;
+        self
     }
 
     /// Deterministic round-robin trace over `names` × both array targets
@@ -264,7 +331,16 @@ pub struct Response {
     /// response. False on per-n cache hits (the artifact was simply
     /// resident) and on targets without a symbolic path.
     pub symbolic_hit: bool,
+    /// Whether the answer came from the sequential fallback after the
+    /// requested array target failed to compile (the request opted in via
+    /// [`Request::allow_fallback`]; `target` still echoes what was asked).
+    pub degraded: bool,
     pub error: Option<String>,
+    /// Typed classification of `error` (`None` iff `error` is `None`).
+    pub error_kind: Option<ErrorKind>,
+    /// Secondhand retries this request performed after observing poisoned
+    /// single-flight entries (compile or exec level).
+    pub retries: u64,
     pub wall: std::time::Duration,
 }
 
@@ -273,6 +349,7 @@ impl Response {
     pub(crate) fn failure(
         req: &Request,
         error: String,
+        kind: ErrorKind,
         cache_hit: bool,
         exec_cache_hit: bool,
         symbolic_hit: bool,
@@ -290,7 +367,10 @@ impl Response {
             cache_hit,
             exec_cache_hit,
             symbolic_hit,
+            degraded: false,
             error: Some(error),
+            error_kind: Some(kind),
+            retries: 0,
             wall,
         }
     }
@@ -327,6 +407,10 @@ pub struct Session {
     /// Names whose constructor failed the witness (not shape-uniform):
     /// never probed again, the constructor path stays authoritative.
     shape_rejected: std::collections::HashSet<String>,
+    /// Deterministic fault plan consulted at the injection sites inside
+    /// [`Session::handle_with`] (chaos tests only — see [`super::faults`]).
+    #[cfg(any(test, feature = "fault-injection"))]
+    faults: Option<Arc<FaultPlan>>,
     pub metrics: Metrics,
 }
 
@@ -364,8 +448,16 @@ impl Session {
             inputs: InputMemo::new(MAX_INPUT_MEMO),
             shape_memo: std::collections::HashMap::new(),
             shape_rejected: std::collections::HashSet::new(),
+            #[cfg(any(test, feature = "fault-injection"))]
+            faults: None,
             metrics: Metrics::default(),
         }
+    }
+
+    /// Install a deterministic fault plan (chaos tests only).
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub fn set_faults(&mut self, plan: Arc<FaultPlan>) {
+        self.faults = Some(plan);
     }
 
     pub fn cache(&self) -> &Arc<CompileCache> {
@@ -389,12 +481,40 @@ impl Session {
     /// session's input memo and execute under the backend's own batch
     /// semantics. Validation (if asked) shares the memoized inputs with
     /// execution via one `Arc<ArrayData>`.
+    ///
+    /// The request's own [`Request::deadline_ms`] (if any) is measured from
+    /// *here*; pool workers instead stamp the deadline at admission and call
+    /// [`Session::handle_with`] so queue wait counts against the budget.
     pub fn handle(&mut self, req: &Request) -> Response {
+        let cancel = match req.deadline_ms {
+            Some(ms) => CancelToken::deadline_in(std::time::Duration::from_millis(ms)),
+            None => CancelToken::none(),
+        };
+        self.handle_with(req, &cancel)
+    }
+
+    /// [`Session::handle`] under a caller-provided cancellation token. The
+    /// deadline is checked at dequeue (here), before the compile pipeline,
+    /// at its stage boundaries, and before execution; expiry anywhere
+    /// yields an [`ErrorKind::Timeout`] response. Deterministic compile
+    /// failures degrade onto the sequential backend when the request opted
+    /// in (see [`Session::degrade`]).
+    pub fn handle_with(&mut self, req: &Request, cancel: &CancelToken) -> Response {
         let t0 = Instant::now();
+        // deadline checkpoint at dequeue: a request that spent its whole
+        // budget queued is answered without touching any cache
+        if let Err(e) = cancel.check("dequeue") {
+            self.metrics.timeouts += 1;
+            let resp =
+                Response::failure(req, e, ErrorKind::Timeout, false, false, false, t0.elapsed());
+            self.metrics.record_rejected(req.target, resp.wall);
+            return resp;
+        }
         let (spec, fingerprint, shape) = match self.resolve(&req.workload) {
             Ok(resolved) => resolved,
             Err(e) => {
-                let resp = Response::failure(req, e, false, false, false, t0.elapsed());
+                let resp =
+                    Response::failure(req, e, ErrorKind::Failed, false, false, false, t0.elapsed());
                 // rejected before any cache was consulted: a failure, but
                 // neither a cache hit nor a miss
                 self.metrics.record_rejected(req.target, resp.wall);
@@ -411,6 +531,11 @@ impl Session {
             seed: req.seed,
             batch: req.batch,
         };
+        // secondhand poison retries this request performed, across the
+        // compile and exec single-flight levels (and the fallback leg)
+        let retries = std::cell::Cell::new(0u64);
+        #[cfg(any(test, feature = "fault-injection"))]
+        let faults = self.faults.clone();
         // the compile-cache outcome this request observed (None when the
         // exec cache short-circuited the whole pipeline)
         let mut compile_outcome: Option<CacheOutcome> = None;
@@ -419,14 +544,35 @@ impl Session {
         let cache = &self.cache;
         let input_memo = &mut self.inputs;
         let metrics = &mut self.metrics;
-        let (result, exec_outcome) = exec_cache.get_or_run(exec_key, || {
-            let (compiled, outcome, used) = cache.get_or_compile_shaped(key, shape, &spec);
-            compile_outcome = Some(outcome);
-            symbolic_use = used;
-            let kernel = compiled?;
-            let ins = input_memo.get_or_gen(&spec, fingerprint, req.seed, metrics);
-            kernel.execute(&ins, req.batch)
-        });
+        let (result, exec_outcome) = exec_cache.get_or_run_tracked(
+            exec_key,
+            || {
+                #[cfg(any(test, feature = "fault-injection"))]
+                if let Some(plan) = faults.as_deref() {
+                    if plan.should_fire(FaultSite::CompileDelay, req.id) {
+                        std::thread::sleep(plan.delay());
+                    }
+                    if plan.should_fire(FaultSite::CompilePanic, req.id) {
+                        panic!("injected fault: compile_panic (request {})", req.id);
+                    }
+                }
+                let (compiled, outcome, used) =
+                    cache.get_or_compile_shaped_cancellable(key, shape, &spec, cancel, &retries);
+                compile_outcome = Some(outcome);
+                symbolic_use = used;
+                let kernel = compiled.map_err(|e| format!("{COMPILE_FAILED_PREFIX}{e}"))?;
+                cancel.check("execute")?;
+                #[cfg(any(test, feature = "fault-injection"))]
+                if let Some(plan) = faults.as_deref() {
+                    if plan.should_fire(FaultSite::ExecPanic, req.id) {
+                        panic!("injected fault: exec_panic (request {})", req.id);
+                    }
+                }
+                let ins = input_memo.get_or_gen(&spec, fingerprint, req.seed, metrics);
+                kernel.execute(&ins, req.batch)
+            },
+            &retries,
+        );
         let exec_hit = exec_outcome != CacheOutcome::Miss;
         self.metrics.record_exec_outcome(exec_hit);
         self.metrics.record_symbolic(req.target, shape, symbolic_use);
@@ -436,47 +582,188 @@ impl Session {
             .map(|o| o != CacheOutcome::Miss)
             .unwrap_or(true);
 
-        let (resp, cycles, ok) = match result {
+        let (mut resp, cycles, ok) = match result {
             Ok(rep) => {
-                let validated = if req.validate {
-                    let ins =
-                        self.inputs
-                            .get_or_gen(&spec, fingerprint, req.seed, &mut self.metrics);
-                    Some(self.validate_outputs(&spec, &rep.outputs, &ins))
-                } else {
-                    None
-                };
-                let ok = validated != Some(false);
-                let batch = rep.batch_cycles;
-                (
-                    Response {
-                        id: req.id,
-                        workload: spec.name.clone(),
-                        n: spec.n,
-                        target: req.target,
-                        batch: req.batch,
-                        latency_cycles: rep.latency_cycles,
-                        batch_cycles: batch,
-                        validated,
-                        cache_hit,
-                        exec_cache_hit: exec_hit,
-                        symbolic_hit,
-                        error: None,
-                        wall: t0.elapsed(),
-                    },
-                    batch,
-                    ok,
-                )
+                let resp = self.finish_success(
+                    req, &spec, fingerprint, &rep, cache_hit, exec_hit, symbolic_hit, false, t0,
+                );
+                let cycles = resp.batch_cycles;
+                let ok = resp.validated != Some(false);
+                (resp, cycles, ok)
             }
-            Err(e) => (
-                Response::failure(req, e, cache_hit, exec_hit, symbolic_hit, t0.elapsed()),
-                0,
-                false,
-            ),
+            Err(e) if is_deadline_error(&e) => {
+                self.metrics.timeouts += 1;
+                let resp = Response::failure(
+                    req,
+                    e,
+                    ErrorKind::Timeout,
+                    cache_hit,
+                    exec_hit,
+                    symbolic_hit,
+                    t0.elapsed(),
+                );
+                (resp, 0, false)
+            }
+            // graceful degradation: a *deterministic* compile failure on an
+            // array target falls back to the sequential reference when the
+            // request opted in (transient errors retry instead; execution
+            // failures and seq requests have nothing to fall back to)
+            Err(e)
+                if req.allow_fallback
+                    && req.target != Target::Seq
+                    && e.starts_with(COMPILE_FAILED_PREFIX)
+                    && !is_transient_error(&e) =>
+            {
+                self.degrade(req, &spec, fingerprint, shape, e, cache_hit, cancel, &retries, t0)
+            }
+            Err(e) => {
+                let resp = Response::failure(
+                    req,
+                    e,
+                    ErrorKind::Failed,
+                    cache_hit,
+                    exec_hit,
+                    symbolic_hit,
+                    t0.elapsed(),
+                );
+                (resp, 0, false)
+            }
         };
+        resp.retries = retries.get();
+        self.metrics.retries += retries.get();
         self.metrics
             .record_request(req.target, key, cycles, resp.wall, ok, cache_hit);
         resp
+    }
+
+    /// Build the success response: validate if asked (sharing the memoized
+    /// inputs with execution) and echo the request's correlation fields.
+    /// Shared by the primary path and the degraded fallback, so both
+    /// produce identical reports apart from the `degraded` mark.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_success(
+        &mut self,
+        req: &Request,
+        spec: &WorkloadSpec,
+        fingerprint: u64,
+        rep: &crate::backend::ExecReport,
+        cache_hit: bool,
+        exec_cache_hit: bool,
+        symbolic_hit: bool,
+        degraded: bool,
+        t0: Instant,
+    ) -> Response {
+        let validated = if req.validate {
+            let ins = self
+                .inputs
+                .get_or_gen(spec, fingerprint, req.seed, &mut self.metrics);
+            Some(self.validate_outputs(spec, &rep.outputs, &ins))
+        } else {
+            None
+        };
+        Response {
+            id: req.id,
+            workload: spec.name.clone(),
+            n: spec.n,
+            target: req.target,
+            batch: req.batch,
+            latency_cycles: rep.latency_cycles,
+            batch_cycles: rep.batch_cycles,
+            validated,
+            cache_hit,
+            exec_cache_hit,
+            symbolic_hit,
+            degraded,
+            error: None,
+            error_kind: None,
+            retries: 0, // stamped by the caller from the shared cell
+            wall: t0.elapsed(),
+        }
+    }
+
+    /// The fallback leg of graceful degradation: rerun the request on the
+    /// sequential reference backend under its *own* content address
+    /// (`target = Seq`), so degraded artifacts and reports never alias the
+    /// array-target entries. Success is marked [`Response::degraded`] and
+    /// counted in [`Metrics::degraded`]; a fallback failure reports both
+    /// errors as one [`ErrorKind::Failed`] record.
+    #[allow(clippy::too_many_arguments)]
+    fn degrade(
+        &mut self,
+        req: &Request,
+        spec: &Arc<WorkloadSpec>,
+        fingerprint: u64,
+        shape: u64,
+        primary_err: String,
+        cache_hit: bool,
+        cancel: &CancelToken,
+        retries: &std::cell::Cell<u64>,
+        t0: Instant,
+    ) -> (Response, u64, bool) {
+        let fb_key = WorkloadKey {
+            fingerprint,
+            n: spec.n,
+            target: Target::Seq,
+        };
+        let fb_exec_key = ExecKey {
+            workload: fb_key,
+            seed: req.seed,
+            batch: req.batch,
+        };
+        let exec_cache = Arc::clone(&self.exec_cache);
+        let cache = &self.cache;
+        let input_memo = &mut self.inputs;
+        let metrics = &mut self.metrics;
+        let (result, fb_outcome) = exec_cache.get_or_run_tracked(
+            fb_exec_key,
+            || {
+                let (compiled, _, _) =
+                    cache.get_or_compile_shaped_cancellable(fb_key, shape, spec, cancel, retries);
+                let kernel = compiled.map_err(|e| format!("{COMPILE_FAILED_PREFIX}{e}"))?;
+                cancel.check("execute")?;
+                let ins = input_memo.get_or_gen(spec, fingerprint, req.seed, metrics);
+                kernel.execute(&ins, req.batch)
+            },
+            retries,
+        );
+        let fb_hit = fb_outcome != CacheOutcome::Miss;
+        self.metrics.record_exec_outcome(fb_hit);
+        match result {
+            Ok(rep) => {
+                self.metrics.degraded += 1;
+                let resp = self.finish_success(
+                    req, spec, fingerprint, &rep, cache_hit, fb_hit, false, true, t0,
+                );
+                let cycles = resp.batch_cycles;
+                let ok = resp.validated != Some(false);
+                (resp, cycles, ok)
+            }
+            Err(e) if is_deadline_error(&e) => {
+                self.metrics.timeouts += 1;
+                let resp = Response::failure(
+                    req,
+                    e,
+                    ErrorKind::Timeout,
+                    cache_hit,
+                    fb_hit,
+                    false,
+                    t0.elapsed(),
+                );
+                (resp, 0, false)
+            }
+            Err(fe) => {
+                let resp = Response::failure(
+                    req,
+                    format!("{primary_err} (seq fallback also failed: {fe})"),
+                    ErrorKind::Failed,
+                    cache_hit,
+                    fb_hit,
+                    false,
+                    t0.elapsed(),
+                );
+                (resp, 0, false)
+            }
+        }
     }
 
     /// Resolve a workload reference to a validated spec plus its content
@@ -895,6 +1182,65 @@ mod tests {
             .handle(&Request::named(4, "gemm", 12, Target::Tcpa, 1, false, 1));
         assert_eq!(r12.latency_cycles, fresh.latency_cycles);
         assert_eq!(r12.batch_cycles, fresh.batch_cycles);
+    }
+
+    #[test]
+    fn expired_deadline_times_out_before_touching_any_cache() {
+        let mut s = Session::new();
+        let req = Request::named(1, "gemm", 8, Target::Tcpa, 1, false, 0).with_deadline_ms(0);
+        let r = s.handle(&req);
+        assert_eq!(r.error_kind, Some(ErrorKind::Timeout));
+        let err = r.error.expect("expired deadline must fail");
+        assert!(err.contains("[deadline]"), "{err}");
+        assert!(err.contains("dequeue"), "{err}");
+        assert_eq!(s.metrics.timeouts, 1);
+        assert_eq!(s.metrics.failed, 1);
+        assert_eq!(s.cache().stats.compiles(), 0, "nothing reached the pipeline");
+        assert_eq!(s.exec_cache().len(), 0, "nothing was cached");
+        // the same request with budget succeeds: timeouts never stick
+        let ok = s.handle(&Request::named(2, "gemm", 8, Target::Tcpa, 1, false, 0));
+        assert!(ok.error.is_none(), "{:?}", ok.error);
+        assert_eq!(s.metrics.timeouts, 1);
+    }
+
+    #[test]
+    fn fallback_degrades_unmappable_array_requests() {
+        let mut s = Session::new();
+        // GEMM N=64 overflows the CGRA scratchpad: deterministic compile
+        // failure — with fallback the request is served by the seq backend
+        let req = Request::named(1, "gemm", 64, Target::Cgra, 1, false, 1).with_fallback();
+        let r = s.handle(&req);
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.degraded, "served by the sequential fallback");
+        assert_eq!(r.target, Target::Cgra, "target echoes what was asked");
+        assert_eq!(r.error_kind, None);
+        assert!(r.latency_cycles > 0);
+        assert_eq!(s.metrics.degraded, 1);
+        assert_eq!(s.metrics.served, 1);
+        assert_eq!(s.metrics.failed, 0);
+        // the repeat replays both legs from the exec cache and stays marked
+        let r2 = s.handle(&req);
+        assert!(r2.error.is_none(), "{:?}", r2.error);
+        assert!(r2.degraded);
+        assert_eq!(r2.latency_cycles, r.latency_cycles);
+        assert_eq!(s.metrics.degraded, 2);
+        // the degraded artifact lives under its own (Seq) content address: a
+        // direct seq request reuses it rather than recompiling
+        let seq = s.handle(&Request::named(3, "gemm", 64, Target::Seq, 1, false, 1));
+        assert!(seq.error.is_none());
+        assert!(!seq.degraded, "a direct seq request is not degraded");
+        assert!(seq.exec_cache_hit, "fallback and direct seq share the report");
+    }
+
+    #[test]
+    fn fallback_is_opt_in_and_never_masks_seq_failures() {
+        let mut s = Session::new();
+        // without the opt-in, the same unmappable request still errors
+        let r = s.handle(&Request::named(1, "gemm", 64, Target::Cgra, 1, false, 1));
+        assert!(r.error.is_some());
+        assert_eq!(r.error_kind, Some(ErrorKind::Failed));
+        assert!(!r.degraded);
+        assert_eq!(s.metrics.degraded, 0);
     }
 
     #[test]

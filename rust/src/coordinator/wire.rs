@@ -46,9 +46,11 @@ use crate::bench::spec::{WorkloadCatalog, WorkloadSpec};
 use crate::util::json::{opt_u64, req_i64, req_str, req_u64, Json};
 
 use super::cache::CompileCache;
+use super::exec_cache::ExecCache;
 use super::metrics::Metrics;
 use super::pool;
-use super::session::{Request, Response, WorkloadRef};
+use super::pool::PoolConfig;
+use super::session::{ErrorKind, Request, Response, WorkloadRef};
 
 /// Wire protocol version; bump when any record shape changes.
 pub const WIRE_VERSION: i64 = 1;
@@ -70,7 +72,7 @@ pub fn request_to_json(r: &Request) -> Json {
         ]),
         WorkloadRef::Inline(spec) => Json::obj(vec![("spec", spec.to_json())]),
     };
-    Json::obj(vec![
+    let mut fields = vec![
         ("v", Json::Int(WIRE_VERSION)),
         ("id", Json::Int(r.id as i64)),
         ("workload", workload),
@@ -78,7 +80,16 @@ pub fn request_to_json(r: &Request) -> Json {
         ("batch", Json::Int(r.batch as i64)),
         ("validate", Json::Bool(r.validate)),
         ("seed", Json::Int(r.seed as i64)),
-    ])
+    ];
+    // additive resilience fields: emitted only when set, so records stay
+    // byte-identical with pre-resilience builds otherwise
+    if let Some(ms) = r.deadline_ms {
+        fields.push(("deadline_ms", Json::Int(ms as i64)));
+    }
+    if r.allow_fallback {
+        fields.push(("allow_fallback", Json::Bool(true)));
+    }
+    Json::obj(fields)
 }
 
 /// Decode a wire record into a request.
@@ -120,6 +131,14 @@ pub fn request_from_json(j: &Json) -> Result<Request, String> {
     if batch > MAX_BATCH {
         return Err(format!("field `batch` exceeds the maximum of {MAX_BATCH}"));
     }
+    let deadline_ms = match j.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_i64()
+                .filter(|ms| *ms >= 0)
+                .ok_or("field `deadline_ms` must be a non-negative integer")? as u64,
+        ),
+    };
     Ok(Request {
         id: opt_u64(j, "id", 0)?,
         workload,
@@ -130,6 +149,13 @@ pub fn request_from_json(j: &Json) -> Result<Request, String> {
             Some(v) => v.as_bool().ok_or("field `validate` must be a boolean")?,
         },
         seed: opt_u64(j, "seed", 0)?,
+        deadline_ms,
+        allow_fallback: match j.get("allow_fallback") {
+            None | Some(Json::Null) => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or("field `allow_fallback` must be a boolean")?,
+        },
     })
 }
 
@@ -143,7 +169,7 @@ pub fn parse_request_line(line: &str) -> Result<Request, String> {
 
 /// Encode a response as a wire record.
 pub fn response_to_json(r: &Response) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("v", Json::Int(WIRE_VERSION)),
         ("id", Json::Int(r.id as i64)),
         ("workload", Json::from(r.workload.clone())),
@@ -159,6 +185,8 @@ pub fn response_to_json(r: &Response) -> Json {
         ("cache_hit", Json::Bool(r.cache_hit)),
         ("exec_cache_hit", Json::Bool(r.exec_cache_hit)),
         ("symbolic_hit", Json::Bool(r.symbolic_hit)),
+        ("degraded", Json::Bool(r.degraded)),
+        ("retries", Json::Int(r.retries as i64)),
         (
             "error",
             r.error
@@ -167,13 +195,25 @@ pub fn response_to_json(r: &Response) -> Json {
                 .unwrap_or(Json::Null),
         ),
         ("wall_us", Json::Int(r.wall.as_micros() as i64)),
-    ])
+    ];
+    if let Some(k) = r.error_kind {
+        fields.push(("error_kind", Json::from(k.name())));
+    }
+    Json::obj(fields)
 }
 
 /// Decode a wire record into a response (what a JSONL client does).
 pub fn response_from_json(j: &Json) -> Result<Response, String> {
     check_version(j)?;
     let target_s = req_str(j, "target")?;
+    let error = match j.get("error") {
+        None | Some(Json::Null) => None,
+        Some(e) => Some(
+            e.as_str()
+                .ok_or("field `error` must be a string")?
+                .to_string(),
+        ),
+    };
     Ok(Response {
         id: req_u64(j, "id")?,
         workload: req_str(j, "workload")?,
@@ -201,14 +241,21 @@ pub fn response_from_json(j: &Json) -> Result<Response, String> {
             .get("symbolic_hit")
             .and_then(Json::as_bool)
             .unwrap_or(false),
-        error: match j.get("error") {
-            None | Some(Json::Null) => None,
-            Some(e) => Some(
-                e.as_str()
-                    .ok_or("field `error` must be a string")?
-                    .to_string(),
-            ),
+        // absent in pre-resilience records: default to the primary path
+        degraded: j.get("degraded").and_then(Json::as_bool).unwrap_or(false),
+        retries: opt_u64(j, "retries", 0)?,
+        error_kind: match j.get("error_kind") {
+            None | Some(Json::Null) => {
+                // older records carry no kind; any error they report was a
+                // plain failure (shed/timeout records did not exist yet)
+                error.as_ref().map(|_| ErrorKind::Failed)
+            }
+            Some(v) => {
+                let s = v.as_str().ok_or("field `error_kind` must be a string")?;
+                Some(ErrorKind::parse(s).ok_or_else(|| format!("unknown error_kind `{s}`"))?)
+            }
         },
+        error,
         wall: Duration::from_micros(req_u64(j, "wall_us")?),
     })
 }
@@ -250,8 +297,26 @@ pub fn serve_jsonl(
     n_workers: usize,
     catalog: Arc<WorkloadCatalog>,
 ) -> std::io::Result<Metrics> {
-    let (tx, rx, handle) =
-        pool::serve_with(n_workers, Arc::new(CompileCache::new()), catalog);
+    serve_jsonl_configured(input, out, n_workers, catalog, PoolConfig::default())
+}
+
+/// [`serve_jsonl`] under an explicit [`PoolConfig`]: the JSONL front end of
+/// the resilience plane (bounded queue, default deadline). Shed and expired
+/// requests still emit one response record each.
+pub fn serve_jsonl_configured(
+    input: &mut dyn BufRead,
+    out: &mut (dyn Write + Send),
+    n_workers: usize,
+    catalog: Arc<WorkloadCatalog>,
+    config: PoolConfig,
+) -> std::io::Result<Metrics> {
+    let (tx, rx, handle) = pool::serve_configured(
+        n_workers,
+        Arc::new(CompileCache::new()),
+        Arc::new(ExecCache::new()),
+        catalog,
+        config,
+    );
     let out = std::sync::Mutex::new(out);
     std::thread::scope(|s| -> std::io::Result<()> {
         // writer: stream responses in completion order until the pool drains
@@ -370,7 +435,10 @@ mod tests {
             cache_hit: true,
             exec_cache_hit: true,
             symbolic_hit: true,
+            degraded: false,
             error: Some("boom".into()),
+            error_kind: Some(ErrorKind::Failed),
+            retries: 0,
             wall: Duration::from_micros(555),
         };
         let back = response_from_json(&response_to_json(&resp)).unwrap();
@@ -380,16 +448,19 @@ mod tests {
         assert!(back.exec_cache_hit);
         assert!(back.symbolic_hit);
         assert_eq!(back.error.as_deref(), Some("boom"));
+        assert_eq!(back.error_kind, Some(ErrorKind::Failed));
         assert_eq!(back.wall, Duration::from_micros(555));
 
         let ok = Response {
             validated: Some(true),
             error: None,
+            error_kind: None,
             ..resp
         };
         let back = response_from_json(&response_to_json(&ok)).unwrap();
         assert_eq!(back.validated, Some(true));
         assert_eq!(back.error, None);
+        assert_eq!(back.error_kind, None, "no kind is fabricated for success");
     }
 
     #[test]
@@ -399,6 +470,78 @@ mod tests {
         let r = response_from_json(&Json::parse(line).unwrap()).unwrap();
         assert!(!r.exec_cache_hit, "absent field defaults to false");
         assert!(!r.symbolic_hit, "absent field defaults to false");
+    }
+
+    #[test]
+    fn resilience_request_fields_roundtrip_and_default() {
+        let req = Request::named(9, "gemm", 8, Target::Cgra, 1, false, 0)
+            .with_deadline_ms(250)
+            .with_fallback();
+        let back = request_from_json(&request_to_json(&req)).unwrap();
+        assert_eq!(back.deadline_ms, Some(250));
+        assert!(back.allow_fallback);
+        // absent fields keep the pre-resilience meaning
+        let plain = parse_request_line(
+            r#"{"v":1,"workload":{"name":"gemm","n":8},"target":"tcpa"}"#,
+        )
+        .unwrap();
+        assert_eq!(plain.deadline_ms, None);
+        assert!(!plain.allow_fallback);
+        // ...and a bare record encodes without the new keys at all
+        let bare = request_to_json(&Request::named(1, "gemm", 8, Target::Tcpa, 1, false, 0));
+        assert!(bare.get("deadline_ms").is_none());
+        assert!(bare.get("allow_fallback").is_none());
+        let e = parse_request_line(
+            r#"{"v":1,"workload":{"name":"gemm","n":8},"target":"tcpa","deadline_ms":-5}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("`deadline_ms`"), "{e}");
+    }
+
+    #[test]
+    fn resilience_response_fields_roundtrip_and_default() {
+        let shed = Response {
+            id: 1,
+            workload: "gemm".into(),
+            n: 8,
+            target: Target::Tcpa,
+            batch: 1,
+            latency_cycles: 0,
+            batch_cycles: 0,
+            validated: None,
+            cache_hit: false,
+            exec_cache_hit: false,
+            symbolic_hit: false,
+            degraded: false,
+            error: Some("request shed: queue at capacity 4".into()),
+            error_kind: Some(ErrorKind::Shed),
+            retries: 2,
+            wall: Duration::ZERO,
+        };
+        let back = response_from_json(&response_to_json(&shed)).unwrap();
+        assert_eq!(back.error_kind, Some(ErrorKind::Shed));
+        assert_eq!(back.retries, 2);
+        // a degraded success roundtrips its mark
+        let degraded = Response {
+            degraded: true,
+            error: None,
+            error_kind: None,
+            retries: 0,
+            ..shed
+        };
+        let back = response_from_json(&response_to_json(&degraded)).unwrap();
+        assert!(back.degraded);
+        assert_eq!(back.error_kind, None);
+        // a pre-resilience error record parses as a plain failure
+        let line = r#"{"v":1,"id":1,"workload":"gemm","n":8,"target":"tcpa","batch":1,"latency_cycles":0,"batch_cycles":0,"validated":null,"cache_hit":false,"error":"boom","wall_us":5}"#;
+        let old = response_from_json(&Json::parse(line).unwrap()).unwrap();
+        assert!(!old.degraded);
+        assert_eq!(old.retries, 0);
+        assert_eq!(old.error_kind, Some(ErrorKind::Failed));
+        // unknown kinds are rejected, not coerced
+        let bad = r#"{"v":1,"id":1,"workload":"gemm","n":8,"target":"tcpa","batch":1,"latency_cycles":0,"batch_cycles":0,"validated":null,"cache_hit":false,"error":"x","error_kind":"dropped","wall_us":5}"#;
+        let e = response_from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        assert!(e.contains("unknown error_kind"), "{e}");
     }
 
     #[test]

@@ -89,11 +89,29 @@ fn main() {
         }
         "serve" => {
             let workers = args.opt_usize("workers", 4);
+            // resilience knobs: a bounded admission queue (overflow is shed
+            // with a typed error response) and a deadline applied to
+            // requests that do not carry their own
+            let pool_config = pool::PoolConfig {
+                queue_cap: args.opt("queue-cap").map(|v| {
+                    v.parse::<usize>().unwrap_or_else(|_| {
+                        eprintln!("--queue-cap wants a non-negative integer, got `{v}`");
+                        std::process::exit(2);
+                    })
+                }),
+                default_deadline_ms: args.opt("default-deadline-ms").map(|v| {
+                    v.parse::<u64>().unwrap_or_else(|_| {
+                        eprintln!("--default-deadline-ms wants a non-negative integer, got `{v}`");
+                        std::process::exit(2);
+                    })
+                }),
+                ..pool::PoolConfig::default()
+            };
             // `--requests` is either a count (synthetic trace mode) or a
             // JSONL path / `-` for stdin (wire-protocol mode)
             let req_arg = args.opt("requests");
             if let Some(path) = req_arg.filter(|v| v.parse::<usize>().is_err()) {
-                serve_jsonl(path, workers);
+                serve_jsonl(path, workers, pool_config);
                 return;
             }
             let n_req = req_arg.and_then(|v| v.parse().ok()).unwrap_or(24);
@@ -129,8 +147,8 @@ fn main() {
                 })
                 .collect();
             if args.flag("compare") {
-                let (wall1, m1, r1) = run_trace(1, &trace, true);
-                let (walln, mn, rn) = run_trace(workers, &trace, true);
+                let (wall1, m1, r1) = run_trace(1, &trace, true, pool_config.clone());
+                let (walln, mn, rn) = run_trace(workers, &trace, true, pool_config);
                 let rps = |w: Duration| trace.len() as f64 / w.as_secs_f64().max(1e-9);
                 println!("1 worker : {:?}  ({:.1} req/s)", wall1, rps(wall1));
                 println!(
@@ -151,7 +169,7 @@ fn main() {
                     cache_outcomes(&rn)
                 );
             } else {
-                let (wall, m, _) = run_trace(workers, &trace, quiet);
+                let (wall, m, _) = run_trace(workers, &trace, quiet, pool_config);
                 println!(
                     "{} requests on {workers} workers in {wall:?} ({:.1} req/s)",
                     trace.len(),
@@ -194,7 +212,8 @@ fn main() {
                 "usage: repro <table1|table2|table3|fig6|fig7|fig8|asic|validate|serve|paula|all> \
                  [--quick] [--bench NAME] [--n N] [--sizes a,b,c] \
                  [--workers N] [--requests N|FILE.jsonl|-] [--trace mixed|NAME] \
-                 [--target tcpa|cgra|seq] [--compare] [--no-validate]"
+                 [--target tcpa|cgra|seq] [--compare] [--no-validate] \
+                 [--queue-cap N] [--default-deadline-ms MS]"
             );
             std::process::exit(2);
         }
@@ -204,7 +223,7 @@ fn main() {
 /// Serve newline-delimited JSON requests from a file (or stdin via `-`)
 /// through the pool, writing JSON responses to stdout and the merged
 /// metrics report to stderr (so piped output stays pure JSONL).
-fn serve_jsonl(path: &str, workers: usize) {
+fn serve_jsonl(path: &str, workers: usize, config: pool::PoolConfig) {
     let stdin = std::io::stdin();
     let mut reader: Box<dyn std::io::BufRead> = if path == "-" {
         Box::new(stdin.lock())
@@ -216,11 +235,12 @@ fn serve_jsonl(path: &str, workers: usize) {
         Box::new(std::io::BufReader::new(file))
     };
     let catalog = std::sync::Arc::new(WorkloadCatalog::builtin());
-    let metrics = wire::serve_jsonl(
+    let metrics = wire::serve_jsonl_configured(
         &mut reader,
         &mut std::io::stdout().lock(),
         workers,
         catalog,
+        config,
     )
     .unwrap_or_else(|e| {
         eprintln!("serve --requests failed: {e}");
@@ -256,8 +276,9 @@ fn run_trace(
     workers: usize,
     trace: &[Request],
     quiet: bool,
+    config: pool::PoolConfig,
 ) -> (Duration, Metrics, Vec<Response>) {
-    let (wall, metrics, responses) = pool::run_trace(workers, trace);
+    let (wall, metrics, responses) = pool::run_trace_configured(workers, trace, config);
     if !quiet {
         for r in &responses {
             println!(

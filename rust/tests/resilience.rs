@@ -1,0 +1,288 @@
+//! Chaos suite for the resilience plane (compiled only with
+//! `--features fault-injection`; CI runs it as a dedicated tier-1 step).
+//!
+//! Every test drives the *public* pool API and checks the same contract
+//! from both sides of the wire: each request yields exactly one typed
+//! response, and the merged [`repro::coordinator::Metrics`] counters
+//! reconcile exactly with what the responses themselves say — shed,
+//! timeouts, degraded, retries — under overload, panic storms, deadline
+//! pressure and combined fault schedules. Fault decisions come from a
+//! seeded [`FaultPlan`]: a pure hash of `(seed, site, request id)`, so a
+//! failing run reproduces from its seed regardless of worker interleaving.
+
+#![cfg(feature = "fault-injection")]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use repro::bench::spec::WorkloadCatalog;
+use repro::coordinator::pool::{run_trace_configured, serve_configured, PoolConfig};
+use repro::coordinator::{
+    CompileCache, ErrorKind, ExecCache, FaultPlan, FaultSite, Request, Response, Target,
+};
+
+/// The serve bench's trace shape: all six catalog kernels round-robined
+/// across both array targets with cycling batch sizes.
+fn mixed_trace(n_req: usize) -> Vec<Request> {
+    let catalog = WorkloadCatalog::builtin();
+    let names = catalog.names();
+    let names: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    Request::round_robin(&names, 8, n_req, 0)
+}
+
+/// Every id in `0..n` is answered exactly once (no drops, no duplicates).
+fn assert_exactly_one_response_each(responses: &[Response], n: usize) {
+    assert_eq!(responses.len(), n, "one response per request");
+    let mut seen = vec![false; n];
+    for r in responses {
+        let slot = &mut seen[r.id as usize];
+        assert!(!*slot, "request {} answered twice", r.id);
+        *slot = true;
+    }
+}
+
+#[test]
+fn overload_shedding_keeps_the_response_identity() {
+    // an open-loop 48-request burst into a 2-slot queue: the overflow must
+    // be shed with typed responses, and shed + failed + served must cover
+    // the whole burst — nothing dropped, nothing double-counted
+    let config = PoolConfig {
+        queue_cap: Some(2),
+        ..PoolConfig::default()
+    };
+    let n_req = 48;
+    let trace = mixed_trace(n_req);
+    let (_, m, responses) = run_trace_configured(2, &trace, config);
+    assert_exactly_one_response_each(&responses, n_req);
+    let mut shed_responses = 0u64;
+    for r in &responses {
+        if r.error_kind == Some(ErrorKind::Shed) {
+            shed_responses += 1;
+            assert!(
+                r.error.as_deref().unwrap_or("").contains("shed"),
+                "shed responses carry the shed message: {:?}",
+                r.error
+            );
+            assert!(!r.degraded, "a shed request never reaches a backend");
+        }
+    }
+    assert!(m.shed > 0, "a {n_req}-deep burst over a 2-slot queue must shed");
+    assert_eq!(m.shed, shed_responses, "metrics.shed matches the Shed responses on the wire");
+    assert_eq!(
+        m.shed + m.failed + m.served,
+        n_req as u64,
+        "admission identity: every request is shed, failed, or served"
+    );
+}
+
+#[test]
+fn panic_storm_poisons_once_and_recovers() {
+    // 60 distinct-seed requests under injected compile/exec panics: every
+    // request still gets a typed response, panicked flights are poisoned
+    // (visible in metrics), and a fault-free pool over the *same* caches
+    // afterwards serves the identical trace with 100% success — poisoned
+    // entries never wedge the cache.
+    let plan = Arc::new(
+        FaultPlan::new(7)
+            .with_rate(FaultSite::CompilePanic, 400)
+            .with_rate(FaultSite::ExecPanic, 200),
+    );
+    let cache = Arc::new(CompileCache::new());
+    let exec_cache = Arc::new(ExecCache::new());
+    let catalog = Arc::new(WorkloadCatalog::builtin());
+    let n_req = 60;
+    let trace: Vec<Request> = (0..n_req)
+        .map(|i| {
+            let target = if i % 2 == 0 { Target::Tcpa } else { Target::Cgra };
+            Request::named(i as u64, "gemm", 8, target, 1, false, i as u64)
+        })
+        .collect();
+
+    let config = PoolConfig {
+        faults: Some(plan.clone()),
+        ..PoolConfig::default()
+    };
+    let (tx, rx, handle) =
+        serve_configured(3, cache.clone(), exec_cache.clone(), catalog.clone(), config);
+    for r in &trace {
+        tx.send(r.clone()).expect("pool alive");
+    }
+    let responses: Vec<Response> = (0..n_req).map(|_| rx.recv().expect("pool response")).collect();
+    drop(tx);
+    let m = handle.join();
+
+    assert_exactly_one_response_each(&responses, n_req);
+    let fired = plan.injected(FaultSite::CompilePanic) + plan.injected(FaultSite::ExecPanic);
+    assert!(fired > 0, "the storm must actually inject panics (seed 7)");
+    assert!(
+        m.poisoned_flights > 0,
+        "a panicked single-flight leader poisons its entry exactly once"
+    );
+    assert_eq!(m.worker_panics, 0, "injected panics are quarantined inside the flight");
+    for r in &responses {
+        if let Some(e) = &r.error {
+            assert_eq!(r.error_kind, Some(ErrorKind::Failed), "{e}");
+            assert!(e.contains("[panic]"), "storm failures are panic-typed: {e}");
+        }
+    }
+    let wire_retries: u64 = responses.iter().map(|r| r.retries).sum();
+    assert_eq!(m.retries, wire_retries, "metrics.retries matches the per-response retry counts");
+    assert_eq!(m.shed + m.failed + m.served, n_req as u64);
+
+    // recovery: same caches, no faults, identical trace — all 60 succeed
+    let (tx, rx, handle) = serve_configured(3, cache, exec_cache, catalog, PoolConfig::default());
+    for r in &trace {
+        tx.send(r.clone()).expect("pool alive");
+    }
+    let responses: Vec<Response> = (0..n_req).map(|_| rx.recv().expect("pool response")).collect();
+    drop(tx);
+    let m2 = handle.join();
+    assert_exactly_one_response_each(&responses, n_req);
+    for r in &responses {
+        assert!(r.error.is_none(), "post-storm replay must fully recover: {:?}", r.error);
+    }
+    assert_eq!(m2.served, n_req as u64);
+    assert_eq!(m2.failed, 0);
+}
+
+#[test]
+fn deadline_sweep_times_out_cleanly() {
+    // zero budget: expires at admission, before burning a queue slot
+    let n_req = 4;
+    let trace: Vec<Request> = (0..n_req)
+        .map(|i| {
+            Request::named(i as u64, "gemm", 8, Target::Tcpa, 1, false, i as u64)
+                .with_deadline_ms(0)
+        })
+        .collect();
+    let (_, m, responses) = run_trace_configured(2, &trace, PoolConfig::default());
+    assert_exactly_one_response_each(&responses, n_req);
+    for r in &responses {
+        assert_eq!(r.error_kind, Some(ErrorKind::Timeout));
+        let e = r.error.as_deref().unwrap_or("");
+        assert!(e.contains("[deadline]") && e.contains("admission"), "{e}");
+    }
+    assert_eq!(m.timeouts, n_req as u64);
+    assert_eq!(m.failed, n_req as u64, "timeouts are a subset of failed");
+
+    // tight budget + injected 50ms compile stall: the deadline fires at a
+    // pipeline stage boundary, not at admission
+    let plan = Arc::new(
+        FaultPlan::new(11)
+            .with_rate(FaultSite::CompileDelay, 1000)
+            .with_delay(Duration::from_millis(50)),
+    );
+    let config = PoolConfig {
+        faults: Some(plan.clone()),
+        ..PoolConfig::default()
+    };
+    let trace = vec![Request::named(0, "atax", 8, Target::Tcpa, 1, false, 9).with_deadline_ms(10)];
+    let (_, m, responses) = run_trace_configured(1, &trace, config);
+    assert_eq!(responses.len(), 1);
+    let r = &responses[0];
+    assert_eq!(r.error_kind, Some(ErrorKind::Timeout), "{:?}", r.error);
+    let e = r.error.as_deref().unwrap_or("");
+    assert!(e.contains("[deadline]"), "{e}");
+    assert!(!e.contains("admission"), "the stall expires the budget *after* admission: {e}");
+    assert_eq!(plan.injected(FaultSite::CompileDelay), 1);
+    assert_eq!(m.timeouts, 1);
+
+    // generous budget: every catalog kernel on both targets beats 10s
+    let n_req = 12;
+    let trace: Vec<Request> = mixed_trace(n_req)
+        .into_iter()
+        .map(|r| r.with_deadline_ms(10_000))
+        .collect();
+    let (_, m, responses) = run_trace_configured(2, &trace, PoolConfig::default());
+    assert_exactly_one_response_each(&responses, n_req);
+    for r in &responses {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    assert_eq!(m.served, n_req as u64);
+    assert_eq!(m.timeouts, 0);
+}
+
+#[test]
+fn degraded_fallback_serves_unmappable_kernels() {
+    // two unmappable array requests opted into fallback (a CGRA kernel past
+    // the fabric and a TCPA size that doesn't tile), one byte-identical
+    // repeat, and one non-opted-in control
+    let trace = vec![
+        Request::named(0, "gemm", 64, Target::Cgra, 1, false, 1).with_fallback(),
+        Request::named(1, "gemm", 64, Target::Cgra, 1, false, 1).with_fallback(),
+        Request::named(2, "gemm", 10, Target::Tcpa, 1, false, 1).with_fallback(),
+        Request::named(3, "gemm", 64, Target::Cgra, 1, false, 1),
+    ];
+    let (_, m, mut responses) = run_trace_configured(2, &trace, PoolConfig::default());
+    assert_exactly_one_response_each(&responses, trace.len());
+    responses.sort_by_key(|r| r.id);
+    for r in &responses[0..3] {
+        assert!(r.error.is_none(), "fallback absorbs the compile failure: {:?}", r.error);
+        assert!(r.degraded, "request {} must be marked degraded on the wire", r.id);
+        assert_eq!(r.error_kind, None);
+    }
+    assert_eq!(responses[0].target, Target::Cgra, "the response echoes the *requested* target");
+    assert_eq!(responses[2].target, Target::Tcpa);
+    let ctrl = &responses[3];
+    assert!(ctrl.error.is_some(), "without the opt-in the compile failure surfaces");
+    assert_eq!(ctrl.error_kind, Some(ErrorKind::Failed));
+    assert!(!ctrl.degraded);
+    assert_eq!(m.degraded, 3);
+    assert_eq!(m.served, 3, "degraded responses count as served");
+    assert_eq!(m.failed, 1);
+    let wire_degraded = responses.iter().filter(|r| r.degraded).count() as u64;
+    assert_eq!(m.degraded, wire_degraded);
+}
+
+#[test]
+fn chaos_identity_holds_under_combined_faults() {
+    // everything at once: a 3-slot queue, compile/exec panic storms, queue
+    // stalls, a sprinkle of zero-budget deadlines and unmappable fallback
+    // requests. The invariant under the full storm is exact bookkeeping:
+    // metrics and wire responses must agree counter for counter.
+    let plan = Arc::new(
+        FaultPlan::new(42)
+            .with_rate(FaultSite::CompilePanic, 150)
+            .with_rate(FaultSite::ExecPanic, 100)
+            .with_rate(FaultSite::QueueStall, 100)
+            .with_delay(Duration::from_millis(5)),
+    );
+    let config = PoolConfig {
+        queue_cap: Some(3),
+        faults: Some(plan.clone()),
+        ..PoolConfig::default()
+    };
+    let n_req = 80;
+    let trace: Vec<Request> = mixed_trace(n_req)
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| match i % 16 {
+            5 => r.with_deadline_ms(0),
+            9 => Request::named(i as u64, "gemm", 10, Target::Tcpa, 1, false, 7).with_fallback(),
+            _ => r,
+        })
+        .collect();
+    let (_, m, responses) = run_trace_configured(3, &trace, config);
+    assert_exactly_one_response_each(&responses, n_req);
+
+    let shed_r = responses.iter().filter(|r| r.error_kind == Some(ErrorKind::Shed)).count() as u64;
+    let timeout_r =
+        responses.iter().filter(|r| r.error_kind == Some(ErrorKind::Timeout)).count() as u64;
+    let degraded_r = responses.iter().filter(|r| r.degraded).count() as u64;
+    let ok_r = responses.iter().filter(|r| r.error.is_none()).count() as u64;
+    let err_r = responses.iter().filter(|r| r.error.is_some()).count() as u64;
+    let retries_r: u64 = responses.iter().map(|r| r.retries).sum();
+
+    assert_eq!(m.shed, shed_r, "shed");
+    assert_eq!(m.timeouts, timeout_r, "timeouts");
+    assert_eq!(m.degraded, degraded_r, "degraded");
+    assert_eq!(m.retries, retries_r, "retries");
+    assert_eq!(m.served, ok_r, "served == error-free responses");
+    assert_eq!(m.failed + m.shed, err_r, "errored responses are exactly the failed + shed ones");
+    assert_eq!(m.shed + m.failed + m.served, n_req as u64, "admission identity");
+    assert_eq!(m.worker_panics, 0, "every injected panic is quarantined");
+    // degraded responses are error-free and therefore inside served
+    assert!(m.degraded <= m.served);
+    // timeouts are failures, never successes
+    assert!(m.timeouts <= m.failed);
+}
