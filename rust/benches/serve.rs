@@ -15,13 +15,27 @@
 //! admission queue: the pool must shed the overflow with typed responses
 //! while the latency of *admitted* requests stays bounded (the shed-rate
 //! and admitted-p99 land in `BENCH_serve.json` as `serve/overload-shed`).
+//!
+//! A socket scaling phase exercises the scale-out plane end to end:
+//! closed-loop clients (one request in flight per connection) drive real
+//! loopback TCP connections through `coordinator::net` over a
+//! workers × shards × clients grid; req/s plus p50/p99/p999 land in
+//! `BENCH_serve.json` as `serve/socket/…`, with the sharded-cache identity
+//! (`misses == compiles + instantiations`) asserted per cell.
 
 mod common;
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
+use std::thread;
 use std::time::{Duration, Instant};
 
-use repro::coordinator::{pool, CompileCache, ErrorKind, ExecCache, Metrics, Request, Target};
+use repro::bench::spec::WorkloadCatalog;
+use repro::coordinator::net::{self, ListenAddr};
+use repro::coordinator::{
+    pool, wire, CacheShards, CompileCache, ErrorKind, ExecCache, Metrics, Request, Target,
+};
 use repro::util::json::Json;
 
 fn mixed_trace(n_req: usize) -> Vec<Request> {
@@ -203,9 +217,107 @@ fn run_overload(workers: usize, n_req: usize, queue_cap: usize) -> (Metrics, Ove
     (m, OverloadStats { shed, admitted, admitted_p99_us })
 }
 
+/// Counters the socket scaling phase reports per grid cell.
+struct SocketStats {
+    served: u64,
+    conns: u64,
+    misses: u64,
+    compiles: u64,
+    instantiations: u64,
+}
+
+/// Socket scaling phase: `clients` closed-loop loopback TCP clients (one
+/// request in flight per connection, next sent only after the response
+/// lands) against a `workers`-worker pool over `shards` cache shards. Every
+/// byte crosses a real socket and the full wire codec; the request mix is
+/// the builtin catalog at n=8 over both array targets, so every request
+/// succeeds and the throughput number measures the serving plane, not
+/// error paths. Returns the wall over all clients and the merged metrics.
+fn run_socket_scaling(
+    workers: usize,
+    n_shards: usize,
+    clients: usize,
+    reqs_per_client: usize,
+) -> (Duration, Metrics, SocketStats) {
+    let shards = Arc::new(CacheShards::new(n_shards));
+    let server = net::serve(
+        &ListenAddr::Tcp("127.0.0.1:0".into()),
+        workers,
+        shards.clone(),
+        Arc::new(WorkloadCatalog::builtin()),
+        pool::PoolConfig::default(),
+    )
+    .expect("bind loopback");
+    let addr = match server.local_addr() {
+        ListenAddr::Tcp(a) => a.clone(),
+        other => panic!("expected a TCP listener, got {other}"),
+    };
+    let catalog = WorkloadCatalog::builtin();
+    let names = catalog.names();
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let names = names.clone();
+            thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr.as_str()).expect("connect loopback");
+                let mut reader =
+                    BufReader::new(stream.try_clone().expect("clone socket handle"));
+                for i in 0..reqs_per_client {
+                    let id = (c * 1_000_000 + i) as u64;
+                    let name = names[(c + i) % names.len()].as_str();
+                    let target = if (c + i) % 2 == 0 { Target::Tcpa } else { Target::Cgra };
+                    let req =
+                        Request::named(id, name, 8, target, 1 + (i % 2) as u64, false, 7);
+                    let line = wire::request_to_json(&req).render();
+                    stream.write_all(line.as_bytes()).expect("send request");
+                    stream.write_all(b"\n").expect("send newline");
+                    let mut resp_line = String::new();
+                    reader.read_line(&mut resp_line).expect("read response");
+                    let json = Json::parse(resp_line.trim()).expect("response is JSON");
+                    let resp = wire::response_from_json(&json).expect("response decodes");
+                    // closed loop: exactly one request in flight, so the
+                    // response on the wire is ours
+                    assert_eq!(resp.id, id, "closed-loop response correlates");
+                    assert!(resp.error.is_none(), "n=8 catalog mix succeeds: {:?}", resp.error);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let wall = t0.elapsed();
+    let m = server.shutdown();
+    let a = shards.aggregate();
+    let total = (clients * reqs_per_client) as u64;
+    assert_eq!(m.served, total, "every request answered over the socket");
+    assert_eq!(m.conns_accepted, clients as u64);
+    assert_eq!(m.conns_closed, clients as u64, "all clients closed cleanly");
+    assert_eq!(m.conns_aborted, 0, "no hangups in the closed-loop phase");
+    assert_eq!(
+        a.misses,
+        a.compiles + a.instantiations,
+        "sharded single-flight identity holds under socket load: {a:?}"
+    );
+    assert_eq!(
+        m.cache_misses, a.misses,
+        "pool counters agree with the shard aggregate"
+    );
+    let stats = SocketStats {
+        served: m.served,
+        conns: m.conns_accepted,
+        misses: a.misses,
+        compiles: a.compiles,
+        instantiations: a.instantiations,
+    };
+    (wall, m, stats)
+}
+
 fn main() {
     let trace = mixed_trace(if common::smoke() { 24 } else { 96 });
-    let mut report = common::JsonReport::new("serve-throughput-v4");
+    let mut report = common::JsonReport::new("serve-throughput-v5");
 
     let mut walls: Vec<(usize, Duration)> = Vec::new();
     for workers in [1usize, 2, 4] {
@@ -231,6 +343,7 @@ fn main() {
             ("req_per_sec", Json::Float(rps(trace.len(), wall))),
             ("p50_us", Json::from(hist.percentile_us(0.50) as usize)),
             ("p99_us", Json::from(hist.percentile_us(0.99) as usize)),
+            ("p999_us", Json::from(hist.percentile_us(0.999) as usize)),
             ("max_us", Json::from(hist.max_us as usize)),
             ("distinct_kernels", Json::from(m.distinct_kernels.len())),
             ("cache_hits", Json::from(m.cache_hits as usize)),
@@ -326,6 +439,47 @@ fn main() {
         ("admitted_p99_us", Json::from(os.admitted_p99_us as usize)),
         ("served", Json::from(om.served as usize)),
     ]));
+
+    // socket scaling phase: closed-loop clients over real loopback TCP,
+    // across a workers × shards × clients grid
+    let grid: &[(usize, usize, usize)] = if common::smoke() {
+        &[(2, 2, 2)]
+    } else {
+        &[(1, 1, 2), (2, 4, 4), (4, 8, 8)]
+    };
+    let reqs_per_client = if common::smoke() { 6 } else { 24 };
+    for &(workers, shards, clients) in grid {
+        let (wall, m, ss) = run_socket_scaling(workers, shards, clients, reqs_per_client);
+        let total = clients * reqs_per_client;
+        let hist = m.latency();
+        println!(
+            "{:<52} {:>10.1} req/s  (p50 {}us, p99 {}us, p999 {}us)",
+            format!("serve: socket {total} reqs, {workers}w x {shards}s x {clients}c"),
+            rps(total, wall),
+            hist.percentile_us(0.50),
+            hist.percentile_us(0.99),
+            hist.percentile_us(0.999),
+        );
+        report.record_raw(Json::obj(vec![
+            (
+                "name",
+                Json::from(format!("serve/socket/w{workers}-s{shards}-c{clients}")),
+            ),
+            ("workers", Json::from(workers)),
+            ("shards", Json::from(shards)),
+            ("clients", Json::from(clients)),
+            ("requests", Json::from(total)),
+            ("req_per_sec", Json::Float(rps(total, wall))),
+            ("p50_us", Json::from(hist.percentile_us(0.50) as usize)),
+            ("p99_us", Json::from(hist.percentile_us(0.99) as usize)),
+            ("p999_us", Json::from(hist.percentile_us(0.999) as usize)),
+            ("served", Json::from(ss.served as usize)),
+            ("conns", Json::from(ss.conns as usize)),
+            ("cache_misses", Json::from(ss.misses as usize)),
+            ("compiles", Json::from(ss.compiles as usize)),
+            ("instantiations", Json::from(ss.instantiations as usize)),
+        ]));
+    }
 
     let w1 = walls[0].1;
     let w4 = walls.last().unwrap().1;

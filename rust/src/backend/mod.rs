@@ -36,6 +36,8 @@ pub use registry::BackendRegistry;
 pub use seq::SeqBackend;
 pub use tcpa::{map_turtle, TcpaBackend, TurtleRow};
 
+use std::sync::atomic::{self, AtomicBool};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::bench::spec::WorkloadSpec;
@@ -57,23 +59,44 @@ pub fn is_deadline_error(msg: &str) -> bool {
     msg.contains(DEADLINE_MARKER)
 }
 
-/// Cooperative cancellation token carrying an optional absolute deadline.
+/// Marker every client-abort error message carries. Fired when the party
+/// that asked for a result is known to be gone (a socket client hung up),
+/// as opposed to [`DEADLINE_MARKER`]'s "took too long": both are transient
+/// (never cached), both classify as timeouts on the wire, but they are
+/// counted separately in `Metrics` so operators can tell load problems
+/// from client churn.
+pub const CANCEL_MARKER: &str = "[cancelled]";
+
+/// Whether an error message records a client-abort (see [`CANCEL_MARKER`]).
+/// Like [`is_deadline_error`], uses `contains` so the marker survives
+/// stage-layer wrapping.
+pub fn is_cancel_error(msg: &str) -> bool {
+    msg.contains(CANCEL_MARKER)
+}
+
+/// Cooperative cancellation token carrying an optional absolute deadline
+/// and an optional shared abort flag.
 ///
 /// Threaded from the pool's admission stamp through
 /// [`Backend::compile_cancellable`] down to per-kernel/per-stage pipeline
 /// boundaries: long compiles poll [`CancelToken::check`] between units of
 /// work and abort with a [`DEADLINE_MARKER`]-tagged error instead of
-/// finishing work nobody is waiting for. The default token never cancels,
-/// so every pre-resilience call path behaves exactly as before.
-#[derive(Debug, Clone, Copy, Default)]
+/// finishing work nobody is waiting for. The abort flag is the socket
+/// front-end's hangup signal: when a connection's writer observes the peer
+/// gone it flips the flag, and every request that connection still has in
+/// flight aborts at its next checkpoint with a [`CANCEL_MARKER`]-tagged
+/// error. The default token never cancels, so every pre-resilience call
+/// path behaves exactly as before.
+#[derive(Debug, Clone, Default)]
 pub struct CancelToken {
     deadline: Option<Instant>,
+    aborted: Option<Arc<AtomicBool>>,
 }
 
 impl CancelToken {
     /// A token that never cancels (the default).
     pub fn none() -> CancelToken {
-        CancelToken { deadline: None }
+        CancelToken::default()
     }
 
     /// A token expiring at an absolute instant (what the pool stamps at
@@ -81,6 +104,7 @@ impl CancelToken {
     pub fn at(deadline: Instant) -> CancelToken {
         CancelToken {
             deadline: Some(deadline),
+            aborted: None,
         }
     }
 
@@ -89,20 +113,39 @@ impl CancelToken {
         CancelToken::at(Instant::now() + budget)
     }
 
+    /// Attach a shared abort flag (set by whoever owns the other end —
+    /// e.g. a connection's writer thread on hangup). Checked *before* the
+    /// deadline so a dead client's requests classify as cancelled, not
+    /// timed out, even when both conditions hold.
+    pub fn with_abort(mut self, flag: Arc<AtomicBool>) -> CancelToken {
+        self.aborted = Some(flag);
+        self
+    }
+
     /// The absolute deadline, if any.
     pub fn deadline(&self) -> Option<Instant> {
         self.deadline
     }
 
-    /// Whether the deadline has passed.
-    pub fn cancelled(&self) -> bool {
-        self.deadline.is_some_and(|d| Instant::now() >= d)
+    /// Whether the abort flag has been raised.
+    pub fn aborted(&self) -> bool {
+        self.aborted
+            .as_ref()
+            .is_some_and(|f| f.load(atomic::Ordering::Acquire))
     }
 
-    /// Checkpoint: `Err` with a [`DEADLINE_MARKER`]-tagged message naming
-    /// the pipeline stage once the deadline has passed.
+    /// Whether the token cancels now (abort flag raised or deadline past).
+    pub fn cancelled(&self) -> bool {
+        self.aborted() || self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Checkpoint: `Err` with a [`CANCEL_MARKER`]- or
+    /// [`DEADLINE_MARKER`]-tagged message naming the pipeline stage once
+    /// the token cancels.
     pub fn check(&self, stage: &str) -> Result<(), String> {
-        if self.cancelled() {
+        if self.aborted() {
+            Err(format!("{CANCEL_MARKER} client gone at {stage}"))
+        } else if self.deadline.is_some_and(|d| Instant::now() >= d) {
             Err(format!("{DEADLINE_MARKER} deadline exceeded at {stage}"))
         } else {
             Ok(())

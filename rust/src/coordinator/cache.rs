@@ -63,11 +63,13 @@ pub(crate) const PANIC_MARKER: &str = "[panic]";
 pub(crate) const MAX_POISON_RETRIES: u32 = 2;
 
 /// Whether an error message records a *transient* outcome (a panicked
-/// leader or a deadline abort) rather than a deterministic pipeline
-/// failure. Transient results are never cached and are eligible for
-/// secondhand retry; deterministic failures cache forever.
+/// leader, a deadline abort, or a client-gone abort) rather than a
+/// deterministic pipeline failure. Transient results are never cached and
+/// are eligible for secondhand retry; deterministic failures cache forever.
 pub fn is_transient_error(msg: &str) -> bool {
-    msg.contains(PANIC_MARKER) || crate::backend::is_deadline_error(msg)
+    msg.contains(PANIC_MARKER)
+        || crate::backend::is_deadline_error(msg)
+        || crate::backend::is_cancel_error(msg)
 }
 
 /// Default bound on resident compiled artifacts per process.
@@ -457,9 +459,21 @@ impl CompileCache {
     /// A cache holding at most `capacity` ready artifacts (in-flight
     /// compiles ride on top of the bound and are never evicted).
     pub fn with_capacity(registry: BackendRegistry, capacity: usize) -> CompileCache {
+        CompileCache::with_capacities(registry, capacity, DEFAULT_SYMBOLIC_CAPACITY)
+    }
+
+    /// A cache with both bounds explicit: at most `capacity` ready per-n
+    /// artifacts and `symbolic_capacity` ready per-shape symbolic
+    /// artifacts. What `CacheShards` uses to split the default budget
+    /// across shards without growing the aggregate bound.
+    pub fn with_capacities(
+        registry: BackendRegistry,
+        capacity: usize,
+        symbolic_capacity: usize,
+    ) -> CompileCache {
         CompileCache {
             slots: FlightMap::new(capacity),
-            shapes: FlightMap::new(DEFAULT_SYMBOLIC_CAPACITY),
+            shapes: FlightMap::new(symbolic_capacity),
             registry,
             stats: CacheStats::default(),
         }

@@ -21,10 +21,12 @@ pub const MAX_DISTINCT_KERNELS: usize = 1 << 16;
 
 /// Log₂-bucketed histogram of request wall latencies in microseconds.
 /// Bucket `i` counts requests with `wall_us` in `[2^i, 2^(i+1))`; the last
-/// bucket absorbs the tail.
+/// bucket absorbs the tail. 32 buckets put the overflow bound at ~2^32 µs
+/// (≈ 71 minutes), so tail percentiles (p999) report a real bucket bound
+/// instead of saturating at the old 2^24 µs (~16 s) cap.
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct LatencyHistogram {
-    pub buckets: [u64; 24],
+    pub buckets: [u64; 32],
     pub count: u64,
     pub total_us: u64,
     pub max_us: u64,
@@ -77,6 +79,25 @@ impl LatencyHistogram {
             }
         }
         self.max_us
+    }
+}
+
+/// Per-shard latency/outcome statistics: which cache shard a request's
+/// fingerprint routed to, with its own SLO histogram. Lets an operator see
+/// an unlucky fingerprint distribution (one hot shard) that the aggregate
+/// percentiles would hide.
+#[derive(Debug, Default, Clone)]
+pub struct ShardMetrics {
+    pub served: u64,
+    pub failed: u64,
+    pub hist: LatencyHistogram,
+}
+
+impl ShardMetrics {
+    fn merge(&mut self, other: &ShardMetrics) {
+        self.served += other.served;
+        self.failed += other.failed;
+        self.hist.merge(&other.hist);
     }
 }
 
@@ -152,6 +173,9 @@ pub struct Metrics {
     /// Per-target breakdowns with latency histograms, indexed by
     /// [`Target::index`].
     per_target: Vec<TargetMetrics>,
+    /// Per-shard breakdowns with latency histograms, indexed by shard;
+    /// grown on first touch so single-shard planes carry no dead weight.
+    per_shard: Vec<ShardMetrics>,
     /// Content addresses served by this worker — with the open workload API
     /// the kernel population is unbounded, so the service tracks how many
     /// *distinct* kernels its traffic actually touched (the denominator of
@@ -186,6 +210,18 @@ pub struct Metrics {
     /// Flights resolved poisoned-once across both process-wide caches,
     /// snapshotted by [`Metrics::absorb_cache_stats`].
     pub poisoned_flights: u64,
+    /// Requests aborted because their client hung up mid-flight (the
+    /// socket front-end's `CancelToken` abort flag). A subset of
+    /// `timeouts` — both classify as [`super::session::ErrorKind::Timeout`]
+    /// on the wire — counted separately to tell client churn from load.
+    pub cancelled: u64,
+    /// Socket connections the front-end accepted.
+    pub conns_accepted: u64,
+    /// Connections that ran to a clean end-of-stream and were drained.
+    pub conns_closed: u64,
+    /// Connections whose peer vanished mid-flight (write error before
+    /// end-of-stream); their pending requests were cancelled.
+    pub conns_aborted: u64,
 }
 
 impl Default for Metrics {
@@ -208,6 +244,7 @@ impl Default for Metrics {
             instantiations: 0,
             symbolic_compiles: 0,
             per_target: vec![TargetMetrics::default(); Target::COUNT],
+            per_shard: Vec::new(),
             distinct_kernels: HashSet::new(),
             distinct_shapes: HashSet::new(),
             peak_queue_depth: 0,
@@ -218,6 +255,10 @@ impl Default for Metrics {
             retries: 0,
             worker_panics: 0,
             poisoned_flights: 0,
+            cancelled: 0,
+            conns_accepted: 0,
+            conns_closed: 0,
+            conns_aborted: 0,
         }
     }
 }
@@ -316,9 +357,42 @@ impl Metrics {
         self.per_target[target.index()].record(0, wall, false);
     }
 
+    /// Record which cache shard a request routed to (requests rejected
+    /// before the cache plane — bad names, dequeue expiry — have no shard
+    /// and are not recorded here).
+    pub fn record_shard(&mut self, shard: usize, wall: Duration, ok: bool) {
+        if self.per_shard.len() <= shard {
+            self.per_shard.resize(shard + 1, ShardMetrics::default());
+        }
+        let s = &mut self.per_shard[shard];
+        if ok {
+            s.served += 1;
+        } else {
+            s.failed += 1;
+        }
+        s.hist.record(wall);
+    }
+
+    /// Snapshot the aggregate eviction/poison counters of a shard set into
+    /// this total — the sharded analogue of [`Metrics::absorb_cache_stats`]
+    /// (called once on the merged total at pool join).
+    pub fn absorb_shards(&mut self, shards: &super::shard::CacheShards) {
+        let a = shards.aggregate();
+        self.compile_evictions = a.compile_evictions;
+        self.exec_evictions = a.exec_evictions;
+        self.symbolic_compiles = a.symbolic_compiles;
+        self.poisoned_flights = a.poisoned;
+    }
+
     /// The breakdown for one target.
     pub fn target(&self, target: Target) -> &TargetMetrics {
         &self.per_target[target.index()]
+    }
+
+    /// Per-shard breakdowns (indexed by shard; empty until a request
+    /// reached the cache plane).
+    pub fn shards(&self) -> &[ShardMetrics] {
+        &self.per_shard
     }
 
     pub fn observe_queue_depth(&mut self, depth: u64) {
@@ -348,6 +422,13 @@ impl Metrics {
         for (mine, theirs) in self.per_target.iter_mut().zip(&other.per_target) {
             mine.merge(theirs);
         }
+        if self.per_shard.len() < other.per_shard.len() {
+            self.per_shard
+                .resize(other.per_shard.len(), ShardMetrics::default());
+        }
+        for (mine, theirs) in self.per_shard.iter_mut().zip(&other.per_shard) {
+            mine.merge(theirs);
+        }
         self.distinct_kernels
             .extend(other.distinct_kernels.iter().copied());
         self.peak_queue_depth = self.peak_queue_depth.max(other.peak_queue_depth);
@@ -359,6 +440,10 @@ impl Metrics {
         self.worker_panics += other.worker_panics;
         // snapshot of the same process-wide counters, not a per-worker sum
         self.poisoned_flights = self.poisoned_flights.max(other.poisoned_flights);
+        self.cancelled += other.cancelled;
+        self.conns_accepted += other.conns_accepted;
+        self.conns_closed += other.conns_closed;
+        self.conns_aborted += other.conns_aborted;
     }
 
     /// All-target latency histogram (merged per-target views) — what the
@@ -398,12 +483,14 @@ impl Metrics {
     pub fn report(&self) -> String {
         let line = |name: &str, t: &TargetMetrics| {
             format!(
-                "  {name:<5} served={:<6} failed={:<4} mean={:.0}us p50={}us p99={}us max={}us",
+                "  {name:<5} served={:<6} failed={:<4} mean={:.0}us p50={}us p99={}us p999={}us \
+                 max={}us",
                 t.served,
                 t.failed,
                 t.hist.mean_us(),
                 t.hist.percentile_us(0.50),
                 t.hist.percentile_us(0.99),
+                t.hist.percentile_us(0.999),
                 t.hist.max_us,
             )
         };
@@ -411,6 +498,21 @@ impl Metrics {
         for t in Target::ALL {
             out.push('\n');
             out.push_str(&line(t.name(), self.target(t)));
+        }
+        // per-shard SLO lines only when the plane is actually sharded
+        if self.per_shard.len() > 1 {
+            for (i, s) in self.per_shard.iter().enumerate() {
+                out.push_str(&format!(
+                    "\n  shard {i:<3} served={:<6} failed={:<4} p50={}us p99={}us p999={}us \
+                     max={}us",
+                    s.served,
+                    s.failed,
+                    s.hist.percentile_us(0.50),
+                    s.hist.percentile_us(0.99),
+                    s.hist.percentile_us(0.999),
+                    s.hist.max_us,
+                ));
+            }
         }
         let saturated = if self.distinct_kernels.len() >= MAX_DISTINCT_KERNELS {
             "+"
@@ -435,15 +537,22 @@ impl Metrics {
             self.symbolic_hits,
         ));
         out.push_str(&format!(
-            "\n  resilience: shed={} timeouts={} degraded={} retries={} poisoned_flights={} \
-             worker_panics={}",
+            "\n  resilience: shed={} timeouts={} cancelled={} degraded={} retries={} \
+             poisoned_flights={} worker_panics={}",
             self.shed,
             self.timeouts,
+            self.cancelled,
             self.degraded,
             self.retries,
             self.poisoned_flights,
             self.worker_panics,
         ));
+        if self.conns_accepted > 0 {
+            out.push_str(&format!(
+                "\n  net: conns accepted={} closed={} aborted={}",
+                self.conns_accepted, self.conns_closed, self.conns_aborted,
+            ));
+        }
         out.push_str(&format!(
             "\n  distinct kernels: {}{saturated} | peak queue depth: {} | workers merged: {}",
             self.distinct_kernels.len(),
@@ -612,11 +721,65 @@ mod tests {
         let report = a.report();
         assert!(
             report.contains(
-                "resilience: shed=2 timeouts=3 degraded=1 retries=3 poisoned_flights=5 \
-                 worker_panics=1"
+                "resilience: shed=2 timeouts=3 cancelled=0 degraded=1 retries=3 \
+                 poisoned_flights=5 worker_panics=1"
             ),
             "{report}"
         );
+    }
+
+    #[test]
+    fn p999_resolves_above_the_old_bucket_cap() {
+        let mut h = LatencyHistogram::default();
+        // 999 fast requests and one ~67-second outlier: p999 must land in
+        // a real bucket above the old 2^24 µs ceiling, not saturate.
+        for _ in 0..999 {
+            h.record(Duration::from_micros(100));
+        }
+        h.record(Duration::from_secs(67));
+        let p999 = h.percentile_us(0.999);
+        assert!(
+            p999 > (1 << 24),
+            "p999={p999}us must exceed the old 24-bucket cap"
+        );
+        assert!(p999 <= 1 << 27, "67s lands in the [2^26, 2^27) bucket");
+        assert!(h.percentile_us(0.50) <= h.percentile_us(0.999));
+    }
+
+    #[test]
+    fn shard_and_connection_counters_merge_and_report() {
+        let us = Duration::from_micros;
+        let mut a = Metrics::default();
+        a.record_shard(0, us(10), true);
+        a.record_shard(2, us(20), false);
+        a.conns_accepted = 3;
+        a.conns_closed = 2;
+        let mut b = Metrics::default();
+        b.record_shard(2, us(30), true);
+        b.cancelled = 1;
+        b.conns_accepted = 1;
+        b.conns_aborted = 1;
+        a.merge(&b);
+        assert_eq!(a.shards().len(), 3, "merge widens to the larger set");
+        assert_eq!(a.shards()[0].served, 1);
+        assert_eq!((a.shards()[2].served, a.shards()[2].failed), (1, 1));
+        assert_eq!(a.cancelled, 1);
+        assert_eq!(
+            (a.conns_accepted, a.conns_closed, a.conns_aborted),
+            (4, 2, 1)
+        );
+        let report = a.report();
+        assert!(report.contains("shard 0"), "{report}");
+        assert!(report.contains("shard 2"), "{report}");
+        assert!(report.contains("p999="), "{report}");
+        assert!(
+            report.contains("net: conns accepted=4 closed=2 aborted=1"),
+            "{report}"
+        );
+        // a single-shard plane stays shard-line-free
+        let mut single = Metrics::default();
+        single.record_shard(0, us(5), true);
+        assert!(!single.report().contains("shard 0"), "{}", single.report());
     }
 
     #[test]

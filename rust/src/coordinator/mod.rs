@@ -42,14 +42,23 @@
 //!   sequential backend ([`session::Request::allow_fallback`]),
 //!   poisoned-once panic quarantine in both single-flight caches, and
 //!   deterministic fault injection ([`faults`], chaos builds only).
+//! * Scale-out plane (`rust/DESIGN.md` §11): [`shard`] splits both cache
+//!   levels into fingerprint-selected shards so concurrent distinct
+//!   kernels stop contending on one lock, and [`net`] is a std-only
+//!   TCP/Unix-socket front-end (`repro serve --listen <addr|path>
+//!   --shards S`) that reuses the pool's admission edge unchanged — one
+//!   connection per client stream, per-connection hangup cancellation,
+//!   per-shard SLO lines in [`Metrics::report`].
 
 pub mod cache;
 pub mod exec_cache;
 #[cfg(any(test, feature = "fault-injection"))]
 pub mod faults;
 pub mod metrics;
+pub mod net;
 pub mod pool;
 pub mod session;
+pub mod shard;
 pub mod wire;
 
 pub use cache::{is_transient_error, CacheOutcome, CompileCache, ShapeKey, SymbolicUse, WorkloadKey};
@@ -57,5 +66,7 @@ pub use exec_cache::{ExecCache, ExecKey};
 #[cfg(any(test, feature = "fault-injection"))]
 pub use faults::{FaultPlan, FaultSite};
 pub use metrics::Metrics;
+pub use net::{ListenAddr, NetServer};
 pub use pool::{serve as serve_pool, PoolConfig, PoolHandle, PoolSender};
 pub use session::{ErrorKind, Request, Response, Session, Target, WorkloadRef};
+pub use shard::CacheShards;

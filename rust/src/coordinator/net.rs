@@ -1,0 +1,441 @@
+//! Socket front-end for the serving plane: TCP and Unix-domain listeners
+//! speaking wire protocol v1 (JSONL framing) to many concurrent clients.
+//!
+//! The transport is deliberately thin — a listener, one reader and one
+//! writer per connection, and nothing else. Every accepted line flows
+//! through the *existing* [`PoolSender`] admission edge via
+//! [`PoolSender::send_routed`], so shedding, deadline stamping and
+//! degradation behave byte-for-byte like the file/stdin path
+//! (`wire::serve_jsonl_*`): same records, same counters, same identities.
+//! One connection is one client stream — responses are written back on the
+//! connection they arrived on, in completion order, with the echoed `id`
+//! for correlation (exactly the JSONL contract).
+//!
+//! Connection lifecycle:
+//!
+//! * **accept** — the listener thread accepts, bumps `conns_accepted`, and
+//!   spawns a connection thread;
+//! * **serve** — the connection's reader parses lines and admits them with
+//!   a per-connection reply channel + abort flag; a writer thread drains
+//!   the reply channel onto the socket. Malformed lines emit
+//!   [`wire::line_error_json`] records (with the recovered `id` when the
+//!   line parsed that far) interleaved with responses;
+//! * **hangup** — if a write fails (peer gone) or a read errors, the abort
+//!   flag is raised: every request the connection still has in flight
+//!   cancels at its next [`crate::backend::CancelToken`] checkpoint with a
+//!   `[cancelled]`-tagged timeout instead of burning worker time, and the
+//!   connection counts as `conns_aborted`;
+//! * **drain** — on clean end-of-stream the reader drops its reply sender,
+//!   the writer drains the in-flight tail, and the connection counts as
+//!   `conns_closed`.
+//!
+//! Shutdown joins everything and folds the connection counters into the
+//! pool's merged [`Metrics`].
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+use crate::bench::spec::WorkloadCatalog;
+
+use super::metrics::Metrics;
+use super::pool::{self, PoolConfig, PoolHandle, PoolSender};
+use super::session::Response;
+use super::shard::CacheShards;
+use super::wire;
+
+/// Where to listen: a TCP socket address or a Unix-domain socket path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ListenAddr {
+    Tcp(String),
+    Unix(PathBuf),
+}
+
+impl ListenAddr {
+    /// Parse a CLI listen spec. Explicit schemes win: `tcp:HOST:PORT` and
+    /// `unix:PATH`. Without a scheme, anything containing `/` is a
+    /// filesystem path; everything else is a TCP address.
+    pub fn parse(spec: &str) -> ListenAddr {
+        if let Some(path) = spec.strip_prefix("unix:") {
+            ListenAddr::Unix(PathBuf::from(path))
+        } else if let Some(addr) = spec.strip_prefix("tcp:") {
+            ListenAddr::Tcp(addr.to_string())
+        } else if spec.contains('/') {
+            ListenAddr::Unix(PathBuf::from(spec))
+        } else {
+            ListenAddr::Tcp(spec.to_string())
+        }
+    }
+}
+
+impl std::fmt::Display for ListenAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ListenAddr::Tcp(a) => write!(f, "tcp:{a}"),
+            ListenAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// One stream, either family. Both halves come from `try_clone`, so the
+/// reader and writer own independent handles onto the same socket.
+enum NetStream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl NetStream {
+    fn try_clone(&self) -> std::io::Result<NetStream> {
+        Ok(match self {
+            NetStream::Tcp(s) => NetStream::Tcp(s.try_clone()?),
+            NetStream::Unix(s) => NetStream::Unix(s.try_clone()?),
+        })
+    }
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.read(buf),
+            NetStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.write(buf),
+            NetStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.flush(),
+            NetStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum NetListener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+impl NetListener {
+    fn accept(&self) -> std::io::Result<NetStream> {
+        Ok(match self {
+            NetListener::Tcp(l) => NetStream::Tcp(l.accept()?.0),
+            NetListener::Unix(l) => NetStream::Unix(l.accept()?.0),
+        })
+    }
+}
+
+/// Connection counters shared by the listener and every connection thread.
+/// `aborted` is bumped the moment a hangup is detected (not at connection
+/// teardown), so tests and monitors can observe mid-flight disconnects.
+#[derive(Default)]
+pub struct ConnCounters {
+    pub accepted: AtomicU64,
+    pub closed: AtomicU64,
+    pub aborted: AtomicU64,
+}
+
+/// Raise a connection's abort flag exactly once, counting the abort on the
+/// first raise (whichever side — reader or writer — notices first).
+fn raise_abort(abort: &AtomicBool, counters: &ConnCounters) {
+    if !abort.swap(true, Ordering::SeqCst) {
+        counters.aborted.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// A running socket server. Dropping it does *not* stop the listener; call
+/// [`NetServer::shutdown`] (tests) or [`NetServer::run`] (CLI).
+pub struct NetServer {
+    /// Where the server actually listens — for TCP this resolves `:0` to
+    /// the kernel-assigned port, so loopback tests can connect.
+    local: ListenAddr,
+    stop: Arc<AtomicBool>,
+    counters: Arc<ConnCounters>,
+    accept_thread: thread::JoinHandle<()>,
+    conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    sender: PoolSender,
+    pool: PoolHandle,
+}
+
+/// Start a socket server over an explicit shard set: bind `addr`, spawn
+/// `n_workers` pool workers over `shards`, and serve until
+/// [`NetServer::shutdown`]. A stale Unix socket file at the path is
+/// replaced.
+pub fn serve(
+    addr: &ListenAddr,
+    n_workers: usize,
+    shards: Arc<CacheShards>,
+    catalog: Arc<WorkloadCatalog>,
+    config: PoolConfig,
+) -> std::io::Result<NetServer> {
+    let (listener, local) = match addr {
+        ListenAddr::Tcp(a) => {
+            let l = TcpListener::bind(a.as_str())?;
+            let bound: SocketAddr = l.local_addr()?;
+            (NetListener::Tcp(l), ListenAddr::Tcp(bound.to_string()))
+        }
+        ListenAddr::Unix(p) => {
+            // a dead server's socket file blocks bind; replacing it is the
+            // conventional unix-socket serve idiom
+            let _ = std::fs::remove_file(p);
+            (NetListener::Unix(UnixListener::bind(p)?), addr.clone())
+        }
+    };
+    let (sender, pool_rx, pool) = pool::serve_sharded(n_workers, shards, catalog, config);
+    // the shared response channel is unused — every request is routed to
+    // its connection's reply channel — but workers hold clones of its
+    // sender, so dropping the receiver here is safe and costs nothing
+    drop(pool_rx);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let counters = Arc::new(ConnCounters::default());
+    let conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+    let accept_thread = {
+        let stop = stop.clone();
+        let counters = counters.clone();
+        let conns = conns.clone();
+        let sender = sender.clone();
+        thread::spawn(move || loop {
+            let stream = listener.accept();
+            if stop.load(Ordering::SeqCst) {
+                break; // the shutdown poke, or anything racing it
+            }
+            match stream {
+                Ok(s) => {
+                    counters.accepted.fetch_add(1, Ordering::SeqCst);
+                    let sender = sender.clone();
+                    let counters = counters.clone();
+                    let handle = thread::spawn(move || serve_connection(s, sender, counters));
+                    conns.lock().unwrap().push(handle);
+                }
+                Err(_) => {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // transient accept failure (EMFILE, aborted handshake):
+                    // keep listening
+                }
+            }
+        })
+    };
+
+    Ok(NetServer {
+        local,
+        stop,
+        counters,
+        accept_thread,
+        conns,
+        sender,
+        pool,
+    })
+}
+
+/// Start a socket server with `n_shards` fresh default shards — the CLI
+/// entry point behind `repro serve --listen … --shards S`.
+pub fn serve_default(
+    addr: &ListenAddr,
+    n_workers: usize,
+    n_shards: usize,
+    config: PoolConfig,
+) -> std::io::Result<NetServer> {
+    serve(
+        addr,
+        n_workers,
+        Arc::new(CacheShards::new(n_shards)),
+        Arc::new(WorkloadCatalog::builtin()),
+        config,
+    )
+}
+
+impl NetServer {
+    /// The bound address — with TCP port 0 this is the real port.
+    pub fn local_addr(&self) -> &ListenAddr {
+        &self.local
+    }
+
+    /// Live connection counters (accepted / closed / aborted; active is
+    /// `accepted - closed - aborted`).
+    pub fn counters(&self) -> &Arc<ConnCounters> {
+        &self.counters
+    }
+
+    /// Block serving until the listener dies (the CLI foreground mode).
+    pub fn run(self) -> Metrics {
+        let _ = self.accept_thread.join();
+        NetServer::drain(self.local, self.counters, self.conns, self.sender, self.pool)
+    }
+
+    /// Stop accepting, drain every connection and the pool, and return the
+    /// merged metrics with connection counters folded in.
+    pub fn shutdown(self) -> Metrics {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept() the listener thread is parked in
+        match &self.local {
+            ListenAddr::Tcp(a) => {
+                let _ = TcpStream::connect(a.as_str());
+            }
+            ListenAddr::Unix(p) => {
+                let _ = UnixStream::connect(p);
+            }
+        }
+        let _ = self.accept_thread.join();
+        NetServer::drain(self.local, self.counters, self.conns, self.sender, self.pool)
+    }
+
+    fn drain(
+        local: ListenAddr,
+        counters: Arc<ConnCounters>,
+        conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+        sender: PoolSender,
+        pool: PoolHandle,
+    ) -> Metrics {
+        let handles: Vec<_> = std::mem::take(&mut *conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        // every connection's reply sender is gone; closing the admission
+        // edge lets the workers drain and exit
+        drop(sender);
+        let mut m = pool.join();
+        m.conns_accepted += counters.accepted.load(Ordering::SeqCst);
+        m.conns_closed += counters.closed.load(Ordering::SeqCst);
+        m.conns_aborted += counters.aborted.load(Ordering::SeqCst);
+        if let ListenAddr::Unix(p) = &local {
+            let _ = std::fs::remove_file(p);
+        }
+        m
+    }
+}
+
+/// Serve one connection: reader parses and admits, writer streams
+/// responses back, hangup raises the shared abort flag.
+fn serve_connection(stream: NetStream, sender: PoolSender, counters: Arc<ConnCounters>) {
+    let write_half = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => {
+            counters.aborted.fetch_add(1, Ordering::SeqCst);
+            return;
+        }
+    };
+    // raised exactly once per connection, by whichever side notices first
+    let abort = Arc::new(AtomicBool::new(false));
+    let out = Arc::new(Mutex::new(write_half));
+    let (reply_tx, reply_rx) = mpsc::channel::<Response>();
+
+    let writer = {
+        let out = out.clone();
+        let abort = abort.clone();
+        let counters = counters.clone();
+        thread::spawn(move || {
+            // keep draining after a hangup so in-flight workers' sends keep
+            // succeeding cheaply; their responses are discarded
+            for resp in reply_rx.iter() {
+                if abort.load(Ordering::SeqCst) {
+                    continue;
+                }
+                let line = wire::response_to_json(&resp).render();
+                if !write_line(&out, &line) {
+                    raise_abort(&abort, &counters);
+                }
+            }
+        })
+    };
+
+    let reader = BufReader::new(stream);
+    for (i, line) in reader.lines().enumerate() {
+        if abort.load(Ordering::SeqCst) {
+            // peer already gone; stop parsing its backlog
+            break;
+        }
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => {
+                raise_abort(&abort, &counters);
+                break;
+            }
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match wire::parse_request_line(&line) {
+            Ok(req) => {
+                // admission answers (shed/expired) and worker responses all
+                // arrive on this connection's reply channel; Err means the
+                // pool itself is gone, so the stream is over
+                if sender
+                    .send_routed(req, reply_tx.clone(), abort.clone())
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Err(e) => {
+                let record =
+                    wire::line_error_json(i + 1, &e, wire::recover_request_id(&line)).render();
+                if !write_line(&out, &record) {
+                    raise_abort(&abort, &counters);
+                    break;
+                }
+            }
+        }
+    }
+    // end of stream: drop our reply sender so the writer drains the tail
+    // (workers still hold clones for in-flight requests) and exits
+    drop(reply_tx);
+    let _ = writer.join();
+    if !abort.load(Ordering::SeqCst) {
+        counters.closed.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// Write one JSONL record under the connection's write lock. Returns false
+/// on any I/O error (the caller raises the abort flag).
+fn write_line(out: &Mutex<NetStream>, line: &str) -> bool {
+    let mut o = out.lock().unwrap_or_else(|p| p.into_inner());
+    o.write_all(line.as_bytes())
+        .and_then(|_| o.write_all(b"\n"))
+        .and_then(|_| o.flush())
+        .is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listen_specs_parse() {
+        assert_eq!(
+            ListenAddr::parse("127.0.0.1:7070"),
+            ListenAddr::Tcp("127.0.0.1:7070".into())
+        );
+        assert_eq!(
+            ListenAddr::parse("tcp:0.0.0.0:9"),
+            ListenAddr::Tcp("0.0.0.0:9".into())
+        );
+        assert_eq!(
+            ListenAddr::parse("/tmp/repro.sock"),
+            ListenAddr::Unix(PathBuf::from("/tmp/repro.sock"))
+        );
+        assert_eq!(
+            ListenAddr::parse("unix:relative.sock"),
+            ListenAddr::Unix(PathBuf::from("relative.sock"))
+        );
+        assert_eq!(
+            ListenAddr::parse("./local.sock"),
+            ListenAddr::Unix(PathBuf::from("./local.sock"))
+        );
+        assert_eq!(ListenAddr::parse("localhost:80").to_string(), "tcp:localhost:80");
+    }
+}

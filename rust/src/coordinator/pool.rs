@@ -18,7 +18,7 @@
 //! request — admitted, shed, or expired — yields exactly one response on
 //! the response channel.
 
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -32,6 +32,7 @@ use super::exec_cache::ExecCache;
 use super::faults::{FaultPlan, FaultSite};
 use super::metrics::Metrics;
 use super::session::{ErrorKind, Request, Response, Session};
+use super::shard::CacheShards;
 
 /// Admission-control and resilience knobs for a pool. `Default` is the
 /// pre-resilience behaviour: unbounded queue, no deadline, no faults.
@@ -49,10 +50,15 @@ pub struct PoolConfig {
 }
 
 /// A request that passed admission, carrying its absolute deadline (stamped
-/// at enqueue so queue wait burns budget).
+/// at enqueue so queue wait burns budget) plus optional per-client routing:
+/// a reply channel (the socket front-end's per-connection stream) and an
+/// abort flag (raised when that connection's peer hangs up, so the request
+/// cancels at its next checkpoint instead of burning worker time).
 struct Admitted {
     req: Request,
     deadline: Option<Instant>,
+    reply: Option<mpsc::Sender<Response>>,
+    abort: Option<Arc<AtomicBool>>,
 }
 
 /// Request handle into the pool. Cloneable; dropping every clone shuts the
@@ -75,6 +81,42 @@ impl PoolSender {
     /// queued), so the one-response-per-request contract holds either way.
     /// `Err` means the pool is gone (both channels closed).
     pub fn send(&self, req: Request) -> Result<(), mpsc::SendError<Request>> {
+        self.send_routed_inner(req, None, None)
+    }
+
+    /// [`PoolSender::send`] with per-client routing: the response (shed,
+    /// expired, or served — same record either way) is delivered on `reply`
+    /// instead of the pool's shared response channel, and `abort` is
+    /// threaded into the request's [`CancelToken`] so raising it cancels
+    /// the request at its next checkpoint. The admission edge is identical
+    /// to [`PoolSender::send`] — this is how the socket front-end reuses
+    /// shed/deadline semantics byte-for-byte.
+    pub fn send_routed(
+        &self,
+        req: Request,
+        reply: mpsc::Sender<Response>,
+        abort: Arc<AtomicBool>,
+    ) -> Result<(), mpsc::SendError<Request>> {
+        self.send_routed_inner(req, Some(reply), Some(abort))
+    }
+
+    fn send_routed_inner(
+        &self,
+        req: Request,
+        reply: Option<mpsc::Sender<Response>>,
+        abort: Option<Arc<AtomicBool>>,
+    ) -> Result<(), mpsc::SendError<Request>> {
+        // deliver an admission-edge answer where the request would have
+        // answered: the per-client channel if routed, the shared one if not.
+        // A dead *per-client* channel means that client hung up — not a
+        // dead pool — so only the shared channel's failure is an error.
+        let answer = |resp: Response, req: Request| match &reply {
+            Some(r) => {
+                let _ = r.send(resp);
+                Ok(())
+            }
+            None => self.resp_tx.send(resp).map_err(|_| mpsc::SendError(req)),
+        };
         if let Some(cap) = self.queue_cap {
             if self.queue_depth() >= cap as u64 {
                 self.shed.fetch_add(1, Ordering::SeqCst);
@@ -87,7 +129,7 @@ impl PoolSender {
                     false,
                     Duration::ZERO,
                 );
-                return self.resp_tx.send(resp).map_err(|_| mpsc::SendError(req));
+                return answer(resp, req);
             }
         }
         let deadline = req
@@ -108,11 +150,16 @@ impl PoolSender {
                     false,
                     Duration::ZERO,
                 );
-                return self.resp_tx.send(resp).map_err(|_| mpsc::SendError(req));
+                return answer(resp, req);
             }
         }
         self.depth.fetch_add(1, Ordering::SeqCst);
-        let r = self.tx.send(Admitted { req, deadline });
+        let r = self.tx.send(Admitted {
+            req,
+            deadline,
+            reply,
+            abort,
+        });
         match r {
             Ok(()) => Ok(()),
             Err(mpsc::SendError(a)) => {
@@ -133,11 +180,10 @@ impl PoolSender {
     }
 }
 
-/// Join handle over the worker threads plus the shared caches.
+/// Join handle over the worker threads plus the shared cache shards.
 pub struct PoolHandle {
     workers: Vec<thread::JoinHandle<Metrics>>,
-    cache: Arc<CompileCache>,
-    exec_cache: Arc<ExecCache>,
+    shards: Arc<CacheShards>,
     shed: Arc<AtomicU64>,
     admission_timeouts: Arc<AtomicU64>,
 }
@@ -147,12 +193,19 @@ impl PoolHandle {
         self.workers.len()
     }
 
+    /// The first compile-cache shard (the only one for unsharded pools).
     pub fn cache(&self) -> &Arc<CompileCache> {
-        &self.cache
+        self.shards.compile_at(0)
     }
 
+    /// The first exec-cache shard (the only one for unsharded pools).
     pub fn exec_cache(&self) -> &Arc<ExecCache> {
-        &self.exec_cache
+        self.shards.exec_at(0)
+    }
+
+    /// The full shard set the pool serves against.
+    pub fn shards(&self) -> &Arc<CacheShards> {
+        &self.shards
     }
 
     /// Wait for every worker to drain and exit; returns the merged metrics
@@ -179,7 +232,7 @@ impl PoolHandle {
         // sender; fold them into the same counters a worker would have used
         total.timeouts += admission_timeouts;
         total.failed += admission_timeouts;
-        total.absorb_cache_stats(&self.cache.stats, &self.exec_cache.stats);
+        total.absorb_shards(&self.shards);
         total
     }
 }
@@ -230,6 +283,26 @@ pub fn serve_configured(
     catalog: Arc<WorkloadCatalog>,
     config: PoolConfig,
 ) -> (PoolSender, mpsc::Receiver<Response>, PoolHandle) {
+    serve_sharded(
+        n_workers,
+        Arc::new(CacheShards::single(cache, exec_cache)),
+        catalog,
+        config,
+    )
+}
+
+/// Start a pool over an explicit shard set: `n_workers` sessions routing
+/// every request to `shard_of(fingerprint)` across `shards.count()`
+/// independent compile/exec cache pairs. With one shard this is exactly
+/// [`serve_configured`]; with more, concurrent distinct kernels stop
+/// contending on a single cache lock while identical kernels still meet on
+/// the same single-flight map.
+pub fn serve_sharded(
+    n_workers: usize,
+    shards: Arc<CacheShards>,
+    catalog: Arc<WorkloadCatalog>,
+    config: PoolConfig,
+) -> (PoolSender, mpsc::Receiver<Response>, PoolHandle) {
     let n = n_workers.max(1);
     let (req_tx, req_rx) = mpsc::channel::<Admitted>();
     let (resp_tx, resp_rx) = mpsc::channel::<Response>();
@@ -246,14 +319,13 @@ pub fn serve_configured(
     for _ in 0..n {
         let rx = shared_rx.clone();
         let tx = resp_tx.clone();
-        let worker_cache = cache.clone();
-        let worker_exec = exec_cache.clone();
+        let worker_shards = shards.clone();
         let worker_catalog = catalog.clone();
         let depth = depth.clone();
         #[cfg(any(test, feature = "fault-injection"))]
         let faults = config.faults.clone();
         workers.push(thread::spawn(move || {
-            let mut session = Session::with_shared(worker_cache, worker_exec, worker_catalog);
+            let mut session = Session::with_shards(worker_shards, worker_catalog);
             session.metrics.workers = 1;
             #[cfg(any(test, feature = "fault-injection"))]
             if let Some(plan) = faults.clone() {
@@ -268,7 +340,12 @@ pub fn serve_configured(
                     let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
                     guard.recv()
                 };
-                let Admitted { req, deadline } = match admitted {
+                let Admitted {
+                    req,
+                    deadline,
+                    reply,
+                    abort,
+                } = match admitted {
                     Ok(a) => a,
                     Err(_) => break, // every sender dropped: drain complete
                 };
@@ -281,7 +358,10 @@ pub fn serve_configured(
                         std::thread::sleep(plan.delay());
                     }
                 }
-                let cancel = deadline.map(CancelToken::at).unwrap_or_default();
+                let mut cancel = deadline.map(CancelToken::at).unwrap_or_default();
+                if let Some(flag) = abort {
+                    cancel = cancel.with_abort(flag);
+                }
                 // A panic inside handle must not kill the worker silently:
                 // clients count one response per request, so a vanished
                 // worker would deadlock them. Convert it to an error reply.
@@ -304,8 +384,18 @@ pub fn serve_configured(
                         )
                     }
                 };
-                if tx.send(resp).is_err() {
-                    break; // client hung up: stop consuming
+                match reply {
+                    // a routed response goes to its connection's stream; a
+                    // dead stream means that one client vanished — the
+                    // worker keeps serving everyone else
+                    Some(rtx) => {
+                        let _ = rtx.send(resp);
+                    }
+                    None => {
+                        if tx.send(resp).is_err() {
+                            break; // client hung up: stop consuming
+                        }
+                    }
                 }
             }
             session.metrics
@@ -326,8 +416,7 @@ pub fn serve_configured(
         resp_rx,
         PoolHandle {
             workers,
-            cache,
-            exec_cache,
+            shards,
             shed,
             admission_timeouts,
         },
@@ -354,11 +443,21 @@ pub fn run_trace_configured(
     trace: &[Request],
     config: PoolConfig,
 ) -> (std::time::Duration, Metrics, Vec<Response>) {
+    run_trace_sharded(n_workers, 1, trace, config)
+}
+
+/// [`run_trace_configured`] over `n_shards` fresh cache shards — what the
+/// shard-invariance tests and the scaling bench drive.
+pub fn run_trace_sharded(
+    n_workers: usize,
+    n_shards: usize,
+    trace: &[Request],
+    config: PoolConfig,
+) -> (std::time::Duration, Metrics, Vec<Response>) {
     let t0 = std::time::Instant::now();
-    let (tx, rx, handle) = serve_configured(
+    let (tx, rx, handle) = serve_sharded(
         n_workers,
-        Arc::new(CompileCache::new()),
-        Arc::new(ExecCache::new()),
+        Arc::new(CacheShards::new(n_shards)),
         Arc::new(WorkloadCatalog::builtin()),
         config,
     );
@@ -498,13 +597,95 @@ mod tests {
         // the aggregate stays well-formed and the death is counted
         let handle = PoolHandle {
             workers: vec![thread::spawn(|| -> Metrics { panic!("worker died") })],
-            cache: Arc::new(CompileCache::new()),
-            exec_cache: Arc::new(ExecCache::new()),
+            shards: Arc::new(CacheShards::single(
+                Arc::new(CompileCache::new()),
+                Arc::new(ExecCache::new()),
+            )),
             shed: Arc::new(AtomicU64::new(0)),
             admission_timeouts: Arc::new(AtomicU64::new(0)),
         };
         let m = handle.join();
         assert_eq!(m.worker_panics, 1);
         assert_eq!(m.workers, 1);
+    }
+
+    #[test]
+    fn routed_responses_land_on_the_reply_channel() {
+        let (tx, rx, handle) = serve_sharded(
+            2,
+            Arc::new(CacheShards::new(4)),
+            Arc::new(WorkloadCatalog::builtin()),
+            PoolConfig::default(),
+        );
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send_routed(
+            req(7, "gemm", Target::Tcpa, 1),
+            reply_tx,
+            Arc::new(AtomicBool::new(false)),
+        )
+        .unwrap();
+        let r = reply_rx.recv().unwrap();
+        assert_eq!(r.id, 7);
+        assert!(r.error.is_none(), "{:?}", r.error);
+        // nothing leaked onto the shared response stream
+        drop(tx);
+        assert!(rx.recv().is_err(), "shared stream stays empty and closes");
+        let m = handle.join();
+        assert_eq!(m.served, 1);
+    }
+
+    #[test]
+    fn routed_shed_answers_on_the_reply_channel() {
+        let config = PoolConfig {
+            queue_cap: Some(0),
+            ..PoolConfig::default()
+        };
+        let (tx, _rx, handle) = serve_sharded(
+            1,
+            Arc::new(CacheShards::new(1)),
+            Arc::new(WorkloadCatalog::builtin()),
+            config,
+        );
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send_routed(
+            req(9, "gemm", Target::Tcpa, 1),
+            reply_tx,
+            Arc::new(AtomicBool::new(false)),
+        )
+        .unwrap();
+        let r = reply_rx.recv().unwrap();
+        assert_eq!(r.error_kind, Some(ErrorKind::Shed));
+        assert_eq!(tx.shed(), 1);
+        drop(tx);
+        handle.join();
+    }
+
+    #[test]
+    fn raised_abort_flag_cancels_at_dequeue() {
+        // admit with the abort flag already raised: the worker answers a
+        // [cancelled]-typed timeout at its dequeue checkpoint without
+        // touching any cache
+        let (tx, _rx, handle) = serve_sharded(
+            1,
+            Arc::new(CacheShards::new(1)),
+            Arc::new(WorkloadCatalog::builtin()),
+            PoolConfig::default(),
+        );
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let abort = Arc::new(AtomicBool::new(true));
+        tx.send_routed(req(3, "gemm", Target::Tcpa, 1), reply_tx, abort)
+            .unwrap();
+        let r = reply_rx.recv().unwrap();
+        assert_eq!(r.error_kind, Some(ErrorKind::Timeout));
+        assert!(
+            r.error.as_deref().unwrap_or("").contains("[cancelled]"),
+            "{:?}",
+            r.error
+        );
+        drop(tx);
+        let m = handle.join();
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.timeouts, 1);
+        assert_eq!(m.cache_hits + m.cache_misses, 0, "no cache was touched");
     }
 }

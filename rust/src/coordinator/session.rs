@@ -17,7 +17,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
-use crate::backend::{is_deadline_error, CancelToken};
+use crate::backend::{is_cancel_error, is_deadline_error, CancelToken};
 pub use crate::backend::Target;
 use crate::bench::spec::{WorkloadCatalog, WorkloadSpec};
 use crate::ir::loopnest::ArrayData;
@@ -31,6 +31,7 @@ use super::exec_cache::{ExecCache, ExecKey};
 #[cfg(any(test, feature = "fault-injection"))]
 use super::faults::{FaultPlan, FaultSite};
 use super::metrics::Metrics;
+use super::shard::CacheShards;
 
 /// Prefix the session tags onto compile failures inside the exec closure,
 /// so the classification (compile failure vs. execution failure) survives
@@ -380,8 +381,11 @@ impl Response {
 /// (possibly shared) exec-report cache and a (possibly shared) workload
 /// catalog.
 pub struct Session {
-    cache: Arc<CompileCache>,
-    exec_cache: Arc<ExecCache>,
+    /// The shard set this session serves against: one compile/exec cache
+    /// pair per shard, selected by workload fingerprint. Pre-shard entry
+    /// points wrap their single cache pair via [`CacheShards::single`], so
+    /// `S = 1` behaves byte-for-byte like the old two-field layout.
+    shards: Arc<CacheShards>,
     catalog: Arc<WorkloadCatalog>,
     golden: GoldenService,
     /// Memoized catalog resolutions: `(name, n)` → realized spec + its
@@ -432,15 +436,22 @@ impl Session {
     }
 
     /// A session over fully shared server state — compile cache, exec
-    /// cache and catalog (what pool workers use).
+    /// cache and catalog (what single-shard pool workers use).
     pub fn with_shared(
         cache: Arc<CompileCache>,
         exec_cache: Arc<ExecCache>,
         catalog: Arc<WorkloadCatalog>,
     ) -> Session {
+        Session::with_shards(Arc::new(CacheShards::single(cache, exec_cache)), catalog)
+    }
+
+    /// A session over a shared shard set — what sharded pool workers use.
+    /// Every request is routed to `shard_of(fingerprint)` for both the
+    /// compile and exec lookups, so identical workloads always meet on the
+    /// same single-flight map regardless of which worker carries them.
+    pub fn with_shards(shards: Arc<CacheShards>, catalog: Arc<WorkloadCatalog>) -> Session {
         Session {
-            cache,
-            exec_cache,
+            shards,
             catalog,
             golden: GoldenService::new(),
             resolved: std::collections::HashMap::new(),
@@ -460,12 +471,19 @@ impl Session {
         self.faults = Some(plan);
     }
 
+    /// The first compile-cache shard (the only one for pre-shard callers).
     pub fn cache(&self) -> &Arc<CompileCache> {
-        &self.cache
+        self.shards.compile_at(0)
     }
 
+    /// The first exec-cache shard (the only one for pre-shard callers).
     pub fn exec_cache(&self) -> &Arc<ExecCache> {
-        &self.exec_cache
+        self.shards.exec_at(0)
+    }
+
+    /// The full shard set this session serves against.
+    pub fn shards(&self) -> &Arc<CacheShards> {
+        &self.shards
     }
 
     pub fn catalog(&self) -> &Arc<WorkloadCatalog> {
@@ -504,6 +522,9 @@ impl Session {
         // deadline checkpoint at dequeue: a request that spent its whole
         // budget queued is answered without touching any cache
         if let Err(e) = cancel.check("dequeue") {
+            if is_cancel_error(&e) {
+                self.metrics.cancelled += 1;
+            }
             self.metrics.timeouts += 1;
             let resp =
                 Response::failure(req, e, ErrorKind::Timeout, false, false, false, t0.elapsed());
@@ -540,8 +561,11 @@ impl Session {
         // exec cache short-circuited the whole pipeline)
         let mut compile_outcome: Option<CacheOutcome> = None;
         let mut symbolic_use = SymbolicUse::None;
-        let exec_cache = Arc::clone(&self.exec_cache);
-        let cache = &self.cache;
+        // both cache levels for this request live on the shard owning its
+        // fingerprint — same kernel, same shard, same single-flight map
+        let shard = self.shards.shard_of(fingerprint);
+        let exec_cache = Arc::clone(self.shards.exec(fingerprint));
+        let cache = self.shards.compile(fingerprint);
         let input_memo = &mut self.inputs;
         let metrics = &mut self.metrics;
         let (result, exec_outcome) = exec_cache.get_or_run_tracked(
@@ -591,7 +615,13 @@ impl Session {
                 let ok = resp.validated != Some(false);
                 (resp, cycles, ok)
             }
-            Err(e) if is_deadline_error(&e) => {
+            // a client-gone abort is a timeout on the wire (the record is
+            // written to a dead socket anyway) but counted separately so
+            // operators can tell client churn from load problems
+            Err(e) if is_deadline_error(&e) || is_cancel_error(&e) => {
+                if is_cancel_error(&e) {
+                    self.metrics.cancelled += 1;
+                }
                 self.metrics.timeouts += 1;
                 let resp = Response::failure(
                     req,
@@ -633,6 +663,7 @@ impl Session {
         self.metrics.retries += retries.get();
         self.metrics
             .record_request(req.target, key, cycles, resp.wall, ok, cache_hit);
+        self.metrics.record_shard(shard, resp.wall, ok);
         resp
     }
 
@@ -710,8 +741,10 @@ impl Session {
             seed: req.seed,
             batch: req.batch,
         };
-        let exec_cache = Arc::clone(&self.exec_cache);
-        let cache = &self.cache;
+        // the fallback key re-targets Seq but keeps the fingerprint, so it
+        // lands on the same shard as the primary attempt
+        let exec_cache = Arc::clone(self.shards.exec(fingerprint));
+        let cache = self.shards.compile(fingerprint);
         let input_memo = &mut self.inputs;
         let metrics = &mut self.metrics;
         let (result, fb_outcome) = exec_cache.get_or_run_tracked(
@@ -738,7 +771,10 @@ impl Session {
                 let ok = resp.validated != Some(false);
                 (resp, cycles, ok)
             }
-            Err(e) if is_deadline_error(&e) => {
+            Err(e) if is_deadline_error(&e) || is_cancel_error(&e) => {
+                if is_cancel_error(&e) {
+                    self.metrics.cancelled += 1;
+                }
                 self.metrics.timeouts += 1;
                 let resp = Response::failure(
                     req,

@@ -1,0 +1,223 @@
+//! Sharded server-side caches, keyed by workload fingerprint.
+//!
+//! One process-wide [`CompileCache`] + [`ExecCache`] pair serves a single
+//! stream fine, but under many concurrent *distinct* kernels every lookup
+//! contends on the same two `RwLock`s. [`CacheShards`] splits both caches
+//! into `S` independent shards selected by `fingerprint % S` — the same
+//! FNV fingerprint that content-addresses `WorkloadSpec`s — so requests
+//! for different kernels take different locks while every request for the
+//! *same* kernel (any `n`, any target, any batch) still lands on the same
+//! shard and keeps single-flight semantics intact.
+//!
+//! Each shard is a complete, unmodified cache: its own `RwLock`, its own
+//! LRU bound, its own single-flight `FlightMap`, its own symbolic
+//! per-shape store. Every PR 5/6/7 invariant therefore holds *per shard by
+//! construction* (in-flight entries are never evicted, poisoned flights
+//! quarantine once, `misses == compiles + instantiations`) and — because
+//! shard selection is a pure function of the key — also in aggregate:
+//! summing any counter over shards yields the identical identity the
+//! single-cache plane reported. [`CacheShards::single`] wraps an existing
+//! pair, so `S = 1` is byte-for-byte the pre-shard coordinator.
+//!
+//! Capacity: `new(S)` divides the default bounds by `S` (rounding up), so
+//! scaling the shard count never grows the aggregate artifact budget.
+
+use std::sync::Arc;
+
+use super::cache::{
+    CompileCache, DEFAULT_COMPILE_CAPACITY, DEFAULT_SYMBOLIC_CAPACITY,
+};
+use super::exec_cache::{ExecCache, DEFAULT_EXEC_CAPACITY};
+use crate::backend::BackendRegistry;
+
+/// An immutable set of `S ≥ 1` compile/exec cache shard pairs.
+///
+/// Shared by every pool worker (`Arc<CacheShards>`); selection is
+/// [`CacheShards::shard_of`] on the workload fingerprint.
+pub struct CacheShards {
+    compile: Vec<Arc<CompileCache>>,
+    exec: Vec<Arc<ExecCache>>,
+}
+
+impl CacheShards {
+    /// `shards` default-registry shards with the aggregate capacity of a
+    /// single default cache (per-shard bound = default ÷ shards, rounded
+    /// up). `shards == 0` is treated as 1.
+    pub fn new(shards: usize) -> CacheShards {
+        CacheShards::with_registry(shards, BackendRegistry::with_defaults)
+    }
+
+    /// Like [`CacheShards::new`] but each shard's [`CompileCache`] is
+    /// built over `registry()` — the seam tests use to install blocking or
+    /// flaky backends per shard.
+    pub fn with_registry(
+        shards: usize,
+        registry: impl Fn() -> BackendRegistry,
+    ) -> CacheShards {
+        let s = shards.max(1);
+        let compile_cap = DEFAULT_COMPILE_CAPACITY.div_ceil(s);
+        let symbolic_cap = DEFAULT_SYMBOLIC_CAPACITY.div_ceil(s);
+        let exec_cap = DEFAULT_EXEC_CAPACITY.div_ceil(s);
+        CacheShards {
+            compile: (0..s)
+                .map(|_| {
+                    Arc::new(CompileCache::with_capacities(
+                        registry(),
+                        compile_cap,
+                        symbolic_cap,
+                    ))
+                })
+                .collect(),
+            exec: (0..s)
+                .map(|_| Arc::new(ExecCache::with_capacity(exec_cap)))
+                .collect(),
+        }
+    }
+
+    /// Wrap one existing cache pair as a single shard — the back-compat
+    /// constructor every pre-shard entry point funnels through, so shared
+    /// caches handed in by callers keep working unchanged.
+    pub fn single(compile: Arc<CompileCache>, exec: Arc<ExecCache>) -> CacheShards {
+        CacheShards {
+            compile: vec![compile],
+            exec: vec![exec],
+        }
+    }
+
+    /// Build from explicit per-shard pairs (tests). Panics if the lists
+    /// are empty or of unequal length.
+    pub fn from_parts(
+        compile: Vec<Arc<CompileCache>>,
+        exec: Vec<Arc<ExecCache>>,
+    ) -> CacheShards {
+        assert!(!compile.is_empty(), "at least one shard");
+        assert_eq!(compile.len(), exec.len(), "shard lists must pair up");
+        CacheShards { compile, exec }
+    }
+
+    /// Number of shards (≥ 1).
+    pub fn count(&self) -> usize {
+        self.compile.len()
+    }
+
+    /// Shard index for a workload fingerprint: `fingerprint % S`.
+    pub fn shard_of(&self, fingerprint: u64) -> usize {
+        (fingerprint % self.compile.len() as u64) as usize
+    }
+
+    /// The compile-cache shard owning `fingerprint`.
+    pub fn compile(&self, fingerprint: u64) -> &Arc<CompileCache> {
+        &self.compile[self.shard_of(fingerprint)]
+    }
+
+    /// The exec-cache shard owning `fingerprint`.
+    pub fn exec(&self, fingerprint: u64) -> &Arc<ExecCache> {
+        &self.exec[self.shard_of(fingerprint)]
+    }
+
+    /// Compile-cache shard by index (metrics, tests).
+    pub fn compile_at(&self, shard: usize) -> &Arc<CompileCache> {
+        &self.compile[shard]
+    }
+
+    /// Exec-cache shard by index (metrics, tests).
+    pub fn exec_at(&self, shard: usize) -> &Arc<ExecCache> {
+        &self.exec[shard]
+    }
+
+    /// Aggregate compile-plane counters summed over all shards. Because
+    /// shard selection is key-pure, these satisfy exactly the identities a
+    /// single cache would: `misses == compiles + instantiations`, etc.
+    pub fn aggregate(&self) -> ShardAggregate {
+        let mut a = ShardAggregate::default();
+        for c in &self.compile {
+            let s = &c.stats;
+            a.hits += s.hits();
+            a.misses += s.misses();
+            a.waits += s.waits();
+            a.compiles += s.compiles();
+            a.instantiations += s.instantiations();
+            a.symbolic_compiles += s.symbolic_compiles();
+            a.symbolic_hits += s.symbolic_hits();
+            a.compile_evictions += s.evictions();
+            a.poisoned += s.poisoned();
+            a.resident += c.len();
+        }
+        for e in &self.exec {
+            let s = &e.stats;
+            a.exec_hits += s.hits();
+            a.exec_misses += s.misses();
+            a.exec_waits += s.waits();
+            a.execs += s.execs();
+            a.exec_evictions += s.evictions();
+            a.poisoned += s.poisoned();
+            a.exec_resident += e.len();
+        }
+        a
+    }
+}
+
+/// Counter sums over every shard of a [`CacheShards`] — what
+/// `Metrics::absorb_shards` folds into the merged report and what the
+/// invariance tests reconcile against per-response wire flags.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardAggregate {
+    pub hits: u64,
+    pub misses: u64,
+    pub waits: u64,
+    pub compiles: u64,
+    pub instantiations: u64,
+    pub symbolic_compiles: u64,
+    pub symbolic_hits: u64,
+    pub compile_evictions: u64,
+    pub exec_hits: u64,
+    pub exec_misses: u64,
+    pub exec_waits: u64,
+    pub execs: u64,
+    pub exec_evictions: u64,
+    pub poisoned: u64,
+    pub resident: usize,
+    pub exec_resident: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_selection_is_stable_and_total() {
+        let shards = CacheShards::new(8);
+        assert_eq!(shards.count(), 8);
+        for fp in [0u64, 1, 7, 8, 0xdead_beef, u64::MAX] {
+            let s = shards.shard_of(fp);
+            assert!(s < 8);
+            assert_eq!(s, shards.shard_of(fp), "selection is deterministic");
+            assert!(Arc::ptr_eq(shards.compile(fp), shards.compile_at(s)));
+            assert!(Arc::ptr_eq(shards.exec(fp), shards.exec_at(s)));
+        }
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let shards = CacheShards::new(0);
+        assert_eq!(shards.count(), 1);
+        assert_eq!(shards.shard_of(u64::MAX), 0);
+    }
+
+    #[test]
+    fn per_shard_capacity_divides_the_default() {
+        let shards = CacheShards::new(8);
+        assert_eq!(
+            shards.compile_at(0).capacity(),
+            DEFAULT_COMPILE_CAPACITY.div_ceil(8)
+        );
+        assert_eq!(
+            shards.exec_at(0).capacity(),
+            DEFAULT_EXEC_CAPACITY.div_ceil(8)
+        );
+        // S = 1 keeps the exact defaults.
+        let one = CacheShards::new(1);
+        assert_eq!(one.compile_at(0).capacity(), DEFAULT_COMPILE_CAPACITY);
+        assert_eq!(one.exec_at(0).capacity(), DEFAULT_EXEC_CAPACITY);
+    }
+}

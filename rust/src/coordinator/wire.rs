@@ -45,8 +45,6 @@ use crate::backend::Target;
 use crate::bench::spec::{WorkloadCatalog, WorkloadSpec};
 use crate::util::json::{opt_u64, req_i64, req_str, req_u64, Json};
 
-use super::cache::CompileCache;
-use super::exec_cache::ExecCache;
 use super::metrics::Metrics;
 use super::pool;
 use super::pool::PoolConfig;
@@ -270,13 +268,30 @@ fn check_version(j: &Json) -> Result<(), String> {
     }
 }
 
-/// The error record emitted for an unparseable request line.
-pub fn line_error_json(lineno: usize, msg: &str) -> Json {
-    Json::obj(vec![
+/// The error record emitted for an unparseable request line. When the
+/// malformed line still parsed far enough to recover a request `id` (see
+/// [`recover_request_id`]), the record echoes it, so socket clients can
+/// correlate failures without counting lines.
+pub fn line_error_json(lineno: usize, msg: &str, id: Option<u64>) -> Json {
+    let mut fields = vec![
         ("v", Json::Int(WIRE_VERSION)),
         ("line", Json::from(lineno)),
-        ("error", Json::from(msg)),
-    ])
+    ];
+    if let Some(id) = id {
+        fields.push(("id", Json::Int(id as i64)));
+    }
+    fields.push(("error", Json::from(msg)));
+    Json::obj(fields)
+}
+
+/// Best-effort request-id recovery from a line that failed
+/// [`parse_request_line`]: if the line is syntactically valid JSON with a
+/// non-negative integer `id`, return it — whatever else is wrong with the
+/// request (bad version, unknown target, invalid workload).
+pub fn recover_request_id(line: &str) -> Option<u64> {
+    let j = Json::parse(line).ok()?;
+    let id = j.get("id")?.as_i64()?;
+    u64::try_from(id).ok()
 }
 
 // ============================ JSONL serving =================================
@@ -310,10 +325,23 @@ pub fn serve_jsonl_configured(
     catalog: Arc<WorkloadCatalog>,
     config: PoolConfig,
 ) -> std::io::Result<Metrics> {
-    let (tx, rx, handle) = pool::serve_configured(
+    serve_jsonl_sharded(input, out, n_workers, 1, catalog, config)
+}
+
+/// [`serve_jsonl_configured`] over `n_shards` fresh cache shards (see
+/// [`super::shard::CacheShards`]): the file/stdin front end of the same
+/// sharded plane the socket server runs on.
+pub fn serve_jsonl_sharded(
+    input: &mut dyn BufRead,
+    out: &mut (dyn Write + Send),
+    n_workers: usize,
+    n_shards: usize,
+    catalog: Arc<WorkloadCatalog>,
+    config: PoolConfig,
+) -> std::io::Result<Metrics> {
+    let (tx, rx, handle) = pool::serve_sharded(
         n_workers,
-        Arc::new(CompileCache::new()),
-        Arc::new(ExecCache::new()),
+        Arc::new(super::shard::CacheShards::new(n_shards)),
         catalog,
         config,
     );
@@ -351,7 +379,8 @@ pub fn serve_jsonl_configured(
                 }
                 Err(e) => {
                     let mut o = out.lock().unwrap();
-                    let record = line_error_json(i + 1, &e).render();
+                    let record =
+                        line_error_json(i + 1, &e, recover_request_id(&line)).render();
                     if let Err(io_err) = writeln!(o, "{record}") {
                         read_result = Err(io_err);
                         break;
@@ -546,8 +575,52 @@ mod tests {
 
     #[test]
     fn line_errors_identify_the_line() {
-        let j = line_error_json(3, "boom");
+        let j = line_error_json(3, "boom", None);
         assert_eq!(j.get("line").unwrap().as_i64(), Some(3));
         assert_eq!(j.get("v").unwrap().as_i64(), Some(WIRE_VERSION));
+        assert!(j.get("id").is_none(), "no id recovered, none echoed");
+        let j = line_error_json(3, "boom", Some(42));
+        assert_eq!(j.get("id").unwrap().as_i64(), Some(42));
+    }
+
+    #[test]
+    fn error_records_echo_a_recoverable_id() {
+        // valid JSON, bad request (unknown target): id is recoverable
+        assert_eq!(
+            recover_request_id(r#"{"v":1,"id":17,"target":"warp"}"#),
+            Some(17)
+        );
+        // syntactically broken line: nothing to recover
+        assert_eq!(recover_request_id("not json at all"), None);
+        // negative ids are not coerced
+        assert_eq!(recover_request_id(r#"{"id":-4}"#), None);
+        // end to end: the error record for a bad-but-parseable line
+        // carries the id, the record for garbage does not
+        let input = format!(
+            "{}\n{}\n",
+            r#"{"v":99,"id":17,"workload":{"name":"gemm","n":8},"target":"tcpa"}"#,
+            "garbage"
+        );
+        let mut out = Vec::new();
+        serve_jsonl(
+            &mut input.as_bytes(),
+            &mut out,
+            1,
+            Arc::new(WorkloadCatalog::builtin()),
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let mut with_id = 0;
+        let mut without_id = 0;
+        for l in text.lines() {
+            let j = Json::parse(l).unwrap();
+            assert!(j.get("line").is_some(), "both records are line errors: {l}");
+            match j.get("id").and_then(Json::as_i64) {
+                Some(17) => with_id += 1,
+                Some(other) => panic!("unexpected id {other} in {l}"),
+                None => without_id += 1,
+            }
+        }
+        assert_eq!((with_id, without_id), (1, 1), "{text}");
     }
 }

@@ -14,11 +14,17 @@
 //!             [--target tcpa|cgra|seq] [--compare]
 //!                              # synthetic trace through the worker pool +
 //!                              # shared content-addressed compile cache
-//! repro serve --requests <file.jsonl|->  [--workers 4]
+//! repro serve --requests <file.jsonl|->  [--workers 4] [--shards S]
 //!                              # JSON wire protocol: newline-delimited
 //!                              # requests (catalog name or inline workload
 //!                              # spec) in, completion-order JSON responses
 //!                              # out, correlated by the echoed client id
+//! repro serve --listen <addr|path> [--workers 4] [--shards S]
+//!                              # socket front-end: TCP (host:port) or
+//!                              # Unix-domain (path or unix:path) listener
+//!                              # speaking the same JSONL wire protocol to
+//!                              # many concurrent connections, over S
+//!                              # fingerprint-sharded cache pairs
 //! repro paula <file.paula>    # compile a PAULA program onto the TCPA
 //! repro all [--quick]         # everything above, in order
 //! ```
@@ -107,11 +113,20 @@ fn main() {
                 }),
                 ..pool::PoolConfig::default()
             };
+            // shard count for both cache levels (fingerprint % S routing);
+            // 1 keeps the classic single-cache plane
+            let shards = args.opt_usize("shards", 1);
+            // `--listen` starts the socket front-end (TCP host:port or a
+            // Unix-domain path) and serves until killed
+            if let Some(spec) = args.opt("listen") {
+                serve_listen(spec, workers, shards, pool_config);
+                return;
+            }
             // `--requests` is either a count (synthetic trace mode) or a
             // JSONL path / `-` for stdin (wire-protocol mode)
             let req_arg = args.opt("requests");
             if let Some(path) = req_arg.filter(|v| v.parse::<usize>().is_err()) {
-                serve_jsonl(path, workers, pool_config);
+                serve_jsonl(path, workers, shards, pool_config);
                 return;
             }
             let n_req = req_arg.and_then(|v| v.parse().ok()).unwrap_or(24);
@@ -147,8 +162,8 @@ fn main() {
                 })
                 .collect();
             if args.flag("compare") {
-                let (wall1, m1, r1) = run_trace(1, &trace, true, pool_config.clone());
-                let (walln, mn, rn) = run_trace(workers, &trace, true, pool_config);
+                let (wall1, m1, r1) = run_trace(1, shards, &trace, true, pool_config.clone());
+                let (walln, mn, rn) = run_trace(workers, shards, &trace, true, pool_config);
                 let rps = |w: Duration| trace.len() as f64 / w.as_secs_f64().max(1e-9);
                 println!("1 worker : {:?}  ({:.1} req/s)", wall1, rps(wall1));
                 println!(
@@ -169,7 +184,7 @@ fn main() {
                     cache_outcomes(&rn)
                 );
             } else {
-                let (wall, m, _) = run_trace(workers, &trace, quiet, pool_config);
+                let (wall, m, _) = run_trace(workers, shards, &trace, quiet, pool_config);
                 println!(
                     "{} requests on {workers} workers in {wall:?} ({:.1} req/s)",
                     trace.len(),
@@ -212,6 +227,7 @@ fn main() {
                 "usage: repro <table1|table2|table3|fig6|fig7|fig8|asic|validate|serve|paula|all> \
                  [--quick] [--bench NAME] [--n N] [--sizes a,b,c] \
                  [--workers N] [--requests N|FILE.jsonl|-] [--trace mixed|NAME] \
+                 [--listen ADDR|PATH] [--shards S] \
                  [--target tcpa|cgra|seq] [--compare] [--no-validate] \
                  [--queue-cap N] [--default-deadline-ms MS]"
             );
@@ -220,10 +236,28 @@ fn main() {
     }
 }
 
+/// Serve the socket front-end until the process is killed: TCP
+/// (`host:port` or `tcp:host:port`) or Unix-domain (`path` or `unix:path`)
+/// listener over `shards` fingerprint-sharded cache pairs.
+fn serve_listen(spec: &str, workers: usize, shards: usize, config: pool::PoolConfig) {
+    let addr = repro::coordinator::ListenAddr::parse(spec);
+    let server = repro::coordinator::net::serve_default(&addr, workers, shards, config)
+        .unwrap_or_else(|e| {
+            eprintln!("cannot listen on `{spec}`: {e}");
+            std::process::exit(1);
+        });
+    eprintln!(
+        "listening on {} ({workers} workers, {shards} shards)",
+        server.local_addr()
+    );
+    let metrics = server.run();
+    eprintln!("{}", metrics.report());
+}
+
 /// Serve newline-delimited JSON requests from a file (or stdin via `-`)
 /// through the pool, writing JSON responses to stdout and the merged
 /// metrics report to stderr (so piped output stays pure JSONL).
-fn serve_jsonl(path: &str, workers: usize, config: pool::PoolConfig) {
+fn serve_jsonl(path: &str, workers: usize, shards: usize, config: pool::PoolConfig) {
     let stdin = std::io::stdin();
     let mut reader: Box<dyn std::io::BufRead> = if path == "-" {
         Box::new(stdin.lock())
@@ -235,10 +269,11 @@ fn serve_jsonl(path: &str, workers: usize, config: pool::PoolConfig) {
         Box::new(std::io::BufReader::new(file))
     };
     let catalog = std::sync::Arc::new(WorkloadCatalog::builtin());
-    let metrics = wire::serve_jsonl_configured(
+    let metrics = wire::serve_jsonl_sharded(
         &mut reader,
         &mut std::io::stdout().lock(),
         workers,
+        shards,
         catalog,
         config,
     )
@@ -270,15 +305,16 @@ fn build_trace(kind: &str, n_req: usize) -> Vec<Request> {
     Request::round_robin(&names, 8, n_req, 0)
 }
 
-/// Run a trace through [`pool::run_trace`], printing the responses after
-/// the timed window so the req/s figure is not skewed by terminal I/O.
+/// Run a trace through [`pool::run_trace_sharded`], printing the responses
+/// after the timed window so the req/s figure is not skewed by terminal I/O.
 fn run_trace(
     workers: usize,
+    shards: usize,
     trace: &[Request],
     quiet: bool,
     config: pool::PoolConfig,
 ) -> (Duration, Metrics, Vec<Response>) {
-    let (wall, metrics, responses) = pool::run_trace_configured(workers, trace, config);
+    let (wall, metrics, responses) = pool::run_trace_sharded(workers, shards, trace, config);
     if !quiet {
         for r in &responses {
             println!(

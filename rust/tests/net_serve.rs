@@ -1,0 +1,535 @@
+//! Integration: the socket front-end (`coordinator::net`). Loopback-only —
+//! every test binds 127.0.0.1:0 or a Unix socket under the cargo tmpdir.
+//!
+//! The contract under test is *path equivalence*: a JSONL trace pushed
+//! through a real socket must produce exactly the records the file path
+//! (`serve_jsonl_sharded`) produces for the same trace — served, shed,
+//! expired, degraded and malformed-line records alike — because both fronts
+//! share the same [`PoolSender`] admission edge. On top of that: many
+//! concurrent connections keep the response identity and the aggregate
+//! shard identities, and a client hangup cancels its pending requests via
+//! the abort flag instead of burning worker time.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use repro::backend::{
+    Backend, BackendRegistry, CompileError, Mapped, MappedStats, Target,
+};
+use repro::bench::spec::{WorkloadCatalog, WorkloadSpec};
+use repro::bench::workloads::Workload;
+use repro::coordinator::net::{self, ListenAddr};
+use repro::coordinator::pool::PoolConfig;
+use repro::coordinator::{wire, CacheShards, Metrics, Request};
+use repro::util::json::Json;
+
+// ============================ helpers ======================================
+
+/// Canonicalize one output record for set comparison: responses are decoded,
+/// wall-normalized and re-encoded through the wire layer (field order is
+/// deterministic); line-error records (no `wall_us`, but a `line` field) are
+/// kept verbatim.
+fn canonical(line: &str) -> String {
+    let j = Json::parse(line).unwrap_or_else(|e| panic!("bad record {line}: {e}"));
+    if j.get("line").is_some() {
+        return line.to_string();
+    }
+    let mut r = wire::response_from_json(&j).unwrap_or_else(|e| panic!("{line}: {e}"));
+    r.wall = Duration::ZERO;
+    wire::response_to_json(&r).render()
+}
+
+fn canonical_set(text: &str) -> Vec<String> {
+    let mut v: Vec<String> = text.lines().map(canonical).collect();
+    v.sort();
+    v
+}
+
+/// Drive a trace through the file/stdin front end.
+fn file_records(
+    trace: &str,
+    workers: usize,
+    shards: usize,
+    config: PoolConfig,
+) -> (Vec<String>, Metrics) {
+    let mut out = Vec::new();
+    let m = wire::serve_jsonl_sharded(
+        &mut trace.as_bytes(),
+        &mut out,
+        workers,
+        shards,
+        Arc::new(WorkloadCatalog::builtin()),
+        config,
+    )
+    .expect("jsonl serve");
+    (canonical_set(&String::from_utf8(out).unwrap()), m)
+}
+
+/// Drive the same trace through a real TCP connection: write everything,
+/// half-close, read records until the server closes the stream.
+fn socket_records(
+    trace: &str,
+    workers: usize,
+    shards: usize,
+    config: PoolConfig,
+) -> (Vec<String>, Metrics) {
+    let server = net::serve(
+        &ListenAddr::Tcp("127.0.0.1:0".into()),
+        workers,
+        Arc::new(CacheShards::new(shards)),
+        Arc::new(WorkloadCatalog::builtin()),
+        config,
+    )
+    .expect("bind loopback");
+    let addr = match server.local_addr() {
+        ListenAddr::Tcp(a) => a.clone(),
+        other => panic!("expected tcp, got {other}"),
+    };
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    stream.write_all(trace.as_bytes()).expect("send trace");
+    stream.shutdown(Shutdown::Write).expect("half-close");
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("read responses");
+    let m = server.shutdown();
+    (canonical_set(&text), m)
+}
+
+/// A mixed trace covering every record family the wire emits: plain serves
+/// on all three targets, an exec-cache replay, a blank line, a garbage line
+/// (error record without id), a bad-version line (error record *with* id),
+/// an admission-expired request, a degraded fallback and a plain failure.
+fn mixed_trace() -> String {
+    let reqs = vec![
+        Request::named(0, "gemm", 8, Target::Tcpa, 1, false, 1),
+        Request::named(1, "atax", 8, Target::Cgra, 2, false, 2),
+        Request::named(2, "gemm", 12, Target::Tcpa, 1, true, 1),
+        Request::named(3, "gesummv", 8, Target::Seq, 1, false, 3),
+        Request::named(4, "gemm", 8, Target::Tcpa, 1, false, 1), // replay of id 0
+        Request::named(5, "gemm", 8, Target::Tcpa, 1, false, 0).with_deadline_ms(0),
+        Request::named(6, "gemm", 64, Target::Cgra, 1, false, 1).with_fallback(),
+        Request::named(7, "gemm", 64, Target::Cgra, 1, false, 1),
+    ];
+    let mut lines: Vec<String> = reqs.iter().map(|r| wire::request_to_json(r).render()).collect();
+    lines.push(String::new()); // blank: skipped, but counted in line numbers
+    lines.push("definitely not json".into());
+    lines.push(r#"{"v":99,"id":42,"workload":{"name":"gemm","n":8},"target":"tcpa"}"#.into());
+    lines.join("\n") + "\n"
+}
+
+// ====================== byte equivalence with the file path ================
+
+#[test]
+fn socket_records_match_the_file_path_byte_for_byte() {
+    let trace = mixed_trace();
+    // one worker makes cache-flag assignment deterministic on both paths
+    let (file, fm) = file_records(&trace, 1, 3, PoolConfig::default());
+    let (sock, sm) = socket_records(&trace, 1, 3, PoolConfig::default());
+    assert_eq!(file, sock, "socket and file front-ends must emit identical record sets");
+    assert_eq!(file.len(), 10, "8 responses + 2 line-error records");
+
+    // the record families all actually occurred
+    let text = sock.join("\n");
+    assert!(text.contains(r#""error_kind":"timeout""#), "{text}");
+    assert!(text.contains(r#""degraded":true"#), "{text}");
+    assert!(text.contains(r#""exec_cache_hit":true"#), "{text}");
+    assert!(text.contains(r#""line":10"#), "garbage line keeps its file-path line number: {text}");
+    let bad_version: Vec<&String> = sock.iter().filter(|l| l.contains(r#""line":11"#)).collect();
+    assert_eq!(bad_version.len(), 1);
+    assert!(bad_version[0].contains(r#""id":42"#), "recoverable id echoed: {}", bad_version[0]);
+
+    // and the two fronts agree on the bookkeeping, not just the bytes
+    for (f, s) in [
+        (fm.served, sm.served),
+        (fm.failed, sm.failed),
+        (fm.timeouts, sm.timeouts),
+        (fm.degraded, sm.degraded),
+        (fm.shed, sm.shed),
+        (fm.cache_hits, sm.cache_hits),
+        (fm.cache_misses, sm.cache_misses),
+    ] {
+        assert_eq!(f, s, "file={fm:?}\nsock={sm:?}");
+    }
+    assert_eq!(sm.shed + sm.failed + sm.served, 8, "admission identity over the socket");
+    assert_eq!(sm.conns_accepted, 1);
+    assert_eq!(sm.conns_closed, 1, "half-close then drain is a clean end-of-stream");
+    assert_eq!(sm.conns_aborted, 0);
+}
+
+#[test]
+fn socket_sheds_exactly_like_the_file_path() {
+    let reqs: Vec<String> = (0..4)
+        .map(|i| {
+            wire::request_to_json(&Request::named(i, "gemm", 8, Target::Tcpa, 1, false, i)).render()
+        })
+        .collect();
+    let trace = reqs.join("\n") + "\n";
+    let config = PoolConfig {
+        queue_cap: Some(0),
+        ..PoolConfig::default()
+    };
+    let (file, fm) = file_records(&trace, 2, 2, config.clone());
+    let (sock, sm) = socket_records(&trace, 2, 2, config);
+    assert_eq!(file, sock);
+    assert_eq!(sm.shed, 4, "a zero-capacity queue sheds everything");
+    assert_eq!(fm.shed, sm.shed);
+    assert!(sock.iter().all(|l| l.contains(r#""error_kind":"shed""#)), "{sock:?}");
+}
+
+#[cfg(feature = "fault-injection")]
+#[test]
+fn socket_matches_the_file_path_under_fault_injection() {
+    use repro::coordinator::{FaultPlan, FaultSite};
+    // fault decisions are a pure hash of (seed, site, request id), so both
+    // fronts see the same storm; one worker keeps retry order deterministic
+    let plan = || {
+        Some(Arc::new(
+            FaultPlan::new(5)
+                .with_rate(FaultSite::CompilePanic, 300)
+                .with_rate(FaultSite::ExecPanic, 200),
+        ))
+    };
+    let reqs: Vec<String> = (0..16)
+        .map(|i| {
+            let t = if i % 2 == 0 { Target::Tcpa } else { Target::Cgra };
+            let name = if i % 3 == 0 { "atax" } else { "gemm" };
+            wire::request_to_json(&Request::named(i, name, 8, t, 1, false, i)).render()
+        })
+        .collect();
+    let trace = reqs.join("\n") + "\n";
+    let config = |f| PoolConfig {
+        faults: f,
+        ..PoolConfig::default()
+    };
+    let (file, fm) = file_records(&trace, 1, 2, config(plan()));
+    let (sock, sm) = socket_records(&trace, 1, 2, config(plan()));
+    assert_eq!(file, sock, "fault-typed records must match across fronts");
+    assert!(fm.poisoned_flights > 0, "the storm must fire (seed 5)");
+    assert_eq!(fm.failed, sm.failed);
+    assert_eq!(fm.retries, sm.retries);
+    assert_eq!(sm.shed + sm.failed + sm.served, 16);
+}
+
+// ====================== many concurrent connections ========================
+
+#[test]
+fn concurrent_connections_keep_the_identities() {
+    let shards = Arc::new(CacheShards::new(4));
+    let server = net::serve(
+        &ListenAddr::Tcp("127.0.0.1:0".into()),
+        4,
+        shards.clone(),
+        Arc::new(WorkloadCatalog::builtin()),
+        PoolConfig::default(),
+    )
+    .expect("bind loopback");
+    let addr = match server.local_addr() {
+        ListenAddr::Tcp(a) => a.clone(),
+        other => panic!("expected tcp, got {other}"),
+    };
+
+    const CLIENTS: u64 = 8;
+    const PER_CLIENT: u64 = 12;
+    let names = ["gemm", "atax", "gesummv", "mvt"];
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let addr = addr.clone();
+        handles.push(thread::spawn(move || {
+            let mut stream = TcpStream::connect(&addr).expect("connect");
+            let mut expected = Vec::new();
+            for i in 0..PER_CLIENT {
+                let id = c * 1000 + i;
+                let name = names[(c + i) as usize % names.len()];
+                let t = if i % 2 == 0 { Target::Tcpa } else { Target::Cgra };
+                let req = Request::named(id, name, 8, t, 1 + i % 2, false, c);
+                stream
+                    .write_all((wire::request_to_json(&req).render() + "\n").as_bytes())
+                    .expect("send");
+                expected.push(id);
+            }
+            stream.shutdown(Shutdown::Write).expect("half-close");
+            let reader = BufReader::new(stream);
+            let mut got: Vec<u64> = reader
+                .lines()
+                .map(|l| {
+                    let l = l.expect("read");
+                    let r = wire::response_from_json(&Json::parse(&l).unwrap())
+                        .unwrap_or_else(|e| panic!("{l}: {e}"));
+                    assert!(r.error.is_none(), "{:?}", r.error);
+                    r.id
+                })
+                .collect();
+            got.sort_unstable();
+            assert_eq!(got, expected, "each connection sees exactly its own ids");
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread");
+    }
+
+    let m = server.shutdown();
+    let total = CLIENTS * PER_CLIENT;
+    assert_eq!(m.served, total);
+    assert_eq!(m.shed + m.failed + m.served, total, "admission identity");
+    assert_eq!(m.conns_accepted, CLIENTS);
+    assert_eq!(m.conns_closed, CLIENTS);
+    assert_eq!(m.conns_aborted, 0);
+
+    // aggregate cache identities across the shard set
+    let a = shards.aggregate();
+    assert_eq!(
+        a.misses,
+        a.compiles + a.instantiations,
+        "aggregate single-flight identity must survive sharding: {a:?}"
+    );
+    assert_eq!(a.execs, a.exec_misses, "exec identity: {a:?}");
+    // an exec-cache hit short-circuits the pipeline without touching the
+    // compile cache, so compile outcomes count once per exec miss
+    assert_eq!(
+        a.hits + a.misses + a.waits,
+        a.exec_misses,
+        "every exec miss observed exactly one compile-cache outcome: {a:?}"
+    );
+    assert_eq!(
+        a.exec_hits + a.exec_misses + a.exec_waits,
+        total,
+        "every request observed exactly one exec-cache outcome: {a:?}"
+    );
+    assert_eq!(m.cache_misses, a.misses, "worker counters agree with shard counters");
+}
+
+// ============================ unix sockets =================================
+
+fn tmp_sock(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_TARGET_TMPDIR")).join(name)
+}
+
+#[test]
+fn unix_socket_roundtrip_and_cleanup() {
+    let path = tmp_sock("repro-roundtrip.sock");
+    let server = net::serve(
+        &ListenAddr::Unix(path.clone()),
+        2,
+        Arc::new(CacheShards::new(2)),
+        Arc::new(WorkloadCatalog::builtin()),
+        PoolConfig::default(),
+    )
+    .expect("bind unix socket");
+
+    let mut stream = UnixStream::connect(&path).expect("connect");
+    for i in 0..3u64 {
+        let req = Request::named(i, "gemm", 8, Target::Tcpa, 1, false, i);
+        stream
+            .write_all((wire::request_to_json(&req).render() + "\n").as_bytes())
+            .expect("send");
+    }
+    stream.shutdown(Shutdown::Write).expect("half-close");
+    let reader = BufReader::new(stream);
+    let mut ids: Vec<u64> = reader
+        .lines()
+        .map(|l| {
+            let l = l.expect("read");
+            let r = wire::response_from_json(&Json::parse(&l).unwrap()).unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            r.id
+        })
+        .collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2]);
+
+    let m = server.shutdown();
+    assert_eq!(m.served, 3);
+    assert_eq!((m.conns_accepted, m.conns_closed, m.conns_aborted), (1, 1, 0));
+    assert!(!path.exists(), "shutdown removes the socket file");
+}
+
+// ========================= hangup cancellation =============================
+
+/// `enter_and_wait` announces the compile entered and parks until released —
+/// the deterministic handshake the eviction tests use.
+struct Gate {
+    entered: Mutex<bool>,
+    entered_cv: Condvar,
+    release: Mutex<bool>,
+    release_cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Gate {
+        Gate {
+            entered: Mutex::new(false),
+            entered_cv: Condvar::new(),
+            release: Mutex::new(false),
+            release_cv: Condvar::new(),
+        }
+    }
+
+    fn enter_and_wait(&self) {
+        *self.entered.lock().unwrap() = true;
+        self.entered_cv.notify_all();
+        let mut go = self.release.lock().unwrap();
+        while !*go {
+            go = self.release_cv.wait(go).unwrap();
+        }
+    }
+
+    fn wait_entered(&self) {
+        let mut e = self.entered.lock().unwrap();
+        while !*e {
+            e = self.entered_cv.wait(e).unwrap();
+        }
+    }
+
+    fn release(&self) {
+        *self.release.lock().unwrap() = true;
+        self.release_cv.notify_all();
+    }
+}
+
+/// Seq-target test backend: parks in `compile` for the workload named
+/// `block`, takes a couple of milliseconds for everything else (so a raised
+/// abort flag observably beats the queue), and fails every compile — cached
+/// failures are all the pipeline the test needs.
+struct SlowBackend {
+    gate: Arc<Gate>,
+    compiles: Arc<AtomicU64>,
+}
+
+impl Backend for SlowBackend {
+    fn target(&self) -> Target {
+        Target::Seq
+    }
+
+    fn name(&self) -> &'static str {
+        "slow-test"
+    }
+
+    fn compile(&self, wl: &Workload) -> Result<Box<dyn Mapped>, CompileError> {
+        self.compiles.fetch_add(1, Ordering::SeqCst);
+        if wl.name == "block" {
+            self.gate.enter_and_wait();
+        } else {
+            thread::sleep(Duration::from_millis(2));
+        }
+        Err(CompileError {
+            stage: "test backend",
+            message: format!("test backend rejects `{}`", wl.name),
+            stats: MappedStats {
+                workload: wl.name.clone(),
+                n: wl.n,
+                tool: None,
+                opt: "-".into(),
+                arch: "test".into(),
+                n_loops: wl.n_loops,
+                n_ops: 0,
+                ii: None,
+                unused_pes: None,
+                max_ops_per_pe: None,
+                latency: None,
+                latency_overlapped: None,
+            },
+        })
+    }
+}
+
+/// A gemm spec under an arbitrary name: a distinct content address per name.
+fn renamed_spec(name: &str) -> WorkloadSpec {
+    let mut s = WorkloadCatalog::builtin().spec("gemm", 4).expect("builtin");
+    s.name = name.to_string();
+    s
+}
+
+fn wait_until(timeout: Duration, f: impl Fn() -> bool) -> bool {
+    let t0 = std::time::Instant::now();
+    while t0.elapsed() < timeout {
+        if f() {
+            return true;
+        }
+        thread::sleep(Duration::from_millis(5));
+    }
+    f()
+}
+
+#[test]
+fn client_hangup_cancels_its_pending_requests() {
+    const FILLERS: u64 = 20;
+    let gate = Arc::new(Gate::new());
+    let compiles = Arc::new(AtomicU64::new(0));
+    let shards = {
+        let gate = gate.clone();
+        let compiles = compiles.clone();
+        CacheShards::with_registry(1, move || {
+            let mut r = BackendRegistry::new();
+            r.register(Arc::new(SlowBackend {
+                gate: gate.clone(),
+                compiles: compiles.clone(),
+            }));
+            r
+        })
+    };
+    let path = tmp_sock("repro-hangup.sock");
+    let server = net::serve(
+        &ListenAddr::Unix(path.clone()),
+        1, // a single worker serializes the queue behind the blocked compile
+        Arc::new(shards),
+        Arc::new(WorkloadCatalog::builtin()),
+        PoolConfig::default(),
+    )
+    .expect("bind unix socket");
+
+    let mut stream = UnixStream::connect(&path).expect("connect");
+    let head = Request::inline(0, renamed_spec("block"), Target::Seq, 1, false, 0);
+    stream
+        .write_all((wire::request_to_json(&head).render() + "\n").as_bytes())
+        .expect("send head");
+    for i in 0..FILLERS {
+        let req = Request::inline(1 + i, renamed_spec(&format!("w{i}")), Target::Seq, 1, false, 0);
+        stream
+            .write_all((wire::request_to_json(&req).render() + "\n").as_bytes())
+            .expect("send filler");
+    }
+
+    // the worker is now parked inside `block`'s compile with 20 queued
+    // requests behind it; the client vanishes without reading a byte
+    gate.wait_entered();
+    drop(stream);
+    gate.release();
+
+    // the head's response write hits the dead peer and raises the abort
+    // flag — observable through the live connection counters
+    let counters = server.counters().clone();
+    assert!(
+        wait_until(Duration::from_secs(10), || counters
+            .aborted
+            .load(Ordering::SeqCst)
+            == 1),
+        "the write to the hung-up peer must raise the abort"
+    );
+
+    let m = server.shutdown();
+    let total = 1 + FILLERS;
+    assert_eq!((m.conns_accepted, m.conns_closed, m.conns_aborted), (1, 0, 1));
+    assert!(
+        m.cancelled >= 1,
+        "queued requests behind the hangup must cancel: {}",
+        m.report()
+    );
+    assert!(
+        compiles.load(Ordering::SeqCst) < total,
+        "cancellation must skip at least one compile ({} of {total} ran)",
+        compiles.load(Ordering::SeqCst)
+    );
+    assert_eq!(
+        m.cancelled + compiles.load(Ordering::SeqCst),
+        total,
+        "every request either compiled or was cancelled"
+    );
+    assert!(m.cancelled <= m.timeouts, "cancelled is a subset of timeouts");
+    assert_eq!(m.shed + m.failed + m.served, total, "identity holds through the hangup");
+    assert_eq!(m.served, 0, "the test backend fails everything it does run");
+}

@@ -1,0 +1,294 @@
+//! Integration: sharded caches (`coordinator::shard`). Shard selection is a
+//! pure function of the workload fingerprint, so the shard count must be
+//! *observationally invisible*: the same trace produces the same response
+//! set and the same aggregate cache counters at `--shards 1` and
+//! `--shards 8`, and concurrent compiles of distinct fingerprints routed to
+//! different shards proceed concurrently instead of serializing on one
+//! cache lock.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use repro::backend::{
+    Backend, BackendRegistry, CompileError, Mapped, MappedStats, Target,
+};
+use repro::bench::spec::{WorkloadCatalog, WorkloadSpec};
+use repro::bench::workloads::Workload;
+use repro::coordinator::pool::{self, PoolConfig};
+use repro::coordinator::{CacheShards, Request, Response};
+
+/// The serve trace shape: every builtin kernel round-robined over both
+/// array targets with cycling batches, plus a replay tail so the exec
+/// cache sees hits on every shard layout.
+fn trace(n_req: usize) -> Vec<Request> {
+    let catalog = WorkloadCatalog::builtin();
+    let names = catalog.names();
+    let names: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let mut t = Request::round_robin(&names, 8, n_req, 0);
+    let replay: Vec<Request> = t
+        .iter()
+        .take(n_req / 2)
+        .map(|r| Request {
+            id: r.id + n_req as u64,
+            ..r.clone()
+        })
+        .collect();
+    t.extend(replay);
+    t
+}
+
+/// Wall-normalized, id-sorted view of a response set.
+fn normalized(mut responses: Vec<Response>) -> Vec<Response> {
+    for r in &mut responses {
+        r.wall = Duration::ZERO;
+    }
+    responses.sort_by_key(|r| r.id);
+    responses
+}
+
+#[test]
+fn shard_count_is_invisible_in_responses_and_counters() {
+    let t = trace(24);
+    // one worker pins the hit/miss assignment; the shard count is the only
+    // variable between the two runs
+    let (_, m1, r1) = pool::run_trace_sharded(1, 1, &t, PoolConfig::default());
+    let (_, m8, r8) = pool::run_trace_sharded(1, 8, &t, PoolConfig::default());
+
+    let (r1, r8) = (normalized(r1), normalized(r8));
+    assert_eq!(r1.len(), r8.len());
+    for (a, b) in r1.iter().zip(&r8) {
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "response records must not depend on the shard count"
+        );
+    }
+    for (one, eight, what) in [
+        (m1.served, m8.served, "served"),
+        (m1.failed, m8.failed, "failed"),
+        (m1.cache_hits, m8.cache_hits, "cache_hits"),
+        (m1.cache_misses, m8.cache_misses, "cache_misses"),
+        (m1.exec_hits, m8.exec_hits, "exec_hits"),
+        (m1.exec_misses, m8.exec_misses, "exec_misses"),
+        (m1.instantiations, m8.instantiations, "instantiations"),
+        (m1.symbolic_hits, m8.symbolic_hits, "symbolic_hits"),
+        (m1.symbolic_compiles, m8.symbolic_compiles, "symbolic_compiles"),
+        (m1.compile_evictions, m8.compile_evictions, "compile_evictions"),
+        (m1.exec_evictions, m8.exec_evictions, "exec_evictions"),
+    ] {
+        assert_eq!(one, eight, "{what} diverged between 1 and 8 shards");
+    }
+    // only the sharded plane emits per-shard lines
+    assert!(m1.shards().len() <= 1, "single shard plane");
+    assert!(m8.shards().len() > 1, "requests spread over several shards");
+    let shard_total: u64 = m8.shards().iter().map(|s| s.served + s.failed).sum();
+    assert_eq!(shard_total, m8.served + m8.failed, "per-shard lines cover every request");
+}
+
+#[test]
+fn aggregate_counters_match_the_single_cache_exactly() {
+    let t = trace(24);
+    let run = |n_shards: usize| {
+        let shards = Arc::new(CacheShards::new(n_shards));
+        let (tx, rx, handle) = pool::serve_sharded(
+            1,
+            shards.clone(),
+            Arc::new(WorkloadCatalog::builtin()),
+            PoolConfig::default(),
+        );
+        for r in &t {
+            tx.send(r.clone()).expect("pool alive");
+        }
+        let responses: Vec<Response> =
+            (0..t.len()).map(|_| rx.recv().expect("response")).collect();
+        drop(tx);
+        handle.join();
+        (shards.aggregate(), responses)
+    };
+    let (a1, _) = run(1);
+    let (a8, _) = run(8);
+    assert_eq!(a1, a8, "summing counters over shards reproduces the single cache");
+    assert_eq!(
+        a8.misses,
+        a8.compiles + a8.instantiations,
+        "the single-flight identity holds in aggregate: {a8:?}"
+    );
+    assert_eq!(a8.execs, a8.exec_misses, "exec identity in aggregate: {a8:?}");
+    // exec-cache hits (the replay tail) never touch the compile cache, so
+    // compile outcomes count once per exec miss, exec outcomes once per req
+    assert_eq!(
+        a8.hits + a8.misses + a8.waits,
+        a8.exec_misses,
+        "every exec miss observed exactly one compile-cache outcome: {a8:?}"
+    );
+    assert_eq!(
+        a8.exec_hits + a8.exec_misses + a8.exec_waits,
+        t.len() as u64,
+        "every request observed exactly one exec-cache outcome: {a8:?}"
+    );
+}
+
+// ================= distinct fingerprints on distinct shards ================
+
+struct Gate {
+    entered: Mutex<bool>,
+    entered_cv: Condvar,
+    release: Mutex<bool>,
+    release_cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Gate {
+        Gate {
+            entered: Mutex::new(false),
+            entered_cv: Condvar::new(),
+            release: Mutex::new(false),
+            release_cv: Condvar::new(),
+        }
+    }
+
+    fn enter_and_wait(&self) {
+        *self.entered.lock().unwrap() = true;
+        self.entered_cv.notify_all();
+        let mut go = self.release.lock().unwrap();
+        while !*go {
+            go = self.release_cv.wait(go).unwrap();
+        }
+    }
+
+    fn wait_entered(&self) {
+        let mut e = self.entered.lock().unwrap();
+        while !*e {
+            e = self.entered_cv.wait(e).unwrap();
+        }
+    }
+
+    fn release(&self) {
+        *self.release.lock().unwrap() = true;
+        self.release_cv.notify_all();
+    }
+}
+
+/// Seq backend that parks inside `compile` for every workload with a
+/// registered gate (and fails everything, which caches like any artifact).
+struct GatedBackend {
+    gates: HashMap<String, Arc<Gate>>,
+    compiles: Arc<AtomicU64>,
+}
+
+impl Backend for GatedBackend {
+    fn target(&self) -> Target {
+        Target::Seq
+    }
+
+    fn name(&self) -> &'static str {
+        "gated-test"
+    }
+
+    fn compile(&self, wl: &Workload) -> Result<Box<dyn Mapped>, CompileError> {
+        self.compiles.fetch_add(1, Ordering::SeqCst);
+        if let Some(gate) = self.gates.get(&wl.name) {
+            gate.enter_and_wait();
+        }
+        Err(CompileError {
+            stage: "test backend",
+            message: format!("test backend rejects `{}`", wl.name),
+            stats: MappedStats {
+                workload: wl.name.clone(),
+                n: wl.n,
+                tool: None,
+                opt: "-".into(),
+                arch: "test".into(),
+                n_loops: wl.n_loops,
+                n_ops: 0,
+                ii: None,
+                unused_pes: None,
+                max_ops_per_pe: None,
+                latency: None,
+                latency_overlapped: None,
+            },
+        })
+    }
+}
+
+fn renamed_spec(name: &str) -> WorkloadSpec {
+    let mut s = WorkloadCatalog::builtin().spec("gemm", 4).expect("builtin");
+    s.name = name.to_string();
+    s
+}
+
+#[test]
+fn distinct_fingerprints_on_distinct_shards_compile_concurrently() {
+    const SHARDS: u64 = 4;
+    // pick two workload names whose fingerprints land on different shards —
+    // shard selection is fingerprint % S, so probe names until two differ
+    let mut picked: Vec<(String, WorkloadSpec)> = Vec::new();
+    for k in 0.. {
+        let name = format!("block-{k}");
+        let spec = renamed_spec(&name);
+        if picked.is_empty()
+            || spec.fingerprint() % SHARDS != picked[0].1.fingerprint() % SHARDS
+        {
+            picked.push((name, spec));
+        }
+        if picked.len() == 2 {
+            break;
+        }
+    }
+    let (name_a, spec_a) = picked[0].clone();
+    let (name_b, spec_b) = picked[1].clone();
+
+    let gate_a = Arc::new(Gate::new());
+    let gate_b = Arc::new(Gate::new());
+    let compiles = Arc::new(AtomicU64::new(0));
+    let shards = {
+        let (gate_a, gate_b, compiles) = (gate_a.clone(), gate_b.clone(), compiles.clone());
+        CacheShards::with_registry(SHARDS as usize, move || {
+            let mut r = BackendRegistry::new();
+            r.register(Arc::new(GatedBackend {
+                gates: HashMap::from([
+                    (name_a.clone(), gate_a.clone()),
+                    (name_b.clone(), gate_b.clone()),
+                ]),
+                compiles: compiles.clone(),
+            }));
+            r
+        })
+    };
+    let (tx, rx, handle) = pool::serve_sharded(
+        2,
+        Arc::new(shards),
+        Arc::new(WorkloadCatalog::builtin()),
+        PoolConfig::default(),
+    );
+
+    // A parks inside its shard's compile flight…
+    tx.send(Request::inline(0, spec_a, Target::Seq, 1, false, 0))
+        .expect("pool alive");
+    gate_a.wait_entered();
+    // …and B — a different fingerprint on a different shard — must *enter*
+    // its own compile while A is still blocked. This wait is the assertion:
+    // if shards serialized distinct kernels, it would hang (and the harness
+    // would time the test out).
+    tx.send(Request::inline(1, spec_b, Target::Seq, 1, false, 0))
+        .expect("pool alive");
+    gate_b.wait_entered();
+    assert_eq!(
+        compiles.load(Ordering::SeqCst),
+        2,
+        "both compiles are in flight simultaneously"
+    );
+
+    gate_a.release();
+    gate_b.release();
+    let mut got: Vec<Response> = (0..2).map(|_| rx.recv().expect("response")).collect();
+    got.sort_by_key(|r| r.id);
+    assert_eq!(got.len(), 2);
+    assert!(got.iter().all(|r| r.error.is_some()), "test backend fails both");
+    drop(tx);
+    let m = handle.join();
+    assert_eq!(m.failed, 2);
+    assert!(m.shards().len() as u64 <= SHARDS);
+}
