@@ -1,0 +1,113 @@
+//! Bench: the static legality verifier vs the simulators it replaces as a
+//! gate. The point of `repro analyze` is that proving a mapping hazard-free
+//! is orders of magnitude cheaper than discovering the hazard by running
+//! the cycle-accurate simulation — this bench quantifies that gap per
+//! benchmark and target, plus the one-shot symbolic proof that covers every
+//! problem size. Writes `BENCH_analyze.json` (name → ns/iter) so the ratio
+//! stays machine-diffable across PRs (EXPERIMENTS.md §BENCH_analyze).
+
+mod common;
+
+use repro::analysis::{verify_cgra, verify_symbolic, verify_tcpa_config};
+use repro::bench::workloads::{build, inputs, BenchId};
+use repro::cgra::arch::CgraArch;
+use repro::cgra::mapper::{map, MapOpts};
+use repro::cgra::sim as cgra_sim;
+use repro::frontend::dfg_gen::{generate, GenOpts};
+use repro::tcpa::arch::TcpaArch;
+use repro::tcpa::config::compile;
+use repro::tcpa::schedule::schedule_symbolic;
+use repro::tcpa::sim as tcpa_sim;
+
+fn main() {
+    let mut report = common::JsonReport::new("analyze-static-vs-sim-v1");
+    let n = 8i64;
+    let tcpa_arch = TcpaArch::paper(4, 4);
+    let cgra_arch = CgraArch::classical(4, 4);
+    let iters = common::iters(50);
+
+    for id in BenchId::ALL {
+        let wl = build(id, n);
+        let ins = inputs(id, n, 23);
+
+        // --- TCPA: verify the compiled configs vs simulate them ---
+        let cfgs: Vec<_> = wl
+            .pras
+            .iter()
+            .map(|p| compile(p, &tcpa_arch).expect("compile"))
+            .collect();
+        let name = format!("analyze/tcpa/{}/static-verify", id.name());
+        let per = common::bench(&name, iters, || {
+            for cfg in &cfgs {
+                let rep = verify_tcpa_config(cfg, &tcpa_arch, &cfg.pra.name);
+                assert!(rep.is_legal());
+            }
+        });
+        report.record(&name, per, None);
+
+        let name = format!("analyze/tcpa/{}/full-sim", id.name());
+        let per = common::bench(&name, iters, || {
+            let r = tcpa_sim::simulate_workload(&cfgs, &tcpa_arch, &ins).expect("sim");
+            assert_eq!(r.kernels.iter().map(|k| k.timing_violations).sum::<u64>(), 0);
+        });
+        report.record(&name, per, None);
+
+        // --- symbolic: the one proof that covers every n ---
+        let sym = schedule_symbolic(&wl.pras[0], &tcpa_arch);
+        let name = format!("analyze/tcpa/{}/symbolic-proof", id.name());
+        let per = common::bench(&name, iters, || {
+            let rep = verify_symbolic(&wl.pras[0], &sym);
+            assert!(!rep.candidates.is_empty());
+        });
+        report.record(&name, per, None);
+
+        // --- CGRA: verify the mapped stages vs simulate them ---
+        let stages: Vec<_> = wl
+            .stages
+            .iter()
+            .map(|nest| {
+                let gen = generate(nest, &GenOpts::flat()).expect("generate");
+                let m = map(
+                    &gen.dfg,
+                    &cgra_arch,
+                    &gen.inter_iteration_hazards,
+                    &MapOpts::negotiated(),
+                )
+                .expect("map");
+                (gen, m)
+            })
+            .collect();
+        let name = format!("analyze/cgra/{}/static-verify", id.name());
+        let per = common::bench(&name, iters, || {
+            for (gen, m) in &stages {
+                let rep = verify_cgra(
+                    &gen.dfg,
+                    m,
+                    &gen.inter_iteration_hazards,
+                    cgra_arch.n_pes(),
+                    cgra_arch.mem_pes().len(),
+                    &gen.dfg.name,
+                );
+                assert!(rep.is_legal());
+            }
+        });
+        report.record(&name, per, None);
+
+        let name = format!("analyze/cgra/{}/full-sim", id.name());
+        let per = common::bench(&name, iters, || {
+            // stages consume their predecessors' outputs, so chain them
+            let mut io = ins.clone();
+            for (gen, m) in &stages {
+                let r = cgra_sim::simulate(&gen.dfg, m, &io);
+                assert_eq!(r.timing_hazards, 0);
+                io.extend(r.outputs);
+            }
+        });
+        report.record(&name, per, None);
+    }
+
+    report
+        .write("BENCH_analyze.json")
+        .expect("write BENCH_analyze.json");
+    println!("\nwrote BENCH_analyze.json");
+}

@@ -1,0 +1,213 @@
+//! Layer 1: one dependence-edge representation for both mapping styles.
+//!
+//! Both compilation pipelines reason about the *same* mathematical object —
+//! a dependence edge `from --d--> to` with a producer latency — but until
+//! now each kept its own ad-hoc encoding: the PRA side as
+//! [`crate::ir::pra::Dependence`] (equation ids + distance vector, consumed
+//! inline by `tcpa/schedule.rs`), the DFG side as `(src, dst, dist)` triples
+//! scattered across [`crate::frontend::dfg::Dfg::edges`], `extra_deps`
+//! memory-ordering pairs and the `inter_iteration_hazards` list produced by
+//! `frontend/dfg_gen.rs`. This module extracts all of them into one labeled
+//! [`DepEdge`] form that the legality verifier ([`super::legality`]), the
+//! simulators' violation diagnostics and the `repro analyze` CLI share, so
+//! a violated edge can always be reported as "which equations, which
+//! distance vector, which kind".
+
+use crate::frontend::dfg::Dfg;
+use crate::ir::pra::Pra;
+
+/// What produced a dependence edge — and therefore which legality rule it
+/// feeds and whether the cycle-accurate simulators enforce it at runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepKind {
+    /// A true data (flow) dependence: the consumer reads the producer's
+    /// value. Both simulators detect late producers on these edges (FIFO
+    /// underflow / channel-not-yet-arrived on the TCPA, done-stamp
+    /// comparison on the CGRA).
+    Flow,
+    /// A memory-ordering (anti/output serialization) edge from the DFG's
+    /// `extra_deps`: the later access must not be scheduled before the
+    /// earlier one completes. Enforced by the mapper, not checked by the
+    /// simulator (no value moves along the edge).
+    Ordering,
+    /// An inter-iteration address-conflict hazard from
+    /// `frontend/dfg_gen.rs::inter_iteration_hazards`: iteration `i+1`'s
+    /// access must not overtake iteration `i`'s. Feeds rec-MII; the CGRA
+    /// simulator does not count these.
+    Hazard,
+}
+
+impl DepKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            DepKind::Flow => "flow",
+            DepKind::Ordering => "ordering",
+            DepKind::Hazard => "hazard",
+        }
+    }
+}
+
+/// One dependence edge in the shared representation. `from`/`to` index the
+/// source collection (PRA equations or DFG nodes); the labels carry the
+/// human-readable names so diagnostics never need the originating IR.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DepEdge {
+    pub from: usize,
+    pub to: usize,
+    /// Source-equation / producer-node name (e.g. `S3` or `mul_c`).
+    pub from_label: String,
+    /// Sink-equation / consumer-node name.
+    pub to_label: String,
+    /// The carried variable, when the edge moves a value (`Flow` on the
+    /// PRA side); `None` for pure ordering/hazard edges.
+    pub var: Option<String>,
+    /// Dependence distance vector. PRA edges use the full iteration-space
+    /// vector; DFG edges are one-dimensional (`[dist]` in innermost-loop
+    /// iterations).
+    pub d: Vec<i64>,
+    /// Producer latency in cycles (the `L(from)` of the legality
+    /// inequality λ·d + Δτ ≥ L).
+    pub latency: i64,
+    pub kind: DepKind,
+}
+
+impl DepEdge {
+    /// All-zero distance: producer and consumer belong to the same
+    /// iteration.
+    pub fn is_intra_iteration(&self) -> bool {
+        self.d.iter().all(|&x| x == 0)
+    }
+
+    /// Human-readable one-liner used by diagnostics and `repro analyze`:
+    /// `S1a --a[d=(0, 1, 0)]--> S3 (flow, lat 1)`.
+    pub fn describe(&self) -> String {
+        let carried = match &self.var {
+            Some(v) => format!("{v}[d={:?}]", self.d),
+            None => format!("[d={:?}]", self.d),
+        };
+        format!(
+            "{} --{}--> {} ({}, lat {})",
+            self.from_label,
+            carried,
+            self.to_label,
+            self.kind.label(),
+            self.latency
+        )
+    }
+}
+
+/// Extract every flow dependence of a PRA in the shared form, in the exact
+/// order [`Pra::dependences`] enumerates them (so callers may zip the two).
+/// PRA dependences are single-assignment flow edges by construction —
+/// anti/output dependences cannot arise (each variable instance is written
+/// once), which is why `validate()` only ever needs `d ≥ 0`.
+pub fn pra_dep_edges(pra: &Pra) -> Vec<DepEdge> {
+    pra.dependences()
+        .iter()
+        .map(|dep| DepEdge {
+            from: dep.from,
+            to: dep.to,
+            from_label: pra.eqs[dep.from].name.clone(),
+            to_label: pra.eqs[dep.to].name.clone(),
+            var: Some(pra.vars[dep.var].clone()),
+            d: dep.d.clone(),
+            latency: pra.eqs[dep.from].op.latency() as i64,
+            kind: DepKind::Flow,
+        })
+        .collect()
+}
+
+/// Extract every scheduling-relevant DFG edge in the shared form: data
+/// edges (`Flow`), `extra_deps` memory serializations (`Ordering`) and the
+/// generator's inter-iteration address hazards (`Hazard`). Hazard pairs
+/// arrive as `(earlier, later)` and become `later --[1]--> earlier` with
+/// the later access's latency — the same orientation `frontend/mii.rs`
+/// feeds into rec-MII, so one representation serves both.
+pub fn dfg_dep_edges(dfg: &Dfg, hazards: &[(usize, usize)]) -> Vec<DepEdge> {
+    let mut out = Vec::new();
+    for e in dfg.edges() {
+        out.push(DepEdge {
+            from: e.src,
+            to: e.dst,
+            from_label: dfg.nodes[e.src].name.clone(),
+            to_label: dfg.nodes[e.dst].name.clone(),
+            var: None,
+            d: vec![e.dist as i64],
+            latency: dfg.nodes[e.src].kind.latency() as i64,
+            kind: DepKind::Flow,
+        });
+    }
+    for (dst, node) in dfg.nodes.iter().enumerate() {
+        for &(src, dist) in &node.extra_deps {
+            out.push(DepEdge {
+                from: src,
+                to: dst,
+                from_label: dfg.nodes[src].name.clone(),
+                to_label: node.name.clone(),
+                var: None,
+                d: vec![dist as i64],
+                latency: dfg.nodes[src].kind.latency() as i64,
+                kind: DepKind::Ordering,
+            });
+        }
+    }
+    for &(earlier, later) in hazards {
+        out.push(DepEdge {
+            from: later,
+            to: earlier,
+            from_label: dfg.nodes[later].name.clone(),
+            to_label: dfg.nodes[earlier].name.clone(),
+            var: None,
+            d: vec![1],
+            latency: dfg.nodes[later].kind.latency() as i64,
+            kind: DepKind::Hazard,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::{build, BenchId};
+    use crate::frontend::dfg_gen::{generate, GenOpts};
+
+    #[test]
+    fn pra_edges_align_with_dependences() {
+        let wl = build(BenchId::Gemm, 8);
+        let pra = &wl.pras[0];
+        let edges = pra_dep_edges(pra);
+        let deps = pra.dependences();
+        assert_eq!(edges.len(), deps.len());
+        for (e, d) in edges.iter().zip(&deps) {
+            assert_eq!(e.from, d.from);
+            assert_eq!(e.to, d.to);
+            assert_eq!(e.d, d.d);
+            assert_eq!(e.var.as_deref(), Some(pra.vars[d.var].as_str()));
+            assert_eq!(e.kind, DepKind::Flow);
+        }
+        // gemm carries c with distance (0,0,1): an inter-iteration edge.
+        assert!(edges.iter().any(|e| !e.is_intra_iteration()));
+    }
+
+    #[test]
+    fn dfg_edges_cover_all_three_kinds() {
+        let wl = build(BenchId::Gemm, 8);
+        let gen = generate(&wl.stages[0], &GenOpts::flat()).expect("generate");
+        let edges = dfg_dep_edges(&gen.dfg, &gen.inter_iteration_hazards);
+        let data = edges.iter().filter(|e| e.kind == DepKind::Flow).count();
+        assert_eq!(data, gen.dfg.edges().len());
+        // Hazards mirror mii.rs: (earlier, later) becomes later -> earlier
+        // at distance 1.
+        for (&(earlier, later), e) in gen
+            .inter_iteration_hazards
+            .iter()
+            .zip(edges.iter().filter(|e| e.kind == DepKind::Hazard))
+        {
+            assert_eq!((e.from, e.to), (later, earlier));
+            assert_eq!(e.d, vec![1]);
+        }
+        let described = edges[0].describe();
+        assert!(described.contains("-->"), "describe: {described}");
+    }
+}

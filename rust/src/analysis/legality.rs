@@ -1,0 +1,729 @@
+//! Layer 2: closed-form legality verification of mapped artifacts.
+//!
+//! Every mapping either stack produces is a *schedule over the dependence
+//! structure* of [`super::deps`], so its hazard-freedom is decidable in
+//! closed form at compile time — no simulation required:
+//!
+//! * **TCPA** (`verify_tcpa_config`): for every dependence `d` the linear
+//!   schedule must satisfy `λ·d + Δτ ≥ L(from)` — split exactly as the
+//!   scheduler's `realize` step splits it into the intra-iteration τ
+//!   ordering (`d = 0`), the intra-tile λʲ inequality (`d ≠ 0`) and the
+//!   wavefront λᵏ inequality per tile-crossing dimension — and the bound
+//!   FIFO/channel depths must cover the max in-flight window the binder's
+//!   own closed form derives (`⌈life / II⌉` words).
+//! * **CGRA** (`verify_cgra`): the modulo schedule must satisfy
+//!   `τ(src) + L(src) ≤ τ(dst) + II·dist` on every data edge, plus the
+//!   ordering and hazard edges that feed rec-MII.
+//! * **Symbolic TCPA** (`verify_symbolic`): each [`SymbolicSchedule`]
+//!   candidate is checked as an *n-independent* predicate, so one proof
+//!   covers every instantiation (see `DESIGN.md` §12 for the argument).
+//!
+//! ## Hard vs. advisory rules, and the runtime oracle
+//!
+//! The cycle-accurate simulators count a *subset* of these conditions at
+//! runtime (`timing_violations` / `timing_hazards`): FIFO underflows and
+//! late channel arrivals on the TCPA, stale-operand fetches on the CGRA.
+//! Other violations are just as illegal but *counter-silent* — an RD-bound
+//! value read one cycle early silently yields the previous iteration's
+//! value, a too-shallow FD FIFO overflows an *unbounded* simulator queue
+//! (its oracle is measured `max_fd_occupancy`, not the timing counter),
+//! and a CGRA fetch that happens before the producer instance ever
+//! issued reads an uninitialized slot without tripping the check. Each
+//! [`Violation`] therefore carries an `observable` flag modeling exactly
+//! what the simulator would count, giving two verdicts:
+//!
+//! * [`AnalysisReport::is_legal`] — no *hard* rule violated. This is the
+//!   mapping-correctness verdict the serve path enforces.
+//! * [`AnalysisReport::runtime_legal`] — no *observable* violation. This
+//!   must agree exactly with "simulator counters are zero", which is what
+//!   `tests/legality_oracle.rs` asserts across benchmarks and mutants.
+//!
+//! [`Rule::ChannelDepth`] ([`RegKind::Channel::est_depth`] is an estimate,
+//! not a contract — the simulator measures real occupancy), ordering edges
+//! and CGRA hazard edges are advisory: reported, never verdict-flipping.
+
+use super::deps::{dfg_dep_edges, pra_dep_edges, DepEdge, DepKind};
+use crate::cgra::mapper::Mapping;
+use crate::frontend::dfg::Dfg;
+use crate::frontend::mii;
+use crate::ir::affine::dot;
+use crate::ir::op::FuClass;
+use crate::ir::pra::Pra;
+use crate::tcpa::arch::TcpaArch;
+use crate::tcpa::config::TcpaConfig;
+use crate::tcpa::registers::{RegKind, Sink};
+use crate::tcpa::schedule::{alternative_groups, SymbolicSchedule, HOP_DELAY};
+
+/// Which legality condition an edge violated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// `d = 0` producer/consumer τ ordering within one iteration.
+    IntraIteration,
+    /// `d ≠ 0` intra-tile inequality `λʲ·d + τ(to) ≥ τ(from) + L`.
+    IntraTile,
+    /// Per-crossing-dimension wavefront inequality on λᵏ.
+    Wavefront,
+    /// A bound FD FIFO is shallower than its in-flight window.
+    FifoDepth,
+    /// A channel's estimated depth is below the derived window (advisory:
+    /// the simulator measures true occupancy; queues never drop words).
+    ChannelDepth,
+    /// CGRA data edge `τ(src) + L ≤ τ(dst) + II·dist`.
+    Flow,
+    /// Memory-ordering edge (advisory: no value moves, sim cannot count).
+    Ordering,
+    /// Inter-iteration address hazard edge (advisory: feeds rec-MII; the
+    /// CGRA simulator does not track address conflicts).
+    Hazard,
+}
+
+impl Rule {
+    pub fn label(self) -> &'static str {
+        match self {
+            Rule::IntraIteration => "intra-iteration",
+            Rule::IntraTile => "intra-tile",
+            Rule::Wavefront => "wavefront",
+            Rule::FifoDepth => "fifo-depth",
+            Rule::ChannelDepth => "channel-depth",
+            Rule::Flow => "flow",
+            Rule::Ordering => "ordering",
+            Rule::Hazard => "hazard",
+        }
+    }
+
+    /// Hard rules flip the verdict to [`Verdict::Illegal`]; advisory rules
+    /// are reported but tolerated (see module docs).
+    pub fn is_hard(self) -> bool {
+        !matches!(self, Rule::ChannelDepth | Rule::Ordering | Rule::Hazard)
+    }
+}
+
+/// One violated legality condition, anchored to its dependence edge.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub edge: DepEdge,
+    pub rule: Rule,
+    /// Stage (kernel / DFG) label the edge belongs to.
+    pub stage: String,
+    /// The value the inequality required (e.g. min λᵏ, min depth, latest
+    /// legal producer finish).
+    pub required: i64,
+    /// The value the mapping actually provides.
+    pub actual: i64,
+    /// Would the cycle-accurate simulator's violation counter see this?
+    pub observable: bool,
+}
+
+impl Violation {
+    /// Diagnostic one-liner: rule, edge (equations + distance vector),
+    /// required vs. actual, stage.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} violation on {} [stage {}]: required {}, got {}{}",
+            self.rule.label(),
+            self.edge.describe(),
+            self.stage,
+            self.required,
+            self.actual,
+            if self.observable {
+                ""
+            } else {
+                " (counter-silent)"
+            }
+        )
+    }
+}
+
+/// The static verdict over one artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Legal,
+    Illegal,
+}
+
+/// Min-II bound vs. achieved II for one stage (kernel or DFG).
+#[derive(Debug, Clone)]
+pub struct StageIi {
+    pub stage: String,
+    /// Closed-form lower bound: TCPA resource bound (alternative groups
+    /// per FU class), CGRA `max(rec-MII, res-MII)`.
+    pub min_ii: u32,
+    pub achieved_ii: u32,
+}
+
+/// The typed report `Backend::compile` attaches to every `Mapped`
+/// artifact (see `Mapped::analysis`).
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    pub verdict: Verdict,
+    pub violations: Vec<Violation>,
+    /// Total dependence edges examined.
+    pub n_deps: usize,
+    pub stages: Vec<StageIi>,
+}
+
+impl AnalysisReport {
+    fn from_parts(violations: Vec<Violation>, n_deps: usize, stages: Vec<StageIi>) -> Self {
+        let verdict = if violations.iter().any(|v| v.rule.is_hard()) {
+            Verdict::Illegal
+        } else {
+            Verdict::Legal
+        };
+        AnalysisReport {
+            verdict,
+            violations,
+            n_deps,
+            stages,
+        }
+    }
+
+    /// No hard rule violated — the mapping is provably correct.
+    pub fn is_legal(&self) -> bool {
+        self.verdict == Verdict::Legal
+    }
+
+    /// No *observable* violation — the simulators' runtime counters must
+    /// be zero exactly when this holds (the agreement oracle).
+    pub fn runtime_legal(&self) -> bool {
+        !self.violations.iter().any(|v| v.observable)
+    }
+
+    /// First hard violation, if any (what the serve path names when
+    /// rejecting an illegal artifact).
+    pub fn first_hard(&self) -> Option<&Violation> {
+        self.violations.iter().find(|v| v.rule.is_hard())
+    }
+
+    /// Combine per-stage reports into one artifact-level report.
+    pub fn merge(reports: impl IntoIterator<Item = AnalysisReport>) -> AnalysisReport {
+        let mut violations = Vec::new();
+        let mut stages = Vec::new();
+        let mut n_deps = 0;
+        for r in reports {
+            violations.extend(r.violations);
+            stages.extend(r.stages);
+            n_deps += r.n_deps;
+        }
+        AnalysisReport::from_parts(violations, n_deps, stages)
+    }
+
+    /// Multi-line human summary for `repro analyze`.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for s in &self.stages {
+            out.push_str(&format!(
+                "  stage {}: II {} (min-II bound {})\n",
+                s.stage, s.achieved_ii, s.min_ii
+            ));
+        }
+        out.push_str(&format!(
+            "  {} dependence edges checked, {} violation(s): verdict {}\n",
+            self.n_deps,
+            self.violations.len(),
+            match self.verdict {
+                Verdict::Legal => "LEGAL",
+                Verdict::Illegal => "ILLEGAL",
+            }
+        ));
+        for v in &self.violations {
+            out.push_str(&format!("    {}\n", v.describe()));
+        }
+        out
+    }
+}
+
+/// The binder's closed-form in-flight window for one FD-bound sink, in
+/// words: `⌈life / II⌉` where `life` is cycles from the producer's commit
+/// to the consumer's read (see `tcpa/registers.rs::bind`).
+fn fd_required_depth(cfg: &TcpaConfig, sink: &Sink, birth: u32) -> i64 {
+    let sched = &cfg.sched;
+    let intra = sink.d.iter().all(|&x| x == 0);
+    let life: i64 = if intra {
+        sched.tau[sink.to_eq].saturating_sub(birth).max(1) as i64
+    } else {
+        dot(&sched.lambda_j, &sink.d) + sched.tau[sink.to_eq] as i64 - birth as i64
+    };
+    ((life.max(1) as u64).div_ceil(sched.ii.max(1) as u64) as i64).max(1)
+}
+
+/// Producer-side info for a sink's variable: (defining eq of max birth,
+/// birth cycle = max over defs of τ + L).
+fn sink_birth(pra: &Pra, sched_tau: &[u32], var: usize) -> (usize, u32) {
+    let mut best = (0usize, 0u32);
+    for f in pra.defs_of(var) {
+        let b = sched_tau[f] + pra.eqs[f].op.latency();
+        if b >= best.1 {
+            best = (f, b);
+        }
+    }
+    best
+}
+
+fn sink_edge(pra: &Pra, sink: &Sink, from: usize) -> DepEdge {
+    DepEdge {
+        from,
+        to: sink.to_eq,
+        from_label: pra.eqs[from].name.clone(),
+        to_label: pra.eqs[sink.to_eq].name.clone(),
+        var: Some(pra.vars[sink.var].clone()),
+        d: sink.d.clone(),
+        latency: pra.eqs[from].op.latency() as i64,
+        kind: DepKind::Flow,
+    }
+}
+
+/// TCPA resource lower bound on II: alternative groups per FU class over
+/// the architecture's FU complement (the private bound
+/// `tcpa/schedule.rs::ii_lower_bound` starts its search from, re-derived
+/// here from the public `alternative_groups`).
+pub fn tcpa_min_ii(pra: &Pra, arch: &TcpaArch) -> u32 {
+    let (_, groups) = alternative_groups(pra);
+    let mut per_class = [0u32; FuClass::ALL.len()];
+    for g in &groups {
+        let class = pra.eqs[g[0]].op.fu_class();
+        for (i, &c) in FuClass::ALL.iter().enumerate() {
+            if c == class {
+                per_class[i] += 1;
+            }
+        }
+    }
+    let mut bound = 1u32;
+    for (i, &c) in FuClass::ALL.iter().enumerate() {
+        let avail = arch.fus.count(c).max(1) as u32;
+        bound = bound.max(per_class[i].div_ceil(avail));
+    }
+    bound
+}
+
+/// Verify one compiled TCPA configuration against every dependence of its
+/// PRA, mirroring the exact inequalities `schedule.rs::realize` enforces
+/// plus the register-window coverage `registers.rs::bind` derives. A
+/// report with violations means the artifact was mutated or the compiler
+/// has a bug — `compile` itself only produces schedules satisfying all of
+/// these.
+pub fn verify_tcpa_config(cfg: &TcpaConfig, arch: &TcpaArch, stage: &str) -> AnalysisReport {
+    let pra = &cfg.pra;
+    let sched = &cfg.sched;
+    let part = &cfg.part;
+    let edges = pra_dep_edges(pra);
+    let deps = pra.dependences();
+    let (group_of, _) = alternative_groups(pra);
+    let mut violations = Vec::new();
+
+    for (dep, edge) in deps.iter().zip(&edges) {
+        let lat = pra.eqs[dep.from].op.latency() as i64;
+        let lhs = sched.tau[dep.from] as i64 + lat;
+        if dep.is_intra_iteration() {
+            // Same-group equations share τ and FU by construction; the
+            // scheduler orders only cross-group consumers.
+            if dep.from == dep.to || group_of[dep.from] == group_of[dep.to] {
+                continue;
+            }
+            let rhs = sched.tau[dep.to] as i64;
+            if lhs > rhs {
+                // Counter-visible only when the value moves through a
+                // queue; an RD-bound early read is silently stale.
+                let observable = cfg.binding.sinks.iter().any(|s| {
+                    s.var == dep.var
+                        && s.d == dep.d
+                        && s.to_eq == dep.to
+                        && !matches!(s.kind, RegKind::Rd { .. })
+                });
+                violations.push(Violation {
+                    edge: edge.clone(),
+                    rule: Rule::IntraIteration,
+                    stage: stage.to_string(),
+                    required: lhs,
+                    actual: rhs,
+                    observable,
+                });
+            }
+        } else {
+            let rhs = dot(&sched.lambda_j, &dep.d) + sched.tau[dep.to] as i64;
+            if lhs > rhs {
+                // A same-tile consumer instance exists iff d fits inside
+                // one tile; otherwise every instance crosses tiles and the
+                // λʲ slack is unobservable in isolation.
+                let local = dep
+                    .d
+                    .iter()
+                    .zip(&part.tile)
+                    .all(|(&dk, &tk)| dk < tk);
+                violations.push(Violation {
+                    edge: edge.clone(),
+                    rule: Rule::IntraTile,
+                    stage: stage.to_string(),
+                    required: lhs,
+                    actual: rhs,
+                    observable: local,
+                });
+            }
+            for m in part.crossing_dims(&dep.d) {
+                let need = sched.lambda_j[m] * part.tile[m] - dot(&sched.lambda_j, &dep.d)
+                    + sched.tau[dep.from] as i64
+                    + lat
+                    + HOP_DELAY
+                    - sched.tau[dep.to] as i64;
+                if sched.lambda_k[m] < need {
+                    violations.push(Violation {
+                        edge: edge.clone(),
+                        rule: Rule::Wavefront,
+                        stage: stage.to_string(),
+                        required: need,
+                        actual: sched.lambda_k[m],
+                        observable: true,
+                    });
+                }
+            }
+        }
+    }
+
+    // Register windows: every queue-bound sink must be at least as deep as
+    // the in-flight window the binder's closed form derives.
+    for sink in &cfg.binding.sinks {
+        let (from, birth) = sink_birth(pra, &sched.tau, sink.var);
+        match &sink.kind {
+            RegKind::Rd { .. } => {}
+            RegKind::Fd { depth, .. } => {
+                let required = fd_required_depth(cfg, sink, birth);
+                if (*depth as i64) < required {
+                    violations.push(Violation {
+                        edge: sink_edge(pra, sink, from),
+                        rule: Rule::FifoDepth,
+                        stage: stage.to_string(),
+                        required,
+                        actual: *depth as i64,
+                        // The simulator's queues are unbounded: a shallow
+                        // declared depth overflows silently (its oracle is
+                        // `max_fd_occupancy`, not the timing counter).
+                        observable: false,
+                    });
+                }
+            }
+            RegKind::Channel {
+                dim,
+                est_depth,
+                intra,
+                ..
+            } => {
+                let delay = sched.lambda_k[*dim]
+                    - (sched.lambda_j[*dim] * part.tile[*dim] - dot(&sched.lambda_j, &sink.d));
+                let required =
+                    ((delay.max(1) as u64).div_ceil(sched.ii.max(1) as u64) as i64).max(1);
+                if (*est_depth as i64) < required {
+                    violations.push(Violation {
+                        edge: sink_edge(pra, sink, from),
+                        rule: Rule::ChannelDepth,
+                        stage: stage.to_string(),
+                        required,
+                        actual: *est_depth as i64,
+                        observable: false,
+                    });
+                }
+                if let RegKind::Fd { depth, .. } = intra.as_ref() {
+                    let required = fd_required_depth(cfg, sink, birth);
+                    if (*depth as i64) < required {
+                        violations.push(Violation {
+                            edge: sink_edge(pra, sink, from),
+                            rule: Rule::FifoDepth,
+                            stage: stage.to_string(),
+                            required,
+                            actual: *depth as i64,
+                            // See above: occupancy-observable, counter-silent.
+                            observable: false,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    let stages = vec![StageIi {
+        stage: stage.to_string(),
+        min_ii: tcpa_min_ii(pra, arch),
+        achieved_ii: sched.ii,
+    }];
+    AnalysisReport::from_parts(violations, deps.len(), stages)
+}
+
+/// The dependence edge with the least schedule slack in a TCPA config
+/// (diagnostic fallback when the simulator complains about a statically
+/// legal artifact — points at the tightest constraint).
+pub fn tcpa_tightest_edge(cfg: &TcpaConfig) -> Option<(DepEdge, i64)> {
+    let pra = &cfg.pra;
+    let sched = &cfg.sched;
+    let (group_of, _) = alternative_groups(pra);
+    let mut best: Option<(DepEdge, i64)> = None;
+    for (dep, edge) in pra.dependences().iter().zip(pra_dep_edges(pra)) {
+        if dep.is_intra_iteration()
+            && (dep.from == dep.to || group_of[dep.from] == group_of[dep.to])
+        {
+            continue;
+        }
+        let lat = pra.eqs[dep.from].op.latency() as i64;
+        let rhs = if dep.is_intra_iteration() {
+            sched.tau[dep.to] as i64
+        } else {
+            dot(&sched.lambda_j, &dep.d) + sched.tau[dep.to] as i64
+        };
+        let slack = rhs - (sched.tau[dep.from] as i64 + lat);
+        if best.as_ref().is_none_or(|(_, s)| slack < *s) {
+            best = Some((edge, slack));
+        }
+    }
+    best
+}
+
+/// Verify a CGRA modulo schedule against every DFG edge (data, ordering,
+/// hazard): `τ(src) + L(src) ≤ τ(dst) + II·dist`. `n_pes`/`n_mem_pes`
+/// feed the res-MII half of the min-II bound.
+pub fn verify_cgra(
+    dfg: &Dfg,
+    m: &Mapping,
+    hazards: &[(usize, usize)],
+    n_pes: usize,
+    n_mem_pes: usize,
+    stage: &str,
+) -> AnalysisReport {
+    let edges = dfg_dep_edges(dfg, hazards);
+    let ii = m.ii as i64;
+    let mut violations = Vec::new();
+    for edge in &edges {
+        let lhs = m.tau[edge.from] as i64 + edge.latency;
+        let rhs = m.tau[edge.to] as i64 + ii * edge.d[0];
+        if lhs > rhs {
+            let rule = match edge.kind {
+                DepKind::Flow => Rule::Flow,
+                DepKind::Ordering => Rule::Ordering,
+                DepKind::Hazard => Rule::Hazard,
+            };
+            // The simulator stores the value and its done-stamp at *issue*;
+            // the counter sees a late read only when the producer instance
+            // already issued when the consumer fetches: a strictly earlier
+            // cycle (rhs > τ_src), or the same cycle with the producer
+            // sequenced first (slot order is (τ, v), so d = 0 and
+            // src < dst). A fetch before the producer ever issues reads a
+            // stale ring slot silently, and ordering/hazard edges move no
+            // value at all.
+            let tau_src = m.tau[edge.from] as i64;
+            let observable = edge.kind == DepKind::Flow
+                && (rhs > tau_src
+                    || (rhs == tau_src && edge.d[0] == 0 && edge.from < edge.to));
+            violations.push(Violation {
+                edge: edge.clone(),
+                rule,
+                stage: stage.to_string(),
+                required: lhs,
+                actual: rhs,
+                observable,
+            });
+        }
+    }
+    let stages = vec![StageIi {
+        stage: stage.to_string(),
+        min_ii: mii::mii(dfg, hazards, n_pes, n_mem_pes),
+        achieved_ii: m.ii,
+    }];
+    AnalysisReport::from_parts(violations, edges.len(), stages)
+}
+
+/// The least-slack DFG edge of a CGRA mapping (diagnostic fallback, see
+/// [`tcpa_tightest_edge`]).
+pub fn cgra_tightest_edge(
+    dfg: &Dfg,
+    m: &Mapping,
+    hazards: &[(usize, usize)],
+) -> Option<(DepEdge, i64)> {
+    let ii = m.ii as i64;
+    let mut best: Option<(DepEdge, i64)> = None;
+    for edge in dfg_dep_edges(dfg, hazards) {
+        let slack =
+            m.tau[edge.to] as i64 + ii * edge.d[0] - (m.tau[edge.from] as i64 + edge.latency);
+        if best.as_ref().is_none_or(|(_, s)| slack < *s) {
+            best = Some((edge, slack));
+        }
+    }
+    best
+}
+
+/// Proof status of one symbolic candidate placement.
+#[derive(Debug, Clone)]
+pub struct CandidateProof {
+    pub ii: u32,
+    /// P1: the n-independent intra-iteration τ ordering (`d = 0` edges).
+    /// `realize` never re-checks these, so a candidate violating P1 would
+    /// instantiate into a broken schedule at *every* n — hard illegal.
+    pub violations: Vec<Violation>,
+    /// P2: `τ(from) + L ≤ II·Σd + τ(to)` for every `d ≠ 0` edge — a valid
+    /// lower bound on `λʲ·d` for any LSGP partition (each λʲ component is
+    /// a positive multiple of II and `d ≥ 0`), so a candidate passing
+    /// P1 ∧ P2 is legal at every instantiation without re-verification.
+    pub universal: bool,
+}
+
+/// One proof per kernel *shape*: verdict over all recorded candidates.
+#[derive(Debug, Clone)]
+pub struct SymbolicReport {
+    pub verdict: Verdict,
+    pub candidates: Vec<CandidateProof>,
+    /// II of the first candidate proven legal for *every* instantiation
+    /// (P1 ∧ P2). `instantiate` picks the first candidate whose `d ≠ 0`
+    /// check passes at the concrete partition, so the achieved II is
+    /// always ≤ this bound.
+    pub proven_ii: Option<u32>,
+    pub n_deps: usize,
+}
+
+impl SymbolicReport {
+    pub fn is_legal(&self) -> bool {
+        self.verdict == Verdict::Legal
+    }
+
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "  {} candidate placement(s), {} dependence edges: verdict {}\n",
+            self.candidates.len(),
+            self.n_deps,
+            match self.verdict {
+                Verdict::Legal => "LEGAL (all n)",
+                Verdict::Illegal => "ILLEGAL",
+            }
+        );
+        match self.proven_ii {
+            Some(ii) => out.push_str(&format!(
+                "  universal candidate: II {ii} legal at every instantiation\n"
+            )),
+            None => out.push_str("  no candidate is universally provable; instantiation relies on the per-partition d != 0 check\n"),
+        }
+        for c in &self.candidates {
+            for v in &c.violations {
+                out.push_str(&format!("    {}\n", v.describe()));
+            }
+        }
+        out
+    }
+}
+
+/// Verify every candidate of a symbolic schedule as n-independent
+/// predicates — one proof per kernel shape, covering all instantiations.
+/// The verdict is `Legal` iff *every* candidate satisfies P1: `instantiate`
+/// may pick any of them depending on the concrete partition, and the
+/// `realize` step it replays re-checks only the `d ≠ 0` half.
+pub fn verify_symbolic(pra: &Pra, sym: &SymbolicSchedule) -> SymbolicReport {
+    let deps = pra.dependences();
+    let edges = pra_dep_edges(pra);
+    let (group_of, _) = alternative_groups(pra);
+    let mut candidates = Vec::new();
+    let mut any_hard = false;
+    let mut proven_ii = None;
+    for p in &sym.candidates {
+        let mut violations = Vec::new();
+        let mut universal = true;
+        for (dep, edge) in deps.iter().zip(&edges) {
+            let lat = pra.eqs[dep.from].op.latency() as i64;
+            let lhs = p.tau[dep.from] as i64 + lat;
+            if dep.is_intra_iteration() {
+                if dep.from == dep.to || group_of[dep.from] == group_of[dep.to] {
+                    continue;
+                }
+                if lhs > p.tau[dep.to] as i64 {
+                    violations.push(Violation {
+                        edge: edge.clone(),
+                        rule: Rule::IntraIteration,
+                        stage: format!("candidate II={}", p.ii),
+                        required: lhs,
+                        actual: p.tau[dep.to] as i64,
+                        // Binding happens at instantiation; whether the
+                        // counter sees it depends on the concrete n.
+                        observable: false,
+                    });
+                    universal = false;
+                }
+            } else {
+                let sum_d: i64 = dep.d.iter().sum();
+                if lhs > p.ii as i64 * sum_d + p.tau[dep.to] as i64 {
+                    universal = false;
+                }
+            }
+        }
+        if !violations.is_empty() {
+            any_hard = true;
+        }
+        if universal && proven_ii.is_none() {
+            proven_ii = Some(p.ii);
+        }
+        candidates.push(CandidateProof {
+            ii: p.ii,
+            violations,
+            universal,
+        });
+    }
+    SymbolicReport {
+        verdict: if any_hard {
+            Verdict::Illegal
+        } else {
+            Verdict::Legal
+        },
+        candidates,
+        proven_ii,
+        n_deps: deps.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads::{build, BenchId};
+    use crate::tcpa::config::compile;
+    use crate::tcpa::schedule::schedule_symbolic;
+
+    #[test]
+    fn compiled_gemm_is_legal() {
+        let wl = build(BenchId::Gemm, 8);
+        let arch = TcpaArch::paper(4, 4);
+        let cfg = compile(&wl.pras[0], &arch).expect("compile");
+        let rep = verify_tcpa_config(&cfg, &arch, "gemm");
+        assert!(rep.is_legal(), "{}", rep.summary());
+        assert!(rep.runtime_legal(), "{}", rep.summary());
+        assert!(rep.n_deps > 0);
+        assert_eq!(rep.stages.len(), 1);
+        assert!(rep.stages[0].min_ii <= rep.stages[0].achieved_ii);
+    }
+
+    #[test]
+    fn tau_mutation_flags_the_edge() {
+        let wl = build(BenchId::Gemm, 8);
+        let arch = TcpaArch::paper(4, 4);
+        let mut cfg = compile(&wl.pras[0], &arch).expect("compile");
+        // Push one producer past every consumer; the intra-tile inequality
+        // for its inter-iteration edge must break and name the edge.
+        let dep = cfg
+            .pra
+            .dependences()
+            .into_iter()
+            .find(|d| !d.is_intra_iteration())
+            .expect("gemm has inter-iteration deps");
+        cfg.sched.tau[dep.from] += 10_000;
+        let rep = verify_tcpa_config(&cfg, &arch, "gemm");
+        assert!(!rep.is_legal());
+        let names: Vec<&str> = rep
+            .violations
+            .iter()
+            .map(|v| v.edge.from_label.as_str())
+            .collect();
+        assert!(
+            names.contains(&cfg.pra.eqs[dep.from].name.as_str()),
+            "offending equation named: {names:?}"
+        );
+    }
+
+    #[test]
+    fn symbolic_proof_is_size_independent() {
+        let wl = build(BenchId::Gemm, 8);
+        let arch = TcpaArch::paper(4, 4);
+        let sym = schedule_symbolic(&wl.pras[0], &arch);
+        let rep = verify_symbolic(&wl.pras[0], &sym);
+        assert!(rep.is_legal(), "{}", rep.summary());
+        assert!(rep.proven_ii.is_some(), "{}", rep.summary());
+    }
+}

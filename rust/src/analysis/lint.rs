@@ -1,0 +1,343 @@
+//! Std-only source lint over `rust/src` — the promotion of the grep-style
+//! rules that lived in `tests/api_invariants.rs`, runnable as `repro lint`
+//! (and in CI) with the old test kept as a shim.
+//!
+//! Rules:
+//!
+//! * `match-benchid` — no `match` arm on `BenchId` outside
+//!   `bench/workloads.rs`: the benchmark set is open (catalog + specs);
+//!   the builtins' self-registration is the single allowed site.
+//! * `match-target` — no `match` arm on `Target` outside `src/backend/`:
+//!   targets dispatch through the registry, never by enum case analysis.
+//! * `hot-path-unwrap` — no `.unwrap()` / `.expect(` in the non-test half
+//!   of the serve hot path (`coordinator/{pool,net,wire,session}.rs`): a
+//!   panicking worker poisons locks and drops connections; errors must
+//!   flow through the typed response path.
+//! * `sim-hot-loop` — the simulators' inner event loops (delimited by
+//!   `lint: begin-hot-loop` / `lint: end-hot-loop` markers in
+//!   `tcpa/sim.rs` and `cgra/sim.rs`) must stay free of allocation and
+//!   `Instant::now`: the zero-allocation steady state is a measured
+//!   property (BENCH_hotpath) this lint keeps from silently rotting.
+//!   `Instant::now` is additionally banned anywhere in both simulators —
+//!   simulated time is cycle counting, never wall clock.
+//!
+//! The match-arm scan looks for `Enum::Variant =>` — the shape every match
+//! arm (and nothing else in this codebase) takes.
+
+use std::path::{Path, PathBuf};
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct LintIssue {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl LintIssue {
+    pub fn describe(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Tokens that allocate (or read the wall clock) and are therefore banned
+/// between hot-loop markers.
+const HOT_LOOP_BANNED: &[&str] = &[
+    "Instant::now",
+    "Vec::new",
+    "vec!",
+    "String::new",
+    "String::from",
+    "format!",
+    ".to_string(",
+    ".to_vec(",
+    ".to_owned(",
+    "Box::new",
+    "::with_capacity",
+    ".collect(",
+];
+
+/// Serve hot-path files where panicking combinators are banned outside
+/// `#[cfg(test)]`.
+const HOT_PATH_FILES: &[&str] = &[
+    "coordinator/pool.rs",
+    "coordinator/net.rs",
+    "coordinator/wire.rs",
+    "coordinator/session.rs",
+];
+
+/// Simulator files subject to the hot-loop rule.
+const SIM_FILES: &[&str] = &["tcpa/sim.rs", "cgra/sim.rs"];
+
+/// Recursively collect `.rs` files under `dir`.
+pub fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry.map_err(|e| format!("dir entry: {e}"))?.path();
+        if path.is_dir() {
+            rs_files(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Find `needle` followed (after an identifier and optional whitespace) by
+/// `=>` — i.e. a match arm on that enum. Returns `(line, variant)` pairs.
+pub fn match_arms(src: &str, needle: &str) -> Vec<(usize, String)> {
+    let mut found = Vec::new();
+    let bytes = src.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = src[from..].find(needle) {
+        let start = from + pos;
+        let mut i = start + needle.len();
+        let ident_start = i;
+        while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_') {
+            i += 1;
+        }
+        let ident_end = i;
+        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+            i += 1;
+        }
+        if ident_end > ident_start && bytes[i..].starts_with(b"=>") {
+            let line = src[..start].matches('\n').count() + 1;
+            found.push((line, format!("{needle}{}", &src[ident_start..ident_end])));
+        }
+        from = start + needle.len();
+    }
+    found
+}
+
+/// The non-test prefix of a source file: everything before the first
+/// `#[cfg(test)]` marker (the codebase keeps tests in one trailing module).
+fn non_test_region(src: &str) -> &str {
+    match src.find("#[cfg(test)]") {
+        Some(pos) => &src[..pos],
+        None => src,
+    }
+}
+
+fn is_comment_line(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+fn push_token_hits(
+    issues: &mut Vec<LintIssue>,
+    file: &str,
+    rule: &'static str,
+    region: &str,
+    line_offset: usize,
+    tokens: &[&str],
+    exclude: &[&str],
+    message: impl Fn(&str) -> String,
+) {
+    for (idx, line) in region.lines().enumerate() {
+        if is_comment_line(line) {
+            continue;
+        }
+        for tok in tokens {
+            if let Some(col) = line.find(tok) {
+                // Skip when the hit is really a longer, allowed token
+                // (e.g. `.expect_err(` when scanning for `.expect`).
+                if exclude
+                    .iter()
+                    .any(|ex| ex.len() > tok.len() && line[col..].starts_with(ex))
+                {
+                    continue;
+                }
+                issues.push(LintIssue {
+                    file: file.to_string(),
+                    line: line_offset + idx + 1,
+                    rule,
+                    message: message(tok),
+                });
+            }
+        }
+    }
+}
+
+/// Run every rule over the source tree rooted at `src_root` (normally
+/// `rust/src`). Returns `Err` when the root looks wrong — fewer than 30
+/// `.rs` files means the scan would vacuously pass.
+pub fn run(src_root: &Path) -> Result<Vec<LintIssue>, String> {
+    let mut files = Vec::new();
+    rs_files(src_root, &mut files)?;
+    if files.len() <= 30 {
+        return Err(format!(
+            "lint root {} holds only {} .rs files — expected the full src tree (>30)",
+            src_root.display(),
+            files.len()
+        ));
+    }
+    files.sort();
+    let mut issues = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let display = path.display().to_string();
+        lint_file(&mut issues, path, &display, &text);
+    }
+    Ok(issues)
+}
+
+fn lint_file(issues: &mut Vec<LintIssue>, path: &Path, display: &str, text: &str) {
+    // Rule: match-benchid.
+    if !path.ends_with("bench/workloads.rs") {
+        for (line, arm) in match_arms(text, "BenchId::") {
+            issues.push(LintIssue {
+                file: display.to_string(),
+                line,
+                rule: "match-benchid",
+                message: format!(
+                    "{arm} => — BenchId must not be matched on outside bench/workloads.rs \
+                     (use the catalog / Workload.name instead)"
+                ),
+            });
+        }
+    }
+
+    // Rule: match-target.
+    if !path.components().any(|c| c.as_os_str() == "backend") {
+        for (line, arm) in match_arms(text, "Target::") {
+            issues.push(LintIssue {
+                file: display.to_string(),
+                line,
+                rule: "match-target",
+                message: format!(
+                    "{arm} => — Target must not be matched on outside src/backend/ \
+                     (dispatch through the BackendRegistry instead)"
+                ),
+            });
+        }
+    }
+
+    // Rule: hot-path-unwrap.
+    if HOT_PATH_FILES.iter().any(|f| path.ends_with(f)) {
+        push_token_hits(
+            issues,
+            display,
+            "hot-path-unwrap",
+            non_test_region(text),
+            0,
+            &[".unwrap()", ".expect("],
+            &[".expect_err("],
+            |tok| {
+                format!(
+                    "{tok} on the serve hot path — return the error through \
+                     the typed response path instead of panicking a worker"
+                )
+            },
+        );
+    }
+
+    // Rule: sim-hot-loop.
+    if SIM_FILES.iter().any(|f| path.ends_with(f)) {
+        let non_test = non_test_region(text);
+        push_token_hits(
+            issues,
+            display,
+            "sim-hot-loop",
+            non_test,
+            0,
+            &["Instant::now"],
+            &[],
+            |_| "wall-clock read inside a simulator — simulated time is cycle counting".into(),
+        );
+        let begin = non_test.find("lint: begin-hot-loop");
+        let end = non_test.find("lint: end-hot-loop");
+        match (begin, end) {
+            (Some(b), Some(e)) if b < e => {
+                let offset = non_test[..b].matches('\n').count();
+                push_token_hits(
+                    issues,
+                    display,
+                    "sim-hot-loop",
+                    &non_test[b..e],
+                    offset,
+                    HOT_LOOP_BANNED,
+                    &[],
+                    |tok| {
+                        format!(
+                            "{tok} inside the simulator event loop — the hot loop \
+                             must stay allocation-free (BENCH_hotpath invariant)"
+                        )
+                    },
+                );
+            }
+            _ => issues.push(LintIssue {
+                file: display.to_string(),
+                line: 1,
+                rule: "sim-hot-loop",
+                message: "missing or inverted `lint: begin-hot-loop` / `lint: end-hot-loop` \
+                          markers — the event loop must stay delimited for this rule"
+                    .into(),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_scanner_shapes() {
+        // Built via format! so this file does not itself contain a literal
+        // arm shape the real-tree scan below would flag.
+        let sample = format!("match id {{\n    {0}Gemm => 1,\n    _ => 2,\n}}", "BenchId::");
+        assert_eq!(match_arms(&sample, "BenchId::").len(), 1);
+        assert_eq!(match_arms(&sample, "BenchId::")[0].0, 2);
+        assert!(match_arms("let x = BenchId::Gemm;", "BenchId::").is_empty());
+        assert!(match_arms("if id == BenchId::Gemm { }", "BenchId::").is_empty());
+    }
+
+    #[test]
+    fn unwrap_scanner_respects_exclusions_and_tests() {
+        let mut issues = Vec::new();
+        let src = "fn f() {\n    x.unwrap();\n    y.expect_err(\"ok\");\n    // z.unwrap() in a comment\n}\n#[cfg(test)]\nmod tests {\n    fn g() { a.unwrap(); }\n}\n";
+        lint_file(
+            &mut issues,
+            Path::new("src/coordinator/pool.rs"),
+            "pool.rs",
+            src,
+        );
+        let unwraps: Vec<_> = issues
+            .iter()
+            .filter(|i| i.rule == "hot-path-unwrap")
+            .collect();
+        assert_eq!(unwraps.len(), 1, "{issues:?}");
+        assert_eq!(unwraps[0].line, 2);
+    }
+
+    #[test]
+    fn hot_loop_scanner_flags_alloc_between_markers() {
+        let mut issues = Vec::new();
+        let src = "fn sim() {\n    let setup = Vec::<u32>::new();\n    // lint: begin-hot-loop\n    let v = vec![1];\n    // lint: end-hot-loop\n}\n";
+        lint_file(&mut issues, Path::new("src/tcpa/sim.rs"), "sim.rs", src);
+        let hits: Vec<_> = issues.iter().filter(|i| i.rule == "sim-hot-loop").collect();
+        assert_eq!(hits.len(), 1, "{issues:?}");
+        assert_eq!(hits[0].line, 4);
+        // missing markers is itself an issue
+        let mut issues = Vec::new();
+        lint_file(&mut issues, Path::new("src/cgra/sim.rs"), "sim.rs", "fn f() {}");
+        assert!(issues.iter().any(|i| i.rule == "sim-hot-loop"));
+    }
+
+    #[test]
+    fn the_real_tree_is_clean() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let issues = run(&src).expect("lint run");
+        assert!(
+            issues.is_empty(),
+            "source lint violations:\n{}",
+            issues
+                .iter()
+                .map(|i| i.describe())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

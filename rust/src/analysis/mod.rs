@@ -1,0 +1,40 @@
+//! Static analysis: prove mappings hazard-free *before* they execute.
+//!
+//! Both accelerator stacks are schedules over one dependence structure, so
+//! legality is decidable at compile time in closed form. This subsystem has
+//! three layers:
+//!
+//! * [`deps`] — the shared dependence-edge representation extracted from
+//!   PRA equations and the DFG (flow, ordering and hazard edges alike).
+//! * [`legality`] — the closed-form verifier: per-dependence schedule
+//!   inequalities and register-window coverage for the TCPA, modulo-
+//!   schedule edge timing plus rec-MII edges for the CGRA, and
+//!   n-independent candidate predicates for symbolic TCPA artifacts (one
+//!   proof per kernel shape covers every instantiation).
+//! * Wiring (in `backend/`): every `Mapped` artifact carries an
+//!   [`AnalysisReport`] (`Mapped::analysis`), the serve path rejects
+//!   statically-illegal artifacts before simulation with a typed
+//!   `illegal` diagnostic, and `repro analyze` prints verdicts per target.
+//!
+//! The simulators' runtime violation counters double as a cross-checking
+//! oracle: [`AnalysisReport::runtime_legal`] must agree exactly with
+//! "counters are zero" (asserted over benchmarks and adversarial mutants
+//! by `tests/legality_oracle.rs` — the same discipline `sim_equivalence`
+//! established for cycle counts).
+//!
+//! [`lint`] — an unrelated-looking but deliberately co-located fourth
+//! member: the std-only source lint (`repro lint`) that keeps this crate's
+//! own invariants (registry dispatch, panic-free serve path, allocation-
+//! free sim loops) statically enforced, the same promote-runtime-checks-
+//! to-compile-time discipline applied to the codebase itself.
+
+pub mod deps;
+pub mod legality;
+pub mod lint;
+
+pub use deps::{dfg_dep_edges, pra_dep_edges, DepEdge, DepKind};
+pub use legality::{
+    cgra_tightest_edge, tcpa_min_ii, tcpa_tightest_edge, verify_cgra, verify_symbolic,
+    verify_tcpa_config, AnalysisReport, CandidateProof, Rule, StageIi, SymbolicReport, Verdict,
+    Violation,
+};

@@ -9,6 +9,7 @@
 
 use std::collections::HashSet;
 
+use crate::analysis::{self, AnalysisReport};
 use crate::cgra::mapper::{map, Mapping};
 use crate::cgra::sim as cgra_sim;
 use crate::frontend::dfg_gen::generate;
@@ -41,6 +42,10 @@ pub struct MapRow {
     pub error: Option<String>,
     /// Per-stage mappings (for simulation).
     pub mappings: Vec<(crate::frontend::dfg::Dfg, Mapping)>,
+    /// Per-stage inter-iteration hazard pairs (parallel to `mappings`) —
+    /// kept so the static verifier and diagnostics can re-derive the full
+    /// dependence-edge set of each mapped stage.
+    pub hazards: Vec<Vec<(usize, usize)>>,
 }
 
 /// Map all stages of a workload under a row spec.
@@ -59,6 +64,7 @@ fn map_cgra_row_cancellable(wl: &Workload, spec: &RowSpec, cancel: &CancelToken)
     let mut maxops = 0usize;
     let mut latency = 0u64;
     let mut mappings = Vec::new();
+    let mut hazards = Vec::new();
     let mut error: Option<String> = None;
 
     for nest in &wl.stages {
@@ -87,6 +93,7 @@ fn map_cgra_row_cancellable(wl: &Workload, spec: &RowSpec, cancel: &CancelToken)
                 unused = unused.min(m.unused_pes(&spec.arch));
                 maxops = maxops.max(m.max_ops_per_pe(&spec.arch));
                 latency += m.latency(gen.dfg.iters);
+                hazards.push(gen.inter_iteration_hazards);
                 mappings.push((gen.dfg, m));
             }
             Err(e) => {
@@ -110,6 +117,7 @@ fn map_cgra_row_cancellable(wl: &Workload, spec: &RowSpec, cancel: &CancelToken)
         latency: (ok && !spec.inner_only).then_some(latency),
         error,
         mappings,
+        hazards,
     }
 }
 
@@ -213,12 +221,23 @@ impl Backend for CgraBackend {
                     .map(|(dfg, m)| cgra_sim::StagePlan::new(dfg, m))
                     .collect();
                 let read_later = read_sets(&row);
+                // static legality: prove every stage's modulo schedule
+                // respects its dependence edges (data + ordering + hazard)
+                // before the artifact can ever reach a simulator
+                let n_mem_pes = spec.arch.mem_pes().len();
+                let analysis = AnalysisReport::merge(row.mappings.iter().zip(&row.hazards).map(
+                    |((dfg, m), hz)| {
+                        analysis::verify_cgra(dfg, m, hz, n_pes, n_mem_pes, &dfg.name)
+                    },
+                ));
                 Ok(Box::new(CgraMapped {
                     row,
                     plans,
                     read_later,
                     stats,
                     n_pes,
+                    n_mem_pes,
+                    analysis,
                 }))
             }
         }
@@ -247,11 +266,55 @@ pub struct CgraMapped {
     read_later: Vec<HashSet<String>>,
     stats: MappedStats,
     n_pes: usize,
+    n_mem_pes: usize,
+    analysis: AnalysisReport,
+}
+
+impl CgraMapped {
+    /// Diagnostic for a runtime timing hazard in stage `i`: re-verify the
+    /// stage live and name the dependence edge the static analysis blames
+    /// — nodes, distance, stage label — instead of a bare counter value.
+    fn hazard_error(&self, i: usize, count: u64) -> String {
+        let (dfg, m) = &self.row.mappings[i];
+        let rep = analysis::verify_cgra(
+            dfg,
+            m,
+            &self.row.hazards[i],
+            self.n_pes,
+            self.n_mem_pes,
+            &dfg.name,
+        );
+        match rep
+            .violations
+            .iter()
+            .find(|v| v.observable)
+            .or_else(|| rep.violations.first())
+        {
+            Some(v) => format!(
+                "CGRA sim reported {count} hazards; static analysis blames {}",
+                v.describe()
+            ),
+            None => {
+                let tight = analysis::cgra_tightest_edge(dfg, m, &self.row.hazards[i])
+                    .map(|(e, slack)| format!("{} (slack {slack})", e.describe()))
+                    .unwrap_or_else(|| "none".into());
+                format!(
+                    "CGRA sim reported {count} hazards on a statically legal schedule \
+                     [stage {}]; tightest dependence: {tight}",
+                    dfg.name
+                )
+            }
+        }
+    }
 }
 
 impl Mapped for CgraMapped {
     fn stats(&self) -> &MappedStats {
         &self.stats
+    }
+
+    fn analysis(&self) -> Option<&AnalysisReport> {
+        Some(&self.analysis)
     }
 
     fn execute(&self, inputs: &ArrayData, batch: u64) -> Result<ExecReport, String> {
@@ -270,7 +333,7 @@ impl Mapped for CgraMapped {
         for (i, (dfg, m)) in self.row.mappings.iter().enumerate() {
             let r = cgra_sim::simulate_with_plan(dfg, m, &self.plans[i], &mut scratch, &pool);
             if r.timing_hazards > 0 {
-                return Err(format!("CGRA sim reported {} hazards", r.timing_hazards));
+                return Err(self.hazard_error(i, r.timing_hazards));
             }
             issued += r.issued_ops;
             for (k, v) in r.outputs {

@@ -282,6 +282,16 @@ pub trait Mapped: Send + Sync + std::fmt::Debug {
     /// (FIFO underflows, operands consumed before arrival) and artifacts
     /// with no pipelined latency surface as `Err`, never as a zero.
     fn execute(&self, inputs: &ArrayData, batch: u64) -> Result<ExecReport, String>;
+
+    /// The static legality report attached at compile time (see
+    /// [`crate::analysis`]): verdict, violated edges with source equations,
+    /// and min-II bound vs. achieved II per stage. `None` for backends that
+    /// perform no static analysis (the sequential reference interprets the
+    /// nest directly — there is no schedule to verify). The serve path
+    /// rejects artifacts whose report is illegal *before* any simulation.
+    fn analysis(&self) -> Option<&crate::analysis::AnalysisReport> {
+        None
+    }
 }
 
 /// A compile failure that still carries the partial statistics the paper's

@@ -11,6 +11,7 @@
 
 use std::sync::Arc;
 
+use crate::analysis::{self, AnalysisReport, SymbolicReport};
 use crate::ir::loopnest::ArrayData;
 use crate::ir::pra::Pra;
 use crate::tcpa::arch::TcpaArch;
@@ -205,6 +206,21 @@ impl Backend for TcpaBackend {
     }
 }
 
+/// One n-independent legality proof per kernel of a workload: record the
+/// symbolic placements once per shape and verify each candidate as a
+/// closed-form predicate (see [`analysis::verify_symbolic`]). What the
+/// `repro analyze` CLI prints for the TCPA's symbolic path — one proof
+/// covers every instantiation of the shape.
+pub fn analyze_symbolic(wl: &Workload, arch: &TcpaArch) -> Vec<(String, SymbolicReport)> {
+    wl.pras
+        .iter()
+        .map(|pra| {
+            let sym = schedule_symbolic(pra, arch);
+            (pra.name.clone(), analysis::verify_symbolic(pra, &sym))
+        })
+        .collect()
+}
+
 /// Wrap a compiled row into the coordinator-facing artifact (or the failed
 /// row into the [`CompileError`] the tables still print). Shared verbatim by
 /// the per-n compile path and the symbolic instantiation path so both
@@ -233,6 +249,14 @@ fn mapped_of(
                 .map(|cfg| Arc::new(cfg.execution_plan()))
                 .collect();
             let read_after = tcpa_sim::workload_read_sets(&row.configs);
+            // static legality: prove every kernel's schedule hazard-free
+            // before the artifact can ever reach a simulator (the serve
+            // path rejects artifacts whose report is illegal)
+            let analysis = AnalysisReport::merge(
+                row.configs
+                    .iter()
+                    .map(|cfg| analysis::verify_tcpa_config(cfg, arch, &cfg.pra.name)),
+            );
             Ok(Box::new(TcpaMapped {
                 row,
                 plans,
@@ -240,6 +264,7 @@ fn mapped_of(
                 arch: arch.clone(),
                 stats,
                 n_pes,
+                analysis,
             }))
         }
     }
@@ -310,11 +335,48 @@ pub struct TcpaMapped {
     arch: TcpaArch,
     stats: MappedStats,
     n_pes: usize,
+    analysis: AnalysisReport,
+}
+
+impl TcpaMapped {
+    /// Diagnostic for a runtime timing violation on kernel `i`: re-verify
+    /// the configuration live and name the dependence edge the static
+    /// analysis blames — equations, carried variable, distance vector and
+    /// stage label — instead of a bare counter value.
+    fn violation_error(&self, i: usize, count: u64) -> String {
+        let cfg = &self.row.configs[i];
+        let rep = analysis::verify_tcpa_config(cfg, &self.arch, &cfg.pra.name);
+        match rep
+            .violations
+            .iter()
+            .find(|v| v.observable)
+            .or_else(|| rep.violations.first())
+        {
+            Some(v) => format!(
+                "TCPA sim reported {count} timing violations; static analysis blames {}",
+                v.describe()
+            ),
+            None => {
+                let tight = analysis::tcpa_tightest_edge(cfg)
+                    .map(|(e, slack)| format!("{} (slack {slack})", e.describe()))
+                    .unwrap_or_else(|| "none".into());
+                format!(
+                    "TCPA sim reported {count} timing violations on a statically legal \
+                     schedule [stage {}]; tightest dependence: {tight}",
+                    cfg.pra.name
+                )
+            }
+        }
+    }
 }
 
 impl Mapped for TcpaMapped {
     fn stats(&self) -> &MappedStats {
         &self.stats
+    }
+
+    fn analysis(&self) -> Option<&AnalysisReport> {
+        Some(&self.analysis)
     }
 
     fn execute(&self, inputs: &ArrayData, batch: u64) -> Result<ExecReport, String> {
@@ -326,12 +388,9 @@ impl Mapped for TcpaMapped {
             inputs,
         )
         .map_err(|e| e.to_string())?;
-        for k in &run.kernels {
+        for (i, k) in run.kernels.iter().enumerate() {
             if k.timing_violations > 0 {
-                return Err(format!(
-                    "TCPA sim reported {} violations",
-                    k.timing_violations
-                ));
+                return Err(self.violation_error(i, k.timing_violations));
             }
         }
         let last_kernel = run

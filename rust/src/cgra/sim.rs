@@ -169,6 +169,8 @@ fn run_with_plan(
     let mut issued: u64 = 0;
     let mut hazards: u64 = 0;
 
+    // lint: begin-hot-loop — per-cycle issue loop; no allocation or clock
+    // reads allowed between the markers (enforced by `repro lint`)
     for c in 0..total_cycles {
         let slot = (c % ii) as usize;
         let list = &plan.by_slot[slot];
@@ -245,6 +247,7 @@ fn run_with_plan(
             issued += 1;
         }
     }
+    // lint: end-hot-loop
 
     SimResult {
         cycles: total_cycles,

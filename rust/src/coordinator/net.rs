@@ -218,7 +218,12 @@ pub fn serve(
                     let sender = sender.clone();
                     let counters = counters.clone();
                     let handle = thread::spawn(move || serve_connection(s, sender, counters));
-                    conns.lock().unwrap().push(handle);
+                    // a poisoned registry only means another accept iteration
+                    // panicked mid-push; the handle list itself is intact
+                    conns
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner)
+                        .push(handle);
                 }
                 Err(_) => {
                     if stop.load(Ordering::SeqCst) {
@@ -301,7 +306,11 @@ impl NetServer {
         sender: PoolSender,
         pool: PoolHandle,
     ) -> Metrics {
-        let handles: Vec<_> = std::mem::take(&mut *conns.lock().unwrap());
+        let handles: Vec<_> = std::mem::take(
+            &mut *conns
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner),
+        );
         for h in handles {
             let _ = h.join();
         }

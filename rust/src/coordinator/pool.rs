@@ -462,11 +462,11 @@ pub fn run_trace_sharded(
         config,
     );
     for r in trace {
-        tx.send(r.clone()).expect("pool alive");
+        // send fails only when every worker died; recv below stops short
+        // and the caller sees fewer responses than requests
+        let _ = tx.send(r.clone());
     }
-    let responses: Vec<Response> = (0..trace.len())
-        .map(|_| rx.recv().expect("pool response"))
-        .collect();
+    let responses: Vec<Response> = (0..trace.len()).map_while(|_| rx.recv().ok()).collect();
     let wall = t0.elapsed();
     drop(tx);
     (wall, handle.join(), responses)

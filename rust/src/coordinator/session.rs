@@ -38,6 +38,15 @@ use super::shard::CacheShards;
 /// exec-cache round trips — the degradation guard keys on it.
 pub(crate) const COMPILE_FAILED_PREFIX: &str = "compile failed: ";
 
+/// Prefix on rejections of statically-illegal artifacts: the legality
+/// verifier (see [`crate::analysis`]) proved the mapping violates a hard
+/// dependence constraint, so the serve path refuses to simulate it. The
+/// prefix is distinct from [`COMPILE_FAILED_PREFIX`] on purpose — an
+/// illegal schedule is a compiler bug or a corrupted artifact, and silently
+/// degrading it onto the sequential backend would mask that; it classifies
+/// as [`ErrorKind::Illegal`] instead. Deterministic, so exec-cacheable.
+pub(crate) const ILLEGAL_PREFIX: &str = "statically illegal: ";
+
 /// Typed classification of a failure response — what the resilience
 /// counters in [`Metrics`] reconcile against per response.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,6 +58,10 @@ pub enum ErrorKind {
     Timeout,
     /// Any other failure: resolution, compile, execution, worker panic.
     Failed,
+    /// Rejected by the static legality verifier before any simulation: the
+    /// compiled mapping provably violates a dependence constraint (see
+    /// [`crate::analysis`]); the diagnostic names the offending edge.
+    Illegal,
 }
 
 impl ErrorKind {
@@ -58,6 +71,7 @@ impl ErrorKind {
             ErrorKind::Shed => "shed",
             ErrorKind::Timeout => "timeout",
             ErrorKind::Failed => "failed",
+            ErrorKind::Illegal => "illegal",
         }
     }
 
@@ -67,6 +81,7 @@ impl ErrorKind {
             "shed" => Some(ErrorKind::Shed),
             "timeout" => Some(ErrorKind::Timeout),
             "failed" => Some(ErrorKind::Failed),
+            "illegal" => Some(ErrorKind::Illegal),
             _ => None,
         }
     }
@@ -586,6 +601,13 @@ impl Session {
                 symbolic_use = used;
                 let kernel = compiled.map_err(|e| format!("{COMPILE_FAILED_PREFIX}{e}"))?;
                 cancel.check("execute")?;
+                // static legality gate: an artifact whose analysis report is
+                // illegal never reaches a simulator — reject with the
+                // offending dependence edge named (deterministic in the
+                // artifact, so caching the refusal is sound)
+                if let Some(v) = kernel.analysis().and_then(|rep| rep.first_hard()) {
+                    return Err(format!("{ILLEGAL_PREFIX}{}", v.describe()));
+                }
                 #[cfg(any(test, feature = "fault-injection"))]
                 if let Some(plan) = faults.as_deref() {
                     if plan.should_fire(FaultSite::ExecPanic, req.id) {
@@ -645,6 +667,21 @@ impl Session {
                     && !is_transient_error(&e) =>
             {
                 self.degrade(req, &spec, fingerprint, shape, e, cache_hit, cancel, &retries, t0)
+            }
+            // a statically illegal artifact is a typed rejection: never
+            // degraded (the schedule itself is provably wrong — falling
+            // back would mask a compiler bug), precise edge in the message
+            Err(e) if e.starts_with(ILLEGAL_PREFIX) => {
+                let resp = Response::failure(
+                    req,
+                    e,
+                    ErrorKind::Illegal,
+                    cache_hit,
+                    exec_hit,
+                    symbolic_hit,
+                    t0.elapsed(),
+                );
+                (resp, 0, false)
             }
             Err(e) => {
                 let resp = Response::failure(
@@ -960,6 +997,19 @@ impl Default for Session {
 mod tests {
     use super::*;
     use crate::bench::spec::WorkloadCatalog;
+
+    #[test]
+    fn error_kind_name_parse_roundtrip() {
+        for k in [
+            ErrorKind::Shed,
+            ErrorKind::Timeout,
+            ErrorKind::Failed,
+            ErrorKind::Illegal,
+        ] {
+            assert_eq!(ErrorKind::parse(k.name()), Some(k), "{}", k.name());
+        }
+        assert_eq!(ErrorKind::parse("nonsense"), None);
+    }
 
     #[test]
     fn tcpa_request_validates() {

@@ -351,7 +351,11 @@ pub fn serve_jsonl_sharded(
         let out_ref = &out;
         let writer = s.spawn(move || -> std::io::Result<()> {
             for resp in rx.iter() {
-                let mut o = out_ref.lock().unwrap();
+                // a poisoned lock only means the other side panicked while
+                // writing; the stream itself is still usable
+                let mut o = out_ref
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
                 writeln!(o, "{}", response_to_json(&resp).render())?;
             }
             Ok(())
@@ -378,7 +382,9 @@ pub fn serve_jsonl_sharded(
                     let _ = tx.send(req);
                 }
                 Err(e) => {
-                    let mut o = out.lock().unwrap();
+                    let mut o = out
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
                     let record =
                         line_error_json(i + 1, &e, recover_request_id(&line)).render();
                     if let Err(io_err) = writeln!(o, "{record}") {
@@ -389,7 +395,10 @@ pub fn serve_jsonl_sharded(
             }
         }
         drop(tx);
-        let write_result = writer.join().expect("wire writer thread");
+        let write_result = match writer.join() {
+            Ok(r) => r,
+            Err(_) => Err(std::io::Error::other("wire writer thread panicked")),
+        };
         read_result.and(write_result)
     })?;
     Ok(handle.join())

@@ -28,8 +28,15 @@
 //! seed + batch), so byte-identical repeat requests replay with zero
 //! lowering, zero input regeneration and zero simulation.
 //!
+//! Cross-cutting both stacks sits the static verifier ([`analysis`]): one
+//! dependence-edge representation, closed-form legality proofs attached to
+//! every compiled artifact (`Mapped::analysis`), n-independent proofs for
+//! symbolic shapes, and the `repro lint` source-invariant pass — with the
+//! simulators' runtime violation counters kept as a cross-checking oracle.
+//!
 //! See `DESIGN.md` for the system inventory and experiment index.
 
+pub mod analysis;
 pub mod util;
 pub mod ir;
 pub mod frontend;

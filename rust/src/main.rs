@@ -25,6 +25,11 @@
 //!                              # speaking the same JSONL wire protocol to
 //!                              # many concurrent connections, over S
 //!                              # fingerprint-sharded cache pairs
+//! repro analyze --all          # static legality proof for every builtin
+//! repro analyze <name> <n>     # … for one workload at one size, plus the
+//!                              # n-independent symbolic TCPA proof
+//! repro lint [<root>]          # source invariants (match-arm, hot-path
+//!                              # unwrap, sim hot-loop allocation rules)
 //! repro paula <file.paula>    # compile a PAULA program onto the TCPA
 //! repro all [--quick]         # everything above, in order
 //! ```
@@ -193,6 +198,48 @@ fn main() {
                 println!("{}", m.report());
             }
         }
+        "analyze" => {
+            let (names, n) = if args.flag("all") {
+                (WorkloadCatalog::builtin().names(), args.opt_usize("n", 8) as i64)
+            } else {
+                let name = args.positional.get(1).cloned().unwrap_or_else(|| {
+                    eprintln!("usage: repro analyze --all | repro analyze <name> <n>");
+                    std::process::exit(2);
+                });
+                let n = args
+                    .positional
+                    .get(2)
+                    .and_then(|v| v.parse::<i64>().ok())
+                    .unwrap_or(8);
+                (vec![name], n)
+            };
+            if !analyze(&names, n) {
+                std::process::exit(1);
+            }
+        }
+        "lint" => {
+            let root = args
+                .positional
+                .get(1)
+                .cloned()
+                .unwrap_or_else(|| "src".to_string());
+            match repro::analysis::lint::run(std::path::Path::new(&root)) {
+                Ok(issues) if issues.is_empty() => {
+                    println!("lint: clean ({root})");
+                }
+                Ok(issues) => {
+                    for i in &issues {
+                        eprintln!("{}", i.describe());
+                    }
+                    eprintln!("lint: {} issue(s)", issues.len());
+                    std::process::exit(1);
+                }
+                Err(e) => {
+                    eprintln!("lint failed: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
         "paula" => {
             let path = args.positional.get(1).expect("usage: repro paula <file>");
             let src = std::fs::read_to_string(path).expect("read paula file");
@@ -224,8 +271,8 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: repro <table1|table2|table3|fig6|fig7|fig8|asic|validate|serve|paula|all> \
-                 [--quick] [--bench NAME] [--n N] [--sizes a,b,c] \
+                "usage: repro <table1|table2|table3|fig6|fig7|fig8|asic|validate|serve|analyze|lint|paula|all> \
+                 [--quick] [--bench NAME] [--n N] [--sizes a,b,c] [--all] \
                  [--workers N] [--requests N|FILE.jsonl|-] [--trace mixed|NAME] \
                  [--listen ADDR|PATH] [--shards S] \
                  [--target tcpa|cgra|seq] [--compare] [--no-validate] \
@@ -234,6 +281,61 @@ fn main() {
             std::process::exit(2);
         }
     }
+}
+
+/// Static legality verdict for every named workload at size `n`, per
+/// registered backend (dispatched through the registry, never by target
+/// case analysis), plus the size-independent symbolic TCPA proof. Returns
+/// `false` when any hard verdict is ILLEGAL.
+fn analyze(names: &[String], n: i64) -> bool {
+    let catalog = WorkloadCatalog::builtin();
+    let registry = repro::backend::BackendRegistry::with_defaults();
+    let arch = TcpaArch::paper(4, 4);
+    let mut all_legal = true;
+    for name in names {
+        let Some(spec) = catalog.spec(name, n) else {
+            eprintln!(
+                "unknown workload `{name}` (want one of: {})",
+                catalog.names().join(", ")
+            );
+            return false;
+        };
+        let wl = spec.workload();
+        println!("== {name} (n={n}) ==");
+        for target in registry.targets() {
+            let Some(backend) = registry.get(target) else {
+                continue;
+            };
+            match backend.compile(&wl) {
+                Ok(mapped) => match mapped.analysis() {
+                    Some(rep) => {
+                        println!("{}:\n{}", target.label(), rep.summary());
+                        all_legal &= rep.is_legal();
+                    }
+                    None => println!(
+                        "{}:\n  no static schedule (reference backend) — nothing to verify\n",
+                        target.label()
+                    ),
+                },
+                Err(e) => {
+                    // a compile failure is not an illegality verdict: there
+                    // is no mapping to verify
+                    println!("{}:\n  compile failed at {}: {}\n", target.label(), e.stage, e.message);
+                }
+            }
+        }
+        let sym = repro::backend::tcpa::analyze_symbolic(&wl, &arch);
+        for (kernel, rep) in &sym {
+            println!("TCPA symbolic ({kernel}, all n):\n{}", rep.summary());
+            all_legal &= rep.is_legal();
+        }
+    }
+    if all_legal {
+        println!("analyze: every mapping statically legal");
+    } else {
+        eprintln!("analyze: ILLEGAL mapping detected (see verdicts above)");
+    }
+    all_legal
 }
 
 /// Serve the socket front-end until the process is killed: TCP

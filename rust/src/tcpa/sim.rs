@@ -307,6 +307,8 @@ pub fn simulate_with_plan_in(
     let mut max_chan = 0usize;
     let mut argv = [plan.dtype.zero(); MAX_ARGS];
 
+    // lint: begin-hot-loop — event merge loop; no allocation or clock reads
+    // allowed between the markers (enforced by `repro lint`)
     while let Some(Reverse(ev)) = heap.pop() {
         let tile = ev.tile as usize;
         let e = ev.eq as usize;
@@ -375,6 +377,7 @@ pub fn simulate_with_plan_in(
             heap.push(Reverse(s.key(plan, ev.stream)));
         }
     }
+    // lint: end-hot-loop
 
     let cycles = per_pe_done.iter().copied().max().unwrap_or(0);
     let first = per_pe_done.iter().copied().min().unwrap_or(0);

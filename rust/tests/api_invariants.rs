@@ -1,107 +1,44 @@
-//! Source-level API invariants, enforced grep-style over `src/`:
+//! Source-level API invariants — now a thin shim over the promoted
+//! `repro lint` pass ([`repro::analysis::lint`]), which enforces:
 //!
 //! * No `match` arm on `BenchId` outside `bench/workloads.rs` — the
 //!   benchmark set is open (catalog + specs); the shim's own registration
-//!   is the single allowed site. Mirrors PR 3's backend invariant:
+//!   is the single allowed site.
 //! * No `match` arm on `Target` outside `src/backend/` — targets are
 //!   dispatched through the registry, never by enum case analysis.
+//! * No `.unwrap()` / `.expect(` on the serve hot path
+//!   (`coordinator/{pool,net,wire,session}.rs`, non-test regions).
+//! * No clock reads or allocation inside the simulators' marked inner
+//!   loops (`// lint: begin-hot-loop` … `// lint: end-hot-loop`).
 //!
-//! The scan looks for `Enum::Variant =>` — the shape every match arm (and
-//! nothing else in this codebase) takes.
+//! The same pass runs standalone as `repro lint` (and in CI); this test
+//! keeps it wired into plain `cargo test`.
 
-use std::path::{Path, PathBuf};
+use repro::analysis::lint;
+use std::path::Path;
 
-fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
-    for entry in std::fs::read_dir(dir).expect("read src dir") {
-        let path = entry.expect("dir entry").path();
-        if path.is_dir() {
-            rs_files(&path, out);
-        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
-            out.push(path);
-        }
-    }
-}
-
-/// Does `src` contain `needle` followed (after an identifier and optional
-/// whitespace) by `=>` — i.e. a match arm on that enum?
-fn match_arms(src: &str, needle: &str) -> Vec<String> {
-    let mut found = Vec::new();
-    let bytes = src.as_bytes();
-    let mut from = 0;
-    while let Some(pos) = src[from..].find(needle) {
-        let start = from + pos;
-        let mut i = start + needle.len();
-        let ident_start = i;
-        while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_') {
-            i += 1;
-        }
-        let ident_end = i;
-        while i < bytes.len() && (bytes[i] as char).is_whitespace() {
-            i += 1;
-        }
-        if ident_end > ident_start && bytes[i..].starts_with(b"=>") {
-            let line = src[..start].matches('\n').count() + 1;
-            found.push(format!(
-                "line {line}: {}{}",
-                needle,
-                &src[ident_start..ident_end]
-            ));
-        }
-        from = start + needle.len();
-    }
-    found
-}
-
-fn scan(needle: &str, allowed: &dyn Fn(&Path) -> bool) -> Vec<String> {
+#[test]
+fn source_tree_passes_repro_lint() {
     let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
-    let mut files = Vec::new();
-    rs_files(&src, &mut files);
-    assert!(files.len() > 30, "scanner must see the whole tree");
-    let mut violations = Vec::new();
-    for f in files {
-        if allowed(&f) {
-            continue;
-        }
-        let text = std::fs::read_to_string(&f).expect("read source file");
-        for hit in match_arms(&text, needle) {
-            violations.push(format!("{}: {hit}", f.display()));
-        }
-    }
-    violations
-}
-
-#[test]
-fn no_match_on_benchid_outside_workloads_registration() {
-    let violations = scan("BenchId::", &|p: &Path| {
-        p.ends_with("bench/workloads.rs")
-    });
+    let issues = lint::run(&src).expect("lint scan");
     assert!(
-        violations.is_empty(),
-        "BenchId must not be matched on outside bench/workloads.rs \
-         (use the catalog / Workload.name instead):\n{}",
-        violations.join("\n")
-    );
-}
-
-#[test]
-fn no_match_on_target_outside_backend() {
-    let violations = scan("Target::", &|p: &Path| {
-        p.components().any(|c| c.as_os_str() == "backend")
-    });
-    assert!(
-        violations.is_empty(),
-        "Target must not be matched on outside src/backend/ \
-         (dispatch through the BackendRegistry instead):\n{}",
-        violations.join("\n")
+        issues.is_empty(),
+        "`repro lint` found {} issue(s):\n{}",
+        issues.len(),
+        issues
+            .iter()
+            .map(|i| i.describe())
+            .collect::<Vec<_>>()
+            .join("\n")
     );
 }
 
 #[test]
 fn scanner_detects_arms() {
-    // the scanner itself must be able to see a match arm, or the
-    // invariants above would vacuously pass
+    // the arm scanner must be able to see a match arm, or the invariants
+    // above would vacuously pass
     let sample = "match id {\n    BenchId::Gemm => 1,\n    _ => 2,\n}";
-    assert_eq!(match_arms(sample, "BenchId::").len(), 1);
-    assert!(match_arms("let x = BenchId::Gemm;", "BenchId::").is_empty());
-    assert!(match_arms("if id == BenchId::Gemm { }", "BenchId::").is_empty());
+    assert_eq!(lint::match_arms(sample, "BenchId::").len(), 1);
+    assert!(lint::match_arms("let x = BenchId::Gemm;", "BenchId::").is_empty());
+    assert!(lint::match_arms("if id == BenchId::Gemm { }", "BenchId::").is_empty());
 }

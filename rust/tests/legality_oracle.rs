@@ -1,0 +1,546 @@
+//! The agreement oracle for the static legality verifier (`analysis`):
+//!
+//! 1. **Legal leg** — every artifact the compilers produce must verify
+//!    legal, and the cycle-accurate simulators must agree: zero timing
+//!    violations, measured queue occupancy within the declared depths.
+//! 2. **Adversarial leg** — seeded mutations of λ, τ, II and FIFO depths
+//!    must be rejected by the verifier with the offending dependence edge
+//!    named, and the verdict's `observable` model must agree *exactly*
+//!    with the simulators' violation counters
+//!    (`runtime_legal() ⇔ counters == 0`). Counter-silent breakage
+//!    (RD-bound early reads, shallow FIFOs over unbounded sim queues) is
+//!    caught by the other two oracles: output correctness against the PRA
+//!    reference interpreter, and measured occupancy.
+//! 3. **Symbolic leg** — one n-independent proof covers every
+//!    instantiation with no per-size re-verification, and a poisoned
+//!    candidate is rejected by the proof while slipping through
+//!    `instantiate` (which re-checks only `d ≠ 0`) — exactly the gap the
+//!    static verifier exists to close.
+
+use repro::analysis::{verify_cgra, verify_symbolic, verify_tcpa_config, Rule};
+use repro::bench::workloads::{build, inputs, BenchId};
+use repro::cgra::arch::CgraArch;
+use repro::cgra::mapper::{map, MapOpts};
+use repro::cgra::sim as cgra_sim;
+use repro::frontend::dfg_gen::{generate, GenOpts};
+use repro::ir::affine::dot;
+use repro::ir::loopnest::ArrayData;
+use repro::tcpa::arch::TcpaArch;
+use repro::tcpa::config::{compile, compile_with, TcpaConfig};
+use repro::tcpa::registers::RegKind;
+use repro::tcpa::schedule::{alternative_groups, schedule_symbolic};
+use repro::tcpa::sim::{simulate, simulate_workload};
+
+const SIZES: [i64; 3] = [8, 12, 16];
+const SEED: u64 = 42;
+
+/// Deepest FD FIFO the binding declares (top-level and channel-interior).
+fn max_declared_fd(cfg: &TcpaConfig) -> usize {
+    cfg.binding
+        .sinks
+        .iter()
+        .map(|s| match &s.kind {
+            RegKind::Fd { depth, .. } => *depth,
+            RegKind::Channel { intra, .. } => match intra.as_ref() {
+                RegKind::Fd { depth, .. } => *depth,
+                _ => 0,
+            },
+            RegKind::Rd { .. } => 0,
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Recompute `iter_len` after a τ mutation (the scheduler's invariant).
+fn fix_iter_len(cfg: &mut TcpaConfig) {
+    cfg.sched.iter_len = cfg
+        .pra
+        .eqs
+        .iter()
+        .enumerate()
+        .map(|(e, eq)| cfg.sched.tau[e] + eq.op.latency())
+        .max()
+        .unwrap_or(0);
+}
+
+// ===================== 1. legal leg =========================================
+
+/// Every compiled TCPA kernel verifies legal, and the simulator agrees on
+/// all three runtime oracles: timing counters zero, FD occupancy within
+/// the declared depths, outputs matching the PRA reference interpreter.
+#[test]
+fn tcpa_compiled_artifacts_verify_legal_and_sim_agrees() {
+    let arch = TcpaArch::paper(4, 4);
+    let mut checked = 0usize;
+    for id in BenchId::ALL {
+        for n in SIZES {
+            let wl = build(id, n);
+            let ins = inputs(id, n, SEED);
+            let cfgs: Vec<TcpaConfig> = wl
+                .pras
+                .iter()
+                .map(|p| compile(p, &arch).unwrap_or_else(|e| panic!("{}: {e}", p.name)))
+                .collect();
+            for cfg in &cfgs {
+                let rep = verify_tcpa_config(cfg, &arch, &cfg.pra.name);
+                assert!(rep.is_legal(), "{} n={n}:\n{}", cfg.pra.name, rep.summary());
+                assert!(rep.runtime_legal(), "{} n={n}:\n{}", cfg.pra.name, rep.summary());
+                assert!(rep.n_deps > 0, "{} n={n}: no deps examined", cfg.pra.name);
+                checked += 1;
+            }
+            let run = simulate_workload(&cfgs, &arch, &ins).expect("io");
+            for (cfg, k) in cfgs.iter().zip(&run.kernels) {
+                assert_eq!(
+                    k.timing_violations, 0,
+                    "{} n={n}: sim disagrees with the static LEGAL verdict",
+                    cfg.pra.name
+                );
+                assert!(
+                    k.max_fd_occupancy <= max_declared_fd(cfg),
+                    "{} n={n}: occupancy {} exceeds declared FD depth {}",
+                    cfg.pra.name,
+                    k.max_fd_occupancy,
+                    max_declared_fd(cfg)
+                );
+            }
+        }
+    }
+    assert!(checked >= 15, "only {checked} kernels checked");
+}
+
+/// Every mapped CGRA stage verifies legal and the simulator counts zero
+/// hazards on it.
+#[test]
+fn cgra_mapped_stages_verify_legal_and_sim_agrees() {
+    let arch = CgraArch::classical(4, 4);
+    let opts = MapOpts::negotiated();
+    let mut checked = 0usize;
+    for id in BenchId::ALL {
+        let wl = build(id, 8);
+        let mut ins = inputs(id, 8, SEED);
+        for nest in &wl.stages {
+            let gen = generate(nest, &GenOpts::flat()).expect("generate");
+            let m = map(&gen.dfg, &arch, &gen.inter_iteration_hazards, &opts)
+                .unwrap_or_else(|e| panic!("{}: {e}", gen.dfg.name));
+            let rep = verify_cgra(
+                &gen.dfg,
+                &m,
+                &gen.inter_iteration_hazards,
+                arch.n_pes(),
+                arch.mem_pes().len(),
+                &gen.dfg.name,
+            );
+            assert!(rep.is_legal(), "{}:\n{}", gen.dfg.name, rep.summary());
+            assert!(rep.runtime_legal(), "{}:\n{}", gen.dfg.name, rep.summary());
+            assert!(rep.stages[0].min_ii <= rep.stages[0].achieved_ii);
+            let r = cgra_sim::simulate(&gen.dfg, &m, &ins);
+            assert_eq!(
+                r.timing_hazards, 0,
+                "{}: sim disagrees with the static LEGAL verdict",
+                gen.dfg.name
+            );
+            // chain stage outputs into the next stage's inputs
+            ins.extend(r.outputs);
+            checked += 1;
+        }
+    }
+    assert!(checked >= 6, "only {checked} stages checked");
+}
+
+// ===================== 2. adversarial leg (TCPA) ============================
+
+/// A producer pushed one cycle past its queue-bound inter-iteration
+/// consumer: the intra-tile inequality breaks, the edge is named, and the
+/// simulator's violation counter agrees.
+#[test]
+fn tcpa_tau_mutant_rejected_and_counted() {
+    let arch = TcpaArch::paper(4, 4);
+    let wl = build(BenchId::Gemm, 8);
+    let ins = inputs(BenchId::Gemm, 8, SEED);
+    let base = compile(&wl.pras[0], &arch).expect("compile");
+    assert_eq!(
+        simulate(&base, &arch, &ins).expect("io").timing_violations,
+        0
+    );
+
+    let mut cfg = base.clone();
+    // A d ≠ 0 dependence with (i) a queue-bound sink, so the late value
+    // moves through a FIFO the counter watches, and (ii) an instance that
+    // stays inside one tile, so the λʲ slack is actually exercised.
+    let dep = cfg
+        .pra
+        .dependences()
+        .into_iter()
+        .find(|dep| {
+            !dep.is_intra_iteration()
+                && dep.d.iter().zip(&cfg.part.tile).all(|(&x, &t)| x < t)
+                && cfg.binding.sinks.iter().any(|s| {
+                    s.var == dep.var
+                        && s.d == dep.d
+                        && s.to_eq == dep.to
+                        && !matches!(s.kind, RegKind::Rd { .. })
+                })
+        })
+        .expect("gemm has a queue-bound local inter-iteration dep");
+    let lat = cfg.pra.eqs[dep.from].op.latency() as i64;
+    let slack = dot(&cfg.sched.lambda_j, &dep.d) + cfg.sched.tau[dep.to] as i64
+        - (cfg.sched.tau[dep.from] as i64 + lat);
+    assert!(slack >= 0, "compiled schedule violates its own inequality");
+    // Keep the original binding: rebinding would re-derive FIFO depths
+    // around the mutation and could silently re-legalize it.
+    cfg.sched.tau[dep.from] += slack as u32 + 1;
+    fix_iter_len(&mut cfg);
+
+    let rep = verify_tcpa_config(&cfg, &arch, "tau-mutant");
+    assert!(!rep.is_legal(), "mutant accepted:\n{}", rep.summary());
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| v.edge.from == dep.from && v.edge.to == dep.to),
+        "offending edge not named:\n{}",
+        rep.summary()
+    );
+    let r = simulate(&cfg, &arch, &ins).expect("io");
+    assert!(r.timing_violations > 0, "sim missed the seeded hazard");
+    assert_eq!(rep.runtime_legal(), r.timing_violations == 0);
+}
+
+/// A wavefront offset decremented below the tight bound: the λᵏ
+/// inequality breaks and the boundary word arrives late on the channel.
+#[test]
+fn tcpa_lambda_k_mutant_rejected_and_counted() {
+    let arch = TcpaArch::paper(4, 4);
+    let wl = build(BenchId::Gemm, 8);
+    let ins = inputs(BenchId::Gemm, 8, SEED);
+    let mut cfg = compile(&wl.pras[0], &arch).expect("compile");
+    // realize() sets λᵏ_m to exactly the max need over crossing deps, so
+    // any positive component is tight and −1 must violate.
+    let m = cfg
+        .sched
+        .lambda_k
+        .iter()
+        .position(|&l| l > 0)
+        .expect("gemm on 4x4 has a tile-crossing dimension");
+    cfg.sched.lambda_k[m] -= 1;
+
+    let rep = verify_tcpa_config(&cfg, &arch, "lambda-k-mutant");
+    assert!(!rep.is_legal(), "mutant accepted:\n{}", rep.summary());
+    assert!(
+        rep.violations.iter().any(|v| v.rule == Rule::Wavefront),
+        "wavefront rule not flagged:\n{}",
+        rep.summary()
+    );
+    let r = simulate(&cfg, &arch, &ins).expect("io");
+    assert!(r.timing_violations > 0, "sim missed the late channel word");
+    assert_eq!(rep.runtime_legal(), r.timing_violations == 0);
+}
+
+/// FD FIFOs shrunk below the binder's in-flight window: statically
+/// illegal, *counter-silent* (the simulator's queues are unbounded), and
+/// caught at runtime only by the occupancy measurement — the case that
+/// motivates a static verifier in the first place.
+#[test]
+fn tcpa_fifo_mutant_rejected_counter_silent_occupancy_caught() {
+    let arch = TcpaArch::paper(4, 4);
+    // Find a kernel whose baseline occupancy leaves room to shrink while
+    // keeping every depth >= 1 (the plan lowering's invariant).
+    let (id, cfg0, occ) = BenchId::ALL
+        .iter()
+        .find_map(|&id| {
+            let wl = build(id, 8);
+            let cfg = compile(&wl.pras[0], &arch).ok()?;
+            let r = simulate(&cfg, &arch, &inputs(id, 8, SEED)).ok()?;
+            (r.max_fd_occupancy >= 2).then_some((id, cfg, r.max_fd_occupancy))
+        })
+        .expect("some benchmark reaches FD occupancy >= 2");
+    let ins = inputs(id, 8, SEED);
+
+    let mut cfg = cfg0.clone();
+    let target = occ - 1;
+    let mut shrunk = false;
+    for s in &mut cfg.binding.sinks {
+        let depth = match &mut s.kind {
+            RegKind::Fd { depth, .. } => Some(depth),
+            RegKind::Channel { intra, .. } => match intra.as_mut() {
+                RegKind::Fd { depth, .. } => Some(depth),
+                _ => None,
+            },
+            RegKind::Rd { .. } => None,
+        };
+        if let Some(depth) = depth {
+            if *depth > target {
+                *depth = target;
+                shrunk = true;
+            }
+        }
+    }
+    assert!(shrunk, "occupancy {occ} implies some FIFO deeper than {target}");
+
+    let rep = verify_tcpa_config(&cfg, &arch, "fifo-mutant");
+    assert!(!rep.is_legal(), "mutant accepted:\n{}", rep.summary());
+    let fifo_viol = rep
+        .violations
+        .iter()
+        .find(|v| v.rule == Rule::FifoDepth)
+        .expect("fifo-depth rule flagged");
+    assert!(!fifo_viol.observable, "unbounded queues cannot underflow");
+
+    let r = simulate(&cfg, &arch, &ins).expect("io");
+    assert_eq!(r.timing_violations, 0, "shallow FIFOs are counter-silent");
+    assert_eq!(rep.runtime_legal(), r.timing_violations == 0);
+    assert!(
+        r.max_fd_occupancy > target,
+        "occupancy oracle must catch what the counter cannot"
+    );
+}
+
+/// II bumped with λʲ recomputed but λᵏ left stale: the wavefront need
+/// grows with λʲ, so the stale offsets are now too small — rejected
+/// statically, counted at runtime.
+#[test]
+fn tcpa_ii_mutant_with_stale_wavefront_rejected_and_counted() {
+    let arch = TcpaArch::paper(4, 4);
+    let wl = build(BenchId::Gemm, 8);
+    let ins = inputs(BenchId::Gemm, 8, SEED);
+    let mut cfg = compile(&wl.pras[0], &arch).expect("compile");
+    assert!(
+        cfg.sched.lambda_k.iter().any(|&l| l > 0),
+        "needs a crossing dim"
+    );
+    cfg.sched.ii += 1;
+    // λʲ must stay the lexicographic tile scan of the new II (the plan
+    // lowering asserts exactly this); λᵏ is deliberately left stale.
+    let mut stride = cfg.sched.ii as i64;
+    for k in (0..cfg.part.tile.len()).rev() {
+        cfg.sched.lambda_j[k] = stride;
+        stride *= cfg.part.tile[k];
+    }
+
+    let rep = verify_tcpa_config(&cfg, &arch, "ii-mutant");
+    assert!(!rep.is_legal(), "mutant accepted:\n{}", rep.summary());
+    assert!(
+        rep.violations.iter().any(|v| v.rule == Rule::Wavefront),
+        "stale wavefront not flagged:\n{}",
+        rep.summary()
+    );
+    let r = simulate(&cfg, &arch, &ins).expect("io");
+    assert!(r.timing_violations > 0, "sim missed the stale wavefront");
+    assert_eq!(rep.runtime_legal(), r.timing_violations == 0);
+}
+
+/// Benign mutations — extra wavefront slack, deeper FIFOs — must NOT be
+/// rejected (no false positives), and the simulator stays clean on them.
+#[test]
+fn tcpa_benign_mutants_stay_legal() {
+    let arch = TcpaArch::paper(4, 4);
+    let wl = build(BenchId::Gemm, 8);
+    let ins = inputs(BenchId::Gemm, 8, SEED);
+    let base = compile(&wl.pras[0], &arch).expect("compile");
+    let base_out = simulate(&base, &arch, &ins).expect("io").outputs;
+
+    // extra wavefront slack: later tile starts, same values
+    let mut slow = base.clone();
+    for l in slow.sched.lambda_k.iter_mut() {
+        *l += 5;
+    }
+    let rep = verify_tcpa_config(&slow, &arch, "benign-lambda-k");
+    assert!(rep.is_legal(), "false positive:\n{}", rep.summary());
+    let r = simulate(&slow, &arch, &ins).expect("io");
+    assert_eq!(r.timing_violations, 0);
+    assert_eq!(rep.runtime_legal(), r.timing_violations == 0);
+    assert_eq!(r.outputs, base_out, "extra slack changed values");
+
+    // deeper FIFOs: strictly more headroom
+    let mut deep = base.clone();
+    for s in &mut deep.binding.sinks {
+        if let RegKind::Fd { depth, .. } = &mut s.kind {
+            *depth += 3;
+        }
+    }
+    let rep = verify_tcpa_config(&deep, &arch, "benign-fd");
+    assert!(rep.is_legal(), "false positive:\n{}", rep.summary());
+    let r = simulate(&deep, &arch, &ins).expect("io");
+    assert_eq!(r.timing_violations, 0);
+    assert_eq!(r.outputs, base_out, "deeper FIFOs changed values");
+}
+
+// ===================== 2. adversarial leg (CGRA) ============================
+
+/// A CGRA producer delayed onto its consumer's issue cycle: the flow
+/// inequality breaks in the counter-observable window (producer sequenced
+/// first in the (τ, v) slot order), the edge is named, and the simulator's
+/// hazard counter agrees. The sibling benign bump (exactly the available
+/// slack) must stay legal and hazard-free with identical outputs.
+#[test]
+fn cgra_tau_mutants_agree_with_hazard_counter() {
+    let arch = CgraArch::classical(4, 4);
+    let opts = MapOpts::negotiated();
+    let wl = build(BenchId::Gemm, 8);
+    let ins = inputs(BenchId::Gemm, 8, SEED);
+    let gen = generate(&wl.stages[0], &GenOpts::flat()).expect("generate");
+    let hz = &gen.inter_iteration_hazards;
+    let m = map(&gen.dfg, &arch, hz, &opts).expect("map");
+    let base = cgra_sim::simulate(&gen.dfg, &m, &ins);
+    assert_eq!(base.timing_hazards, 0);
+
+    // ---- illegal: land the producer on the consumer's cycle ----
+    // A same-iteration edge with src < dst issues the producer first in
+    // the (τ, v)-sorted slot when their cycles collide, so the late read
+    // is deterministically counter-visible.
+    let edge = gen
+        .dfg
+        .edges()
+        .iter()
+        .find(|e| e.dist == 0 && e.src < e.dst)
+        .cloned()
+        .expect("gemm DFG has a forward same-iteration edge");
+    let lat = gen.dfg.nodes[edge.src].kind.latency();
+    let slack = m.tau[edge.dst] - m.tau[edge.src] - lat;
+    let mut m2 = m.clone();
+    m2.tau[edge.src] += slack + lat; // τ(src) = τ(dst): violation = latency
+    m2.sched_len = m2.sched_len.max(m2.tau[edge.src] + lat);
+    let rep = verify_cgra(
+        &gen.dfg,
+        &m2,
+        hz,
+        arch.n_pes(),
+        arch.mem_pes().len(),
+        "cgra-tau-mutant",
+    );
+    assert!(!rep.is_legal(), "mutant accepted:\n{}", rep.summary());
+    assert!(
+        rep.violations
+            .iter()
+            .any(|v| v.edge.from == edge.src && v.edge.to == edge.dst && v.observable),
+        "offending edge not named observable:\n{}",
+        rep.summary()
+    );
+    let r = cgra_sim::simulate(&gen.dfg, &m2, &ins);
+    assert!(r.timing_hazards > 0, "sim missed the seeded hazard");
+    assert_eq!(rep.runtime_legal(), r.timing_hazards == 0);
+
+    // ---- benign: consume exactly the minimum slack of some node ----
+    let edges = repro::analysis::dfg_dep_edges(&gen.dfg, hz);
+    let (src, min_slack) = (0..gen.dfg.n_nodes())
+        .find_map(|v| {
+            let s = edges
+                .iter()
+                .filter(|e| e.from == v)
+                .map(|e| {
+                    m.tau[e.to] as i64 + m.ii as i64 * e.d[0] - (m.tau[v] as i64 + e.latency)
+                })
+                .min()?;
+            (s >= 1).then_some((v, s))
+        })
+        .expect("some node has positive outgoing slack");
+    let mut m3 = m.clone();
+    m3.tau[src] += min_slack as u32;
+    m3.sched_len = m3
+        .sched_len
+        .max(m3.tau[src] + gen.dfg.nodes[src].kind.latency());
+    let rep = verify_cgra(
+        &gen.dfg,
+        &m3,
+        hz,
+        arch.n_pes(),
+        arch.mem_pes().len(),
+        "cgra-benign",
+    );
+    assert!(rep.is_legal(), "false positive:\n{}", rep.summary());
+    let r = cgra_sim::simulate(&gen.dfg, &m3, &ins);
+    assert_eq!(r.timing_hazards, 0);
+    assert_eq!(r.outputs, base.outputs, "slack-only shift changed values");
+}
+
+// ===================== 3. symbolic leg ======================================
+
+/// One symbolic proof covers every instantiation: verify once per shape,
+/// then instantiate at several sizes with *no* per-n re-verification and
+/// confirm the simulator and the PRA reference agree at each.
+#[test]
+fn symbolic_proof_covers_all_instantiations() {
+    let arch = TcpaArch::paper(4, 4);
+    let shape = build(BenchId::Gemm, 8);
+    let sym = schedule_symbolic(&shape.pras[0], &arch);
+    // the ONE verification for this kernel shape
+    let rep = verify_symbolic(&shape.pras[0], &sym);
+    assert!(rep.is_legal(), "{}", rep.summary());
+    assert!(rep.proven_ii.is_some(), "{}", rep.summary());
+
+    for n in SIZES {
+        // deliberately no verify_* call in this loop — the symbolic proof
+        // above already covers this instantiation
+        let wl = build(BenchId::Gemm, n);
+        let ins = inputs(BenchId::Gemm, n, SEED);
+        let cfg = compile_with(&wl.pras[0], &arch, &sym).expect("instantiate");
+        let r = simulate(&cfg, &arch, &ins).expect("io");
+        assert_eq!(r.timing_violations, 0, "n={n}");
+        let golden = wl.pras[0].execute(&ins);
+        for (name, vals) in &r.outputs {
+            assert_eq!(golden.get(name), Some(vals), "n={n} array {name}");
+        }
+    }
+}
+
+/// A poisoned symbolic candidate (a producer scheduled after its
+/// zero-distance consumer) is rejected by the shape proof with the edge
+/// named — while `instantiate` accepts it (it re-checks only `d ≠ 0`) and
+/// the simulator's counter stays silent (the value is RD-bound). Only the
+/// output oracle catches it at runtime; the static proof catches it
+/// before anything runs.
+#[test]
+fn symbolic_mutant_rejected_by_proof_but_silent_at_runtime() {
+    let arch = TcpaArch::paper(4, 4);
+    let wl = build(BenchId::Gemm, 8);
+    let pra = &wl.pras[0];
+    let ins = inputs(BenchId::Gemm, 8, SEED);
+    let deps = pra.dependences();
+    let (group_of, _) = alternative_groups(pra);
+
+    // A cross-group d = 0 dependence whose producer has no d ≠ 0 uses:
+    // mutating its τ breaks only the intra-iteration ordering, which
+    // instantiate() never re-checks.
+    let dep = deps
+        .iter()
+        .find(|d| {
+            d.is_intra_iteration()
+                && d.from != d.to
+                && group_of[d.from] != group_of[d.to]
+                && !deps
+                    .iter()
+                    .any(|o| o.from == d.from && !o.is_intra_iteration())
+        })
+        .expect("gemm has a pure intra-iteration producer");
+
+    let mut bad = schedule_symbolic(pra, &arch);
+    bad.candidates.truncate(1);
+    let lat = pra.eqs[dep.from].op.latency();
+    let p = &mut bad.candidates[0];
+    p.tau[dep.from] = p.tau[dep.to] + 1; // producer now after its consumer
+    p.iter_len = p.iter_len.max(p.tau[dep.from] + lat);
+
+    let rep = verify_symbolic(pra, &bad);
+    assert!(!rep.is_legal(), "poisoned candidate accepted:\n{}", rep.summary());
+    assert!(
+        rep.candidates[0]
+            .violations
+            .iter()
+            .any(|v| v.edge.from == dep.from && v.edge.to == dep.to),
+        "offending edge not named:\n{}",
+        rep.summary()
+    );
+
+    // instantiate() only replays the d ≠ 0 half, so the poison compiles…
+    let cfg = compile_with(pra, &arch, &bad).expect("realize re-checks only d != 0");
+    let r = simulate(&cfg, &arch, &ins).expect("io");
+    // …and the freshly rebound d = 0 sink is RD-bound: counter-silent.
+    assert_eq!(r.timing_violations, 0, "expected counter-silent breakage");
+    // The output oracle is what catches it at runtime.
+    let golden: ArrayData = pra.execute(&ins);
+    assert!(
+        r.outputs
+            .iter()
+            .any(|(name, vals)| golden.get(name).is_some_and(|g| g != vals)),
+        "stale RD read did not corrupt any output"
+    );
+}
