@@ -1,0 +1,82 @@
+//! Bench: the fault plane's price tags. Three questions an operator asks
+//! before turning the plane on: what does a spare-aware recompile cost
+//! relative to the healthy compile it replaces (per target — the CGRA
+//! re-places on the same grid, the TCPA re-tiles the surviving sub-array);
+//! what is the redundancy tax of DMR/TMR voting on the serve path; and how
+//! long is the full fail-stop recovery arc (quarantine → invalidate →
+//! recompile under the mask → serve). Writes `BENCH_faults.json`
+//! (name → ns/iter) so the trajectory stays machine-diffable across PRs
+//! (EXPERIMENTS.md §BENCH_faults). Everything here uses the unconditional
+//! mask/voting plumbing, so the bench runs identically with and without
+//! `--features fault-injection`.
+
+mod common;
+
+use repro::backend::{BackendRegistry, CancelToken, Target};
+use repro::bench::spec::WorkloadCatalog;
+use repro::coordinator::{Redundancy, Request, Session};
+use repro::faults::FaultMask;
+
+fn main() {
+    let mut report = common::JsonReport::new("faults-v1");
+    let iters = common::iters(30);
+    let registry = BackendRegistry::with_defaults();
+    let catalog = WorkloadCatalog::builtin();
+    let cancel = CancelToken::none();
+    let mask = FaultMask::healthy().with_failed_pe(5);
+
+    // --- spare-aware recompile vs the healthy compile it replaces ---
+    for (target, n) in [(Target::Tcpa, 4i64), (Target::Cgra, 8)] {
+        let backend = registry.get(target).expect("array backend registered");
+        let spec = catalog.spec("gemm", n).expect("builtin");
+        let wl = spec.workload();
+        let name = format!("faults/{}/compile-healthy", target.name());
+        let per = common::bench(&name, iters, || {
+            backend.compile(&wl).expect("healthy compile");
+        });
+        report.record(&name, per, None);
+        let name = format!("faults/{}/compile-masked", target.name());
+        let per = common::bench(&name, iters, || {
+            backend
+                .compile_masked_cancellable(&wl, &mask, &cancel)
+                .expect("masked compile");
+        });
+        report.record(&name, per, None);
+    }
+
+    // --- redundancy tax: none vs DMR vs TMR on the serve path ---
+    // distinct seeds defeat the exec-report memo, so every iteration pays
+    // its legs' full simulations — the honest per-request comparison
+    for red in [Redundancy::None, Redundancy::Dmr, Redundancy::Tmr] {
+        let mut session = Session::new();
+        let mut id = 0u64;
+        let name = format!("faults/serve/{}", red.name());
+        let per = common::bench(&name, iters, || {
+            id += 1;
+            let r = session.handle(
+                &Request::named(id, "gemm", 8, Target::Cgra, 1, false, id)
+                    .with_redundancy(red),
+            );
+            assert!(r.error.is_none(), "{:?}", r.error);
+        });
+        report.record(&name, per, None);
+    }
+
+    // --- the fail-stop recovery arc, cold caches each iteration: serve
+    //     healthy, fail a PE, re-serve on the re-tiled survivors ---
+    let name = "faults/remap/fail-stop-to-served";
+    let per = common::bench(name, iters, || {
+        let mut session = Session::new();
+        let healthy = session.handle(&Request::named(1, "gemm", 4, Target::Tcpa, 1, false, 9));
+        assert!(healthy.error.is_none(), "{:?}", healthy.error);
+        session.set_fault_mask(Target::Tcpa, FaultMask::healthy().with_failed_pe(5));
+        let remapped = session.handle(&Request::named(2, "gemm", 4, Target::Tcpa, 1, false, 9));
+        assert!(remapped.error.is_none(), "{:?}", remapped.error);
+    });
+    report.record(name, per, None);
+
+    report
+        .write("BENCH_faults.json")
+        .expect("write BENCH_faults.json");
+    println!("\nwrote BENCH_faults.json");
+}

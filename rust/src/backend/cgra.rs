@@ -201,45 +201,71 @@ impl Backend for CgraBackend {
         wl: &Workload,
         cancel: &CancelToken,
     ) -> Result<Box<dyn Mapped>, CompileError> {
-        let spec = self.spec_for(wl);
-        let n_pes = spec.arch.n_pes();
-        let row = map_cgra_row_cancellable(wl, &spec, cancel);
-        let stats = stats_of(&row, wl.n);
-        match row.error.clone() {
-            Some(message) => Err(CompileError {
-                stage: "CGRA mapping",
-                message,
+        compile_spec(self.spec_for(wl), wl, cancel)
+    }
+
+    fn compile_masked_cancellable(
+        &self,
+        wl: &Workload,
+        mask: &crate::faults::FaultMask,
+        cancel: &CancelToken,
+    ) -> Result<Box<dyn Mapped>, CompileError> {
+        // operation-granular recovery: same grid, the mapper places and
+        // routes around the masked-out PEs/links (paper Fig. 1's spatial
+        // view makes spare capacity visible per operation slot)
+        let mut spec = self.spec_for(wl);
+        spec.arch = spec.arch.masked(mask);
+        compile_spec(spec, wl, cancel)
+    }
+}
+
+/// The shared compile pipeline behind both the healthy and the masked entry
+/// points: map every stage against `spec.arch` (which may carry a fault
+/// mask), hoist simulator plans and read-sets, and statically verify.
+fn compile_spec(
+    spec: RowSpec,
+    wl: &Workload,
+    cancel: &CancelToken,
+) -> Result<Box<dyn Mapped>, CompileError> {
+    let n_pes = spec.arch.n_pes();
+    let row = map_cgra_row_cancellable(wl, &spec, cancel);
+    let stats = stats_of(&row, wl.n);
+    match row.error.clone() {
+        Some(message) => Err(CompileError {
+            stage: "CGRA mapping",
+            message,
+            stats,
+        }),
+        None => {
+            // plan hoisting: per-stage issue orders / slot cursors and
+            // the inter-stage read-set are derived once here, so every
+            // execute() replays them without recomputation
+            let plans: Vec<cgra_sim::StagePlan> = row
+                .mappings
+                .iter()
+                .map(|(dfg, m)| cgra_sim::StagePlan::new(dfg, m))
+                .collect();
+            let read_later = read_sets(&row);
+            // static legality: prove every stage's modulo schedule
+            // respects its dependence edges (data + ordering + hazard)
+            // before the artifact can ever reach a simulator. Bank space =
+            // live memory PEs, matching the mapper's bank assignment.
+            let n_mem_pes = spec.arch.live_mem_pes().len();
+            let analysis = AnalysisReport::merge(row.mappings.iter().zip(&row.hazards).map(
+                |((dfg, m), hz)| {
+                    analysis::verify_cgra(dfg, m, hz, n_pes, n_mem_pes, &dfg.name)
+                },
+            ));
+            Ok(Box::new(CgraMapped {
+                row,
+                plans,
+                read_later,
                 stats,
-            }),
-            None => {
-                // plan hoisting: per-stage issue orders / slot cursors and
-                // the inter-stage read-set are derived once here, so every
-                // execute() replays them without recomputation
-                let plans: Vec<cgra_sim::StagePlan> = row
-                    .mappings
-                    .iter()
-                    .map(|(dfg, m)| cgra_sim::StagePlan::new(dfg, m))
-                    .collect();
-                let read_later = read_sets(&row);
-                // static legality: prove every stage's modulo schedule
-                // respects its dependence edges (data + ordering + hazard)
-                // before the artifact can ever reach a simulator
-                let n_mem_pes = spec.arch.mem_pes().len();
-                let analysis = AnalysisReport::merge(row.mappings.iter().zip(&row.hazards).map(
-                    |((dfg, m), hz)| {
-                        analysis::verify_cgra(dfg, m, hz, n_pes, n_mem_pes, &dfg.name)
-                    },
-                ));
-                Ok(Box::new(CgraMapped {
-                    row,
-                    plans,
-                    read_later,
-                    stats,
-                    n_pes,
-                    n_mem_pes,
-                    analysis,
-                }))
-            }
+                n_pes,
+                n_mem_pes,
+                faults: spec.arch.faults.clone(),
+                analysis,
+            }))
         }
     }
 }
@@ -267,6 +293,9 @@ pub struct CgraMapped {
     stats: MappedStats,
     n_pes: usize,
     n_mem_pes: usize,
+    /// The arch's fault mask at compile time — its SEU rate arms the
+    /// simulator's injection sites on [`Mapped::execute_leg`].
+    faults: crate::faults::FaultMask,
     analysis: AnalysisReport,
 }
 
@@ -318,6 +347,10 @@ impl Mapped for CgraMapped {
     }
 
     fn execute(&self, inputs: &ArrayData, batch: u64) -> Result<ExecReport, String> {
+        self.execute_leg(inputs, batch, 0)
+    }
+
+    fn execute_leg(&self, inputs: &ArrayData, batch: u64, leg: u64) -> Result<ExecReport, String> {
         let single = self.row.latency.ok_or_else(|| {
             format!(
                 "CGRA mapping for {} (N={}) reports no pipelined latency",
@@ -325,17 +358,31 @@ impl Mapped for CgraMapped {
                 self.stats.n
             )
         })?;
+        let inj = if leg == super::CLEAN_LEG {
+            crate::faults::SeuInjection::off()
+        } else {
+            crate::faults::SeuInjection::of(&self.faults, leg)
+        };
         let mut pool = inputs.clone();
         let mut outs = ArrayData::new();
         let mut issued = 0u64;
+        let mut flips = 0u64;
         // one arena per call, recycled across stages
         let mut scratch = cgra_sim::SimScratch::new();
         for (i, (dfg, m)) in self.row.mappings.iter().enumerate() {
-            let r = cgra_sim::simulate_with_plan(dfg, m, &self.plans[i], &mut scratch, &pool);
+            let r = cgra_sim::simulate_with_plan_injected(
+                dfg,
+                m,
+                &self.plans[i],
+                &mut scratch,
+                &pool,
+                inj,
+            );
             if r.timing_hazards > 0 {
                 return Err(self.hazard_error(i, r.timing_hazards));
             }
             issued += r.issued_ops;
+            flips += r.seu_flips;
             for (k, v) in r.outputs {
                 // clone into the pool only when a later stage reads it
                 if self.read_later[i].contains(&k) {
@@ -352,6 +399,7 @@ impl Mapped for CgraMapped {
             occupancy: occupancy(issued, self.n_pes, single),
             outputs: outs,
             detail: format!("CGRA ({}, II={})", self.row.arch, self.row.ii.unwrap_or(0)),
+            seu_flips: flips,
         })
     }
 }
@@ -394,6 +442,41 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn masked_compile_places_around_dead_pes_and_matches_healthy_outputs() {
+        use crate::faults::FaultMask;
+        let wl = build(BenchId::Gemm, 8);
+        let b = CgraBackend::morpher(4, 4);
+        let healthy = b.compile(&wl).expect("healthy gemm maps");
+        // a dead interior PE and a dead link: the mapper must place and
+        // route around both on the same 4x4 grid
+        let mask = FaultMask::healthy().with_failed_pe(5).with_failed_link(1, 2);
+        let masked = b
+            .compile_masked_cancellable(&wl, &mask, &CancelToken::none())
+            .expect("masked gemm still maps");
+        assert_ne!(
+            masked.stats().arch,
+            healthy.stats().arch,
+            "masked artifacts must not alias healthy ones"
+        );
+        assert!(
+            masked.analysis().expect("report").is_legal(),
+            "the remapped schedule must prove legal against the masked arch"
+        );
+        let ins = inputs(BenchId::Gemm, 8, 3);
+        let a = healthy.execute(&ins, 1).expect("healthy run");
+        let m = masked.execute(&ins, 1).expect("masked run");
+        assert_eq!(a.outputs, m.outputs, "fail-stop remap is bit-identical");
+        assert_eq!(m.seu_flips, 0, "a structural mask injects nothing");
+        // a dead memory PE shrinks the bank space but gemm still fits
+        let mem_dead = FaultMask::healthy().with_failed_pe(0);
+        let remapped = b
+            .compile_masked_cancellable(&wl, &mem_dead, &CancelToken::none())
+            .expect("re-banked over surviving memory PEs");
+        let r = remapped.execute(&ins, 1).expect("re-banked run");
+        assert_eq!(r.outputs, a.outputs);
     }
 
     #[test]

@@ -260,6 +260,10 @@ pub struct ExecReport {
     /// Target-specific human-readable run description, e.g.
     /// `CGRA (4x4 classical, II=4)` — what `repro validate` prints.
     pub detail: String,
+    /// Single-event upsets the simulator injected into this run (0 unless
+    /// the artifact's arch carries an SEU rate and the build has the
+    /// `fault-injection` feature).
+    pub seu_flips: u64,
 }
 
 /// Average PE utilization; 0 when the run is degenerate.
@@ -270,6 +274,13 @@ pub(crate) fn occupancy(issued_ops: u64, n_pes: usize, latency: u64) -> f64 {
         issued_ops as f64 / (n_pes as f64 * latency as f64)
     }
 }
+
+/// Redundancy-leg index that forces SEU injection *off* for one execution,
+/// whatever the artifact's arch mask says. The session's voting plane runs
+/// every non-victim leg of a redundant group under this leg — the standard
+/// single-event assumption (at most one leg of a voting group is struck)
+/// that makes DMR detection and TMR correction well-defined.
+pub const CLEAN_LEG: u64 = u64::MAX;
 
 /// A compiled, immutable, cheaply shareable artifact. The coordinator's
 /// compile cache stores these behind `Arc<dyn Mapped>`; workers clone the
@@ -282,6 +293,16 @@ pub trait Mapped: Send + Sync + std::fmt::Debug {
     /// (FIFO underflows, operands consumed before arrival) and artifacts
     /// with no pipelined latency surface as `Err`, never as a zero.
     fn execute(&self, inputs: &ArrayData, batch: u64) -> Result<ExecReport, String>;
+
+    /// [`Mapped::execute`] as redundancy leg `leg`: backends with SEU
+    /// injection hash the leg into every strike decision so DMR/TMR legs of
+    /// one request corrupt at different sites, and treat [`CLEAN_LEG`] as
+    /// injection-off. The default ignores the leg (correct for backends
+    /// without injection, like the sequential reference).
+    fn execute_leg(&self, inputs: &ArrayData, batch: u64, leg: u64) -> Result<ExecReport, String> {
+        let _ = leg;
+        self.execute(inputs, batch)
+    }
 
     /// The static legality report attached at compile time (see
     /// [`crate::analysis`]): verdict, violated edges with source equations,
@@ -337,6 +358,23 @@ pub trait Backend: Send + Sync {
     ) -> Result<Box<dyn Mapped>, CompileError> {
         let _ = cancel;
         self.compile(wl)
+    }
+
+    /// [`Backend::compile_cancellable`] against this backend's arch under a
+    /// [`crate::faults::FaultMask`]: fail-stop PEs and dead links are
+    /// excluded from placement and routing (CGRA) or the array is re-tiled
+    /// over the surviving sub-array (TCPA), and the mask's SEU rate arms the
+    /// simulator's injection sites. The default ignores the mask — correct
+    /// for backends without spatial structure (the sequential reference has
+    /// a single abstract PE; masking it is meaningless).
+    fn compile_masked_cancellable(
+        &self,
+        wl: &Workload,
+        mask: &crate::faults::FaultMask,
+        cancel: &CancelToken,
+    ) -> Result<Box<dyn Mapped>, CompileError> {
+        let _ = mask;
+        self.compile_cancellable(wl, cancel)
     }
 
     /// Compile the size-independent half of the pipeline once per kernel

@@ -104,6 +104,7 @@ impl Mapped for SeqMapped {
             occupancy: 1.0,
             outputs,
             detail: format!("SEQ (single PE, {single} ops/invocation)"),
+            seu_flips: 0,
         })
     }
 }

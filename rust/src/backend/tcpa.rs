@@ -185,6 +185,38 @@ impl Backend for TcpaBackend {
         mapped_of(row, stats, &self.arch)
     }
 
+    fn compile_masked_cancellable(
+        &self,
+        wl: &Workload,
+        mask: &crate::faults::FaultMask,
+        cancel: &CancelToken,
+    ) -> Result<Box<dyn Mapped>, CompileError> {
+        // iteration-granular recovery: retire the failed rows/columns,
+        // re-tile the LSGP partition over the surviving sub-array — fewer
+        // PEs, larger tiles, a provably-legal but slower schedule
+        let arch = self.arch.degrade(mask).map_err(|message| CompileError {
+            stage: "TCPA compile",
+            message,
+            stats: MappedStats {
+                workload: wl.name.clone(),
+                n: wl.n,
+                tool: Some(Tool::Turtle),
+                opt: "-".into(),
+                arch: self.arch.name.clone(),
+                n_loops: wl.n_loops,
+                n_ops: 0,
+                ii: None,
+                unused_pes: None,
+                max_ops_per_pe: None,
+                latency: None,
+                latency_overlapped: None,
+            },
+        })?;
+        let row = map_turtle_cancellable(wl, &arch, cancel);
+        let stats = stats_of(&row, wl, &arch);
+        mapped_of(row, stats, &arch)
+    }
+
     fn compile_symbolic(&self, spec: &WorkloadSpec) -> Option<Box<dyn SymbolicMapped>> {
         // eligibility: the spec's size-dependence must be provably confined
         // to the designated shape positions; otherwise the shape encoding
@@ -380,12 +412,22 @@ impl Mapped for TcpaMapped {
     }
 
     fn execute(&self, inputs: &ArrayData, batch: u64) -> Result<ExecReport, String> {
-        let run = tcpa_sim::simulate_workload_prepared(
+        self.execute_leg(inputs, batch, 0)
+    }
+
+    fn execute_leg(&self, inputs: &ArrayData, batch: u64, leg: u64) -> Result<ExecReport, String> {
+        let inj = if leg == super::CLEAN_LEG {
+            crate::faults::SeuInjection::off()
+        } else {
+            crate::faults::SeuInjection::of(&self.arch.faults, leg)
+        };
+        let run = tcpa_sim::simulate_workload_prepared_injected(
             &self.row.configs,
             &self.plans,
             &self.read_after,
             &self.arch,
             inputs,
+            inj,
         )
         .map_err(|e| e.to_string())?;
         for (i, k) in run.kernels.iter().enumerate() {
@@ -417,6 +459,7 @@ impl Mapped for TcpaMapped {
             occupancy: occupancy(issued, self.n_pes, single),
             outputs: run.outputs,
             detail,
+            seu_flips: run.kernels.iter().map(|k| k.seu_flips).sum(),
         })
     }
 }
@@ -490,6 +533,50 @@ mod tests {
             );
             assert!(row.latency_first <= row.latency_last, "{}", wl.name);
         }
+    }
+
+    #[test]
+    fn masked_compile_degrades_to_surviving_subarray() {
+        use crate::faults::FaultMask;
+        let wl = build(BenchId::Gemm, 4);
+        let b = TcpaBackend::paper(4, 4);
+        let healthy = b.compile(&wl).expect("healthy gemm compiles");
+        let degraded = b
+            .compile_masked_cancellable(
+                &wl,
+                &FaultMask::healthy().with_failed_pe(5),
+                &CancelToken::none(),
+            )
+            .expect("re-tiled over the surviving 2x2 sub-array");
+        assert_ne!(
+            degraded.stats().arch,
+            healthy.stats().arch,
+            "degraded artifacts must not alias healthy ones"
+        );
+        assert!(
+            degraded.analysis().expect("report").is_legal(),
+            "the re-tiled schedule must prove legal against the degraded arch"
+        );
+        let ins = inputs(BenchId::Gemm, 4, 3);
+        let a = healthy.execute(&ins, 1).expect("healthy run");
+        let d = degraded.execute(&ins, 1).expect("degraded run");
+        assert_eq!(a.outputs, d.outputs, "fail-stop remap is bit-identical");
+        assert!(
+            d.latency_cycles >= a.latency_cycles,
+            "larger tiles on fewer PEs cannot be faster: {} vs {}",
+            d.latency_cycles,
+            a.latency_cycles
+        );
+        // a wipeout that leaves no addressable sub-array is a typed error
+        let arch = TcpaArch::paper(4, 4);
+        let mut all = FaultMask::healthy();
+        for i in 0..4 {
+            all = all.with_failed_pe(arch.pe_id(i, i));
+        }
+        let err = b
+            .compile_masked_cancellable(&wl, &all, &CancelToken::none())
+            .expect_err("no survivor");
+        assert!(err.message.contains("no surviving"), "{}", err.message);
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! (classically the left border column) has access to scratchpad memory
 //! banks; each memory PE owns one distinct bank (§V-B1).
 
+use crate::faults::FaultMask;
+
 /// Interconnect topology.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Topology {
@@ -43,6 +45,10 @@ pub struct CgraArch {
     pub spm_bank_words: usize,
     /// Whether PEs include the 16-cycle divider.
     pub supports_div: bool,
+    /// What is broken in this physical array instance: fail-stop PEs and
+    /// links are excluded from placement and routing; the SEU rate drives
+    /// the simulator's deterministic bit-flip injection.
+    pub faults: FaultMask,
 }
 
 impl CgraArch {
@@ -60,7 +66,28 @@ impl CgraArch {
             instr_mem: 16,
             spm_bank_words: 1024,
             supports_div: true,
+            faults: FaultMask::healthy(),
         }
+    }
+
+    /// This arch under a fault mask: identical geometry, failures unioned
+    /// onto whatever the arch already carried, name suffixed with the mask
+    /// fingerprint so per-arch memo tables never alias masked and healthy
+    /// instances. The CGRA recovery story is *operation-granular*: the grid
+    /// keeps its shape and the mapper simply places around the holes.
+    pub fn masked(&self, mask: &FaultMask) -> CgraArch {
+        let faults = self.faults.union(mask);
+        let mut out = self.clone();
+        out.name = format!("{}{}", self.name, faults.name_suffix());
+        out.faults = faults;
+        out
+    }
+
+    /// PEs that are alive under the fault mask.
+    pub fn live_pes(&self) -> Vec<usize> {
+        (0..self.n_pes())
+            .filter(|&pe| !self.faults.pe_failed(pe))
+            .collect()
     }
 
     /// HyCUBE-like instance: single-cycle multi-hop (up to 3 hops).
@@ -175,6 +202,16 @@ impl CgraArch {
         self.mem_pes().contains(&pe)
     }
 
+    /// Memory PEs that are alive under the fault mask, in bank order. A
+    /// dead border PE takes its scratchpad bank with it: arrays must be
+    /// re-banked over the survivors.
+    pub fn live_mem_pes(&self) -> Vec<usize> {
+        self.mem_pes()
+            .into_iter()
+            .filter(|&pe| !self.faults.pe_failed(pe))
+            .collect()
+    }
+
     /// Total scratchpad capacity in words.
     pub fn spm_words(&self) -> usize {
         self.mem_pes().len() * self.spm_bank_words
@@ -243,5 +280,20 @@ mod tests {
         let mut a = CgraArch::classical(8, 8);
         a.mem_access = MemAccess::Borders;
         assert_eq!(a.mem_pes().len(), 28);
+    }
+
+    #[test]
+    fn masked_arch_keeps_geometry_and_renames() {
+        let healthy = CgraArch::classical(4, 4);
+        assert_eq!(healthy.live_pes().len(), 16);
+        let mask = FaultMask::healthy().with_failed_pe(5);
+        let masked = healthy.masked(&mask);
+        assert_eq!(masked.n_pes(), 16, "the grid keeps its shape");
+        assert_eq!(masked.live_pes().len(), 15);
+        assert!(!masked.live_pes().contains(&5));
+        assert_ne!(masked.name, healthy.name, "memo tables must not alias");
+        // masking again unions rather than forgetting earlier failures
+        let twice = masked.masked(&FaultMask::healthy().with_failed_pe(6));
+        assert_eq!(twice.live_pes().len(), 14);
     }
 }

@@ -125,6 +125,8 @@ pub enum MapError {
     SpmOverflow { needed: usize, capacity: usize },
     /// The DFG contains an op the architecture cannot execute.
     UnsupportedOp(OpKind),
+    /// The arch's fault mask leaves no live PE for a required role.
+    Faulted(&'static str),
 }
 
 impl std::fmt::Display for MapError {
@@ -137,14 +139,21 @@ impl std::fmt::Display for MapError {
                 write!(f, "scratchpad overflow: need {needed} words, have {capacity}")
             }
             MapError::UnsupportedOp(op) => write!(f, "unsupported operation {op}"),
+            MapError::Faulted(what) => write!(f, "fault mask leaves {what}"),
         }
     }
 }
 
 /// Assign each array to a scratchpad bank (round-robin over memory PEs,
 /// §V-B1's one-distinct-bank-per-border-PE organization) and check capacity.
+/// Bank indices refer to the *live* memory-PE list: a fail-stop border PE
+/// takes its bank with it, so the survivors absorb its arrays (and the
+/// capacity check tightens accordingly).
 pub fn assign_banks(dfg: &Dfg, arch: &CgraArch) -> Result<Vec<usize>, MapError> {
-    let n_banks = arch.mem_pes().len();
+    let n_banks = arch.live_mem_pes().len();
+    if n_banks == 0 && !dfg.arrays.is_empty() {
+        return Err(MapError::Faulted("no live memory PE for array access"));
+    }
     let banks: Vec<usize> = (0..dfg.arrays.len()).map(|i| i % n_banks).collect();
     let mut usage = vec![0usize; n_banks];
     for (a, arr) in dfg.arrays.iter().enumerate() {
@@ -171,9 +180,15 @@ pub fn map(
             return Err(MapError::UnsupportedOp(OpKind::Div));
         }
     }
+    let live = arch.live_pes();
+    if live.is_empty() {
+        return Err(MapError::Faulted("no live PE"));
+    }
     let banks = assign_banks(dfg, arch)?;
     let hazard_slice: &[(usize, usize)] = if opts.respect_hazards { hazards } else { &[] };
-    let mii0 = mii::mii(dfg, hazard_slice, arch.n_pes(), arch.mem_pes().len());
+    // resource MII is bounded by the surviving PE/bank population, not the
+    // full grid: fewer live PEs push the feasible II up before search starts
+    let mii0 = mii::mii(dfg, hazard_slice, live.len(), arch.live_mem_pes().len());
 
     let mut rng = Rng::new(opts.seed ^ 0xC0FFEE);
     for ii in mii0..=opts.max_ii {
@@ -273,7 +288,7 @@ fn try_map_at_ii(
         }
     }
 
-    let mem_pes = arch.mem_pes();
+    let mem_pes = arch.live_mem_pes();
     let mut occ = Occupancy::new(ii, arch.route_regs);
     let mut place = Placement {
         pe: vec![None; n],
@@ -316,7 +331,8 @@ fn try_map_at_ii(
         let cand_pes: Vec<usize> = if node.kind.is_mem() {
             vec![mem_pes[banks[node.array.expect("mem op without array")]]]
         } else {
-            let mut pes: Vec<usize> = (0..arch.n_pes()).collect();
+            // fail-stop PEs never appear as placement candidates
+            let mut pes: Vec<usize> = arch.live_pes();
             rng.shuffle(&mut pes);
             let partners: Vec<usize> = cons_of[v]
                 .iter()
@@ -691,6 +707,50 @@ mod tests {
         let arch = CgraArch::classical(4, 4);
         let err = map(&gen.dfg, &arch, &[], &MapOpts::heuristic()).unwrap_err();
         assert!(matches!(err, MapError::SpmOverflow { .. }));
+    }
+
+    #[test]
+    fn mapping_avoids_failed_pes_and_links() {
+        use crate::faults::FaultMask;
+        let gen = generate(&gemm_nest(4), &GenOpts::flat()).unwrap();
+        // kill a center PE (5) and the link 9–10; mapping must route around
+        let mask = FaultMask::healthy().with_failed_pe(5).with_failed_link(9, 10);
+        let arch = CgraArch::classical(4, 4).masked(&mask);
+        let m = map(&gen.dfg, &arch, &gen.inter_iteration_hazards, &MapOpts::negotiated())
+            .expect("gemm must still map around one dead PE");
+        for (v, &pe) in m.binding.iter().enumerate() {
+            assert_ne!(pe, 5, "node {v} bound to the dead PE");
+        }
+        for rp in &m.routes {
+            for hop in rp.path.windows(2) {
+                if hop[0] != hop[1] {
+                    assert!(
+                        !arch.faults.route_blocked(hop[0], hop[1]),
+                        "route {:?} crosses a failed resource",
+                        rp.path
+                    );
+                }
+            }
+        }
+        check_mapping(&gen.dfg, &arch, &m);
+        // a dead memory PE re-banks arrays onto the surviving border PEs
+        let mem_dead = CgraArch::classical(4, 4)
+            .masked(&FaultMask::healthy().with_failed_pe(0));
+        let m2 = map(&gen.dfg, &mem_dead, &gen.inter_iteration_hazards, &MapOpts::negotiated())
+            .expect("three live banks suffice for gemm n=4");
+        let live_mem = mem_dead.live_mem_pes();
+        for (v, node) in gen.dfg.nodes.iter().enumerate() {
+            if node.kind.is_mem() {
+                assert_eq!(m2.binding[v], live_mem[m2.banks[node.array.unwrap()]]);
+            }
+        }
+        // killing the whole array is a typed, deterministic failure
+        let dead = CgraArch::classical(4, 4).masked(&FaultMask {
+            failed_pes: (0..16).collect(),
+            ..FaultMask::healthy()
+        });
+        let err = map(&gen.dfg, &dead, &[], &MapOpts::heuristic()).unwrap_err();
+        assert!(matches!(err, MapError::Faulted(_)), "{err}");
     }
 
     #[test]

@@ -127,6 +127,10 @@ pub fn route_edge(
                 if (arch.min_steps(tgt, dst_pe) as i64) > slack - s - 1 {
                     continue;
                 }
+                // fail-stop PEs and dead links are not routing resources
+                if arch.faults.route_blocked(pe, tgt) {
+                    continue;
+                }
                 let dir = first_dir(arch, pe, tgt);
                 if let Some(lc) = occ.link_cost(pe, dir, cycle, inst) {
                     // arriving value occupies a register at tgt unless it is
@@ -261,6 +265,27 @@ mod tests {
         // and with II=1 every cycle aliases to the same slot
         let r2 = route_edge(&arch, &mut occ, ValueId(1), 0, 0, 1, 1);
         assert!(r2.is_none());
+    }
+
+    #[test]
+    fn routes_detour_around_failed_resources() {
+        use crate::faults::FaultMask;
+        // PE 1 fail-stop: the only 2-step path 0→1→2 is gone
+        let arch = CgraArch::classical(4, 4).masked(&FaultMask::healthy().with_failed_pe(1));
+        let mut occ = Occupancy::new(16, 10);
+        assert!(route_edge(&arch, &mut occ, ValueId(0), 0, 0, 2, 2).is_none());
+        // with slack 4 the router detours through the row below
+        let r = route_edge(&arch, &mut occ, ValueId(0), 0, 0, 2, 4).expect("detour");
+        assert!(!r.path.contains(&1), "path {:?} enters the dead PE", r.path);
+        // a dead link blocks only that link, not the endpoint PE
+        let arch = CgraArch::classical(4, 4).masked(&FaultMask::healthy().with_failed_link(0, 1));
+        let mut occ = Occupancy::new(16, 10);
+        assert!(route_edge(&arch, &mut occ, ValueId(1), 0, 0, 1, 1).is_none());
+        let r = route_edge(&arch, &mut occ, ValueId(1), 0, 0, 1, 3).expect("around");
+        assert_eq!(*r.path.last().unwrap(), 1);
+        for hop in r.path.windows(2) {
+            assert!(!(hop[0] == 0 && hop[1] == 1), "path {:?} uses the dead link", r.path);
+        }
     }
 
     #[test]

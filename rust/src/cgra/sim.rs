@@ -9,6 +9,7 @@
 //! as a timing panic or as a numeric mismatch against the reference
 //! interpreter — both of which the test suite checks.
 
+use crate::faults::SeuInjection;
 use crate::frontend::dfg::{Dfg, Operand};
 use crate::ir::loopnest::ArrayData;
 use crate::ir::op::{OpKind, Value};
@@ -28,6 +29,9 @@ pub struct SimResult {
     /// (can only happen when inter-iteration hazards were ignored by a
     /// non-register-aware toolchain).
     pub timing_hazards: u64,
+    /// Single-bit upsets injected into issued results (0 unless the run was
+    /// given an active [`SeuInjection`] under the `fault-injection` gate).
+    pub seu_flips: u64,
 }
 
 /// Per-(DFG, mapping) precomputation hoisted out of the per-execute path:
@@ -123,8 +127,23 @@ pub fn simulate_with_plan(
     scratch: &mut SimScratch,
     inputs: &ArrayData,
 ) -> SimResult {
+    simulate_with_plan_injected(dfg, m, plan, scratch, inputs, SeuInjection::off())
+}
+
+/// [`simulate_with_plan`] with deterministic SEU injection: each issued
+/// result may have one bit flipped at the sites `inj` decides. The flip
+/// branch only exists under `cfg(any(test, feature = "fault-injection"))`;
+/// otherwise `inj` is inert and this is exactly `simulate_with_plan`.
+pub fn simulate_with_plan_injected(
+    dfg: &Dfg,
+    m: &Mapping,
+    plan: &StagePlan,
+    scratch: &mut SimScratch,
+    inputs: &ArrayData,
+    inj: SeuInjection,
+) -> SimResult {
     let mut spm = dfg.alloc_spm(inputs);
-    let r = run_with_plan(dfg, m, plan, scratch, &mut spm);
+    let r = run_with_plan(dfg, m, plan, scratch, &mut spm, inj);
     SimResult {
         outputs: dfg.collect_outputs(&spm),
         ..r
@@ -134,7 +153,14 @@ pub fn simulate_with_plan(
 /// Simulate over pre-allocated scratchpad banks (multi-stage kernels chain
 /// stages over the same banks).
 pub fn simulate_on(dfg: &Dfg, m: &Mapping, spm: &mut [Vec<Value>]) -> SimResult {
-    run_with_plan(dfg, m, &StagePlan::new(dfg, m), &mut SimScratch::new(), spm)
+    run_with_plan(
+        dfg,
+        m,
+        &StagePlan::new(dfg, m),
+        &mut SimScratch::new(),
+        spm,
+        SeuInjection::off(),
+    )
 }
 
 fn run_with_plan(
@@ -143,7 +169,9 @@ fn run_with_plan(
     plan: &StagePlan,
     scratch: &mut SimScratch,
     spm: &mut [Vec<Value>],
+    inj: SeuInjection,
 ) -> SimResult {
+    let _ = &inj; // used only under the fault-injection gate below
     let n = dfg.n_nodes();
     let ii = m.ii as u64;
     let iters = dfg.iters;
@@ -168,6 +196,8 @@ fn run_with_plan(
     let total_cycles = plan.total_cycles;
     let mut issued: u64 = 0;
     let mut hazards: u64 = 0;
+    #[allow(unused_mut)] // mutated only under the fault-injection gate
+    let mut flips: u64 = 0;
 
     // lint: begin-hot-loop — per-cycle issue loop; no allocation or clock
     // reads allowed between the markers (enforced by `repro lint`)
@@ -242,6 +272,17 @@ fn run_with_plan(
                     Value::apply(kind, &args[..node.operands.len()])
                 }
             };
+            // SEU: flip one bit of the result latched into the datapath
+            // (scratchpad banks are modeled as ECC-protected; injection
+            // targets FU results, which is where voting must catch them)
+            #[cfg(any(test, feature = "fault-injection"))]
+            let val = match inj.flip(c, m.binding[v] as u64, val) {
+                Some(hit) => {
+                    flips += 1;
+                    hit
+                }
+                None => val,
+            };
             hist[v * depth + hslot] = val;
             done_at[v * depth + hslot] = (c + node.kind.latency() as u64) as i64;
             issued += 1;
@@ -254,6 +295,7 @@ fn run_with_plan(
         outputs: ArrayData::new(),
         issued_ops: issued,
         timing_hazards: hazards,
+        seu_flips: flips,
     }
 }
 
@@ -337,6 +379,41 @@ mod tests {
             assert_eq!(r.issued_ops, fresh.issued_ops);
             assert_eq!(r.timing_hazards, fresh.timing_hazards);
         }
+    }
+
+    #[test]
+    fn seu_injection_is_deterministic_and_off_by_default() {
+        use crate::faults::{FaultMask, SeuInjection};
+        let n = 4usize;
+        let nest = gemm_nest(n as i64);
+        let gen = generate(&nest, &GenOpts::flat()).unwrap();
+        let arch = CgraArch::classical(4, 4);
+        let m = map(&gen.dfg, &arch, &gen.inter_iteration_hazards, &MapOpts::negotiated())
+            .unwrap();
+        let mut inputs = ArrayData::new();
+        inputs.insert("A".into(), iota(n * n, 1));
+        inputs.insert("B".into(), iota(n * n, 2));
+        let clean = simulate(&gen.dfg, &m, &inputs);
+        assert_eq!(clean.seu_flips, 0, "no injection unless asked");
+        let plan = StagePlan::new(&gen.dfg, &m);
+        let mask = FaultMask::healthy().with_seu(1000, 42);
+        let run = |leg: u64| {
+            simulate_with_plan_injected(
+                &gen.dfg,
+                &m,
+                &plan,
+                &mut SimScratch::new(),
+                &inputs,
+                SeuInjection::of(&mask, leg),
+            )
+        };
+        let hit = run(0);
+        assert_eq!(hit.seu_flips, hit.issued_ops, "rate 1000 strikes every result");
+        assert_ne!(hit.outputs, clean.outputs, "corruption must reach the outputs");
+        let again = run(0);
+        assert_eq!(hit.outputs, again.outputs, "seeded corruption replays bit-identically");
+        let other = run(1);
+        assert_ne!(hit.outputs, other.outputs, "legs corrupt at different sites");
     }
 
     #[test]

@@ -63,11 +63,15 @@ pub(crate) const PANIC_MARKER: &str = "[panic]";
 pub(crate) const MAX_POISON_RETRIES: u32 = 2;
 
 /// Whether an error message records a *transient* outcome (a panicked
-/// leader, a deadline abort, or a client-gone abort) rather than a
-/// deterministic pipeline failure. Transient results are never cached and
-/// are eligible for secondhand retry; deterministic failures cache forever.
+/// leader, a deadline abort, a client-gone abort, or a detected hardware
+/// fault) rather than a deterministic pipeline failure. Transient results
+/// are never cached and are eligible for secondhand retry; deterministic
+/// failures cache forever. Fail-stop detections are transient by
+/// definition: the session quarantines the PE and recompiles under the new
+/// mask, so the error says nothing about the *remapped* artifact's fate.
 pub fn is_transient_error(msg: &str) -> bool {
     msg.contains(PANIC_MARKER)
+        || msg.contains(crate::faults::PE_FAULT_MARKER)
         || crate::backend::is_deadline_error(msg)
         || crate::backend::is_cancel_error(msg)
 }
@@ -307,6 +311,26 @@ impl<K: Eq + Hash + Clone, V: Clone> FlightMap<K, V> {
         }
     }
 
+    /// Drop every *ready* entry whose key matches `pred`, returning how
+    /// many were dropped. In-flight entries are left alone — their waiters
+    /// hold the flight handle and the leader publishes on resolution; the
+    /// caller's predicate will simply not cover keys inserted afterwards.
+    /// This is the health-event invalidation hook: a detected hardware
+    /// fault makes every resident artifact/report for that array suspect.
+    pub fn drop_ready(&self, pred: impl Fn(&K) -> bool) -> usize {
+        let mut slots = self.slots.write().unwrap();
+        let victims: Vec<K> = slots
+            .iter()
+            .filter(|(k, e)| matches!(e.slot, Slot::Ready(_)) && pred(k))
+            .map(|(k, _)| k.clone())
+            .collect();
+        let dropped = victims.len();
+        for k in victims {
+            slots.remove(&k);
+        }
+        dropped
+    }
+
     /// Interpret a slot lookup, refreshing the LRU stamp on a hit.
     fn claim_of(&self, entry: Option<&Entry<V>>) -> Option<Claim<V>> {
         entry.map(|e| match &e.slot {
@@ -538,6 +562,80 @@ impl CompileCache {
             }
         };
         (result, outcome)
+    }
+
+    /// Drop every *ready* artifact compiled for `target` (healthy and
+    /// masked alike — a detected fault changes which artifacts are legal
+    /// on that array, and the fingerprint fold means degraded keys never
+    /// alias healthy ones, so dropping both is the conservative move).
+    /// In-flight compiles finish and resolve; the session's retry then
+    /// recompiles under the new mask. Returns the number dropped.
+    pub fn invalidate_target(&self, target: Target) -> usize {
+        self.slots.drop_ready(|k| k.target == target)
+    }
+
+    /// [`CompileCache::get_or_compile_shaped_cancellable`] under a fault
+    /// mask. A *healthy* mask is the identity: the fold leaves the key's
+    /// fingerprint unchanged and the two-level (symbolic-first) path runs
+    /// as usual. A degraded mask takes the per-n path through
+    /// [`crate::backend::Backend::compile_masked_cancellable`] instead —
+    /// the shape level is keyed by `(shape, target)` only, so letting a
+    /// masked compile feed it would alias healthy and degraded artifacts.
+    /// `key` must already carry the *folded* fingerprint
+    /// ([`crate::faults::FaultMask::fold_fingerprint`]), so healthy and
+    /// degraded artifacts of the same kernel occupy distinct slots.
+    pub fn get_or_compile_masked_cancellable(
+        &self,
+        key: WorkloadKey,
+        shape: u64,
+        spec: &WorkloadSpec,
+        mask: &crate::faults::FaultMask,
+        cancel: &CancelToken,
+        retries: &std::cell::Cell<u64>,
+    ) -> (CacheResult, CacheOutcome, SymbolicUse) {
+        if mask.is_healthy() {
+            return self.get_or_compile_shaped_cancellable(key, shape, spec, cancel, retries);
+        }
+        let target = key.target;
+        let registry = &self.registry;
+        let mut attempt = 0u32;
+        loop {
+            let (result, outcome) = self.slots.get_or_run(
+                key,
+                || {
+                    cancel.check("compile queue")?;
+                    let backend = registry.get(target).ok_or_else(|| {
+                        format!("no backend registered for target `{}`", target.name())
+                    })?;
+                    let wl = spec.workload();
+                    backend
+                        .compile_masked_cancellable(&wl, mask, cancel)
+                        .map(|m| Arc::from(m) as Arc<dyn Mapped>)
+                        .map_err(|e| e.message)
+                },
+                |msg| Err(format!("{PANIC_MARKER} compile pipeline panicked: {msg}")),
+                transient_result,
+                &self.stats.evictions,
+                &self.stats.poisoned,
+            );
+            match outcome {
+                CacheOutcome::Hit => self.stats.hits.fetch_add(1, Ordering::Relaxed),
+                CacheOutcome::Waited => self.stats.waits.fetch_add(1, Ordering::Relaxed),
+                CacheOutcome::Miss => {
+                    self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed)
+                }
+            };
+            let secondhand_transient = outcome == CacheOutcome::Waited
+                && result.as_ref().err().is_some_and(|e| is_transient_error(e));
+            if secondhand_transient && attempt < MAX_POISON_RETRIES && !cancel.cancelled() {
+                attempt += 1;
+                retries.set(retries.get() + 1);
+                std::thread::sleep(std::time::Duration::from_micros(50 << attempt));
+                continue;
+            }
+            return (result, outcome, SymbolicUse::None);
+        }
     }
 
     /// The two-level lookup: like [`CompileCache::get_or_compile_with_key`]
@@ -1087,6 +1185,65 @@ mod tests {
         assert!(recovered.is_ok(), "waiters never strand on a poisoned flight");
         assert_eq!(cache.stats.poisoned(), 1);
         assert!(l_retries + w_retries <= MAX_POISON_RETRIES as u64);
+    }
+
+    #[test]
+    fn invalidate_target_drops_ready_entries_for_that_target_only() {
+        let cache = CompileCache::new();
+        cache.get_or_compile(&spec("gemm", 8), Target::Seq);
+        cache.get_or_compile(&spec("gemm", 8), Target::Tcpa);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.invalidate_target(Target::Tcpa), 1);
+        let (_, o, _) = cache.get_or_compile(&spec("gemm", 8), Target::Seq);
+        assert_eq!(o, CacheOutcome::Hit, "other targets keep their artifacts");
+        let (_, o, _) = cache.get_or_compile(&spec("gemm", 8), Target::Tcpa);
+        assert_eq!(o, CacheOutcome::Miss, "invalidated entries recompile");
+        assert_eq!(cache.invalidate_target(Target::Cgra), 0, "nothing resident");
+    }
+
+    #[test]
+    fn masked_compiles_key_apart_from_healthy_ones() {
+        use crate::faults::FaultMask;
+        let cache = CompileCache::new();
+        let s = spec("gemm", 4);
+        let retries = std::cell::Cell::new(0u64);
+        let healthy_key = WorkloadKey::of(&s, Target::Tcpa);
+        let mask = FaultMask::healthy().with_failed_pe(5);
+        let masked_key = WorkloadKey {
+            fingerprint: mask.fold_fingerprint(s.fingerprint()),
+            ..healthy_key
+        };
+        assert_ne!(healthy_key.fingerprint, masked_key.fingerprint);
+        let (h, _, _) = cache.get_or_compile_masked_cancellable(
+            healthy_key,
+            s.shape_fingerprint(),
+            &s,
+            &FaultMask::healthy(),
+            &CancelToken::none(),
+            &retries,
+        );
+        let (m, o, u) = cache.get_or_compile_masked_cancellable(
+            masked_key,
+            s.shape_fingerprint(),
+            &s,
+            &mask,
+            &CancelToken::none(),
+            &retries,
+        );
+        let (h, m) = (h.expect("healthy compiles"), m.expect("masked compiles"));
+        assert_eq!(o, CacheOutcome::Miss);
+        assert_eq!(u, SymbolicUse::None, "masked path skips the shape level");
+        assert_ne!(h.stats().arch, m.stats().arch, "degraded arch is distinct");
+        // a repeat masked request hits its own slot — no aliasing either way
+        let (_, o2, _) = cache.get_or_compile_masked_cancellable(
+            masked_key,
+            s.shape_fingerprint(),
+            &s,
+            &mask,
+            &CancelToken::none(),
+            &retries,
+        );
+        assert_eq!(o2, CacheOutcome::Hit);
     }
 
     #[test]

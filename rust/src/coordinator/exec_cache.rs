@@ -132,6 +132,14 @@ impl ExecCache {
         self.slots.len()
     }
 
+    /// Drop every *ready* report produced on `target` (in-flight executions
+    /// finish and resolve to their waiters, but a detected hardware fault
+    /// means their reports may be corrupt, so nothing already resident for
+    /// that array may be served again). Returns the number dropped.
+    pub fn invalidate_target(&self, target: crate::backend::Target) -> usize {
+        self.slots.drop_ready(|k| k.workload.target == target)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -225,6 +233,7 @@ mod tests {
             occupancy: 1.0,
             outputs: ArrayData::new(),
             detail: "test".into(),
+            seu_flips: 0,
         }
     }
 

@@ -30,14 +30,18 @@ pub enum FaultSite {
     /// Sleep [`FaultPlan::delay`] in the worker loop between dequeue and
     /// handling — backs the queue up so admission control engages.
     QueueStall,
+    /// A PE reports fail-stop during execution — exercises the hardware
+    /// fault plane: quarantine, cache invalidation, spare-aware remap.
+    PeFailStop,
 }
 
 impl FaultSite {
-    pub const ALL: [FaultSite; 4] = [
+    pub const ALL: [FaultSite; 5] = [
         FaultSite::CompilePanic,
         FaultSite::CompileDelay,
         FaultSite::ExecPanic,
         FaultSite::QueueStall,
+        FaultSite::PeFailStop,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -46,6 +50,7 @@ impl FaultSite {
             FaultSite::CompileDelay => "compile_delay",
             FaultSite::ExecPanic => "exec_panic",
             FaultSite::QueueStall => "queue_stall",
+            FaultSite::PeFailStop => "pe_fail_stop",
         }
     }
 
@@ -55,6 +60,7 @@ impl FaultSite {
             FaultSite::CompileDelay => 1,
             FaultSite::ExecPanic => 2,
             FaultSite::QueueStall => 3,
+            FaultSite::PeFailStop => 4,
         }
     }
 }
@@ -65,9 +71,9 @@ impl FaultSite {
 #[derive(Debug, Default)]
 pub struct FaultPlan {
     seed: u64,
-    rates: [u16; 4],
+    rates: [u16; 5],
     delay: Duration,
-    injected: [AtomicU64; 4],
+    injected: [AtomicU64; 5],
 }
 
 impl FaultPlan {
@@ -103,7 +109,19 @@ impl FaultPlan {
         if rate == 0 {
             return false;
         }
-        // FNV-1a over the decision tuple: deterministic per (seed, site, id)
+        let fire = self.decision_hash(site, request_id) % 1000 < rate as u64;
+        if fire {
+            self.injected[site.index()].fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// The FNV-1a hash of the decision tuple `(seed, site, request id)` —
+    /// pure and side-effect free. [`FaultPlan::should_fire`] thresholds it;
+    /// sites that need extra deterministic entropy (which PE fails, say)
+    /// derive it from the same hash so a replayed trace picks the same
+    /// victim.
+    pub fn decision_hash(&self, site: FaultSite, request_id: u64) -> u64 {
         let mut h: u64 = 0xcbf29ce484222325;
         for b in self
             .seed
@@ -115,11 +133,7 @@ impl FaultPlan {
             h ^= b as u64;
             h = h.wrapping_mul(0x100000001b3);
         }
-        let fire = h % 1000 < rate as u64;
-        if fire {
-            self.injected[site.index()].fetch_add(1, Ordering::Relaxed);
-        }
-        fire
+        h
     }
 
     /// How many times `site` has actually fired.
@@ -181,5 +195,19 @@ mod tests {
         for site in FaultSite::ALL {
             assert!(!site.name().is_empty());
         }
+    }
+
+    #[test]
+    fn decision_hash_is_pure_and_replays_the_victim() {
+        let plan = FaultPlan::new(9).with_rate(FaultSite::PeFailStop, 1000);
+        let h1 = plan.decision_hash(FaultSite::PeFailStop, 42);
+        let h2 = plan.decision_hash(FaultSite::PeFailStop, 42);
+        assert_eq!(h1, h2, "hash is pure");
+        assert_eq!(plan.injected(FaultSite::PeFailStop), 0, "hash never counts");
+        assert!(plan.should_fire(FaultSite::PeFailStop, 42));
+        assert_eq!(plan.injected(FaultSite::PeFailStop), 1);
+        // a victim derived from the hash replays across plans with one seed
+        let replay = FaultPlan::new(9).with_rate(FaultSite::PeFailStop, 1000);
+        assert_eq!(h1 >> 32, replay.decision_hash(FaultSite::PeFailStop, 42) >> 32);
     }
 }

@@ -222,6 +222,23 @@ pub struct Metrics {
     /// Connections whose peer vanished mid-flight (write error before
     /// end-of-stream); their pending requests were cancelled.
     pub conns_aborted: u64,
+    /// PE fail-stop detections (one per detection, so a request whose remap
+    /// retry also faults counts twice). Reconciles with per-response wire
+    /// fields as `pe_faults + vote_mismatches == Σ fault_detected` when
+    /// each faulted request detects exactly once.
+    pub pe_faults: u64,
+    /// Spare-aware remaps: quarantine + target-wide cache invalidation +
+    /// recompile under the updated mask. Equals `Σ remapped` over responses.
+    pub remaps: u64,
+    /// Transient bit-flips (SEUs) the simulators actually injected across
+    /// executed legs (memo replays inject nothing).
+    pub seu_injected: u64,
+    /// Corrupted legs outvoted by a TMR majority; the served outputs are
+    /// the majority's. Equals `Σ corrected` over responses.
+    pub seu_corrected: u64,
+    /// Redundant-execution vote mismatches detected (DMR disagreement, or a
+    /// clean TMR leg deviating). Mismatches are never served as-is.
+    pub vote_mismatches: u64,
 }
 
 impl Default for Metrics {
@@ -259,6 +276,11 @@ impl Default for Metrics {
             conns_accepted: 0,
             conns_closed: 0,
             conns_aborted: 0,
+            pe_faults: 0,
+            remaps: 0,
+            seu_injected: 0,
+            seu_corrected: 0,
+            vote_mismatches: 0,
         }
     }
 }
@@ -373,6 +395,24 @@ impl Metrics {
         s.hist.record(wall);
     }
 
+    /// Fold a chaos [`FaultPlan`](super::faults::FaultPlan)'s per-site
+    /// injected counters into the report (appended as one line per site
+    /// that fired). Chaos/fault suites only — the plan itself exists only
+    /// under the `fault-injection` feature (or in tests).
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub fn report_with_fault_plan(&self, plan: &super::faults::FaultPlan) -> String {
+        let mut out = self.report();
+        let fired: Vec<String> = super::faults::FaultSite::ALL
+            .iter()
+            .filter(|s| plan.injected(**s) > 0)
+            .map(|s| format!("{}={}", s.name(), plan.injected(*s)))
+            .collect();
+        if !fired.is_empty() {
+            out.push_str(&format!("\n  injected: {}", fired.join(" ")));
+        }
+        out
+    }
+
     /// Snapshot the aggregate eviction/poison counters of a shard set into
     /// this total — the sharded analogue of [`Metrics::absorb_cache_stats`]
     /// (called once on the merged total at pool join).
@@ -444,6 +484,12 @@ impl Metrics {
         self.conns_accepted += other.conns_accepted;
         self.conns_closed += other.conns_closed;
         self.conns_aborted += other.conns_aborted;
+        // fault-plane events are per-worker counts: they sum
+        self.pe_faults += other.pe_faults;
+        self.remaps += other.remaps;
+        self.seu_injected += other.seu_injected;
+        self.seu_corrected += other.seu_corrected;
+        self.vote_mismatches += other.vote_mismatches;
     }
 
     /// All-target latency histogram (merged per-target views) — what the
@@ -551,6 +597,22 @@ impl Metrics {
             out.push_str(&format!(
                 "\n  net: conns accepted={} closed={} aborted={}",
                 self.conns_accepted, self.conns_closed, self.conns_aborted,
+            ));
+        }
+        // the fault plane reports only when it saw (or injected) anything —
+        // a healthy run stays byte-identical to the pre-fault report
+        if self.pe_faults + self.remaps + self.seu_injected + self.seu_corrected
+            + self.vote_mismatches
+            > 0
+        {
+            out.push_str(&format!(
+                "\n  faults: pe_faults={} remaps={} seu_injected={} seu_corrected={} \
+                 vote_mismatches={}",
+                self.pe_faults,
+                self.remaps,
+                self.seu_injected,
+                self.seu_corrected,
+                self.vote_mismatches,
             ));
         }
         out.push_str(&format!(
@@ -726,6 +788,46 @@ mod tests {
             ),
             "{report}"
         );
+    }
+
+    #[test]
+    fn fault_counters_sum_merge_and_report_conditionally() {
+        let mut a = Metrics::default();
+        assert!(
+            !a.report().contains("faults:"),
+            "a healthy report carries no fault line"
+        );
+        a.pe_faults = 1;
+        a.remaps = 1;
+        a.seu_injected = 4;
+        let mut b = Metrics::default();
+        b.seu_injected = 3;
+        b.seu_corrected = 1;
+        b.vote_mismatches = 2;
+        a.merge(&b);
+        assert_eq!((a.pe_faults, a.remaps), (1, 1));
+        assert_eq!(
+            (a.seu_injected, a.seu_corrected, a.vote_mismatches),
+            (7, 1, 2),
+            "fault counters sum across workers"
+        );
+        let report = a.report();
+        assert!(
+            report.contains(
+                "faults: pe_faults=1 remaps=1 seu_injected=7 seu_corrected=1 vote_mismatches=2"
+            ),
+            "{report}"
+        );
+        // per-site injected counters ride along when a chaos plan fired
+        use super::super::faults::{FaultPlan, FaultSite};
+        let plan = FaultPlan::new(1).with_rate(FaultSite::PeFailStop, 1000);
+        assert!(
+            !a.report_with_fault_plan(&plan).contains("injected:"),
+            "nothing fired yet"
+        );
+        assert!(plan.should_fire(FaultSite::PeFailStop, 3));
+        let with = a.report_with_fault_plan(&plan);
+        assert!(with.contains("injected: pe_fail_stop=1"), "{with}");
     }
 
     #[test]

@@ -68,5 +68,5 @@ pub use faults::{FaultPlan, FaultSite};
 pub use metrics::Metrics;
 pub use net::{ListenAddr, NetServer};
 pub use pool::{serve as serve_pool, PoolConfig, PoolHandle, PoolSender};
-pub use session::{ErrorKind, Request, Response, Session, Target, WorkloadRef};
+pub use session::{ErrorKind, Redundancy, Request, Response, Session, Target, WorkloadRef};
 pub use shard::CacheShards;

@@ -17,9 +17,10 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
-use crate::backend::{is_cancel_error, is_deadline_error, CancelToken};
+use crate::backend::{is_cancel_error, is_deadline_error, CancelToken, CLEAN_LEG};
 pub use crate::backend::Target;
 use crate::bench::spec::{WorkloadCatalog, WorkloadSpec};
+use crate::faults::{FaultMask, PE_FAULT_MARKER, VOTE_MISMATCH_MARKER};
 use crate::ir::loopnest::ArrayData;
 use crate::ir::op::values_close;
 use crate::runtime::golden::GoldenService;
@@ -62,9 +63,24 @@ pub enum ErrorKind {
     /// compiled mapping provably violates a dependence constraint (see
     /// [`crate::analysis`]); the diagnostic names the offending edge.
     Illegal,
+    /// A hardware-fault event the serve path could not recover from: a PE
+    /// reported fail-stop and the remap retry also failed, or redundant
+    /// legs disagreed with no recoverable majority. Detected-and-recovered
+    /// faults never carry this kind — they serve successfully with the
+    /// fault flags set on the [`Response`].
+    Fault,
 }
 
 impl ErrorKind {
+    /// Every kind, for table-driven wire round-trip tests.
+    pub const ALL: [ErrorKind; 5] = [
+        ErrorKind::Shed,
+        ErrorKind::Timeout,
+        ErrorKind::Failed,
+        ErrorKind::Illegal,
+        ErrorKind::Fault,
+    ];
+
     /// Stable wire name.
     pub fn name(&self) -> &'static str {
         match self {
@@ -72,6 +88,7 @@ impl ErrorKind {
             ErrorKind::Timeout => "timeout",
             ErrorKind::Failed => "failed",
             ErrorKind::Illegal => "illegal",
+            ErrorKind::Fault => "fault",
         }
     }
 
@@ -82,7 +99,55 @@ impl ErrorKind {
             "timeout" => Some(ErrorKind::Timeout),
             "failed" => Some(ErrorKind::Failed),
             "illegal" => Some(ErrorKind::Illegal),
+            "fault" => Some(ErrorKind::Fault),
             _ => None,
+        }
+    }
+}
+
+/// Redundant-execution mode for one request. `None` is the plain
+/// single-run path; DMR runs two legs and *detects* a corrupted run (a
+/// mismatch is never served — the request retries on clean legs); TMR runs
+/// three legs and additionally *corrects* by majority vote. Under the
+/// single-event assumption exactly one victim leg per request runs with
+/// SEU injection armed; redundant legs run clean (see
+/// [`crate::backend::CLEAN_LEG`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Redundancy {
+    #[default]
+    None,
+    /// Dual modular redundancy: detect, never serve a mismatch.
+    Dmr,
+    /// Triple modular redundancy: outvote and serve the majority.
+    Tmr,
+}
+
+impl Redundancy {
+    /// Stable wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Redundancy::None => "none",
+            Redundancy::Dmr => "dmr",
+            Redundancy::Tmr => "tmr",
+        }
+    }
+
+    /// Inverse of [`Redundancy::name`].
+    pub fn parse(s: &str) -> Option<Redundancy> {
+        match s {
+            "none" => Some(Redundancy::None),
+            "dmr" => Some(Redundancy::Dmr),
+            "tmr" => Some(Redundancy::Tmr),
+            _ => None,
+        }
+    }
+
+    /// Number of redundant executions per request.
+    pub fn legs(&self) -> usize {
+        match self {
+            Redundancy::None => 1,
+            Redundancy::Dmr => 2,
+            Redundancy::Tmr => 3,
         }
     }
 }
@@ -220,6 +285,10 @@ pub struct Request {
     /// to compile (deterministically), retry once on the sequential
     /// reference backend and mark the response [`Response::degraded`].
     pub allow_fallback: bool,
+    /// Opt-in redundant execution with voting (see [`Redundancy`]).
+    /// Redundant requests bypass the exec-report cache — legs and votes
+    /// are per-request events.
+    pub redundancy: Redundancy,
 }
 
 impl Request {
@@ -245,6 +314,7 @@ impl Request {
             seed,
             deadline_ms: None,
             allow_fallback: false,
+            redundancy: Redundancy::None,
         }
     }
 
@@ -266,6 +336,7 @@ impl Request {
             seed,
             deadline_ms: None,
             allow_fallback: false,
+            redundancy: Redundancy::None,
         }
     }
 
@@ -278,6 +349,12 @@ impl Request {
     /// Builder: opt into sequential-backend fallback on compile failure.
     pub fn with_fallback(mut self) -> Request {
         self.allow_fallback = true;
+        self
+    }
+
+    /// Builder: opt into redundant execution with voting.
+    pub fn with_redundancy(mut self, redundancy: Redundancy) -> Request {
+        self.redundancy = redundancy;
         self
     }
 
@@ -357,6 +434,19 @@ pub struct Response {
     /// Secondhand retries this request performed after observing poisoned
     /// single-flight entries (compile or exec level).
     pub retries: u64,
+    /// A hardware-fault event was *detected* while serving this request —
+    /// a PE reported fail-stop, or redundant legs disagreed. Detection,
+    /// not outcome: the response may still carry a correct (remapped,
+    /// retried or outvoted) result. `Σ fault_detected` reconciles against
+    /// `Metrics::pe_faults + Metrics::vote_mismatches`.
+    pub fault_detected: bool,
+    /// Served from an artifact recompiled under an updated fault mask
+    /// after a detected fail-stop (spare-aware remap on the same target).
+    /// `Σ remapped == Metrics::remaps`.
+    pub remapped: bool,
+    /// TMR voting outvoted a corrupted leg; the served outputs are the
+    /// majority's. `Σ corrected == Metrics::seu_corrected`.
+    pub corrected: bool,
     pub wall: std::time::Duration,
 }
 
@@ -387,6 +477,9 @@ impl Response {
             error: Some(error),
             error_kind: Some(kind),
             retries: 0,
+            fault_detected: false,
+            remapped: false,
+            corrected: false,
             wall,
         }
     }
@@ -430,6 +523,12 @@ pub struct Session {
     /// [`Session::handle_with`] (chaos tests only — see [`super::faults`]).
     #[cfg(any(test, feature = "fault-injection"))]
     faults: Option<Arc<FaultPlan>>,
+    /// Per-target hardware health: the [`FaultMask`] each array target is
+    /// currently believed to run under. Absent entry = healthy. Folded into
+    /// every compile/exec key via [`FaultMask::fold_fingerprint`], so
+    /// healthy and degraded artifacts never alias; updated by
+    /// [`Session::quarantine`] when a fail-stop is detected.
+    health: std::collections::HashMap<Target, FaultMask>,
     pub metrics: Metrics,
 }
 
@@ -476,8 +575,37 @@ impl Session {
             shape_rejected: std::collections::HashSet::new(),
             #[cfg(any(test, feature = "fault-injection"))]
             faults: None,
+            health: std::collections::HashMap::new(),
             metrics: Metrics::default(),
         }
+    }
+
+    /// The fault mask `target` is currently served under. The sequential
+    /// reference backend has no array hardware to fail — always healthy.
+    pub fn fault_mask(&self, target: Target) -> FaultMask {
+        if target == Target::Seq {
+            return FaultMask::healthy();
+        }
+        self.health
+            .get(&target)
+            .cloned()
+            .unwrap_or_else(FaultMask::healthy)
+    }
+
+    /// Install a fault mask for `target` — how operators (and the chaos
+    /// suite) declare known-bad PEs/links or arm transient-flip injection
+    /// before any request arrives.
+    pub fn set_fault_mask(&mut self, target: Target, mask: FaultMask) {
+        self.health.insert(target, mask);
+    }
+
+    /// Record a detected fail-stop of `pe` on `target`. Returns `false` if
+    /// that PE was already quarantined (the detection is then stale).
+    fn quarantine(&mut self, target: Target, pe: usize) -> bool {
+        self.health
+            .entry(target)
+            .or_insert_with(FaultMask::healthy)
+            .fail_pe(pe)
     }
 
     /// Install a deterministic fault plan (chaos tests only).
@@ -557,81 +685,200 @@ impl Session {
                 return resp;
             }
         };
-        let key = WorkloadKey {
-            fingerprint,
-            n: spec.n,
-            target: req.target,
-        };
-        let exec_key = ExecKey {
-            workload: key,
-            seed: req.seed,
-            batch: req.batch,
-        };
         // secondhand poison retries this request performed, across the
         // compile and exec single-flight levels (and the fallback leg)
         let retries = std::cell::Cell::new(0u64);
+        // the fault-recovery ladder: run one attempt under the target's
+        // current mask; if it *detects* a PE fail-stop, quarantine the
+        // reported PE, drop everything resident for that target, and retry
+        // exactly once against the updated mask (the recompile excludes the
+        // quarantined PE — spare-aware remap on the *same* target, never a
+        // silent fall-back to the sequential reference). A detection on the
+        // retry itself means the fault is not maskable: typed refusal.
+        let mut remapped = false;
+        let mut fault_detected = false;
+        let mut corrected = false;
+        let (mut resp, cycles, ok, key, shard) = loop {
+            let attempt = self.attempt(
+                req,
+                cancel,
+                &spec,
+                fingerprint,
+                shape,
+                &retries,
+                remapped,
+                &mut fault_detected,
+                &mut corrected,
+                t0,
+            );
+            let pe_fault = attempt
+                .0
+                .error
+                .as_deref()
+                .is_some_and(|e| e.contains(PE_FAULT_MARKER));
+            if pe_fault {
+                fault_detected = true;
+                self.metrics.pe_faults += 1;
+                if !remapped && req.target != Target::Seq {
+                    if let Some(pe) = attempt.0.error.as_deref().and_then(parse_failed_pe) {
+                        self.quarantine(req.target, pe);
+                    }
+                    // everything resident for the faulted array is suspect
+                    self.shards.invalidate_target(req.target);
+                    self.metrics.remaps += 1;
+                    remapped = true;
+                    continue;
+                }
+            }
+            break attempt;
+        };
+        resp.retries = retries.get();
+        resp.remapped = remapped;
+        resp.fault_detected = fault_detected;
+        resp.corrected = corrected;
+        self.metrics.retries += retries.get();
+        let cache_hit = resp.cache_hit;
+        self.metrics
+            .record_request(req.target, key, cycles, resp.wall, ok, cache_hit);
+        self.metrics.record_shard(shard, resp.wall, ok);
+        resp
+    }
+
+    /// One serve attempt under the target's *current* fault mask: exec-cache
+    /// probe → compile by content address → legality gate → execute (or the
+    /// redundant-voting path). The mask fingerprint is folded into both
+    /// cache keys, so healthy and degraded artifacts never alias; a healthy
+    /// mask folds to the identity, leaving the pre-fault key space
+    /// untouched. Returns the response plus the accounting the caller
+    /// records once the recovery ladder settles.
+    #[allow(clippy::too_many_arguments)]
+    fn attempt(
+        &mut self,
+        req: &Request,
+        cancel: &CancelToken,
+        spec: &Arc<WorkloadSpec>,
+        fingerprint: u64,
+        shape: u64,
+        retries: &std::cell::Cell<u64>,
+        is_remap_retry: bool,
+        fault_detected: &mut bool,
+        corrected: &mut bool,
+        t0: Instant,
+    ) -> (Response, u64, bool, WorkloadKey, usize) {
+        // consulted only by the feature-gated injection site below
+        let _ = is_remap_retry;
+        let mask = self.fault_mask(req.target);
+        let eff_fp = mask.fold_fingerprint(fingerprint);
+        let key = WorkloadKey {
+            fingerprint: eff_fp,
+            n: spec.n,
+            target: req.target,
+        };
+        // both cache levels for this request live on the shard owning its
+        // *effective* fingerprint — same kernel under the same mask, same
+        // shard, same single-flight map
+        let shard = self.shards.shard_of(eff_fp);
         #[cfg(any(test, feature = "fault-injection"))]
         let faults = self.faults.clone();
-        // the compile-cache outcome this request observed (None when the
-        // exec cache short-circuited the whole pipeline)
-        let mut compile_outcome: Option<CacheOutcome> = None;
-        let mut symbolic_use = SymbolicUse::None;
-        // both cache levels for this request live on the shard owning its
-        // fingerprint — same kernel, same shard, same single-flight map
-        let shard = self.shards.shard_of(fingerprint);
-        let exec_cache = Arc::clone(self.shards.exec(fingerprint));
-        let cache = self.shards.compile(fingerprint);
-        let input_memo = &mut self.inputs;
-        let metrics = &mut self.metrics;
-        let (result, exec_outcome) = exec_cache.get_or_run_tracked(
-            exec_key,
-            || {
-                #[cfg(any(test, feature = "fault-injection"))]
-                if let Some(plan) = faults.as_deref() {
-                    if plan.should_fire(FaultSite::CompileDelay, req.id) {
-                        std::thread::sleep(plan.delay());
-                    }
-                    if plan.should_fire(FaultSite::CompilePanic, req.id) {
-                        panic!("injected fault: compile_panic (request {})", req.id);
-                    }
-                }
-                let (compiled, outcome, used) =
-                    cache.get_or_compile_shaped_cancellable(key, shape, &spec, cancel, &retries);
-                compile_outcome = Some(outcome);
-                symbolic_use = used;
-                let kernel = compiled.map_err(|e| format!("{COMPILE_FAILED_PREFIX}{e}"))?;
-                cancel.check("execute")?;
-                // static legality gate: an artifact whose analysis report is
-                // illegal never reaches a simulator — reject with the
-                // offending dependence edge named (deterministic in the
-                // artifact, so caching the refusal is sound)
-                if let Some(v) = kernel.analysis().and_then(|rep| rep.first_hard()) {
-                    return Err(format!("{ILLEGAL_PREFIX}{}", v.describe()));
-                }
-                #[cfg(any(test, feature = "fault-injection"))]
-                if let Some(plan) = faults.as_deref() {
-                    if plan.should_fire(FaultSite::ExecPanic, req.id) {
-                        panic!("injected fault: exec_panic (request {})", req.id);
-                    }
-                }
-                let ins = input_memo.get_or_gen(&spec, fingerprint, req.seed, metrics);
-                kernel.execute(&ins, req.batch)
-            },
-            &retries,
-        );
-        let exec_hit = exec_outcome != CacheOutcome::Miss;
-        self.metrics.record_exec_outcome(exec_hit);
-        self.metrics.record_symbolic(req.target, shape, symbolic_use);
-        let symbolic_hit = symbolic_use == (SymbolicUse::Instantiated { reused: true });
-        // an exec-cache hit implicitly reused the compiled artifact
-        let cache_hit = compile_outcome
-            .map(|o| o != CacheOutcome::Miss)
-            .unwrap_or(true);
 
-        let (mut resp, cycles, ok) = match result {
+        let (result, exec_hit, cache_hit, symbolic_hit) = if req.redundancy == Redundancy::None {
+            let exec_key = ExecKey {
+                workload: key,
+                seed: req.seed,
+                batch: req.batch,
+            };
+            // the compile-cache outcome this request observed (None when
+            // the exec cache short-circuited the whole pipeline)
+            let mut compile_outcome: Option<CacheOutcome> = None;
+            let mut symbolic_use = SymbolicUse::None;
+            let exec_cache = Arc::clone(self.shards.exec(eff_fp));
+            let cache = self.shards.compile(eff_fp);
+            let input_memo = &mut self.inputs;
+            let metrics = &mut self.metrics;
+            let (result, exec_outcome) = exec_cache.get_or_run_tracked(
+                exec_key,
+                || {
+                    #[cfg(any(test, feature = "fault-injection"))]
+                    if let Some(plan) = faults.as_deref() {
+                        if plan.should_fire(FaultSite::CompileDelay, req.id) {
+                            std::thread::sleep(plan.delay());
+                        }
+                        if plan.should_fire(FaultSite::CompilePanic, req.id) {
+                            panic!("injected fault: compile_panic (request {})", req.id);
+                        }
+                    }
+                    let (compiled, outcome, used) = cache.get_or_compile_masked_cancellable(
+                        key, shape, spec, &mask, cancel, retries,
+                    );
+                    compile_outcome = Some(outcome);
+                    symbolic_use = used;
+                    let kernel = compiled.map_err(|e| format!("{COMPILE_FAILED_PREFIX}{e}"))?;
+                    cancel.check("execute")?;
+                    // static legality gate: an artifact whose analysis report
+                    // is illegal never reaches a simulator — reject with the
+                    // offending dependence edge named (deterministic in the
+                    // artifact, so caching the refusal is sound)
+                    if let Some(v) = kernel.analysis().and_then(|rep| rep.first_hard()) {
+                        return Err(format!("{ILLEGAL_PREFIX}{}", v.describe()));
+                    }
+                    #[cfg(any(test, feature = "fault-injection"))]
+                    if let Some(plan) = faults.as_deref() {
+                        if plan.should_fire(FaultSite::ExecPanic, req.id) {
+                            panic!("injected fault: exec_panic (request {})", req.id);
+                        }
+                        // a PE reports fail-stop mid-execution. The remap
+                        // retry runs clean: its artifact was recompiled
+                        // around the quarantined PE, so the injected fault
+                        // cannot recur at the same site.
+                        if !is_remap_retry && plan.should_fire(FaultSite::PeFailStop, req.id) {
+                            let pe =
+                                (plan.decision_hash(FaultSite::PeFailStop, req.id) >> 16) % 16;
+                            return Err(format!(
+                                "{PE_FAULT_MARKER} PE {pe} reported fail-stop during \
+                                 execution (injected, request {})",
+                                req.id
+                            ));
+                        }
+                    }
+                    let ins = input_memo.get_or_gen(spec, fingerprint, req.seed, metrics);
+                    kernel.execute(&ins, req.batch)
+                },
+                retries,
+            );
+            let exec_hit = exec_outcome != CacheOutcome::Miss;
+            self.metrics.record_exec_outcome(exec_hit);
+            self.metrics.record_symbolic(req.target, shape, symbolic_use);
+            // SEU strikes happen on actual executions, not memo replays
+            if let Ok(rep) = &result {
+                if !exec_hit {
+                    self.metrics.seu_injected += rep.seu_flips;
+                }
+            }
+            let symbolic_hit = symbolic_use == (SymbolicUse::Instantiated { reused: true });
+            // an exec-cache hit implicitly reused the compiled artifact
+            let cache_hit = compile_outcome
+                .map(|o| o != CacheOutcome::Miss)
+                .unwrap_or(true);
+            (result, exec_hit, cache_hit, symbolic_hit)
+        } else {
+            self.attempt_redundant(
+                req,
+                cancel,
+                spec,
+                fingerprint,
+                shape,
+                &mask,
+                key,
+                retries,
+                fault_detected,
+                corrected,
+            )
+        };
+
+        let (resp, cycles, ok) = match result {
             Ok(rep) => {
                 let resp = self.finish_success(
-                    req, &spec, fingerprint, &rep, cache_hit, exec_hit, symbolic_hit, false, t0,
+                    req, spec, fingerprint, &rep, cache_hit, exec_hit, symbolic_hit, false, t0,
                 );
                 let cycles = resp.batch_cycles;
                 let ok = resp.validated != Some(false);
@@ -656,6 +903,24 @@ impl Session {
                 );
                 (resp, 0, false)
             }
+            // a detected hardware-fault event: the ladder in `handle_with`
+            // decides whether it is recoverable (quarantine + remap) or
+            // final. Checked before the degrade arm on purpose —
+            // remap-before-degrade: a fail-stop on an array target re-serves
+            // on the *same* target under a new mask; it never silently falls
+            // back to the sequential reference.
+            Err(e) if e.contains(PE_FAULT_MARKER) || e.contains(VOTE_MISMATCH_MARKER) => {
+                let resp = Response::failure(
+                    req,
+                    e,
+                    ErrorKind::Fault,
+                    cache_hit,
+                    exec_hit,
+                    symbolic_hit,
+                    t0.elapsed(),
+                );
+                (resp, 0, false)
+            }
             // graceful degradation: a *deterministic* compile failure on an
             // array target falls back to the sequential reference when the
             // request opted in (transient errors retry instead; execution
@@ -666,7 +931,7 @@ impl Session {
                     && e.starts_with(COMPILE_FAILED_PREFIX)
                     && !is_transient_error(&e) =>
             {
-                self.degrade(req, &spec, fingerprint, shape, e, cache_hit, cancel, &retries, t0)
+                self.degrade(req, spec, fingerprint, shape, e, cache_hit, cancel, retries, t0)
             }
             // a statically illegal artifact is a typed rejection: never
             // degraded (the schedule itself is provably wrong — falling
@@ -696,12 +961,134 @@ impl Session {
                 (resp, 0, false)
             }
         };
-        resp.retries = retries.get();
-        self.metrics.retries += retries.get();
-        self.metrics
-            .record_request(req.target, key, cycles, resp.wall, ok, cache_hit);
-        self.metrics.record_shard(shard, resp.wall, ok);
-        resp
+        (resp, cycles, ok, key, shard)
+    }
+
+    /// Run one request redundantly (DMR/TMR legs) and vote on the outputs.
+    /// Bypasses the exec-report cache on purpose: the memo would collapse
+    /// every leg into one cached run and hide the vote — legs and votes are
+    /// per-request events. Under the single-event assumption exactly leg 0
+    /// runs with SEU injection armed; every other leg (and every retry leg)
+    /// forces [`CLEAN_LEG`]. Returns
+    /// `(result, exec_hit, cache_hit, symbolic_hit)`.
+    #[allow(clippy::too_many_arguments)]
+    fn attempt_redundant(
+        &mut self,
+        req: &Request,
+        cancel: &CancelToken,
+        spec: &Arc<WorkloadSpec>,
+        fingerprint: u64,
+        shape: u64,
+        mask: &FaultMask,
+        key: WorkloadKey,
+        retries: &std::cell::Cell<u64>,
+        fault_detected: &mut bool,
+        corrected: &mut bool,
+    ) -> (
+        Result<Arc<crate::backend::ExecReport>, String>,
+        bool,
+        bool,
+        bool,
+    ) {
+        let cache = Arc::clone(self.shards.compile(key.fingerprint));
+        let (compiled, outcome, used) =
+            cache.get_or_compile_masked_cancellable(key, shape, spec, mask, cancel, retries);
+        self.metrics.record_symbolic(req.target, shape, used);
+        // the exec cache was bypassed: account the request as a miss so the
+        // hit-rate denominators stay truthful
+        self.metrics.record_exec_outcome(false);
+        let cache_hit = outcome != CacheOutcome::Miss;
+        let symbolic_hit = used == (SymbolicUse::Instantiated { reused: true });
+        let kernel = match compiled {
+            Ok(k) => k,
+            Err(e) => {
+                return (
+                    Err(format!("{COMPILE_FAILED_PREFIX}{e}")),
+                    false,
+                    cache_hit,
+                    symbolic_hit,
+                )
+            }
+        };
+        if let Err(e) = cancel.check("execute") {
+            return (Err(e), false, cache_hit, symbolic_hit);
+        }
+        if let Some(v) = kernel.analysis().and_then(|rep| rep.first_hard()) {
+            return (
+                Err(format!("{ILLEGAL_PREFIX}{}", v.describe())),
+                false,
+                cache_hit,
+                symbolic_hit,
+            );
+        }
+        let ins = self
+            .inputs
+            .get_or_gen(spec, fingerprint, req.seed, &mut self.metrics);
+        let legs = req.redundancy.legs();
+        let mut round = Vec::with_capacity(legs);
+        for i in 0..legs {
+            // single-event assumption: the seeded strike hits at most one
+            // leg per request — leg 0 runs armed, the rest run clean
+            let leg = if i == 0 { 0 } else { CLEAN_LEG };
+            match kernel.execute_leg(&ins, req.batch, leg) {
+                Ok(rep) => {
+                    self.metrics.seu_injected += rep.seu_flips;
+                    round.push(rep);
+                }
+                Err(e) => return (Err(e), false, cache_hit, symbolic_hit),
+            }
+        }
+        let vote = match req.redundancy {
+            Redundancy::None => unreachable!("redundant path requires ≥ 2 legs"),
+            Redundancy::Dmr => {
+                if round[0].outputs == round[1].outputs {
+                    Ok(round.swap_remove(1))
+                } else {
+                    // detection: a mismatch is never served. Retry both legs
+                    // clean — a transient strike does not recur — and only
+                    // serve if they now agree.
+                    *fault_detected = true;
+                    self.metrics.vote_mismatches += 1;
+                    let a = kernel.execute_leg(&ins, req.batch, CLEAN_LEG);
+                    let b = kernel.execute_leg(&ins, req.batch, CLEAN_LEG);
+                    match (a, b) {
+                        (Ok(a), Ok(b)) if a.outputs == b.outputs => Ok(a),
+                        (Ok(_), Ok(_)) => Err(format!(
+                            "{VOTE_MISMATCH_MARKER} DMR legs disagree after clean retry \
+                             (request {})",
+                            req.id
+                        )),
+                        (Err(e), _) | (_, Err(e)) => Err(e),
+                    }
+                }
+            }
+            Redundancy::Tmr => {
+                if round[1].outputs == round[2].outputs {
+                    // the two clean legs agree — that is the majority. If
+                    // the armed leg disagrees it was outvoted: corrected.
+                    if round[0].outputs != round[1].outputs {
+                        *corrected = true;
+                        self.metrics.seu_corrected += 1;
+                    }
+                    Ok(round.swap_remove(1))
+                } else if round[0].outputs == round[1].outputs
+                    || round[0].outputs == round[2].outputs
+                {
+                    // a *clean* leg deviates (outside the single-event
+                    // model, but vote anyway): the majority includes the
+                    // armed leg — serve it, count the detection
+                    *fault_detected = true;
+                    self.metrics.vote_mismatches += 1;
+                    Ok(round.swap_remove(0))
+                } else {
+                    Err(format!(
+                        "{VOTE_MISMATCH_MARKER} no TMR majority (request {})",
+                        req.id
+                    ))
+                }
+            }
+        };
+        (vote.map(Arc::new), false, cache_hit, symbolic_hit)
     }
 
     /// Build the success response: validate if asked (sharing the memoized
@@ -745,6 +1132,9 @@ impl Session {
             error: None,
             error_kind: None,
             retries: 0, // stamped by the caller from the shared cell
+            fault_detected: false,
+            remapped: false,
+            corrected: false,
             wall: t0.elapsed(),
         }
     }
@@ -993,6 +1383,18 @@ impl Default for Session {
     }
 }
 
+/// Extract the PE index from a fail-stop diagnostic (`"... PE 7 reported
+/// fail-stop ..."`). Diagnostics are producer-formatted, so a missing index
+/// just skips the per-PE quarantine — the target-wide cache invalidation
+/// and remap still happen.
+fn parse_failed_pe(msg: &str) -> Option<usize> {
+    let rest = &msg[msg.find("PE ")? + 3..];
+    let end = rest
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1000,15 +1402,26 @@ mod tests {
 
     #[test]
     fn error_kind_name_parse_roundtrip() {
-        for k in [
-            ErrorKind::Shed,
-            ErrorKind::Timeout,
-            ErrorKind::Failed,
-            ErrorKind::Illegal,
-        ] {
+        for k in ErrorKind::ALL {
             assert_eq!(ErrorKind::parse(k.name()), Some(k), "{}", k.name());
         }
         assert_eq!(ErrorKind::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn redundancy_names_parse_and_count_legs() {
+        for (r, legs) in [
+            (Redundancy::None, 1),
+            (Redundancy::Dmr, 2),
+            (Redundancy::Tmr, 3),
+        ] {
+            assert_eq!(Redundancy::parse(r.name()), Some(r), "{}", r.name());
+            assert_eq!(r.legs(), legs);
+        }
+        assert_eq!(Redundancy::parse("quad"), None);
+        assert_eq!(Redundancy::default(), Redundancy::None);
+        assert_eq!(parse_failed_pe("[pe-fault] PE 7 reported fail-stop"), Some(7));
+        assert_eq!(parse_failed_pe("no index here"), None);
     }
 
     #[test]
@@ -1327,6 +1740,66 @@ mod tests {
         assert_eq!(r.error_kind, Some(ErrorKind::Failed));
         assert!(!r.degraded);
         assert_eq!(s.metrics.degraded, 0);
+    }
+
+    #[test]
+    fn detected_pe_fail_stop_quarantines_remaps_and_serves() {
+        use crate::faults::FaultMask;
+        let mut s = Session::new();
+        let plan = Arc::new(FaultPlan::new(11).with_rate(FaultSite::PeFailStop, 1000));
+        s.set_faults(plan.clone());
+        // the injected fail-stop fires on the first execution; the ladder
+        // quarantines the reported PE, invalidates the target's caches and
+        // re-serves from an artifact recompiled over the surviving sub-array
+        let r = s.handle(&Request::named(1, "gemm", 4, Target::Tcpa, 1, true, 3));
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.fault_detected, "the fail-stop was detected");
+        assert!(r.remapped, "served from the remapped artifact");
+        assert!(!r.corrected, "no voting ran");
+        assert_eq!(r.validated, Some(true), "remapped outputs stay correct");
+        assert_eq!(s.metrics.pe_faults, 1);
+        assert_eq!(s.metrics.remaps, 1);
+        assert_eq!(plan.injected(FaultSite::PeFailStop), 1, "retry runs clean");
+        // the quarantine persisted: the target now serves under a real mask
+        assert!(!s.fault_mask(Target::Tcpa).is_healthy());
+        assert!(s.fault_mask(Target::Seq).is_healthy(), "seq has no array");
+        // a repeat request serves from the degraded-keyed caches, no new
+        // detection, no second remap
+        let r2 = s.handle(&Request::named(2, "gemm", 4, Target::Tcpa, 1, true, 3));
+        assert!(r2.error.is_none(), "{:?}", r2.error);
+        assert!(!r2.fault_detected && !r2.remapped);
+        assert_eq!(r2.validated, Some(true));
+        assert_eq!(s.metrics.pe_faults, 1, "no re-detection under the mask");
+    }
+
+    #[test]
+    fn dmr_detects_and_tmr_corrects_a_seeded_seu() {
+        use crate::faults::FaultMask;
+        let mut s = Session::new();
+        // arm transient bit-flips on the CGRA: every armed leg is struck
+        s.set_fault_mask(Target::Cgra, FaultMask::healthy().with_seu(1000, 42));
+        // DMR: the corrupted leg is *detected*, never served — the clean
+        // retry pair agrees and its (correct) report is what goes out
+        let dmr = s.handle(
+            &Request::named(1, "gemm", 8, Target::Cgra, 1, true, 3)
+                .with_redundancy(Redundancy::Dmr),
+        );
+        assert!(dmr.error.is_none(), "{:?}", dmr.error);
+        assert!(dmr.fault_detected, "the mismatch was detected");
+        assert!(!dmr.corrected && !dmr.remapped);
+        assert_eq!(dmr.validated, Some(true), "a mismatch is never served");
+        assert_eq!(s.metrics.vote_mismatches, 1);
+        assert!(s.metrics.seu_injected > 0, "the armed leg was struck");
+        // TMR: the two clean legs outvote the corrupted one in-place
+        let tmr = s.handle(
+            &Request::named(2, "gemm", 8, Target::Cgra, 1, true, 4)
+                .with_redundancy(Redundancy::Tmr),
+        );
+        assert!(tmr.error.is_none(), "{:?}", tmr.error);
+        assert!(tmr.corrected, "majority outvoted the corrupted leg");
+        assert_eq!(tmr.validated, Some(true));
+        assert_eq!(s.metrics.seu_corrected, 1);
+        assert_eq!(s.metrics.vote_mismatches, 1, "correction is not a mismatch");
     }
 
     #[test]

@@ -125,6 +125,21 @@ impl CacheShards {
         &self.exec[shard]
     }
 
+    /// Drop every ready compiled artifact *and* memoized execution report
+    /// produced on `target`, across all shards — the health-event hook: a
+    /// detected hardware fault makes everything resident for that array
+    /// suspect, whichever shard it hashed to. Returns the total dropped.
+    pub fn invalidate_target(&self, target: crate::backend::Target) -> usize {
+        let mut dropped = 0;
+        for c in &self.compile {
+            dropped += c.invalidate_target(target);
+        }
+        for e in &self.exec {
+            dropped += e.invalidate_target(target);
+        }
+        dropped
+    }
+
     /// Aggregate compile-plane counters summed over all shards. Because
     /// shard selection is key-pure, these satisfy exactly the identities a
     /// single cache would: `misses == compiles + instantiations`, etc.

@@ -48,7 +48,7 @@ use crate::util::json::{opt_u64, req_i64, req_str, req_u64, Json};
 use super::metrics::Metrics;
 use super::pool;
 use super::pool::PoolConfig;
-use super::session::{ErrorKind, Request, Response, WorkloadRef};
+use super::session::{ErrorKind, Redundancy, Request, Response, WorkloadRef};
 
 /// Wire protocol version; bump when any record shape changes.
 pub const WIRE_VERSION: i64 = 1;
@@ -86,6 +86,9 @@ pub fn request_to_json(r: &Request) -> Json {
     }
     if r.allow_fallback {
         fields.push(("allow_fallback", Json::Bool(true)));
+    }
+    if r.redundancy != Redundancy::None {
+        fields.push(("redundancy", Json::from(r.redundancy.name())));
     }
     Json::obj(fields)
 }
@@ -154,6 +157,14 @@ pub fn request_from_json(j: &Json) -> Result<Request, String> {
                 .as_bool()
                 .ok_or("field `allow_fallback` must be a boolean")?,
         },
+        redundancy: match j.get("redundancy") {
+            None | Some(Json::Null) => Redundancy::None,
+            Some(v) => {
+                let s = v.as_str().ok_or("field `redundancy` must be a string")?;
+                Redundancy::parse(s)
+                    .ok_or_else(|| format!("unknown redundancy `{s}` (want none, dmr or tmr)"))?
+            }
+        },
     })
 }
 
@@ -196,6 +207,17 @@ pub fn response_to_json(r: &Response) -> Json {
     ];
     if let Some(k) = r.error_kind {
         fields.push(("error_kind", Json::from(k.name())));
+    }
+    // additive fault-plane fields: emitted only when set, so healthy
+    // records stay byte-identical with pre-fault builds (protocol stays v1)
+    if r.fault_detected {
+        fields.push(("fault_detected", Json::Bool(true)));
+    }
+    if r.remapped {
+        fields.push(("remapped", Json::Bool(true)));
+    }
+    if r.corrected {
+        fields.push(("corrected", Json::Bool(true)));
     }
     Json::obj(fields)
 }
@@ -254,6 +276,13 @@ pub fn response_from_json(j: &Json) -> Result<Response, String> {
             }
         },
         error,
+        // absent in pre-fault records: default to "no fault event"
+        fault_detected: j
+            .get("fault_detected")
+            .and_then(Json::as_bool)
+            .unwrap_or(false),
+        remapped: j.get("remapped").and_then(Json::as_bool).unwrap_or(false),
+        corrected: j.get("corrected").and_then(Json::as_bool).unwrap_or(false),
         wall: Duration::from_micros(req_u64(j, "wall_us")?),
     })
 }
@@ -477,6 +506,9 @@ mod tests {
             error: Some("boom".into()),
             error_kind: Some(ErrorKind::Failed),
             retries: 0,
+            fault_detected: false,
+            remapped: false,
+            corrected: false,
             wall: Duration::from_micros(555),
         };
         let back = response_from_json(&response_to_json(&resp)).unwrap();
@@ -554,6 +586,9 @@ mod tests {
             error: Some("request shed: queue at capacity 4".into()),
             error_kind: Some(ErrorKind::Shed),
             retries: 2,
+            fault_detected: false,
+            remapped: false,
+            corrected: false,
             wall: Duration::ZERO,
         };
         let back = response_from_json(&response_to_json(&shed)).unwrap();
@@ -580,6 +615,103 @@ mod tests {
         let bad = r#"{"v":1,"id":1,"workload":"gemm","n":8,"target":"tcpa","batch":1,"latency_cycles":0,"batch_cycles":0,"validated":null,"cache_hit":false,"error":"x","error_kind":"dropped","wall_us":5}"#;
         let e = response_from_json(&Json::parse(bad).unwrap()).unwrap_err();
         assert!(e.contains("unknown error_kind"), "{e}");
+    }
+
+    #[test]
+    fn redundancy_roundtrips_and_defaults_to_none() {
+        for r in [Redundancy::Dmr, Redundancy::Tmr] {
+            let req = Request::named(3, "gemm", 8, Target::Cgra, 1, false, 0)
+                .with_redundancy(r);
+            let back = request_from_json(&request_to_json(&req)).unwrap();
+            assert_eq!(back.redundancy, r, "{}", r.name());
+        }
+        // absent field keeps the pre-fault meaning; plain requests encode
+        // without the key at all
+        let plain = parse_request_line(
+            r#"{"v":1,"workload":{"name":"gemm","n":8},"target":"tcpa"}"#,
+        )
+        .unwrap();
+        assert_eq!(plain.redundancy, Redundancy::None);
+        let bare = request_to_json(&Request::named(1, "gemm", 8, Target::Tcpa, 1, false, 0));
+        assert!(bare.get("redundancy").is_none());
+        // unknown modes are rejected, not coerced
+        let e = parse_request_line(
+            r#"{"v":1,"workload":{"name":"gemm","n":8},"target":"tcpa","redundancy":"quad"}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("unknown redundancy"), "{e}");
+    }
+
+    #[test]
+    fn fault_response_fields_roundtrip_and_default() {
+        let healthy = Response {
+            id: 1,
+            workload: "gemm".into(),
+            n: 8,
+            target: Target::Tcpa,
+            batch: 1,
+            latency_cycles: 10,
+            batch_cycles: 10,
+            validated: Some(true),
+            cache_hit: false,
+            exec_cache_hit: false,
+            symbolic_hit: false,
+            degraded: false,
+            error: None,
+            error_kind: None,
+            retries: 0,
+            fault_detected: false,
+            remapped: false,
+            corrected: false,
+            wall: Duration::from_micros(5),
+        };
+        // healthy records carry none of the fault keys — byte-compatible
+        // with pre-fault readers
+        let j = response_to_json(&healthy);
+        assert!(j.get("fault_detected").is_none());
+        assert!(j.get("remapped").is_none());
+        assert!(j.get("corrected").is_none());
+        // a remapped-and-served response roundtrips all three flags
+        let faulted = Response {
+            fault_detected: true,
+            remapped: true,
+            corrected: true,
+            ..healthy.clone()
+        };
+        let back = response_from_json(&response_to_json(&faulted)).unwrap();
+        assert!(back.fault_detected && back.remapped && back.corrected);
+        // a pre-fault record parses with the flags off
+        let line = r#"{"v":1,"id":1,"workload":"gemm","n":8,"target":"tcpa","batch":1,"latency_cycles":10,"batch_cycles":10,"validated":null,"cache_hit":false,"error":null,"wall_us":5}"#;
+        let old = response_from_json(&Json::parse(line).unwrap()).unwrap();
+        assert!(!old.fault_detected && !old.remapped && !old.corrected);
+        // the Fault kind survives the wire like every other kind
+        let fault = Response {
+            error: Some("[vote-mismatch] no TMR majority (request 1)".into()),
+            error_kind: Some(ErrorKind::Fault),
+            ..healthy
+        };
+        let back = response_from_json(&response_to_json(&fault)).unwrap();
+        assert_eq!(back.error_kind, Some(ErrorKind::Fault));
+    }
+
+    #[test]
+    fn every_error_kind_roundtrips_the_wire() {
+        // table-driven over the full enum: adding a kind without a wire
+        // name (or a parse arm) fails here, not in production
+        for kind in ErrorKind::ALL {
+            let resp = Response::failure(
+                &Request::named(1, "gemm", 8, Target::Tcpa, 1, false, 0),
+                format!("synthetic {} error", kind.name()),
+                kind,
+                false,
+                false,
+                false,
+                Duration::from_micros(7),
+            );
+            let back = response_from_json(&response_to_json(&resp)).unwrap();
+            assert_eq!(back.error_kind, Some(kind), "{}", kind.name());
+            assert_eq!(back.error, resp.error);
+        }
     }
 
     #[test]

@@ -1,0 +1,414 @@
+//! Hardware fault model for the simulated processor arrays.
+//!
+//! A [`FaultMask`] describes what is broken in a physical array: fail-stop
+//! PEs (manufacturing defects, aging, thermal shutoff — the PE never issues
+//! again), failed mesh links, and a per-PE transient bit-flip (SEU) rate.
+//! The mask attaches to [`crate::cgra::arch::CgraArch`] /
+//! [`crate::tcpa::arch::TcpaArch`], so everything downstream of an arch —
+//! mapper, partitioner, scheduler, legality verifier, simulator — sees the
+//! same fault state without any side channel.
+//!
+//! Fault *decisions* follow the same discipline as the serving-plane chaos
+//! module ([`crate::coordinator::faults`]): whether an SEU fires at a given
+//! `(cycle, pe)` site is a pure FNV-1a hash of `(seed, cycle, pe, leg)` —
+//! no RNG state, no ordering dependence — so a corrupted run reproduces
+//! from its seed alone, and redundant legs of the same request observe
+//! *different* corruption sites because the leg index is hashed in.
+//!
+//! SEU injection branches in the simulators are compiled only under
+//! `#[cfg(any(test, feature = "fault-injection"))]` — production builds
+//! carry no injection code in the hot loops. The mask itself (and the
+//! spare-aware remapping it drives) is unconditional: a deployment must be
+//! able to describe a dead PE without opting into chaos testing.
+
+use crate::ir::op::Value;
+use crate::util::json::Json;
+
+/// Marker carried by every fail-stop detection error, so error
+/// classification (the session's health-event handler, the transiency
+/// check that keeps detections out of the result caches) survives message
+/// nesting the same way [`crate::backend::DEADLINE_MARKER`] does.
+pub const PE_FAULT_MARKER: &str = "[pe-fault]";
+
+/// Marker carried by a redundant-execution voting failure (DMR legs that
+/// still disagree after the typed retry, or a three-way TMR split). Such a
+/// result is never served as data.
+pub const VOTE_MISMATCH_MARKER: &str = "[vote-mismatch]";
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a over a byte stream, continuing from `h`.
+fn fnv1a(mut h: u64, bytes: impl IntoIterator<Item = u8>) -> u64 {
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// What is broken in one physical array. Serializable, order-canonical
+/// (PE and link lists are kept sorted and deduplicated), and fingerprinted
+/// so degraded compile artifacts never alias healthy ones in the
+/// content-addressed caches.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultMask {
+    /// Fail-stop PEs by physical PE id (`y * width + x`). Sorted, deduped.
+    pub failed_pes: Vec<usize>,
+    /// Failed undirected mesh links as `(min_pe, max_pe)` pairs. Sorted,
+    /// deduped.
+    pub failed_links: Vec<(usize, usize)>,
+    /// Transient single-bit-flip rate in per-mille of issued results
+    /// (0 = never, 1000 = every result).
+    pub seu_rate: u16,
+    /// Seed of the deterministic SEU site hash.
+    pub seu_seed: u64,
+}
+
+impl FaultMask {
+    /// The healthy mask: nothing failed, no transients.
+    pub fn healthy() -> FaultMask {
+        FaultMask::default()
+    }
+
+    /// True when the mask changes nothing: no dead PEs, no dead links, no
+    /// transient flips. The healthy mask fingerprints to 0 and is never
+    /// folded into cache keys.
+    pub fn is_healthy(&self) -> bool {
+        self.failed_pes.is_empty() && self.failed_links.is_empty() && self.seu_rate == 0
+    }
+
+    /// Mark `pe` fail-stop. Idempotent; keeps the list canonical.
+    pub fn with_failed_pe(mut self, pe: usize) -> FaultMask {
+        self.fail_pe(pe);
+        self
+    }
+
+    /// In-place form of [`FaultMask::with_failed_pe`] (what the session's
+    /// health map uses when a fail-stop is detected at run time). Returns
+    /// true when the PE was newly marked.
+    pub fn fail_pe(&mut self, pe: usize) -> bool {
+        match self.failed_pes.binary_search(&pe) {
+            Ok(_) => false,
+            Err(i) => {
+                self.failed_pes.insert(i, pe);
+                true
+            }
+        }
+    }
+
+    /// Mark the undirected link between `a` and `b` failed. Idempotent.
+    pub fn with_failed_link(mut self, a: usize, b: usize) -> FaultMask {
+        let link = (a.min(b), a.max(b));
+        if let Err(i) = self.failed_links.binary_search(&link) {
+            self.failed_links.insert(i, link);
+        }
+        self
+    }
+
+    /// Enable transient bit flips at `per_mille`‰ of issued results under
+    /// `seed`.
+    pub fn with_seu(mut self, per_mille: u16, seed: u64) -> FaultMask {
+        self.seu_rate = per_mille.min(1000);
+        self.seu_seed = seed;
+        self
+    }
+
+    /// Whether `pe` is fail-stop.
+    pub fn pe_failed(&self, pe: usize) -> bool {
+        self.failed_pes.binary_search(&pe).is_ok()
+    }
+
+    /// Whether the undirected link between `a` and `b` is failed.
+    pub fn link_failed(&self, a: usize, b: usize) -> bool {
+        self.failed_links
+            .binary_search(&(a.min(b), a.max(b)))
+            .is_ok()
+    }
+
+    /// Whether a routing hop `from → to` is unusable: the destination PE is
+    /// dead or the link between them is.
+    pub fn route_blocked(&self, from: usize, to: usize) -> bool {
+        self.pe_failed(to) || self.link_failed(from, to)
+    }
+
+    /// The union of two masks: everything failed in either, and the higher
+    /// of the two SEU rates (with its seed). What a backend applies when a
+    /// request-level mask lands on an arch that already carries one.
+    pub fn union(&self, other: &FaultMask) -> FaultMask {
+        let mut out = self.clone();
+        for &pe in &other.failed_pes {
+            out.fail_pe(pe);
+        }
+        for &(a, b) in &other.failed_links {
+            out = out.with_failed_link(a, b);
+        }
+        if other.seu_rate > out.seu_rate {
+            out.seu_rate = other.seu_rate;
+            out.seu_seed = other.seu_seed;
+        }
+        out
+    }
+
+    /// Stable FNV-1a fingerprint of the canonical mask encoding; 0 for the
+    /// healthy mask. Folded into workload fingerprints (via
+    /// [`FaultMask::fold_fingerprint`]) so healthy and degraded artifacts
+    /// never alias in the compile or exec caches.
+    pub fn fingerprint(&self) -> u64 {
+        if self.is_healthy() {
+            return 0;
+        }
+        let mut h = FNV_OFFSET;
+        for &pe in &self.failed_pes {
+            h = fnv1a(h, (pe as u64).to_le_bytes());
+        }
+        h = fnv1a(h, [0xFE]);
+        for &(a, b) in &self.failed_links {
+            h = fnv1a(h, (a as u64).to_le_bytes());
+            h = fnv1a(h, (b as u64).to_le_bytes());
+        }
+        h = fnv1a(h, [0xFD]);
+        h = fnv1a(h, self.seu_rate.to_le_bytes());
+        h = fnv1a(h, self.seu_seed.to_le_bytes());
+        h.max(1) // the healthy fingerprint 0 is reserved
+    }
+
+    /// Fold this mask into a workload fingerprint. Identity for the healthy
+    /// mask, so every existing key, cache entry and golden artifact is
+    /// byte-identical when no faults are configured.
+    pub fn fold_fingerprint(&self, fingerprint: u64) -> u64 {
+        if self.is_healthy() {
+            return fingerprint;
+        }
+        let h = fnv1a(FNV_OFFSET, fingerprint.to_le_bytes());
+        fnv1a(h, self.fingerprint().to_le_bytes())
+    }
+
+    /// Name suffix for a masked arch (`""` when healthy) — keeps per-arch
+    /// memo tables (e.g. the router's step-target memo) from aliasing a
+    /// masked arch onto its healthy namesake.
+    pub fn name_suffix(&self) -> String {
+        if self.is_healthy() {
+            String::new()
+        } else {
+            format!("+f{:08x}", self.fingerprint() as u32)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "failed_pes",
+                Json::Array(self.failed_pes.iter().map(|&p| Json::Int(p as i64)).collect()),
+            ),
+            (
+                "failed_links",
+                Json::Array(
+                    self.failed_links
+                        .iter()
+                        .map(|&(a, b)| {
+                            Json::Array(vec![Json::Int(a as i64), Json::Int(b as i64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("seu_rate", Json::Int(self.seu_rate as i64)),
+            ("seu_seed", Json::Int(self.seu_seed as i64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultMask, String> {
+        let mut mask = FaultMask::healthy();
+        if let Some(pes) = j.get("failed_pes").and_then(|v| v.as_array()) {
+            for p in pes {
+                let pe = p.as_i64().ok_or("failed_pes entries must be integers")?;
+                mask.fail_pe(pe.max(0) as usize);
+            }
+        }
+        if let Some(links) = j.get("failed_links").and_then(|v| v.as_array()) {
+            for l in links {
+                let pair = l.as_array().ok_or("failed_links entries must be pairs")?;
+                if pair.len() != 2 {
+                    return Err("failed_links entries must be [a, b] pairs".into());
+                }
+                let a = pair[0].as_i64().ok_or("link endpoint must be an integer")?;
+                let b = pair[1].as_i64().ok_or("link endpoint must be an integer")?;
+                mask = mask.with_failed_link(a.max(0) as usize, b.max(0) as usize);
+            }
+        }
+        let rate = j.get("seu_rate").and_then(|v| v.as_i64()).unwrap_or(0);
+        let seed = j.get("seu_seed").and_then(|v| v.as_i64()).unwrap_or(0);
+        mask.seu_rate = rate.clamp(0, 1000) as u16;
+        mask.seu_seed = seed as u64;
+        Ok(mask)
+    }
+}
+
+/// A prepared SEU decision function for one simulator run: the mask's
+/// `(rate, seed)` plus the redundancy leg index. `Copy`, branch-cheap and
+/// allocation-free, so it is safe to consult inside the simulators'
+/// lint-enforced hot loops.
+#[derive(Debug, Clone, Copy)]
+pub struct SeuInjection {
+    pub seed: u64,
+    pub rate: u16,
+    /// Redundancy leg (0 for a plain run). Hashed into every site decision
+    /// so DMR/TMR legs of the same request corrupt at different sites.
+    pub leg: u64,
+}
+
+impl SeuInjection {
+    /// No injection (rate 0) — what every non-chaos run threads through.
+    pub fn off() -> SeuInjection {
+        SeuInjection { seed: 0, rate: 0, leg: 0 }
+    }
+
+    /// The injection a mask implies for redundancy leg `leg`.
+    pub fn of(mask: &FaultMask, leg: u64) -> SeuInjection {
+        SeuInjection {
+            seed: mask.seu_seed,
+            rate: mask.seu_rate,
+            leg,
+        }
+    }
+
+    /// Whether any site can fire at all.
+    pub fn active(&self) -> bool {
+        self.rate > 0
+    }
+
+    /// Decide (purely, from `(seed, cycle, pe, leg)`) whether an SEU strikes
+    /// the result a PE issues this cycle; if so, return which of the 32
+    /// datapath bits flips.
+    pub fn strike(&self, cycle: u64, pe: u64) -> Option<u32> {
+        if self.rate == 0 {
+            return None;
+        }
+        let mut h = fnv1a(FNV_OFFSET, self.seed.to_le_bytes());
+        h = fnv1a(h, cycle.to_le_bytes());
+        h = fnv1a(h, pe.to_le_bytes());
+        h = fnv1a(h, self.leg.to_le_bytes());
+        if h % 1000 < self.rate as u64 {
+            Some(((h >> 32) % 32) as u32)
+        } else {
+            None
+        }
+    }
+
+    /// Apply one strike decision to a freshly computed result: `Some` with
+    /// exactly one bit of the 32-bit datapath word flipped when the site
+    /// fires, `None` otherwise.
+    pub fn flip(&self, cycle: u64, pe: u64, val: Value) -> Option<Value> {
+        let bit = self.strike(cycle, pe)?;
+        Some(match val {
+            Value::I32(x) => Value::I32(x ^ (1 << bit)),
+            Value::F32(x) => Value::F32(f32::from_bits(x.to_bits() ^ (1 << bit))),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_mask_is_inert() {
+        let m = FaultMask::healthy();
+        assert!(m.is_healthy());
+        assert_eq!(m.fingerprint(), 0);
+        assert_eq!(m.fold_fingerprint(0xDEAD), 0xDEAD, "healthy fold is identity");
+        assert_eq!(m.name_suffix(), "");
+        assert!(!m.pe_failed(0));
+        assert!(!m.route_blocked(0, 1));
+    }
+
+    #[test]
+    fn mask_is_canonical_and_idempotent() {
+        let a = FaultMask::healthy().with_failed_pe(5).with_failed_pe(2).with_failed_pe(5);
+        let b = FaultMask::healthy().with_failed_pe(2).with_failed_pe(5);
+        assert_eq!(a, b, "insertion order and repeats do not matter");
+        assert_eq!(a.failed_pes, vec![2, 5]);
+        let l1 = FaultMask::healthy().with_failed_link(3, 1);
+        let l2 = FaultMask::healthy().with_failed_link(1, 3);
+        assert_eq!(l1, l2, "links are undirected");
+        assert!(l1.link_failed(1, 3) && l1.link_failed(3, 1));
+    }
+
+    #[test]
+    fn fingerprints_separate_distinct_masks_and_fold_changes_keys() {
+        let a = FaultMask::healthy().with_failed_pe(3);
+        let b = FaultMask::healthy().with_failed_pe(4);
+        let c = FaultMask::healthy().with_seu(5, 42);
+        assert_ne!(a.fingerprint(), 0);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_ne!(a.fold_fingerprint(77), 77, "masked fold must move the key");
+        assert_ne!(a.fold_fingerprint(77), b.fold_fingerprint(77));
+        assert!(a.name_suffix().starts_with("+f"));
+    }
+
+    #[test]
+    fn union_merges_failures_and_takes_the_hotter_seu() {
+        let a = FaultMask::healthy().with_failed_pe(1).with_seu(2, 10);
+        let b = FaultMask::healthy().with_failed_pe(7).with_failed_link(0, 1).with_seu(9, 20);
+        let u = a.union(&b);
+        assert_eq!(u.failed_pes, vec![1, 7]);
+        assert!(u.link_failed(0, 1));
+        assert_eq!((u.seu_rate, u.seu_seed), (9, 20));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_the_mask() {
+        let m = FaultMask::healthy()
+            .with_failed_pe(6)
+            .with_failed_link(2, 3)
+            .with_seu(15, 0xFEED);
+        let back = FaultMask::from_json(&m.to_json()).expect("roundtrip");
+        assert_eq!(m, back);
+        assert_eq!(m.fingerprint(), back.fingerprint());
+        let healthy = FaultMask::from_json(&FaultMask::healthy().to_json()).expect("healthy");
+        assert!(healthy.is_healthy());
+    }
+
+    #[test]
+    fn seu_decisions_are_deterministic_and_leg_dependent() {
+        let mask = FaultMask::healthy().with_seu(500, 7);
+        let a = SeuInjection::of(&mask, 0);
+        let b = SeuInjection::of(&mask, 0);
+        let other_leg = SeuInjection::of(&mask, 1);
+        let mut same = 0;
+        let mut differ = false;
+        for cycle in 0..256u64 {
+            for pe in 0..16u64 {
+                assert_eq!(a.strike(cycle, pe), b.strike(cycle, pe));
+                if a.strike(cycle, pe).is_some() {
+                    same += 1;
+                }
+                if a.strike(cycle, pe) != other_leg.strike(cycle, pe) {
+                    differ = true;
+                }
+            }
+        }
+        assert!((1000..=3000).contains(&same), "500‰ of 4096 sites, got {same}");
+        assert!(differ, "legs must observe different corruption sites");
+        assert!(!SeuInjection::off().active());
+        assert_eq!(SeuInjection::off().strike(3, 3), None);
+    }
+
+    #[test]
+    fn flip_changes_exactly_one_bit() {
+        let inj = SeuInjection { seed: 9, rate: 1000, leg: 0 };
+        let flipped = inj.flip(5, 2, Value::I32(0)).expect("rate 1000 always fires");
+        match flipped {
+            Value::I32(x) => assert_eq!(x.count_ones(), 1, "exactly one bit flipped"),
+            v => panic!("dtype preserved, got {v:?}"),
+        }
+        let f = inj.flip(5, 2, Value::F32(1.0)).expect("fires");
+        match f {
+            Value::F32(x) => {
+                assert_eq!((x.to_bits() ^ 1.0f32.to_bits()).count_ones(), 1);
+            }
+            v => panic!("dtype preserved, got {v:?}"),
+        }
+    }
+}

@@ -37,6 +37,7 @@
 //! See `DESIGN.md` for the system inventory and experiment index.
 
 pub mod analysis;
+pub mod faults;
 pub mod util;
 pub mod ir;
 pub mod frontend;

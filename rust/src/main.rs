@@ -25,9 +25,21 @@
 //!                              # speaking the same JSONL wire protocol to
 //!                              # many concurrent connections, over S
 //!                              # fingerprint-sharded cache pairs
+//! repro serve --fault-seed S --fault-rate R
+//!                              # chaos builds only (--features
+//!                              # fault-injection): arm deterministic PE
+//!                              # fail-stop injection in every worker —
+//!                              # detections quarantine the PE, invalidate
+//!                              # the target's cached artifacts and remap
 //! repro analyze --all          # static legality proof for every builtin
 //! repro analyze <name> <n>     # … for one workload at one size, plus the
 //!                              # n-independent symbolic TCPA proof
+//! repro faults <name> <n> [--pe P] [--seed S]
+//!                              # fault-plane drill: serve healthy, then
+//!                              # under a fail-stop mask (spare-aware
+//!                              # remap), then redundantly (DMR/TMR voting
+//!                              # under an armed SEU mask), with the fault
+//!                              # counters reconciled at the end
 //! repro lint [<root>]          # source invariants (match-arm, hot-path
 //!                              # unwrap, sim hot-loop allocation rules)
 //! repro paula <file.paula>    # compile a PAULA program onto the TCPA
@@ -118,6 +130,34 @@ fn main() {
                 }),
                 ..pool::PoolConfig::default()
             };
+            // `--fault-seed`/`--fault-rate` arm deterministic PE fail-stop
+            // injection in every worker (chaos builds only; the plain build
+            // rejects the flags rather than silently serving healthy)
+            #[cfg(feature = "fault-injection")]
+            let pool_config = {
+                let mut config = pool_config;
+                if args.opt("fault-seed").is_some() || args.opt("fault-rate").is_some() {
+                    let seed = args.opt_u64("fault-seed", 42);
+                    let rate = args.opt_usize("fault-rate", 1000).min(1000) as u16;
+                    config.faults = Some(std::sync::Arc::new(
+                        repro::coordinator::FaultPlan::new(seed)
+                            .with_rate(repro::coordinator::FaultSite::PeFailStop, rate),
+                    ));
+                }
+                config
+            };
+            #[cfg(not(feature = "fault-injection"))]
+            if args.opt("fault-seed").is_some() || args.opt("fault-rate").is_some() {
+                eprintln!(
+                    "--fault-seed/--fault-rate need a chaos build: \
+                     cargo run --features fault-injection -- serve ..."
+                );
+                std::process::exit(2);
+            }
+            // keep a handle on the armed plan so the final report can show
+            // the per-site injected counters next to the fault counters
+            #[cfg(feature = "fault-injection")]
+            let fault_plan = pool_config.faults.clone();
             // shard count for both cache levels (fingerprint % S routing);
             // 1 keeps the classic single-cache plane
             let shards = args.opt_usize("shards", 1);
@@ -195,7 +235,14 @@ fn main() {
                     trace.len(),
                     trace.len() as f64 / wall.as_secs_f64().max(1e-9)
                 );
-                println!("{}", m.report());
+                #[cfg(feature = "fault-injection")]
+                let report = match &fault_plan {
+                    Some(plan) => m.report_with_fault_plan(plan),
+                    None => m.report(),
+                };
+                #[cfg(not(feature = "fault-injection"))]
+                let report = m.report();
+                println!("{report}");
             }
         }
         "analyze" => {
@@ -214,6 +261,22 @@ fn main() {
                 (vec![name], n)
             };
             if !analyze(&names, n) {
+                std::process::exit(1);
+            }
+        }
+        "faults" => {
+            let name = args.positional.get(1).cloned().unwrap_or_else(|| {
+                eprintln!("usage: repro faults <name> <n> [--pe P] [--seed S]");
+                std::process::exit(2);
+            });
+            let n = args
+                .positional
+                .get(2)
+                .and_then(|v| v.parse::<i64>().ok())
+                .unwrap_or(8);
+            let pe = args.opt_usize("pe", 5);
+            let seed = args.opt_u64("seed", 42);
+            if !faults_report(&name, n, pe, seed) {
                 std::process::exit(1);
             }
         }
@@ -271,12 +334,13 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: repro <table1|table2|table3|fig6|fig7|fig8|asic|validate|serve|analyze|lint|paula|all> \
+                "usage: repro <table1|table2|table3|fig6|fig7|fig8|asic|validate|serve|analyze|faults|lint|paula|all> \
                  [--quick] [--bench NAME] [--n N] [--sizes a,b,c] [--all] \
                  [--workers N] [--requests N|FILE.jsonl|-] [--trace mixed|NAME] \
                  [--listen ADDR|PATH] [--shards S] \
                  [--target tcpa|cgra|seq] [--compare] [--no-validate] \
-                 [--queue-cap N] [--default-deadline-ms MS]"
+                 [--queue-cap N] [--default-deadline-ms MS] \
+                 [--fault-seed S] [--fault-rate R] [--pe P] [--seed S]"
             );
             std::process::exit(2);
         }
@@ -336,6 +400,98 @@ fn analyze(names: &[String], n: i64) -> bool {
         eprintln!("analyze: ILLEGAL mapping detected (see verdicts above)");
     }
     all_legal
+}
+
+/// Fault-plane drill for one workload on both array targets: serve it
+/// healthy, serve it again under a fail-stop mask covering PE `pe`
+/// (spare-aware remap — the backend recompiles around the dead PE and the
+/// golden model re-validates the remapped outputs), then serve it DMR and
+/// TMR under an armed per-PE SEU mask and report what the voters saw. The
+/// session's merged fault counters close the loop. SEU strikes only fire
+/// in chaos builds (`--features fault-injection`); elsewhere the legs run
+/// clean and the vote passes trivially. Returns `false` when a served
+/// response fails validation or errors unexpectedly.
+fn faults_report(name: &str, n: i64, pe: usize, seed: u64) -> bool {
+    use repro::coordinator::{Redundancy, Session};
+    use repro::faults::FaultMask;
+    if !WorkloadCatalog::builtin().contains(name) {
+        eprintln!(
+            "unknown workload `{name}` (want one of: {})",
+            WorkloadCatalog::builtin().names().join(", ")
+        );
+        return false;
+    }
+    if !cfg!(feature = "fault-injection") {
+        println!(
+            "(plain build: SEU strikes disarmed — rebuild with \
+             --features fault-injection to see DMR detect / TMR correct)"
+        );
+    }
+    let mut all_ok = true;
+    let mut merged = Metrics::default();
+    for target in [Target::Tcpa, Target::Cgra] {
+        println!("== {name} (n={n}) on {} ==", target.name());
+        let mut session = Session::new();
+        let mut id = 0u64;
+        let mut next = |s: &mut Session, red: Redundancy| {
+            id += 1;
+            s.handle(&Request::named(id, name, n, target, 1, true, seed).with_redundancy(red))
+        };
+        let healthy = next(&mut session, Redundancy::None);
+        match &healthy.error {
+            None => println!(
+                "  healthy:          latency={} cycles, validated={:?}",
+                healthy.latency_cycles, healthy.validated
+            ),
+            Some(e) => {
+                println!("  healthy:          FAILED: {e}");
+                all_ok = false;
+                continue;
+            }
+        }
+        // spare-aware remap: fail one PE, recompile around it, re-validate
+        session.set_fault_mask(target, FaultMask::healthy().with_failed_pe(pe));
+        let masked = next(&mut session, Redundancy::None);
+        match &masked.error {
+            None => {
+                let bitwise_ok = masked.validated == Some(true);
+                println!(
+                    "  fail-stop PE {pe}:   remapped, latency={} cycles, validated={:?}",
+                    masked.latency_cycles, masked.validated
+                );
+                all_ok &= bitwise_ok;
+            }
+            // an honest verdict, not a failure of the drill: the surviving
+            // sub-array may be too small for this workload size
+            Some(e) => println!("  fail-stop PE {pe}:   unmappable on survivors: {e}"),
+        }
+        // redundant voting under an armed SEU mask (leg 0 is the armed leg)
+        session.set_fault_mask(target, FaultMask::healthy().with_seu(1000, seed));
+        for red in [Redundancy::Dmr, Redundancy::Tmr] {
+            let voted = next(&mut session, red);
+            match &voted.error {
+                None => println!(
+                    "  {}:              served, validated={:?}, fault_detected={}, corrected={}",
+                    red.name(),
+                    voted.validated,
+                    voted.fault_detected,
+                    voted.corrected
+                ),
+                Some(e) => println!("  {}:              withheld: {e}", red.name()),
+            }
+            all_ok &= voted.error.is_none() || red == Redundancy::Dmr;
+        }
+        merged.merge(&session.metrics);
+    }
+    println!(
+        "faults: pe_faults={} remaps={} seu_injected={} seu_corrected={} vote_mismatches={}",
+        merged.pe_faults,
+        merged.remaps,
+        merged.seu_injected,
+        merged.seu_corrected,
+        merged.vote_mismatches
+    );
+    all_ok
 }
 
 /// Serve the socket front-end until the process is killed: TCP

@@ -8,6 +8,7 @@
 //! surround the array; a Global Controller broadcasts control signals and a
 //! LION-style controller moves data between external memory and the buffers.
 
+use crate::faults::FaultMask;
 use crate::ir::op::FuClass;
 
 /// Per-PE functional-unit complement.
@@ -72,6 +73,12 @@ pub struct TcpaArch {
     pub lion_streaming: bool,
     /// Loop dimensions the peripherals (GC, AGs) support (4 in §V-B1).
     pub max_loop_dims: usize,
+    /// What is broken in this physical array instance. The TCPA recovery
+    /// story is *iteration-granular*: a fail-stop PE shrinks the array to a
+    /// surviving rectangular sub-array ([`TcpaArch::degrade`]) and the
+    /// partitioner re-tiles over it; the SEU rate drives the simulator's
+    /// deterministic bit-flip injection.
+    pub faults: FaultMask,
 }
 
 impl TcpaArch {
@@ -92,7 +99,75 @@ impl TcpaArch {
             io_banks: 32,
             lion_streaming: true,
             max_loop_dims: 4,
+            faults: FaultMask::healthy(),
         }
+    }
+
+    /// This arch carrying a fault mask (failures unioned onto whatever it
+    /// already had), with the name suffixed by the mask fingerprint so
+    /// nothing keyed by arch name aliases masked and healthy instances.
+    /// Geometry is unchanged — see [`TcpaArch::degrade`] for the structural
+    /// recovery step.
+    pub fn masked(&self, mask: &FaultMask) -> TcpaArch {
+        let faults = self.faults.union(mask);
+        let mut out = self.clone();
+        out.name = format!("{}{}", self.name, faults.name_suffix());
+        out.faults = faults;
+        out
+    }
+
+    /// The surviving sub-array under a fault mask: every row/column touched
+    /// by a fail-stop PE (or an endpoint of a failed link) is retired, and
+    /// the remainder is rounded **down to the nearest power of two** per
+    /// dimension — the Global Controller and the border address generators
+    /// address tiles with power-of-two strides, so arbitrary array widths
+    /// are not configurable. The sub-array is relocated onto healthy
+    /// rows/columns by peripheral reconfiguration, so the degraded arch
+    /// carries no structural faults of its own (the SEU rate, a property of
+    /// the silicon, rides along). Fewer PEs mean larger LSGP tiles and a
+    /// provably-legal but slower schedule.
+    ///
+    /// Fails when no non-empty sub-array survives.
+    pub fn degrade(&self, mask: &FaultMask) -> Result<TcpaArch, String> {
+        let faults = self.faults.union(mask);
+        if faults.failed_pes.is_empty() && faults.failed_links.is_empty() {
+            // nothing structural failed: full array, SEU rides along
+            return Ok(self.masked(mask));
+        }
+        let mut bad_rows = std::collections::BTreeSet::new();
+        let mut bad_cols = std::collections::BTreeSet::new();
+        let mut note = |pe: usize| {
+            if pe < self.n_pes() {
+                let (x, y) = self.pe_xy(pe);
+                bad_cols.insert(x);
+                bad_rows.insert(y);
+            }
+        };
+        for &pe in &faults.failed_pes {
+            note(pe);
+        }
+        for &(a, b) in &faults.failed_links {
+            note(a);
+            note(b);
+        }
+        let rows = pow2_floor(self.height.saturating_sub(bad_rows.len()));
+        let cols = pow2_floor(self.width.saturating_sub(bad_cols.len()));
+        if rows == 0 || cols == 0 {
+            return Err(format!(
+                "no surviving TCPA sub-array: {} of {} rows and {} of {} columns retired \
+                 by the fault mask",
+                bad_rows.len(),
+                self.height,
+                bad_cols.len(),
+                self.width
+            ));
+        }
+        let mut out = self.clone();
+        out.name = format!("{}-{cols}x{rows}{}", self.name, faults.name_suffix());
+        out.width = cols;
+        out.height = rows;
+        out.faults = FaultMask::healthy().with_seu(faults.seu_rate, faults.seu_seed);
+        Ok(out)
     }
 
     pub fn n_pes(&self) -> usize {
@@ -115,6 +190,15 @@ impl TcpaArch {
     }
 }
 
+/// Largest power of two ≤ `v` (0 for 0).
+fn pow2_floor(v: usize) -> usize {
+    if v == 0 {
+        0
+    } else {
+        1 << (usize::BITS - 1 - v.leading_zeros())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,5 +218,29 @@ mod tests {
         assert_eq!(a.io_words(), 32 * 128);
         let (x, y) = a.pe_xy(a.pe_id(2, 3));
         assert_eq!((x, y), (2, 3));
+    }
+
+    #[test]
+    fn degrade_retires_rows_and_columns_to_powers_of_two() {
+        let a = TcpaArch::paper(4, 4);
+        // one dead PE retires its row and column: 3×3 survives, rounded
+        // down to the 2×2 the peripherals can address
+        let one = a.degrade(&FaultMask::healthy().with_failed_pe(5)).expect("2x2");
+        assert_eq!((one.width, one.height), (2, 2));
+        assert!(one.faults.is_healthy(), "the sub-array avoids the failures");
+        assert_ne!(one.name, a.name);
+        // an SEU-only mask keeps the full array
+        let seu = a.degrade(&FaultMask::healthy().with_seu(10, 3)).expect("full");
+        assert_eq!((seu.width, seu.height), (4, 4));
+        assert_eq!(seu.faults.seu_rate, 10);
+        // a diagonal wipeout leaves nothing addressable
+        let mut total = FaultMask::healthy();
+        for i in 0..4 {
+            total = total.with_failed_pe(a.pe_id(i, i));
+        }
+        assert!(a.degrade(&total).is_err());
+        assert_eq!(super::pow2_floor(3), 2);
+        assert_eq!(super::pow2_floor(4), 4);
+        assert_eq!(super::pow2_floor(0), 0);
     }
 }

@@ -30,6 +30,7 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
+use crate::faults::SeuInjection;
 use crate::ir::affine::{dot, IVec};
 use crate::ir::loopnest::ArrayData;
 use crate::ir::op::{Dtype, OpKind, Value};
@@ -58,6 +59,9 @@ pub struct TcpaSimResult {
     pub max_channel_occupancy: usize,
     /// FIFO underflows / premature channel consumption (must be 0).
     pub timing_violations: u64,
+    /// Single-bit upsets injected into issued results (0 unless the run was
+    /// given an active [`SeuInjection`] under the `fault-injection` gate).
+    pub seu_flips: u64,
 }
 
 /// A merge-heap key. Field order gives the same total order as the old
@@ -219,6 +223,23 @@ pub fn simulate_with_plan_in(
     inputs: &ArrayData,
     scratch: &mut TcpaScratch,
 ) -> Result<TcpaSimResult, IoOverflow> {
+    simulate_with_plan_injected_in(cfg, plan, arch, inputs, scratch, SeuInjection::off())
+}
+
+/// [`simulate_with_plan_in`] with deterministic SEU injection: each issued
+/// result may have one bit flipped at the sites `inj` decides (the flipped
+/// word propagates through registers, channels and the output buffers — the
+/// I/O buffers themselves are modeled as ECC-protected). The flip branch
+/// only exists under `cfg(any(test, feature = "fault-injection"))`.
+pub fn simulate_with_plan_injected_in(
+    cfg: &TcpaConfig,
+    plan: &ExecPlan,
+    arch: &TcpaArch,
+    inputs: &ArrayData,
+    scratch: &mut TcpaScratch,
+    inj: SeuInjection,
+) -> Result<TcpaSimResult, IoOverflow> {
+    let _ = &inj; // used only under the fault-injection gate below
     let pra = &cfg.pra;
     let mut io = IoBuffers::new(pra, inputs, arch)?;
     let n_tiles = plan.n_tiles();
@@ -303,6 +324,8 @@ pub fn simulate_with_plan_in(
     per_pe_done.resize(n_tiles, 0);
     let mut issued = 0u64;
     let mut violations = 0u64;
+    #[allow(unused_mut)] // mutated only under the fault-injection gate
+    let mut flips = 0u64;
     let mut max_fd = 0usize;
     let mut max_chan = 0usize;
     let mut argv = [plan.dtype.zero(); MAX_ARGS];
@@ -337,6 +360,15 @@ pub fn simulate_with_plan_in(
             let val = match ep.op {
                 OpKind::Mov => argv[0],
                 op => Value::apply(op, &argv[..ep.args.len()]),
+            };
+            // SEU: flip one bit of the freshly issued FU result
+            #[cfg(any(test, feature = "fault-injection"))]
+            let val = match inj.flip(ev.cycle.max(0) as u64, ev.tile as u64, val) {
+                Some(hit) => {
+                    flips += 1;
+                    hit
+                }
+                None => val,
             };
             in_flight[tile * n_eqs + e].push_back(val);
             issued += 1;
@@ -391,6 +423,7 @@ pub fn simulate_with_plan_in(
         max_fd_occupancy: max_fd,
         max_channel_occupancy: max_chan,
         timing_violations: violations,
+        seu_flips: flips,
     })
 }
 
@@ -591,6 +624,20 @@ pub fn simulate_workload_prepared(
     arch: &TcpaArch,
     inputs: &ArrayData,
 ) -> Result<WorkloadRun, IoOverflow> {
+    simulate_workload_prepared_injected(cfgs, plans, read_after, arch, inputs, SeuInjection::off())
+}
+
+/// [`simulate_workload_prepared`] with deterministic SEU injection threaded
+/// into every kernel of the workload (per-kernel flip counts land in
+/// `WorkloadRun::kernels[i].seu_flips`).
+pub fn simulate_workload_prepared_injected(
+    cfgs: &[TcpaConfig],
+    plans: &[std::sync::Arc<ExecPlan>],
+    read_after: &[std::collections::HashSet<String>],
+    arch: &TcpaArch,
+    inputs: &ArrayData,
+    inj: SeuInjection,
+) -> Result<WorkloadRun, IoOverflow> {
     assert_eq!(
         cfgs.len(),
         plans.len(),
@@ -609,7 +656,8 @@ pub fn simulate_workload_prepared(
     let mut total = 0u64;
     let mut overlapped = 0u64;
     for (i, cfg) in cfgs.iter().enumerate() {
-        let mut r = simulate_with_plan_in(cfg, &plans[i], arch, &pool, &mut scratch)?;
+        let mut r =
+            simulate_with_plan_injected_in(cfg, &plans[i], arch, &pool, &mut scratch, inj)?;
         // Later kernels read intermediates from the pool (one clone per
         // array *actually read later*); the workload-level outputs take
         // ownership of the kernel's buffers instead of a second clone.
@@ -755,6 +803,45 @@ mod tests {
             assert_eq!(ka.per_pe_done, kb.per_pe_done);
             assert_eq!(ka.timing_violations, kb.timing_violations);
         }
+    }
+
+    #[test]
+    fn seu_injection_is_deterministic_and_off_by_default() {
+        use crate::faults::FaultMask;
+        let wl = build(BenchId::Gemm, 8);
+        let arch = TcpaArch::paper(4, 4);
+        let cfgs: Vec<_> = wl
+            .pras
+            .iter()
+            .map(|p| compile(p, &arch).expect("compile"))
+            .collect();
+        let plans: Vec<_> = cfgs
+            .iter()
+            .map(|c| std::sync::Arc::new(c.execution_plan()))
+            .collect();
+        let reads = workload_read_sets(&cfgs);
+        let ins = bench_inputs(BenchId::Gemm, 8, 11);
+        let clean = simulate_workload(&cfgs, &arch, &ins).expect("clean");
+        assert!(clean.kernels.iter().all(|k| k.seu_flips == 0));
+        let mask = FaultMask::healthy().with_seu(1000, 42);
+        let run = |leg: u64| {
+            simulate_workload_prepared_injected(
+                &cfgs,
+                &plans,
+                &reads,
+                &arch,
+                &ins,
+                SeuInjection::of(&mask, leg),
+            )
+            .expect("injected")
+        };
+        let hit = run(0);
+        for (k, kc) in hit.kernels.iter().zip(&clean.kernels) {
+            assert_eq!(k.seu_flips, kc.issued_ops, "rate 1000 strikes every result");
+        }
+        assert_ne!(hit.outputs, clean.outputs, "corruption must reach the outputs");
+        assert_eq!(hit.outputs, run(0).outputs, "seeded corruption replays bit-identically");
+        assert_ne!(hit.outputs, run(1).outputs, "legs corrupt at different sites");
     }
 
     #[test]

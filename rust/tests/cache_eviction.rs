@@ -265,6 +265,7 @@ fn report(latency: u64) -> ExecReport {
         occupancy: 1.0,
         outputs: ArrayData::new(),
         detail: "test".into(),
+        seu_flips: 0,
     }
 }
 

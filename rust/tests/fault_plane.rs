@@ -1,0 +1,262 @@
+//! Integration suite for the hardware-fault plane (compiled only with
+//! `--features fault-injection`; CI runs it as a dedicated tier-1 step).
+//!
+//! The acceptance oracle of the fault plane, end to end:
+//!
+//! * under a seeded fail-stop mask both array backends remap — the CGRA
+//!   places and routes around the dead PE on the same grid, the TCPA
+//!   re-tiles over the surviving sub-array — the static legality verifier
+//!   passes on the *masked* architecture, and the remapped outputs are
+//!   bit-identical to the healthy run;
+//! * a fail-stop *detected* mid-execution is a health event: the session
+//!   quarantines the reported PE, invalidates everything resident for the
+//!   target, recompiles under the new mask and retries once — visible on
+//!   the wire as `remapped` and in metrics as `remaps`;
+//! * a seeded SEU corrupts exactly one leg of a redundant group: DMR
+//!   detects (the mismatch is never served), TMR outvotes and serves a
+//!   result bit-identical to the fault-free run — across the whole
+//!   builtin catalog at one size;
+//! * the merged counters reconcile *exactly* with the per-response wire
+//!   fields: `remaps == Σ remapped`, `seu_corrected == Σ corrected`,
+//!   `pe_faults + vote_mismatches == Σ fault_detected`.
+
+#![cfg(feature = "fault-injection")]
+
+use std::sync::Arc;
+
+use repro::backend::{BackendRegistry, CancelToken, Target};
+use repro::bench::spec::WorkloadCatalog;
+use repro::coordinator::pool::{run_trace_configured, PoolConfig};
+use repro::coordinator::{FaultPlan, FaultSite, Redundancy, Request, Response, Session};
+use repro::faults::FaultMask;
+
+const SEED: u64 = 42;
+
+// ====================== spare-aware remap, backend level ===================
+
+#[test]
+fn masked_recompiles_pass_legality_and_match_healthy_outputs() {
+    // gemm under a dead PE 5 on both array targets: the CGRA keeps its 4x4
+    // geometry (operation-granular recovery), the TCPA re-tiles over the
+    // surviving sub-array (iteration-granular) — both must stay statically
+    // legal under the mask and reproduce the healthy outputs bit for bit
+    let registry = BackendRegistry::with_defaults();
+    let catalog = WorkloadCatalog::builtin();
+    let cancel = CancelToken::none();
+    let mask = FaultMask::healthy().with_failed_pe(5);
+    for (target, n) in [(Target::Cgra, 8), (Target::Tcpa, 4)] {
+        let backend = registry.get(target).expect("array backend registered");
+        let spec = catalog.spec("gemm", n).expect("builtin");
+        let wl = spec.workload();
+        let healthy = backend.compile(&wl).expect("healthy gemm compiles");
+        let masked = backend
+            .compile_masked_cancellable(&wl, &mask, &cancel)
+            .expect("gemm recompiles around the dead PE");
+        let rep = masked
+            .analysis()
+            .expect("array backends attach a legality report");
+        assert!(
+            rep.is_legal(),
+            "{target:?}: masked mapping must verify on the masked arch:\n{}",
+            rep.summary()
+        );
+        let ins = spec.gen_inputs(SEED);
+        let a = healthy.execute(&ins, 1).expect("healthy run");
+        let b = masked.execute(&ins, 1).expect("masked run");
+        assert_eq!(
+            a.outputs, b.outputs,
+            "{target:?}: spare-aware remap must be bit-identical to healthy"
+        );
+        assert_eq!(b.seu_flips, 0, "a structural mask injects nothing");
+    }
+}
+
+// ================= detected fail-stop → quarantine + remap =================
+
+fn wire_sums(responses: &[Response]) -> (u64, u64, u64) {
+    let detected = responses.iter().filter(|r| r.fault_detected).count() as u64;
+    let remapped = responses.iter().filter(|r| r.remapped).count() as u64;
+    let corrected = responses.iter().filter(|r| r.corrected).count() as u64;
+    (detected, remapped, corrected)
+}
+
+#[test]
+fn pool_remaps_on_detected_fail_stops_and_reconciles_counters() {
+    // a seeded fail-stop storm through the public pool API: every detection
+    // must quarantine + remap at most once per request, remapped responses
+    // that serve must still validate against the golden model, and the
+    // merged counters must equal the wire-field sums exactly
+    let plan = Arc::new(FaultPlan::new(23).with_rate(FaultSite::PeFailStop, 350));
+    let config = PoolConfig {
+        faults: Some(plan.clone()),
+        ..PoolConfig::default()
+    };
+    let n_req = 40;
+    // gemm n=4: small enough that even the TCPA's degraded 2x2 sub-array
+    // (one quarantined PE retires a row and a column) still fits it
+    let trace: Vec<Request> = (0..n_req)
+        .map(|i| {
+            let target = if i % 2 == 0 { Target::Tcpa } else { Target::Cgra };
+            Request::named(i as u64, "gemm", 4, target, 1, true, i as u64)
+        })
+        .collect();
+    let (_, m, responses) = run_trace_configured(2, &trace, config);
+    assert_eq!(responses.len(), n_req, "one response per request");
+    assert!(
+        plan.injected(FaultSite::PeFailStop) > 0,
+        "seed 23 at 350‰ over 40 requests must fire"
+    );
+    let (detected, remapped, _) = wire_sums(&responses);
+    assert!(remapped > 0, "at least one detection must remap");
+    let mut remapped_served = 0;
+    for r in &responses {
+        if r.remapped && r.error.is_none() {
+            remapped_served += 1;
+            assert_eq!(
+                r.validated,
+                Some(true),
+                "request {}: remapped outputs must validate bit-exactly",
+                r.id
+            );
+        }
+    }
+    assert!(remapped_served > 0, "some remapped request must serve");
+    assert_eq!(m.remaps, remapped, "remaps == Σ remapped on the wire");
+    assert_eq!(
+        m.pe_faults + m.vote_mismatches,
+        detected,
+        "pe_faults + vote_mismatches == Σ fault_detected on the wire"
+    );
+    // the chaos plan's per-site injected counters ride along in the report
+    let report = m.report_with_fault_plan(&plan);
+    assert!(report.contains("injected: pe_fail_stop="), "{report}");
+    assert!(report.contains("faults: pe_faults="), "{report}");
+}
+
+// ============== adversarial voting across the whole catalog ================
+
+#[test]
+fn dmr_detects_and_tmr_corrects_across_the_whole_catalog() {
+    // every builtin benchmark at n=8 on both array targets, with the SEU
+    // mask armed at 1000‰ (leg 0 of a redundant group is struck, the other
+    // legs run clean — the single-event assumption): DMR must detect the
+    // corrupted leg and never serve it; TMR must outvote it and serve a
+    // result bit-identical to the fault-free run
+    let catalog = WorkloadCatalog::builtin();
+    for name in catalog.names() {
+        for target in [Target::Tcpa, Target::Cgra] {
+            let mut session = Session::new();
+            let clean = session.handle(&Request::named(1, &name, 8, target, 1, true, SEED));
+            assert!(
+                clean.error.is_none(),
+                "{name}/{target:?} fault-free: {:?}",
+                clean.error
+            );
+            session.set_fault_mask(target, FaultMask::healthy().with_seu(1000, 1234));
+            let dmr = session.handle(
+                &Request::named(2, &name, 8, target, 1, true, SEED)
+                    .with_redundancy(Redundancy::Dmr),
+            );
+            assert!(dmr.error.is_none(), "{name}/{target:?} DMR: {:?}", dmr.error);
+            assert!(
+                dmr.fault_detected,
+                "{name}/{target:?}: DMR must detect the struck leg"
+            );
+            assert!(!dmr.corrected, "DMR detects, it does not correct");
+            assert!(!dmr.remapped, "an SEU is transient: no remap");
+            assert_eq!(
+                dmr.validated,
+                Some(true),
+                "{name}/{target:?}: the corrupted DMR leg must never be served"
+            );
+            assert_eq!(session.metrics.vote_mismatches, 1);
+            assert!(session.metrics.seu_injected > 0, "the strike must land");
+
+            let tmr = session.handle(
+                &Request::named(3, &name, 8, target, 1, true, SEED)
+                    .with_redundancy(Redundancy::Tmr),
+            );
+            assert!(tmr.error.is_none(), "{name}/{target:?} TMR: {:?}", tmr.error);
+            assert!(
+                tmr.corrected,
+                "{name}/{target:?}: TMR must outvote the struck leg"
+            );
+            assert!(
+                !tmr.fault_detected,
+                "a corrected strike is not a detection event"
+            );
+            assert_eq!(
+                tmr.validated,
+                Some(true),
+                "{name}/{target:?}: the TMR majority must match the golden model"
+            );
+            assert_eq!(
+                tmr.latency_cycles, clean.latency_cycles,
+                "{name}/{target:?}: TMR serves a clean leg — identical report"
+            );
+            assert_eq!(session.metrics.seu_corrected, 1);
+            assert_eq!(
+                session.metrics.vote_mismatches, 1,
+                "TMR correction must not count as a mismatch"
+            );
+        }
+    }
+}
+
+// =================== counter ↔ wire-field reconciliation ===================
+
+#[test]
+fn fault_counters_reconcile_exactly_with_wire_fields() {
+    // one session, three scenarios with disjoint counter signatures — an
+    // injected fail-stop (remap), a DMR detection, a TMR correction — then
+    // the exact reconciliation the Metrics::report identities promise
+    let mut session = Session::new();
+    let mut responses: Vec<Response> = Vec::new();
+
+    // scenario 1: an injected fail-stop on the TCPA → quarantine + remap
+    session.set_faults(Arc::new(
+        FaultPlan::new(11).with_rate(FaultSite::PeFailStop, 1000),
+    ));
+    let r1 = session.handle(&Request::named(1, "gemm", 4, Target::Tcpa, 1, true, SEED));
+    assert!(r1.error.is_none(), "{:?}", r1.error);
+    assert!(r1.fault_detected && r1.remapped && !r1.corrected);
+    assert_eq!(r1.validated, Some(true));
+    responses.push(r1);
+
+    // disarm the chaos plan; scenarios 2/3 use the SEU mask instead
+    session.set_faults(Arc::new(FaultPlan::new(0)));
+    session.set_fault_mask(Target::Cgra, FaultMask::healthy().with_seu(1000, 7));
+
+    // scenario 2: DMR detection on the CGRA
+    let r2 = session.handle(
+        &Request::named(2, "gemm", 8, Target::Cgra, 1, true, SEED)
+            .with_redundancy(Redundancy::Dmr),
+    );
+    assert!(r2.error.is_none(), "{:?}", r2.error);
+    assert!(r2.fault_detected && !r2.remapped && !r2.corrected);
+    responses.push(r2);
+
+    // scenario 3: TMR correction on the CGRA
+    let r3 = session.handle(
+        &Request::named(3, "gemm", 8, Target::Cgra, 1, true, SEED)
+            .with_redundancy(Redundancy::Tmr),
+    );
+    assert!(r3.error.is_none(), "{:?}", r3.error);
+    assert!(r3.corrected && !r3.fault_detected && !r3.remapped);
+    responses.push(r3);
+
+    let (detected, remapped, corrected) = wire_sums(&responses);
+    let m = &session.metrics;
+    assert_eq!(m.pe_faults, 1);
+    assert_eq!(m.remaps, remapped, "remaps == Σ remapped");
+    assert_eq!(m.seu_corrected, corrected, "seu_corrected == Σ corrected");
+    assert_eq!(
+        m.pe_faults + m.vote_mismatches,
+        detected,
+        "pe_faults + vote_mismatches == Σ fault_detected"
+    );
+    assert!(m.seu_injected > 0, "strikes landed in the redundant legs");
+    // the conditional report line surfaces all five counters at once
+    let report = m.report();
+    assert!(report.contains("faults: pe_faults=1"), "{report}");
+}
